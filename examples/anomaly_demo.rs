@@ -1,0 +1,83 @@
+//! Fig. 1 reproduction: reconstruct a normal and an anomalous ECG beat
+//! with the Bayesian recurrent autoencoder and show the prediction with
+//! +/-3 sigma uncertainty, NLL, L1 and RMSE — the paper's motivating
+//! example.
+//!
+//!     cargo run --release --example anomaly_demo
+
+use bayes_rnn_fpga::config::{ArchConfig, Task};
+use bayes_rnn_fpga::data;
+use bayes_rnn_fpga::metrics;
+use bayes_rnn_fpga::train::eval::ModelPredictor;
+use bayes_rnn_fpga::train::{eval::Predictor, NativeTrainer, TrainOpts};
+
+fn ascii_plot(target: &[f32], mean: &[f32], std: &[f32]) {
+    // ASCII band plot: '.' target, 'o' mean, ':' the 3-sigma band.
+    let rows = 14usize;
+    let lo = -3.0f32;
+    let hi = 3.0f32;
+    let t = target.len();
+    let cols = 70.min(t);
+    let map = |v: f32| -> usize {
+        let clamped = v.clamp(lo, hi - 1e-3);
+        ((hi - clamped) / (hi - lo) * rows as f32) as usize
+    };
+    let mut grid = vec![vec![' '; cols]; rows + 1];
+    for c in 0..cols {
+        let i = c * t / cols;
+        let (m, s, x) = (mean[i], std[i], target[i]);
+        let (top, bot) = (map(m + 3.0 * s), map(m - 3.0 * s));
+        for r in top.min(rows)..=bot.min(rows) {
+            grid[r][c] = ':';
+        }
+        grid[map(m).min(rows)][c] = 'o';
+        grid[map(x).min(rows)][c] = '.';
+    }
+    for row in grid {
+        println!("  {}", row.into_iter().collect::<String>());
+    }
+}
+
+fn main() {
+    // The paper's best anomaly architecture: H=16, NL=2, B=YNYN.
+    let cfg = ArchConfig::new(Task::Anomaly, 16, 2, "YNYN");
+    let (train, test) = data::anomaly_splits(0);
+    println!("training {} on {} normal beats ...", cfg.name(), train.n);
+    let mut trainer = NativeTrainer::new(
+        cfg.clone(),
+        TrainOpts { epochs: 120, batch: 64, lr: 1e-2, seed: 0 },
+    );
+    trainer.fit(&train);
+    println!(
+        "loss {:.4} -> {:.4}",
+        trainer.loss_history[0],
+        trainer.final_loss()
+    );
+
+    let s = 30;
+    let mut pred = ModelPredictor::new(&trainer.model, 5);
+    let normal_idx = (0..test.n).find(|&i| test.label(i) == 0).unwrap();
+    let anom_idx = (0..test.n).find(|&i| test.label(i) == 1).unwrap();
+
+    for (title, idx) in
+        [("(a) normal ECG", normal_idx), ("(b) anomalous ECG", anom_idx)]
+    {
+        let beat = test.beat(idx);
+        let out = pred.predict(beat, s);
+        let mean = out.mean();
+        let std = out.std();
+        let nll = metrics::gaussian_nll(beat, &mean, &std);
+        let l1 = metrics::l1(&mean, beat);
+        let rmse = metrics::rmse(&mean, beat);
+        println!(
+            "\n{title}:  NLL {nll:.2}  L1 {l1:.3}  RMSE {rmse:.3}  \
+             (mean 3-sigma width {:.3})",
+            std.iter().map(|v| 6.0 * v).sum::<f32>() / std.len() as f32
+        );
+        ascii_plot(beat, &mean, &std);
+    }
+    println!(
+        "\nAs in Fig. 1: the model fits the normal beat tightly; on the \
+         anomalous beat the fit degrades and the +/-3-sigma band inflates."
+    );
+}

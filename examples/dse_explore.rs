@@ -1,0 +1,63 @@
+//! DSE walkthrough (Fig. 7 end to end): run a quick algorithmic sweep,
+//! print the latency-vs-accuracy Pareto front, and show what each
+//! optimisation mode would deploy — the interactive counterpart of
+//! Tables V/VI.
+//!
+//!     cargo run --release --example dse_explore
+
+use bayes_rnn_fpga::config::Task;
+use bayes_rnn_fpga::dse::{LookupTable, Optimizer};
+use bayes_rnn_fpga::hwmodel::ZC706;
+use bayes_rnn_fpga::train::sweep::{self, SweepOpts};
+
+fn main() {
+    let task = Task::Classify;
+    let opts = SweepOpts {
+        epochs: 10,
+        train_subset: 256,
+        test_subset: 250,
+        noise_subset: 25,
+        mc_samples: 8,
+        ..Default::default()
+    };
+    println!("sweeping the curated classification grid ...");
+    let mut table = LookupTable::new();
+    sweep::run(task, &opts, &mut table, |d, t, name| {
+        println!("  [{d}/{t}] {name}");
+    });
+
+    let mut opt = Optimizer::new(&ZC706, &table);
+    opt.batch = 50;
+    opt.mc_samples = 30;
+
+    println!("\nlatency-vs-accuracy Pareto front (batch 50, S per arch):");
+    println!("{:<26} {:>12} {:>10}", "arch", "FPGA [ms]", "accuracy");
+    for (arch, ms, acc) in opt.pareto_front(task, "accuracy") {
+        println!("{:<26} {:>12.2} {:>10.3}", arch.name(), ms, acc);
+    }
+
+    println!("\nwhat each user priority deploys:");
+    for mode in Optimizer::modes_for(task) {
+        if let Some(c) = opt.optimize(task, mode) {
+            println!(
+                "  {:<14} -> {{{},{},{}}} R={{{},{},{}}} S={} \
+                 ({:.2} ms, objective {:.3})",
+                c.mode,
+                c.arch.hidden,
+                c.arch.nl,
+                c.arch.bayes_str(),
+                c.reuse.rx,
+                c.reuse.rh,
+                c.reuse.rd,
+                c.s,
+                c.fpga_latency_ms,
+                c.objective
+            );
+        }
+    }
+    println!(
+        "\nAs in the paper: Opt-Latency trades quality for the smallest \
+         pointwise S=1 design; quality modes deploy (partially) Bayesian \
+         nets at 30 MC samples."
+    );
+}

@@ -1,0 +1,62 @@
+//! Quickstart: train a small Bayesian LSTM classifier on the synthetic
+//! ECG5000 pool, "synthesise" it onto the FPGA simulator, and classify a
+//! beat with uncertainty.
+//!
+//!     cargo run --release --example quickstart
+
+use bayes_rnn_fpga::config::{ArchConfig, Task};
+use bayes_rnn_fpga::data;
+use bayes_rnn_fpga::dse::space::reuse_search;
+use bayes_rnn_fpga::fpga::accel::Accelerator;
+use bayes_rnn_fpga::fpga::pipeline::PipelineSim;
+use bayes_rnn_fpga::hwmodel::{PowerModel, ZC706};
+use bayes_rnn_fpga::train::{NativeTrainer, TrainOpts};
+
+fn main() {
+    // 1. An architecture point A = {H, NL, B}: 2 LSTM layers, MCD on the
+    //    first (a partially-Bayesian net, Sec. II-B).
+    let cfg = ArchConfig::new(Task::Classify, 8, 2, "YN");
+    println!("architecture: {}  ({} weights)", cfg.name(), cfg.num_weights());
+
+    // 2. Train with the paper's recipe (scaled-down epochs).
+    let (train, test) = data::splits(0);
+    let mut trainer = NativeTrainer::new(
+        cfg.clone(),
+        TrainOpts { epochs: 20, batch: 64, lr: 5e-3, seed: 0 },
+    );
+    trainer.fit(&train);
+    println!(
+        "trained: loss {:.4} -> {:.4}",
+        trainer.loss_history[0],
+        trainer.final_loss()
+    );
+
+    // 3. Hardware DSE: smallest II that fits the ZC706 DSP budget.
+    let reuse = reuse_search(&cfg, &ZC706).expect("fits ZC706");
+    let mut accel = Accelerator::new(&cfg, &trainer.model.params, reuse, 7);
+    let res = accel.resources_synthesized();
+    println!(
+        "synthesised with R = {{x:{}, h:{}, d:{}}}  ->  {} DSPs \
+         ({:.0}% of {}), {:.2} W",
+        reuse.rx,
+        reuse.rh,
+        reuse.rd,
+        res.dsps,
+        res.dsps / ZC706.dsps as f64 * 100.0,
+        ZC706.dsps,
+        PowerModel::fpga_watts(&res),
+    );
+
+    // 4. Classify one beat with S = 30 MC-dropout samples.
+    let s = 30;
+    let beat = test.beat(0);
+    let out = accel.predict(beat, s);
+    let mean = out.mean();
+    let std = out.std();
+    let lat = PipelineSim::new(&cfg, reuse).simulate_ms(1, s, ZC706.clock_hz);
+    println!("\nbeat 0 (true class {}):", test.label(0));
+    for k in 0..4 {
+        println!("  class {k}: p = {:.3} +/- {:.3}", mean[k], std[k]);
+    }
+    println!("hardware latency @100 MHz: {lat:.3} ms for S={s} samples");
+}

@@ -1,0 +1,200 @@
+# AOT driver: lower every needed (architecture, entrypoint, batch) variant
+# to HLO *text* plus a manifest.json the Rust runtime consumes.
+#
+# HLO text — NOT lowered.compile()/.serialize() — is the interchange format:
+# jax >= 0.5 emits HloModuleProto with 64-bit instruction ids that
+# xla_extension 0.5.1 (the version behind the published `xla` 0.1.6 crate)
+# rejects; the text parser reassigns ids and round-trips cleanly.
+# See /opt/xla-example/gen_hlo.py.
+#
+# Python runs ONCE at build time (`make artifacts`); the Rust binary is
+# self-contained afterwards.
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import (ArchConfig, init_params, param_names, mask_shapes,
+                    forward, train_step)
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def _arg(name, shape, dtype=F32):
+    return {"name": name, "shape": list(shape), "dtype": dtype}
+
+
+# --------------------------------------------------------------------------
+# Entrypoint builders. Each returns (hlo_text, args_meta, outputs_meta).
+# Argument order is positional and mirrored exactly by the Rust runtime.
+# --------------------------------------------------------------------------
+
+def build_forward(cfg: ArchConfig, n: int):
+    """fwd(params..., xs [n,T,I], masks...) -> (y,)"""
+    pshapes = [p.shape for p in init_params(cfg, jax.random.PRNGKey(0))]
+    mshapes = mask_shapes(cfg, n)
+    nparams = len(pshapes)
+
+    def fn(*flat):
+        params = list(flat[:nparams])
+        xs = flat[nparams]
+        masks = list(flat[nparams + 1:])
+        return (forward(cfg, params, xs, masks),)
+
+    specs = ([_spec(s) for s in pshapes]
+             + [_spec((n, cfg.seq_len, cfg.input_dim))]
+             + [_spec(s) for s in mshapes])
+    lowered = jax.jit(fn).lower(*specs)
+    args = ([_arg(nm, s) for nm, s in zip(param_names(cfg), pshapes)]
+            + [_arg("xs", (n, cfg.seq_len, cfg.input_dim))]
+            + [_arg(f"mask{i}", s) for i, s in enumerate(mshapes)])
+    if cfg.task == "anomaly":
+        outs = [_arg("recon", (n, cfg.seq_len, cfg.input_dim))]
+    else:
+        outs = [_arg("probs", (n, cfg.num_classes))]
+    return to_hlo_text(lowered), args, outs
+
+
+def build_train(cfg: ArchConfig, batch: int):
+    """train(params..., m..., v..., step, lr, xs, [ys,] masks...)
+    -> (params'..., m'..., v'..., step', loss)"""
+    pshapes = [p.shape for p in init_params(cfg, jax.random.PRNGKey(0))]
+    mshapes = mask_shapes(cfg, batch)
+    nparams = len(pshapes)
+    has_labels = cfg.task == "classify"
+
+    def fn(*flat):
+        i = 0
+        params = list(flat[i:i + nparams]); i += nparams
+        m = list(flat[i:i + nparams]); i += nparams
+        v = list(flat[i:i + nparams]); i += nparams
+        step = flat[i]; i += 1
+        lr = flat[i]; i += 1
+        xs = flat[i]; i += 1
+        if has_labels:
+            ys = flat[i]; i += 1
+        else:
+            ys = None
+        masks = list(flat[i:])
+        new_p, new_m, new_v, new_step, loss = train_step(
+            cfg, lr, params, m, v, step, xs, ys, masks)
+        return tuple(new_p + new_m + new_v + [new_step, loss])
+
+    specs = ([_spec(s) for s in pshapes] * 3
+             + [_spec(()), _spec(())]
+             + [_spec((batch, cfg.seq_len, cfg.input_dim))]
+             + ([_spec((batch,), jnp.int32)] if has_labels else [])
+             + [_spec(s) for s in mshapes])
+    lowered = jax.jit(fn).lower(*specs)
+    pn = param_names(cfg)
+    args = ([_arg(nm, s) for nm, s in zip(pn, pshapes)]
+            + [_arg("m." + nm, s) for nm, s in zip(pn, pshapes)]
+            + [_arg("v." + nm, s) for nm, s in zip(pn, pshapes)]
+            + [_arg("step", ()), _arg("lr", ())]
+            + [_arg("xs", (batch, cfg.seq_len, cfg.input_dim))]
+            + ([_arg("ys", (batch,), I32)] if has_labels else [])
+            + [_arg(f"mask{i}", s) for i, s in enumerate(mshapes)])
+    outs = ([_arg(nm, s) for nm, s in zip(pn, pshapes)]
+            + [_arg("m." + nm, s) for nm, s in zip(pn, pshapes)]
+            + [_arg("v." + nm, s) for nm, s in zip(pn, pshapes)]
+            + [_arg("step", ()), _arg("loss", ())])
+    return to_hlo_text(lowered), args, outs
+
+
+# --------------------------------------------------------------------------
+# The default artifact set: the paper's named architectures (Tables III-VI)
+# plus batch variants used by the platform-comparison bench. `--full` adds
+# the complete DSE sweep grid (slower to lower; the DSE sweep itself trains
+# through the native Rust engine and does not need per-config HLO).
+# --------------------------------------------------------------------------
+
+DEFAULT_CONFIGS = [
+    # (cfg, fwd batch rows N list, train batch list)
+    (ArchConfig("anomaly", 16, 2, "YNYN"), [1, 30], [64]),   # Table V best
+    (ArchConfig("anomaly", 16, 2, "NNNN"), [1, 30], [64]),   # pointwise twin
+    (ArchConfig("anomaly", 8, 1, "NN"),    [1, 30], [64]),   # Opt-Latency
+    (ArchConfig("classify", 8, 3, "YNY"),  [1, 30], [64]),   # Table VI best
+    (ArchConfig("classify", 8, 3, "NYN"),  [1, 30], [64]),   # Opt-Accuracy
+    (ArchConfig("classify", 8, 3, "YNN"),  [1, 30], [64]),   # Opt-Entropy
+    (ArchConfig("classify", 8, 2, "YN"),   [1, 30], [64]),   # Opt-Recall
+    (ArchConfig("classify", 8, 1, "N"),    [1, 30], [64]),   # Opt-Latency
+]
+
+# Large-row fwd variants for the Table IV CPU/GPU batch sweep (batch x S).
+BATCH_VARIANTS = {
+    "anomaly_h16_nl2_YNYN": [1500, 6000],   # 50*30, 200*30
+    "classify_h8_nl3_YNY": [1500, 6000],
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--full", action="store_true",
+                    help="also lower the complete DSE sweep grid")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    manifest = {"version": 1, "artifacts": []}
+
+    configs = list(DEFAULT_CONFIGS)
+    if args.full:
+        for h in (8, 16, 24, 32):
+            for nl in (1, 2):
+                for bpat in {"Y" * 2 * nl, "N" * 2 * nl}:
+                    c = ArchConfig("anomaly", h, nl, bpat)
+                    if not any(x[0].name == c.name for x in configs):
+                        configs.append((c, [30], []))
+
+    for cfg, fwd_ns, train_bs in configs:
+        fwd_ns = list(fwd_ns) + BATCH_VARIANTS.get(cfg.name, [])
+        for n in fwd_ns:
+            fname = f"{cfg.name}.fwd_n{n}.hlo.txt"
+            text, a, o = build_forward(cfg, n)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": f"{cfg.name}.fwd_n{n}", "file": fname,
+                "kind": "forward", "task": cfg.task, "hidden": cfg.hidden,
+                "nl": cfg.nl, "bayes": cfg.bayes, "rows": n,
+                "seq_len": cfg.seq_len, "input_dim": cfg.input_dim,
+                "num_classes": cfg.num_classes, "args": a, "outputs": o,
+            })
+            print(f"lowered {fname} ({len(text)} chars)")
+        for b in train_bs:
+            fname = f"{cfg.name}.train_b{b}.hlo.txt"
+            text, a, o = build_train(cfg, b)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            manifest["artifacts"].append({
+                "name": f"{cfg.name}.train_b{b}", "file": fname,
+                "kind": "train", "task": cfg.task, "hidden": cfg.hidden,
+                "nl": cfg.nl, "bayes": cfg.bayes, "rows": b,
+                "seq_len": cfg.seq_len, "input_dim": cfg.input_dim,
+                "num_classes": cfg.num_classes, "args": a, "outputs": o,
+            })
+            print(f"lowered {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+# Synthetic ECG5000 equivalent (see DESIGN.md §Substitutions).
+#
+# ECG5000 (PhysioNet / UCR) is 5000 single heartbeats of length T=140,
+# z-normalised, 1 normal class + 3 anomalous classes, with a tiny 500-beat
+# training split and heavy class imbalance. We have no network access to
+# PhysioNet, so this module generates a deterministic synthetic pool with
+# the same statistical role: Gaussian-bump P-QRS-T morphologies where
+# reconstruction error separates normal from anomalous beats and MCD
+# uncertainty inflates on anomalies.
+#
+# The Rust data substrate (rust/src/data/) implements the *same generator*
+# (same class mixture, same morphology parameters); python/tests checks the
+# two agree statistically. Python uses this only for build-time tests.
+
+import numpy as np
+
+T = 140
+CLASSES = 4
+# Class mixture mirroring ECG5000's imbalance (normal ~58%).
+CLASS_PROBS = np.array([0.584, 0.310, 0.070, 0.036])
+TRAIN_N, TEST_N = 500, 4500
+
+
+def _bump(t, center, width, amp):
+    return amp * np.exp(-0.5 * ((t - center) / width) ** 2)
+
+
+def _beat(rng, label):
+    """One beat of length T for class `label` (0 = normal)."""
+    t = np.arange(T, dtype=np.float64)
+    # Per-beat jitter on landmark positions/amplitudes.
+    j = lambda s: rng.normal(0.0, s)  # noqa: E731
+    p_c, q_c, r_c, s_c, t_c = (25 + j(2), 55 + j(1.5), 62 + j(1.5),
+                               69 + j(1.5), 105 + j(3))
+    sig = (_bump(t, p_c, 4.0, 0.18 + j(0.02))        # P wave
+           + _bump(t, q_c, 1.8, -0.28 + j(0.03))     # Q
+           + _bump(t, r_c, 2.2, 1.60 + j(0.08))      # R
+           + _bump(t, s_c, 2.0, -0.45 + j(0.04))     # S
+           + _bump(t, t_c, 9.0, 0.45 + j(0.04)))     # T wave
+    if label == 1:
+        # R-on-T / PVC-like: inverted, widened T and depressed ST segment.
+        sig -= 2.1 * _bump(t, t_c, 11.0, 0.55 + j(0.05))
+        sig -= 0.25 * _bump(t, (s_c + t_c) / 2, 12.0, 1.0)
+    elif label == 2:
+        # Supraventricular-like: flattened R, early weak T.
+        sig -= _bump(t, r_c, 2.2, 0.95 + j(0.06))
+        sig -= 0.5 * _bump(t, t_c, 9.0, 0.45)
+        sig += _bump(t, t_c - 18, 7.0, 0.22 + j(0.03))
+    elif label == 3:
+        # Premature/ectopic-like: whole complex time-warped earlier + drift.
+        shift = int(12 + abs(j(3)))
+        sig = np.roll(sig, -shift)
+        sig += 0.15 * np.sin(2 * np.pi * t / T + j(0.5))
+    sig += rng.normal(0.0, 0.05, T)  # sensor noise
+    # Per-sample z-normalisation (the dataset's preprocessing).
+    sig = (sig - sig.mean()) / (sig.std() + 1e-8)
+    return sig.astype(np.float32)
+
+
+def generate(n, seed=0):
+    """Return (x [n, T, 1] float32, y [n] int32)."""
+    rng = np.random.RandomState(seed)
+    labels = rng.choice(CLASSES, size=n, p=CLASS_PROBS).astype(np.int32)
+    x = np.stack([_beat(rng, int(lb)) for lb in labels])[:, :, None]
+    return x, labels
+
+
+def splits(seed=0):
+    """The paper's split: 500 train / 4500 test."""
+    x, y = generate(TRAIN_N + TEST_N, seed=seed)
+    return (x[:TRAIN_N], y[:TRAIN_N]), (x[TRAIN_N:], y[TRAIN_N:])

@@ -1,0 +1,3 @@
+from .lstm import lstm_cell, lstm_layer  # noqa: F401
+from .dense import dense, temporal_dense  # noqa: F401
+from . import ref  # noqa: F401

@@ -1,0 +1,54 @@
+# L1 Pallas kernel: dense (single-MVM) layer.
+#
+# The paper implements the final dense layer as one MVM unit with its own
+# reuse factor R_d; the temporal dense variant applies the same weights to
+# every timestep of the decoder output (Sec. III-C). A single full block is
+# used — the row dimension is what the MXU batches over; tiling hooks are
+# in lstm.py where the footprint actually matters.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dense_kernel(x_ref, w_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] @ w_ref[...] + b_ref[...][None, :]
+
+
+def _dense_pallas(x, w, b):
+    n, fdim = x.shape
+    odim = w.shape[1]
+    return pl.pallas_call(
+        _dense_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, odim), x.dtype),
+        interpret=True,
+    )(x, w, b)
+
+
+# Pallas forward + oracle-VJP backward (same pattern as kernels/lstm.py —
+# interpret-mode Pallas has no reverse-mode AD).
+@jax.custom_vjp
+def dense(x, w, b):
+    """x [N,F] @ w [F,O] + b [O] -> [N,O]."""
+    return _dense_pallas(x, w, b)
+
+
+def _dense_fwd(x, w, b):
+    return _dense_pallas(x, w, b), (x, w, b)
+
+
+def _dense_bwd(res, ct):
+    x, w, b = res
+    _, vjp = jax.vjp(lambda x, w, b: x @ w + b, x, w, b)
+    return vjp(ct)
+
+
+dense.defvjp(_dense_fwd, _dense_bwd)
+
+
+def temporal_dense(hs, w, b):
+    """Apply the same dense weights to every timestep: [N,T,F] -> [N,T,O]."""
+    n, t, fdim = hs.shape
+    flat = hs.reshape(n * t, fdim)
+    out = dense(flat, w, b)
+    return out.reshape(n, t, w.shape[1])

@@ -1,0 +1,59 @@
+# L1 Pallas kernel: fused Bayesian GRU cell step (the paper's "similar
+# design logic ... for other recurrent units such as the gated recurrent
+# unit", Sec. III-A). Gate order (r, z, n); same per-gate MC-dropout
+# decoupling as the LSTM kernel. Mirrored by rust/src/{nn,fpga}/gru.rs.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+GRU_GATES = 3
+
+
+def gru_cell_ref(x, h, wx, wh, b, zx, zh):
+    """Pure-jnp oracle. x [N,I], h [N,H], wx [3,I,H], wh [3,H,H], b [3,H],
+    zx [N,3,I], zh [N,3,H] -> h_next [N,H]."""
+    xt = [(x * zx[:, g]) @ wx[g] + b[g] for g in range(GRU_GATES)]
+    ht = [(h * zh[:, g]) @ wh[g] for g in range(GRU_GATES)]
+    r = jax.nn.sigmoid(xt[0] + ht[0])
+    z = jax.nn.sigmoid(xt[1] + ht[1])
+    n = jnp.tanh(xt[2] + r * ht[2])
+    return (1.0 - z) * n + z * h
+
+
+def _gru_kernel(x_ref, h_ref, wx_ref, wh_ref, b_ref, zx_ref, zh_ref, ho_ref):
+    x = x_ref[...]
+    h = h_ref[...]
+    xm = x[:, None, :] * zx_ref[...]          # [N,3,I]
+    hm = h[:, None, :] * zh_ref[...]          # [N,3,H]
+    xt = jnp.einsum("ngi,gih->ngh", xm, wx_ref[...]) + b_ref[...][None]
+    ht = jnp.einsum("ngh,ghk->ngk", hm, wh_ref[...])
+    r = jax.nn.sigmoid(xt[:, 0] + ht[:, 0])
+    z = jax.nn.sigmoid(xt[:, 1] + ht[:, 1])
+    n = jnp.tanh(xt[:, 2] + r * ht[:, 2])
+    ho_ref[...] = (1.0 - z) * n + z * h
+
+
+def gru_cell(x, h, wx, wh, b, zx, zh):
+    """Fused Bayesian GRU cell step via Pallas (interpret=True)."""
+    n, _ = x.shape
+    hdim = h.shape[1]
+    return pl.pallas_call(
+        _gru_kernel,
+        out_shape=jax.ShapeDtypeStruct((n, hdim), x.dtype),
+        interpret=True,
+    )(x, h, wx, wh, b, zx, zh)
+
+
+def gru_layer(xs, wx, wh, b, zx, zh):
+    """Scan the fused GRU cell over T: xs [N,T,I] -> hs [N,T,H]."""
+    n = xs.shape[0]
+    hdim = wh.shape[1]
+    h0 = jnp.zeros((n, hdim), xs.dtype)
+
+    def step(h, x_t):
+        h2 = gru_cell(x_t, h, wx, wh, b, zx, zh)
+        return h2, h2
+
+    _, hs = jax.lax.scan(step, h0, jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,167 @@
+# L1 Pallas kernel: fused Bayesian LSTM cell step.
+#
+# This is the compute hot-spot of the paper's accelerator (Fig. 2): the four
+# gate MVMs fed by DX-masked copies of x_t and h_{t-1}, followed by the
+# element-wise LSTM tail. On the FPGA these are four parallel MVM engines
+# plus a tail unit; here the whole cell step is one fused kernel so the
+# lowered HLO keeps h/c resident and streams only x, and the dropout-mask
+# multiply (the paper's DX demultiplexors) never materialises a masked copy
+# outside the kernel.
+#
+# TPU adaptation (DESIGN.md §Hardware-Adaptation): rows N = MC-samples x
+# requests are the analogue of the paper's sample-wise pipelining and map
+# to the MXU batch dimension; weights live in VMEM for the whole T-loop
+# like the paper's on-chip registers; `block_n` tiles N when a tile no
+# longer fits VMEM (the reuse-factor trade-off of Sec. IV-B). On this CPU
+# stack a single full block is optimal — a fine-grained grid would
+# serialise rows inside the T-scan.
+#
+# interpret=True is mandatory on CPU PJRT — real TPU lowering emits a
+# Mosaic custom-call the CPU plugin cannot execute.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref as _ref
+
+GATES = 4
+
+
+def _cell_kernel(x_ref, h_ref, c_ref, wx_ref, wh_ref, b_ref, zx_ref, zh_ref,
+                 ho_ref, co_ref):
+    """Fused cell step over a [bn, ...] row tile.
+
+    x [bn,I], h/c [bn,H], wx [4,I,H], wh [4,H,H], b [4,H],
+    zx [bn,4,I], zh [bn,4,H] -> h',c' [bn,H].
+    """
+    x = x_ref[...]
+    h = h_ref[...]
+    c = c_ref[...]
+    wx = wx_ref[...]
+    wh = wh_ref[...]
+    b = b_ref[...]
+    # DX masking: per-gate decoupled copies of x and h (Sec. II-A/II-B).
+    xm = x[:, None, :] * zx_ref[...]                  # [bn, 4, I]
+    hm = h[:, None, :] * zh_ref[...]                  # [bn, 4, H]
+    # Four gate MVM engines, batched on the MXU.
+    pre = (jnp.einsum("ngi,gih->ngh", xm, wx)
+           + jnp.einsum("ngh,ghk->ngk", hm, wh)
+           + b[None])                                  # [bn, 4, H]
+    i = jax.nn.sigmoid(pre[:, 0])
+    f = jax.nn.sigmoid(pre[:, 1])
+    g = jnp.tanh(pre[:, 2])
+    o = jax.nn.sigmoid(pre[:, 3])
+    # LSTM tail unit (the paper's 32-bit c-path).
+    c2 = f * c + i * g
+    h2 = o * jnp.tanh(c2)
+    ho_ref[...] = h2
+    co_ref[...] = c2
+
+
+def lstm_cell(x, h, c, wx, wh, b, zx, zh, block_n=None):
+    """Fused Bayesian LSTM cell step via Pallas.
+
+    x [N,I], h/c [N,H], wx [4,I,H], wh [4,H,H], b [4,H],
+    zx [N,4,I], zh [N,4,H]  ->  (h_next [N,H], c_next [N,H]).
+
+    block_n: optional row-tile size (must divide N); None = one full block.
+    """
+    n, idim = x.shape
+    hdim = h.shape[1]
+    dt = x.dtype
+    out_shape = [
+        jax.ShapeDtypeStruct((n, hdim), dt),
+        jax.ShapeDtypeStruct((n, hdim), dt),
+    ]
+    if block_n is None or block_n >= n:
+        grid = ()
+        bn = n
+        row = None
+    else:
+        assert n % block_n == 0, (n, block_n)
+        grid = (n // block_n,)
+        bn = block_n
+        row = lambda s: s  # noqa: E731
+
+    def spec(shape, tiled):
+        if not grid:
+            return pl.BlockSpec(shape, lambda: tuple(0 for _ in shape))
+        if tiled:
+            return pl.BlockSpec(shape,
+                                lambda s: (s,) + tuple(0 for _ in shape[1:]))
+        return pl.BlockSpec(shape, lambda s: tuple(0 for _ in shape))
+
+    return pl.pallas_call(
+        _cell_kernel,
+        grid=grid,
+        in_specs=[
+            spec((bn, idim), True),             # x
+            spec((bn, hdim), True),             # h
+            spec((bn, hdim), True),             # c
+            spec((GATES, idim, hdim), False),   # wx
+            spec((GATES, hdim, hdim), False),   # wh
+            spec((GATES, hdim), False),         # b
+            spec((bn, GATES, idim), True),      # zx
+            spec((bn, GATES, hdim), True),      # zh
+        ],
+        out_specs=[
+            spec((bn, hdim), True),
+            spec((bn, hdim), True),
+        ],
+        out_shape=out_shape,
+        interpret=True,
+    )(x, h, c, wx, wh, b, zx, zh)
+
+
+# --------------------------------------------------------------------------
+# Autodiff bridge. Pallas interpret-mode kernels do not support reverse-mode
+# AD, so the train step (L2 bwd) differentiates through a custom_vjp whose
+# forward IS the fused Pallas kernel and whose backward is the VJP of the
+# pure-jnp oracle (ref.py), rematerialising the cell forward. The two
+# forwards are asserted equal by python/tests/test_kernels.py, so the
+# gradient is exact for the kernel as shipped.
+# --------------------------------------------------------------------------
+
+@jax.custom_vjp
+def lstm_cell_ad(x, h, c, wx, wh, b, zx, zh):
+    return lstm_cell(x, h, c, wx, wh, b, zx, zh)
+
+
+def _cell_fwd(x, h, c, wx, wh, b, zx, zh):
+    out = lstm_cell(x, h, c, wx, wh, b, zx, zh)
+    return out, (x, h, c, wx, wh, b, zx, zh)
+
+
+def _cell_bwd(res, cts):
+    _, vjp = jax.vjp(_ref.lstm_cell_ref, *res)
+    return vjp(cts)
+
+
+lstm_cell_ad.defvjp(_cell_fwd, _cell_bwd)
+
+
+def lstm_layer(xs, wx, wh, b, zx, zh, block_n=None):
+    """Scan the fused cell over T. xs [N,T,I] -> hs [N,T,H].
+
+    The scan carry (h, c) mirrors the paper's recurrent data dependency:
+    layer i+1 can start as soon as one h_t is available (timestep
+    pipelining, Fig. 5) — XLA expresses that as this layer's scan feeding
+    the next layer's scan without materialising anything beyond hs.
+    """
+    n = xs.shape[0]
+    hdim = wh.shape[1]
+    h0 = jnp.zeros((n, hdim), xs.dtype)
+    c0 = jnp.zeros((n, hdim), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        if block_n is None:
+            h2, c2 = lstm_cell_ad(x_t, h, c, wx, wh, b, zx, zh)
+        else:
+            h2, c2 = lstm_cell(x_t, h, c, wx, wh, b, zx, zh,
+                               block_n=block_n)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)

@@ -1,0 +1,59 @@
+# Pure-jnp correctness oracles for the Pallas kernels (L1).
+#
+# These implement the paper's Bayesian LSTM cell (Sec. II-A/II-B) exactly:
+# the input x_t and hidden state h_{t-1} are *decoupled per gate* and each
+# copy is masked by its own Bernoulli MC-dropout mask (z_x^g, z_h^g) before
+# the gate matrix-vector multiply. Masks are sampled once per sequence
+# (outside), so they arrive here as plain tensors.
+#
+# Shapes (N = MC-sample/batch rows folded together):
+#   x  [N, I]      h, c [N, H]
+#   wx [4, I, H]   wh   [4, H, H]   b [4, H]
+#   zx [N, 4, I]   zh   [N, 4, H]
+# Gate order along the leading axis of wx/wh/b/zx/zh: (i, f, g, o).
+
+import jax
+import jax.numpy as jnp
+
+GATES = 4  # input, forget, modulation, output
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b, zx, zh):
+    """One Bayesian LSTM cell step; returns (h_next, c_next)."""
+    # pre[g] = (x * zx[:, g]) @ wx[g] + (h * zh[:, g]) @ wh[g] + b[g]
+    pre = [
+        (x * zx[:, g]) @ wx[g] + (h * zh[:, g]) @ wh[g] + b[g]
+        for g in range(GATES)
+    ]
+    i = jax.nn.sigmoid(pre[0])
+    f = jax.nn.sigmoid(pre[1])
+    g_ = jnp.tanh(pre[2])
+    o = jax.nn.sigmoid(pre[3])
+    c_next = f * c + i * g_
+    h_next = o * jnp.tanh(c_next)
+    return h_next, c_next
+
+
+def dense_ref(x, w, b):
+    """Dense layer oracle: x [N, F] @ w [F, O] + b [O]."""
+    return x @ w + b
+
+
+def lstm_layer_ref(xs, wx, wh, b, zx, zh):
+    """Scan the reference cell over time.
+
+    xs [N, T, I] -> hs [N, T, H]. Masks are reused across all T steps
+    (sampled once per sequence, per the paper).
+    """
+    n = xs.shape[0]
+    hdim = wh.shape[1]
+    h0 = jnp.zeros((n, hdim), xs.dtype)
+    c0 = jnp.zeros((n, hdim), xs.dtype)
+
+    def step(carry, x_t):
+        h, c = carry
+        h2, c2 = lstm_cell_ref(x_t, h, c, wx, wh, b, zx, zh)
+        return (h2, c2), h2
+
+    (_, _), hs = jax.lax.scan(step, (h0, c0), jnp.swapaxes(xs, 0, 1))
+    return jnp.swapaxes(hs, 0, 1)

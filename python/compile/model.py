@@ -1,0 +1,247 @@
+# L2: the paper's recurrent architectures (Sec. III-C) in JAX, built on the
+# L1 Pallas kernels. Build-time only — lowered to HLO text by aot.py and
+# executed from Rust; never imported on the request path.
+#
+# Two topologies, both parameterised by A = {H, NL, B}:
+#   * recurrent autoencoder (anomaly detection): NL encoder LSTMs (the last
+#     one has hidden H/2 — the bottleneck), NL decoder LSTMs (hidden H) fed
+#     the bottleneck h_T repeated T times, then a temporal dense H -> I
+#     reconstructing the input;
+#   * recurrent classifier: NL LSTMs (hidden H), dense H -> O on the final
+#     hidden state, softmax.
+#
+# B is a Y/N string with one flag per LSTM layer (2*NL for the autoencoder,
+# NL for the classifier): Y => MC-dropout masks are applied to that layer's
+# per-gate x/h copies. Masks are *inputs* to every lowered function — the
+# Rust coordinator samples them (its LFSR Bernoulli sampler) and passes all
+# layers' masks; non-Bayesian layers simply receive ones. This keeps one
+# HLO signature per architecture shape regardless of B.
+
+from dataclasses import dataclass
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import lstm_layer, dense, temporal_dense
+
+GATES = 4
+
+
+@dataclass(frozen=True)
+class ArchConfig:
+    """Architecture point A = {H, NL, B} plus task constants."""
+
+    task: str          # "anomaly" | "classify"
+    hidden: int        # H
+    nl: int            # NL: LSTM count in encoder (and decoder for AE)
+    bayes: str         # Y/N per LSTM layer; len == num_lstm_layers
+    input_dim: int = 1     # I (ECG is univariate)
+    seq_len: int = 140     # T
+    num_classes: int = 4   # O for the classifier
+    dropout_p: float = 0.125  # paper fixes p = 1/8 (3 LFSRs + NAND)
+
+    def __post_init__(self):
+        assert self.task in ("anomaly", "classify"), self.task
+        assert len(self.bayes) == self.num_lstm_layers, (
+            f"B pattern {self.bayes!r} must have {self.num_lstm_layers} flags"
+        )
+        assert set(self.bayes) <= {"Y", "N"}, self.bayes
+        if self.task == "anomaly":
+            assert self.hidden % 2 == 0, "bottleneck is H/2"
+
+    @property
+    def num_lstm_layers(self) -> int:
+        return 2 * self.nl if self.task == "anomaly" else self.nl
+
+    @property
+    def bottleneck(self) -> int:
+        return self.hidden // 2
+
+    def lstm_dims(self) -> List[Tuple[int, int]]:
+        """(input_dim, hidden_dim) for every LSTM layer, in order."""
+        dims = []
+        if self.task == "anomaly":
+            # Encoder: I -> H -> ... -> H/2 (last layer is the bottleneck).
+            prev = self.input_dim
+            for l in range(self.nl):
+                h = self.bottleneck if l == self.nl - 1 else self.hidden
+                dims.append((prev, h))
+                prev = h
+            # Decoder: H/2 -> H -> ... -> H.
+            for _ in range(self.nl):
+                dims.append((prev, self.hidden))
+                prev = self.hidden
+        else:
+            prev = self.input_dim
+            for _ in range(self.nl):
+                dims.append((prev, self.hidden))
+                prev = self.hidden
+        return dims
+
+    def dense_dims(self) -> Tuple[int, int]:
+        if self.task == "anomaly":
+            return (self.hidden, self.input_dim)   # temporal reconstruction
+        return (self.hidden, self.num_classes)
+
+    @property
+    def name(self) -> str:
+        return f"{self.task}_h{self.hidden}_nl{self.nl}_{self.bayes}"
+
+
+# --------------------------------------------------------------------------
+# Parameters. Layout (also the flattening order consumed by Rust — see
+# aot.py manifest): for each LSTM layer l in order: wx[l] [4,I_l,H_l],
+# wh[l] [4,H_l,H_l], b[l] [4,H_l]; then dense w [F,O], dense b [O].
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ArchConfig, key) -> List[jnp.ndarray]:
+    params = []
+    for (idim, hdim) in cfg.lstm_dims():
+        key, kx, kh = jax.random.split(key, 3)
+        sx = (6.0 / (idim + hdim)) ** 0.5   # Glorot-uniform
+        sh = (6.0 / (hdim + hdim)) ** 0.5
+        params.append(jax.random.uniform(kx, (GATES, idim, hdim),
+                                         minval=-sx, maxval=sx))
+        params.append(jax.random.uniform(kh, (GATES, hdim, hdim),
+                                         minval=-sh, maxval=sh))
+        b = jnp.zeros((GATES, hdim))
+        # Forget-gate bias = 1.0 (standard LSTM training aid).
+        b = b.at[1].set(1.0)
+        params.append(b)
+    fdim, odim = cfg.dense_dims()
+    key, kd = jax.random.split(key)
+    sd = (6.0 / (fdim + odim)) ** 0.5
+    params.append(jax.random.uniform(kd, (fdim, odim), minval=-sd, maxval=sd))
+    params.append(jnp.zeros((odim,)))
+    return params
+
+
+def param_names(cfg: ArchConfig) -> List[str]:
+    names = []
+    for l in range(cfg.num_lstm_layers):
+        names += [f"lstm{l}.wx", f"lstm{l}.wh", f"lstm{l}.b"]
+    names += ["dense.w", "dense.b"]
+    return names
+
+
+def mask_shapes(cfg: ArchConfig, n: int) -> List[Tuple[int, ...]]:
+    """Shapes of the per-layer mask inputs (zx then zh per layer)."""
+    shapes = []
+    for (idim, hdim) in cfg.lstm_dims():
+        shapes.append((n, GATES, idim))
+        shapes.append((n, GATES, hdim))
+    return shapes
+
+
+def ones_masks(cfg: ArchConfig, n: int) -> List[jnp.ndarray]:
+    return [jnp.ones(s, jnp.float32) for s in mask_shapes(cfg, n)]
+
+
+def sample_masks(cfg: ArchConfig, n: int, key) -> List[jnp.ndarray]:
+    """Bernoulli(1-p) masks for Bayesian layers, ones elsewhere.
+
+    Python-side analogue of the Rust LFSR sampler; used in training tests
+    and algorithmic pytest checks.
+    """
+    masks = []
+    for l, (idim, hdim) in enumerate(cfg.lstm_dims()):
+        for shape in ((n, GATES, idim), (n, GATES, hdim)):
+            if cfg.bayes[l] == "Y":
+                key, k = jax.random.split(key)
+                masks.append(
+                    jax.random.bernoulli(k, 1.0 - cfg.dropout_p, shape)
+                    .astype(jnp.float32))
+            else:
+                masks.append(jnp.ones(shape, jnp.float32))
+    return masks
+
+
+# --------------------------------------------------------------------------
+# Forward passes.
+# --------------------------------------------------------------------------
+
+def _run_lstm_stack(cfg, params, masks, xs, layers):
+    """Run LSTM layers `layers` (iterable of indices) over xs [N,T,*]."""
+    out = xs
+    for l in layers:
+        wx, wh, b = params[3 * l], params[3 * l + 1], params[3 * l + 2]
+        zx, zh = masks[2 * l], masks[2 * l + 1]
+        out = lstm_layer(out, wx, wh, b, zx, zh)
+    return out
+
+
+def forward(cfg: ArchConfig, params, xs, masks):
+    """Model forward. xs [N,T,I] -> AE: recon [N,T,I]; cls: probs [N,O]."""
+    nl = cfg.nl
+    if cfg.task == "anomaly":
+        enc = _run_lstm_stack(cfg, params, masks, xs, range(nl))
+        # Bottleneck: last hidden state of last encoder LSTM, repeated T
+        # times (the paper caches it for exactly T steps).
+        emb = enc[:, -1, :]                       # [N, H/2]
+        rep = jnp.repeat(emb[:, None, :], cfg.seq_len, axis=1)
+        dec = _run_lstm_stack(cfg, params, masks, rep, range(nl, 2 * nl))
+        w, b = params[-2], params[-1]
+        return temporal_dense(dec, w, b)          # [N, T, I]
+    else:
+        enc = _run_lstm_stack(cfg, params, masks, xs, range(nl))
+        h_t = enc[:, -1, :]                       # [N, H]
+        w, b = params[-2], params[-1]
+        logits = dense(h_t, w, b)
+        return jax.nn.softmax(logits, axis=-1)    # [N, O]
+
+
+def forward_logits(cfg: ArchConfig, params, xs, masks):
+    """Classifier logits (for the training loss)."""
+    assert cfg.task == "classify"
+    enc = _run_lstm_stack(cfg, params, masks, xs, range(cfg.nl))
+    return dense(enc[:, -1, :], params[-2], params[-1])
+
+
+# --------------------------------------------------------------------------
+# Loss + Adam train step (grad-clip 3.0, decoupled weight decay 1e-4 — the
+# paper's training recipe). Lowered per-architecture by aot.py; the Rust
+# training loop owns the outer epoch loop and the MCD mask sampling.
+# --------------------------------------------------------------------------
+
+ADAM_B1, ADAM_B2, ADAM_EPS = 0.9, 0.999, 1e-8
+GRAD_CLIP = 3.0
+WEIGHT_DECAY = 1e-4
+
+
+def loss_fn(cfg: ArchConfig, params, xs, ys, masks):
+    if cfg.task == "anomaly":
+        recon = forward(cfg, params, xs, masks)
+        return jnp.mean((recon - xs) ** 2)
+    logits = forward_logits(cfg, params, xs, masks)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    onehot = jax.nn.one_hot(ys, cfg.num_classes)
+    return -jnp.mean(jnp.sum(onehot * logp, axis=-1))
+
+
+def train_step(cfg: ArchConfig, lr: float,
+               params, m, v, step, xs, ys, masks):
+    """One AdamW step. All state in/out as tensor lists (PJRT-friendly).
+
+    step is a float32 scalar step counter (pre-increment).
+    Returns (new_params, new_m, new_v, new_step, loss).
+    """
+    loss, grads = jax.value_and_grad(
+        lambda p: loss_fn(cfg, p, xs, ys, masks))(params)
+    # Global-norm clipping at 3.0.
+    gnorm = jnp.sqrt(sum(jnp.sum(g * g) for g in grads))
+    scale = jnp.minimum(1.0, GRAD_CLIP / (gnorm + 1e-12))
+    grads = [g * scale for g in grads]
+    step = step + 1.0
+    bc1 = 1.0 - ADAM_B1 ** step
+    bc2 = 1.0 - ADAM_B2 ** step
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = ADAM_B1 * mi + (1 - ADAM_B1) * g
+        vi = ADAM_B2 * vi + (1 - ADAM_B2) * g * g
+        upd = (mi / bc1) / (jnp.sqrt(vi / bc2) + ADAM_EPS)
+        p = p - lr * (upd + WEIGHT_DECAY * p)
+        new_p.append(p)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v, step, loss

@@ -1,0 +1,49 @@
+# Synthetic ECG5000-equivalent generator checks (DESIGN.md §Substitutions).
+
+import numpy as np
+
+from compile import ecg
+
+
+def test_shapes_and_dtypes():
+    x, y = ecg.generate(64, seed=1)
+    assert x.shape == (64, ecg.T, 1) and x.dtype == np.float32
+    assert y.shape == (64,) and y.dtype == np.int32
+    assert set(np.unique(y)) <= {0, 1, 2, 3}
+
+
+def test_deterministic():
+    x1, y1 = ecg.generate(32, seed=9)
+    x2, y2 = ecg.generate(32, seed=9)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+
+
+def test_z_normalised_per_sample():
+    x, _ = ecg.generate(16, seed=2)
+    means = x[:, :, 0].mean(axis=1)
+    stds = x[:, :, 0].std(axis=1)
+    np.testing.assert_allclose(means, 0.0, atol=1e-5)
+    np.testing.assert_allclose(stds, 1.0, atol=1e-4)
+
+
+def test_class_imbalance_matches_ecg5000():
+    _, y = ecg.generate(5000, seed=0)
+    frac_normal = (y == 0).mean()
+    assert 0.52 < frac_normal < 0.65   # ECG5000 is ~58% normal
+
+
+def test_splits():
+    (xtr, ytr), (xte, yte) = ecg.splits(seed=0)
+    assert xtr.shape[0] == 500 and xte.shape[0] == 4500
+
+
+def test_anomalies_differ_from_normal():
+    """Mean anomalous beat must be far from mean normal beat (the signal
+    the autoencoder exploits)."""
+    x, y = ecg.generate(2000, seed=3)
+    mean_normal = x[y == 0, :, 0].mean(axis=0)
+    for c in (1, 2, 3):
+        mean_c = x[y == c, :, 0].mean(axis=0)
+        rmse = np.sqrt(((mean_c - mean_normal) ** 2).mean())
+        assert rmse > 0.3, (c, rmse)

@@ -1,0 +1,60 @@
+# GRU Pallas kernel vs pure-jnp oracle (the paper's "other recurrent
+# units" extension; Rust mirrors in rust/src/{nn,fpga}/gru.rs).
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.gru import (gru_cell, gru_cell_ref, gru_layer,
+                                 GRU_GATES)
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _inputs(rng, n, idim, hdim, p=0.125):
+    x = jnp.asarray(rng.standard_normal((n, idim)).astype(np.float32))
+    h = jnp.asarray(
+        (rng.standard_normal((n, hdim)) * 0.5).astype(np.float32))
+    wx = jnp.asarray(
+        (rng.standard_normal((GRU_GATES, idim, hdim)) * 0.3)
+        .astype(np.float32))
+    wh = jnp.asarray(
+        (rng.standard_normal((GRU_GATES, hdim, hdim)) * 0.3)
+        .astype(np.float32))
+    b = jnp.asarray(
+        (rng.standard_normal((GRU_GATES, hdim)) * 0.1).astype(np.float32))
+    zx = jnp.asarray(
+        (rng.uniform(size=(n, GRU_GATES, idim)) > p).astype(np.float32))
+    zh = jnp.asarray(
+        (rng.uniform(size=(n, GRU_GATES, hdim)) > p).astype(np.float32))
+    return x, h, wx, wh, b, zx, zh
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 6), idim=st.integers(1, 8), hdim=st.integers(1, 10),
+       seed=st.integers(0, 2**16))
+def test_gru_cell_matches_ref(n, idim, hdim, seed):
+    rng = np.random.default_rng(seed)
+    args = _inputs(rng, n, idim, hdim)
+    got = gru_cell(*args)
+    want = gru_cell_ref(*args)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+
+
+def test_gru_layer_shape_and_bound():
+    rng = np.random.default_rng(4)
+    x, h, wx, wh, b, zx, zh = _inputs(rng, 3, 2, 5)
+    xs = jnp.asarray(rng.standard_normal((3, 9, 2)).astype(np.float32))
+    hs = gru_layer(xs, wx, wh, b, zx, zh)
+    assert hs.shape == (3, 9, 5)
+    # Convex combination of tanh values: |h| <= 1.
+    assert np.all(np.abs(np.asarray(hs)) <= 1.0 + 1e-5)
+
+
+def test_gru_update_gate_interpolates():
+    """With z -> 1 (huge update-gate bias) the state barely moves."""
+    rng = np.random.default_rng(5)
+    x, h, wx, wh, b, zx, zh = _inputs(rng, 2, 3, 4, p=0.0)
+    b_frozen = b.at[1].set(50.0)  # z ~ 1
+    h2 = gru_cell(x, h, wx, wh, b_frozen, zx, zh)
+    np.testing.assert_allclose(h2, h, rtol=1e-3, atol=1e-3)

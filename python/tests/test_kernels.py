@@ -1,0 +1,137 @@
+# L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+# hypothesis sweeps shapes/seeds; assert_allclose is the CORE signal.
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import lstm_cell, lstm_layer, dense, temporal_dense
+from compile.kernels.ref import (lstm_cell_ref, lstm_layer_ref, dense_ref,
+                                 GATES)
+
+RTOL, ATOL = 1e-5, 1e-5
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+
+
+def _cell_inputs(rng, n, idim, hdim, p=0.125):
+    x = _rand(rng, n, idim)
+    h = _rand(rng, n, hdim)
+    c = _rand(rng, n, hdim)
+    wx = _rand(rng, GATES, idim, hdim) * 0.3
+    wh = _rand(rng, GATES, hdim, hdim) * 0.3
+    b = _rand(rng, GATES, hdim) * 0.1
+    zx = jnp.asarray(
+        (rng.uniform(size=(n, GATES, idim)) > p).astype(np.float32))
+    zh = jnp.asarray(
+        (rng.uniform(size=(n, GATES, hdim)) > p).astype(np.float32))
+    return x, h, c, wx, wh, b, zx, zh
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(1, 8), idim=st.integers(1, 9), hdim=st.integers(1, 12),
+       seed=st.integers(0, 2**16))
+def test_cell_matches_ref(n, idim, hdim, seed):
+    rng = np.random.default_rng(seed)
+    args = _cell_inputs(rng, n, idim, hdim)
+    h2, c2 = lstm_cell(*args)
+    h2r, c2r = lstm_cell_ref(*args)
+    np.testing.assert_allclose(h2, h2r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c2, c2r, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("block_n", [None, 2, 4])
+def test_cell_block_tiling_invariant(block_n):
+    """N-tiling (the VMEM reuse-factor analogue) must not change numerics."""
+    rng = np.random.default_rng(7)
+    args = _cell_inputs(rng, 8, 5, 6)
+    h_full, c_full = lstm_cell(*args, block_n=None)
+    h_t, c_t = lstm_cell(*args, block_n=block_n)
+    np.testing.assert_allclose(h_t, h_full, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c_t, c_full, rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(1, 4), t=st.integers(1, 12), idim=st.integers(1, 4),
+       hdim=st.integers(1, 8), seed=st.integers(0, 2**16))
+def test_layer_matches_ref(n, t, idim, hdim, seed):
+    rng = np.random.default_rng(seed)
+    xs = _rand(rng, n, t, idim)
+    _, _, _, wx, wh, b, zx, zh = _cell_inputs(rng, n, idim, hdim)
+    hs = lstm_layer(xs, wx, wh, b, zx, zh)
+    hs_r = lstm_layer_ref(xs, wx, wh, b, zx, zh)
+    assert hs.shape == (n, t, hdim)
+    np.testing.assert_allclose(hs, hs_r, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(1, 16), fdim=st.integers(1, 16), odim=st.integers(1, 8),
+       seed=st.integers(0, 2**16))
+def test_dense_matches_ref(n, fdim, odim, seed):
+    rng = np.random.default_rng(seed)
+    x = _rand(rng, n, fdim)
+    w = _rand(rng, fdim, odim)
+    b = _rand(rng, odim)
+    np.testing.assert_allclose(dense(x, w, b), dense_ref(x, w, b),
+                               rtol=RTOL, atol=ATOL)
+
+
+def test_temporal_dense_shares_weights_across_time():
+    rng = np.random.default_rng(3)
+    hs = _rand(rng, 2, 5, 4)
+    w = _rand(rng, 4, 1)
+    b = _rand(rng, 1)
+    out = temporal_dense(hs, w, b)
+    assert out.shape == (2, 5, 1)
+    for t in range(5):
+        np.testing.assert_allclose(out[:, t], dense_ref(hs[:, t], w, b),
+                                   rtol=RTOL, atol=ATOL)
+
+
+def test_mask_zero_kills_feature():
+    """A zero dropout mask on gate g must remove that feature's
+    contribution to gate g only (DX semantics, Sec. II-B)."""
+    rng = np.random.default_rng(11)
+    x, h, c, wx, wh, b, zx, zh = _cell_inputs(rng, 1, 3, 4, p=0.0)
+    # Zero the input-gate (g=0) mask for input feature 0.
+    zx0 = zx.at[0, 0, 0].set(0.0)
+    h_a, _ = lstm_cell(x, h, c, wx, wh, b, zx0, zh)
+    # Equivalent: zero the weight row instead.
+    wx0 = wx.at[0, 0, :].set(0.0)
+    h_b, _ = lstm_cell(x, h, c, wx0, wh, b, zx, zh)
+    np.testing.assert_allclose(h_a, h_b, rtol=RTOL, atol=ATOL)
+
+
+def test_all_ones_mask_is_pointwise():
+    """Ones masks = the non-Bayesian (pointwise) LSTM."""
+    rng = np.random.default_rng(13)
+    x, h, c, wx, wh, b, _, _ = _cell_inputs(rng, 4, 3, 5)
+    ones_x = jnp.ones((4, GATES, 3))
+    ones_h = jnp.ones((4, GATES, 5))
+    h2, c2 = lstm_cell(x, h, c, wx, wh, b, ones_x, ones_h)
+    h2r, c2r = lstm_cell_ref(x, h, c, wx, wh, b, ones_x, ones_h)
+    np.testing.assert_allclose(h2, h2r, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c2, c2r, rtol=RTOL, atol=ATOL)
+
+
+def test_cell_states_bounded():
+    """|h| <= 1 by construction (sigmoid * tanh); c bounded by f*c + i*g."""
+    rng = np.random.default_rng(17)
+    args = _cell_inputs(rng, 6, 4, 7)
+    h2, c2 = lstm_cell(*args)
+    assert np.all(np.abs(np.asarray(h2)) <= 1.0 + 1e-6)
+    c_prev = np.asarray(args[2])
+    assert np.all(np.abs(np.asarray(c2)) <= np.abs(c_prev).max() + 1.0 + 1e-6)
+
+
+def test_jit_and_eager_agree():
+    rng = np.random.default_rng(19)
+    args = _cell_inputs(rng, 3, 2, 4)
+    h_e, c_e = lstm_cell(*args)
+    h_j, c_j = jax.jit(lstm_cell)(*args)
+    np.testing.assert_allclose(h_j, h_e, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(c_j, c_e, rtol=RTOL, atol=ATOL)

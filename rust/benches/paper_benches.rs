@@ -1,0 +1,945 @@
+//! Paper-reproduction bench harness (`cargo bench`, harness = false —
+//! criterion is unavailable offline, so this is a self-contained runner).
+//!
+//! One section per table/figure of the paper's evaluation:
+//!
+//!   fig8      anomaly-detection DSE sweep (ROC/AUC/AP/ACC per arch)
+//!   fig9      classification DSE sweep (ACC/AP/AR/entropy per arch)
+//!   fig10     metric vs number of MC samples S
+//!   table1    float vs 16-bit fixed point, best anomaly model (3 retrains)
+//!   table2    float vs 16-bit fixed point, best classifier (3 retrains)
+//!   table3    resource utilisation + resource-model accuracy
+//!   table4    FPGA vs CPU vs GPU latency / power / energy (batch 50/200)
+//!   table5    optimisation framework, anomaly modes
+//!   table6    optimisation framework, classification modes
+//!   ablation  latency model vs cycle-accurate simulation error
+//!   perf      L3 hot-path microbenchmarks (engine step, serve overhead)
+//!
+//! Filter by passing section names: `cargo bench -- table4 ablation`.
+//! Paper reference values are printed alongside for eyeball comparison;
+//! EXPERIMENTS.md records a full run.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Instant;
+
+use bayes_rnn_fpga::config::{ArchConfig, Task};
+use bayes_rnn_fpga::data;
+use bayes_rnn_fpga::dse::space::reuse_search;
+use bayes_rnn_fpga::dse::{LookupTable, Optimizer};
+use bayes_rnn_fpga::fpga::accel::Accelerator;
+use bayes_rnn_fpga::fpga::pipeline::PipelineSim;
+use bayes_rnn_fpga::hwmodel::resource::{ResourceModel, ReuseFactors};
+use bayes_rnn_fpga::hwmodel::{GpuModel, LatencyModel, PowerModel, ZC706};
+use bayes_rnn_fpga::metrics;
+use bayes_rnn_fpga::nn::model::Model;
+use bayes_rnn_fpga::nn::Params;
+use bayes_rnn_fpga::rng::Rng;
+use bayes_rnn_fpga::runtime::{HostValue, Runtime};
+use bayes_rnn_fpga::tensor::Tensor;
+use bayes_rnn_fpga::train::eval::{
+    eval_anomaly, eval_classify, ModelPredictor,
+};
+use bayes_rnn_fpga::train::sweep::{self, SweepOpts};
+use bayes_rnn_fpga::train::{NativeTrainer, TrainOpts};
+
+fn main() {
+    let args: Vec<String> = std::env::args()
+        .skip(1)
+        .filter(|a| !a.starts_with("--"))
+        .collect();
+    let want = |name: &str| args.is_empty() || args.iter().any(|a| a == name);
+    let t0 = Instant::now();
+
+    // Sweeps feed figs 8/9 AND tables 5/6; build lazily, reuse.
+    let mut anomaly_table: Option<LookupTable> = None;
+    let mut classify_table: Option<LookupTable> = None;
+
+    if want("fig8") {
+        anomaly_table = Some(fig8());
+    }
+    if want("fig9") {
+        classify_table = Some(fig9());
+    }
+    if want("fig10") {
+        fig10();
+    }
+    if want("table1") {
+        table_quant(Task::Anomaly);
+    }
+    if want("table2") {
+        table_quant(Task::Classify);
+    }
+    if want("table3") {
+        table3();
+    }
+    if want("table4") {
+        table4();
+    }
+    if want("table5") {
+        let table = anomaly_table.take().unwrap_or_else(quick_anomaly_table);
+        table56(Task::Anomaly, &table);
+    }
+    if want("table6") {
+        let table =
+            classify_table.take().unwrap_or_else(quick_classify_table);
+        table56(Task::Classify, &table);
+    }
+    if want("ablation") {
+        ablation_latency_model();
+    }
+    if want("cells") {
+        ablation_cells();
+    }
+    if want("dropout") {
+        ablation_dropout_rates();
+    }
+    if want("openloop") {
+        openloop_serving();
+    }
+    if want("perf") {
+        perf();
+    }
+    println!("\n[bench] total wall time {:.1}s", t0.elapsed().as_secs_f64());
+}
+
+fn banner(s: &str) {
+    println!("\n================================================================");
+    println!("{s}");
+    println!("================================================================");
+}
+
+// ---------------------------------------------------------------------------
+// Figs. 8/9: algorithmic DSE sweeps.
+// ---------------------------------------------------------------------------
+
+fn sweep_opts() -> SweepOpts {
+    SweepOpts {
+        epochs: 20,
+        train_subset: 320,
+        test_subset: 300,
+        noise_subset: 30,
+        mc_samples: 10,
+        ..Default::default()
+    }
+}
+
+fn fig8() -> LookupTable {
+    banner(
+        "Fig. 8 — anomaly DSE: ROC/AUC/AP/ACC per architecture\n\
+         paper: Pareto-optimal nets are at least partially Bayesian;\n\
+         best = {H=16, NL=2, B=YNYN} with AUC/AP/ACC ~ 0.98/0.96/0.95",
+    );
+    let mut table = LookupTable::new();
+    let t0 = Instant::now();
+    sweep::run(Task::Anomaly, &sweep_opts(), &mut table, |d, t, n| {
+        println!("  [{d}/{t}] swept {n}");
+    });
+    println!("\n{:<26} {:>7} {:>7} {:>7}", "arch", "AUC", "AP", "ACC");
+    let mut rows: Vec<_> = table.for_task(Task::Anomaly);
+    rows.sort_by(|a, b| {
+        b.metrics["auc"].partial_cmp(&a.metrics["auc"]).unwrap()
+    });
+    for e in &rows {
+        println!(
+            "{:<26} {:>7.3} {:>7.3} {:>7.3}",
+            e.name, e.metrics["auc"], e.metrics["ap"], e.metrics["accuracy"]
+        );
+    }
+    let best = rows.first().expect("non-empty sweep");
+    let best_is_bayesian = best.bayes.contains('Y');
+    println!(
+        "\nbest by AUC: {} (Bayesian: {best_is_bayesian}) — paper found the \
+         Pareto front at least partially Bayesian; sweep took {:.0}s",
+        best.name,
+        t0.elapsed().as_secs_f64()
+    );
+    table
+}
+
+fn fig9() -> LookupTable {
+    banner(
+        "Fig. 9 — classification DSE: ACC/AP/AR/entropy per architecture\n\
+         paper: best = {H=8, NL=3, B=YNY}, ACC ~0.92, partially Bayesian\n\
+         nets dominate",
+    );
+    let mut table = LookupTable::new();
+    let t0 = Instant::now();
+    sweep::run(Task::Classify, &sweep_opts(), &mut table, |d, t, n| {
+        println!("  [{d}/{t}] swept {n}");
+    });
+    println!(
+        "\n{:<26} {:>7} {:>7} {:>7} {:>9}",
+        "arch", "ACC", "AP", "AR", "H [nats]"
+    );
+    let mut rows: Vec<_> = table.for_task(Task::Classify);
+    rows.sort_by(|a, b| {
+        b.metrics["accuracy"].partial_cmp(&a.metrics["accuracy"]).unwrap()
+    });
+    for e in &rows {
+        println!(
+            "{:<26} {:>7.3} {:>7.3} {:>7.3} {:>9.3}",
+            e.name,
+            e.metrics["accuracy"],
+            e.metrics["ap"],
+            e.metrics["ar"],
+            e.metrics["entropy"]
+        );
+    }
+    println!("sweep took {:.0}s", t0.elapsed().as_secs_f64());
+    table
+}
+
+fn quick_anomaly_table() -> LookupTable {
+    let mut t = LookupTable::new();
+    let mut o = sweep_opts();
+    o.epochs = 10;
+    o.test_subset = 200;
+    sweep::run(Task::Anomaly, &o, &mut t, |_, _, _| {});
+    t
+}
+
+fn quick_classify_table() -> LookupTable {
+    let mut t = LookupTable::new();
+    let mut o = sweep_opts();
+    o.epochs = 10;
+    o.test_subset = 200;
+    sweep::run(Task::Classify, &o, &mut t, |_, _, _| {});
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Fig. 10: metric vs number of MC samples.
+// ---------------------------------------------------------------------------
+
+fn fig10() {
+    banner(
+        "Fig. 10 — software metrics vs MC samples S (1 -> 30 -> 100)\n\
+         paper: S beyond ~30 gives diminishing returns",
+    );
+    // (a) anomaly best arch.
+    {
+        let cfg = ArchConfig::new(Task::Anomaly, 16, 2, "YNYN");
+        let (train, test) = data::anomaly_splits(0);
+        let mut tr = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 40, batch: 64, lr: 1e-2, seed: 0 },
+        );
+        tr.fit(&train);
+        let te = test.subset(&(0..250).collect::<Vec<_>>());
+        println!("anomaly {:<6} {:>7} {:>7} {:>7}", "S", "AUC", "AP", "ACC");
+        for s in [1usize, 10, 30, 100] {
+            let mut p = ModelPredictor::new(&tr.model, 5);
+            let rep = eval_anomaly(&mut p, &te, s);
+            println!(
+                "        {:<6} {:>7.3} {:>7.3} {:>7.3}",
+                s, rep.auc, rep.ap, rep.accuracy
+            );
+        }
+    }
+    // (b) classification best arch.
+    {
+        let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+        let (train, test) = data::splits(0);
+        let mut tr = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 30, batch: 64, lr: 5e-3, seed: 0 },
+        );
+        tr.fit(&train);
+        let te = test.subset(&(0..250).collect::<Vec<_>>());
+        let noise = data::gaussian_noise(30, 0);
+        println!(
+            "classify {:<5} {:>7} {:>7} {:>7} {:>9}",
+            "S", "ACC", "AP", "AR", "H [nats]"
+        );
+        for s in [1usize, 10, 30, 100] {
+            let mut p = ModelPredictor::new(&tr.model, 5);
+            let rep = eval_classify(&mut p, &te, &noise, s);
+            println!(
+                "         {:<5} {:>7.3} {:>7.3} {:>7.3} {:>9.3}",
+                s, rep.accuracy, rep.ap, rep.ar, rep.noise_entropy
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tables I/II: float vs fixed point over 3 retrains.
+// ---------------------------------------------------------------------------
+
+fn table_quant(task: Task) {
+    let (cfg, title, paper) = match task {
+        Task::Anomaly => (
+            ArchConfig::new(Task::Anomaly, 16, 2, "YNYN"),
+            "Table I — float vs 16-bit fixed point, best anomaly model",
+            "paper: ACC 0.95+/-.01 | AP 0.96->0.97 | AUC 0.98 (quantisation \
+             preserves quality)",
+        ),
+        Task::Classify => (
+            ArchConfig::new(Task::Classify, 8, 3, "YNY"),
+            "Table II — float vs 16-bit fixed point, best classifier",
+            "paper: ACC 0.92 | AP 0.68 | AR 0.65 | entropy 0.36->0.38 nats",
+        ),
+    };
+    banner(&format!("{title}\n{paper}"));
+    let s = 30;
+    let retrains = 3;
+    let mut float_vals: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    let mut fixed_vals: BTreeMap<&str, Vec<f64>> = BTreeMap::new();
+    for seed in 0..retrains {
+        let (reports_f, reports_q): (Vec<(&str, f64)>, Vec<(&str, f64)>) =
+            match task {
+                Task::Anomaly => {
+                    let (train, test) = data::anomaly_splits(0);
+                    let mut tr = NativeTrainer::new(
+                        cfg.clone(),
+                        TrainOpts {
+                            epochs: 40,
+                            batch: 64,
+                            lr: 1e-2,
+                            seed,
+                        },
+                    );
+                    tr.fit(&train);
+                    let te = test.subset(&(0..250).collect::<Vec<_>>());
+                    let mut p = ModelPredictor::new(&tr.model, seed + 5);
+                    let f = eval_anomaly(&mut p, &te, s);
+                    let reuse = reuse_search(&cfg, &ZC706).unwrap();
+                    let mut acc = Accelerator::new(
+                        &cfg,
+                        &tr.model.params,
+                        reuse,
+                        seed,
+                    );
+                    let te_q = test.subset(&(0..150).collect::<Vec<_>>());
+                    let q = eval_anomaly(&mut acc, &te_q, s);
+                    (
+                        vec![
+                            ("accuracy", f.accuracy),
+                            ("ap", f.ap),
+                            ("auc", f.auc),
+                        ],
+                        vec![
+                            ("accuracy", q.accuracy),
+                            ("ap", q.ap),
+                            ("auc", q.auc),
+                        ],
+                    )
+                }
+                Task::Classify => {
+                    let (train, test) = data::splits(0);
+                    let mut tr = NativeTrainer::new(
+                        cfg.clone(),
+                        TrainOpts {
+                            epochs: 30,
+                            batch: 64,
+                            lr: 5e-3,
+                            seed,
+                        },
+                    );
+                    tr.fit(&train);
+                    let te = test.subset(&(0..250).collect::<Vec<_>>());
+                    let noise = data::gaussian_noise(30, seed);
+                    let mut p = ModelPredictor::new(&tr.model, seed + 5);
+                    let f = eval_classify(&mut p, &te, &noise, s);
+                    let reuse = reuse_search(&cfg, &ZC706).unwrap();
+                    let mut acc = Accelerator::new(
+                        &cfg,
+                        &tr.model.params,
+                        reuse,
+                        seed,
+                    );
+                    let te_q = test.subset(&(0..150).collect::<Vec<_>>());
+                    let q = eval_classify(&mut acc, &te_q, &noise, s);
+                    (
+                        vec![
+                            ("accuracy", f.accuracy),
+                            ("ap", f.ap),
+                            ("ar", f.ar),
+                            ("entropy", f.noise_entropy),
+                        ],
+                        vec![
+                            ("accuracy", q.accuracy),
+                            ("ap", q.ap),
+                            ("ar", q.ar),
+                            ("entropy", q.noise_entropy),
+                        ],
+                    )
+                }
+            };
+        for (k, v) in reports_f {
+            float_vals.entry(k).or_default().push(v);
+        }
+        for (k, v) in reports_q {
+            fixed_vals.entry(k).or_default().push(v);
+        }
+        println!("  retrain {} done", seed + 1);
+    }
+    println!("\n{:<16} {:>18} {:>18}", "metric", "floating-point", "fixed-point");
+    for (k, fv) in &float_vals {
+        let (fm, fs) = metrics::mean_std(fv);
+        let (qm, qs) = metrics::mean_std(&fixed_vals[k]);
+        println!(
+            "{:<16} {:>10.3} ±{:>5.3} {:>10.3} ±{:>5.3}",
+            k, fm, fs, qm, qs
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table III: resource utilisation + model accuracy.
+// ---------------------------------------------------------------------------
+
+fn table3() {
+    banner(
+        "Table III — resource utilisation, best architectures on ZC706\n\
+         paper: anomaly 758 DSP used vs 754 modelled; classification 898 vs\n\
+         915 — resource model >= 98% accurate",
+    );
+    for (cfg, label) in [
+        (
+            ArchConfig::new(Task::Anomaly, 16, 2, "YNYN"),
+            "Anomaly  H=16 NL=2 B=YNYN",
+        ),
+        (
+            ArchConfig::new(Task::Classify, 8, 3, "YNY"),
+            "Classify H=8  NL=3 B=YNY ",
+        ),
+    ] {
+        let reuse = reuse_search(&cfg, &ZC706).expect("fits");
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        let accel = Accelerator::new(&cfg, &params, reuse, 0);
+        let syn = accel.resources_synthesized();
+        let est = accel.resources_estimated();
+        let err = (syn.dsps - est.dsps).abs() / syn.dsps * 100.0;
+        let u = syn.utilization(&ZC706);
+        println!(
+            "\n{label}  R={{x:{},h:{},d:{}}}",
+            reuse.rx, reuse.rh, reuse.rd
+        );
+        println!(
+            "  available LUT {:>7}  FF {:>7}  BRAM {:>5}  DSP {:>5}",
+            ZC706.luts, ZC706.ffs, ZC706.brams, ZC706.dsps
+        );
+        println!(
+            "  used      LUT {:>7.0}  FF {:>7.0}  BRAM {:>5.0}  DSP {:>5.0}",
+            syn.luts, syn.ffs, syn.brams, syn.dsps
+        );
+        println!(
+            "  utilised  LUT {:>6.1}%  FF {:>6.1}%  BRAM {:>4.1}%  DSP {:>4.1}%",
+            u[0], u[1], u[2], u[3]
+        );
+        println!(
+            "  DSP model estimate {:.0} vs synthesised {:.0} -> {:.2}% error \
+             (paper: <2%)",
+            est.dsps, syn.dsps, err
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Table IV: FPGA vs CPU vs GPU.
+// ---------------------------------------------------------------------------
+
+fn table4() {
+    banner(
+        "Table IV — latency/power/energy: FPGA vs CPU vs GPU, S=30\n\
+         paper (anomaly b=50):  FPGA 41.3 ms / 3.44 W / 0.005 J\n\
+               CPU 4011 ms / 15 W / 2.01 J   GPU 379.8 ms / 69 W / 0.53 J",
+    );
+    let artifacts = Path::new("artifacts");
+    let mut runtime = Runtime::new(artifacts).ok();
+    if runtime.is_none() {
+        println!("(artifacts missing: CPU column will be skipped — run `make artifacts`)");
+    }
+    for (cfg, reuse) in [
+        (
+            ArchConfig::new(Task::Anomaly, 16, 2, "YNYN"),
+            reuse_search(
+                &ArchConfig::new(Task::Anomaly, 16, 2, "YNYN"),
+                &ZC706,
+            )
+            .unwrap(),
+        ),
+        (
+            ArchConfig::new(Task::Classify, 8, 3, "YNY"),
+            reuse_search(
+                &ArchConfig::new(Task::Classify, 8, 3, "YNY"),
+                &ZC706,
+            )
+            .unwrap(),
+        ),
+    ] {
+        let s = 30;
+        let res = ResourceModel::estimate(&cfg, &reuse);
+        let fpga_w = PowerModel::fpga_watts(&res);
+        println!(
+            "\n{}  R={{x:{},h:{},d:{}}}  FPGA power {:.2} W",
+            cfg.name(),
+            reuse.rx,
+            reuse.rh,
+            reuse.rd,
+            fpga_w
+        );
+        println!(
+            "{:>6} | {:>12} {:>12} {:>12} | {:>10} {:>10} {:>10}",
+            "batch", "FPGA [ms]", "CPU [ms]", "GPU [ms]", "FPGA [J]",
+            "CPU [J]", "GPU [J]"
+        );
+        for batch in [50usize, 200] {
+            let sim = PipelineSim::new(&cfg, reuse);
+            let fpga_ms = sim.simulate_ms(batch, s, ZC706.clock_hz);
+            let gpu_ms = GpuModel::latency_ms(&cfg, batch, s);
+            // CPU: measured PJRT wallclock on the batched fwd artifact.
+            let cpu_ms = runtime.as_mut().and_then(|rt| {
+                measure_cpu_ms(rt, &cfg, batch, s).ok()
+            });
+            let fpga_j = PowerModel::joules_per_sample(fpga_w, fpga_ms, batch);
+            let gpu_j = PowerModel::joules_per_sample(
+                PowerModel::gpu_watts(),
+                gpu_ms,
+                batch,
+            );
+            let cpu_j = cpu_ms.map(|ms| {
+                PowerModel::joules_per_sample(PowerModel::cpu_watts(), ms, batch)
+            });
+            println!(
+                "{:>6} | {:>12.2} {:>12} {:>12.2} | {:>10.4} {:>10} {:>10.4}",
+                batch,
+                fpga_ms,
+                cpu_ms
+                    .map(|v| format!("{v:.2}"))
+                    .unwrap_or_else(|| "n/a".into()),
+                gpu_ms,
+                fpga_j,
+                cpu_j
+                    .map(|v| format!("{v:.4}"))
+                    .unwrap_or_else(|| "n/a".into()),
+                gpu_j
+            );
+        }
+    }
+    println!(
+        "\nShape to check vs the paper: FPGA fastest and ~100x more \
+         energy-efficient than GPU; GPU latency nearly batch-insensitive \
+         (launch-bound); CPU slowest at large batch."
+    );
+}
+
+/// Measured PJRT-CPU latency for a batched Bayesian inference
+/// (rows = batch * S, matching the paper's PyTorch batching).
+fn measure_cpu_ms(
+    rt: &mut Runtime,
+    cfg: &ArchConfig,
+    batch: usize,
+    s: usize,
+) -> anyhow::Result<f64> {
+    let rows = batch * s;
+    let name = format!("{}.fwd_n{rows}", cfg.name());
+    let meta = rt
+        .manifest
+        .find(&name)
+        .ok_or_else(|| anyhow::anyhow!("no artifact {name}"))?
+        .clone();
+    let params = Params::init(cfg, &mut Rng::new(0));
+    let beats = data::generate(batch, 3);
+    let mut xs = Vec::with_capacity(rows * cfg.seq_len);
+    for b in 0..batch {
+        for _ in 0..s {
+            xs.extend_from_slice(beats.beat(b));
+        }
+    }
+    let masks =
+        bayes_rnn_fpga::nn::model::Masks::sample(cfg, rows, &mut Rng::new(1));
+    let mut args: Vec<HostValue> = params
+        .tensors
+        .iter()
+        .map(|t| HostValue::F32(t.clone()))
+        .collect();
+    args.push(HostValue::F32(Tensor::new(
+        vec![rows, cfg.seq_len, cfg.input_dim],
+        xs,
+    )));
+    for m in &masks.tensors {
+        args.push(HostValue::F32(m.clone()));
+    }
+    let exe = rt.load(&meta.name)?;
+    // Warm-up once, then time.
+    exe.run(&args)?;
+    let t0 = Instant::now();
+    exe.run(&args)?;
+    Ok(t0.elapsed().as_secs_f64() * 1e3)
+}
+
+// ---------------------------------------------------------------------------
+// Tables V/VI: optimisation framework.
+// ---------------------------------------------------------------------------
+
+fn table56(task: Task, lookup: &LookupTable) {
+    let (title, paper) = match task {
+        Task::Anomaly => (
+            "Table V — optimisation framework, anomaly detection",
+            "paper: Opt-Latency -> {8,1,NN} 6.94 ms; Opt-Acc/AP/AUC -> \
+             {16,2,YNYN} 165 ms, ACC 0.96 AP 0.98 AUC 0.99",
+        ),
+        Task::Classify => (
+            "Table VI — optimisation framework, classification",
+            "paper: Opt-Latency -> {8,1,N} 3.44 ms; Opt-Accuracy -> \
+             {8,3,NYN} 0.93; Opt-Precision -> {8,3,YNY} 0.69; Opt-Recall \
+             -> {8,2,YN} 0.67; Opt-Entropy -> {8,3,YNN} 0.60 nats",
+        ),
+    };
+    banner(&format!("{title}\n{paper}"));
+    let mut opt = Optimizer::new(&ZC706, lookup);
+    opt.batch = 200;
+    opt.mc_samples = 30;
+    println!(
+        "{:<14} {:>18} {:>12} {:>4} {:>11} {:>11}  metrics",
+        "Mode", "A:{H,NL,B}", "R:{x,h,d}", "S", "FPGA [ms]", "GPU [ms]"
+    );
+    for mode in Optimizer::modes_for(task) {
+        match opt.optimize(task, mode) {
+            Some(c) => {
+                let metr: Vec<String> = c
+                    .metrics
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v:.3}"))
+                    .collect();
+                println!(
+                    "{:<14} {:>18} {:>12} {:>4} {:>11.2} {:>11.2}  {}",
+                    c.mode,
+                    format!(
+                        "{{{},{},{}}}",
+                        c.arch.hidden,
+                        c.arch.nl,
+                        c.arch.bayes_str()
+                    ),
+                    format!(
+                        "{{{},{},{}}}",
+                        c.reuse.rx, c.reuse.rh, c.reuse.rd
+                    ),
+                    c.s,
+                    c.fpga_latency_ms,
+                    c.gpu_latency_ms,
+                    metr.join(" ")
+                );
+            }
+            None => {
+                println!("{:<14} (no feasible configuration)", mode.name())
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablation: latency model vs cycle-accurate simulation (the paper's
+// 2.26% / 2.13% model-error check).
+// ---------------------------------------------------------------------------
+
+fn ablation_latency_model() {
+    banner(
+        "Ablation — analytic latency model vs cycle-accurate simulation\n\
+         paper: prediction error 2.26% (anomaly) / 2.13% (classification)",
+    );
+    println!(
+        "{:<26} {:>6} {:>4} {:>12} {:>12} {:>8}",
+        "arch", "batch", "S", "sim [cyc]", "model [cyc]", "err %"
+    );
+    for (cfg, reuse) in [
+        (
+            ArchConfig::new(Task::Anomaly, 16, 2, "YNYN"),
+            ReuseFactors::new(16, 5, 16),
+        ),
+        (
+            ArchConfig::new(Task::Classify, 8, 3, "YNY"),
+            ReuseFactors::new(12, 1, 1),
+        ),
+        (
+            ArchConfig::new(Task::Classify, 8, 1, "N"),
+            ReuseFactors::new(2, 1, 1),
+        ),
+        (
+            ArchConfig::new(Task::Anomaly, 8, 1, "NN"),
+            ReuseFactors::new(4, 2, 4),
+        ),
+    ] {
+        for (batch, s) in [(1usize, 1usize), (50, 30), (200, 30)] {
+            let sim = PipelineSim::new(&cfg, reuse);
+            let rep = sim.simulate(batch, s);
+            println!(
+                "{:<26} {:>6} {:>4} {:>12} {:>12} {:>8.2}",
+                cfg.name(),
+                batch,
+                s,
+                rep.cycles,
+                rep.model_cycles,
+                rep.model_error * 100.0
+            );
+        }
+    }
+    // Cross-check with the closed-form used by the DSE.
+    let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+    let r = ReuseFactors::new(12, 1, 1);
+    println!(
+        "\nclosed-form batch_ms (DSE path): {:.2} ms vs paper 25.23 ms",
+        LatencyModel::batch_ms(&cfg, &r, 50, 30, ZC706.clock_hz)
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Extension ablations (paper Sec. III-A note + future work).
+// ---------------------------------------------------------------------------
+
+/// GRU vs LSTM engines at matched (I, H, R): resources + numerics drift.
+fn ablation_cells() {
+    banner(
+        "Ablation — recurrent cell: LSTM vs GRU engines (paper: 'a similar\n\
+         design logic can be used for other recurrent units such as the\n\
+         gated recurrent unit')",
+    );
+    use bayes_rnn_fpga::fpga::engine::LstmEngine;
+    use bayes_rnn_fpga::fpga::gru::GruEngine;
+    use bayes_rnn_fpga::fixedpoint::Fx16;
+    let mut rng = Rng::new(0);
+    println!(
+        "{:>4} {:>4} {:>4} | {:>10} {:>10} | {:>10} {:>10}",
+        "I", "H", "R", "LSTM DSPs", "GRU DSPs", "LSTM us/st", "GRU us/st"
+    );
+    for (idim, hdim, r) in [(1usize, 8usize, 1usize), (8, 16, 2), (16, 32, 4)]
+    {
+        let rt = |rng: &mut Rng, shape: &[usize]| {
+            Tensor::from_fn(shape, |_| rng.normal_scaled(0.0, 0.3) as f32)
+        };
+        let lwx = rt(&mut rng, &[4, idim, hdim]);
+        let lwh = rt(&mut rng, &[4, hdim, hdim]);
+        let lb = rt(&mut rng, &[4, hdim]);
+        let gwx = rt(&mut rng, &[3, idim, hdim]);
+        let gwh = rt(&mut rng, &[3, hdim, hdim]);
+        let gb = rt(&mut rng, &[3, hdim]);
+        let mut lstm = LstmEngine::new(&lwx, &lwh, &lb, r, r, true);
+        let mut gru = GruEngine::new(&gwx, &gwh, &gb, r, r, true);
+        let x: Vec<Fx16> = (0..idim)
+            .map(|i| Fx16::from_f32((i as f32 * 0.4).sin()))
+            .collect();
+        let iters = 3000;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            lstm.step(&x);
+        }
+        let lstm_us = t0.elapsed().as_secs_f64() / iters as f64 * 1e6;
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            gru.step(&x);
+        }
+        let gru_us = t1.elapsed().as_secs_f64() / iters as f64 * 1e6;
+        println!(
+            "{:>4} {:>4} {:>4} | {:>10} {:>10} | {:>10.2} {:>10.2}",
+            idim,
+            hdim,
+            r,
+            lstm.dsps_synthesized(),
+            gru.dsps_synthesized(),
+            lstm_us,
+            gru_us
+        );
+    }
+    println!("GRU: 3 gates + 16-bit tail => ~25% fewer DSPs, fewer mask bits.");
+}
+
+/// Variable dropout rates in hardware (paper future work): rate accuracy
+/// + the accuracy/uncertainty trade-off p controls.
+fn ablation_dropout_rates() {
+    banner(
+        "Ablation — programmable dropout rates (paper future work:\n\
+         'supporting a wide variety of dropout rates in hardware')",
+    );
+    use bayes_rnn_fpga::lfsr::VariableSampler;
+    println!("{:>8} {:>12} {:>12}", "p req.", "p realised", "p measured");
+    for &p in &[0.0625f64, 0.125, 0.25, 0.375, 0.5] {
+        let mut s = VariableSampler::new(7, 8, p);
+        let n = 100_000;
+        let zeros = (0..n).filter(|_| s.sample() == 0.0).count();
+        println!(
+            "{:>8.4} {:>12.4} {:>12.4}",
+            p,
+            s.effective_p(),
+            zeros as f64 / n as f64
+        );
+    }
+    // Algorithmic effect: entropy/accuracy vs p on a trained classifier.
+    let (train, test) = data::splits(0);
+    let te = test.subset(&(0..200).collect::<Vec<_>>());
+    let noise = data::gaussian_noise(30, 0);
+    println!(
+        "\n{:>8} {:>9} {:>9}  (classifier H=8 NL=2 B=YY, S=20)",
+        "p", "ACC", "H [nats]"
+    );
+    for &p in &[0.0f32, 0.0625, 0.125, 0.25] {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.dropout_p = p;
+        let mut tr = NativeTrainer::new(
+            cfg.clone(),
+            TrainOpts { epochs: 15, batch: 64, lr: 5e-3, seed: 0 },
+        );
+        tr.fit(&train);
+        let mut pr = ModelPredictor::new(&tr.model, 3);
+        let rep = eval_classify(&mut pr, &te, &noise, 20);
+        println!("{:>8.4} {:>9.3} {:>9.3}", p, rep.accuracy, rep.noise_entropy);
+    }
+    println!("Higher p trades accuracy for uncertainty (calibration) — the\n\
+              trade-off the paper fixes at p = 1/8 for hardware reasons.");
+}
+
+/// Open-loop Poisson serving: latency vs offered load on the FPGA engine.
+fn openloop_serving() {
+    banner(
+        "Open-loop serving — Poisson arrivals through the coordinator\n\
+         (latency knee as offered load approaches engine capacity)",
+    );
+    use bayes_rnn_fpga::coordinator::loadgen::{replay, PoissonTrace};
+    use bayes_rnn_fpga::coordinator::{
+        BatchPolicy, Engine, Server, ServerConfig,
+    };
+    let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+    let (train, test) = data::splits(0);
+    let mut tr = NativeTrainer::new(
+        cfg.clone(),
+        TrainOpts { epochs: 8, batch: 64, lr: 5e-3, seed: 0 },
+    );
+    tr.fit(&train);
+    let params = tr.model.params.tensors.clone();
+    let reuse = reuse_search(&cfg, &ZC706).unwrap();
+    let s = 30;
+    println!(
+        "{:>12} {:>10} {:>10} {:>10}",
+        "load [req/s]", "p50 [ms]", "p99 [ms]", "served/s"
+    );
+    for rate in [50.0f64, 200.0, 800.0] {
+        let c2 = cfg.clone();
+        let p2 = params.clone();
+        let mut server = Server::start(
+            move || {
+                let m = Model::new(
+                    c2.clone(),
+                    Params { tensors: p2.clone() },
+                );
+                Engine::fpga(&c2, &m, reuse, s, 3)
+            },
+            ServerConfig {
+                policy: BatchPolicy::stream(),
+                queue_depth: 1024,
+            },
+        );
+        let n = (rate * 1.2).max(40.0) as usize; // ~1.2 s of traffic
+        let trace = PoissonTrace::generate(rate, n, &test, 5);
+        let t0 = Instant::now();
+        let receivers = replay(&trace, &mut server, &test);
+        for rx in receivers {
+            rx.recv().unwrap();
+        }
+        let wall = t0.elapsed();
+        let summary = server.join();
+        println!(
+            "{:>12.0} {:>10.2} {:>10.2} {:>10.1}",
+            rate,
+            summary.e2e.percentile_ms(50.0),
+            summary.e2e.percentile_ms(99.0),
+            summary.served as f64 / wall.as_secs_f64()
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Perf microbenches (EXPERIMENTS.md §Perf).
+// ---------------------------------------------------------------------------
+
+fn perf() {
+    banner("Perf — L3 hot-path microbenchmarks");
+    // 1. Fixed-point LSTM engine step throughput.
+    {
+        let cfg = ArchConfig::new(Task::Classify, 16, 2, "NN");
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        let mut accel =
+            Accelerator::new(&cfg, &params, ReuseFactors::new(1, 1, 1), 0);
+        let beat: Vec<f32> = (0..cfg.seq_len)
+            .map(|i| (i as f32 * 0.21).sin())
+            .collect();
+        let iters = 200;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            accel.run_pass(&beat);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let steps = iters * cfg.seq_len * cfg.num_lstm_layers();
+        let macs_per_step = 4 * (16 * 16 + 16 * 16);
+        println!(
+            "fixed-point engine: {:.1} us/pass, {:.1} M cell-steps/s, \
+             {:.0} MMAC/s",
+            dt / iters as f64 * 1e6,
+            steps as f64 / dt / 1e6,
+            (steps * macs_per_step) as f64 / dt / 1e6
+        );
+    }
+    // 2. Float engine forward throughput (batch row scaling).
+    {
+        let cfg = ArchConfig::new(Task::Classify, 16, 2, "NN");
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        let masks = bayes_rnn_fpga::nn::model::Masks::ones(&cfg, 30);
+        let mut xs = Vec::new();
+        let beats = data::generate(1, 0);
+        for _ in 0..30 {
+            xs.extend_from_slice(beats.beat(0));
+        }
+        let iters = 40;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            let _ = model.forward(&xs, 30, &masks);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "float engine fwd (30 rows x T140): {:.2} ms/call",
+            dt / iters as f64 * 1e3
+        );
+    }
+    // 3. Coordinator round-trip overhead (stream policy, trivial engine).
+    {
+        use bayes_rnn_fpga::coordinator::{
+            BatchPolicy, Engine, Server, ServerConfig,
+        };
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "N");
+        cfg.seq_len = 20;
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        let c2 = cfg.clone();
+        let p = model.params.tensors.clone();
+        let mut server = Server::start(
+            move || {
+                let m = Model::new(
+                    c2.clone(),
+                    Params { tensors: p.clone() },
+                );
+                Engine::fpga(&c2, &m, ReuseFactors::new(1, 1, 1), 1, 0)
+            },
+            ServerConfig {
+                policy: BatchPolicy::stream(),
+                queue_depth: 512,
+            },
+        );
+        let n = 2000;
+        let beat = vec![0.1f32; 20];
+        let t0 = Instant::now();
+        let rxs: Vec<_> =
+            (0..n).map(|_| server.submit(beat.clone())).collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let summary = server.join();
+        println!(
+            "coordinator: {:.1} req/s end-to-end, e2e p50 {:.3} ms \
+             (queue+dispatch overhead on a {:.0} us engine)",
+            n as f64 / dt,
+            summary.e2e.percentile_ms(50.0),
+            summary.engine.mean_ms() * 1e3
+        );
+    }
+}

@@ -1,0 +1,277 @@
+//! Architecture configuration `A = {H, NL, B}` (paper Sec. IV-A), mirrored
+//! exactly from `python/compile/model.py::ArchConfig`. The parameter and
+//! mask orderings defined here are the positional ABI shared with the AOT
+//! HLO artifacts.
+
+/// Number of LSTM gates (input, forget, modulation, output).
+pub const GATES: usize = 4;
+
+/// The two evaluation tasks of the paper (Sec. V).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    /// Recurrent autoencoder reconstructing the beat (anomaly detection).
+    Anomaly,
+    /// Recurrent classifier over the 4 ECG5000 classes.
+    Classify,
+}
+
+impl Task {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Task::Anomaly => "anomaly",
+            Task::Classify => "classify",
+        }
+    }
+}
+
+impl std::str::FromStr for Task {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "anomaly" => Ok(Task::Anomaly),
+            "classify" => Ok(Task::Classify),
+            other => Err(format!("unknown task {other:?}")),
+        }
+    }
+}
+
+/// Architecture point: hidden size `H`, layer count `NL`, Bayesian pattern
+/// `B` (one flag per LSTM layer: `2*NL` for the autoencoder, `NL` for the
+/// classifier) plus the task constants.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArchConfig {
+    pub task: Task,
+    pub hidden: usize,
+    pub nl: usize,
+    /// `true` = MC-dropout enabled for that LSTM layer (a `Y` in the paper).
+    pub bayes: Vec<bool>,
+    pub input_dim: usize,
+    pub seq_len: usize,
+    pub num_classes: usize,
+    /// Dropout probability; the paper fixes p = 1/8 (3 LFSRs + NAND).
+    pub dropout_p: f32,
+}
+
+impl ArchConfig {
+    pub fn new(task: Task, hidden: usize, nl: usize, bayes: &str) -> Self {
+        let cfg = Self {
+            task,
+            hidden,
+            nl,
+            bayes: bayes.chars().map(|c| c == 'Y').collect(),
+            input_dim: 1,
+            seq_len: 140,
+            num_classes: 4,
+            dropout_p: 0.125,
+        };
+        cfg.validate().expect("invalid ArchConfig");
+        cfg
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.bayes.len() != self.num_lstm_layers() {
+            return Err(format!(
+                "B pattern has {} flags, need {}",
+                self.bayes.len(),
+                self.num_lstm_layers()
+            ));
+        }
+        if self.task == Task::Anomaly && self.hidden % 2 != 0 {
+            return Err("autoencoder bottleneck is H/2; H must be even".into());
+        }
+        if self.hidden == 0 || self.nl == 0 || self.seq_len == 0 {
+            return Err("H, NL, T must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Total LSTM layers: encoder+decoder for the AE, encoder only for the
+    /// classifier.
+    pub fn num_lstm_layers(&self) -> usize {
+        match self.task {
+            Task::Anomaly => 2 * self.nl,
+            Task::Classify => self.nl,
+        }
+    }
+
+    /// Bottleneck width of the autoencoder (`H/2`, Sec. III-C).
+    pub fn bottleneck(&self) -> usize {
+        self.hidden / 2
+    }
+
+    /// `(input_dim, hidden_dim)` per LSTM layer, in order. Mirrors
+    /// `ArchConfig.lstm_dims` in `model.py`.
+    pub fn lstm_dims(&self) -> Vec<(usize, usize)> {
+        let mut dims = Vec::with_capacity(self.num_lstm_layers());
+        match self.task {
+            Task::Anomaly => {
+                let mut prev = self.input_dim;
+                for l in 0..self.nl {
+                    let h = if l == self.nl - 1 {
+                        self.bottleneck()
+                    } else {
+                        self.hidden
+                    };
+                    dims.push((prev, h));
+                    prev = h;
+                }
+                for _ in 0..self.nl {
+                    dims.push((prev, self.hidden));
+                    prev = self.hidden;
+                }
+            }
+            Task::Classify => {
+                let mut prev = self.input_dim;
+                for _ in 0..self.nl {
+                    dims.push((prev, self.hidden));
+                    prev = self.hidden;
+                }
+            }
+        }
+        dims
+    }
+
+    /// `(in, out)` of the final dense layer.
+    pub fn dense_dims(&self) -> (usize, usize) {
+        match self.task {
+            Task::Anomaly => (self.hidden, self.input_dim),
+            Task::Classify => (self.hidden, self.num_classes),
+        }
+    }
+
+    /// Parameter tensor shapes in ABI order: per layer `wx [4,I,H]`,
+    /// `wh [4,H,H]`, `b [4,H]`; then `dense.w [F,O]`, `dense.b [O]`.
+    pub fn param_shapes(&self) -> Vec<Vec<usize>> {
+        let mut shapes = Vec::new();
+        for (i, h) in self.lstm_dims() {
+            shapes.push(vec![GATES, i, h]);
+            shapes.push(vec![GATES, h, h]);
+            shapes.push(vec![GATES, h]);
+        }
+        let (f, o) = self.dense_dims();
+        shapes.push(vec![f, o]);
+        shapes.push(vec![o]);
+        shapes
+    }
+
+    pub fn param_names(&self) -> Vec<String> {
+        let mut names = Vec::new();
+        for l in 0..self.num_lstm_layers() {
+            names.push(format!("lstm{l}.wx"));
+            names.push(format!("lstm{l}.wh"));
+            names.push(format!("lstm{l}.b"));
+        }
+        names.push("dense.w".into());
+        names.push("dense.b".into());
+        names
+    }
+
+    /// Mask tensor shapes (zx then zh per LSTM layer) for `n` rows.
+    pub fn mask_shapes(&self, n: usize) -> Vec<Vec<usize>> {
+        let mut shapes = Vec::new();
+        for (i, h) in self.lstm_dims() {
+            shapes.push(vec![n, GATES, i]);
+            shapes.push(vec![n, GATES, h]);
+        }
+        shapes
+    }
+
+    /// The Y/N string form of `B`.
+    pub fn bayes_str(&self) -> String {
+        self.bayes.iter().map(|&b| if b { 'Y' } else { 'N' }).collect()
+    }
+
+    /// Whether any layer is Bayesian (pointwise nets run S=1).
+    pub fn is_bayesian(&self) -> bool {
+        self.bayes.iter().any(|&b| b)
+    }
+
+    /// Total trainable parameter count.
+    pub fn num_weights(&self) -> usize {
+        self.param_shapes().iter().map(|s| s.iter().product::<usize>()).sum()
+    }
+
+    /// Artifact-name stem shared with `model.py::ArchConfig.name`.
+    pub fn name(&self) -> String {
+        format!(
+            "{}_h{}_nl{}_{}",
+            self.task.as_str(),
+            self.hidden,
+            self.nl,
+            self.bayes_str()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ae_dims_match_python() {
+        let cfg = ArchConfig::new(Task::Anomaly, 16, 2, "YNYN");
+        assert_eq!(cfg.lstm_dims(), vec![(1, 16), (16, 8), (8, 16), (16, 16)]);
+        assert_eq!(cfg.dense_dims(), (16, 1));
+        assert_eq!(cfg.num_lstm_layers(), 4);
+        assert_eq!(cfg.name(), "anomaly_h16_nl2_YNYN");
+    }
+
+    #[test]
+    fn ae_nl1_bottleneck() {
+        let cfg = ArchConfig::new(Task::Anomaly, 8, 1, "NN");
+        assert_eq!(cfg.lstm_dims(), vec![(1, 4), (4, 8)]);
+        assert!(!cfg.is_bayesian());
+    }
+
+    #[test]
+    fn classifier_dims() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+        assert_eq!(cfg.lstm_dims(), vec![(1, 8), (8, 8), (8, 8)]);
+        assert_eq!(cfg.dense_dims(), (8, 4));
+        assert!(cfg.is_bayesian());
+    }
+
+    #[test]
+    fn param_shapes_abi() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        assert_eq!(
+            cfg.param_shapes(),
+            vec![
+                vec![4, 1, 8],
+                vec![4, 8, 8],
+                vec![4, 8],
+                vec![8, 4],
+                vec![4],
+            ]
+        );
+        assert_eq!(cfg.num_weights(), 4 * 8 + 4 * 64 + 32 + 32 + 4);
+    }
+
+    #[test]
+    fn mask_shapes_abi() {
+        let cfg = ArchConfig::new(Task::Anomaly, 8, 1, "YN");
+        assert_eq!(
+            cfg.mask_shapes(3),
+            vec![vec![3, 4, 1], vec![3, 4, 4], vec![3, 4, 4], vec![3, 4, 8]]
+        );
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_bayes_len_panics() {
+        ArchConfig::new(Task::Classify, 8, 2, "Y");
+    }
+
+    #[test]
+    #[should_panic]
+    fn odd_hidden_ae_panics() {
+        ArchConfig::new(Task::Anomaly, 7, 1, "NN");
+    }
+
+    #[test]
+    fn task_roundtrip() {
+        assert_eq!("anomaly".parse::<Task>().unwrap(), Task::Anomaly);
+        assert_eq!("classify".parse::<Task>().unwrap(), Task::Classify);
+        assert!("foo".parse::<Task>().is_err());
+    }
+}

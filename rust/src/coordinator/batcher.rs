@@ -1,0 +1,159 @@
+//! Dynamic batcher: groups queued requests into engine batches under a
+//! size/deadline policy. The FPGA path uses batch 1 (the paper streams
+//! each request as it arrives); the CPU/GPU baseline paths batch up to
+//! the configured size the way PyTorch serving does.
+
+use std::time::{Duration, Instant};
+
+/// Batch-forming policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Max requests per batch (1 = stream-through).
+    pub max_batch: usize,
+    /// Max time the first queued request may wait for company.
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    pub fn stream() -> Self {
+        Self { max_batch: 1, max_wait: Duration::ZERO }
+    }
+
+    pub fn batched(max_batch: usize, max_wait: Duration) -> Self {
+        assert!(max_batch >= 1);
+        Self { max_batch, max_wait }
+    }
+}
+
+/// A formed batch of request ids + payloads.
+#[derive(Debug)]
+pub struct Batch<T> {
+    pub ids: Vec<u64>,
+    pub items: Vec<T>,
+}
+
+/// Accumulates requests and decides when a batch is ready.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    pending_ids: Vec<u64>,
+    pending: Vec<T>,
+    oldest: Option<Instant>,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Self {
+            policy,
+            pending_ids: Vec::new(),
+            pending: Vec::new(),
+            oldest: None,
+        }
+    }
+
+    pub fn push(&mut self, id: u64, item: T) {
+        if self.pending.is_empty() {
+            self.oldest = Some(Instant::now());
+        }
+        self.pending_ids.push(id);
+        self.pending.push(item);
+    }
+
+    pub fn len(&self) -> usize {
+        self.pending.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pending.is_empty()
+    }
+
+    /// Is a batch ready under the policy? `queue_empty` signals that no
+    /// more requests are immediately available (flush early rather than
+    /// idle-wait — request latency beats batch efficiency on an
+    /// interactive medical stream).
+    pub fn ready(&self, queue_empty: bool) -> bool {
+        if self.pending.is_empty() {
+            return false;
+        }
+        if self.pending.len() >= self.policy.max_batch {
+            return true;
+        }
+        if queue_empty {
+            return true;
+        }
+        match self.oldest {
+            Some(t0) => t0.elapsed() >= self.policy.max_wait,
+            None => false,
+        }
+    }
+
+    /// Take up to max_batch items as a batch.
+    pub fn take(&mut self) -> Batch<T> {
+        let n = self.pending.len().min(self.policy.max_batch);
+        let items: Vec<T> = self.pending.drain(..n).collect();
+        let ids: Vec<u64> = self.pending_ids.drain(..n).collect();
+        if self.pending.is_empty() {
+            self.oldest = None;
+        } else {
+            self.oldest = Some(Instant::now());
+        }
+        Batch { ids, items }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stream_policy_fires_immediately() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy::stream());
+        assert!(!b.ready(true));
+        b.push(1, 10);
+        assert!(b.ready(false));
+        let batch = b.take();
+        assert_eq!(batch.ids, vec![1]);
+        assert!(b.is_empty());
+    }
+
+    #[test]
+    fn size_trigger() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(3, Duration::from_secs(10)));
+        b.push(1, 0);
+        b.push(2, 0);
+        assert!(!b.ready(false), "below size, queue non-empty, no timeout");
+        b.push(3, 0);
+        assert!(b.ready(false));
+        assert_eq!(b.take().ids, vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn empty_queue_flushes_partial_batch() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(8, Duration::from_secs(10)));
+        b.push(7, 0);
+        assert!(b.ready(true), "flush rather than wait on an idle queue");
+    }
+
+    #[test]
+    fn deadline_trigger() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(8, Duration::from_millis(1)));
+        b.push(1, 0);
+        std::thread::sleep(Duration::from_millis(3));
+        assert!(b.ready(false));
+    }
+
+    #[test]
+    fn take_respects_max_batch() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(2, Duration::ZERO));
+        for i in 0..5 {
+            b.push(i, i as u32);
+        }
+        assert_eq!(b.take().ids, vec![0, 1]);
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.take().ids, vec![2, 3]);
+        assert_eq!(b.take().ids, vec![4]);
+    }
+}

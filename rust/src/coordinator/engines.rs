@@ -1,0 +1,261 @@
+//! Inference engines behind the coordinator: the FPGA simulator (batch-1
+//! streaming, functional fixed-point output + simulated hardware
+//! latency), the PJRT CPU baseline (real measured wallclock over the AOT
+//! artifact), and the analytic GPU baseline (float output + modelled
+//! latency).
+
+use anyhow::Result;
+use std::time::Instant;
+
+use crate::config::{ArchConfig, Task};
+use crate::fpga::accel::{Accelerator, McOutput};
+use crate::fpga::pipeline::PipelineSim;
+use crate::hwmodel::resource::ReuseFactors;
+use crate::hwmodel::{GpuModel, ZC706};
+use crate::nn::model::{Masks, Model};
+use crate::rng::Rng;
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Tensor;
+
+/// One served prediction.
+#[derive(Debug, Clone)]
+pub struct Prediction {
+    /// MC-mean output (reconstruction or class probabilities).
+    pub mean: Vec<f32>,
+    /// Per-point MC std (uncertainty).
+    pub std: Vec<f32>,
+    /// Engine-reported model latency in ms (FPGA: simulated cycles; GPU:
+    /// analytic; PJRT: measured).
+    pub model_latency_ms: f64,
+}
+
+/// Engine selector.
+pub enum EngineKind {
+    /// Fixed-point accelerator simulator + cycle-level timing.
+    FpgaSim { accel: Accelerator, sim: PipelineSim },
+    /// Real PJRT CPU execution of the fwd artifact (rows = S).
+    PjrtCpu {
+        runtime: Runtime,
+        artifact: String,
+        cfg: ArchConfig,
+        params: Vec<Tensor>,
+        rng: Rng,
+    },
+    /// Float model + analytic TITAN-X latency (no GPU in this testbed).
+    GpuModel { model: Model, rng: Rng },
+}
+
+/// A batched inference engine.
+pub struct Engine {
+    pub kind: EngineKind,
+    /// MC samples per request.
+    pub s: usize,
+}
+
+impl Engine {
+    pub fn fpga(
+        cfg: &ArchConfig,
+        model: &Model,
+        reuse: ReuseFactors,
+        s: usize,
+        seed: u64,
+    ) -> Self {
+        let accel = Accelerator::new(cfg, &model.params, reuse, seed);
+        let sim = PipelineSim::new(cfg, reuse);
+        Self { kind: EngineKind::FpgaSim { accel, sim }, s }
+    }
+
+    pub fn gpu(model: Model, s: usize, seed: u64) -> Self {
+        Self { kind: EngineKind::GpuModel { model, rng: Rng::new(seed) }, s }
+    }
+
+    /// PJRT engine bound to `<arch>.fwd_n<rows>` where rows = s.
+    pub fn pjrt(
+        mut runtime: Runtime,
+        arch_name: &str,
+        params: &[Tensor],
+        s: usize,
+        seed: u64,
+    ) -> Result<Self> {
+        let meta = runtime
+            .manifest
+            .forward_for(arch_name, s)
+            .ok_or_else(|| {
+                anyhow::anyhow!("no fwd_n{s} artifact for {arch_name}")
+            })?
+            .clone();
+        runtime.load(&meta.name)?;
+        Ok(Self {
+            kind: EngineKind::PjrtCpu {
+                runtime,
+                artifact: meta.name.clone(),
+                cfg: meta.arch(),
+                params: params.to_vec(),
+                rng: Rng::new(seed),
+            },
+            s,
+        })
+    }
+
+    pub fn task(&self) -> Task {
+        match &self.kind {
+            EngineKind::FpgaSim { accel, .. } => accel.cfg.task,
+            EngineKind::PjrtCpu { cfg, .. } => cfg.task,
+            EngineKind::GpuModel { model, .. } => model.cfg.task,
+        }
+    }
+
+    /// Serve a batch of beats; returns one prediction per beat.
+    pub fn infer_batch(&mut self, beats: &[&[f32]]) -> Result<Vec<Prediction>> {
+        let s = self.s;
+        match &mut self.kind {
+            EngineKind::FpgaSim { accel, sim } => {
+                // The FPGA streams requests back-to-back (batch size 1
+                // each); hardware latency comes from the cycle simulator.
+                let per_req_ms = sim.simulate_ms(1, s, ZC706.clock_hz);
+                beats
+                    .iter()
+                    .map(|b| {
+                        let out = accel.predict(b, s);
+                        Ok(Prediction {
+                            mean: out.mean(),
+                            std: out.std(),
+                            model_latency_ms: per_req_ms,
+                        })
+                    })
+                    .collect()
+            }
+            EngineKind::GpuModel { model, rng } => {
+                let cfg = model.cfg.clone();
+                let ms = GpuModel::latency_ms(&cfg, beats.len(), s);
+                beats
+                    .iter()
+                    .map(|b| {
+                        let out = predict_float(model, b, s, rng);
+                        Ok(Prediction {
+                            mean: out.mean(),
+                            std: out.std(),
+                            model_latency_ms: ms,
+                        })
+                    })
+                    .collect()
+            }
+            EngineKind::PjrtCpu { runtime, artifact, cfg, params, rng } => {
+                // rows = S: one request per execution, measured wallclock.
+                let mut preds = Vec::with_capacity(beats.len());
+                for beat in beats {
+                    let mut xs = Vec::with_capacity(s * beat.len());
+                    for _ in 0..s {
+                        xs.extend_from_slice(beat);
+                    }
+                    let masks = if cfg.is_bayesian() {
+                        Masks::sample(cfg, s, rng)
+                    } else {
+                        Masks::ones(cfg, s)
+                    };
+                    let mut args: Vec<HostValue> = params
+                        .iter()
+                        .map(|p| HostValue::F32(p.clone()))
+                        .collect();
+                    args.push(HostValue::F32(Tensor::new(
+                        vec![s, cfg.seq_len, cfg.input_dim],
+                        xs,
+                    )));
+                    for m in &masks.tensors {
+                        args.push(HostValue::F32(m.clone()));
+                    }
+                    let t0 = Instant::now();
+                    let exe = runtime.load(artifact)?;
+                    let out = exe.run(&args)?;
+                    let ms = t0.elapsed().as_secs_f64() * 1e3;
+                    let y = &out[0];
+                    let out_len = y.data.len() / s;
+                    let mc = McOutput {
+                        samples: y.data.clone(),
+                        s,
+                        out_len,
+                    };
+                    preds.push(Prediction {
+                        mean: mc.mean(),
+                        std: mc.std(),
+                        model_latency_ms: ms,
+                    });
+                }
+                Ok(preds)
+            }
+        }
+    }
+}
+
+/// Float-model MC prediction (shared by the GPU engine and tests).
+pub fn predict_float(
+    model: &Model,
+    beat: &[f32],
+    s: usize,
+    rng: &mut Rng,
+) -> McOutput {
+    let cfg = &model.cfg;
+    let mut xs = Vec::with_capacity(s * beat.len());
+    for _ in 0..s {
+        xs.extend_from_slice(beat);
+    }
+    let masks = if cfg.is_bayesian() {
+        Masks::sample(cfg, s, rng)
+    } else {
+        Masks::ones(cfg, s)
+    };
+    let out = model.forward(&xs, s, &masks);
+    let out_len = out.len() / s;
+    McOutput { samples: out, s, out_len }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_model(bayes: &str) -> (ArchConfig, Model) {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, bayes.len(), bayes);
+        cfg.seq_len = 20;
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        (cfg, model)
+    }
+
+    #[test]
+    fn fpga_engine_serves_batch() {
+        let (cfg, model) = tiny_model("YN");
+        let mut e = Engine::fpga(&cfg, &model, ReuseFactors::new(2, 1, 1), 4, 9);
+        let beat: Vec<f32> = (0..20).map(|i| (i as f32 * 0.3).sin()).collect();
+        let beats = [beat.as_slice(), beat.as_slice()];
+        let preds = e.infer_batch(&beats).unwrap();
+        assert_eq!(preds.len(), 2);
+        for p in &preds {
+            assert_eq!(p.mean.len(), 4);
+            assert!((p.mean.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+            assert!(p.model_latency_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn gpu_engine_reports_analytic_latency() {
+        let (_, model) = tiny_model("NN");
+        let cfg = model.cfg.clone();
+        let mut e = Engine::gpu(model, 1, 0);
+        let beat: Vec<f32> = vec![0.0; 20];
+        let preds = e.infer_batch(&[&beat]).unwrap();
+        let expect = GpuModel::latency_ms(&cfg, 1, 1);
+        assert!((preds[0].model_latency_ms - expect).abs() < 1e-9);
+    }
+
+    #[test]
+    fn bayesian_engine_has_nonzero_uncertainty() {
+        let (cfg, model) = tiny_model("YY");
+        let mut e =
+            Engine::fpga(&cfg, &model, ReuseFactors::new(1, 1, 1), 8, 3);
+        let beat: Vec<f32> = (0..20).map(|i| (i as f32 * 0.5).cos()).collect();
+        let preds = e.infer_batch(&[&beat]).unwrap();
+        assert!(
+            preds[0].std.iter().any(|&v| v > 0.0),
+            "MCD must yield spread"
+        );
+    }
+}

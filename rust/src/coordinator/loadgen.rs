@@ -1,0 +1,170 @@
+//! Open-loop load generator: Poisson arrivals of ECG beats, as a hospital
+//! telemetry stream would produce them (the paper's "requests need to be
+//! processed as soon as they arrive"). Closed-loop benchmarks (submit-all,
+//! wait-all) hide queueing behaviour; an open-loop arrival process
+//! exposes the latency knee as offered load approaches engine capacity.
+
+use std::time::Duration;
+
+use crate::data::Dataset;
+use crate::rng::Rng;
+
+/// A generated arrival: offset from stream start + the beat payload index.
+#[derive(Debug, Clone, Copy)]
+pub struct Arrival {
+    pub at: Duration,
+    pub beat_idx: usize,
+}
+
+/// Poisson-process arrival trace over a dataset.
+pub struct PoissonTrace {
+    pub arrivals: Vec<Arrival>,
+    pub rate_per_s: f64,
+}
+
+impl PoissonTrace {
+    /// `rate_per_s` mean arrivals/second for `n` requests, beats drawn
+    /// round-robin from the dataset.
+    pub fn generate(rate_per_s: f64, n: usize, data: &Dataset, seed: u64) -> Self {
+        assert!(rate_per_s > 0.0);
+        let mut rng = Rng::new(seed ^ 0x10AD);
+        let mut t = 0.0f64;
+        let mut arrivals = Vec::with_capacity(n);
+        for i in 0..n {
+            // Exponential inter-arrival: -ln(U)/rate.
+            let u = loop {
+                let u = rng.uniform();
+                if u > 1e-12 {
+                    break u;
+                }
+            };
+            t += -u.ln() / rate_per_s;
+            arrivals.push(Arrival {
+                at: Duration::from_secs_f64(t),
+                beat_idx: i % data.n,
+            });
+        }
+        Self { arrivals, rate_per_s }
+    }
+
+    pub fn duration(&self) -> Duration {
+        self.arrivals.last().map(|a| a.at).unwrap_or(Duration::ZERO)
+    }
+
+    /// Empirical rate of the generated trace.
+    pub fn empirical_rate(&self) -> f64 {
+        if self.arrivals.is_empty() {
+            return 0.0;
+        }
+        self.arrivals.len() as f64 / self.duration().as_secs_f64().max(1e-9)
+    }
+}
+
+/// Replay a trace against a server, sleeping between arrivals (open
+/// loop), and return the observed end-to-end latencies.
+pub fn replay(
+    trace: &PoissonTrace,
+    server: &mut super::server::Server,
+    data: &Dataset,
+) -> Vec<std::sync::mpsc::Receiver<super::server::Response>> {
+    let start = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(trace.arrivals.len());
+    for a in &trace.arrivals {
+        if let Some(wait) = a.at.checked_sub(start.elapsed()) {
+            if !wait.is_zero() {
+                std::thread::sleep(wait);
+            }
+        }
+        receivers.push(server.submit(data.beat(a.beat_idx).to_vec()));
+    }
+    receivers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    #[test]
+    fn poisson_rate_matches() {
+        let d = data::generate(16, 0);
+        let trace = PoissonTrace::generate(1000.0, 5000, &d, 1);
+        let rate = trace.empirical_rate();
+        assert!(
+            (rate - 1000.0).abs() / 1000.0 < 0.08,
+            "empirical rate {rate}"
+        );
+        // Arrivals strictly ordered.
+        for w in trace.arrivals.windows(2) {
+            assert!(w[1].at >= w[0].at);
+        }
+    }
+
+    #[test]
+    fn interarrival_distribution_is_exponential() {
+        // CV (std/mean) of exponential inter-arrivals is 1.
+        let d = data::generate(4, 0);
+        let trace = PoissonTrace::generate(500.0, 8000, &d, 3);
+        let gaps: Vec<f64> = trace
+            .arrivals
+            .windows(2)
+            .map(|w| (w[1].at - w[0].at).as_secs_f64())
+            .collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var = gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>()
+            / gaps.len() as f64;
+        let cv = var.sqrt() / mean;
+        assert!((cv - 1.0).abs() < 0.08, "cv {cv}");
+    }
+
+    #[test]
+    fn beats_round_robin() {
+        let d = data::generate(3, 0);
+        let trace = PoissonTrace::generate(10.0, 7, &d, 0);
+        let idx: Vec<usize> =
+            trace.arrivals.iter().map(|a| a.beat_idx).collect();
+        assert_eq!(idx, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn open_loop_replay_serves_all() {
+        use crate::config::{ArchConfig, Task};
+        use crate::coordinator::{
+            BatchPolicy, Engine, Server, ServerConfig,
+        };
+        use crate::hwmodel::resource::ReuseFactors;
+        use crate::nn::model::Model;
+        use crate::rng::Rng;
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "N");
+        cfg.seq_len = data::T;
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        let c2 = cfg.clone();
+        let p = model.params.tensors.clone();
+        let mut server = Server::start(
+            move || {
+                let m = Model::new(
+                    c2.clone(),
+                    bayes_rnn_fpga_params(p.clone()),
+                );
+                Engine::fpga(&c2, &m, ReuseFactors::new(4, 4, 4), 1, 0)
+            },
+            ServerConfig {
+                policy: BatchPolicy::stream(),
+                queue_depth: 64,
+            },
+        );
+        let d = data::generate(8, 1);
+        let trace = PoissonTrace::generate(2000.0, 30, &d, 2);
+        let receivers = replay(&trace, &mut server, &d);
+        for rx in receivers {
+            rx.recv().unwrap();
+        }
+        assert_eq!(server.join().served, 30);
+    }
+
+    fn bayes_rnn_fpga_params(
+        tensors: Vec<crate::tensor::Tensor>,
+    ) -> crate::nn::Params {
+        crate::nn::Params { tensors }
+    }
+}

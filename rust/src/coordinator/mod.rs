@@ -1,0 +1,26 @@
+//! Serving coordinator — the L3 request path.
+//!
+//! A deployment serves ECG beats arriving as requests (the paper's
+//! "requests need to be processed as soon as they arrive", batch size 1
+//! on the FPGA; the CPU/GPU baselines batch). The coordinator owns:
+//!
+//! * a bounded request queue with backpressure,
+//! * a batcher (size/deadline policy) for engines that benefit from
+//!   batching,
+//! * worker threads driving an inference engine,
+//! * MC aggregation (mean prediction + uncertainty per request),
+//! * latency/throughput metrics.
+//!
+//! No tokio in this offline environment (DESIGN.md §Substitutions):
+//! std::thread + mpsc channels implement the same event loop.
+
+pub mod batcher;
+pub mod loadgen;
+pub mod engines;
+pub mod server;
+pub mod stats;
+
+pub use batcher::{Batch, Batcher, BatchPolicy};
+pub use engines::{Engine, EngineKind, Prediction};
+pub use server::{Server, ServerConfig, ServeSummary};
+pub use stats::LatencyStats;

@@ -1,0 +1,234 @@
+//! The serving loop: bounded request queue -> batcher -> engine worker ->
+//! response channel, with end-to-end latency accounting.
+//!
+//! Single engine-worker thread (the FPGA is one device; PJRT CPU
+//! executables are internally threaded), many producers. Backpressure:
+//! `submit` uses a bounded sync_channel, so producers block when the
+//! queue is full — the paper's DMA/AXI stream behaves the same way.
+
+use std::sync::mpsc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::batcher::{Batcher, BatchPolicy};
+use super::engines::{Engine, Prediction};
+use super::stats::LatencyStats;
+
+/// Server configuration.
+pub struct ServerConfig {
+    pub policy: BatchPolicy,
+    /// Request-queue depth before producers block.
+    pub queue_depth: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        Self { policy: BatchPolicy::stream(), queue_depth: 256 }
+    }
+}
+
+struct Request {
+    id: u64,
+    beat: Vec<f32>,
+    enqueued: Instant,
+    reply: mpsc::Sender<Response>,
+}
+
+/// A served response.
+pub struct Response {
+    pub id: u64,
+    pub prediction: Prediction,
+    /// Wall-clock queue+service latency observed by the coordinator.
+    pub e2e_ms: f64,
+}
+
+/// Summary returned by `Server::join`.
+#[derive(Debug, Clone)]
+pub struct ServeSummary {
+    pub served: usize,
+    pub wall: Duration,
+    pub e2e: LatencyStats,
+    /// Engine-model latency (FPGA cycles / GPU model / PJRT measured).
+    pub engine: LatencyStats,
+    pub batches: usize,
+    pub mean_batch: f64,
+}
+
+/// Handle for submitting requests.
+pub struct Server {
+    tx: Option<mpsc::SyncSender<Request>>,
+    worker: Option<thread::JoinHandle<ServeSummary>>,
+    next_id: u64,
+}
+
+impl Server {
+    /// Spawn the engine worker. Engines built on PJRT hold non-`Send` XLA
+    /// handles, so the engine is constructed *inside* the worker thread
+    /// from a `Send` factory.
+    pub fn start(
+        factory: impl FnOnce() -> Engine + Send + 'static,
+        cfg: ServerConfig,
+    ) -> Self {
+        let (tx, rx) = mpsc::sync_channel::<Request>(cfg.queue_depth);
+        let worker = thread::spawn(move || {
+            let mut engine = factory();
+            let mut batcher: Batcher<Request> = Batcher::new(cfg.policy);
+            let mut e2e = LatencyStats::new();
+            let mut eng = LatencyStats::new();
+            let mut served = 0usize;
+            let mut batches = 0usize;
+            let t0 = Instant::now();
+            let mut open = true;
+            while open || !batcher.is_empty() {
+                if open {
+                    if batcher.is_empty() {
+                        // Nothing pending: block briefly for new work.
+                        match rx.recv_timeout(Duration::from_millis(1)) {
+                            Ok(req) => batcher.push(req.id, req),
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                open = false;
+                            }
+                        }
+                    }
+                    // Work is pending: drain opportunistically, never
+                    // sleep (sleeping here added ~1 ms per request —
+                    // see EXPERIMENTS.md §Perf).
+                    loop {
+                        match rx.try_recv() {
+                            Ok(r) => batcher.push(r.id, r),
+                            Err(mpsc::TryRecvError::Empty) => break,
+                            Err(mpsc::TryRecvError::Disconnected) => {
+                                open = false;
+                                break;
+                            }
+                        }
+                    }
+                }
+                let queue_empty = true; // everything available was drained
+                if batcher.ready(queue_empty) {
+                    let batch = batcher.take();
+                    batches += 1;
+                    let beats: Vec<&[f32]> =
+                        batch.items.iter().map(|r| r.beat.as_slice()).collect();
+                    match engine.infer_batch(&beats) {
+                        Ok(preds) => {
+                            for (req, pred) in
+                                batch.items.into_iter().zip(preds)
+                            {
+                                let ms = req.enqueued.elapsed().as_secs_f64()
+                                    * 1e3;
+                                e2e.record_ms(ms);
+                                eng.record_ms(pred.model_latency_ms);
+                                served += 1;
+                                let _ = req.reply.send(Response {
+                                    id: req.id,
+                                    prediction: pred,
+                                    e2e_ms: ms,
+                                });
+                            }
+                        }
+                        Err(e) => {
+                            // Engine failure: drop the batch, report via
+                            // closed reply channels.
+                            eprintln!("engine error: {e:#}");
+                        }
+                    }
+                }
+            }
+            let wall = t0.elapsed();
+            let mean_batch = if batches > 0 {
+                served as f64 / batches as f64
+            } else {
+                0.0
+            };
+            ServeSummary { served, wall, e2e, engine: eng, batches, mean_batch }
+        });
+        Self { tx: Some(tx), worker: Some(worker), next_id: 0 }
+    }
+
+    /// Submit a beat; returns a receiver for the response. Blocks when
+    /// the queue is full (backpressure).
+    pub fn submit(&mut self, beat: Vec<f32>) -> mpsc::Receiver<Response> {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let id = self.next_id;
+        self.next_id += 1;
+        self.tx
+            .as_ref()
+            .expect("server already joined")
+            .send(Request { id, beat, enqueued: Instant::now(), reply: reply_tx })
+            .expect("worker gone");
+        reply_rx
+    }
+
+    /// Close the queue and wait for the worker; returns serving stats.
+    pub fn join(mut self) -> ServeSummary {
+        drop(self.tx.take());
+        self.worker.take().expect("already joined").join().expect("worker panicked")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, Task};
+    use crate::hwmodel::resource::ReuseFactors;
+    use crate::nn::model::Model;
+    use crate::rng::Rng;
+
+    fn tiny_engine(s: usize) -> Engine {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = 20;
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        Engine::fpga(&cfg, &model, ReuseFactors::new(2, 1, 1), s, 5)
+    }
+
+    #[test]
+    fn serves_all_requests_in_order_of_reply() {
+        let mut server = Server::start(|| tiny_engine(2), ServerConfig::default());
+        let beat: Vec<f32> = (0..20).map(|i| (i as f32 * 0.3).sin()).collect();
+        let receivers: Vec<_> =
+            (0..12).map(|_| server.submit(beat.clone())).collect();
+        let mut got = 0;
+        for rx in receivers {
+            let resp = rx.recv().expect("response");
+            assert_eq!(resp.prediction.mean.len(), 4);
+            assert!(resp.e2e_ms >= 0.0);
+            got += 1;
+        }
+        assert_eq!(got, 12);
+        let summary = server.join();
+        assert_eq!(summary.served, 12);
+        assert!(summary.e2e.count() == 12);
+        assert!(summary.engine.mean_ms() > 0.0);
+        assert!(summary.batches >= 1);
+    }
+
+    #[test]
+    fn batched_policy_groups_requests() {
+        let cfg = ServerConfig {
+            policy: BatchPolicy::batched(4, Duration::from_millis(50)),
+            queue_depth: 64,
+        };
+        let mut server = Server::start(|| tiny_engine(1), cfg);
+        let beat: Vec<f32> = vec![0.1; 20];
+        let receivers: Vec<_> =
+            (0..8).map(|_| server.submit(beat.clone())).collect();
+        for rx in receivers {
+            rx.recv().unwrap();
+        }
+        let summary = server.join();
+        assert_eq!(summary.served, 8);
+        // With 8 requests racing in, batches must form (fewer than 8).
+        assert!(summary.batches <= 8);
+        assert!(summary.mean_batch >= 1.0);
+    }
+
+    #[test]
+    fn join_without_requests_is_clean() {
+        let server = Server::start(|| tiny_engine(1), ServerConfig::default());
+        let summary = server.join();
+        assert_eq!(summary.served, 0);
+        assert_eq!(summary.batches, 0);
+    }
+}

@@ -1,0 +1,101 @@
+//! Serving metrics: latency percentiles + throughput accounting.
+
+use std::time::Duration;
+
+/// Online latency collector (stores all samples; serving runs here are
+/// bounded, so exact percentiles beat sketches).
+#[derive(Debug, Clone, Default)]
+pub struct LatencyStats {
+    samples_us: Vec<f64>,
+}
+
+impl LatencyStats {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.samples_us.push(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.samples_us.push(ms * 1e3);
+    }
+
+    pub fn count(&self) -> usize {
+        self.samples_us.len()
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().sum::<f64>() / self.samples_us.len() as f64
+            / 1e3
+    }
+
+    /// Exact percentile (nearest-rank), in milliseconds.
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.samples_us.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
+        v[rank.clamp(1, v.len()) - 1] / 1e3
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.samples_us.iter().cloned().fold(0.0, f64::max) / 1e3
+    }
+
+    /// Requests per second given a wall-clock window.
+    pub fn throughput(&self, wall: Duration) -> f64 {
+        if wall.is_zero() {
+            return 0.0;
+        }
+        self.samples_us.len() as f64 / wall.as_secs_f64()
+    }
+
+    pub fn merge(&mut self, other: &LatencyStats) {
+        self.samples_us.extend_from_slice(&other.samples_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_exact() {
+        let mut s = LatencyStats::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0] {
+            s.record_ms(ms);
+        }
+        assert_eq!(s.count(), 10);
+        assert!((s.percentile_ms(50.0) - 5.0).abs() < 1e-9);
+        assert!((s.percentile_ms(90.0) - 9.0).abs() < 1e-9);
+        assert!((s.percentile_ms(100.0) - 10.0).abs() < 1e-9);
+        assert!((s.mean_ms() - 5.5).abs() < 1e-9);
+        assert!((s.max_ms() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_stats_are_zero() {
+        let s = LatencyStats::new();
+        assert_eq!(s.percentile_ms(99.0), 0.0);
+        assert_eq!(s.mean_ms(), 0.0);
+    }
+
+    #[test]
+    fn throughput_and_merge() {
+        let mut a = LatencyStats::new();
+        a.record(Duration::from_millis(2));
+        let mut b = LatencyStats::new();
+        b.record(Duration::from_millis(4));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        let thr = a.throughput(Duration::from_secs(2));
+        assert!((thr - 1.0).abs() < 1e-9);
+    }
+}

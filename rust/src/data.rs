@@ -1,0 +1,288 @@
+//! Synthetic ECG5000-equivalent dataset (DESIGN.md §Substitutions).
+//!
+//! Mirrors `python/compile/ecg.py`: Gaussian-bump P-QRS-T heartbeat
+//! morphologies, T = 140 samples per beat, per-beat z-normalisation, four
+//! classes (0 = normal, 1–3 = anomalous variants) with ECG5000's heavy
+//! class imbalance, and the paper's 500-train / 4500-test split. The Rust
+//! and Python generators share morphology constants and class mixture; the
+//! pytest/cargo suites cross-check their statistics.
+
+use crate::rng::Rng;
+
+/// Beat length (timesteps).
+pub const T: usize = 140;
+/// Number of classes (1 normal + 3 anomalous).
+pub const CLASSES: usize = 4;
+/// Class mixture mirroring ECG5000's imbalance (normal ~58%).
+pub const CLASS_PROBS: [f64; 4] = [0.584, 0.310, 0.070, 0.036];
+pub const TRAIN_N: usize = 500;
+pub const TEST_N: usize = 4500;
+
+/// A labelled pool of beats: `x` is `[n][T]` row-major, labels in `y`.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub x: Vec<f32>,
+    pub y: Vec<u8>,
+    pub n: usize,
+}
+
+impl Dataset {
+    pub fn beat(&self, i: usize) -> &[f32] {
+        &self.x[i * T..(i + 1) * T]
+    }
+
+    pub fn label(&self, i: usize) -> u8 {
+        self.y[i]
+    }
+
+    /// Indices of beats with the given label.
+    pub fn indices_of(&self, label: u8) -> Vec<usize> {
+        (0..self.n).filter(|&i| self.y[i] == label).collect()
+    }
+
+    /// Subset by indices (copies).
+    pub fn subset(&self, idx: &[usize]) -> Dataset {
+        let mut x = Vec::with_capacity(idx.len() * T);
+        let mut y = Vec::with_capacity(idx.len());
+        for &i in idx {
+            x.extend_from_slice(self.beat(i));
+            y.push(self.y[i]);
+        }
+        Dataset { x, y, n: idx.len() }
+    }
+
+    /// Fraction of beats labelled 0 (normal).
+    pub fn normal_fraction(&self) -> f64 {
+        self.y.iter().filter(|&&l| l == 0).count() as f64 / self.n as f64
+    }
+}
+
+#[inline]
+fn bump(t: f64, center: f64, width: f64, amp: f64) -> f64 {
+    let d = (t - center) / width;
+    amp * (-0.5 * d * d).exp()
+}
+
+/// One beat of length T for class `label` (0 = normal). Mirrors
+/// `ecg.py::_beat` (same landmarks, amplitudes and jitter scales).
+fn gen_beat(rng: &mut Rng, label: u8, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), T);
+    let j = |rng: &mut Rng, s: f64| rng.normal_scaled(0.0, s);
+    let p_c = 25.0 + j(rng, 2.0);
+    let q_c = 55.0 + j(rng, 1.5);
+    let r_c = 62.0 + j(rng, 1.5);
+    let s_c = 69.0 + j(rng, 1.5);
+    let t_c = 105.0 + j(rng, 3.0);
+    let p_a = 0.18 + j(rng, 0.02);
+    let q_a = -0.28 + j(rng, 0.03);
+    let r_a = 1.60 + j(rng, 0.08);
+    let s_a = -0.45 + j(rng, 0.04);
+    let t_a = 0.45 + j(rng, 0.04);
+
+    let mut sig = [0f64; T];
+    for (i, v) in sig.iter_mut().enumerate() {
+        let t = i as f64;
+        *v = bump(t, p_c, 4.0, p_a)
+            + bump(t, q_c, 1.8, q_a)
+            + bump(t, r_c, 2.2, r_a)
+            + bump(t, s_c, 2.0, s_a)
+            + bump(t, t_c, 9.0, t_a);
+    }
+    match label {
+        1 => {
+            // R-on-T / PVC-like: inverted widened T + depressed ST.
+            let amp = 0.55 + j(rng, 0.05);
+            let st_c = (s_c + t_c) / 2.0;
+            for (i, v) in sig.iter_mut().enumerate() {
+                let t = i as f64;
+                *v -= 2.1 * bump(t, t_c, 11.0, amp);
+                *v -= 0.25 * bump(t, st_c, 12.0, 1.0);
+            }
+        }
+        2 => {
+            // Supraventricular-like: flattened R, early weak T.
+            let ra = 0.95 + j(rng, 0.06);
+            let ta = 0.22 + j(rng, 0.03);
+            for (i, v) in sig.iter_mut().enumerate() {
+                let t = i as f64;
+                *v -= bump(t, r_c, 2.2, ra);
+                *v -= 0.5 * bump(t, t_c, 9.0, 0.45);
+                *v += bump(t, t_c - 18.0, 7.0, ta);
+            }
+        }
+        3 => {
+            // Premature/ectopic-like: time-warp earlier + sinusoidal drift.
+            let shift = (12.0 + j(rng, 3.0).abs()) as usize;
+            let phase = j(rng, 0.5);
+            let mut rolled = [0f64; T];
+            for i in 0..T {
+                rolled[i] = sig[(i + shift) % T];
+            }
+            for (i, v) in rolled.iter_mut().enumerate() {
+                let t = i as f64;
+                *v += 0.15
+                    * (2.0 * std::f64::consts::PI * t / T as f64 + phase)
+                        .sin();
+            }
+            sig = rolled;
+        }
+        _ => {}
+    }
+    // Sensor noise + per-beat z-normalisation (dataset preprocessing).
+    for v in sig.iter_mut() {
+        *v += rng.normal_scaled(0.0, 0.05);
+    }
+    let mean = sig.iter().sum::<f64>() / T as f64;
+    let var = sig.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>()
+        / T as f64;
+    let std = var.sqrt() + 1e-8;
+    for (o, v) in out.iter_mut().zip(sig.iter()) {
+        *o = ((v - mean) / std) as f32;
+    }
+}
+
+/// Generate `n` labelled beats with the ECG5000 class mixture.
+pub fn generate(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed);
+    let mut x = vec![0f32; n * T];
+    let mut y = Vec::with_capacity(n);
+    for i in 0..n {
+        let label = rng.categorical(&CLASS_PROBS) as u8;
+        gen_beat(&mut rng, label, &mut x[i * T..(i + 1) * T]);
+        y.push(label);
+    }
+    Dataset { x, y, n }
+}
+
+/// The paper's split: 500 train / 4500 test from one 5000-beat pool.
+pub fn splits(seed: u64) -> (Dataset, Dataset) {
+    let pool = generate(TRAIN_N + TEST_N, seed);
+    let train = pool.subset(&(0..TRAIN_N).collect::<Vec<_>>());
+    let test = pool.subset(&(TRAIN_N..TRAIN_N + TEST_N).collect::<Vec<_>>());
+    (train, test)
+}
+
+/// Anomaly-detection arrangement (Sec. V-A1): train on *normal* training
+/// beats only; the anomalous training beats are appended to the test set.
+pub fn anomaly_splits(seed: u64) -> (Dataset, Dataset) {
+    let (train, test) = splits(seed);
+    let normal_idx = train.indices_of(0);
+    let anomalous_idx: Vec<usize> =
+        (0..train.n).filter(|&i| train.y[i] != 0).collect();
+    let train_normal = train.subset(&normal_idx);
+    // test + anomalous train beats
+    let mut x = test.x.clone();
+    let mut y = test.y.clone();
+    let extra = train.subset(&anomalous_idx);
+    x.extend_from_slice(&extra.x);
+    y.extend_from_slice(&extra.y);
+    let n = y.len();
+    (train_normal, Dataset { x, y, n })
+}
+
+/// Pure Gaussian-noise sequences for the entropy/uncertainty probe
+/// (Sec. V-A2: "sequences of random Gaussian noise").
+pub fn gaussian_noise(n: usize, seed: u64) -> Dataset {
+    let mut rng = Rng::new(seed ^ 0xD1CE);
+    let mut x = vec![0f32; n * T];
+    for v in x.iter_mut() {
+        *v = rng.normal() as f32;
+    }
+    Dataset { x, y: vec![0; n], n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shapes_and_determinism() {
+        let a = generate(32, 9);
+        let b = generate(32, 9);
+        assert_eq!(a.x, b.x);
+        assert_eq!(a.y, b.y);
+        assert_eq!(a.x.len(), 32 * T);
+    }
+
+    #[test]
+    fn z_normalised_per_beat() {
+        let d = generate(16, 2);
+        for i in 0..d.n {
+            let beat = d.beat(i);
+            let mean: f32 = beat.iter().sum::<f32>() / T as f32;
+            let var: f32 =
+                beat.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>()
+                    / T as f32;
+            assert!(mean.abs() < 1e-4, "mean {mean}");
+            assert!((var.sqrt() - 1.0).abs() < 1e-3, "std {}", var.sqrt());
+        }
+    }
+
+    #[test]
+    fn class_imbalance_matches_ecg5000() {
+        let d = generate(5000, 0);
+        let f = d.normal_fraction();
+        assert!(f > 0.52 && f < 0.65, "normal fraction {f}");
+    }
+
+    #[test]
+    fn splits_sizes() {
+        let (tr, te) = splits(0);
+        assert_eq!(tr.n, 500);
+        assert_eq!(te.n, 4500);
+    }
+
+    #[test]
+    fn anomaly_splits_only_normal_train() {
+        let (tr, te) = anomaly_splits(0);
+        assert!(tr.y.iter().all(|&l| l == 0));
+        assert!(te.n > 4500, "anomalous train beats must be appended");
+        assert!(te.y.iter().any(|&l| l != 0));
+    }
+
+    #[test]
+    fn anomalies_differ_from_normal() {
+        let d = generate(2000, 3);
+        let mean_of = |label: u8| -> Vec<f32> {
+            let idx = d.indices_of(label);
+            let mut m = vec![0f32; T];
+            for &i in &idx {
+                for (mm, v) in m.iter_mut().zip(d.beat(i)) {
+                    *mm += v;
+                }
+            }
+            for mm in m.iter_mut() {
+                *mm /= idx.len() as f32;
+            }
+            m
+        };
+        let normal = mean_of(0);
+        for c in 1..=3u8 {
+            let mc = mean_of(c);
+            let rmse = (normal
+                .iter()
+                .zip(&mc)
+                .map(|(a, b)| (a - b) * (a - b))
+                .sum::<f32>()
+                / T as f32)
+                .sqrt();
+            assert!(rmse > 0.3, "class {c} rmse {rmse}");
+        }
+    }
+
+    #[test]
+    fn gaussian_noise_is_unstructured() {
+        let d = gaussian_noise(64, 0);
+        let mean: f32 = d.x.iter().sum::<f32>() / d.x.len() as f32;
+        assert!(mean.abs() < 0.05);
+    }
+
+    #[test]
+    fn subset_copies_right_rows() {
+        let d = generate(10, 4);
+        let s = d.subset(&[3, 7]);
+        assert_eq!(s.n, 2);
+        assert_eq!(s.beat(0), d.beat(3));
+        assert_eq!(s.label(1), d.label(7));
+    }
+}

@@ -1,0 +1,185 @@
+//! The algorithm-benchmark lookup table (Fig. 7: "previously built lookup
+//! table consisting of algorithm-benchmarked architectures").
+//!
+//! The training sweep (`train::sweep`) populates one entry per
+//! architecture point with its algorithmic metrics; the optimizer then
+//! queries it. Persisted as JSON through `jsonio` so sweeps are reusable
+//! across runs (`artifacts/lookup_<task>.json`).
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::config::{ArchConfig, Task};
+use crate::jsonio::{self, Json};
+
+/// One benchmarked architecture point.
+#[derive(Debug, Clone)]
+pub struct AlgoEntry {
+    pub name: String,
+    pub task: Task,
+    pub hidden: usize,
+    pub nl: usize,
+    pub bayes: String,
+    /// Metric name -> value. Anomaly: accuracy/ap/auc/rmse.
+    /// Classify: accuracy/ap/ar/entropy.
+    pub metrics: BTreeMap<String, f64>,
+}
+
+impl AlgoEntry {
+    pub fn arch(&self) -> ArchConfig {
+        ArchConfig::new(self.task, self.hidden, self.nl, &self.bayes)
+    }
+
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.metrics.get(key).copied()
+    }
+}
+
+/// The persisted table.
+#[derive(Debug, Clone, Default)]
+pub struct LookupTable {
+    pub entries: Vec<AlgoEntry>,
+}
+
+impl LookupTable {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn insert(&mut self, e: AlgoEntry) {
+        self.entries.retain(|x| x.name != e.name);
+        self.entries.push(e);
+    }
+
+    pub fn get(&self, name: &str) -> Option<&AlgoEntry> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+
+    pub fn for_task(&self, task: Task) -> Vec<&AlgoEntry> {
+        self.entries.iter().filter(|e| e.task == task).collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.entries
+                .iter()
+                .map(|e| {
+                    jsonio::obj(vec![
+                        ("name", Json::Str(e.name.clone())),
+                        ("task", Json::Str(e.task.as_str().into())),
+                        ("hidden", Json::Num(e.hidden as f64)),
+                        ("nl", Json::Num(e.nl as f64)),
+                        ("bayes", Json::Str(e.bayes.clone())),
+                        (
+                            "metrics",
+                            Json::Obj(
+                                e.metrics
+                                    .iter()
+                                    .map(|(k, v)| (k.clone(), Json::Num(*v)))
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })
+                .collect(),
+        )
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("lookup table must be an array"))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let metrics = match e.get("metrics") {
+                Some(Json::Obj(m)) => m
+                    .iter()
+                    .filter_map(|(k, v)| v.as_f64().map(|x| (k.clone(), x)))
+                    .collect(),
+                _ => BTreeMap::new(),
+            };
+            entries.push(AlgoEntry {
+                name: e.req_str("name")?.to_string(),
+                task: e.req_str("task")?.parse().map_err(|s| {
+                    anyhow::anyhow!("bad task: {s}")
+                })?,
+                hidden: e.req_usize("hidden")?,
+                nl: e.req_usize("nl")?,
+                bayes: e.req_str("bayes")?.to_string(),
+                metrics,
+            });
+        }
+        Ok(Self { entries })
+    }
+
+    pub fn save(&self, path: &Path) -> anyhow::Result<()> {
+        std::fs::write(path, jsonio::write(&self.to_json()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_json(&jsonio::parse(&text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn entry(name: &str, auc: f64) -> AlgoEntry {
+        AlgoEntry {
+            name: name.into(),
+            task: Task::Anomaly,
+            hidden: 16,
+            nl: 2,
+            bayes: "YNYN".into(),
+            metrics: [("auc".to_string(), auc)].into_iter().collect(),
+        }
+    }
+
+    #[test]
+    fn insert_replaces_by_name() {
+        let mut t = LookupTable::new();
+        t.insert(entry("a", 0.9));
+        t.insert(entry("a", 0.95));
+        assert_eq!(t.entries.len(), 1);
+        assert_eq!(t.get("a").unwrap().metric("auc"), Some(0.95));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut t = LookupTable::new();
+        t.insert(entry("anomaly_h16_nl2_YNYN", 0.98));
+        let mut e2 = entry("x", 0.5);
+        e2.task = Task::Classify;
+        e2.bayes = "YNY".into();
+        e2.nl = 3;
+        e2.metrics.insert("entropy".into(), 0.36);
+        t.insert(e2);
+        let j = t.to_json();
+        let t2 = LookupTable::from_json(&j).unwrap();
+        assert_eq!(t2.entries.len(), 2);
+        assert_eq!(t2.get("x").unwrap().metric("entropy"), Some(0.36));
+        assert_eq!(t2.get("x").unwrap().task, Task::Classify);
+        assert_eq!(t2.for_task(Task::Anomaly).len(), 1);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("dse_lookup_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("lookup.json");
+        let mut t = LookupTable::new();
+        t.insert(entry("a", 0.91));
+        t.save(&path).unwrap();
+        let t2 = LookupTable::load(&path).unwrap();
+        assert_eq!(t2.get("a").unwrap().metric("auc"), Some(0.91));
+    }
+
+    #[test]
+    fn arch_reconstruction() {
+        let e = entry("anomaly_h16_nl2_YNYN", 0.9);
+        assert_eq!(e.arch().name(), "anomaly_h16_nl2_YNYN");
+    }
+}

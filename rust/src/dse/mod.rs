@@ -1,0 +1,16 @@
+//! Algorithmic-hardware design-space-exploration framework (paper Sec. IV,
+//! Fig. 7).
+//!
+//! Inputs: user priorities (an optimisation mode), hardware constraints
+//! (the platform's DSP budget) and the algorithm lookup table produced by
+//! the training sweep. Output: the chosen architecture `A = {H, NL, B}`,
+//! reuse factors `R = {R_x, R_h, R_d}`, the modelled latency, and the
+//! algorithmic metrics — Tables V and VI.
+
+pub mod lookup;
+pub mod optimizer;
+pub mod space;
+
+pub use lookup::{AlgoEntry, LookupTable};
+pub use optimizer::{ChosenConfig, OptMode, Optimizer};
+pub use space::{arch_space, bayes_patterns, reuse_search};

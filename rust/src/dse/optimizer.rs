@@ -1,0 +1,345 @@
+//! The greedy optimizer (Fig. 7): pick the architecture maximising the
+//! user's objective from the lookup table, then pick the hardware
+//! configuration minimising latency under the DSP constraint, estimate
+//! the latency from the model, and filter infeasible points — producing
+//! the rows of Tables V and VI.
+
+use super::lookup::LookupTable;
+use super::space::reuse_search;
+use crate::config::{ArchConfig, Task};
+use crate::hwmodel::latency::LatencyModel;
+use crate::hwmodel::power::PowerModel;
+use crate::hwmodel::resource::{ResourceModel, ReuseFactors};
+use crate::hwmodel::{GpuModel, Platform};
+
+/// User-selected optimisation mode (Sec. V-D).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OptMode {
+    /// Minimise modelled FPGA latency (picks pointwise S=1 nets).
+    Latency,
+    /// Maximise an algorithmic metric from the lookup table
+    /// ("accuracy", "ap", "auc", "ar", "entropy").
+    Metric(&'static str),
+}
+
+impl OptMode {
+    pub fn name(&self) -> String {
+        match self {
+            OptMode::Latency => "Opt-Latency".into(),
+            OptMode::Metric(m) => format!("Opt-{}", capitalise(m)),
+        }
+    }
+}
+
+fn capitalise(s: &str) -> String {
+    let mut c = s.chars();
+    match c.next() {
+        Some(f) => f.to_uppercase().collect::<String>() + c.as_str(),
+        None => String::new(),
+    }
+}
+
+/// The optimizer's output for one mode: one row of Table V/VI.
+#[derive(Debug, Clone)]
+pub struct ChosenConfig {
+    pub mode: String,
+    pub arch: ArchConfig,
+    pub reuse: ReuseFactors,
+    /// MC samples the deployment will run (30 for Bayesian, 1 pointwise).
+    pub s: usize,
+    pub fpga_latency_ms: f64,
+    pub gpu_latency_ms: f64,
+    pub fpga_watts: f64,
+    pub objective: f64,
+    pub metrics: std::collections::BTreeMap<String, f64>,
+}
+
+pub struct Optimizer<'a> {
+    pub platform: &'a Platform,
+    pub lookup: &'a LookupTable,
+    /// Deployment batch for the latency estimate (paper: 50/200).
+    pub batch: usize,
+    /// MC samples for Bayesian deployments (paper: S=30, Fig. 10).
+    pub mc_samples: usize,
+}
+
+impl<'a> Optimizer<'a> {
+    pub fn new(platform: &'a Platform, lookup: &'a LookupTable) -> Self {
+        Self { platform, lookup, batch: 50, mc_samples: 30 }
+    }
+
+    /// Latency (ms) of one candidate on the FPGA under its best reuse.
+    fn candidate(
+        &self,
+        arch: &ArchConfig,
+    ) -> Option<(ReuseFactors, usize, f64)> {
+        let reuse = reuse_search(arch, self.platform)?;
+        let s = if arch.is_bayesian() { self.mc_samples } else { 1 };
+        let ms = LatencyModel::batch_ms(
+            arch,
+            &reuse,
+            self.batch,
+            s,
+            self.platform.clock_hz,
+        );
+        Some((reuse, s, ms))
+    }
+
+    /// Run one optimisation mode over the lookup table.
+    pub fn optimize(&self, task: Task, mode: OptMode) -> Option<ChosenConfig> {
+        let mut best: Option<(f64, f64, ChosenConfig)> = None;
+        for entry in self.lookup.for_task(task) {
+            let arch = entry.arch();
+            let Some((reuse, s, fpga_ms)) = self.candidate(&arch) else {
+                continue; // filtered: does not meet the DSP constraint
+            };
+            let objective = match mode {
+                OptMode::Latency => -fpga_ms,
+                OptMode::Metric(m) => match entry.metric(m) {
+                    Some(v) => v,
+                    None => continue,
+                },
+            };
+            // Tie-break on latency (then fewer DSPs implicitly via reuse).
+            let tiebreak = -fpga_ms;
+            let better = match &best {
+                None => true,
+                Some((o, t, _)) => {
+                    objective > *o + 1e-12
+                        || ((objective - *o).abs() <= 1e-12 && tiebreak > *t)
+                }
+            };
+            if better {
+                let res = ResourceModel::estimate(&arch, &reuse);
+                best = Some((
+                    objective,
+                    tiebreak,
+                    ChosenConfig {
+                        mode: mode.name(),
+                        arch: arch.clone(),
+                        reuse,
+                        s,
+                        fpga_latency_ms: fpga_ms,
+                        gpu_latency_ms: GpuModel::latency_ms(
+                            &arch, self.batch, s,
+                        ),
+                        fpga_watts: PowerModel::fpga_watts(&res),
+                        objective,
+                        metrics: entry.metrics.clone(),
+                    },
+                ));
+            }
+        }
+        best.map(|(_, _, c)| c)
+    }
+
+    /// The latency-vs-metric Pareto front over the lookup table (the
+    /// paper's Fig. 8 observation that the front is at least partially
+    /// Bayesian). Returns non-dominated (arch, latency, metric) points
+    /// sorted by latency.
+    pub fn pareto_front(
+        &self,
+        task: Task,
+        metric: &str,
+    ) -> Vec<(ArchConfig, f64, f64)> {
+        let mut pts: Vec<(ArchConfig, f64, f64)> = Vec::new();
+        for entry in self.lookup.for_task(task) {
+            let arch = entry.arch();
+            let Some((_, _, ms)) = self.candidate(&arch) else {
+                continue;
+            };
+            let Some(m) = entry.metric(metric) else { continue };
+            pts.push((arch, ms, m));
+        }
+        pts.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        let mut front: Vec<(ArchConfig, f64, f64)> = Vec::new();
+        let mut best = f64::NEG_INFINITY;
+        for p in pts {
+            if p.2 > best + 1e-12 {
+                best = p.2;
+                front.push(p);
+            }
+        }
+        front
+    }
+
+    /// All modes applicable to a task (Table V vs Table VI rows).
+    pub fn modes_for(task: Task) -> Vec<OptMode> {
+        match task {
+            Task::Anomaly => vec![
+                OptMode::Latency,
+                OptMode::Metric("accuracy"),
+                OptMode::Metric("ap"),
+                OptMode::Metric("auc"),
+            ],
+            Task::Classify => vec![
+                OptMode::Latency,
+                OptMode::Metric("accuracy"),
+                OptMode::Metric("ap"),
+                OptMode::Metric("ar"),
+                OptMode::Metric("entropy"),
+            ],
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dse::lookup::AlgoEntry;
+    use crate::hwmodel::ZC706;
+    use std::collections::BTreeMap;
+
+    fn entry(
+        task: Task,
+        h: usize,
+        nl: usize,
+        b: &str,
+        metrics: &[(&str, f64)],
+    ) -> AlgoEntry {
+        AlgoEntry {
+            name: ArchConfig::new(task, h, nl, b).name(),
+            task,
+            hidden: h,
+            nl,
+            bayes: b.into(),
+            metrics: metrics
+                .iter()
+                .map(|(k, v)| (k.to_string(), *v))
+                .collect::<BTreeMap<_, _>>(),
+        }
+    }
+
+    fn toy_lookup() -> LookupTable {
+        let mut t = LookupTable::new();
+        // Small fast pointwise net, mediocre metrics.
+        t.insert(entry(
+            Task::Classify,
+            8,
+            1,
+            "N",
+            &[("accuracy", 0.90), ("ap", 0.62), ("ar", 0.66), ("entropy", 0.15)],
+        ));
+        // Bigger Bayesian net, best accuracy.
+        t.insert(entry(
+            Task::Classify,
+            8,
+            3,
+            "NYN",
+            &[("accuracy", 0.93), ("ap", 0.67), ("ar", 0.67), ("entropy", 0.14)],
+        ));
+        // Entropy specialist.
+        t.insert(entry(
+            Task::Classify,
+            8,
+            3,
+            "YNN",
+            &[("accuracy", 0.89), ("ap", 0.59), ("ar", 0.64), ("entropy", 0.60)],
+        ));
+        t
+    }
+
+    #[test]
+    fn opt_latency_picks_pointwise_s1() {
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let c = opt.optimize(Task::Classify, OptMode::Latency).unwrap();
+        assert_eq!(c.arch.bayes_str(), "N");
+        assert_eq!(c.s, 1, "pointwise deployments run a single pass");
+    }
+
+    #[test]
+    fn opt_metric_picks_the_specialist() {
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let acc = opt
+            .optimize(Task::Classify, OptMode::Metric("accuracy"))
+            .unwrap();
+        assert_eq!(acc.arch.bayes_str(), "NYN");
+        let ent = opt
+            .optimize(Task::Classify, OptMode::Metric("entropy"))
+            .unwrap();
+        assert_eq!(ent.arch.bayes_str(), "YNN");
+        assert!(ent.objective > 0.5);
+    }
+
+    #[test]
+    fn bayesian_choice_is_slower_but_better() {
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let lat = opt.optimize(Task::Classify, OptMode::Latency).unwrap();
+        let acc = opt
+            .optimize(Task::Classify, OptMode::Metric("accuracy"))
+            .unwrap();
+        assert!(acc.fpga_latency_ms > lat.fpga_latency_ms * 5.0);
+        assert!(acc.metrics["accuracy"] > lat.metrics["accuracy"]);
+    }
+
+    #[test]
+    fn fpga_beats_modelled_gpu() {
+        // The Table V/VI headline: FPGA latency below the GPU baseline.
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        for mode in Optimizer::modes_for(Task::Classify) {
+            if let Some(c) = opt.optimize(Task::Classify, mode) {
+                assert!(
+                    c.fpga_latency_ms < c.gpu_latency_ms,
+                    "{}: fpga {} vs gpu {}",
+                    c.mode,
+                    c.fpga_latency_ms,
+                    c.gpu_latency_ms
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn missing_metric_entries_are_skipped() {
+        let mut lookup = toy_lookup();
+        lookup.insert(entry(Task::Classify, 16, 1, "Y", &[("accuracy", 0.99)]));
+        let opt = Optimizer::new(&ZC706, &lookup);
+        // Entropy mode must ignore the entry lacking an entropy metric.
+        let c = opt
+            .optimize(Task::Classify, OptMode::Metric("entropy"))
+            .unwrap();
+        assert_eq!(c.arch.bayes_str(), "YNN");
+    }
+
+    #[test]
+    fn pareto_front_is_monotone_and_nondominated() {
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let front = opt.pareto_front(Task::Classify, "accuracy");
+        assert!(!front.is_empty());
+        for w in front.windows(2) {
+            assert!(w[1].1 > w[0].1, "latency strictly increasing");
+            assert!(w[1].2 > w[0].2, "metric strictly improving");
+        }
+        // The fast pointwise point must anchor the front.
+        assert_eq!(front[0].0.bayes_str(), "N");
+    }
+
+    #[test]
+    fn pareto_front_drops_dominated_points() {
+        let mut lookup = toy_lookup();
+        // A slower-and-worse entry than {8,1,N}: dominated, must not show.
+        lookup.insert(entry(
+            Task::Classify,
+            8,
+            3,
+            "NNN",
+            &[("accuracy", 0.85)],
+        ));
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let front = opt.pareto_front(Task::Classify, "accuracy");
+        assert!(front.iter().all(|(a, _, _)| a.bayes_str() != "NNN"));
+    }
+
+    #[test]
+    fn mode_lists_match_tables() {
+        assert_eq!(Optimizer::modes_for(Task::Anomaly).len(), 4);
+        assert_eq!(Optimizer::modes_for(Task::Classify).len(), 5);
+        assert_eq!(OptMode::Latency.name(), "Opt-Latency");
+        assert_eq!(OptMode::Metric("auc").name(), "Opt-Auc");
+    }
+}

@@ -1,0 +1,200 @@
+//! The search space: architecture grid A and hardware parameters R.
+//!
+//! Paper grids (Sec. V-A): anomaly H in {8,16,24,32}, NL in {1,2};
+//! classification H in {8,16,32,64}, NL in {1,2,3}; dropout benchmarked
+//! "at every position and combination". The full B power-set is available
+//! (`bayes_patterns`), while `arch_space` defaults to the curated subset
+//! that the figures highlight (all-N pointwise, all-Y, and the paper's
+//! named mixed patterns) to keep the default sweep minutes-scale —
+//! `full = true` restores the complete combination grid.
+
+use crate::config::{ArchConfig, Task};
+use crate::hwmodel::resource::{ResourceModel, ReuseFactors};
+use crate::hwmodel::Platform;
+
+/// All 2^L Y/N patterns for L LSTM layers.
+pub fn bayes_patterns(layers: usize) -> Vec<String> {
+    (0..1usize << layers)
+        .map(|bits| {
+            (0..layers)
+                .map(|l| if bits >> l & 1 == 1 { 'Y' } else { 'N' })
+                .collect()
+        })
+        .collect()
+}
+
+/// Curated interesting patterns: pointwise, fully Bayesian, first-layer
+/// only, alternating (the paper's named configs are all among these).
+fn curated_patterns(layers: usize) -> Vec<String> {
+    let mut pats = vec!["N".repeat(layers), "Y".repeat(layers)];
+    if layers > 1 {
+        // First only.
+        let mut first = "N".repeat(layers);
+        first.replace_range(0..1, "Y");
+        pats.push(first);
+        // Alternating YN...
+        pats.push(
+            (0..layers)
+                .map(|l| if l % 2 == 0 { 'Y' } else { 'N' })
+                .collect(),
+        );
+        // Middle-Bayesian NY(N): the paper's Opt-Accuracy point.
+        let mut mid = "N".repeat(layers);
+        mid.replace_range(1..2, "Y");
+        pats.push(mid);
+    }
+    pats.sort();
+    pats.dedup();
+    pats
+}
+
+/// The architecture grid for a task.
+pub fn arch_space(task: Task, full: bool) -> Vec<ArchConfig> {
+    let (hs, nls): (&[usize], &[usize]) = match task {
+        Task::Anomaly => (&[8, 16, 24, 32], &[1, 2]),
+        Task::Classify => (&[8, 16, 32, 64], &[1, 2, 3]),
+    };
+    let mut out = Vec::new();
+    for &h in hs {
+        for &nl in nls {
+            let layers = match task {
+                Task::Anomaly => 2 * nl,
+                Task::Classify => nl,
+            };
+            let pats = if full {
+                bayes_patterns(layers)
+            } else {
+                curated_patterns(layers)
+            };
+            for p in pats {
+                out.push(ArchConfig::new(task, h, nl, &p));
+            }
+        }
+    }
+    out
+}
+
+/// Hardware optimisation: the smallest achievable II (and its reuse
+/// factors) such that the design fits the platform's DSP budget.
+///
+/// DSP usage is monotone non-increasing in every reuse factor and II =
+/// max(R_x, R_h), so feasibility at a given II is decided at
+/// R_x = R_h = II; we then shrink R_x (and R_d) back down while the design
+/// still fits, spending leftover DSPs to shorten the pipeline fill.
+/// Returns None if even maximal reuse cannot fit.
+pub fn reuse_search(cfg: &ArchConfig, platform: &Platform) -> Option<ReuseFactors> {
+    const MAX_REUSE: usize = 256;
+    let budget = platform.dsps as f64 * 1.05; // the paper's HLS slack
+    let fits = |r: &ReuseFactors| ResourceModel::estimate(cfg, r).dsps <= budget;
+
+    let mut chosen = None;
+    for ii in 1..=MAX_REUSE {
+        // R_d: the dense engine is off the recurrent loop; give it the
+        // same multiplexing as the x path (the paper sets R_d = R_x for
+        // the AE and 1 for the classifier when it fits).
+        let r = ReuseFactors::new(ii, ii, ii);
+        if fits(&r) {
+            chosen = Some(r);
+            break;
+        }
+    }
+    let mut r = chosen?;
+    // Spend leftover DSPs: lower rd, then rx (II unchanged — it is
+    // bounded by rh through the recurrence).
+    while r.rd > 1 {
+        let cand = ReuseFactors::new(r.rx, r.rh, r.rd - 1);
+        if fits(&cand) {
+            r = cand;
+        } else {
+            break;
+        }
+    }
+    while r.rx > 1 {
+        let cand = ReuseFactors::new(r.rx - 1, r.rh, r.rd);
+        if fits(&cand) {
+            r = cand;
+        } else {
+            break;
+        }
+    }
+    Some(r)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hwmodel::ZC706;
+
+    #[test]
+    fn pattern_powerset() {
+        let p = bayes_patterns(3);
+        assert_eq!(p.len(), 8);
+        assert!(p.contains(&"NNN".to_string()));
+        assert!(p.contains(&"YNY".to_string()));
+    }
+
+    #[test]
+    fn curated_contains_paper_points() {
+        // Anomaly best B=YNYN (4 layers, alternating).
+        assert!(curated_patterns(4).contains(&"YNYN".to_string()));
+        // Classification Opt-Accuracy B=NYN (middle).
+        assert!(curated_patterns(3).contains(&"NYN".to_string()));
+        // Classification best B=YNY (alternating).
+        assert!(curated_patterns(3).contains(&"YNY".to_string()));
+    }
+
+    #[test]
+    fn space_sizes() {
+        let full = arch_space(Task::Classify, true);
+        // 4 H * (2^1 + 2^2 + 2^3) patterns = 4 * 14 = 56.
+        assert_eq!(full.len(), 56);
+        let small = arch_space(Task::Classify, false);
+        assert!(small.len() < full.len());
+        assert!(small.iter().any(|c| c.name() == "classify_h8_nl3_YNY"));
+    }
+
+    #[test]
+    fn reuse_search_fits_platform() {
+        for cfg in [
+            ArchConfig::new(Task::Anomaly, 16, 2, "YNYN"),
+            ArchConfig::new(Task::Classify, 8, 3, "YNY"),
+            ArchConfig::new(Task::Classify, 32, 3, "YYY"),
+        ] {
+            let r = reuse_search(&cfg, &ZC706).expect("must fit with reuse");
+            let est = ResourceModel::estimate(&cfg, &r);
+            assert!(
+                est.dsps <= ZC706.dsps as f64 * 1.05,
+                "{}: {} DSPs at {:?}",
+                cfg.name(),
+                est.dsps,
+                r
+            );
+        }
+    }
+
+    #[test]
+    fn small_nets_get_low_ii() {
+        let small = ArchConfig::new(Task::Classify, 8, 1, "N");
+        let big = ArchConfig::new(Task::Classify, 32, 3, "NNN");
+        let rs = reuse_search(&small, &ZC706).unwrap();
+        let rb = reuse_search(&big, &ZC706).unwrap();
+        assert!(rs.rh < rb.rh, "{rs:?} vs {rb:?}");
+    }
+
+    #[test]
+    fn oversized_nets_are_filtered() {
+        // H=64, NL=3: the reuse-independent LSTM tail alone (4*H per
+        // layer) blows the DSP budget — the DSE constraint filter must
+        // reject it no matter the reuse (the paper's Fig. 7 filter stage).
+        let cfg = ArchConfig::new(Task::Classify, 64, 3, "NNN");
+        assert!(reuse_search(&cfg, &ZC706).is_none());
+    }
+
+    #[test]
+    fn leftover_dsps_spent_on_rx() {
+        // After the II search, rx <= rh (x path shrunk into spare DSPs).
+        let cfg = ArchConfig::new(Task::Anomaly, 16, 2, "YNYN");
+        let r = reuse_search(&cfg, &ZC706).unwrap();
+        assert!(r.rx <= r.rh);
+    }
+}

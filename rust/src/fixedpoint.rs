@@ -1,0 +1,352 @@
+//! 16-bit fixed-point substrate (paper Sec. IV-A/V-B).
+//!
+//! The accelerator quantises weights and activations to 16-bit fixed point
+//! and keeps the LSTM cell state `c` in 32 bits ("16-bit representation,
+//! except c which is represented in 32-bit"). We use Q6.10 for the 16-bit
+//! path (range [-32, 32), LSB 2^-10 ≈ 1e-3 — comfortably covering
+//! z-normalised ECG and gate pre-activations) and Q12.20 for the 32-bit
+//! cell path. Activation functions are BRAM-style lookup tables over a
+//! precomputed input range, exactly like the hardware (Sec. III-A).
+//!
+//! All arithmetic saturates (no wrap-around), matching DSP-block behaviour
+//! with saturation logic.
+
+/// Fractional bits of the 16-bit path (Q6.10).
+pub const FRAC16: i32 = 10;
+/// Fractional bits of the 32-bit cell path (Q12.20).
+pub const FRAC32: i32 = 20;
+
+/// 16-bit fixed-point value, Q6.10.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Fx16(pub i16);
+
+/// 32-bit fixed-point value, Q12.20 (the cell-state path).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub struct Fx32(pub i32);
+
+impl Fx16 {
+    pub const ZERO: Fx16 = Fx16(0);
+    pub const ONE: Fx16 = Fx16(1 << FRAC16);
+
+    /// Quantise an f32 (round-to-nearest, saturate).
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        let scaled = (v as f64 * (1i64 << FRAC16) as f64).round();
+        Fx16(scaled.clamp(i16::MIN as f64, i16::MAX as f64) as i16)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / (1 << FRAC16) as f32
+    }
+
+    #[inline]
+    pub fn saturating_add(self, rhs: Fx16) -> Fx16 {
+        Fx16(self.0.saturating_add(rhs.0))
+    }
+
+    /// Fixed-point multiply: (a*b) >> FRAC16 with rounding and saturation —
+    /// one DSP48 multiplier in the hardware.
+    #[inline]
+    pub fn saturating_mul(self, rhs: Fx16) -> Fx16 {
+        let prod = self.0 as i32 * rhs.0 as i32;
+        let rounded = (prod + (1 << (FRAC16 - 1))) >> FRAC16;
+        Fx16(rounded.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+
+    /// Widen to the 32-bit cell path.
+    #[inline]
+    pub fn widen(self) -> Fx32 {
+        Fx32((self.0 as i32) << (FRAC32 - FRAC16))
+    }
+}
+
+impl Fx32 {
+    pub const ZERO: Fx32 = Fx32(0);
+
+    #[inline]
+    pub fn from_f32(v: f32) -> Self {
+        let scaled = (v as f64 * (1i64 << FRAC32) as f64).round();
+        Fx32(scaled.clamp(i32::MIN as f64, i32::MAX as f64) as i32)
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / (1u32 << FRAC32) as f32
+    }
+
+    #[inline]
+    pub fn saturating_add(self, rhs: Fx32) -> Fx32 {
+        Fx32(self.0.saturating_add(rhs.0))
+    }
+
+    /// Multiply two 16-bit operands into the 32-bit path (f_t * c_{t-1}
+    /// uses two cascaded DSPs in the paper — 16x32 -> 32).
+    #[inline]
+    pub fn mul_fx16(self, rhs: Fx16) -> Fx32 {
+        let prod = self.0 as i64 * rhs.0 as i64;
+        let rounded = (prod + (1 << (FRAC16 - 1))) >> FRAC16;
+        Fx32(rounded.clamp(i32::MIN as i64, i32::MAX as i64) as i32)
+    }
+
+    /// Narrow back to the 16-bit path (saturating).
+    #[inline]
+    pub fn narrow(self) -> Fx16 {
+        let shifted =
+            (self.0 + (1 << (FRAC32 - FRAC16 - 1))) >> (FRAC32 - FRAC16);
+        Fx16(shifted.clamp(i16::MIN as i32, i16::MAX as i32) as i16)
+    }
+}
+
+/// 16-bit MAC accumulator for MVM engines: products are accumulated in a
+/// wide register (as DSP48 cascades do) and narrowed once at the end —
+/// avoids per-term quantisation error.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MacAcc(i64);
+
+impl MacAcc {
+    #[inline]
+    pub fn new() -> Self {
+        MacAcc(0)
+    }
+
+    #[inline]
+    pub fn mac(&mut self, a: Fx16, b: Fx16) {
+        self.0 += a.0 as i64 * b.0 as i64; // Q(2*FRAC16)
+    }
+
+    /// Finish: add bias (Q10) and narrow to Fx16 with rounding/saturation.
+    #[inline]
+    pub fn finish(self, bias: Fx16) -> Fx16 {
+        let with_bias = self.0 + ((bias.0 as i64) << FRAC16);
+        let rounded = (with_bias + (1 << (FRAC16 - 1))) >> FRAC16;
+        Fx16(rounded.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// BRAM-style activation LUTs (Sec. III-A): sigmoid/tanh precomputed over a
+// fixed input range, indexed by the upper bits of the fixed-point input.
+// ---------------------------------------------------------------------------
+
+/// Lookup-table activation over [-RANGE, RANGE] with 2^BITS entries.
+pub struct ActLut {
+    table: Vec<Fx16>,
+    /// Input clamp range in fixed-point raw units.
+    lo_raw: i32,
+    hi_raw: i32,
+    shift: i32,
+}
+
+/// LUT input range: |x| <= 8 saturates both sigmoid and tanh to <1 LSB of
+/// the 16-bit output.
+pub const LUT_RANGE: f32 = 8.0;
+/// log2(entries): 1024-entry tables fit one BRAM18 each at 16-bit width.
+pub const LUT_BITS: u32 = 10;
+
+impl ActLut {
+    pub fn new(f: impl Fn(f64) -> f64) -> Self {
+        let entries = 1usize << LUT_BITS;
+        let lo_raw = Fx16::from_f32(-LUT_RANGE).0 as i32;
+        let hi_raw = Fx16::from_f32(LUT_RANGE).0 as i32;
+        let span = (hi_raw - lo_raw) as i64;
+        // Each LUT bucket covers `span / entries` raw units; precompute the
+        // function at each bucket midpoint.
+        let mut table = Vec::with_capacity(entries);
+        for i in 0..entries {
+            let raw_mid = lo_raw as i64
+                + (span * (2 * i as i64 + 1)) / (2 * entries as i64);
+            let x = raw_mid as f64 / (1 << FRAC16) as f64;
+            table.push(Fx16::from_f32(f(x) as f32));
+        }
+        // span / entries as a shift: span = 16 * 2^10 raw = 2^14; entries =
+        // 2^10 -> 16 raw units per bucket = shift 4.
+        let shift = (span as f64 / entries as f64).log2().round() as i32;
+        Self { table, lo_raw, hi_raw, shift }
+    }
+
+    pub fn sigmoid() -> Self {
+        Self::new(|x| 1.0 / (1.0 + (-x).exp()))
+    }
+
+    pub fn tanh() -> Self {
+        Self::new(|x| x.tanh())
+    }
+
+    /// One BRAM read: clamp, index by upper bits, return table entry.
+    #[inline]
+    pub fn eval(&self, x: Fx16) -> Fx16 {
+        let raw = (x.0 as i32).clamp(self.lo_raw, self.hi_raw - 1);
+        let idx = ((raw - self.lo_raw) >> self.shift) as usize;
+        self.table[idx]
+    }
+
+    pub fn entries(&self) -> usize {
+        self.table.len()
+    }
+}
+
+/// Quantise an f32 slice to Fx16.
+pub fn quantize(v: &[f32]) -> Vec<Fx16> {
+    v.iter().map(|&x| Fx16::from_f32(x)).collect()
+}
+
+/// Dequantise back to f32 (for metric evaluation of the quantised model).
+pub fn dequantize(v: &[Fx16]) -> Vec<f32> {
+    v.iter().map(|x| x.to_f32()).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_precision() {
+        for &v in &[0.0f32, 1.0, -1.0, 0.123, -3.875, 7.5, -20.25] {
+            let q = Fx16::from_f32(v);
+            assert!(
+                (q.to_f32() - v).abs() <= 0.5 / (1 << FRAC16) as f32 + 1e-6,
+                "v={v} q={}",
+                q.to_f32()
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_at_range_edges() {
+        assert_eq!(Fx16::from_f32(1e9).0, i16::MAX);
+        assert_eq!(Fx16::from_f32(-1e9).0, i16::MIN);
+        let big = Fx16::from_f32(31.0);
+        assert_eq!(big.saturating_add(big).0, i16::MAX);
+    }
+
+    #[test]
+    fn mul_matches_float() {
+        let a = Fx16::from_f32(1.5);
+        let b = Fx16::from_f32(-2.25);
+        let p = a.saturating_mul(b).to_f32();
+        assert!((p - (-3.375)).abs() < 2.0 / (1 << FRAC16) as f32);
+    }
+
+    #[test]
+    fn widen_narrow_roundtrip() {
+        let a = Fx16::from_f32(2.375);
+        assert_eq!(a.widen().narrow(), a);
+        let c = Fx32::from_f32(-1.8125);
+        assert!((c.narrow().to_f32() - -1.8125).abs() < 1e-3);
+    }
+
+    #[test]
+    fn fx32_mul_fx16() {
+        let c = Fx32::from_f32(0.5);
+        let f = Fx16::from_f32(0.5);
+        assert!((c.mul_fx16(f).to_f32() - 0.25).abs() < 1e-5);
+    }
+
+    #[test]
+    fn mac_accumulator_exactness() {
+        // MAC of quantised values must equal exact integer math.
+        let xs = [0.5f32, -0.25, 1.75, 0.125];
+        let ws = [1.0f32, 0.5, -0.5, 2.0];
+        let mut acc = MacAcc::new();
+        for (&x, &w) in xs.iter().zip(ws.iter()) {
+            acc.mac(Fx16::from_f32(x), Fx16::from_f32(w));
+        }
+        let got = acc.finish(Fx16::from_f32(0.25)).to_f32();
+        let want: f32 =
+            xs.iter().zip(ws.iter()).map(|(x, w)| x * w).sum::<f32>() + 0.25;
+        assert!((got - want).abs() < 1e-3, "{got} vs {want}");
+    }
+
+    #[test]
+    fn sigmoid_lut_accuracy() {
+        let lut = ActLut::sigmoid();
+        for i in -800..800 {
+            let x = i as f32 * 0.01;
+            let got = lut.eval(Fx16::from_f32(x)).to_f32();
+            let want = 1.0 / (1.0 + (-x).exp());
+            assert!(
+                (got - want).abs() < 0.01,
+                "sigmoid({x}) LUT={got} exact={want}"
+            );
+        }
+    }
+
+    #[test]
+    fn tanh_lut_accuracy() {
+        let lut = ActLut::tanh();
+        for i in -800..800 {
+            let x = i as f32 * 0.01;
+            let got = lut.eval(Fx16::from_f32(x)).to_f32();
+            assert!(
+                (got - x.tanh()).abs() < 0.02,
+                "tanh({x}) LUT={got} exact={}",
+                x.tanh()
+            );
+        }
+    }
+
+    #[test]
+    fn lut_saturates_out_of_range() {
+        let lut = ActLut::sigmoid();
+        assert!((lut.eval(Fx16::from_f32(20.0)).to_f32() - 1.0).abs() < 0.01);
+        assert!(lut.eval(Fx16::from_f32(-20.0)).to_f32() < 0.01);
+        assert_eq!(lut.entries(), 1 << LUT_BITS);
+    }
+
+    #[test]
+    fn quantize_dequantize_slice() {
+        let v = vec![0.1f32, -0.9, 2.5];
+        let d = dequantize(&quantize(&v));
+        for (a, b) in v.iter().zip(d.iter()) {
+            assert!((a - b).abs() < 1e-3);
+        }
+    }
+
+    /// Property sweep: quantisation error bound, add commutativity,
+    /// multiply sign law and widen/narrow idempotence over random values.
+    #[test]
+    fn property_sweep_random_values() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(77);
+        let lsb = 1.0 / (1 << FRAC16) as f32;
+        for _ in 0..2000 {
+            let a = rng.uniform_in(-20.0, 20.0) as f32;
+            let b = rng.uniform_in(-20.0, 20.0) as f32;
+            let qa = Fx16::from_f32(a);
+            let qb = Fx16::from_f32(b);
+            // Rounding bound.
+            assert!((qa.to_f32() - a).abs() <= 0.5 * lsb + 1e-6);
+            // Commutativity.
+            assert_eq!(qa.saturating_add(qb), qb.saturating_add(qa));
+            assert_eq!(qa.saturating_mul(qb), qb.saturating_mul(qa));
+            // Sign law (away from rounding-to-zero).
+            let p = qa.saturating_mul(qb).to_f32();
+            if (a * b).abs() > 4.0 * lsb {
+                assert_eq!(
+                    p.signum(),
+                    (a * b).signum(),
+                    "sign({a} * {b})"
+                );
+            }
+            // widen().narrow() is identity on the 16-bit lattice.
+            assert_eq!(qa.widen().narrow(), qa);
+        }
+    }
+
+    /// LUT activations are monotone non-decreasing — required for the
+    /// hardware sigmoid/tanh to preserve gate ordering.
+    #[test]
+    fn luts_are_monotone() {
+        for lut in [ActLut::sigmoid(), ActLut::tanh()] {
+            let mut prev = i16::MIN;
+            let mut x = -9.0f32;
+            while x < 9.0 {
+                let y = lut.eval(Fx16::from_f32(x)).0;
+                assert!(y >= prev, "LUT must be monotone at x={x}");
+                prev = y;
+                x += 0.01;
+            }
+        }
+    }
+}

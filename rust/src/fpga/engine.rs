@@ -1,0 +1,439 @@
+//! Functional fixed-point engines: MVM units, the LSTM engine (4 gate
+//! MVM pairs + LUT activations + 32-bit tail) and the dense engine —
+//! the hardware blocks of Fig. 2.
+
+use crate::config::GATES;
+use crate::fixedpoint::{ActLut, Fx16, Fx32, MacAcc};
+use crate::tensor::Tensor;
+
+/// One matrix-vector-multiply engine with a reuse factor: `in_dim` x
+/// `out_dim` quantised weights; `reuse` time-multiplexes each physical
+/// multiplier, so the unit has ceil(in*out/reuse) DSP multipliers and an
+/// initiation interval of `reuse` cycles.
+pub struct MvmUnit {
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub reuse: usize,
+    /// Row-major `[in_dim][out_dim]` quantised weights (on-chip).
+    pub weights: Vec<Fx16>,
+}
+
+impl MvmUnit {
+    /// Quantise a float weight matrix `[in_dim][out_dim]`.
+    pub fn new(weights: &[f32], in_dim: usize, out_dim: usize, reuse: usize) -> Self {
+        assert_eq!(weights.len(), in_dim * out_dim);
+        assert!(reuse >= 1);
+        Self {
+            in_dim,
+            out_dim,
+            reuse,
+            weights: weights.iter().map(|&w| Fx16::from_f32(w)).collect(),
+        }
+    }
+
+    /// y[k] += x . W[:,k] accumulated into wide MACs.
+    pub fn mac_into(&self, x: &[Fx16], acc: &mut [MacAcc]) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(acc.len(), self.out_dim);
+        for (i, &xi) in x.iter().enumerate() {
+            if xi.0 == 0 {
+                continue; // gated by DX: zero rows do no switching
+            }
+            let row = &self.weights[i * self.out_dim..(i + 1) * self.out_dim];
+            for (a, &w) in acc.iter_mut().zip(row) {
+                a.mac(xi, w);
+            }
+        }
+    }
+
+    /// Masked MAC: rows whose DX mask bit is zero are skipped entirely —
+    /// fuses the DX gating into the MVM instead of materialising a masked
+    /// copy of the input (EXPERIMENTS.md §Perf).
+    pub fn mac_into_masked(
+        &self,
+        x: &[Fx16],
+        mask: &[Fx16],
+        acc: &mut [MacAcc],
+    ) {
+        debug_assert_eq!(x.len(), self.in_dim);
+        debug_assert_eq!(mask.len(), self.in_dim);
+        for i in 0..self.in_dim {
+            let xi = x[i];
+            if xi.0 == 0 || mask[i].0 == 0 {
+                continue;
+            }
+            let row = &self.weights[i * self.out_dim..(i + 1) * self.out_dim];
+            for (a, &w) in acc.iter_mut().zip(row) {
+                a.mac(xi, w);
+            }
+        }
+    }
+
+    /// Physical multipliers (DSP blocks) after time-multiplexing.
+    pub fn multipliers(&self) -> u64 {
+        div_ceil(self.in_dim * self.out_dim, self.reuse) as u64
+    }
+
+    /// DSPs as synthesis would allocate them: units that shrink below 4
+    /// multipliers get folded into fabric logic by HLS (the paper adds 5%
+    /// DSP slack for exactly this effect).
+    pub fn dsps_synthesized(&self) -> u64 {
+        let m = self.multipliers();
+        if m < 4 {
+            0
+        } else {
+            m
+        }
+    }
+
+    /// Initiation interval contribution: cycles to stream the full MVM
+    /// through the multiplexed multipliers.
+    pub fn ii(&self) -> u64 {
+        self.reuse as u64
+    }
+}
+
+fn div_ceil(a: usize, b: usize) -> usize {
+    a.div_ceil(b)
+}
+
+/// The full LSTM engine of Fig. 2: DX mask gating, 4 gate MVM pairs,
+/// bias add, BRAM-LUT activations, 32-bit cell tail.
+pub struct LstmEngine {
+    pub idim: usize,
+    pub hdim: usize,
+    /// Per gate: x-path MVM (reuse R_x).
+    pub mvm_x: Vec<MvmUnit>,
+    /// Per gate: h-path MVM (reuse R_h).
+    pub mvm_h: Vec<MvmUnit>,
+    /// Quantised biases `[4][H]`.
+    pub bias: Vec<Fx16>,
+    /// Whether this layer has MCD enabled (Bernoulli sampler + DX present).
+    pub bayesian: bool,
+    sigmoid: ActLut,
+    tanh: ActLut,
+    /// Current per-gate masks (pre-sampled per input, Fig. 4).
+    pub zx: Vec<Fx16>,
+    pub zh: Vec<Fx16>,
+    /// Architectural state registers.
+    h: Vec<Fx16>,
+    c: Vec<Fx32>,
+    // Scratch buffers (no allocation in the hot loop).
+    acc: Vec<MacAcc>,
+    pre: Vec<Fx16>,
+}
+
+impl LstmEngine {
+    /// Build from float parameters in the crate ABI: wx `[4,I,H]`,
+    /// wh `[4,H,H]`, b `[4,H]`.
+    pub fn new(
+        wx: &Tensor,
+        wh: &Tensor,
+        b: &Tensor,
+        rx: usize,
+        rh: usize,
+        bayesian: bool,
+    ) -> Self {
+        let idim = wx.shape[1];
+        let hdim = wx.shape[2];
+        let mvm_x = (0..GATES)
+            .map(|g| {
+                MvmUnit::new(
+                    &wx.data[g * idim * hdim..(g + 1) * idim * hdim],
+                    idim,
+                    hdim,
+                    rx,
+                )
+            })
+            .collect();
+        let mvm_h = (0..GATES)
+            .map(|g| {
+                MvmUnit::new(
+                    &wh.data[g * hdim * hdim..(g + 1) * hdim * hdim],
+                    hdim,
+                    hdim,
+                    rh,
+                )
+            })
+            .collect();
+        Self {
+            idim,
+            hdim,
+            mvm_x,
+            mvm_h,
+            bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            bayesian,
+            sigmoid: ActLut::sigmoid(),
+            tanh: ActLut::tanh(),
+            zx: vec![Fx16::ONE; GATES * idim],
+            zh: vec![Fx16::ONE; GATES * hdim],
+            h: vec![Fx16::ZERO; hdim],
+            c: vec![Fx32::ZERO; hdim],
+            acc: vec![MacAcc::new(); hdim],
+            pre: vec![Fx16::ZERO; GATES * hdim],
+        }
+    }
+
+    /// Load pre-sampled masks (one per input sequence). Masks are binary
+    /// {0,1} scaled to fixed point.
+    pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
+        debug_assert_eq!(zx.len(), GATES * self.idim);
+        debug_assert_eq!(zh.len(), GATES * self.hdim);
+        for (d, &s) in self.zx.iter_mut().zip(zx) {
+            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+        }
+        for (d, &s) in self.zh.iter_mut().zip(zh) {
+            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+        }
+    }
+
+    /// Reset h/c registers (new sequence).
+    pub fn reset(&mut self) {
+        self.h.fill(Fx16::ZERO);
+        self.c.fill(Fx32::ZERO);
+    }
+
+    /// One timestep: consume x_t, update (h, c), expose h_t.
+    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
+        debug_assert_eq!(x.len(), self.idim);
+        let hdim = self.hdim;
+        for g in 0..GATES {
+            for a in self.acc.iter_mut() {
+                *a = MacAcc::new();
+            }
+            // DX gating fused into the MVMs (no masked copy — §Perf).
+            self.mvm_x[g].mac_into_masked(
+                x,
+                &self.zx[g * self.idim..(g + 1) * self.idim],
+                &mut self.acc,
+            );
+            self.mvm_h[g].mac_into_masked(
+                &self.h,
+                &self.zh[g * hdim..(g + 1) * hdim],
+                &mut self.acc,
+            );
+            for k in 0..hdim {
+                self.pre[g * hdim + k] =
+                    self.acc[k].finish(self.bias[g * hdim + k]);
+            }
+        }
+        // Tail: activations from BRAM LUTs, cell path in 32-bit.
+        for k in 0..hdim {
+            let i_g = self.sigmoid.eval(self.pre[k]);
+            let f_g = self.sigmoid.eval(self.pre[hdim + k]);
+            let g_g = self.tanh.eval(self.pre[2 * hdim + k]);
+            let o_g = self.sigmoid.eval(self.pre[3 * hdim + k]);
+            // c = f*c + i*g  (f*c on the 2-DSP 16x32 path).
+            let fc = self.c[k].mul_fx16(f_g);
+            let ig = i_g.saturating_mul(g_g).widen();
+            self.c[k] = fc.saturating_add(ig);
+            let tanh_c = self.tanh.eval(self.c[k].narrow());
+            self.h[k] = o_g.saturating_mul(tanh_c);
+        }
+        &self.h
+    }
+
+    pub fn hidden(&self) -> &[Fx16] {
+        &self.h
+    }
+
+    /// DSPs this engine synthesises to: gate MVMs + the 4H tail
+    /// (f*c needs 2 DSPs per multiplier on the 32-bit path).
+    pub fn dsps_synthesized(&self) -> u64 {
+        let mvms: u64 = self
+            .mvm_x
+            .iter()
+            .chain(self.mvm_h.iter())
+            .map(MvmUnit::dsps_synthesized)
+            .sum();
+        mvms + 4 * self.hdim as u64
+    }
+
+    /// Engine initiation interval: the slowest gate path.
+    pub fn ii(&self) -> u64 {
+        self.mvm_x[0].ii().max(self.mvm_h[0].ii())
+    }
+
+    /// Mask bits the Bernoulli sampler must pre-generate per input.
+    pub fn mask_bits(&self) -> usize {
+        if self.bayesian {
+            GATES * (self.idim + self.hdim)
+        } else {
+            0
+        }
+    }
+}
+
+/// The final dense layer: one MVM unit with reuse R_d.
+pub struct DenseEngine {
+    pub mvm: MvmUnit,
+    pub bias: Vec<Fx16>,
+    acc: Vec<MacAcc>,
+    out: Vec<Fx16>,
+}
+
+impl DenseEngine {
+    pub fn new(w: &Tensor, b: &Tensor, rd: usize) -> Self {
+        let (f, o) = (w.shape[0], w.shape[1]);
+        Self {
+            mvm: MvmUnit::new(&w.data, f, o, rd),
+            bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            acc: vec![MacAcc::new(); o],
+            out: vec![Fx16::ZERO; o],
+        }
+    }
+
+    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
+        for a in self.acc.iter_mut() {
+            *a = MacAcc::new();
+        }
+        self.mvm.mac_into(x, &mut self.acc);
+        for (k, a) in self.acc.iter().enumerate() {
+            self.out[k] = a.finish(self.bias[k]);
+        }
+        &self.out
+    }
+
+    pub fn dsps_synthesized(&self) -> u64 {
+        self.mvm.dsps_synthesized()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize], s: f64) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal_scaled(0.0, s) as f32)
+    }
+
+    #[test]
+    fn mvm_matches_float() {
+        let mut rng = Rng::new(1);
+        let (i, o) = (6, 5);
+        let w = rand_tensor(&mut rng, &[i, o], 0.4);
+        let unit = MvmUnit::new(&w.data, i, o, 3);
+        let x: Vec<f32> = (0..i).map(|_| rng.normal() as f32).collect();
+        let xq: Vec<Fx16> = x.iter().map(|&v| Fx16::from_f32(v)).collect();
+        let mut acc = vec![MacAcc::new(); o];
+        unit.mac_into(&xq, &mut acc);
+        for k in 0..o {
+            let got = acc[k].finish(Fx16::ZERO).to_f32();
+            let want: f32 = (0..i).map(|r| x[r] * w.at2(r, k)).sum();
+            assert!((got - want).abs() < 0.02, "col {k}: {got} vs {want}");
+        }
+    }
+
+    #[test]
+    fn mvm_resource_accounting() {
+        let w = Tensor::zeros(&[8, 8]);
+        let u = MvmUnit::new(&w.data, 8, 8, 5);
+        assert_eq!(u.multipliers(), 13); // ceil(64/5)
+        assert_eq!(u.ii(), 5);
+        // Tiny units fold into fabric.
+        let small = MvmUnit::new(&Tensor::zeros(&[1, 8]).data, 1, 8, 4);
+        assert_eq!(small.multipliers(), 2);
+        assert_eq!(small.dsps_synthesized(), 0);
+    }
+
+    #[test]
+    fn engine_matches_float_reference_cell() {
+        // One step of the fixed-point engine vs the float nn cell.
+        let mut rng = Rng::new(3);
+        let (idim, hdim) = (3, 6);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let mut engine = LstmEngine::new(&wx, &wh, &b, 1, 1, false);
+        let x: Vec<f32> = (0..idim).map(|_| rng.normal() as f32).collect();
+        let xq: Vec<Fx16> = x.iter().map(|&v| Fx16::from_f32(v)).collect();
+        let h_fx = engine.step(&xq).to_vec();
+
+        // Float reference via nn::lstm with ones masks, t=1.
+        use crate::nn::lstm::{forward, LstmLayer};
+        let layer = LstmLayer { wx: &wx, wh: &wh, b: &b };
+        let zx = Tensor::ones(&[1, GATES, idim]);
+        let zh = Tensor::ones(&[1, GATES, hdim]);
+        let cache = forward(&layer, &x, 1, 1, &zx, &zh);
+        for k in 0..hdim {
+            let got = h_fx[k].to_f32();
+            let want = cache.last_h()[k];
+            assert!(
+                (got - want).abs() < 0.03,
+                "h[{k}]: fx {got} vs float {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn dx_masks_gate_features() {
+        let mut rng = Rng::new(5);
+        let (idim, hdim) = (2, 4);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.5);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.5);
+        let b = Tensor::zeros(&[GATES, hdim]);
+        let mut e = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        // Mask everything -> step(x) behaves like x = 0.
+        let zx = vec![0.0; GATES * idim];
+        let zh = vec![0.0; GATES * hdim];
+        e.set_masks(&zx, &zh);
+        let x = vec![Fx16::from_f32(1.0); idim];
+        let h1 = e.step(&x).to_vec();
+        let mut e2 = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        let h2 = e2.step(&vec![Fx16::ZERO; idim]).to_vec();
+        assert_eq!(
+            h1.iter().map(|v| v.0).collect::<Vec<_>>(),
+            h2.iter().map(|v| v.0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn engine_state_resets() {
+        let mut rng = Rng::new(7);
+        let wx = rand_tensor(&mut rng, &[GATES, 1, 4], 0.5);
+        let wh = rand_tensor(&mut rng, &[GATES, 4, 4], 0.5);
+        let b = rand_tensor(&mut rng, &[GATES, 4], 0.2);
+        let mut e = LstmEngine::new(&wx, &wh, &b, 1, 1, false);
+        let x = [Fx16::from_f32(0.7)];
+        let h_first = e.step(&x).to_vec();
+        e.step(&x);
+        e.reset();
+        let h_again = e.step(&x).to_vec();
+        assert_eq!(
+            h_first.iter().map(|v| v.0).collect::<Vec<_>>(),
+            h_again.iter().map(|v| v.0).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn engine_dsps_include_tail() {
+        let wx = Tensor::zeros(&[GATES, 8, 8]);
+        let wh = Tensor::zeros(&[GATES, 8, 8]);
+        let b = Tensor::zeros(&[GATES, 8]);
+        let e = LstmEngine::new(&wx, &wh, &b, 1, 1, false);
+        // 4 gates * 64 multipliers on each path + 4*8 tail.
+        assert_eq!(e.dsps_synthesized(), 4 * 64 + 4 * 64 + 32);
+        assert_eq!(e.ii(), 1);
+        assert_eq!(e.mask_bits(), 0);
+        let eb = LstmEngine::new(&wx, &wh, &b, 4, 4, true);
+        assert_eq!(eb.mask_bits(), GATES * 16);
+        assert_eq!(eb.ii(), 4);
+    }
+
+    #[test]
+    fn dense_engine_matches_float() {
+        let mut rng = Rng::new(9);
+        let w = rand_tensor(&mut rng, &[5, 3], 0.5);
+        let b = rand_tensor(&mut rng, &[3], 0.2);
+        let mut d = DenseEngine::new(&w, &b, 2);
+        let x: Vec<f32> = (0..5).map(|_| rng.normal() as f32).collect();
+        let xq: Vec<Fx16> = x.iter().map(|&v| Fx16::from_f32(v)).collect();
+        let y = d.step(&xq);
+        for k in 0..3 {
+            let want: f32 =
+                (0..5).map(|i| x[i] * w.at2(i, k)).sum::<f32>() + b.data[k];
+            assert!((y[k].to_f32() - want).abs() < 0.02);
+        }
+    }
+}

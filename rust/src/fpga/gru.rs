@@ -1,0 +1,277 @@
+//! Fixed-point GRU engine — the paper's "similar design logic can be used
+//! for other recurrent units such as the gated recurrent unit" (Sec.
+//! III-A) made concrete. Three gate MVM pairs instead of four, no 32-bit
+//! cell path (the GRU state is bounded by tanh, so the 16-bit path
+//! suffices), and an extra elementwise multiplier for r*(Wh_n h). The
+//! ablation bench compares DSP/latency/accuracy against the LSTM engine.
+
+use crate::fixedpoint::{ActLut, Fx16, MacAcc};
+use crate::nn::gru::GRU_GATES;
+use crate::tensor::Tensor;
+
+use super::engine::MvmUnit;
+
+pub struct GruEngine {
+    pub idim: usize,
+    pub hdim: usize,
+    pub mvm_x: Vec<MvmUnit>,
+    pub mvm_h: Vec<MvmUnit>,
+    pub bias: Vec<Fx16>,
+    pub bayesian: bool,
+    sigmoid: ActLut,
+    tanh: ActLut,
+    pub zx: Vec<Fx16>,
+    pub zh: Vec<Fx16>,
+    h: Vec<Fx16>,
+    masked: Vec<Fx16>,
+    acc: Vec<MacAcc>,
+    xterm: Vec<Fx16>,
+    hterm: Vec<Fx16>,
+}
+
+impl GruEngine {
+    /// wx `[3, I, H]`, wh `[3, H, H]`, b `[3, H]` (gate order r, z, n).
+    pub fn new(
+        wx: &Tensor,
+        wh: &Tensor,
+        b: &Tensor,
+        rx: usize,
+        rh: usize,
+        bayesian: bool,
+    ) -> Self {
+        let idim = wx.shape[1];
+        let hdim = wx.shape[2];
+        let mvm_x = (0..GRU_GATES)
+            .map(|g| {
+                MvmUnit::new(
+                    &wx.data[g * idim * hdim..(g + 1) * idim * hdim],
+                    idim,
+                    hdim,
+                    rx,
+                )
+            })
+            .collect();
+        let mvm_h = (0..GRU_GATES)
+            .map(|g| {
+                MvmUnit::new(
+                    &wh.data[g * hdim * hdim..(g + 1) * hdim * hdim],
+                    hdim,
+                    hdim,
+                    rh,
+                )
+            })
+            .collect();
+        Self {
+            idim,
+            hdim,
+            mvm_x,
+            mvm_h,
+            bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            bayesian,
+            sigmoid: ActLut::sigmoid(),
+            tanh: ActLut::tanh(),
+            zx: vec![Fx16::ONE; GRU_GATES * idim],
+            zh: vec![Fx16::ONE; GRU_GATES * hdim],
+            h: vec![Fx16::ZERO; hdim],
+            masked: vec![Fx16::ZERO; idim.max(hdim)],
+            acc: vec![MacAcc::new(); hdim],
+            xterm: vec![Fx16::ZERO; GRU_GATES * hdim],
+            hterm: vec![Fx16::ZERO; GRU_GATES * hdim],
+        }
+    }
+
+    pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
+        for (d, &s) in self.zx.iter_mut().zip(zx) {
+            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+        }
+        for (d, &s) in self.zh.iter_mut().zip(zh) {
+            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+        }
+    }
+
+    pub fn reset(&mut self) {
+        self.h.fill(Fx16::ZERO);
+    }
+
+    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
+        let hdim = self.hdim;
+        // x-path terms per gate: (x*zx_g) Wx_g + b_g.
+        for g in 0..GRU_GATES {
+            for a in self.acc.iter_mut() {
+                *a = MacAcc::new();
+            }
+            for i in 0..self.idim {
+                self.masked[i] = if self.zx[g * self.idim + i].0 == 0 {
+                    Fx16::ZERO
+                } else {
+                    x[i]
+                };
+            }
+            self.mvm_x[g].mac_into(&self.masked[..self.idim], &mut self.acc);
+            for k in 0..hdim {
+                self.xterm[g * hdim + k] =
+                    self.acc[k].finish(self.bias[g * hdim + k]);
+            }
+        }
+        // h-path terms per gate: (h*zh_g) Wh_g (bias already in xterm).
+        for g in 0..GRU_GATES {
+            for a in self.acc.iter_mut() {
+                *a = MacAcc::new();
+            }
+            for j in 0..hdim {
+                self.masked[j] = if self.zh[g * hdim + j].0 == 0 {
+                    Fx16::ZERO
+                } else {
+                    self.h[j]
+                };
+            }
+            self.mvm_h[g].mac_into(&self.masked[..hdim], &mut self.acc);
+            for k in 0..hdim {
+                self.hterm[g * hdim + k] = self.acc[k].finish(Fx16::ZERO);
+            }
+        }
+        // Tail: r, z sigmoid on (xterm+hterm); n = tanh(xterm_n + r*hterm_n);
+        // h = (1-z) n + z h_prev.
+        for k in 0..hdim {
+            let r = self.sigmoid.eval(
+                self.xterm[k].saturating_add(self.hterm[k]),
+            );
+            let z = self.sigmoid.eval(
+                self.xterm[hdim + k].saturating_add(self.hterm[hdim + k]),
+            );
+            let n = self.tanh.eval(
+                self.xterm[2 * hdim + k]
+                    .saturating_add(r.saturating_mul(self.hterm[2 * hdim + k])),
+            );
+            let one_minus_z = Fx16::ONE.saturating_add(Fx16(-z.0));
+            self.h[k] = one_minus_z
+                .saturating_mul(n)
+                .saturating_add(z.saturating_mul(self.h[k]));
+        }
+        &self.h
+    }
+
+    pub fn hidden(&self) -> &[Fx16] {
+        &self.h
+    }
+
+    /// DSPs: 3 gate MVM pairs + 3H tail multipliers (r*hn, (1-z)*n, z*h),
+    /// all on the 16-bit path (no 2-DSP 32-bit c multiplier).
+    pub fn dsps_synthesized(&self) -> u64 {
+        let mvms: u64 = self
+            .mvm_x
+            .iter()
+            .chain(self.mvm_h.iter())
+            .map(MvmUnit::dsps_synthesized)
+            .sum();
+        mvms + 3 * self.hdim as u64
+    }
+
+    pub fn ii(&self) -> u64 {
+        self.mvm_x[0].ii().max(self.mvm_h[0].ii())
+    }
+
+    pub fn mask_bits(&self) -> usize {
+        if self.bayesian {
+            GRU_GATES * (self.idim + self.hdim)
+        } else {
+            0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::nn::gru::{self, GruLayer};
+    use crate::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize], s: f64) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal_scaled(0.0, s) as f32)
+    }
+
+    #[test]
+    fn tracks_float_gru_over_sequence() {
+        let mut rng = Rng::new(3);
+        let (idim, hdim, t) = (2, 6, 16);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let xs: Vec<f32> =
+            (0..t * idim).map(|_| rng.normal() as f32 * 0.8).collect();
+        // Float reference.
+        let layer = GruLayer { wx: &wx, wh: &wh, b: &b };
+        let zx = Tensor::ones(&[1, GRU_GATES, idim]);
+        let zh = Tensor::ones(&[1, GRU_GATES, hdim]);
+        let cache = gru::forward(&layer, &xs, 1, t, &zx, &zh);
+        // Fixed-point engine.
+        let mut e = GruEngine::new(&wx, &wh, &b, 1, 1, false);
+        let mut last = vec![];
+        for ti in 0..t {
+            let xq: Vec<Fx16> = xs[ti * idim..(ti + 1) * idim]
+                .iter()
+                .map(|&v| Fx16::from_f32(v))
+                .collect();
+            last = e.step(&xq).to_vec();
+        }
+        for k in 0..hdim {
+            let got = last[k].to_f32();
+            let want = cache.last_h()[k];
+            assert!(
+                (got - want).abs() < 0.06,
+                "h[{k}]: fx {got} vs float {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn gru_state_bounded() {
+        let mut rng = Rng::new(9);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, 1, 4], 1.0);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, 4, 4], 1.0);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, 4], 0.5);
+        let mut e = GruEngine::new(&wx, &wh, &b, 1, 1, false);
+        for i in 0..100 {
+            let h = e.step(&[Fx16::from_f32((i as f32 * 0.7).sin() * 3.0)]);
+            assert!(h.iter().all(|v| v.to_f32().abs() <= 1.01));
+        }
+    }
+
+    #[test]
+    fn gru_cheaper_than_lstm_in_dsps() {
+        // 3 gates + 16-bit tail vs 4 gates + 32-bit tail: the GRU engine
+        // must synthesise to fewer DSPs at the same (I, H, R).
+        use crate::config::GATES;
+        use crate::fpga::engine::LstmEngine;
+        let mut rng = Rng::new(0);
+        let (idim, hdim) = (8, 8);
+        let gwx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.3);
+        let gwh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.3);
+        let gb = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let lwx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.3);
+        let lwh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.3);
+        let lb = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let g = GruEngine::new(&gwx, &gwh, &gb, 2, 2, true);
+        let l = LstmEngine::new(&lwx, &lwh, &lb, 2, 2, true);
+        assert!(g.dsps_synthesized() < l.dsps_synthesized());
+        assert_eq!(g.ii(), l.ii());
+        assert!(g.mask_bits() < l.mask_bits());
+    }
+
+    #[test]
+    fn masks_gate_input() {
+        let mut rng = Rng::new(5);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, 2, 4], 0.5);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, 4, 4], 0.5);
+        let b = Tensor::zeros(&[GRU_GATES, 4]);
+        let mut e = GruEngine::new(&wx, &wh, &b, 1, 1, true);
+        e.set_masks(&vec![0.0; GRU_GATES * 2], &vec![0.0; GRU_GATES * 4]);
+        let h1 = e.step(&[Fx16::from_f32(1.0), Fx16::from_f32(-1.0)]).to_vec();
+        let mut e2 = GruEngine::new(&wx, &wh, &b, 1, 1, true);
+        let h2 = e2.step(&[Fx16::ZERO, Fx16::ZERO]).to_vec();
+        assert_eq!(
+            h1.iter().map(|v| v.0).collect::<Vec<_>>(),
+            h2.iter().map(|v| v.0).collect::<Vec<_>>()
+        );
+    }
+}

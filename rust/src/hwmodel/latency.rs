@@ -1,0 +1,192 @@
+//! Latency model (paper Sec. IV-C).
+//!
+//! The pipelined design is governed by the initiation interval II — the
+//! cycles before a unit accepts new input:
+//!
+//! ```text
+//! II         = max_i II_i
+//! Lat_i      = II * T + (IL_i - II)
+//! Lat_design = II * T + (IL - II) * NL        (classifier / encoder)
+//! Lat_AE     = Lat_design * 2                 (decoder waits for h_T)
+//! ```
+//!
+//! II_i is set by the slowest time-multiplexed engine of layer i: the
+//! x-path MVM needs R_x cycles, the h-path R_h (the recurrent data
+//! dependency means h-path II bounds the timestep loop). IL_i adds the
+//! pipeline fill depth: the MVM adder tree, the activation LUT read and
+//! the 3-stage tail.
+//!
+//! Multi-sample / multi-beat streaming: consecutive MC samples and batch
+//! elements follow each other through the same pipeline at the sample
+//! interval II*T (sample-wise pipelining, Fig. 4/5), so a batch of B
+//! beats with S MC samples each costs ~II*T*S*B cycles plus one pipeline
+//! drain.
+
+use super::resource::ReuseFactors;
+use crate::config::ArchConfig;
+
+/// Per-layer timing: initiation interval + iteration latency.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LayerTiming {
+    pub ii: u64,
+    pub il: u64,
+}
+
+pub struct LatencyModel;
+
+impl LatencyModel {
+    /// Pipeline-depth constants (cycles): activation LUT read and the
+    /// elementwise tail (f*c + i*g, tanh, o*).
+    const ACT_LUT_CYCLES: u64 = 2;
+    const TAIL_CYCLES: u64 = 3;
+
+    /// Timing of one LSTM layer.
+    pub fn lstm_timing(
+        idim: usize,
+        hdim: usize,
+        r: &ReuseFactors,
+    ) -> LayerTiming {
+        // II: both MVM paths run in parallel; the engine accepts a new
+        // timestep every max(R_x, R_h) cycles (the h recurrence cannot be
+        // hidden). The tail is II=1 and never binds.
+        let ii = r.rx.max(r.rh) as u64;
+        // IL: II + adder-tree depth + LUT + tail.
+        let tree = (usize::BITS - (idim.max(hdim)).leading_zeros()) as u64;
+        let il = ii + tree + Self::ACT_LUT_CYCLES + Self::TAIL_CYCLES;
+        LayerTiming { ii, il }
+    }
+
+    /// Design II = max over layers (the paper balances all IIs to this).
+    pub fn design_timing(cfg: &ArchConfig, r: &ReuseFactors) -> LayerTiming {
+        let mut ii = 1;
+        let mut il = 0;
+        for (idim, hdim) in cfg.lstm_dims() {
+            let t = Self::lstm_timing(idim, hdim, r);
+            ii = ii.max(t.ii);
+            il = il.max(t.il);
+        }
+        LayerTiming { ii, il }
+    }
+
+    /// End-to-end cycles for ONE pass (one beat, one MC sample) through
+    /// the design: `II*T + (IL-II)*NL`, doubled for the autoencoder since
+    /// the decoder can only start on the completed bottleneck.
+    pub fn single_pass_cycles(cfg: &ArchConfig, r: &ReuseFactors) -> u64 {
+        let t = Self::design_timing(cfg, r);
+        let nl = cfg.nl as u64;
+        let seq = cfg.seq_len as u64;
+        let half = t.ii * seq + (t.il - t.ii) * nl;
+        match cfg.task {
+            crate::config::Task::Anomaly => half * 2,
+            crate::config::Task::Classify => half,
+        }
+    }
+
+    /// Cycles for a batch of `batch` beats, `s` MC samples each, streamed
+    /// through the pipeline back-to-back: the sample interval is II*T (the
+    /// encoder must finish a sequence before the next enters the same
+    /// engine), with one pipeline drain at the end.
+    pub fn batch_cycles(
+        cfg: &ArchConfig,
+        r: &ReuseFactors,
+        batch: usize,
+        s: usize,
+    ) -> u64 {
+        let t = Self::design_timing(cfg, r);
+        let seq = cfg.seq_len as u64;
+        let passes = (batch * s) as u64;
+        let interval = t.ii * seq;
+        // Passes enter the pipeline every `interval` cycles; the last one
+        // still pays the full single-pass latency (which already contains
+        // its own first interval plus the fill/drain terms).
+        interval * passes.saturating_sub(1)
+            + Self::single_pass_cycles(cfg, r)
+    }
+
+    /// Milliseconds at the given clock.
+    pub fn batch_ms(
+        cfg: &ArchConfig,
+        r: &ReuseFactors,
+        batch: usize,
+        s: usize,
+        clock_hz: f64,
+    ) -> f64 {
+        Self::batch_cycles(cfg, r, batch, s) as f64 / clock_hz * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, Task};
+    use crate::hwmodel::ZC706;
+
+    #[test]
+    fn ii_is_max_reuse() {
+        let t = LatencyModel::lstm_timing(16, 16, &ReuseFactors::new(16, 5, 1));
+        assert_eq!(t.ii, 16);
+        let t2 = LatencyModel::lstm_timing(8, 8, &ReuseFactors::new(3, 12, 1));
+        assert_eq!(t2.ii, 12);
+        assert!(t.il > t.ii);
+    }
+
+    #[test]
+    fn autoencoder_doubles() {
+        let ae = ArchConfig::new(Task::Anomaly, 16, 2, "NNNN");
+        let cls = ArchConfig::new(Task::Classify, 16, 2, "NN");
+        let r = ReuseFactors::new(4, 4, 4);
+        let a = LatencyModel::single_pass_cycles(&ae, &r);
+        let c = LatencyModel::single_pass_cycles(&cls, &r);
+        assert_eq!(a, 2 * c);
+    }
+
+    #[test]
+    fn deeper_nets_cost_only_fill_latency() {
+        // Timestep pipelining: adding layers adds (IL-II) per layer, not
+        // II*T — the paper's Table VI observation that NL=2 and NL=3 have
+        // nearly identical latency.
+        let c1 = ArchConfig::new(Task::Classify, 8, 1, "N");
+        let c3 = ArchConfig::new(Task::Classify, 8, 3, "NNN");
+        let r = ReuseFactors::new(12, 1, 1);
+        let l1 = LatencyModel::single_pass_cycles(&c1, &r);
+        let l3 = LatencyModel::single_pass_cycles(&c3, &r);
+        assert!(l3 > l1);
+        assert!(
+            (l3 - l1) < l1 / 10,
+            "extra layers must be cheap: {l1} vs {l3}"
+        );
+    }
+
+    #[test]
+    fn batch_scales_linearly_in_steady_state() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+        let r = ReuseFactors::new(12, 1, 1);
+        let b50 = LatencyModel::batch_cycles(&cfg, &r, 50, 30);
+        let b200 = LatencyModel::batch_cycles(&cfg, &r, 200, 30);
+        let ratio = b200 as f64 / b50 as f64;
+        assert!((ratio - 4.0).abs() < 0.05, "ratio {ratio}");
+    }
+
+    #[test]
+    fn paper_scale_sanity_table4() {
+        // Classifier H=8, NL=3, Rx=12, Rh=1, batch 50, S=30 at 100 MHz:
+        // the paper reports 25.23 ms. II = 12 -> 12*140*1500 = 25.2 Mcycles
+        // = 25.2 ms. Our model must land within a few percent.
+        let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+        let r = ReuseFactors::new(12, 1, 1);
+        let ms = LatencyModel::batch_ms(&cfg, &r, 50, 30, ZC706.clock_hz);
+        assert!(
+            (ms - 25.23).abs() / 25.23 < 0.05,
+            "model {ms} ms vs paper 25.23 ms"
+        );
+    }
+
+    #[test]
+    fn single_sample_much_faster() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 1, "N");
+        let r = ReuseFactors::new(2, 1, 1);
+        let s1 = LatencyModel::batch_ms(&cfg, &r, 50, 1, ZC706.clock_hz);
+        let s30 = LatencyModel::batch_ms(&cfg, &r, 50, 30, ZC706.clock_hz);
+        assert!(s30 / s1 > 20.0, "MC sampling dominates: {s1} vs {s30}");
+    }
+}

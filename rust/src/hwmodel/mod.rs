@@ -1,0 +1,60 @@
+//! Analytic hardware models (paper Sec. IV-B/IV-C) plus the platform
+//! descriptions used by the evaluation: the Xilinx ZC706 target, the
+//! CPU/GPU baseline envelopes, and the power/energy accounting of
+//! Table IV.
+
+pub mod gpu;
+pub mod latency;
+pub mod power;
+pub mod resource;
+
+pub use gpu::GpuModel;
+pub use latency::{LatencyModel, LayerTiming};
+pub use power::PowerModel;
+pub use resource::{ResourceEstimate, ResourceModel, ReuseFactors};
+
+/// Xilinx ZC706 (XC7Z045) resources and clock — the paper's target board.
+#[derive(Debug, Clone, Copy)]
+pub struct Platform {
+    pub name: &'static str,
+    pub luts: u64,
+    pub ffs: u64,
+    pub brams: u64,
+    pub dsps: u64,
+    pub clock_hz: f64,
+}
+
+/// The evaluation board (Table III "Available" row; 100 MHz design clock).
+pub const ZC706: Platform = Platform {
+    name: "ZC706 (XC7Z045)",
+    luts: 219_000,
+    ffs: 437_000,
+    brams: 545,
+    dsps: 900,
+    clock_hz: 100.0e6,
+};
+
+impl Platform {
+    /// Convert a cycle count to milliseconds at the design clock.
+    pub fn cycles_to_ms(&self, cycles: u64) -> f64 {
+        cycles as f64 / self.clock_hz * 1e3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zc706_table3_available_row() {
+        assert_eq!(ZC706.dsps, 900);
+        assert_eq!(ZC706.brams, 545);
+        assert_eq!(ZC706.luts, 219_000);
+        assert_eq!(ZC706.ffs, 437_000);
+    }
+
+    #[test]
+    fn cycles_to_ms_at_100mhz() {
+        assert!((ZC706.cycles_to_ms(100_000) - 1.0).abs() < 1e-12);
+    }
+}

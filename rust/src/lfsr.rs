@@ -1,0 +1,320 @@
+//! Hardware Bernoulli sampler (paper Sec. III-B, Fig. 3).
+//!
+//! The FPGA design generates MC-dropout masks with N_lfsr = 3 four-tap
+//! linear feedback shift registers, each emitting an unbiased bit stream,
+//! combined by a 3-input NAND: the output is 0 iff all three bits are 1,
+//! i.e. a dropout (zero) probability of exactly p = 1/8 = 0.125 — the rate
+//! the paper fixes for both x and h masks. A serial-in-parallel-out (SIPO)
+//! register widens the bit stream and a FIFO decouples sampling from the
+//! LSTM engines so sampling overlaps compute (Fig. 4); both are modelled
+//! behaviourally here with exact cycle accounting used by the pipeline
+//! simulator.
+
+/// 16-bit Fibonacci LFSR with the maximal-length 4-tap polynomial
+/// x^16 + x^15 + x^13 + x^4 + 1 (taps 16, 15, 13, 4). Period 2^16 - 1.
+#[derive(Debug, Clone)]
+pub struct Lfsr4 {
+    state: u16,
+}
+
+impl Lfsr4 {
+    /// Seed must be non-zero (the all-zero state is the LFSR fixed point).
+    pub fn new(seed: u16) -> Self {
+        Self { state: if seed == 0 { 0xACE1 } else { seed } }
+    }
+
+    /// Shift one cycle, returning the output bit.
+    #[inline]
+    pub fn step(&mut self) -> u8 {
+        let s = self.state;
+        let bit =
+            ((s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3)) & 1;
+        self.state = (s << 1) | bit;
+        (s >> 15) as u8 & 1
+    }
+}
+
+/// The paper's Bernoulli mask generator: 3 LFSRs + NAND => P(zero) = 1/8.
+#[derive(Debug, Clone)]
+pub struct BernoulliSampler {
+    lfsrs: [Lfsr4; 3],
+    /// Cycles spent generating bits so far (for the overlap model).
+    cycles: u64,
+}
+
+pub const N_LFSR: usize = 3;
+/// Dropout probability realised by the 3-LFSR + NAND circuit.
+pub const HW_DROPOUT_P: f32 = 0.125;
+
+impl BernoulliSampler {
+    pub fn new(seed: u64) -> Self {
+        // Derive three distinct non-zero 16-bit seeds.
+        let s = |k: u64| -> u16 {
+            let mut x = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(k);
+            x ^= x >> 29;
+            let v = (x & 0xFFFF) as u16;
+            if v == 0 {
+                0xACE1
+            } else {
+                v
+            }
+        };
+        Self {
+            lfsrs: [Lfsr4::new(s(1)), Lfsr4::new(s(2)), Lfsr4::new(s(3))],
+            cycles: 0,
+        }
+    }
+
+    /// One mask bit: NAND of the three LFSR outputs.
+    /// Returns 1.0 (keep) with probability 7/8, 0.0 (drop) with 1/8.
+    #[inline]
+    pub fn sample(&mut self) -> f32 {
+        self.cycles += 1;
+        let b0 = self.lfsrs[0].step();
+        let b1 = self.lfsrs[1].step();
+        let b2 = self.lfsrs[2].step();
+        // NAND: zero only when all three are one.
+        if b0 & b1 & b2 == 1 {
+            0.0
+        } else {
+            1.0
+        }
+    }
+
+    /// Fill a pre-allocated mask buffer (SIPO widening: one bit per cycle
+    /// into the parallel register, then pushed through the FIFO).
+    pub fn fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.sample();
+        }
+    }
+
+    /// Cycles consumed so far — the pipeline model uses this to verify the
+    /// pre-sampling window hides inside the LSTM compute (Fig. 4).
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Cycles needed to produce `n` mask bits through the SIPO: serial, one
+    /// bit per cycle (all three LFSRs step in parallel).
+    pub fn cycles_for(n: usize) -> u64 {
+        n as u64
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Variable-rate sampler — the paper's future work ("supporting a wide
+// variety of dropout rates in hardware"). Instead of a fixed NAND over
+// N_lfsr bit-streams (which only realises p = 2^-N), a comparator checks
+// an N-bit word assembled from N parallel LFSRs against a programmable
+// threshold: p = threshold / 2^N in steps of 2^-N. Costs N LFSRs plus an
+// N-bit comparator — still DSP-free.
+// ---------------------------------------------------------------------------
+
+/// Programmable-probability Bernoulli sampler: p = threshold / 2^N.
+///
+/// Implementation note: assembling the word from N *parallel* LFSRs with
+/// the same polynomial is subtly wrong — the N bit-streams are N phases
+/// of one m-sequence and can be linearly dependent over GF(2), collapsing
+/// the word distribution (we hit exactly this: p quantised to 2^-rank).
+/// The standard hardware pattern compares the top N bits of a single
+/// LFSR's *state register* against the threshold: the state is uniform
+/// over the 2^16-1 nonzero values, so the comparison realises p to within
+/// 2^-16 bias at the cost of one LFSR + one N-bit comparator.
+#[derive(Debug, Clone)]
+pub struct VariableSampler {
+    lfsr: Lfsr4,
+    bits: usize,
+    threshold: u32,
+    cycles: u64,
+}
+
+impl VariableSampler {
+    /// `bits` comparator bits give p resolution 2^-bits; `p` is rounded
+    /// to the nearest representable probability.
+    pub fn new(seed: u64, bits: usize, p: f64) -> Self {
+        assert!((1..=16).contains(&bits), "1..=16 comparator bits");
+        assert!((0.0..1.0).contains(&p), "p in [0,1)");
+        let mut x = seed.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(1);
+        x ^= x >> 29;
+        let s = (x & 0xFFFF) as u16;
+        Self {
+            lfsr: Lfsr4::new(if s == 0 { 0xACE1 } else { s }),
+            bits,
+            threshold: (p * (1u64 << bits) as f64).round() as u32,
+            cycles: 0,
+        }
+    }
+
+    /// The probability actually realised after threshold quantisation.
+    pub fn effective_p(&self) -> f64 {
+        self.threshold as f64 / (1u64 << self.bits) as f64
+    }
+
+    /// One mask bit: top `bits` of the LFSR state < threshold => drop.
+    #[inline]
+    pub fn sample(&mut self) -> f32 {
+        self.cycles += 1;
+        self.lfsr.step();
+        let word = (self.lfsr.state >> (16 - self.bits)) as u32;
+        if word < self.threshold {
+            0.0
+        } else {
+            1.0
+        }
+    }
+
+    pub fn fill(&mut self, out: &mut [f32]) {
+        for v in out.iter_mut() {
+            *v = self.sample();
+        }
+    }
+
+    pub fn cycles(&self) -> u64 {
+        self.cycles
+    }
+
+    /// Extra LUTs over the fixed 3-LFSR design (resource-model hook):
+    /// each additional LFSR ~16 LUT/FF, comparator ~bits LUTs.
+    pub fn extra_luts(bits: usize) -> f64 {
+        ((bits.saturating_sub(N_LFSR)) * 16 + bits) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lfsr_is_maximal_period() {
+        let mut l = Lfsr4::new(1);
+        let start = l.state;
+        let mut period = 0u32;
+        loop {
+            l.step();
+            period += 1;
+            if l.state == start || period > 70_000 {
+                break;
+            }
+        }
+        assert_eq!(period, 65_535, "4-tap polynomial must be maximal length");
+    }
+
+    #[test]
+    fn lfsr_never_hits_zero() {
+        let mut l = Lfsr4::new(0xBEEF);
+        for _ in 0..70_000 {
+            l.step();
+            assert_ne!(l.state, 0);
+        }
+    }
+
+    #[test]
+    fn lfsr_bit_balance() {
+        let mut l = Lfsr4::new(0x1234);
+        let ones: u32 = (0..65_535).map(|_| l.step() as u32).sum();
+        // Maximal LFSR emits 32768 ones / 32767 zeros per period.
+        assert_eq!(ones, 32_768);
+    }
+
+    #[test]
+    fn zero_seed_coerced() {
+        let mut l = Lfsr4::new(0);
+        l.step(); // must not be stuck
+        assert_ne!(l.state, 0);
+    }
+
+    #[test]
+    fn nand_gives_one_eighth_dropout() {
+        let mut s = BernoulliSampler::new(42);
+        let n = 200_000;
+        let zeros = (0..n).filter(|_| s.sample() == 0.0).count();
+        let rate = zeros as f64 / n as f64;
+        assert!(
+            (rate - 0.125).abs() < 0.01,
+            "dropout rate {rate} should be ~1/8"
+        );
+    }
+
+    #[test]
+    fn different_seeds_different_streams() {
+        let mut a = BernoulliSampler::new(1);
+        let mut b = BernoulliSampler::new(2);
+        let va: Vec<f32> = (0..64).map(|_| a.sample()).collect();
+        let vb: Vec<f32> = (0..64).map(|_| b.sample()).collect();
+        assert_ne!(va, vb);
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = BernoulliSampler::new(5);
+        let mut b = BernoulliSampler::new(5);
+        for _ in 0..1000 {
+            assert_eq!(a.sample(), b.sample());
+        }
+    }
+
+    #[test]
+    fn cycle_accounting() {
+        let mut s = BernoulliSampler::new(9);
+        let mut buf = vec![0.0; 37];
+        s.fill(&mut buf);
+        assert_eq!(s.cycles(), 37);
+        assert_eq!(BernoulliSampler::cycles_for(37), 37);
+    }
+
+    #[test]
+    fn masks_are_binary() {
+        let mut s = BernoulliSampler::new(11);
+        let mut buf = vec![0.5; 256];
+        s.fill(&mut buf);
+        assert!(buf.iter().all(|&v| v == 0.0 || v == 1.0));
+    }
+
+    #[test]
+    fn variable_sampler_hits_requested_rates() {
+        for &p in &[0.0625f64, 0.125, 0.25, 0.4375, 0.5] {
+            let mut s = VariableSampler::new(33, 8, p);
+            assert!((s.effective_p() - p).abs() < 1e-9, "p={p} representable");
+            let n = 120_000;
+            let zeros = (0..n).filter(|_| s.sample() == 0.0).count();
+            let rate = zeros as f64 / n as f64;
+            assert!(
+                (rate - p).abs() < 0.012,
+                "requested {p}, measured {rate}"
+            );
+        }
+    }
+
+    #[test]
+    fn variable_sampler_quantises_p() {
+        let s = VariableSampler::new(1, 3, 0.2);
+        // Nearest multiple of 1/8 to 0.2 is 0.25.
+        assert!((s.effective_p() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn variable_matches_fixed_at_one_eighth() {
+        // At p = 1/8 the programmable design realises the same rate the
+        // 3-LFSR NAND does.
+        let mut a = VariableSampler::new(2, 3, 0.125);
+        let mut b = BernoulliSampler::new(2);
+        let n = 120_000;
+        let ra = (0..n).filter(|_| a.sample() == 0.0).count() as f64 / n as f64;
+        let rb = (0..n).filter(|_| b.sample() == 0.0).count() as f64 / n as f64;
+        assert!((ra - rb).abs() < 0.01, "{ra} vs {rb}");
+    }
+
+    #[test]
+    fn variable_zero_p_never_drops() {
+        let mut s = VariableSampler::new(5, 6, 0.0);
+        assert!((0..1000).all(|_| s.sample() == 1.0));
+        assert_eq!(s.cycles(), 1000);
+    }
+
+    #[test]
+    fn extra_luts_scale_with_bits() {
+        assert_eq!(VariableSampler::extra_luts(3), 3.0); // comparator only
+        assert!(VariableSampler::extra_luts(8) > VariableSampler::extra_luts(4));
+    }
+}

@@ -1,0 +1,33 @@
+//! Reproduction of *Optimizing Bayesian Recurrent Neural Networks on an
+//! FPGA-based Accelerator* (Ferianc, Que, Fan, Luk, Rodrigues — 2021).
+//!
+//! The crate is the L3 layer of a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1/L2** (build time, `python/compile/`): the Bayesian LSTM model and
+//!   its fused Pallas cell kernel, AOT-lowered to HLO text artifacts.
+//! * **L3** (this crate): the paper's systems contribution — a cycle-level
+//!   simulator of the proposed streaming FPGA accelerator ([`fpga`]), the
+//!   analytic resource/latency/power models ([`hwmodel`]), the
+//!   algorithmic–hardware design-space-exploration framework ([`dse`]),
+//!   a PJRT runtime executing the AOT artifacts ([`runtime`]), a
+//!   Rust-driven training loop ([`train`]), a native float reference
+//!   engine ([`nn`]) and an async serving coordinator ([`coordinator`]).
+//!
+//! Python never runs on the request path: after `make artifacts` the Rust
+//! binary is self-contained.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod dse;
+pub mod fixedpoint;
+pub mod fpga;
+pub mod hwmodel;
+pub mod jsonio;
+pub mod lfsr;
+pub mod metrics;
+pub mod nn;
+pub mod rng;
+pub mod runtime;
+pub mod tensor;
+pub mod train;

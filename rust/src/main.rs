@@ -1,0 +1,451 @@
+//! `repro` — the leader CLI for the Bayesian-RNN-on-FPGA reproduction.
+//!
+//! Subcommands:
+//!   sweep   run the algorithmic DSE sweep, write the lookup table
+//!   dse     run the optimisation framework over a lookup table (Tables V/VI)
+//!   train   train one architecture (native engine or PJRT AOT train step)
+//!   eval    evaluate a trained checkpoint (float / fixed-point FPGA sim)
+//!   serve   run the serving coordinator on synthetic ECG traffic
+//!   info    show artifact manifest + platform
+//!
+//! Arg parsing is hand-rolled (`--key value` / flags) — no clap in this
+//! offline environment (see Cargo.toml).
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+use bayes_rnn_fpga::config::{ArchConfig, Task};
+use bayes_rnn_fpga::coordinator::{BatchPolicy, Engine, Server, ServerConfig};
+use bayes_rnn_fpga::data;
+use bayes_rnn_fpga::dse::space::reuse_search;
+use bayes_rnn_fpga::dse::{LookupTable, Optimizer};
+use bayes_rnn_fpga::fpga::accel::Accelerator;
+use bayes_rnn_fpga::hwmodel::ZC706;
+use bayes_rnn_fpga::nn::model::Model;
+use bayes_rnn_fpga::nn::Params;
+use bayes_rnn_fpga::runtime::Runtime;
+use bayes_rnn_fpga::tensor::{load_tensors, save_tensors, Tensor};
+use bayes_rnn_fpga::train::eval::{eval_anomaly, eval_classify, ModelPredictor};
+use bayes_rnn_fpga::train::sweep::{self, SweepOpts};
+use bayes_rnn_fpga::train::{NativeTrainer, PjrtTrainer, TrainOpts};
+
+/// Tiny `--key value` parser: positional subcommand + options.
+struct Args {
+    opts: HashMap<String, String>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> (Option<String>, Args) {
+        let mut opts = HashMap::new();
+        let mut cmd = None;
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    opts.insert(key.to_string(), argv[i + 1].clone());
+                    i += 2;
+                } else {
+                    opts.insert(key.to_string(), "true".to_string());
+                    i += 1;
+                }
+            } else {
+                if cmd.is_none() {
+                    cmd = Some(a.clone());
+                }
+                i += 1;
+            }
+        }
+        (cmd, Args { opts })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn flag(&self, key: &str) -> bool {
+        self.get(key).is_some()
+    }
+
+    fn task(&self) -> Result<Task> {
+        self.get("task")
+            .unwrap_or("classify")
+            .parse()
+            .map_err(|e: String| anyhow::anyhow!(e))
+    }
+
+    fn artifacts_dir(&self) -> PathBuf {
+        PathBuf::from(self.get("artifacts").unwrap_or("artifacts"))
+    }
+}
+
+/// Parse "anomaly_h16_nl2_YNYN"-style names back into a config.
+fn parse_arch(name: &str) -> Result<ArchConfig> {
+    let parts: Vec<&str> = name.split('_').collect();
+    anyhow::ensure!(parts.len() == 4, "arch name like anomaly_h16_nl2_YNYN");
+    let task: Task =
+        parts[0].parse().map_err(|e: String| anyhow::anyhow!(e))?;
+    let h: usize = parts[1].trim_start_matches('h').parse()?;
+    let nl: usize = parts[2].trim_start_matches("nl").parse()?;
+    Ok(ArchConfig::new(task, h, nl, parts[3]))
+}
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let (cmd, args) = Args::parse(&argv);
+    match cmd.as_deref() {
+        Some("sweep") => cmd_sweep(&args),
+        Some("dse") => cmd_dse(&args),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("info") => cmd_info(&args),
+        _ => {
+            eprintln!(
+                "usage: repro <sweep|dse|train|eval|serve|info> [--task \
+                 anomaly|classify] [--arch NAME] [--epochs N] [--full] ..."
+            );
+            Ok(())
+        }
+    }
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let task = args.task()?;
+    let opts = SweepOpts {
+        full_grid: args.flag("full"),
+        epochs: args.usize_or("epochs", 25),
+        train_subset: args.usize_or("train-subset", 500),
+        test_subset: args.usize_or("test-subset", 400),
+        mc_samples: args.usize_or("samples", 10),
+        ..Default::default()
+    };
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        args.artifacts_dir().join(format!("lookup_{}.json", task.as_str()))
+    });
+    let mut table = if let Ok(t) = LookupTable::load(&out) {
+        println!("extending existing table {}", out.display());
+        t
+    } else {
+        LookupTable::new()
+    };
+    let t0 = std::time::Instant::now();
+    sweep::run(task, &opts, &mut table, |done, total, name| {
+        println!("[{done}/{total}] {name}");
+    });
+    table.save(&out)?;
+    println!(
+        "sweep done in {:.1}s -> {} ({} entries)",
+        t0.elapsed().as_secs_f64(),
+        out.display(),
+        table.entries.len()
+    );
+    Ok(())
+}
+
+fn cmd_dse(args: &Args) -> Result<()> {
+    let task = args.task()?;
+    let path = args.get("lookup").map(PathBuf::from).unwrap_or_else(|| {
+        args.artifacts_dir().join(format!("lookup_{}.json", task.as_str()))
+    });
+    let lookup = LookupTable::load(&path).with_context(|| {
+        format!("run `repro sweep --task {}` first", task.as_str())
+    })?;
+    let mut opt = Optimizer::new(&ZC706, &lookup);
+    opt.batch = args.usize_or("batch", 50);
+    opt.mc_samples = args.usize_or("samples", 30);
+    println!(
+        "{:<14} {:>20} {:>12} {:>4} {:>11} {:>11} {:>7}  metrics",
+        "Mode", "A:{H,NL,B}", "R:{x,h,d}", "S", "FPGA [ms]", "GPU [ms]",
+        "P [W]"
+    );
+    for mode in Optimizer::modes_for(task) {
+        match opt.optimize(task, mode) {
+            Some(c) => {
+                let metr: Vec<String> = c
+                    .metrics
+                    .iter()
+                    .map(|(k, v)| format!("{k}={v:.3}"))
+                    .collect();
+                println!(
+                    "{:<14} {:>20} {:>12} {:>4} {:>11.2} {:>11.2} {:>7.2}  {}",
+                    c.mode,
+                    format!(
+                        "{{{},{},{}}}",
+                        c.arch.hidden,
+                        c.arch.nl,
+                        c.arch.bayes_str()
+                    ),
+                    format!(
+                        "{{{},{},{}}}",
+                        c.reuse.rx, c.reuse.rh, c.reuse.rd
+                    ),
+                    c.s,
+                    c.fpga_latency_ms,
+                    c.gpu_latency_ms,
+                    c.fpga_watts,
+                    metr.join(" ")
+                );
+            }
+            None => {
+                println!("{:<14} (no feasible configuration)", mode.name())
+            }
+        }
+    }
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let arch = args.get("arch").context("--arch NAME required")?;
+    let cfg = parse_arch(arch)?;
+    let epochs = args.usize_or("epochs", 60);
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        args.artifacts_dir().join(format!("{arch}.weights.brt"))
+    });
+    let backend = args.get("backend").unwrap_or("native");
+
+    let (train_set, _) = match cfg.task {
+        Task::Anomaly => data::anomaly_splits(0),
+        Task::Classify => data::splits(0),
+    };
+    let t0 = std::time::Instant::now();
+    let params: Params = match backend {
+        "native" => {
+            let mut tr = NativeTrainer::new(
+                cfg.clone(),
+                TrainOpts {
+                    epochs,
+                    batch: args.usize_or("batch", 64),
+                    lr: args.f32_or(
+                        "lr",
+                        if cfg.task == Task::Anomaly { 1e-2 } else { 5e-3 },
+                    ),
+                    seed: args.usize_or("seed", 0) as u64,
+                },
+            );
+            tr.fit(&train_set);
+            println!(
+                "native training: {} epochs, loss {:.4} -> {:.4}",
+                epochs,
+                tr.loss_history[0],
+                tr.final_loss()
+            );
+            tr.model.params
+        }
+        "pjrt" => {
+            let mut rt = Runtime::new(&args.artifacts_dir())?;
+            let batch = args.usize_or("batch", 64);
+            let mut tr = PjrtTrainer::new(
+                &mut rt,
+                arch,
+                batch,
+                args.f32_or("lr", 1e-3),
+                args.usize_or("seed", 0) as u64,
+            )?;
+            tr.fit(&train_set, epochs)?;
+            println!(
+                "pjrt training: {} epochs, loss {:.4} -> {:.4}",
+                epochs,
+                tr.loss_history.first().unwrap_or(&f32::NAN),
+                tr.loss_history.last().unwrap_or(&f32::NAN)
+            );
+            tr.params
+        }
+        other => anyhow::bail!("unknown backend {other:?}"),
+    };
+    let named: Vec<(String, Tensor)> = cfg
+        .param_names()
+        .into_iter()
+        .zip(params.tensors.iter().cloned())
+        .collect();
+    save_tensors(&out, &named)?;
+    println!(
+        "saved {} ({} params) in {:.1}s",
+        out.display(),
+        cfg.num_weights(),
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}
+
+fn load_model(args: &Args, cfg: &ArchConfig, arch: &str) -> Result<Model> {
+    let path = args.get("weights").map(PathBuf::from).unwrap_or_else(|| {
+        args.artifacts_dir().join(format!("{arch}.weights.brt"))
+    });
+    let named = load_tensors(&path).with_context(|| {
+        format!("{} missing — run `repro train --arch {arch}`", path.display())
+    })?;
+    Ok(Model::new(
+        cfg.clone(),
+        Params { tensors: named.into_iter().map(|(_, t)| t).collect() },
+    ))
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let arch = args.get("arch").context("--arch NAME required")?;
+    let cfg = parse_arch(arch)?;
+    let model = load_model(args, &cfg, arch)?;
+    let s = args.usize_or("samples", 30);
+    let subset = args.usize_or("test-subset", 500);
+    match cfg.task {
+        Task::Anomaly => {
+            let (_, test) = data::anomaly_splits(0);
+            let te =
+                test.subset(&(0..subset.min(test.n)).collect::<Vec<_>>());
+            if args.flag("fixed") {
+                let reuse = reuse_search(&cfg, &ZC706)
+                    .context("does not fit ZC706")?;
+                let mut acc = Accelerator::new(&cfg, &model.params, reuse, 7);
+                let rep = eval_anomaly(&mut acc, &te, s);
+                println!(
+                    "fixed-point  AUC {:.3}  AP {:.3}  ACC {:.3}",
+                    rep.auc, rep.ap, rep.accuracy
+                );
+            }
+            let mut p = ModelPredictor::new(&model, 7);
+            let rep = eval_anomaly(&mut p, &te, s);
+            println!(
+                "float        AUC {:.3}  AP {:.3}  ACC {:.3}  \
+                 (rmse normal {:.3} vs anomalous {:.3})",
+                rep.auc,
+                rep.ap,
+                rep.accuracy,
+                rep.mean_rmse_normal,
+                rep.mean_rmse_anomalous
+            );
+        }
+        Task::Classify => {
+            let (_, test) = data::splits(0);
+            let te =
+                test.subset(&(0..subset.min(test.n)).collect::<Vec<_>>());
+            let noise = data::gaussian_noise(50, 0);
+            if args.flag("fixed") {
+                let reuse = reuse_search(&cfg, &ZC706)
+                    .context("does not fit ZC706")?;
+                let mut acc = Accelerator::new(&cfg, &model.params, reuse, 7);
+                let rep = eval_classify(&mut acc, &te, &noise, s);
+                println!(
+                    "fixed-point  ACC {:.3}  AP {:.3}  AR {:.3}  H {:.3} nats",
+                    rep.accuracy, rep.ap, rep.ar, rep.noise_entropy
+                );
+            }
+            let mut p = ModelPredictor::new(&model, 7);
+            let rep = eval_classify(&mut p, &te, &noise, s);
+            println!(
+                "float        ACC {:.3}  AP {:.3}  AR {:.3}  H {:.3} nats",
+                rep.accuracy, rep.ap, rep.ar, rep.noise_entropy
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let arch = args.get("arch").context("--arch NAME required")?.to_string();
+    let cfg = parse_arch(&arch)?;
+    let model = load_model(args, &cfg, &arch)?;
+    let s =
+        if cfg.is_bayesian() { args.usize_or("samples", 30) } else { 1 };
+    let n_req = args.usize_or("requests", 100);
+    let engine_kind = args.get("engine").unwrap_or("fpga").to_string();
+    let batch = args.usize_or("batch", 8);
+    let artifacts = args.artifacts_dir();
+
+    let policy = if engine_kind == "fpga" {
+        BatchPolicy::stream()
+    } else {
+        BatchPolicy::batched(batch, std::time::Duration::from_millis(2))
+    };
+    let cfg2 = cfg.clone();
+    let params = model.params.tensors.clone();
+    let mut server = Server::start(
+        move || match engine_kind.as_str() {
+            "gpu" => Engine::gpu(
+                Model::new(cfg2.clone(), Params { tensors: params.clone() }),
+                s,
+                3,
+            ),
+            "pjrt" => {
+                let rt = Runtime::new(&artifacts).expect("artifacts");
+                Engine::pjrt(rt, &cfg2.name(), &params, s, 3)
+                    .expect("pjrt engine")
+            }
+            _ => {
+                let reuse = reuse_search(&cfg2, &ZC706).expect("fits ZC706");
+                let model = Model::new(
+                    cfg2.clone(),
+                    Params { tensors: params.clone() },
+                );
+                Engine::fpga(&cfg2, &model, reuse, s, 3)
+            }
+        },
+        ServerConfig { policy, queue_depth: 256 },
+    );
+
+    let (_, test) = match cfg.task {
+        Task::Anomaly => data::anomaly_splits(0),
+        Task::Classify => data::splits(0),
+    };
+    let t0 = std::time::Instant::now();
+    let receivers: Vec<_> = (0..n_req)
+        .map(|i| server.submit(test.beat(i % test.n).to_vec()))
+        .collect();
+    for rx in receivers {
+        rx.recv()?;
+    }
+    let wall = t0.elapsed();
+    let summary = server.join();
+    println!(
+        "served {} requests in {:.2}s  ({:.1} req/s)",
+        summary.served,
+        wall.as_secs_f64(),
+        summary.served as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "e2e    mean {:.3} ms  p50 {:.3}  p99 {:.3}  max {:.3}",
+        summary.e2e.mean_ms(),
+        summary.e2e.percentile_ms(50.0),
+        summary.e2e.percentile_ms(99.0),
+        summary.e2e.max_ms()
+    );
+    println!(
+        "engine mean {:.3} ms  batches {} (avg size {:.1})",
+        summary.engine.mean_ms(),
+        summary.batches,
+        summary.mean_batch
+    );
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = args.artifacts_dir();
+    let mut rt = Runtime::new(&dir)?;
+    println!("platform: {}", rt.platform());
+    println!("artifacts in {}:", dir.display());
+    let metas: Vec<(String, String, usize)> = rt
+        .manifest
+        .artifacts
+        .iter()
+        .map(|a| (a.name.clone(), a.kind.clone(), a.args.len()))
+        .collect();
+    for (name, kind, nargs) in metas {
+        println!("  {name:<44} {kind:<8} {nargs} args");
+    }
+    // Smoke-compile the first artifact.
+    if let Some(first) =
+        rt.manifest.artifacts.first().map(|a| a.name.clone())
+    {
+        rt.load(&first)?;
+        println!("compiled {first} OK");
+    }
+    Ok(())
+}

@@ -1,0 +1,503 @@
+//! Algorithmic metrics used across the paper's evaluation (Sec. V):
+//! ROC/AUC, average precision, accuracy at the Youden-optimal cutoff,
+//! macro AP / macro recall for the 4-class task, predictive entropy,
+//! Gaussian NLL, RMSE/L1, and MC-sample aggregation with an
+//! epistemic/aleatoric uncertainty split.
+
+/// One ROC point (false-positive rate, true-positive rate, threshold).
+#[derive(Debug, Clone, Copy)]
+pub struct RocPoint {
+    pub fpr: f64,
+    pub tpr: f64,
+    pub threshold: f64,
+}
+
+/// Full receiver-operating characteristic for binary scores
+/// (higher score = more anomalous/positive).
+pub fn roc_curve(scores: &[f64], labels: &[bool]) -> Vec<RocPoint> {
+    assert_eq!(scores.len(), labels.len());
+    let pos = labels.iter().filter(|&&l| l).count();
+    let neg = labels.len() - pos;
+    assert!(pos > 0 && neg > 0, "ROC needs both classes");
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut pts = vec![RocPoint { fpr: 0.0, tpr: 0.0, threshold: f64::INFINITY }];
+    let (mut tp, mut fp) = (0usize, 0usize);
+    let mut i = 0;
+    while i < idx.len() {
+        // Process ties together.
+        let thr = scores[idx[i]];
+        while i < idx.len() && scores[idx[i]] == thr {
+            if labels[idx[i]] {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            i += 1;
+        }
+        pts.push(RocPoint {
+            fpr: fp as f64 / neg as f64,
+            tpr: tp as f64 / pos as f64,
+            threshold: thr,
+        });
+    }
+    pts
+}
+
+/// Area under the ROC curve (trapezoid rule).
+pub fn auc(scores: &[f64], labels: &[bool]) -> f64 {
+    let pts = roc_curve(scores, labels);
+    let mut area = 0.0;
+    for w in pts.windows(2) {
+        area += (w[1].fpr - w[0].fpr) * (w[1].tpr + w[0].tpr) / 2.0;
+    }
+    area
+}
+
+/// Average precision (area under the precision-recall curve, step-wise —
+/// the sklearn definition).
+pub fn average_precision(scores: &[f64], labels: &[bool]) -> f64 {
+    let pos = labels.iter().filter(|&&l| l).count();
+    assert!(pos > 0, "AP needs positives");
+    let mut idx: Vec<usize> = (0..scores.len()).collect();
+    idx.sort_by(|&a, &b| {
+        scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let (mut tp, mut fp) = (0usize, 0usize);
+    let mut ap = 0.0;
+    let mut prev_recall = 0.0;
+    let mut i = 0;
+    while i < idx.len() {
+        let thr = scores[idx[i]];
+        while i < idx.len() && scores[idx[i]] == thr {
+            if labels[idx[i]] {
+                tp += 1;
+            } else {
+                fp += 1;
+            }
+            i += 1;
+        }
+        let recall = tp as f64 / pos as f64;
+        let precision = tp as f64 / (tp + fp) as f64;
+        ap += (recall - prev_recall) * precision;
+        prev_recall = recall;
+    }
+    ap
+}
+
+/// Accuracy at the cutoff maximising TPR - FPR (Youden's J — the paper's
+/// "cutoff point that maximizes true positive rate against false positive
+/// rate", Sec. V-A1).
+pub fn accuracy_at_optimal_cutoff(scores: &[f64], labels: &[bool]) -> f64 {
+    let pts = roc_curve(scores, labels);
+    let best = pts
+        .iter()
+        .skip(1)
+        .max_by(|a, b| {
+            (a.tpr - a.fpr)
+                .partial_cmp(&(b.tpr - b.fpr))
+                .unwrap_or(std::cmp::Ordering::Equal)
+        })
+        .expect("non-empty ROC");
+    let thr = best.threshold;
+    let correct = scores
+        .iter()
+        .zip(labels)
+        .filter(|&(&s, &l)| (s >= thr) == l)
+        .count();
+    correct as f64 / scores.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// Multiclass metrics (classification task, Sec. V-A2). `probs` is row-major
+// [n][k]; `labels` in 0..k.
+// ---------------------------------------------------------------------------
+
+pub fn multiclass_accuracy(probs: &[f64], labels: &[u8], k: usize) -> f64 {
+    let n = labels.len();
+    let mut correct = 0;
+    for i in 0..n {
+        let row = &probs[i * k..(i + 1) * k];
+        let pred = argmax(row);
+        if pred == labels[i] as usize {
+            correct += 1;
+        }
+    }
+    correct as f64 / n as f64
+}
+
+/// Macro-averaged one-vs-rest average precision (the paper's "macro AP"
+/// for the severely unbalanced 4-class task).
+pub fn macro_average_precision(probs: &[f64], labels: &[u8], k: usize) -> f64 {
+    let n = labels.len();
+    let mut total = 0.0;
+    let mut classes = 0;
+    for c in 0..k {
+        let lab: Vec<bool> = labels.iter().map(|&l| l as usize == c).collect();
+        if !lab.iter().any(|&b| b) {
+            continue;
+        }
+        let sc: Vec<f64> = (0..n).map(|i| probs[i * k + c]).collect();
+        total += average_precision(&sc, &lab);
+        classes += 1;
+    }
+    total / classes as f64
+}
+
+/// Macro-averaged recall (the paper's "average recall, AR").
+pub fn macro_recall(probs: &[f64], labels: &[u8], k: usize) -> f64 {
+    let n = labels.len();
+    let mut total = 0.0;
+    let mut classes = 0;
+    for c in 0..k {
+        let in_class: Vec<usize> =
+            (0..n).filter(|&i| labels[i] as usize == c).collect();
+        if in_class.is_empty() {
+            continue;
+        }
+        let hit = in_class
+            .iter()
+            .filter(|&&i| argmax(&probs[i * k..(i + 1) * k]) == c)
+            .count();
+        total += hit as f64 / in_class.len() as f64;
+        classes += 1;
+    }
+    total / classes as f64
+}
+
+/// Predictive entropy in nats of a categorical distribution.
+pub fn entropy(p: &[f64]) -> f64 {
+    p.iter().filter(|&&v| v > 0.0).map(|&v| -v * v.ln()).sum()
+}
+
+/// Mean predictive entropy over rows of `probs` [n][k].
+pub fn mean_entropy(probs: &[f64], k: usize) -> f64 {
+    let n = probs.len() / k;
+    (0..n).map(|i| entropy(&probs[i * k..(i + 1) * k])).sum::<f64>()
+        / n as f64
+}
+
+pub fn argmax(row: &[f64]) -> usize {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap_or(std::cmp::Ordering::Equal))
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}
+
+// ---------------------------------------------------------------------------
+// Regression / reconstruction metrics (Fig. 1).
+// ---------------------------------------------------------------------------
+
+pub fn rmse(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let s: f64 = a
+        .iter()
+        .zip(b)
+        .map(|(x, y)| ((x - y) as f64) * ((x - y) as f64))
+        .sum();
+    (s / a.len() as f64).sqrt()
+}
+
+pub fn l1(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| (x - y).abs() as f64).sum::<f64>()
+        / a.len() as f64
+}
+
+/// Gaussian negative log-likelihood of targets under per-point mean/std.
+pub fn gaussian_nll(target: &[f32], mean: &[f32], std: &[f32]) -> f64 {
+    let mut nll = 0.0;
+    for i in 0..target.len() {
+        let s = (std[i] as f64).max(1e-6);
+        let d = (target[i] - mean[i]) as f64;
+        nll += 0.5 * ((2.0 * std::f64::consts::PI * s * s).ln()
+            + d * d / (s * s));
+    }
+    nll / target.len() as f64
+}
+
+// ---------------------------------------------------------------------------
+// MC-sample aggregation (Sec. II-B): predictions are the average over S
+// feedforward passes; uncertainty decomposes into epistemic (variance of
+// the per-sample means) and aleatoric (mean of per-sample variances,
+// estimated from residual spread for the regression task).
+// ---------------------------------------------------------------------------
+
+/// Per-point mean and std over S MC samples. `samples` is [s][n] row-major.
+pub fn mc_mean_std(samples: &[f32], s: usize, n: usize) -> (Vec<f32>, Vec<f32>) {
+    let mut mean = vec![0f32; n];
+    for si in 0..s {
+        for i in 0..n {
+            mean[i] += samples[si * n + i];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= s as f32;
+    }
+    let mut std = vec![0f32; n];
+    if s > 1 {
+        for si in 0..s {
+            for i in 0..n {
+                let d = samples[si * n + i] - mean[i];
+                std[i] += d * d;
+            }
+        }
+        for v in std.iter_mut() {
+            *v = (*v / (s - 1) as f32).sqrt();
+        }
+    }
+    (mean, std)
+}
+
+/// Average categorical distribution over S samples: `probs` [s][k] -> [k].
+pub fn mc_mean_probs(probs: &[f64], s: usize, k: usize) -> Vec<f64> {
+    let mut mean = vec![0f64; k];
+    for si in 0..s {
+        for i in 0..k {
+            mean[i] += probs[si * k + i];
+        }
+    }
+    for m in mean.iter_mut() {
+        *m /= s as f64;
+    }
+    mean
+}
+
+// ---------------------------------------------------------------------------
+// Calibration (the "accuracy vs calibration trade-off" the dropout rate p
+// controls, Sec. II-B): expected calibration error over confidence bins.
+// ---------------------------------------------------------------------------
+
+/// Expected calibration error (ECE) with equal-width confidence bins.
+/// `probs` [n][k] MC-mean distributions; `labels` ground truth.
+pub fn expected_calibration_error(
+    probs: &[f64],
+    labels: &[u8],
+    k: usize,
+    bins: usize,
+) -> f64 {
+    let n = labels.len();
+    assert!(bins > 0 && n > 0);
+    let mut bin_conf = vec![0.0f64; bins];
+    let mut bin_acc = vec![0.0f64; bins];
+    let mut bin_n = vec![0usize; bins];
+    for i in 0..n {
+        let row = &probs[i * k..(i + 1) * k];
+        let pred = argmax(row);
+        let conf = row[pred];
+        let b = ((conf * bins as f64) as usize).min(bins - 1);
+        bin_conf[b] += conf;
+        bin_acc[b] += if pred == labels[i] as usize { 1.0 } else { 0.0 };
+        bin_n[b] += 1;
+    }
+    let mut ece = 0.0;
+    for b in 0..bins {
+        if bin_n[b] == 0 {
+            continue;
+        }
+        let conf = bin_conf[b] / bin_n[b] as f64;
+        let acc = bin_acc[b] / bin_n[b] as f64;
+        ece += bin_n[b] as f64 / n as f64 * (conf - acc).abs();
+    }
+    ece
+}
+
+/// Epistemic/aleatoric decomposition for categorical MC predictions:
+/// total = H(mean p); aleatoric = mean H(p_s); epistemic = mutual
+/// information (total - aleatoric). `probs` [s][k].
+pub fn uncertainty_decomposition(probs: &[f64], s: usize, k: usize)
+    -> (f64, f64, f64)
+{
+    let mean = mc_mean_probs(probs, s, k);
+    let total = entropy(&mean);
+    let aleatoric = (0..s)
+        .map(|si| entropy(&probs[si * k..(si + 1) * k]))
+        .sum::<f64>()
+        / s as f64;
+    (total, aleatoric, (total - aleatoric).max(0.0))
+}
+
+/// Mean ± std over repeated retrains (Tables I/II report 3 retrains).
+pub fn mean_std(values: &[f64]) -> (f64, f64) {
+    let n = values.len() as f64;
+    let mean = values.iter().sum::<f64>() / n;
+    if values.len() < 2 {
+        return (mean, 0.0);
+    }
+    let var =
+        values.iter().map(|v| (v - mean) * (v - mean)).sum::<f64>() / (n - 1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn auc_perfect_separation() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [true, true, false, false];
+        assert!((auc(&scores, &labels) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn auc_interleaved() {
+        // Pairs: (4>3)ok (4>1)ok (2<3)bad (2>1)ok -> 3/4 concordant.
+        let scores = [4.0, 3.0, 2.0, 1.0];
+        let labels = [true, false, true, false];
+        let a = auc(&scores, &labels);
+        assert!((a - 0.75).abs() < 1e-9, "{a}");
+    }
+
+    #[test]
+    fn auc_antiperfect_is_zero() {
+        let scores = [0.1, 0.2, 0.8, 0.9];
+        let labels = [true, true, false, false];
+        assert!(auc(&scores, &labels) < 1e-9);
+    }
+
+    #[test]
+    fn auc_handles_ties() {
+        let scores = [0.5, 0.5, 0.5, 0.5];
+        let labels = [true, false, true, false];
+        assert!((auc(&scores, &labels) - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ap_perfect() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [true, true, false, false];
+        assert!((average_precision(&scores, &labels) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_at_cutoff_perfect() {
+        let scores = [0.9, 0.8, 0.2, 0.1];
+        let labels = [true, true, false, false];
+        assert!(
+            (accuracy_at_optimal_cutoff(&scores, &labels) - 1.0).abs() < 1e-9
+        );
+    }
+
+    #[test]
+    fn multiclass_metrics() {
+        // 3 rows, k=2: predictions 1, 0, 1 vs labels 1, 0, 0.
+        let probs = [0.2, 0.8, 0.7, 0.3, 0.1, 0.9];
+        let labels = [1u8, 0, 0];
+        let acc = multiclass_accuracy(&probs, &labels, 2);
+        assert!((acc - 2.0 / 3.0).abs() < 1e-9);
+        let ar = macro_recall(&probs, &labels, 2);
+        assert!((ar - (0.5 + 1.0) / 2.0).abs() < 1e-9);
+        let ap = macro_average_precision(&probs, &labels, 2);
+        assert!(ap > 0.5 && ap <= 1.0);
+    }
+
+    #[test]
+    fn entropy_bounds() {
+        assert!(entropy(&[1.0, 0.0]).abs() < 1e-12);
+        let max = entropy(&[0.25; 4]);
+        assert!((max - (4.0f64).ln()).abs() < 1e-9);
+        let probs = [0.25, 0.25, 0.25, 0.25, 1.0, 0.0, 0.0, 0.0];
+        let me = mean_entropy(&probs, 4);
+        assert!((me - max / 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rmse_l1_nll() {
+        let a = [1.0f32, 2.0, 3.0];
+        let b = [1.0f32, 2.0, 5.0];
+        assert!((rmse(&a, &b) - (4.0f64 / 3.0).sqrt()).abs() < 1e-9);
+        assert!((l1(&a, &b) - 2.0 / 3.0).abs() < 1e-9);
+        let nll_tight = gaussian_nll(&a, &a, &[0.1, 0.1, 0.1]);
+        let nll_wrong = gaussian_nll(&a, &b, &[0.1, 0.1, 0.1]);
+        assert!(nll_wrong > nll_tight);
+    }
+
+    #[test]
+    fn mc_aggregation() {
+        // 2 samples over 3 points.
+        let samples = [1.0f32, 2.0, 3.0, 3.0, 2.0, 1.0];
+        let (mean, std) = mc_mean_std(&samples, 2, 3);
+        assert_eq!(mean, vec![2.0, 2.0, 2.0]);
+        assert!((std[0] - std::f32::consts::SQRT_2).abs() < 1e-6);
+        assert!(std[1].abs() < 1e-9);
+        let probs = [0.6, 0.4, 0.2, 0.8];
+        let m = mc_mean_probs(&probs, 2, 2);
+        assert!((m[0] - 0.4).abs() < 1e-12 && (m[1] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_std_over_retrains() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!((m1, s1), (5.0, 0.0));
+    }
+
+    #[test]
+    #[should_panic]
+    fn roc_requires_both_classes() {
+        roc_curve(&[0.1, 0.2], &[true, true]);
+    }
+
+    /// AUC is invariant under strictly monotone score transforms and
+    /// complements under label flip — property sweep with random scores.
+    #[test]
+    fn auc_properties_random() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(5);
+        for trial in 0..50 {
+            let n = 20 + rng.below(60);
+            let scores: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+            let labels: Vec<bool> =
+                (0..n).map(|_| rng.bernoulli(0.4)).collect();
+            if !labels.iter().any(|&l| l) || labels.iter().all(|&l| l) {
+                continue;
+            }
+            let a = auc(&scores, &labels);
+            assert!((0.0..=1.0).contains(&a), "trial {trial}: {a}");
+            // Monotone transform invariance: exp is strictly increasing.
+            let transformed: Vec<f64> =
+                scores.iter().map(|s| s.exp()).collect();
+            assert!((auc(&transformed, &labels) - a).abs() < 1e-12);
+            // Label flip complements.
+            let flipped: Vec<bool> = labels.iter().map(|l| !l).collect();
+            assert!((auc(&scores, &flipped) - (1.0 - a)).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn ece_perfectly_calibrated_is_zero() {
+        // Always predicts class 0 with confidence 1.0 and is always right.
+        let probs = [1.0, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let labels = [0u8, 0, 0];
+        assert!(expected_calibration_error(&probs, &labels, 2, 10) < 1e-12);
+    }
+
+    #[test]
+    fn ece_overconfident_wrong() {
+        // Confident (0.9) but only 50% correct -> ECE ~ 0.4.
+        let probs = [0.9, 0.1, 0.9, 0.1];
+        let labels = [0u8, 1];
+        let ece = expected_calibration_error(&probs, &labels, 2, 10);
+        assert!((ece - 0.4).abs() < 1e-9, "{ece}");
+    }
+
+    #[test]
+    fn uncertainty_decomposition_identities() {
+        // Identical samples: epistemic = 0, total = aleatoric.
+        let probs = [0.5, 0.5, 0.5, 0.5];
+        let (t, a, e) = uncertainty_decomposition(&probs, 2, 2);
+        assert!((t - a).abs() < 1e-12 && e < 1e-12);
+        // Confident but disagreeing samples: epistemic > 0, aleatoric ~ 0.
+        let probs2 = [1.0, 0.0, 0.0, 1.0];
+        let (t2, a2, e2) = uncertainty_decomposition(&probs2, 2, 2);
+        assert!(a2 < 1e-9);
+        assert!((t2 - (2f64).ln()).abs() < 1e-9);
+        assert!(e2 > 0.6);
+    }
+}

@@ -1,0 +1,138 @@
+//! AdamW with global-norm gradient clipping — the paper's training recipe
+//! (1000 epochs, batch 64, clip 3.0, weight decay 1e-4; Sec. V) and an
+//! exact mirror of `model.py::train_step`.
+
+use super::Params;
+
+/// Hyperparameters; defaults mirror `model.py`.
+#[derive(Debug, Clone, Copy)]
+pub struct AdamHp {
+    pub lr: f32,
+    pub beta1: f32,
+    pub beta2: f32,
+    pub eps: f32,
+    pub weight_decay: f32,
+    pub grad_clip: f32,
+}
+
+impl Default for AdamHp {
+    fn default() -> Self {
+        Self {
+            lr: 1e-3,
+            beta1: 0.9,
+            beta2: 0.999,
+            eps: 1e-8,
+            weight_decay: 1e-4,
+            grad_clip: 3.0,
+        }
+    }
+}
+
+/// Optimizer state (first/second moments + step count).
+#[derive(Debug, Clone)]
+pub struct AdamState {
+    pub m: Params,
+    pub v: Params,
+    pub step: u32,
+}
+
+impl AdamState {
+    pub fn new(params: &Params) -> Self {
+        Self { m: params.zeros_like(), v: params.zeros_like(), step: 0 }
+    }
+
+    /// One AdamW update in place. `grads` must match `params` shapes.
+    pub fn update(&mut self, hp: &AdamHp, params: &mut Params, grads: &Params) {
+        // Global-norm clip.
+        let gnorm = grads.global_norm();
+        let scale = if gnorm > hp.grad_clip {
+            hp.grad_clip / (gnorm + 1e-12)
+        } else {
+            1.0
+        };
+        self.step += 1;
+        let bc1 = 1.0 - hp.beta1.powi(self.step as i32);
+        let bc2 = 1.0 - hp.beta2.powi(self.step as i32);
+        for ((p, g), (m, v)) in params
+            .tensors
+            .iter_mut()
+            .zip(&grads.tensors)
+            .zip(self.m.tensors.iter_mut().zip(self.v.tensors.iter_mut()))
+        {
+            for i in 0..p.data.len() {
+                let gi = g.data[i] * scale;
+                m.data[i] = hp.beta1 * m.data[i] + (1.0 - hp.beta1) * gi;
+                v.data[i] = hp.beta2 * v.data[i] + (1.0 - hp.beta2) * gi * gi;
+                let upd =
+                    (m.data[i] / bc1) / ((v.data[i] / bc2).sqrt() + hp.eps);
+                p.data[i] -= hp.lr * (upd + hp.weight_decay * p.data[i]);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, Task};
+    use crate::rng::Rng;
+    use crate::tensor::Tensor;
+
+    fn tiny_params() -> Params {
+        let cfg = ArchConfig::new(Task::Classify, 4, 1, "N");
+        Params::init(&cfg, &mut Rng::new(0))
+    }
+
+    #[test]
+    fn zero_lr_keeps_params() {
+        let mut p = tiny_params();
+        let orig = p.clone();
+        let grads = Params {
+            tensors: p.tensors.iter().map(|t| Tensor::ones(&t.shape)).collect(),
+        };
+        let mut st = AdamState::new(&p);
+        st.update(&AdamHp { lr: 0.0, ..Default::default() }, &mut p, &grads);
+        for (a, b) in p.tensors.iter().zip(&orig.tensors) {
+            assert_eq!(a.data, b.data);
+        }
+        assert_eq!(st.step, 1);
+    }
+
+    #[test]
+    fn descends_a_quadratic() {
+        // Minimise f(w) = 0.5 * w^2 elementwise: grad = w.
+        let mut p = Params { tensors: vec![Tensor::filled(&[4], 2.0)] };
+        let mut st = AdamState::new(&p);
+        let hp = AdamHp { lr: 0.05, weight_decay: 0.0, ..Default::default() };
+        for _ in 0..200 {
+            let grads = Params { tensors: vec![p.tensors[0].clone()] };
+            st.update(&hp, &mut p, &grads);
+        }
+        assert!(p.tensors[0].data.iter().all(|v| v.abs() < 0.1));
+    }
+
+    #[test]
+    fn clip_engages_on_huge_grads() {
+        let mut p = Params { tensors: vec![Tensor::zeros(&[2])] };
+        let grads = Params {
+            tensors: vec![Tensor::new(vec![2], vec![3000.0, 4000.0])],
+        };
+        let mut st = AdamState::new(&p);
+        let hp = AdamHp { lr: 1.0, weight_decay: 0.0, ..Default::default() };
+        st.update(&hp, &mut p, &grads);
+        // After clipping to norm 3, first-step Adam update is bounded ~lr.
+        assert!(p.tensors[0].data.iter().all(|v| v.abs() <= 1.001));
+        // Direction preserved: both negative updates.
+        assert!(p.tensors[0].data.iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn weight_decay_shrinks_params() {
+        let mut p = Params { tensors: vec![Tensor::filled(&[3], 1.0)] };
+        let zeros = Params { tensors: vec![Tensor::zeros(&[3])] };
+        let mut st = AdamState::new(&p);
+        let hp = AdamHp { lr: 0.1, weight_decay: 0.5, ..Default::default() };
+        st.update(&hp, &mut p, &zeros);
+        assert!(p.tensors[0].data.iter().all(|&v| v < 1.0 && v > 0.9));
+    }
+}

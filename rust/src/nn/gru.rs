@@ -1,0 +1,391 @@
+//! GRU cell support — the paper notes (Sec. III-A) that "a similar design
+//! logic ... can be used for other recurrent units such as the gated
+//! recurrent unit", and lists custom recurrent cells as future work. This
+//! module provides the float GRU layer (forward + BPTT) with the same
+//! per-gate MC-dropout decoupling as the LSTM; `fpga::gru` provides the
+//! fixed-point engine; the ablation bench compares the two cells.
+//!
+//! Gate order along the leading axis of wx/wh/b: (r, z, n) — reset,
+//! update, candidate. Shapes: wx `[3, I, H]`, wh `[3, H, H]`, b `[3, H]`,
+//! masks zx `[n, 3, I]`, zh `[n, 3, H]`.
+//!
+//! n_t = tanh( (x*zx_n) Wx_n + r_t * ((h*zh_n) Wh_n) + b_n )
+//! h_t = (1 - z_t) * n_t + z_t * h_{t-1}
+
+use crate::tensor::Tensor;
+
+pub const GRU_GATES: usize = 3;
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+pub struct GruLayer<'a> {
+    pub wx: &'a Tensor,
+    pub wh: &'a Tensor,
+    pub b: &'a Tensor,
+}
+
+/// Forward cache for BPTT.
+pub struct GruCache {
+    pub n: usize,
+    pub t: usize,
+    pub idim: usize,
+    pub hdim: usize,
+    /// Post-activation r, z, n per step: `[t][n][3][h]`.
+    pub gates: Vec<f32>,
+    /// Pre-masked hidden-path candidate term `(h*zh_n) Wh_n + b_hn`
+    /// per step `[t][n][h]` (needed for dr in backward).
+    pub hn_term: Vec<f32>,
+    pub hs: Vec<f32>,
+    pub xs: Vec<f32>,
+}
+
+impl GruCache {
+    pub fn h_at(&self, t: usize) -> &[f32] {
+        &self.hs[t * self.n * self.hdim..(t + 1) * self.n * self.hdim]
+    }
+
+    pub fn last_h(&self) -> &[f32] {
+        self.h_at(self.t - 1)
+    }
+
+    pub fn hs_ntk(&self) -> Vec<f32> {
+        let (n, t, h) = (self.n, self.t, self.hdim);
+        let mut out = vec![0f32; n * t * h];
+        for ti in 0..t {
+            for ni in 0..n {
+                let src = &self.hs[(ti * n + ni) * h..(ti * n + ni + 1) * h];
+                out[(ni * t + ti) * h..(ni * t + ti + 1) * h]
+                    .copy_from_slice(src);
+            }
+        }
+        out
+    }
+}
+
+/// Forward over a sequence; xs `[n][t][i]`, masks zx `[n][3][i]`,
+/// zh `[n][3][h]`, reused across timesteps.
+pub fn forward(
+    layer: &GruLayer,
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    zx: &Tensor,
+    zh: &Tensor,
+) -> GruCache {
+    let idim = layer.wx.shape[1];
+    let hdim = layer.wx.shape[2];
+    let mut gates = vec![0f32; t * n * GRU_GATES * hdim];
+    let mut hn_term = vec![0f32; t * n * hdim];
+    let mut hs = vec![0f32; t * n * hdim];
+    let mut h_prev = vec![0f32; n * hdim];
+    let mut pre = vec![0f32; GRU_GATES * hdim];
+
+    for ti in 0..t {
+        for ni in 0..n {
+            let x_t = &xs[(ni * t + ti) * idim..(ni * t + ti + 1) * idim];
+            let hp = &h_prev[ni * hdim..(ni + 1) * hdim];
+            // pre[g] = (x*zx_g) Wx_g + b_g  and separately h-path terms.
+            for g in 0..GRU_GATES {
+                let bg = &layer.b.data[g * hdim..(g + 1) * hdim];
+                let out = &mut pre[g * hdim..(g + 1) * hdim];
+                out.copy_from_slice(bg);
+                let zx_row = zx.slice3(ni, g);
+                let wxg =
+                    &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
+                for i in 0..idim {
+                    let xv = x_t[i] * zx_row[i];
+                    if xv != 0.0 {
+                        for k in 0..hdim {
+                            out[k] += xv * wxg[i * hdim + k];
+                        }
+                    }
+                }
+            }
+            // h-path: r and z add directly; n's h-term is kept separate.
+            let mut hterm = vec![0f32; GRU_GATES * hdim];
+            for g in 0..GRU_GATES {
+                let zh_row = zh.slice3(ni, g);
+                let whg =
+                    &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
+                let out = &mut hterm[g * hdim..(g + 1) * hdim];
+                for j in 0..hdim {
+                    let hv = hp[j] * zh_row[j];
+                    if hv != 0.0 {
+                        for k in 0..hdim {
+                            out[k] += hv * whg[j * hdim + k];
+                        }
+                    }
+                }
+            }
+            let gb = ((ti * n) + ni) * GRU_GATES * hdim;
+            for k in 0..hdim {
+                let r = sigmoid(pre[k] + hterm[k]);
+                let z = sigmoid(pre[hdim + k] + hterm[hdim + k]);
+                let hn = hterm[2 * hdim + k];
+                let nv = (pre[2 * hdim + k] + r * hn).tanh();
+                gates[gb + k] = r;
+                gates[gb + hdim + k] = z;
+                gates[gb + 2 * hdim + k] = nv;
+                hn_term[(ti * n + ni) * hdim + k] = hn;
+                hs[(ti * n + ni) * hdim + k] =
+                    (1.0 - z) * nv + z * hp[k];
+            }
+        }
+        let base = ti * n * hdim;
+        h_prev.copy_from_slice(&hs[base..base + n * hdim]);
+    }
+    GruCache { n, t, idim, hdim, gates, hn_term, hs, xs: xs.to_vec() }
+}
+
+pub struct GruGrads {
+    pub dwx: Tensor,
+    pub dwh: Tensor,
+    pub db: Tensor,
+    pub dx: Vec<f32>,
+}
+
+/// BPTT. `dhs` grad wrt the hidden sequence `[n][t][h]`; `dh_last` extra
+/// grad at the final state.
+pub fn backward(
+    layer: &GruLayer,
+    cache: &GruCache,
+    zx: &Tensor,
+    zh: &Tensor,
+    dhs: Option<&[f32]>,
+    dh_last: Option<&[f32]>,
+) -> GruGrads {
+    let (n, t, idim, hdim) = (cache.n, cache.t, cache.idim, cache.hdim);
+    let mut dwx = Tensor::zeros(&[GRU_GATES, idim, hdim]);
+    let mut dwh = Tensor::zeros(&[GRU_GATES, hdim, hdim]);
+    let mut db = Tensor::zeros(&[GRU_GATES, hdim]);
+    let mut dx = vec![0f32; n * t * idim];
+    let mut dh = vec![0f32; n * hdim];
+    if let Some(dl) = dh_last {
+        dh.copy_from_slice(dl);
+    }
+    let mut dpre = vec![0f32; GRU_GATES * hdim]; // d wrt x-path pre terms
+    let mut dhterm = vec![0f32; GRU_GATES * hdim]; // d wrt h-path terms
+
+    for ti in (0..t).rev() {
+        if let Some(ds) = dhs {
+            for ni in 0..n {
+                for k in 0..hdim {
+                    dh[ni * hdim + k] += ds[(ni * t + ti) * hdim + k];
+                }
+            }
+        }
+        for ni in 0..n {
+            let gb = ((ti * n) + ni) * GRU_GATES * hdim;
+            let x_t =
+                &cache.xs[(ni * t + ti) * idim..(ni * t + ti + 1) * idim];
+            let mut dh_prev = vec![0f32; hdim];
+            for k in 0..hdim {
+                let r = cache.gates[gb + k];
+                let z = cache.gates[gb + hdim + k];
+                let nv = cache.gates[gb + 2 * hdim + k];
+                let hn = cache.hn_term[(ti * n + ni) * hdim + k];
+                let hp = if ti == 0 {
+                    0.0
+                } else {
+                    cache.h_at(ti - 1)[ni * hdim + k]
+                };
+                let dh_k = dh[ni * hdim + k];
+                // h = (1-z) n + z h_prev
+                let dz = dh_k * (hp - nv);
+                let dn = dh_k * (1.0 - z);
+                dh_prev[k] += dh_k * z;
+                let dn_pre = dn * (1.0 - nv * nv);
+                // n = tanh(xn + r*hn): dr = dn_pre*hn; d(hn) = dn_pre*r
+                let dr = dn_pre * hn;
+                dpre[2 * hdim + k] = dn_pre;
+                dhterm[2 * hdim + k] = dn_pre * r;
+                let dr_pre = dr * r * (1.0 - r);
+                let dz_pre = dz * z * (1.0 - z);
+                dpre[k] = dr_pre;
+                dpre[hdim + k] = dr_pre; // placeholder; fixed below
+                // r and z gates: pre = xterm + hterm, same derivative for
+                // both components.
+                dpre[k] = dr_pre;
+                dhterm[k] = dr_pre;
+                dpre[hdim + k] = dz_pre;
+                dhterm[hdim + k] = dz_pre;
+            }
+            // Accumulate weight grads + input/hidden grads.
+            for g in 0..GRU_GATES {
+                let zx_row = zx.slice3(ni, g);
+                let zh_row = zh.slice3(ni, g);
+                let dp = &dpre[g * hdim..(g + 1) * hdim];
+                let dht = &dhterm[g * hdim..(g + 1) * hdim];
+                let wxg =
+                    &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
+                let whg =
+                    &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
+                for k in 0..hdim {
+                    db.data[g * hdim + k] += dp[k];
+                }
+                for i in 0..idim {
+                    let xm = x_t[i] * zx_row[i];
+                    let mut dxi = 0.0;
+                    for k in 0..hdim {
+                        dwx.data[(g * idim + i) * hdim + k] += xm * dp[k];
+                        dxi += dp[k] * wxg[i * hdim + k];
+                    }
+                    dx[(ni * t + ti) * idim + i] += dxi * zx_row[i];
+                }
+                if ti > 0 {
+                    let h_prev = cache.h_at(ti - 1);
+                    for j in 0..hdim {
+                        let hm = h_prev[ni * hdim + j] * zh_row[j];
+                        let mut dhj = 0.0;
+                        for k in 0..hdim {
+                            dwh.data[(g * hdim + j) * hdim + k] +=
+                                hm * dht[k];
+                            dhj += dht[k] * whg[j * hdim + k];
+                        }
+                        dh_prev[j] += dhj * zh_row[j];
+                    }
+                }
+            }
+            dh[ni * hdim..(ni + 1) * hdim].copy_from_slice(&dh_prev);
+        }
+    }
+    GruGrads { dwx, dwh, db, dx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn setup(
+        n: usize,
+        t: usize,
+        idim: usize,
+        hdim: usize,
+        seed: u64,
+    ) -> (Tensor, Tensor, Tensor, Vec<f32>, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let mut rt = |shape: &[usize], s: f64| {
+            Tensor::from_fn(shape, |_| rng.normal_scaled(0.0, s) as f32)
+        };
+        let wx = rt(&[GRU_GATES, idim, hdim], 0.3);
+        let wh = rt(&[GRU_GATES, hdim, hdim], 0.3);
+        let b = rt(&[GRU_GATES, hdim], 0.1);
+        let mut rng2 = Rng::new(seed + 1);
+        let xs: Vec<f32> =
+            (0..n * t * idim).map(|_| rng2.normal() as f32).collect();
+        let zx = Tensor::from_fn(&[n, GRU_GATES, idim], |_| {
+            if rng2.bernoulli(0.125) { 0.0 } else { 1.0 }
+        });
+        let zh = Tensor::from_fn(&[n, GRU_GATES, hdim], |_| {
+            if rng2.bernoulli(0.125) { 0.0 } else { 1.0 }
+        });
+        (wx, wh, b, xs, zx, zh)
+    }
+
+    #[test]
+    fn forward_bounds_and_shapes() {
+        let (wx, wh, b, xs, zx, zh) = setup(2, 6, 3, 5, 1);
+        let layer = GruLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, 2, 6, &zx, &zh);
+        assert_eq!(cache.hs.len(), 6 * 2 * 5);
+        // GRU hidden state is a convex combination of tanh values: |h|<=1.
+        assert!(cache.hs.iter().all(|v| v.abs() <= 1.0 + 1e-6));
+    }
+
+    #[test]
+    fn gru_differs_from_initial_state() {
+        let (wx, wh, b, xs, zx, zh) = setup(1, 4, 2, 4, 3);
+        let layer = GruLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, 1, 4, &zx, &zh);
+        assert!(cache.last_h().iter().any(|&v| v.abs() > 1e-4));
+    }
+
+    #[test]
+    fn bptt_matches_finite_differences() {
+        let (n, t, idim, hdim) = (2, 4, 3, 4);
+        let (wx, wh, b, xs, zx, zh) = setup(n, t, idim, hdim, 7);
+        let objective =
+            |wx: &Tensor, wh: &Tensor, b: &Tensor, xs: &[f32]| -> f64 {
+                let layer = GruLayer { wx, wh, b };
+                let c = forward(&layer, xs, n, t, &zx, &zh);
+                c.hs.iter().map(|&v| v as f64).sum::<f64>()
+                    + 2.0 * c.last_h().iter().map(|&v| v as f64).sum::<f64>()
+            };
+        let layer = GruLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, n, t, &zx, &zh);
+        let dhs = vec![1f32; n * t * hdim];
+        let dlast = vec![2f32; n * hdim];
+        let grads =
+            backward(&layer, &cache, &zx, &zh, Some(&dhs), Some(&dlast));
+        let eps = 1e-3f32;
+        let check = |analytic: f64, numeric: f64, what: &str| {
+            let denom = analytic.abs().max(numeric.abs()).max(2e-3);
+            assert!(
+                ((analytic - numeric) / denom).abs() < 0.06,
+                "{what}: {analytic} vs {numeric}"
+            );
+        };
+        for &fi in &[0usize, 10, wx.len() - 1] {
+            let mut p = wx.clone();
+            p.data[fi] += eps;
+            let mut m = wx.clone();
+            m.data[fi] -= eps;
+            let num = (objective(&p, &wh, &b, &xs)
+                - objective(&m, &wh, &b, &xs))
+                / (2.0 * eps as f64);
+            check(grads.dwx.data[fi] as f64, num, "dwx");
+        }
+        for &fi in &[0usize, 17, wh.len() - 1] {
+            let mut p = wh.clone();
+            p.data[fi] += eps;
+            let mut m = wh.clone();
+            m.data[fi] -= eps;
+            let num = (objective(&wx, &p, &b, &xs)
+                - objective(&wx, &m, &b, &xs))
+                / (2.0 * eps as f64);
+            check(grads.dwh.data[fi] as f64, num, "dwh");
+        }
+        for &fi in &[0usize, hdim, b.len() - 1] {
+            let mut p = b.clone();
+            p.data[fi] += eps;
+            let mut m = b.clone();
+            m.data[fi] -= eps;
+            let num = (objective(&wx, &wh, &p, &xs)
+                - objective(&wx, &wh, &m, &xs))
+                / (2.0 * eps as f64);
+            check(grads.db.data[fi] as f64, num, "db");
+        }
+        for &fi in &[0usize, 9, xs.len() - 1] {
+            let mut p = xs.clone();
+            p[fi] += eps;
+            let mut m = xs.clone();
+            m[fi] -= eps;
+            let num = (objective(&wx, &wh, &b, &p)
+                - objective(&wx, &wh, &b, &m))
+                / (2.0 * eps as f64);
+            check(grads.dx[fi] as f64, num, "dx");
+        }
+    }
+
+    #[test]
+    fn masks_gate_gradients() {
+        let (n, t, idim, hdim) = (1, 3, 2, 3);
+        let (wx, wh, b, xs, _, zh) = setup(n, t, idim, hdim, 5);
+        let mut zx = Tensor::ones(&[n, GRU_GATES, idim]);
+        for g in 0..GRU_GATES {
+            zx.data[g * idim] = 0.0;
+        }
+        let layer = GruLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, n, t, &zx, &zh);
+        let dhs = vec![1f32; n * t * hdim];
+        let g = backward(&layer, &cache, &zx, &zh, Some(&dhs), None);
+        for ti in 0..t {
+            assert_eq!(g.dx[ti * idim], 0.0);
+            assert_ne!(g.dx[ti * idim + 1], 0.0);
+        }
+    }
+}

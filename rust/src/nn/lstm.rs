@@ -1,0 +1,430 @@
+//! One Bayesian LSTM layer: forward with activation cache + full BPTT
+//! backward. Semantics identical to `kernels/lstm.py` / `kernels/ref.py`:
+//! per-gate decoupled copies of x and h, each masked by its own MC-dropout
+//! mask (sampled once per sequence), gate order (i, f, g, o).
+
+use crate::config::GATES;
+use crate::tensor::Tensor;
+
+#[inline]
+fn sigmoid(x: f32) -> f32 {
+    1.0 / (1.0 + (-x).exp())
+}
+
+/// Borrowed view of one layer's parameters.
+pub struct LstmLayer<'a> {
+    /// `[4, I, H]`
+    pub wx: &'a Tensor,
+    /// `[4, H, H]`
+    pub wh: &'a Tensor,
+    /// `[4, H]`
+    pub b: &'a Tensor,
+}
+
+/// Activation cache produced by the forward pass and consumed by BPTT.
+/// All buffers are row-major with `n` rows.
+pub struct LstmCache {
+    pub n: usize,
+    pub t: usize,
+    pub idim: usize,
+    pub hdim: usize,
+    /// Post-activation gates `[t][n][4][h]`: i, f, g, o.
+    pub gates: Vec<f32>,
+    /// Cell states `[t][n][h]` (c_t after the step).
+    pub cs: Vec<f32>,
+    /// Hidden states `[t][n][h]` (h_t after the step).
+    pub hs: Vec<f32>,
+    /// The layer input `[n][t][i]` (borrowed copy for weight grads).
+    pub xs: Vec<f32>,
+}
+
+impl LstmCache {
+    #[inline]
+    pub fn h_at(&self, t: usize) -> &[f32] {
+        &self.hs[t * self.n * self.hdim..(t + 1) * self.n * self.hdim]
+    }
+
+    #[inline]
+    pub fn c_at(&self, t: usize) -> &[f32] {
+        &self.cs[t * self.n * self.hdim..(t + 1) * self.n * self.hdim]
+    }
+
+    /// Copy hidden states into `[n][t][h]` layout (the next layer's input).
+    pub fn hs_ntk(&self) -> Vec<f32> {
+        let (n, t, h) = (self.n, self.t, self.hdim);
+        let mut out = vec![0f32; n * t * h];
+        for ti in 0..t {
+            for ni in 0..n {
+                let src = &self.hs[(ti * n + ni) * h..(ti * n + ni + 1) * h];
+                out[(ni * t + ti) * h..(ni * t + ti + 1) * h]
+                    .copy_from_slice(src);
+            }
+        }
+        out
+    }
+
+    /// Final hidden state `[n][h]`.
+    pub fn last_h(&self) -> &[f32] {
+        self.h_at(self.t - 1)
+    }
+}
+
+/// Gradient accumulators for one layer.
+pub struct LstmGrads {
+    pub dwx: Tensor,
+    pub dwh: Tensor,
+    pub db: Tensor,
+    /// Gradient wrt the layer input, `[n][t][i]`.
+    pub dx: Vec<f32>,
+}
+
+/// Forward over a sequence. `xs` is `[n][t][i]` row-major; masks `zx`
+/// `[n][4][i]` and `zh` `[n][4][h]` are applied at every timestep.
+pub fn forward(
+    layer: &LstmLayer,
+    xs: &[f32],
+    n: usize,
+    t: usize,
+    zx: &Tensor,
+    zh: &Tensor,
+) -> LstmCache {
+    let idim = layer.wx.shape[1];
+    let hdim = layer.wx.shape[2];
+    debug_assert_eq!(xs.len(), n * t * idim);
+    debug_assert_eq!(zx.shape, vec![n, GATES, idim]);
+    debug_assert_eq!(zh.shape, vec![n, GATES, hdim]);
+
+    let mut gates = vec![0f32; t * n * GATES * hdim];
+    let mut cs = vec![0f32; t * n * hdim];
+    let mut hs = vec![0f32; t * n * hdim];
+    let mut h_prev = vec![0f32; n * hdim];
+    let mut c_prev = vec![0f32; n * hdim];
+    // Scratch: masked x and masked h for one (row, gate).
+    let mut xm = vec![0f32; idim];
+    let mut hm = vec![0f32; hdim];
+
+    for ti in 0..t {
+        for ni in 0..n {
+            let x_t = &xs[(ni * t + ti) * idim..(ni * t + ti + 1) * idim];
+            let hp = &h_prev[ni * hdim..(ni + 1) * hdim];
+            let cp = &c_prev[ni * hdim..(ni + 1) * hdim];
+            let gate_base = ((ti * n) + ni) * GATES * hdim;
+            for g in 0..GATES {
+                // DX masking of the decoupled copies.
+                let zx_row = zx.slice3(ni, g);
+                let zh_row = zh.slice3(ni, g);
+                for i in 0..idim {
+                    xm[i] = x_t[i] * zx_row[i];
+                }
+                for k in 0..hdim {
+                    hm[k] = hp[k] * zh_row[k];
+                }
+                // pre = xm @ wx[g] + hm @ wh[g] + b[g]
+                let wxg = &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
+                let whg = &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
+                let bg = &layer.b.data[g * hdim..(g + 1) * hdim];
+                let out = &mut gates[gate_base + g * hdim..gate_base + (g + 1) * hdim];
+                out.copy_from_slice(bg);
+                for i in 0..idim {
+                    let xv = xm[i];
+                    if xv != 0.0 {
+                        let wrow = &wxg[i * hdim..(i + 1) * hdim];
+                        for k in 0..hdim {
+                            out[k] += xv * wrow[k];
+                        }
+                    }
+                }
+                for j in 0..hdim {
+                    let hv = hm[j];
+                    if hv != 0.0 {
+                        let wrow = &whg[j * hdim..(j + 1) * hdim];
+                        for k in 0..hdim {
+                            out[k] += hv * wrow[k];
+                        }
+                    }
+                }
+            }
+            // Activations + tail.
+            let gb = gate_base;
+            for k in 0..hdim {
+                let i_g = sigmoid(gates[gb + k]);
+                let f_g = sigmoid(gates[gb + hdim + k]);
+                let g_g = gates[gb + 2 * hdim + k].tanh();
+                let o_g = sigmoid(gates[gb + 3 * hdim + k]);
+                gates[gb + k] = i_g;
+                gates[gb + hdim + k] = f_g;
+                gates[gb + 2 * hdim + k] = g_g;
+                gates[gb + 3 * hdim + k] = o_g;
+                let c_new = f_g * cp[k] + i_g * g_g;
+                cs[(ti * n + ni) * hdim + k] = c_new;
+                hs[(ti * n + ni) * hdim + k] = o_g * c_new.tanh();
+            }
+        }
+        let base = ti * n * hdim;
+        h_prev.copy_from_slice(&hs[base..base + n * hdim]);
+        c_prev.copy_from_slice(&cs[base..base + n * hdim]);
+    }
+
+    LstmCache { n, t, idim, hdim, gates, cs, hs, xs: xs.to_vec() }
+}
+
+/// BPTT backward. `dhs` is the gradient wrt the full hidden sequence in
+/// `[n][t][h]` layout (zeros where unused); `dh_last` optionally adds a
+/// gradient at the final hidden state only (classifier / encoder
+/// bottleneck path, `[n][h]`).
+pub fn backward(
+    layer: &LstmLayer,
+    cache: &LstmCache,
+    zx: &Tensor,
+    zh: &Tensor,
+    dhs: Option<&[f32]>,
+    dh_last: Option<&[f32]>,
+) -> LstmGrads {
+    let (n, t, idim, hdim) = (cache.n, cache.t, cache.idim, cache.hdim);
+    let mut dwx = Tensor::zeros(&[GATES, idim, hdim]);
+    let mut dwh = Tensor::zeros(&[GATES, hdim, hdim]);
+    let mut db = Tensor::zeros(&[GATES, hdim]);
+    let mut dx = vec![0f32; n * t * idim];
+
+    // Running gradients wrt h_t and c_t.
+    let mut dh = vec![0f32; n * hdim];
+    let mut dc = vec![0f32; n * hdim];
+    if let Some(dl) = dh_last {
+        debug_assert_eq!(dl.len(), n * hdim);
+        dh.copy_from_slice(dl);
+    }
+
+    let mut dpre = vec![0f32; GATES * hdim];
+
+    for ti in (0..t).rev() {
+        // Inject the sequence gradient at this step.
+        if let Some(ds) = dhs {
+            for ni in 0..n {
+                for k in 0..hdim {
+                    dh[ni * hdim + k] += ds[(ni * t + ti) * hdim + k];
+                }
+            }
+        }
+        let c_t = cache.c_at(ti);
+        for ni in 0..n {
+            let gb = ((ti * n) + ni) * GATES * hdim;
+            let (ig, fg, gg, og) = (
+                &cache.gates[gb..gb + hdim],
+                &cache.gates[gb + hdim..gb + 2 * hdim],
+                &cache.gates[gb + 2 * hdim..gb + 3 * hdim],
+                &cache.gates[gb + 3 * hdim..gb + 4 * hdim],
+            );
+            let dh_r = &mut dh[ni * hdim..(ni + 1) * hdim];
+            let dc_r = &mut dc[ni * hdim..(ni + 1) * hdim];
+            for k in 0..hdim {
+                let tanh_c = c_t[ni * hdim + k].tanh();
+                let do_ = dh_r[k] * tanh_c;
+                dc_r[k] += dh_r[k] * og[k] * (1.0 - tanh_c * tanh_c);
+                let c_prev = if ti == 0 {
+                    0.0
+                } else {
+                    cache.c_at(ti - 1)[ni * hdim + k]
+                };
+                let di = dc_r[k] * gg[k];
+                let df = dc_r[k] * c_prev;
+                let dg = dc_r[k] * ig[k];
+                dpre[k] = di * ig[k] * (1.0 - ig[k]);
+                dpre[hdim + k] = df * fg[k] * (1.0 - fg[k]);
+                dpre[2 * hdim + k] = dg * (1.0 - gg[k] * gg[k]);
+                dpre[3 * hdim + k] = do_ * og[k] * (1.0 - og[k]);
+                // dc flows to the previous step through the forget gate.
+                dc_r[k] *= fg[k];
+                dh_r[k] = 0.0; // rebuilt below from the gate paths
+            }
+            // Weight/bias/input/hidden gradients per gate.
+            let x_t = &cache.xs
+                [(ni * t + ti) * idim..(ni * t + ti + 1) * idim];
+            for g in 0..GATES {
+                let zx_row = zx.slice3(ni, g);
+                let zh_row = zh.slice3(ni, g);
+                let dp = &dpre[g * hdim..(g + 1) * hdim];
+                let wxg =
+                    &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
+                let whg =
+                    &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
+                // db
+                for k in 0..hdim {
+                    db.data[g * hdim + k] += dp[k];
+                }
+                // dwx += xm^T dpre; dx += (dpre @ wx^T) * zx
+                for i in 0..idim {
+                    let xm = x_t[i] * zx_row[i];
+                    let dwrow =
+                        &mut dwx.data[(g * idim + i) * hdim..(g * idim + i + 1) * hdim];
+                    let wrow = &wxg[i * hdim..(i + 1) * hdim];
+                    let mut dxi = 0.0;
+                    for k in 0..hdim {
+                        dwrow[k] += xm * dp[k];
+                        dxi += dp[k] * wrow[k];
+                    }
+                    dx[(ni * t + ti) * idim + i] += dxi * zx_row[i];
+                }
+                // dwh += hm^T dpre; dh_{t-1} += (dpre @ wh^T) * zh
+                if ti > 0 {
+                    let h_prev = cache.h_at(ti - 1);
+                    for j in 0..hdim {
+                        let hm = h_prev[ni * hdim + j] * zh_row[j];
+                        let dwrow = &mut dwh.data
+                            [(g * hdim + j) * hdim..(g * hdim + j + 1) * hdim];
+                        let wrow = &whg[j * hdim..(j + 1) * hdim];
+                        let mut dhj = 0.0;
+                        for k in 0..hdim {
+                            dwrow[k] += hm * dp[k];
+                            dhj += dp[k] * wrow[k];
+                        }
+                        dh[ni * hdim + j] += dhj * zh_row[j];
+                    }
+                }
+                // ti == 0: h_{-1} = 0 so no dwh/dh contribution.
+            }
+        }
+    }
+
+    LstmGrads { dwx, dwh, db, dx }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn rand_tensor(rng: &mut Rng, shape: &[usize], scale: f64) -> Tensor {
+        Tensor::from_fn(shape, |_| rng.normal_scaled(0.0, scale) as f32)
+    }
+
+    fn setup(
+        n: usize,
+        t: usize,
+        idim: usize,
+        hdim: usize,
+        seed: u64,
+    ) -> (Tensor, Tensor, Tensor, Vec<f32>, Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let xs: Vec<f32> = (0..n * t * idim)
+            .map(|_| rng.normal() as f32)
+            .collect();
+        let zx = Tensor::from_fn(&[n, GATES, idim], |_| {
+            if rng.bernoulli(0.125) { 0.0 } else { 1.0 }
+        });
+        let zh = Tensor::from_fn(&[n, GATES, hdim], |_| {
+            if rng.bernoulli(0.125) { 0.0 } else { 1.0 }
+        });
+        (wx, wh, b, xs, zx, zh)
+    }
+
+    #[test]
+    fn forward_shapes_and_bounds() {
+        let (wx, wh, b, xs, zx, zh) = setup(3, 5, 2, 4, 1);
+        let layer = LstmLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, 3, 5, &zx, &zh);
+        assert_eq!(cache.hs.len(), 5 * 3 * 4);
+        assert!(cache.hs.iter().all(|v| v.abs() <= 1.0));
+        let ntk = cache.hs_ntk();
+        assert_eq!(ntk.len(), 3 * 5 * 4);
+        // Spot-check the transpose.
+        assert_eq!(ntk[(0 * 5 + 4) * 4], cache.last_h()[0]);
+    }
+
+    /// Finite-difference check of every gradient buffer.
+    #[test]
+    fn bptt_matches_finite_differences() {
+        let (n, t, idim, hdim) = (2, 4, 3, 4);
+        let (wx, wh, b, xs, zx, zh) = setup(n, t, idim, hdim, 7);
+
+        // Scalar objective: sum of all hidden states + 2 * sum(last h).
+        let objective = |wx: &Tensor, wh: &Tensor, b: &Tensor, xs: &[f32]| -> f64 {
+            let layer = LstmLayer { wx, wh, b };
+            let cache = forward(&layer, xs, n, t, &zx, &zh);
+            cache.hs.iter().map(|&v| v as f64).sum::<f64>()
+                + 2.0 * cache.last_h().iter().map(|&v| v as f64).sum::<f64>()
+        };
+
+        let layer = LstmLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, n, t, &zx, &zh);
+        let dhs = vec![1f32; n * t * hdim];
+        let dh_last = vec![2f32; n * hdim];
+        let grads =
+            backward(&layer, &cache, &zx, &zh, Some(&dhs), Some(&dh_last));
+
+        let eps = 1e-3f32;
+        let check = |analytic: f64, numeric: f64, what: &str| {
+            let denom = analytic.abs().max(numeric.abs()).max(1e-4);
+            assert!(
+                ((analytic - numeric) / denom).abs() < 0.05,
+                "{what}: analytic {analytic} vs numeric {numeric}"
+            );
+        };
+
+        // dwx (sample a few entries)
+        for &flat in &[0usize, 5, 17, wx.len() - 1] {
+            let mut wp = wx.clone();
+            wp.data[flat] += eps;
+            let mut wm = wx.clone();
+            wm.data[flat] -= eps;
+            let numeric = (objective(&wp, &wh, &b, &xs)
+                - objective(&wm, &wh, &b, &xs))
+                / (2.0 * eps as f64);
+            check(grads.dwx.data[flat] as f64, numeric, "dwx");
+        }
+        // dwh
+        for &flat in &[0usize, 9, wh.len() - 1] {
+            let mut wp = wh.clone();
+            wp.data[flat] += eps;
+            let mut wm = wh.clone();
+            wm.data[flat] -= eps;
+            let numeric = (objective(&wx, &wp, &b, &xs)
+                - objective(&wx, &wm, &b, &xs))
+                / (2.0 * eps as f64);
+            check(grads.dwh.data[flat] as f64, numeric, "dwh");
+        }
+        // db
+        for &flat in &[0usize, hdim + 1, b.len() - 1] {
+            let mut bp = b.clone();
+            bp.data[flat] += eps;
+            let mut bm = b.clone();
+            bm.data[flat] -= eps;
+            let numeric = (objective(&wx, &wh, &bp, &xs)
+                - objective(&wx, &wh, &bm, &xs))
+                / (2.0 * eps as f64);
+            check(grads.db.data[flat] as f64, numeric, "db");
+        }
+        // dx
+        for &flat in &[0usize, 7, xs.len() - 1] {
+            let mut xp = xs.clone();
+            xp[flat] += eps;
+            let mut xm = xs.clone();
+            xm[flat] -= eps;
+            let numeric = (objective(&wx, &wh, &b, &xp)
+                - objective(&wx, &wh, &b, &xm))
+                / (2.0 * eps as f64);
+            check(grads.dx[flat] as f64, numeric, "dx");
+        }
+    }
+
+    #[test]
+    fn masked_input_has_zero_grad() {
+        // If zx[ni,g,i] == 0 for all gates, dx for that feature is 0.
+        let (n, t, idim, hdim) = (1, 3, 2, 3);
+        let (wx, wh, b, xs, _, zh) = setup(n, t, idim, hdim, 3);
+        let mut zx = Tensor::ones(&[n, GATES, idim]);
+        for g in 0..GATES {
+            zx.data[g * idim] = 0.0; // mask feature 0 in all gates
+        }
+        let layer = LstmLayer { wx: &wx, wh: &wh, b: &b };
+        let cache = forward(&layer, &xs, n, t, &zx, &zh);
+        let dhs = vec![1f32; n * t * hdim];
+        let grads = backward(&layer, &cache, &zx, &zh, Some(&dhs), None);
+        for ti in 0..t {
+            assert_eq!(grads.dx[ti * idim], 0.0, "masked feature grad");
+            assert_ne!(grads.dx[ti * idim + 1], 0.0, "kept feature grad");
+        }
+    }
+}

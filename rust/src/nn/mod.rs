@@ -1,0 +1,123 @@
+//! Native float32 reference engine: the paper's LSTM architectures with
+//! full forward + BPTT backward + AdamW, mirroring `python/compile/model.py`
+//! operation-for-operation.
+//!
+//! Why it exists (DESIGN.md §Inventory-8): the DSE framework benchmarks
+//! *dozens* of architecture points (Figs. 8/9); training each through a
+//! per-config AOT artifact would bloat `make artifacts`, so the sweep
+//! trains natively here. The engine is cross-validated against the PJRT
+//! train-step artifact in `rust/tests/` (same math, same ABI) and against
+//! finite differences in unit tests.
+
+pub mod adam;
+pub mod gru;
+pub mod lstm;
+pub mod model;
+
+pub use adam::{AdamState, AdamHp};
+pub use lstm::{LstmLayer, LstmCache, LstmGrads};
+pub use model::{Model, ModelGrads, Masks};
+
+use crate::config::{ArchConfig, GATES};
+use crate::rng::Rng;
+use crate::tensor::Tensor;
+
+/// Trainable parameters in ABI order (see `ArchConfig::param_shapes`).
+#[derive(Debug, Clone)]
+pub struct Params {
+    pub tensors: Vec<Tensor>,
+}
+
+impl Params {
+    /// Glorot-uniform init with forget-gate bias 1.0 — mirrors
+    /// `model.py::init_params`.
+    pub fn init(cfg: &ArchConfig, rng: &mut Rng) -> Self {
+        let mut tensors = Vec::new();
+        for (idim, hdim) in cfg.lstm_dims() {
+            let sx = (6.0 / (idim + hdim) as f64).sqrt();
+            let sh = (6.0 / (2 * hdim) as f64).sqrt();
+            tensors.push(Tensor::from_fn(&[GATES, idim, hdim], |_| {
+                rng.uniform_in(-sx, sx) as f32
+            }));
+            tensors.push(Tensor::from_fn(&[GATES, hdim, hdim], |_| {
+                rng.uniform_in(-sh, sh) as f32
+            }));
+            let mut b = Tensor::zeros(&[GATES, hdim]);
+            for j in 0..hdim {
+                b.data[hdim + j] = 1.0; // forget gate (index 1)
+            }
+            tensors.push(b);
+        }
+        let (f, o) = cfg.dense_dims();
+        let sd = (6.0 / (f + o) as f64).sqrt();
+        tensors.push(Tensor::from_fn(&[f, o], |_| {
+            rng.uniform_in(-sd, sd) as f32
+        }));
+        tensors.push(Tensor::zeros(&[o]));
+        Self { tensors }
+    }
+
+    pub fn zeros_like(&self) -> Self {
+        Self {
+            tensors: self.tensors.iter().map(|t| Tensor::zeros(&t.shape)).collect(),
+        }
+    }
+
+    /// Parameter tensors of LSTM layer `l`: (wx, wh, b).
+    pub fn lstm(&self, l: usize) -> (&Tensor, &Tensor, &Tensor) {
+        (&self.tensors[3 * l], &self.tensors[3 * l + 1], &self.tensors[3 * l + 2])
+    }
+
+    pub fn dense(&self) -> (&Tensor, &Tensor) {
+        let n = self.tensors.len();
+        (&self.tensors[n - 2], &self.tensors[n - 1])
+    }
+
+    /// Global L2 norm across all tensors (for grad clipping).
+    pub fn global_norm(&self) -> f32 {
+        self.tensors
+            .iter()
+            .map(|t| t.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>())
+            .sum::<f64>()
+            .sqrt() as f32
+    }
+
+    pub fn num_scalars(&self) -> usize {
+        self.tensors.iter().map(|t| t.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Task;
+
+    #[test]
+    fn init_matches_abi_shapes() {
+        let cfg = ArchConfig::new(Task::Anomaly, 16, 2, "YNYN");
+        let p = Params::init(&cfg, &mut Rng::new(0));
+        let shapes: Vec<Vec<usize>> =
+            p.tensors.iter().map(|t| t.shape.clone()).collect();
+        assert_eq!(shapes, cfg.param_shapes());
+        assert_eq!(p.num_scalars(), cfg.num_weights());
+    }
+
+    #[test]
+    fn forget_bias_is_one() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        let p = Params::init(&cfg, &mut Rng::new(0));
+        let b = &p.tensors[2];
+        for j in 0..8 {
+            assert_eq!(b.at2(1, j), 1.0); // forget
+            assert_eq!(b.at2(0, j), 0.0); // input
+        }
+    }
+
+    #[test]
+    fn init_bounded_by_glorot() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 1, "N");
+        let p = Params::init(&cfg, &mut Rng::new(3));
+        let sx = (6.0f32 / (1.0 + 8.0)).sqrt();
+        assert!(p.tensors[0].data.iter().all(|v| v.abs() <= sx + 1e-6));
+    }
+}

@@ -1,0 +1,169 @@
+//! Deterministic host-side RNG (SplitMix64 core) used for parameter init,
+//! synthetic data generation and software-baseline mask sampling. The
+//! *hardware* random source is the LFSR sampler in [`crate::lfsr`]; this
+//! module plays the role of the "default pseudo-random number generators"
+//! of the paper's CPU/GPU baselines (Sec. V-C).
+
+/// SplitMix64: tiny, fast, full-period, good enough for simulation seeds
+/// and Gaussian noise. No external `rand` dependency on the hot path.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    state: u64,
+    /// Cached second Box-Muller deviate.
+    spare: Option<f64>,
+}
+
+impl Rng {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed.wrapping_add(0x9E3779B97F4A7C15), spare: None }
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn uniform(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform in [lo, hi).
+    #[inline]
+    pub fn uniform_in(&mut self, lo: f64, hi: f64) -> f64 {
+        lo + (hi - lo) * self.uniform()
+    }
+
+    /// Standard normal via Box-Muller (cached pair).
+    pub fn normal(&mut self) -> f64 {
+        if let Some(s) = self.spare.take() {
+            return s;
+        }
+        // Avoid log(0).
+        let u1 = loop {
+            let u = self.uniform();
+            if u > 1e-300 {
+                break u;
+            }
+        };
+        let u2 = self.uniform();
+        let r = (-2.0 * u1.ln()).sqrt();
+        let theta = 2.0 * std::f64::consts::PI * u2;
+        self.spare = Some(r * theta.sin());
+        r * theta.cos()
+    }
+
+    #[inline]
+    pub fn normal_scaled(&mut self, mean: f64, std: f64) -> f64 {
+        mean + std * self.normal()
+    }
+
+    /// Integer in [0, n).
+    #[inline]
+    pub fn below(&mut self, n: usize) -> usize {
+        (self.uniform() * n as f64) as usize % n
+    }
+
+    /// Bernoulli(p) -> true with probability p.
+    #[inline]
+    pub fn bernoulli(&mut self, p: f64) -> bool {
+        self.uniform() < p
+    }
+
+    /// Sample an index from a discrete distribution (probs sum to ~1).
+    pub fn categorical(&mut self, probs: &[f64]) -> usize {
+        let u = self.uniform();
+        let mut acc = 0.0;
+        for (i, &p) in probs.iter().enumerate() {
+            acc += p;
+            if u < acc {
+                return i;
+            }
+        }
+        probs.len() - 1
+    }
+
+    /// Derive an independent stream (for per-worker seeding).
+    pub fn fork(&mut self) -> Rng {
+        Rng::new(self.next_u64())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn uniform_range_and_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let u = r.uniform();
+            assert!((0.0..1.0).contains(&u));
+            sum += u;
+        }
+        let mean = sum / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "mean={mean}");
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(7);
+        let n = 50_000;
+        let (mut s, mut s2) = (0.0, 0.0);
+        for _ in 0..n {
+            let x = r.normal();
+            s += x;
+            s2 += x * x;
+        }
+        let mean = s / n as f64;
+        let var = s2 / n as f64 - mean * mean;
+        assert!(mean.abs() < 0.02, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.05, "var={var}");
+    }
+
+    #[test]
+    fn bernoulli_rate() {
+        let mut r = Rng::new(3);
+        let hits = (0..40_000).filter(|_| r.bernoulli(0.125)).count();
+        let rate = hits as f64 / 40_000.0;
+        assert!((rate - 0.125).abs() < 0.01, "rate={rate}");
+    }
+
+    #[test]
+    fn categorical_respects_probs() {
+        let mut r = Rng::new(9);
+        let probs = [0.584, 0.310, 0.070, 0.036];
+        let mut counts = [0usize; 4];
+        for _ in 0..50_000 {
+            counts[r.categorical(&probs)] += 1;
+        }
+        for (c, p) in counts.iter().zip(probs.iter()) {
+            let rate = *c as f64 / 50_000.0;
+            assert!((rate - p).abs() < 0.02, "rate={rate} p={p}");
+        }
+    }
+
+    #[test]
+    fn fork_streams_differ() {
+        let mut r = Rng::new(5);
+        let mut f1 = r.fork();
+        let mut f2 = r.fork();
+        assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+}

@@ -1,0 +1,207 @@
+//! The artifact manifest: `artifacts/manifest.json`, written by aot.py.
+//! Describes every lowered HLO artifact — its architecture point, kind
+//! (forward / train step), row count, and the exact positional tensor ABI
+//! (names, shapes, dtypes of arguments and outputs).
+
+use std::path::{Path, PathBuf};
+
+use crate::config::{ArchConfig, Task};
+use crate::jsonio::{self, Json};
+
+/// One tensor slot in the positional ABI.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArgMeta {
+    pub name: String,
+    pub shape: Vec<usize>,
+    /// "f32" or "i32".
+    pub dtype: String,
+}
+
+impl ArgMeta {
+    fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let shape = j
+            .req_arr("shape")?
+            .iter()
+            .map(|d| {
+                d.as_usize()
+                    .ok_or_else(|| anyhow::anyhow!("bad shape element"))
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+        Ok(Self {
+            name: j.req_str("name")?.to_string(),
+            shape,
+            dtype: j.req_str("dtype")?.to_string(),
+        })
+    }
+
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// One AOT artifact.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    /// "forward" | "train".
+    pub kind: String,
+    pub task: Task,
+    pub hidden: usize,
+    pub nl: usize,
+    pub bayes: String,
+    /// Batch rows N (forward) or train batch B.
+    pub rows: usize,
+    pub seq_len: usize,
+    pub input_dim: usize,
+    pub num_classes: usize,
+    pub args: Vec<ArgMeta>,
+    pub outputs: Vec<ArgMeta>,
+}
+
+impl ArtifactMeta {
+    pub fn arch(&self) -> ArchConfig {
+        let mut cfg =
+            ArchConfig::new(self.task, self.hidden, self.nl, &self.bayes);
+        cfg.seq_len = self.seq_len;
+        cfg.input_dim = self.input_dim;
+        cfg.num_classes = self.num_classes;
+        cfg
+    }
+}
+
+/// The whole manifest plus its directory (for resolving artifact files).
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> anyhow::Result<Self> {
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "cannot read {}/manifest.json (run `make artifacts`): {e}",
+                    dir.display()
+                )
+            })?;
+        let j = jsonio::parse(&text)?;
+        let mut artifacts = Vec::new();
+        for a in j.req_arr("artifacts")? {
+            let args = a
+                .req_arr("args")?
+                .iter()
+                .map(ArgMeta::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            let outputs = a
+                .req_arr("outputs")?
+                .iter()
+                .map(ArgMeta::from_json)
+                .collect::<anyhow::Result<Vec<_>>>()?;
+            artifacts.push(ArtifactMeta {
+                name: a.req_str("name")?.to_string(),
+                file: a.req_str("file")?.to_string(),
+                kind: a.req_str("kind")?.to_string(),
+                task: a
+                    .req_str("task")?
+                    .parse()
+                    .map_err(|s| anyhow::anyhow!("bad task: {s}"))?,
+                hidden: a.req_usize("hidden")?,
+                nl: a.req_usize("nl")?,
+                bayes: a.req_str("bayes")?.to_string(),
+                rows: a.req_usize("rows")?,
+                seq_len: a.req_usize("seq_len")?,
+                input_dim: a.req_usize("input_dim")?,
+                num_classes: a.req_usize("num_classes")?,
+                args,
+                outputs,
+            });
+        }
+        Ok(Self { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    /// Forward artifact for an architecture at a given row count.
+    pub fn forward_for(
+        &self,
+        arch_name: &str,
+        rows: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.find(&format!("{arch_name}.fwd_n{rows}"))
+    }
+
+    /// Train-step artifact for an architecture at a batch size.
+    pub fn train_for(
+        &self,
+        arch_name: &str,
+        batch: usize,
+    ) -> Option<&ArtifactMeta> {
+        self.find(&format!("{arch_name}.train_b{batch}"))
+    }
+
+    pub fn path_of(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_fixture(dir: &Path) {
+        std::fs::create_dir_all(dir).unwrap();
+        let doc = r#"{
+ "version": 1,
+ "artifacts": [
+  {"name": "classify_h8_nl1_N.fwd_n30", "file": "f.hlo.txt",
+   "kind": "forward", "task": "classify", "hidden": 8, "nl": 1,
+   "bayes": "N", "rows": 30, "seq_len": 140, "input_dim": 1,
+   "num_classes": 4,
+   "args": [{"name": "lstm0.wx", "shape": [4,1,8], "dtype": "f32"},
+            {"name": "xs", "shape": [30,140,1], "dtype": "f32"}],
+   "outputs": [{"name": "probs", "shape": [30,4], "dtype": "f32"}]}
+ ]}"#;
+        std::fs::write(dir.join("manifest.json"), doc).unwrap();
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("manifest_test");
+        write_fixture(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.forward_for("classify_h8_nl1_N", 30).unwrap();
+        assert_eq!(a.kind, "forward");
+        assert_eq!(a.args[1].shape, vec![30, 140, 1]);
+        assert_eq!(a.args[1].elements(), 30 * 140);
+        assert_eq!(a.outputs[0].name, "probs");
+        assert!(m.forward_for("classify_h8_nl1_N", 7).is_none());
+        assert!(m.train_for("classify_h8_nl1_N", 64).is_none());
+        assert_eq!(m.path_of(a), dir.join("f.hlo.txt"));
+        let arch = a.arch();
+        assert_eq!(arch.name(), "classify_h8_nl1_N");
+    }
+
+    #[test]
+    fn missing_manifest_is_friendly() {
+        let err = Manifest::load(Path::new("/nonexistent/dir")).unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        // When `make artifacts` has run, the real manifest must load and
+        // contain the paper's named architectures.
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.forward_for("anomaly_h16_nl2_YNYN", 30).is_some());
+        assert!(m.train_for("classify_h8_nl3_YNY", 64).is_some());
+    }
+}

@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the request path.
+//!
+//! This is the only place the crate touches XLA. Interchange is HLO
+//! *text* — `HloModuleProto::from_text_file` reassigns instruction ids,
+//! side-stepping the 64-bit-id protos that xla_extension 0.5.1 rejects
+//! (see aot.py and /opt/xla-example/README.md).
+
+pub mod manifest;
+pub mod pjrt;
+
+pub use manifest::{ArgMeta, ArtifactMeta, Manifest};
+pub use pjrt::{Executable, HostValue, Runtime};

@@ -1,0 +1,149 @@
+//! PJRT execution: compile HLO-text artifacts once, execute many times.
+//!
+//! `Runtime` owns the CPU PJRT client and an executable cache keyed by
+//! artifact name; `Executable` wraps one compiled module plus its ABI
+//! metadata and marshals host tensors <-> XLA literals.
+
+use std::collections::HashMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactMeta, Manifest};
+use crate::tensor::Tensor;
+
+/// A host-side argument value: f32 tensor or i32 tensor (labels).
+#[derive(Debug, Clone)]
+pub enum HostValue {
+    F32(Tensor),
+    I32(Vec<i32>, Vec<usize>),
+}
+
+impl HostValue {
+    pub fn scalar(v: f32) -> Self {
+        HostValue::F32(Tensor::scalar(v))
+    }
+
+    fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            HostValue::F32(t) => {
+                let lit = xla::Literal::vec1(&t.data);
+                let dims: Vec<i64> =
+                    t.shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+            HostValue::I32(data, shape) => {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> =
+                    shape.iter().map(|&d| d as i64).collect();
+                Ok(lit.reshape(&dims)?)
+            }
+        }
+    }
+}
+
+/// One compiled artifact.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with positional arguments following `meta.args`. Returns
+    /// the output tensors in `meta.outputs` order.
+    pub fn run(&self, args: &[HostValue]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            args.len() == self.meta.args.len(),
+            "artifact {} expects {} args, got {}",
+            self.meta.name,
+            self.meta.args.len(),
+            args.len()
+        );
+        // Shape-check against the ABI before handing to XLA.
+        for (v, m) in args.iter().zip(&self.meta.args) {
+            let shape = match v {
+                HostValue::F32(t) => &t.shape,
+                HostValue::I32(_, s) => s,
+            };
+            anyhow::ensure!(
+                shape == &m.shape,
+                "arg {:?}: shape {:?} != ABI {:?}",
+                m.name,
+                shape,
+                m.shape
+            );
+        }
+        let literals: Vec<xla::Literal> = args
+            .iter()
+            .map(HostValue::to_literal)
+            .collect::<Result<_>>()?;
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let parts = result.to_tuple()?;
+        anyhow::ensure!(
+            parts.len() == self.meta.outputs.len(),
+            "artifact {} returned {} outputs, ABI says {}",
+            self.meta.name,
+            parts.len(),
+            self.meta.outputs.len()
+        );
+        parts
+            .into_iter()
+            .zip(&self.meta.outputs)
+            .map(|(lit, om)| {
+                let data = lit.to_vec::<f32>().with_context(|| {
+                    format!("output {:?} not f32", om.name)
+                })?;
+                Ok(Tensor::new(om.shape.clone(), data))
+            })
+            .collect()
+    }
+}
+
+/// The PJRT client + executable cache.
+pub struct Runtime {
+    pub manifest: Manifest,
+    client: xla::PjRtClient,
+    cache: HashMap<String, Executable>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { manifest, client, cache: HashMap::new() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    pub fn load(&mut self, name: &str) -> Result<&Executable> {
+        if !self.cache.contains_key(name) {
+            let meta = self
+                .manifest
+                .find(name)
+                .with_context(|| format!("artifact {name:?} not in manifest"))?
+                .clone();
+            let path = self.manifest.path_of(&meta);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| {
+                    anyhow::anyhow!("parsing {}: {e}", path.display())
+                })?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self.client.compile(&comp)?;
+            self.cache.insert(name.to_string(), Executable { meta, exe });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Number of compiled executables held.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+// No unit tests here: PJRT needs the artifacts on disk, so coverage lives
+// in rust/tests/pjrt_integration.rs (and the examples).

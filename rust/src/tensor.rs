@@ -1,0 +1,252 @@
+//! Minimal dense f32 tensor + binary serialisation shared across the crate
+//! (weights, datasets, lookup tables). Deliberately dependency-free: the
+//! paper's stack needs shapes up to rank 3 and contiguous row-major data,
+//! nothing more.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Self {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {:?} vs data len {}",
+            shape,
+            data.len()
+        );
+        Self { shape, data }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn ones(shape: &[usize]) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![1.0; n] }
+    }
+
+    pub fn filled(shape: &[usize], v: f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: vec![v; n] }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Self { shape: vec![], data: vec![v] }
+    }
+
+    pub fn from_fn(shape: &[usize], mut f: impl FnMut(usize) -> f32) -> Self {
+        let n = shape.iter().product();
+        Self { shape: shape.to_vec(), data: (0..n).map(&mut f).collect() }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Flat index of a rank-2 element.
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    /// Flat index of a rank-3 element.
+    #[inline]
+    pub fn at3(&self, i: usize, j: usize, k: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        self.data[(i * self.shape[1] + j) * self.shape[2] + k]
+    }
+
+    /// Contiguous row `i` of a rank-2 tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let w = self.shape[1];
+        &self.data[i * w..(i + 1) * w]
+    }
+
+    /// Contiguous slice `[i, j, :]` of a rank-3 tensor.
+    pub fn slice3(&self, i: usize, j: usize) -> &[f32] {
+        let (d1, d2) = (self.shape[1], self.shape[2]);
+        let off = (i * d1 + j) * d2;
+        &self.data[off..off + d2]
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Self {
+        assert_eq!(shape.iter().product::<usize>(), self.data.len());
+        self.shape = shape.to_vec();
+        self
+    }
+
+    /// Euclidean norm (used by grad-clip cross-checks in tests).
+    pub fn norm(&self) -> f32 {
+        self.data.iter().map(|x| x * x).sum::<f32>().sqrt()
+    }
+
+    pub fn mean(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().sum::<f32>() / self.data.len() as f32
+    }
+
+    /// Max |a - b| against another tensor of identical shape.
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        assert_eq!(self.shape, other.shape);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Binary container: `BRT1` magic, u32 count, then per tensor: u32 name-len,
+// name bytes, u32 rank, u64 dims, f32 LE data. Used for checkpoints and
+// dataset caches.
+// ---------------------------------------------------------------------------
+
+const MAGIC: &[u8; 4] = b"BRT1";
+
+pub fn save_tensors(
+    path: &Path,
+    tensors: &[(String, Tensor)],
+) -> std::io::Result<()> {
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    f.write_all(MAGIC)?;
+    f.write_all(&(tensors.len() as u32).to_le_bytes())?;
+    for (name, t) in tensors {
+        f.write_all(&(name.len() as u32).to_le_bytes())?;
+        f.write_all(name.as_bytes())?;
+        f.write_all(&(t.shape.len() as u32).to_le_bytes())?;
+        for &d in &t.shape {
+            f.write_all(&(d as u64).to_le_bytes())?;
+        }
+        for &v in &t.data {
+            f.write_all(&v.to_le_bytes())?;
+        }
+    }
+    Ok(())
+}
+
+pub fn load_tensors(path: &Path) -> std::io::Result<Vec<(String, Tensor)>> {
+    let mut f = std::io::BufReader::new(std::fs::File::open(path)?);
+    let mut magic = [0u8; 4];
+    f.read_exact(&mut magic)?;
+    if &magic != MAGIC {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            "bad magic: not a BRT1 tensor file",
+        ));
+    }
+    let count = read_u32(&mut f)? as usize;
+    let mut out = Vec::with_capacity(count);
+    for _ in 0..count {
+        let name_len = read_u32(&mut f)? as usize;
+        let mut name = vec![0u8; name_len];
+        f.read_exact(&mut name)?;
+        let rank = read_u32(&mut f)? as usize;
+        let mut shape = Vec::with_capacity(rank);
+        for _ in 0..rank {
+            let mut b = [0u8; 8];
+            f.read_exact(&mut b)?;
+            shape.push(u64::from_le_bytes(b) as usize);
+        }
+        let n: usize = shape.iter().product();
+        let mut data = vec![0f32; n];
+        let mut buf = vec![0u8; n * 4];
+        f.read_exact(&mut buf)?;
+        for (i, c) in buf.chunks_exact(4).enumerate() {
+            data[i] = f32::from_le_bytes([c[0], c[1], c[2], c[3]]);
+        }
+        out.push((
+            String::from_utf8(name).map_err(|e| {
+                std::io::Error::new(std::io::ErrorKind::InvalidData, e)
+            })?,
+            Tensor::new(shape, data),
+        ));
+    }
+    Ok(out)
+}
+
+fn read_u32(f: &mut impl Read) -> std::io::Result<u32> {
+    let mut b = [0u8; 4];
+    f.read_exact(&mut b)?;
+    Ok(u32::from_le_bytes(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_index() {
+        let t = Tensor::from_fn(&[2, 3], |i| i as f32);
+        assert_eq!(t.at2(1, 2), 5.0);
+        assert_eq!(t.row(1), &[3.0, 4.0, 5.0]);
+        let t3 = Tensor::from_fn(&[2, 3, 4], |i| i as f32);
+        assert_eq!(t3.at3(1, 2, 3), 23.0);
+        assert_eq!(t3.slice3(0, 1), &[4.0, 5.0, 6.0, 7.0]);
+    }
+
+    #[test]
+    #[should_panic]
+    fn shape_mismatch_panics() {
+        Tensor::new(vec![2, 2], vec![0.0; 3]);
+    }
+
+    #[test]
+    fn reshape_keeps_data() {
+        let t = Tensor::from_fn(&[6], |i| i as f32).reshape(&[2, 3]);
+        assert_eq!(t.at2(1, 0), 3.0);
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("brt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.brt");
+        let tensors = vec![
+            ("a".to_string(), Tensor::from_fn(&[3, 2], |i| i as f32 * 0.5)),
+            ("b.scalar".to_string(), Tensor::scalar(7.25)),
+            ("empty_rank1".to_string(), Tensor::zeros(&[4])),
+        ];
+        save_tensors(&path, &tensors).unwrap();
+        let loaded = load_tensors(&path).unwrap();
+        assert_eq!(loaded, tensors);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let dir = std::env::temp_dir().join("brt_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.brt");
+        std::fs::write(&path, b"NOPE....").unwrap();
+        assert!(load_tensors(&path).is_err());
+    }
+
+    #[test]
+    fn stats_helpers() {
+        let a = Tensor::new(vec![3], vec![3.0, 4.0, 0.0]);
+        assert!((a.norm() - 5.0).abs() < 1e-6);
+        let b = Tensor::new(vec![3], vec![3.0, 4.5, 0.0]);
+        assert!((a.max_abs_diff(&b) - 0.5).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,225 @@
+//! MC-dropout evaluation: the paper's metric battery for both tasks,
+//! generic over any predictor so the *same* evaluation code scores the
+//! float model, the fixed-point accelerator and the PJRT executable
+//! (Tables I/II compare exactly these).
+
+use crate::config::Task;
+#[cfg(test)]
+use crate::config::ArchConfig;
+use crate::data::Dataset;
+use crate::fpga::accel::{Accelerator, McOutput};
+use crate::metrics;
+use crate::nn::model::{Masks, Model};
+use crate::rng::Rng;
+
+/// Anything that can produce S MC samples for one beat.
+pub trait Predictor {
+    fn predict(&mut self, beat: &[f32], s: usize) -> McOutput;
+    fn task(&self) -> Task;
+}
+
+/// Float-engine predictor with software mask sampling.
+pub struct ModelPredictor<'a> {
+    pub model: &'a Model,
+    pub rng: Rng,
+}
+
+impl<'a> ModelPredictor<'a> {
+    pub fn new(model: &'a Model, seed: u64) -> Self {
+        Self { model, rng: Rng::new(seed) }
+    }
+}
+
+impl<'a> Predictor for ModelPredictor<'a> {
+    fn predict(&mut self, beat: &[f32], s: usize) -> McOutput {
+        let cfg = &self.model.cfg;
+        // Fold the S samples into the row dimension: replicate the beat,
+        // sample per-row masks (exactly what the AOT fwd artifact does).
+        let mut xs = Vec::with_capacity(s * beat.len());
+        for _ in 0..s {
+            xs.extend_from_slice(beat);
+        }
+        let masks = if cfg.is_bayesian() {
+            Masks::sample(cfg, s, &mut self.rng)
+        } else {
+            Masks::ones(cfg, s)
+        };
+        let out = self.model.forward(&xs, s, &masks);
+        let out_len = out.len() / s;
+        McOutput { samples: out, s, out_len }
+    }
+
+    fn task(&self) -> Task {
+        self.model.cfg.task
+    }
+}
+
+impl Predictor for Accelerator {
+    fn predict(&mut self, beat: &[f32], s: usize) -> McOutput {
+        Accelerator::predict(self, beat, s)
+    }
+
+    fn task(&self) -> Task {
+        self.cfg.task
+    }
+}
+
+/// Anomaly-detection evaluation (Sec. V-A1): score = RMSE of the MC-mean
+/// reconstruction; labels = beat is anomalous.
+#[derive(Debug, Clone)]
+pub struct AnomalyReport {
+    pub auc: f64,
+    pub ap: f64,
+    pub accuracy: f64,
+    pub mean_rmse_normal: f64,
+    pub mean_rmse_anomalous: f64,
+    /// (score, is_anomalous) pairs for ROC plotting (Fig. 8).
+    pub scores: Vec<(f64, bool)>,
+}
+
+pub fn eval_anomaly(
+    pred: &mut dyn Predictor,
+    test: &Dataset,
+    s: usize,
+) -> AnomalyReport {
+    assert_eq!(pred.task(), Task::Anomaly);
+    let mut scores = Vec::with_capacity(test.n);
+    let mut labels = Vec::with_capacity(test.n);
+    let (mut rn, mut cn, mut ra, mut ca) = (0.0, 0usize, 0.0, 0usize);
+    for i in 0..test.n {
+        let beat = test.beat(i);
+        let out = pred.predict(beat, s);
+        let mean = out.mean();
+        let rmse = metrics::rmse(&mean, beat);
+        let anom = test.label(i) != 0;
+        scores.push(rmse);
+        labels.push(anom);
+        if anom {
+            ra += rmse;
+            ca += 1;
+        } else {
+            rn += rmse;
+            cn += 1;
+        }
+    }
+    AnomalyReport {
+        auc: metrics::auc(&scores, &labels),
+        ap: metrics::average_precision(&scores, &labels),
+        accuracy: metrics::accuracy_at_optimal_cutoff(&scores, &labels),
+        mean_rmse_normal: rn / cn.max(1) as f64,
+        mean_rmse_anomalous: ra / ca.max(1) as f64,
+        scores: scores.into_iter().zip(labels).collect(),
+    }
+}
+
+/// Classification evaluation (Sec. V-A2): accuracy, macro AP, macro
+/// recall on the test set; predictive entropy on Gaussian noise.
+#[derive(Debug, Clone)]
+pub struct ClassifyReport {
+    pub accuracy: f64,
+    pub ap: f64,
+    pub ar: f64,
+    pub noise_entropy: f64,
+}
+
+pub fn eval_classify(
+    pred: &mut dyn Predictor,
+    test: &Dataset,
+    noise: &Dataset,
+    s: usize,
+) -> ClassifyReport {
+    assert_eq!(pred.task(), Task::Classify);
+    let k = 4;
+    let mut probs = Vec::with_capacity(test.n * k);
+    for i in 0..test.n {
+        let out = pred.predict(test.beat(i), s);
+        let mean: Vec<f64> = out.mean().iter().map(|&v| v as f64).collect();
+        probs.extend(mean);
+    }
+    let labels = &test.y;
+    let mut ent = 0.0;
+    for i in 0..noise.n {
+        let out = pred.predict(noise.beat(i), s);
+        let mean: Vec<f64> = out.mean().iter().map(|&v| v as f64).collect();
+        ent += metrics::entropy(&mean);
+    }
+    ClassifyReport {
+        accuracy: metrics::multiclass_accuracy(&probs, labels, k),
+        ap: metrics::macro_average_precision(&probs, labels, k),
+        ar: metrics::macro_recall(&probs, labels, k),
+        noise_entropy: ent / noise.n.max(1) as f64,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::train::native::{NativeTrainer, TrainOpts};
+
+    fn quick_opts() -> TrainOpts {
+        TrainOpts { epochs: 10, batch: 32, lr: 1e-2, seed: 0 }
+    }
+
+    #[test]
+    fn trained_autoencoder_separates_anomalies() {
+        let cfg = ArchConfig::new(Task::Anomaly, 16, 1, "NN");
+        let (train, test) = data::anomaly_splits(1);
+        let train_small =
+            train.subset(&(0..128.min(train.n)).collect::<Vec<_>>());
+        let mut t = NativeTrainer::new(cfg, quick_opts());
+        t.fit(&train_small);
+        let test_small = test.subset(&(0..160).collect::<Vec<_>>());
+        let mut p = ModelPredictor::new(&t.model, 9);
+        let rep = eval_anomaly(&mut p, &test_small, 1);
+        assert!(
+            rep.auc > 0.8,
+            "even a quick AE should separate: auc {}",
+            rep.auc
+        );
+        assert!(rep.mean_rmse_anomalous > rep.mean_rmse_normal);
+        assert_eq!(rep.scores.len(), 160);
+    }
+
+    #[test]
+    fn trained_classifier_beats_chance() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 1, "N");
+        let (train, test) = data::splits(2);
+        let mut t = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 20, batch: 32, lr: 1e-2, seed: 1 },
+        );
+        t.fit(&train);
+        let test_small = test.subset(&(0..200).collect::<Vec<_>>());
+        let noise = data::gaussian_noise(16, 0);
+        let mut p = ModelPredictor::new(&t.model, 5);
+        let rep = eval_classify(&mut p, &test_small, &noise, 1);
+        assert!(rep.accuracy > 0.6, "accuracy {}", rep.accuracy);
+        assert!(rep.ar > 0.3, "macro recall {}", rep.ar);
+        assert!(rep.noise_entropy >= 0.0);
+    }
+
+    #[test]
+    fn bayesian_uncertainty_higher_on_noise_than_beats() {
+        // The MCD signature the paper sells (Fig. 1): predictive entropy
+        // on garbage inputs exceeds entropy on in-distribution beats.
+        let cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        let (train, test) = data::splits(3);
+        let mut t = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 20, batch: 32, lr: 1e-2, seed: 2 },
+        );
+        t.fit(&train);
+        let mut p = ModelPredictor::new(&t.model, 11);
+        let beats = test.subset(&(0..60).collect::<Vec<_>>());
+        let noise = data::gaussian_noise(60, 1);
+        let rep_beats = eval_classify(&mut p, &beats, &beats, 10);
+        let rep_noise = eval_classify(&mut p, &beats, &noise, 10);
+        assert!(
+            rep_noise.noise_entropy > rep_beats.noise_entropy,
+            "noise {} vs beats {}",
+            rep_noise.noise_entropy,
+            rep_beats.noise_entropy
+        );
+    }
+}

@@ -1,0 +1,22 @@
+//! Training + evaluation drivers.
+//!
+//! * [`native`]: the paper's training recipe (Adam, batch 64, grad-clip
+//!   3.0, wd 1e-4, MCD masks resampled per batch) on the native engine —
+//!   used by the DSE sweep, which benchmarks dozens of architecture
+//!   points.
+//! * [`pjrt`]: the same train step executed through the AOT HLO artifact
+//!   on PJRT — the L2-fwd/bwd path, cross-checked against `native` in
+//!   `rust/tests/`.
+//! * [`eval`]: MC-dropout prediction + the paper's metric battery for
+//!   both tasks, generic over any predictor (float model, fixed-point
+//!   accelerator, PJRT executable).
+//! * [`sweep`]: populates the DSE lookup table (Figs. 8/9).
+
+pub mod eval;
+pub mod native;
+pub mod pjrt;
+pub mod sweep;
+
+pub use eval::{AnomalyReport, ClassifyReport, Predictor};
+pub use native::{NativeTrainer, TrainOpts};
+pub use pjrt::PjrtTrainer;

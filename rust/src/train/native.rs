@@ -1,0 +1,141 @@
+//! Native training loop — the paper's recipe (Sec. V: batch 64, gradient
+//! clipping 3.0, weight decay 1e-4; epochs configurable, the paper uses
+//! 1000 and we default lower for minutes-scale sweeps, see DESIGN.md
+//! §Substitutions). MCD masks are resampled once per batch, matching
+//! Gal & Ghahramani's variational interpretation.
+
+use crate::config::ArchConfig;
+#[cfg(test)]
+use crate::config::Task;
+use crate::data::Dataset;
+use crate::nn::model::{Masks, Model};
+use crate::nn::{AdamHp, AdamState};
+use crate::rng::Rng;
+
+#[derive(Debug, Clone, Copy)]
+pub struct TrainOpts {
+    pub epochs: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub seed: u64,
+}
+
+impl Default for TrainOpts {
+    fn default() -> Self {
+        Self { epochs: 60, batch: 64, lr: 5e-3, seed: 0 }
+    }
+}
+
+pub struct NativeTrainer {
+    pub model: Model,
+    pub opts: TrainOpts,
+    pub loss_history: Vec<f32>,
+    state: AdamState,
+    hp: AdamHp,
+    rng: Rng,
+}
+
+impl NativeTrainer {
+    pub fn new(cfg: ArchConfig, opts: TrainOpts) -> Self {
+        let mut rng = Rng::new(opts.seed);
+        let model = Model::init(cfg, &mut rng);
+        let state = AdamState::new(&model.params);
+        let hp = AdamHp { lr: opts.lr, ..Default::default() };
+        Self { model, opts, loss_history: Vec::new(), state, hp, rng }
+    }
+
+    /// Train on a dataset. For the anomaly task the caller passes the
+    /// normal-only training split (Sec. V-A1).
+    pub fn fit(&mut self, data: &Dataset) -> &mut Self {
+        let cfg = self.model.cfg.clone();
+        let b = self.opts.batch.min(data.n);
+        let steps_per_epoch = data.n.div_ceil(b);
+        let mut order: Vec<usize> = (0..data.n).collect();
+        for _epoch in 0..self.opts.epochs {
+            // Fisher-Yates shuffle.
+            for i in (1..order.len()).rev() {
+                let j = self.rng.below(i + 1);
+                order.swap(i, j);
+            }
+            let mut epoch_loss = 0.0;
+            for s in 0..steps_per_epoch {
+                let idx: Vec<usize> = (0..b)
+                    .map(|k| order[(s * b + k) % data.n])
+                    .collect();
+                let batch = data.subset(&idx);
+                let masks = Masks::sample(&cfg, b, &mut self.rng);
+                let loss = self.model.train_step(
+                    &self.hp,
+                    &mut self.state,
+                    &batch.x,
+                    &batch.y,
+                    &masks,
+                );
+                epoch_loss += loss;
+            }
+            self.loss_history.push(epoch_loss / steps_per_epoch as f32);
+        }
+        self
+    }
+
+    pub fn final_loss(&self) -> f32 {
+        *self.loss_history.last().unwrap_or(&f32::NAN)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+
+    #[test]
+    fn classifier_learns_ecg() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 1, "N");
+        let train = data::generate(96, 1);
+        let mut t = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 12, batch: 32, lr: 5e-3, seed: 0 },
+        );
+        t.fit(&train);
+        let first = t.loss_history[0];
+        let last = t.final_loss();
+        assert!(last < first * 0.8, "CE {first} -> {last}");
+    }
+
+    #[test]
+    fn autoencoder_loss_decreases_on_normal_beats() {
+        // The repeated-embedding LSTM autoencoder converges slowly (the
+        // paper trains 1000 epochs); at unit-test scale we assert steady
+        // progress, while eval::tests asserts the thing that matters —
+        // that even a briefly-trained AE separates anomalies (AUC > 0.8).
+        let cfg = ArchConfig::new(Task::Anomaly, 16, 1, "NN");
+        let (train, _) = data::anomaly_splits(0);
+        let small = train.subset(&(0..96.min(train.n)).collect::<Vec<_>>());
+        let mut t = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 60, batch: 32, lr: 1e-2, seed: 0 },
+        );
+        t.fit(&small);
+        let first = t.loss_history[0];
+        let last = t.final_loss();
+        assert!(last < first * 0.97, "no progress: {first} -> {last}");
+        // Later epochs should on average beat early epochs.
+        let early: f32 = t.loss_history[..10].iter().sum::<f32>() / 10.0;
+        let late: f32 =
+            t.loss_history[50..].iter().sum::<f32>() / 10.0;
+        assert!(late < early, "early {early} late {late}");
+    }
+
+    #[test]
+    fn bayesian_training_converges_too() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 2, "YN");
+        let train = data::generate(64, 2);
+        let mut t = NativeTrainer::new(
+            cfg,
+            TrainOpts { epochs: 10, batch: 32, lr: 5e-3, seed: 3 },
+        );
+        t.fit(&train);
+        assert!(t.final_loss() < t.loss_history[0]);
+        assert_eq!(t.loss_history.len(), 10);
+    }
+}

@@ -1,0 +1,142 @@
+//! PJRT-backed training: the AOT train-step artifact (L2 fwd/bwd lowered
+//! by aot.py) driven from Rust. Parameters and Adam state live as host
+//! tensors between steps; masks are sampled host-side (the coordinator's
+//! RNG), exactly mirroring `NativeTrainer` so the two are
+//! cross-checkable step-for-step.
+
+use anyhow::{Context, Result};
+
+use crate::config::{ArchConfig, Task};
+use crate::data::Dataset;
+use crate::nn::model::Masks;
+use crate::nn::Params;
+use crate::rng::Rng;
+use crate::runtime::{HostValue, Runtime};
+use crate::tensor::Tensor;
+
+pub struct PjrtTrainer<'rt> {
+    pub cfg: ArchConfig,
+    pub params: Params,
+    pub m: Params,
+    pub v: Params,
+    pub step: f32,
+    pub lr: f32,
+    pub loss_history: Vec<f32>,
+    runtime: &'rt mut Runtime,
+    artifact: String,
+    batch: usize,
+    rng: Rng,
+}
+
+impl<'rt> PjrtTrainer<'rt> {
+    /// Bind to the `<arch>.train_b<batch>` artifact.
+    pub fn new(
+        runtime: &'rt mut Runtime,
+        arch_name: &str,
+        batch: usize,
+        lr: f32,
+        seed: u64,
+    ) -> Result<Self> {
+        let meta = runtime
+            .manifest
+            .train_for(arch_name, batch)
+            .with_context(|| {
+                format!("no train artifact for {arch_name} at batch {batch}")
+            })?
+            .clone();
+        let cfg = meta.arch();
+        // Compile up front.
+        runtime.load(&meta.name)?;
+        let mut rng = Rng::new(seed);
+        let params = Params::init(&cfg, &mut rng);
+        let m = params.zeros_like();
+        let v = params.zeros_like();
+        Ok(Self {
+            cfg,
+            params,
+            m,
+            v,
+            step: 0.0,
+            lr,
+            loss_history: Vec::new(),
+            runtime,
+            artifact: meta.name,
+            batch,
+            rng,
+        })
+    }
+
+    /// One train step on a batch (xs `[B][T][I]` flattened; ys labels).
+    pub fn step_batch(&mut self, xs: &[f32], ys: &[u8]) -> Result<f32> {
+        let cfg = self.cfg.clone();
+        let b = self.batch;
+        anyhow::ensure!(xs.len() == b * cfg.seq_len * cfg.input_dim);
+        let masks = Masks::sample(&cfg, b, &mut self.rng);
+
+        // Positional ABI (aot.py build_train): params, m, v, step, lr,
+        // xs, [ys], masks.
+        let mut args: Vec<HostValue> = Vec::new();
+        for p in &self.params.tensors {
+            args.push(HostValue::F32(p.clone()));
+        }
+        for p in &self.m.tensors {
+            args.push(HostValue::F32(p.clone()));
+        }
+        for p in &self.v.tensors {
+            args.push(HostValue::F32(p.clone()));
+        }
+        args.push(HostValue::scalar(self.step));
+        args.push(HostValue::scalar(self.lr));
+        args.push(HostValue::F32(Tensor::new(
+            vec![b, cfg.seq_len, cfg.input_dim],
+            xs.to_vec(),
+        )));
+        if cfg.task == Task::Classify {
+            args.push(HostValue::I32(
+                ys.iter().map(|&y| y as i32).collect(),
+                vec![b],
+            ));
+        }
+        for t in &masks.tensors {
+            args.push(HostValue::F32(t.clone()));
+        }
+
+        let exe = self.runtime.load(&self.artifact)?;
+        let mut out = exe.run(&args)?;
+        // Outputs: params', m', v', step', loss.
+        let loss = out.pop().context("missing loss")?.data[0];
+        let step = out.pop().context("missing step")?.data[0];
+        let np = self.params.tensors.len();
+        anyhow::ensure!(out.len() == 3 * np, "bad output count");
+        let vs: Vec<Tensor> = out.split_off(2 * np);
+        let ms: Vec<Tensor> = out.split_off(np);
+        self.params = Params { tensors: out };
+        self.m = Params { tensors: ms };
+        self.v = Params { tensors: vs };
+        self.step = step;
+        self.loss_history.push(loss);
+        Ok(loss)
+    }
+
+    /// Epoch loop mirroring `NativeTrainer::fit`.
+    pub fn fit(&mut self, data: &Dataset, epochs: usize) -> Result<()> {
+        let b = self.batch;
+        let steps = data.n.div_ceil(b);
+        let mut order: Vec<usize> = (0..data.n).collect();
+        for _ in 0..epochs {
+            for i in (1..order.len()).rev() {
+                let j = self.rng.below(i + 1);
+                order.swap(i, j);
+            }
+            for s in 0..steps {
+                let idx: Vec<usize> =
+                    (0..b).map(|k| order[(s * b + k) % data.n]).collect();
+                let batch = data.subset(&idx);
+                self.step_batch(&batch.x, &batch.y)?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// PJRT-dependent coverage lives in rust/tests/pjrt_integration.rs.

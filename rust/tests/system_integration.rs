@@ -1,0 +1,123 @@
+//! Cross-module integration tests that need no PJRT artifacts: the
+//! trained-model -> FPGA-simulator -> metrics path, the DSE end-to-end
+//! flow on a real (tiny) sweep, and serving through the coordinator.
+
+use bayes_rnn_fpga::config::{ArchConfig, Task};
+use bayes_rnn_fpga::coordinator::{BatchPolicy, Engine, Server, ServerConfig};
+use bayes_rnn_fpga::data;
+use bayes_rnn_fpga::dse::space::reuse_search;
+use bayes_rnn_fpga::dse::{LookupTable, OptMode, Optimizer};
+use bayes_rnn_fpga::fpga::accel::Accelerator;
+use bayes_rnn_fpga::fpga::pipeline::PipelineSim;
+use bayes_rnn_fpga::hwmodel::ZC706;
+use bayes_rnn_fpga::train::eval::{eval_anomaly, ModelPredictor};
+use bayes_rnn_fpga::train::sweep::{self, SweepOpts};
+use bayes_rnn_fpga::train::{NativeTrainer, TrainOpts};
+
+/// Train a small AE, quantise it onto the accelerator, and verify the
+/// fixed-point design still separates anomalies (the Table I story).
+#[test]
+fn quantized_accelerator_preserves_anomaly_detection() {
+    let cfg = ArchConfig::new(Task::Anomaly, 16, 1, "NN");
+    let (train, test) = data::anomaly_splits(4);
+    let tr = train.subset(&(0..128.min(train.n)).collect::<Vec<_>>());
+    let mut trainer = NativeTrainer::new(
+        cfg.clone(),
+        TrainOpts { epochs: 12, batch: 32, lr: 1e-2, seed: 0 },
+    );
+    trainer.fit(&tr);
+    let te = test.subset(&(0..120).collect::<Vec<_>>());
+
+    let mut float_pred = ModelPredictor::new(&trainer.model, 3);
+    let float_rep = eval_anomaly(&mut float_pred, &te, 1);
+
+    let reuse = reuse_search(&cfg, &ZC706).expect("fits");
+    let mut accel = Accelerator::new(&cfg, &trainer.model.params, reuse, 3);
+    let fixed_rep = eval_anomaly(&mut accel, &te, 1);
+
+    assert!(float_rep.auc > 0.8, "float auc {}", float_rep.auc);
+    assert!(
+        (fixed_rep.auc - float_rep.auc).abs() < 0.08,
+        "quantisation must preserve AUC: float {} fixed {}",
+        float_rep.auc,
+        fixed_rep.auc
+    );
+}
+
+/// Sweep -> lookup -> optimizer: the full Fig. 7 loop at toy scale.
+#[test]
+fn dse_end_to_end() {
+    let opts = SweepOpts {
+        epochs: 3,
+        train_subset: 64,
+        test_subset: 80,
+        noise_subset: 10,
+        mc_samples: 3,
+        ..Default::default()
+    };
+    let mut table = LookupTable::new();
+    sweep::run(Task::Classify, &opts, &mut table, |_, _, _| {});
+    assert!(!table.entries.is_empty());
+
+    let opt = Optimizer::new(&ZC706, &table);
+    let lat = opt.optimize(Task::Classify, OptMode::Latency).expect("latency");
+    assert!(!lat.arch.is_bayesian(), "Opt-Latency picks pointwise");
+    assert_eq!(lat.s, 1);
+    let acc = opt
+        .optimize(Task::Classify, OptMode::Metric("accuracy"))
+        .expect("accuracy");
+    assert!(acc.fpga_latency_ms >= lat.fpga_latency_ms);
+    // Every chosen design must actually fit the chip.
+    for c in [&lat, &acc] {
+        let est = bayes_rnn_fpga::hwmodel::resource::ResourceModel::estimate(
+            &c.arch, &c.reuse,
+        );
+        assert!(est.dsps <= ZC706.dsps as f64 * 1.05);
+    }
+}
+
+/// Functional + timing sims agree with the deployment story: serving via
+/// the coordinator produces valid predictions and hardware latencies
+/// consistent with the cycle simulator.
+#[test]
+fn serve_through_fpga_simulator() {
+    let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YN");
+    cfg.seq_len = data::T;
+    let (train, test) = data::splits(6);
+    let mut trainer = NativeTrainer::new(
+        cfg.clone(),
+        TrainOpts { epochs: 4, batch: 32, lr: 5e-3, seed: 1 },
+    );
+    trainer.fit(&train.subset(&(0..96).collect::<Vec<_>>()));
+    let model = trainer.model;
+    let reuse = reuse_search(&cfg, &ZC706).expect("fits");
+    let s = 8;
+
+    let expected_ms =
+        PipelineSim::new(&cfg, reuse).simulate_ms(1, s, ZC706.clock_hz);
+
+    let cfg2 = cfg.clone();
+    let params = model.params.tensors.clone();
+    let mut server = Server::start(
+        move || {
+            let m = bayes_rnn_fpga::nn::model::Model::new(
+                cfg2.clone(),
+                bayes_rnn_fpga::nn::Params { tensors: params.clone() },
+            );
+            Engine::fpga(&cfg2, &m, reuse, s, 11)
+        },
+        ServerConfig { policy: BatchPolicy::stream(), queue_depth: 64 },
+    );
+    let receivers: Vec<_> = (0..10)
+        .map(|i| server.submit(test.beat(i).to_vec()))
+        .collect();
+    for rx in receivers {
+        let resp = rx.recv().unwrap();
+        let p = &resp.prediction;
+        assert_eq!(p.mean.len(), 4);
+        assert!((p.mean.iter().sum::<f32>() - 1.0).abs() < 1e-3);
+        assert!((p.model_latency_ms - expected_ms).abs() < 1e-9);
+    }
+    let summary = server.join();
+    assert_eq!(summary.served, 10);
+}
