@@ -1,0 +1,267 @@
+//! Process-based serving-fleet bench harness (`cargo bench --bench
+//! serve_fleet`, harness = false).
+//!
+//! Runs the *release binary* (`repro serve --json ...`) as a subprocess
+//! per scenario — measuring the real end-to-end serving path, process
+//! startup excluded from throughput (the binary times itself) — and
+//! writes one single-line JSON summary per scenario under the gitignored
+//! `bench_results/` directory:
+//!
+//!   baseline        1 engine, round-robin, FPGA-sim
+//!   fan_out         4 engines, round-robin
+//!   fleet_scaling   1/2/4/8 engines, least-loaded
+//!   mc_shard        1/2/4 engines, MC-shard sample parallelism
+//!
+//! Checks printed at the end:
+//!   * fan-out and 4-way MC-shard throughput vs. baseline (target ≥ 2x),
+//!   * MC-shard prediction checksums vs. baseline (must match to 1e-3 —
+//!     the sample-seeding invariant). A numeric mismatch exits non-zero;
+//!     a missed throughput target only warns (machine-dependent).
+//!
+//! Env: REPRO_BIN overrides the binary path; REPRO_BENCH_REQUESTS and
+//! REPRO_BENCH_SAMPLES scale the load (defaults 64 requests, S = 24).
+
+use std::path::{Path, PathBuf};
+use std::process::Command;
+
+use bayes_rnn_fpga::jsonio::{self, Json};
+
+const ARCH: &str = "classify_h8_nl1_Y";
+
+fn manifest_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+}
+
+fn find_binary() -> PathBuf {
+    if let Ok(p) = std::env::var("REPRO_BIN") {
+        return PathBuf::from(p);
+    }
+    let bin = manifest_dir().join("target/release/repro");
+    if !bin.exists() {
+        eprintln!("release binary missing; running `cargo build --release`");
+        let status = Command::new("cargo")
+            .args(["build", "--release", "--bin", "repro"])
+            .current_dir(manifest_dir())
+            .status()
+            .expect("spawn cargo build");
+        assert!(status.success(), "cargo build --release failed");
+    }
+    bin
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+/// One `repro serve --json` run, parsed.
+struct Run {
+    engines: usize,
+    router: String,
+    json_line: String,
+    served: usize,
+    rejected: usize,
+    throughput: f64,
+    e2e_p99_ms: f64,
+    pred_checksum: f64,
+    unc_checksum: f64,
+}
+
+fn serve(
+    bin: &Path,
+    engines: usize,
+    router: &str,
+    requests: usize,
+    samples: usize,
+) -> Run {
+    let out = Command::new(bin)
+        .args([
+            "serve",
+            "--arch",
+            ARCH,
+            "--engines",
+            &engines.to_string(),
+            "--router",
+            router,
+            "--backend",
+            "fpga",
+            "--requests",
+            &requests.to_string(),
+            "--samples",
+            &samples.to_string(),
+            "--json",
+        ])
+        .output()
+        .expect("spawn repro serve");
+    assert!(
+        out.status.success(),
+        "repro serve failed (engines={engines} router={router}):\n{}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    let line = stdout
+        .lines()
+        .rev()
+        .find(|l| l.trim_start().starts_with('{'))
+        .unwrap_or_else(|| panic!("no JSON line in output:\n{stdout}"))
+        .trim()
+        .to_string();
+    let j = jsonio::parse(&line).expect("parse serve JSON");
+    let f = |key: &str| -> f64 {
+        j.get(key).and_then(Json::as_f64).unwrap_or_else(|| {
+            panic!("missing numeric field {key:?} in {line}")
+        })
+    };
+    let e2e_p99_ms = j
+        .get("e2e_ms")
+        .and_then(|o| o.get("p99"))
+        .and_then(Json::as_f64)
+        .expect("e2e_ms.p99");
+    Run {
+        engines,
+        router: router.to_string(),
+        json_line: line.clone(),
+        served: f("served") as usize,
+        rejected: f("rejected") as usize,
+        throughput: f("throughput_rps"),
+        e2e_p99_ms,
+        pred_checksum: f("pred_checksum"),
+        unc_checksum: f("unc_checksum"),
+    }
+}
+
+fn write_scenario(dir: &Path, name: &str, line: &str) {
+    let path = dir.join(format!("{name}.json"));
+    std::fs::write(&path, format!("{line}\n")).expect("write summary");
+    println!("  -> {}", path.display());
+}
+
+/// Wrap several runs into one single-line JSON scenario summary.
+fn points_summary(name: &str, runs: &[&Run], extra: &str) -> String {
+    let points: Vec<String> = runs
+        .iter()
+        .map(|r| {
+            format!(
+                "{{\"engines\":{},\"router\":\"{}\",\"served\":{},\
+                 \"rejected\":{},\"throughput_rps\":{:.3},\
+                 \"e2e_p99_ms\":{:.4}}}",
+                r.engines,
+                r.router,
+                r.served,
+                r.rejected,
+                r.throughput,
+                r.e2e_p99_ms
+            )
+        })
+        .collect();
+    format!(
+        "{{\"scenario\":\"{name}\",\"arch\":\"{ARCH}\",\"points\":[{}]{}}}",
+        points.join(","),
+        extra
+    )
+}
+
+fn main() {
+    let bin = find_binary();
+    let requests = env_usize("REPRO_BENCH_REQUESTS", 64);
+    let samples = env_usize("REPRO_BENCH_SAMPLES", 24);
+    let results = manifest_dir().join("bench_results");
+    std::fs::create_dir_all(&results).expect("create bench_results/");
+    println!(
+        "serve_fleet harness: {} requests, S={samples}, arch {ARCH}",
+        requests
+    );
+
+    // --- baseline: one FPGA-sim engine, streamed ---
+    println!("[baseline] 1 engine, rr");
+    let baseline = serve(&bin, 1, "rr", requests, samples);
+    write_scenario(&results, "baseline", &baseline.json_line);
+
+    // --- fan-out: 4 engines, whole-request round-robin ---
+    println!("[fan_out] 4 engines, rr");
+    let fan_out = serve(&bin, 4, "rr", requests, samples);
+    write_scenario(&results, "fan_out", &fan_out.json_line);
+
+    // --- fleet-scaling: throughput trajectory over engine count ---
+    let mut scaling = Vec::new();
+    for n in [1usize, 2, 4, 8] {
+        println!("[fleet_scaling] {n} engines, least-loaded");
+        scaling.push(serve(&bin, n, "least-loaded", requests, samples));
+    }
+    let refs: Vec<&Run> = scaling.iter().collect();
+    write_scenario(
+        &results,
+        "fleet_scaling",
+        &points_summary("fleet_scaling", &refs, ""),
+    );
+
+    // --- MC-shard sweep: split S across 1/2/4 engines ---
+    let mut shard = Vec::new();
+    for n in [1usize, 2, 4] {
+        println!("[mc_shard] {n} engines, mc-shard");
+        shard.push(serve(&bin, n, "mc-shard", requests, samples));
+    }
+    let mut worst_pred = 0f64;
+    let mut worst_unc = 0f64;
+    for r in &shard {
+        worst_pred = worst_pred
+            .max((r.pred_checksum - baseline.pred_checksum).abs());
+        worst_unc =
+            worst_unc.max((r.unc_checksum - baseline.unc_checksum).abs());
+    }
+    let numerics_ok = worst_pred < 1e-3 && worst_unc < 1e-3;
+    let refs: Vec<&Run> = shard.iter().collect();
+    let extra = format!(
+        ",\"baseline_pred_checksum\":{:.6},\"max_pred_delta\":{:.6},\
+         \"max_unc_delta\":{:.6},\"numerics_match\":{}",
+        baseline.pred_checksum, worst_pred, worst_unc, numerics_ok
+    );
+    write_scenario(
+        &results,
+        "mc_shard",
+        &points_summary("mc_shard", &refs, &extra),
+    );
+
+    // --- report ---
+    println!("\nscenario           engines  served  rejected   req/s   vs base");
+    let mut rows: Vec<(&str, &Run)> = vec![
+        ("baseline", &baseline),
+        ("fan_out", &fan_out),
+    ];
+    for r in &scaling {
+        rows.push(("fleet_scaling", r));
+    }
+    for r in &shard {
+        rows.push(("mc_shard", r));
+    }
+    for (name, r) in &rows {
+        println!(
+            "{name:<18} {:>7} {:>7} {:>9} {:>8.1} {:>8.2}x",
+            r.engines,
+            r.served,
+            r.rejected,
+            r.throughput,
+            r.throughput / baseline.throughput.max(1e-9)
+        );
+    }
+
+    let fan_ratio = fan_out.throughput / baseline.throughput.max(1e-9);
+    let shard4 = shard.last().expect("mc-shard runs");
+    let shard_ratio = shard4.throughput / baseline.throughput.max(1e-9);
+    println!(
+        "\nfan-out speedup  {fan_ratio:.2}x  {}",
+        if fan_ratio >= 2.0 { "PASS (>=2x)" } else { "WARN (<2x)" }
+    );
+    println!(
+        "mc-shard speedup {shard_ratio:.2}x  {}",
+        if shard_ratio >= 2.0 { "PASS (>=2x)" } else { "WARN (<2x)" }
+    );
+    println!(
+        "mc-shard numerics vs single engine: max |Δpred| {worst_pred:.2e}, \
+         max |Δstd| {worst_unc:.2e}  {}",
+        if numerics_ok { "PASS" } else { "FAIL" }
+    );
+    if !numerics_ok {
+        // Sample-seeding invariant broken — that is a correctness bug.
+        std::process::exit(1);
+    }
+}

@@ -176,6 +176,15 @@ impl ArchConfig {
         shapes
     }
 
+    /// Per-pass output length: T reconstruction points for the
+    /// autoencoder, K class probabilities for the classifier.
+    pub fn out_len(&self) -> usize {
+        match self.task {
+            Task::Anomaly => self.seq_len,
+            Task::Classify => self.num_classes,
+        }
+    }
+
     /// The Y/N string form of `B`.
     pub fn bayes_str(&self) -> String {
         self.bayes.iter().map(|&b| if b { 'Y' } else { 'N' }).collect()
@@ -266,6 +275,12 @@ mod tests {
     #[should_panic]
     fn odd_hidden_ae_panics() {
         ArchConfig::new(Task::Anomaly, 7, 1, "NN");
+    }
+
+    #[test]
+    fn out_len_per_task() {
+        assert_eq!(ArchConfig::new(Task::Anomaly, 8, 1, "NN").out_len(), 140);
+        assert_eq!(ArchConfig::new(Task::Classify, 8, 1, "N").out_len(), 4);
     }
 
     #[test]

@@ -144,6 +144,44 @@ mod tests {
         assert!(b.ready(false));
     }
 
+    /// Stream vs. size/timeout batching on the same backlog: stream
+    /// drains one-by-one, batched drains in max_batch groups.
+    #[test]
+    fn stream_vs_batched_grouping() {
+        let mut s: Batcher<u32> = Batcher::new(BatchPolicy::stream());
+        for i in 0..4 {
+            s.push(i, i as u32);
+        }
+        let mut sizes = Vec::new();
+        while !s.is_empty() {
+            assert!(s.ready(false), "stream is always ready with work");
+            sizes.push(s.take().ids.len());
+        }
+        assert_eq!(sizes, vec![1, 1, 1, 1]);
+
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(4, Duration::from_secs(1)));
+        for i in 0..4 {
+            b.push(i, i as u32);
+        }
+        assert!(b.ready(false));
+        assert_eq!(b.take().ids.len(), 4);
+        assert!(b.is_empty());
+    }
+
+    /// A partial batch holds for company while the queue is busy, then
+    /// flushes at the deadline.
+    #[test]
+    fn batched_waits_for_company_until_deadline() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(4, Duration::from_millis(20)));
+        b.push(1, 0);
+        assert!(!b.ready(false), "below size, before deadline, queue busy");
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(b.ready(false), "deadline flush");
+        assert_eq!(b.take().ids, vec![1]);
+    }
+
     #[test]
     fn take_respects_max_batch() {
         let mut b: Batcher<u32> =

@@ -13,7 +13,7 @@ use crate::fpga::pipeline::PipelineSim;
 use crate::hwmodel::resource::ReuseFactors;
 use crate::hwmodel::{GpuModel, ZC706};
 use crate::nn::model::{Masks, Model};
-use crate::rng::Rng;
+use crate::rng::{mix3, Rng};
 use crate::runtime::{HostValue, Runtime};
 use crate::tensor::Tensor;
 
@@ -29,6 +29,44 @@ pub struct Prediction {
     pub model_latency_ms: f64,
 }
 
+/// A shard of one request's MC-sample schedule, computed by one engine:
+/// partial moment sums over samples `start..start+count`, ready for the
+/// coordinator's pooled mean/variance reduction
+/// ([`crate::metrics::pooled_mean_std`]).
+#[derive(Debug, Clone)]
+pub struct PartialPrediction {
+    /// Per-point Σ x over the shard's samples.
+    pub sum: Vec<f64>,
+    /// Per-point Σ x² over the shard's samples.
+    pub sumsq: Vec<f64>,
+    /// Samples in this shard.
+    pub count: usize,
+    /// Engine-model latency for computing the shard, in ms.
+    pub model_latency_ms: f64,
+}
+
+impl PartialPrediction {
+    /// Reduce raw `[count][out_len]` samples to moment sums.
+    pub fn from_samples(
+        samples: &[f32],
+        count: usize,
+        out_len: usize,
+        model_latency_ms: f64,
+    ) -> Self {
+        debug_assert_eq!(samples.len(), count * out_len);
+        let mut sum = vec![0f64; out_len];
+        let mut sumsq = vec![0f64; out_len];
+        for k in 0..count {
+            for i in 0..out_len {
+                let v = samples[k * out_len + i] as f64;
+                sum[i] += v;
+                sumsq[i] += v * v;
+            }
+        }
+        Self { sum, sumsq, count, model_latency_ms }
+    }
+}
+
 /// Engine selector.
 pub enum EngineKind {
     /// Fixed-point accelerator simulator + cycle-level timing.
@@ -40,9 +78,10 @@ pub enum EngineKind {
         cfg: ArchConfig,
         params: Vec<Tensor>,
         rng: Rng,
+        seed: u64,
     },
     /// Float model + analytic TITAN-X latency (no GPU in this testbed).
-    GpuModel { model: Model, rng: Rng },
+    GpuModel { model: Model, rng: Rng, seed: u64 },
 }
 
 /// A batched inference engine.
@@ -66,7 +105,10 @@ impl Engine {
     }
 
     pub fn gpu(model: Model, s: usize, seed: u64) -> Self {
-        Self { kind: EngineKind::GpuModel { model, rng: Rng::new(seed) }, s }
+        Self {
+            kind: EngineKind::GpuModel { model, rng: Rng::new(seed), seed },
+            s,
+        }
     }
 
     /// PJRT engine bound to `<arch>.fwd_n<rows>` where rows = s.
@@ -92,6 +134,7 @@ impl Engine {
                 cfg: meta.arch(),
                 params: params.to_vec(),
                 rng: Rng::new(seed),
+                seed,
             },
             s,
         })
@@ -125,7 +168,7 @@ impl Engine {
                     })
                     .collect()
             }
-            EngineKind::GpuModel { model, rng } => {
+            EngineKind::GpuModel { model, rng, .. } => {
                 let cfg = model.cfg.clone();
                 let ms = GpuModel::latency_ms(&cfg, beats.len(), s);
                 beats
@@ -140,7 +183,7 @@ impl Engine {
                     })
                     .collect()
             }
-            EngineKind::PjrtCpu { runtime, artifact, cfg, params, rng } => {
+            EngineKind::PjrtCpu { runtime, artifact, cfg, params, rng, .. } => {
                 // rows = S: one request per execution, measured wallclock.
                 let mut preds = Vec::with_capacity(beats.len());
                 for beat in beats {
@@ -185,6 +228,134 @@ impl Engine {
             }
         }
     }
+
+    /// Compute MC samples `start..start+count` of one request's S-sample
+    /// schedule and return the shard's partial moment sums. Sample `k`'s
+    /// dropout masks derive from `mix3(engine_seed, req_seed, k)`, so the
+    /// union over shards is independent of how many engines the schedule
+    /// is split across (the fleet's MC-shard invariant). `group` is the
+    /// number of requests the worker batched together (feeds the GPU
+    /// latency model's batch amortisation).
+    pub fn infer_partial(
+        &mut self,
+        beat: &[f32],
+        req_seed: u64,
+        start: usize,
+        count: usize,
+        group: usize,
+    ) -> Result<PartialPrediction> {
+        anyhow::ensure!(count > 0, "empty MC shard");
+        match &mut self.kind {
+            EngineKind::FpgaSim { accel, sim } => {
+                // The FPGA streams the shard's passes back-to-back; fewer
+                // samples per engine = proportionally lower latency (the
+                // MC-parallel win).
+                let ms = sim.simulate_ms(1, count, ZC706.clock_hz);
+                let out = accel.predict_seeded(beat, req_seed, start, count);
+                Ok(PartialPrediction::from_samples(
+                    &out.samples,
+                    count,
+                    out.out_len,
+                    ms,
+                ))
+            }
+            EngineKind::GpuModel { model, seed, .. } => {
+                let cfg = model.cfg.clone();
+                let ms = GpuModel::latency_ms(&cfg, group.max(1), count);
+                let out_len = cfg.out_len();
+                let mut samples = Vec::with_capacity(count * out_len);
+                for k in start..start + count {
+                    let mut rng =
+                        Rng::new(mix3(*seed, req_seed, k as u64));
+                    let masks = if cfg.is_bayesian() {
+                        Masks::sample(&cfg, 1, &mut rng)
+                    } else {
+                        Masks::ones(&cfg, 1)
+                    };
+                    samples.extend(model.forward(beat, 1, &masks));
+                }
+                Ok(PartialPrediction::from_samples(
+                    &samples, count, out_len, ms,
+                ))
+            }
+            EngineKind::PjrtCpu { runtime, cfg, params, seed, .. } => {
+                // Needs a fwd artifact with rows = the shard size.
+                let meta = runtime
+                    .manifest
+                    .forward_for(&cfg.name(), count)
+                    .ok_or_else(|| {
+                        anyhow::anyhow!(
+                            "no fwd_n{count} artifact for {} — MC-shard \
+                             over PJRT needs one artifact per shard size",
+                            cfg.name()
+                        )
+                    })?
+                    .clone();
+                let mut xs = Vec::with_capacity(count * beat.len());
+                for _ in 0..count {
+                    xs.extend_from_slice(beat);
+                }
+                let masks =
+                    seeded_masks(cfg, *seed, req_seed, start, count);
+                let mut args: Vec<HostValue> = params
+                    .iter()
+                    .map(|p| HostValue::F32(p.clone()))
+                    .collect();
+                args.push(HostValue::F32(Tensor::new(
+                    vec![count, cfg.seq_len, cfg.input_dim],
+                    xs,
+                )));
+                for m in &masks.tensors {
+                    args.push(HostValue::F32(m.clone()));
+                }
+                let t0 = Instant::now();
+                let exe = runtime.load(&meta.name)?;
+                let out = exe.run(&args)?;
+                let ms = t0.elapsed().as_secs_f64() * 1e3;
+                let y = &out[0];
+                let out_len = y.data.len() / count;
+                Ok(PartialPrediction::from_samples(
+                    &y.data, count, out_len, ms,
+                ))
+            }
+        }
+    }
+}
+
+/// Per-sample-seeded dropout masks for samples `start..start+count`:
+/// sample `k` is drawn from `Rng::new(mix3(base, req_seed, k))` and rows
+/// are concatenated, mirroring the accelerator's per-sample LFSR
+/// reseeding so software baselines shard the same schedule shape.
+fn seeded_masks(
+    cfg: &ArchConfig,
+    base: u64,
+    req_seed: u64,
+    start: usize,
+    count: usize,
+) -> Masks {
+    if !cfg.is_bayesian() || count == 0 {
+        return Masks::ones(cfg, count);
+    }
+    let per: Vec<Masks> = (0..count)
+        .map(|j| {
+            let mut rng =
+                Rng::new(mix3(base, req_seed, (start + j) as u64));
+            Masks::sample(cfg, 1, &mut rng)
+        })
+        .collect();
+    let tensors = (0..per[0].tensors.len())
+        .map(|ti| {
+            let mut shape = per[0].tensors[ti].shape.clone();
+            shape[0] = count;
+            let mut data =
+                Vec::with_capacity(count * per[0].tensors[ti].data.len());
+            for m in &per {
+                data.extend_from_slice(&m.tensors[ti].data);
+            }
+            Tensor::new(shape, data)
+        })
+        .collect();
+    Masks { tensors }
 }
 
 /// Float-model MC prediction (shared by the GPU engine and tests).
@@ -244,6 +415,58 @@ mod tests {
         let preds = e.infer_batch(&[&beat]).unwrap();
         let expect = GpuModel::latency_ms(&cfg, 1, 1);
         assert!((preds[0].model_latency_ms - expect).abs() < 1e-9);
+    }
+
+    /// MC-shard invariant at the engine level: merging shard partials
+    /// must reproduce the whole-range seeded prediction.
+    #[test]
+    fn sharded_partials_merge_to_whole_prediction() {
+        let (cfg, model) = tiny_model("YY");
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let s = 8;
+        let req_seed = 42u64;
+
+        let mut whole = Engine::fpga(&cfg, &model, reuse, s, 9);
+        let w = whole.infer_partial(
+            &beat20(), req_seed, 0, s, 1,
+        ).unwrap();
+        let (wm, ws) = crate::metrics::pooled_mean_std(&w.sum, &w.sumsq, s);
+
+        // Three engines, same design seed, disjoint shards.
+        let mut sum = vec![0f64; w.sum.len()];
+        let mut sumsq = vec![0f64; w.sum.len()];
+        for (start, count) in [(0usize, 3usize), (3, 3), (6, 2)] {
+            let mut e = Engine::fpga(&cfg, &model, reuse, s, 9);
+            let p = e
+                .infer_partial(&beat20(), req_seed, start, count, 1)
+                .unwrap();
+            assert_eq!(p.count, count);
+            assert!(p.model_latency_ms > 0.0);
+            for i in 0..sum.len() {
+                sum[i] += p.sum[i];
+                sumsq[i] += p.sumsq[i];
+            }
+        }
+        let (mm, ms) = crate::metrics::pooled_mean_std(&sum, &sumsq, s);
+        for i in 0..wm.len() {
+            assert!((mm[i] - wm[i]).abs() < 1e-5, "mean[{i}]");
+            assert!((ms[i] - ws[i]).abs() < 1e-4, "std[{i}]");
+        }
+    }
+
+    #[test]
+    fn gpu_partial_is_deterministic_per_request_seed() {
+        let (_, model) = tiny_model("YY");
+        let mut a = Engine::gpu(model, 4, 5);
+        let p1 = a.infer_partial(&beat20(), 7, 0, 4, 1).unwrap();
+        let p2 = a.infer_partial(&beat20(), 7, 0, 4, 1).unwrap();
+        assert_eq!(p1.sum, p2.sum, "same (req, k) seeds => same samples");
+        let p3 = a.infer_partial(&beat20(), 8, 0, 4, 1).unwrap();
+        assert_ne!(p1.sum, p3.sum, "request seed must perturb samples");
+    }
+
+    fn beat20() -> Vec<f32> {
+        (0..20).map(|i| (i as f32 * 0.3).sin()).collect()
     }
 
     #[test]

@@ -1,0 +1,628 @@
+//! Sharded multi-engine serving: N engine workers (any mix of FPGA-sim /
+//! GPU-model / PJRT backends), each with its own bounded queue and
+//! batcher, behind a [`Router`] — the fleet-scale layer the single-engine
+//! [`super::server::Server`] cannot reach.
+//!
+//! Placement (see `docs/serving.md`):
+//! * `rr` / `least-loaded` — whole requests go to one engine.
+//! * `mc-shard` — a request's S Monte-Carlo samples are split across all
+//!   engines; each returns partial moment sums
+//!   ([`PartialPrediction`]) and the coordinator reduces them with
+//!   [`crate::metrics::pooled_mean_std`]. Because every sample's dropout
+//!   masks are seeded by `mix3(engine_seed, request_seed, sample_index)`,
+//!   the merged prediction is invariant to the engine count (same seed ⇒
+//!   same samples, any N).
+//!
+//! Admission control: with `shed = true`, a full worker queue rejects the
+//! request immediately (counted in [`FleetSummary::rejected`]) instead of
+//! exerting backpressure on the producer — the "fail fast under overload"
+//! posture of a production serving tier.
+//!
+//! Threading mirrors `server.rs`: std::thread + mpsc, engines built
+//! inside their worker threads from `Send` factories (PJRT handles are
+//! not `Send`). Usage: `submit` all → `wait` each ticket → `join`.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use super::batcher::{Batcher, BatchPolicy};
+use super::engines::{Engine, PartialPrediction, Prediction};
+use super::router::{Router, RouterPolicy};
+use super::server::ServeSummary;
+use super::stats::LatencyStats;
+use crate::metrics::pooled_mean_std;
+
+/// Fleet configuration.
+pub struct FleetConfig {
+    /// Engine workers to spawn (one thread + bounded queue each).
+    pub engines: usize,
+    /// Placement policy.
+    pub router: RouterPolicy,
+    /// Batch policy applied by every worker's batcher.
+    pub policy: BatchPolicy,
+    /// Per-engine queue depth before a submit blocks (or sheds).
+    pub queue_depth: usize,
+    /// Queue-full behaviour: `true` rejects instead of blocking.
+    pub shed: bool,
+    /// MC samples per request.
+    pub samples: usize,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        Self {
+            engines: 1,
+            router: RouterPolicy::RoundRobin,
+            policy: BatchPolicy::stream(),
+            queue_depth: 256,
+            shed: false,
+            samples: 1,
+        }
+    }
+}
+
+/// One unit of engine work: a whole request (`start = 0, count = S`) or
+/// one MC shard of it.
+struct WorkItem {
+    beat: Arc<Vec<f32>>,
+    req_seed: u64,
+    start: usize,
+    count: usize,
+    enqueued: Instant,
+    /// Shard outcome: partial sums, or the engine error (stringified so
+    /// the worker keeps running and the waiter can surface it).
+    reply: mpsc::Sender<Result<PartialPrediction, String>>,
+}
+
+/// Handle for one in-flight request: hold it, then pass it back to
+/// [`Fleet::wait`] to collect (and, for MC-shard, reduce) the response.
+pub struct Ticket {
+    pub id: u64,
+    enqueued: Instant,
+    expected: usize,
+    total_s: usize,
+    rx: mpsc::Receiver<Result<PartialPrediction, String>>,
+}
+
+/// A completed fleet request.
+pub struct FleetResponse {
+    pub id: u64,
+    pub prediction: Prediction,
+    /// Queue + service + reduction latency observed by the coordinator.
+    pub e2e_ms: f64,
+    /// Engine shards that contributed (1 unless MC-shard).
+    pub shards: usize,
+}
+
+/// Aggregate + per-engine serving stats, returned by [`Fleet::join`].
+#[derive(Debug, Clone)]
+pub struct FleetSummary {
+    /// Requests fully served (all shards reduced).
+    pub served: usize,
+    /// Requests rejected by admission control.
+    pub rejected: usize,
+    pub wall: Duration,
+    /// Request-level end-to-end latency (recorded at reduction time).
+    pub e2e: LatencyStats,
+    /// Per-engine summaries (`served` there counts work *items*, i.e.
+    /// shards — an MC-shard request contributes to several engines).
+    pub per_engine: Vec<ServeSummary>,
+}
+
+impl FleetSummary {
+    /// Served requests per second over the fleet wall-clock.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            return 0.0;
+        }
+        self.served as f64 / self.wall.as_secs_f64()
+    }
+
+    /// Engine-model latency merged across all engines.
+    pub fn engine_stats(&self) -> LatencyStats {
+        let mut all = LatencyStats::new();
+        for e in &self.per_engine {
+            all.merge(&e.engine);
+        }
+        all
+    }
+
+    /// Total work items (shards) completed across engines.
+    pub fn items(&self) -> usize {
+        self.per_engine.iter().map(|e| e.served).sum()
+    }
+
+    /// Total batches formed across engines.
+    pub fn batches(&self) -> usize {
+        self.per_engine.iter().map(|e| e.batches).sum()
+    }
+}
+
+/// The sharded serving fleet.
+pub struct Fleet {
+    txs: Vec<mpsc::SyncSender<WorkItem>>,
+    loads: Vec<Arc<AtomicUsize>>,
+    workers: Vec<thread::JoinHandle<ServeSummary>>,
+    router: Router,
+    samples: usize,
+    shed: bool,
+    next_id: u64,
+    rejected: usize,
+    served: usize,
+    e2e: LatencyStats,
+    t0: Instant,
+}
+
+impl Fleet {
+    /// Spawn one worker thread per factory. All engines must share the
+    /// same design seed for MC-shard determinism (the CLI and tests do).
+    pub fn start(
+        cfg: FleetConfig,
+        factories: Vec<Box<dyn FnOnce() -> Engine + Send + 'static>>,
+    ) -> Self {
+        assert!(cfg.engines >= 1, "fleet needs at least one engine");
+        assert_eq!(
+            factories.len(),
+            cfg.engines,
+            "one factory per engine"
+        );
+        assert!(cfg.samples >= 1, "S must be positive");
+        let mut txs = Vec::with_capacity(cfg.engines);
+        let mut loads = Vec::with_capacity(cfg.engines);
+        let mut workers = Vec::with_capacity(cfg.engines);
+        for factory in factories {
+            let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth);
+            let load = Arc::new(AtomicUsize::new(0));
+            let worker_load = Arc::clone(&load);
+            let policy = cfg.policy;
+            workers.push(thread::spawn(move || {
+                worker_loop(factory, rx, policy, worker_load)
+            }));
+            txs.push(tx);
+            loads.push(load);
+        }
+        Self {
+            txs,
+            loads,
+            workers,
+            router: Router::new(cfg.router),
+            samples: cfg.samples,
+            shed: cfg.shed,
+            next_id: 0,
+            rejected: 0,
+            served: 0,
+            e2e: LatencyStats::new(),
+            t0: Instant::now(),
+        }
+    }
+
+    pub fn engines(&self) -> usize {
+        self.txs.len()
+    }
+
+    /// Submit a beat. Returns `None` if admission control shed it (any
+    /// target queue full with `shed = true`); shards already enqueued for
+    /// a shed request still execute but their replies are discarded.
+    pub fn submit(&mut self, beat: Vec<f32>) -> Option<Ticket> {
+        let id = self.next_id;
+        self.next_id += 1;
+        // The request seed IS the request id: every engine derives the
+        // same per-sample mask seeds from it, in any placement mode.
+        let req_seed = id;
+        let enqueued = Instant::now();
+        let beat = Arc::new(beat);
+        let (reply_tx, reply_rx) = mpsc::channel();
+
+        // (engine, start, count) assignments.
+        let assignments: Vec<(usize, usize, usize)> =
+            if self.router.policy() == RouterPolicy::McShard {
+                self.router
+                    .shards(self.samples, self.txs.len())
+                    .into_iter()
+                    .enumerate()
+                    .filter(|&(_, (_, count))| count > 0)
+                    .map(|(j, (start, count))| (j, start, count))
+                    .collect()
+            } else {
+                let loads: Vec<usize> = self
+                    .loads
+                    .iter()
+                    .map(|l| l.load(Ordering::Acquire))
+                    .collect();
+                vec![(self.router.route(&loads), 0, self.samples)]
+            };
+
+        for &(j, start, count) in &assignments {
+            let item = WorkItem {
+                beat: Arc::clone(&beat),
+                req_seed,
+                start,
+                count,
+                enqueued,
+                reply: reply_tx.clone(),
+            };
+            if self.shed {
+                match self.txs[j].try_send(item) {
+                    Ok(()) => {
+                        self.loads[j].fetch_add(1, Ordering::AcqRel);
+                    }
+                    Err(_) => {
+                        // Reject the whole request; dropping `reply_rx`
+                        // voids any shards already enqueued.
+                        self.rejected += 1;
+                        return None;
+                    }
+                }
+            } else {
+                self.loads[j].fetch_add(1, Ordering::AcqRel);
+                self.txs[j].send(item).expect("fleet worker gone");
+            }
+        }
+        Some(Ticket {
+            id,
+            enqueued,
+            expected: assignments.len(),
+            total_s: self.samples,
+            rx: reply_rx,
+        })
+    }
+
+    /// Block until all of a ticket's shards arrive, reduce them, and
+    /// record request-level latency. Call before `join`. Errors if any
+    /// shard's engine failed (e.g. a missing PJRT artifact for the
+    /// shard size) or a worker died.
+    pub fn wait(&mut self, ticket: Ticket) -> Result<FleetResponse> {
+        let mut sum: Vec<f64> = Vec::new();
+        let mut sumsq: Vec<f64> = Vec::new();
+        let mut got_s = 0usize;
+        let mut latency = 0f64;
+        for _ in 0..ticket.expected {
+            let partial = ticket
+                .rx
+                .recv_timeout(Duration::from_secs(120))
+                .map_err(|e| {
+                    anyhow::anyhow!(
+                        "request {}: shard reply lost ({e:?})",
+                        ticket.id
+                    )
+                })?
+                .map_err(|msg| {
+                    anyhow::anyhow!(
+                        "request {}: engine failed: {msg}",
+                        ticket.id
+                    )
+                })?;
+            if sum.is_empty() {
+                sum = vec![0.0; partial.sum.len()];
+                sumsq = vec![0.0; partial.sum.len()];
+            }
+            for i in 0..partial.sum.len() {
+                sum[i] += partial.sum[i];
+                sumsq[i] += partial.sumsq[i];
+            }
+            got_s += partial.count;
+            // Shards run in parallel: request latency is the slowest one.
+            latency = latency.max(partial.model_latency_ms);
+        }
+        debug_assert_eq!(got_s, ticket.total_s, "shards must cover S");
+        let (mean, std) = pooled_mean_std(&sum, &sumsq, got_s);
+        let e2e_ms = ticket.enqueued.elapsed().as_secs_f64() * 1e3;
+        self.e2e.record_ms(e2e_ms);
+        self.served += 1;
+        Ok(FleetResponse {
+            id: ticket.id,
+            prediction: Prediction { mean, std, model_latency_ms: latency },
+            e2e_ms,
+            shards: ticket.expected,
+        })
+    }
+
+    /// Close all queues, wait for the workers, and return fleet stats.
+    pub fn join(self) -> FleetSummary {
+        let Fleet { txs, workers, rejected, served, e2e, t0, .. } = self;
+        drop(txs);
+        let per_engine: Vec<ServeSummary> = workers
+            .into_iter()
+            .map(|w| w.join().expect("fleet worker panicked"))
+            .collect();
+        FleetSummary { served, rejected, wall: t0.elapsed(), e2e, per_engine }
+    }
+}
+
+/// Per-engine event loop: bounded queue -> batcher -> engine ->
+/// per-shard replies. Same drain discipline as `server.rs` (block 1 ms
+/// when idle, never sleep while work is pending).
+fn worker_loop(
+    factory: Box<dyn FnOnce() -> Engine + Send>,
+    rx: mpsc::Receiver<WorkItem>,
+    policy: BatchPolicy,
+    load: Arc<AtomicUsize>,
+) -> ServeSummary {
+    let mut engine = factory();
+    let mut batcher: Batcher<WorkItem> = Batcher::new(policy);
+    let mut e2e = LatencyStats::new();
+    let mut eng = LatencyStats::new();
+    let mut served = 0usize;
+    let mut batches = 0usize;
+    let mut seq = 0u64;
+    let t0 = Instant::now();
+    let mut open = true;
+    while open || !batcher.is_empty() {
+        if open {
+            if batcher.is_empty() {
+                match rx.recv_timeout(Duration::from_millis(1)) {
+                    Ok(item) => {
+                        batcher.push(seq, item);
+                        seq += 1;
+                    }
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => {
+                        open = false;
+                    }
+                }
+            }
+            loop {
+                match rx.try_recv() {
+                    Ok(item) => {
+                        batcher.push(seq, item);
+                        seq += 1;
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        open = false;
+                        break;
+                    }
+                }
+            }
+        }
+        if batcher.ready(true) {
+            let batch = batcher.take();
+            batches += 1;
+            let group = batch.items.len();
+            for item in batch.items {
+                let result = engine.infer_partial(
+                    item.beat.as_slice(),
+                    item.req_seed,
+                    item.start,
+                    item.count,
+                    group,
+                );
+                load.fetch_sub(1, Ordering::AcqRel);
+                match result {
+                    Ok(partial) => {
+                        e2e.record_ms(
+                            item.enqueued.elapsed().as_secs_f64() * 1e3,
+                        );
+                        eng.record_ms(partial.model_latency_ms);
+                        served += 1;
+                        // Receiver may be gone (shed request): ignore.
+                        let _ = item.reply.send(Ok(partial));
+                    }
+                    Err(e) => {
+                        eprintln!("fleet engine error: {e:#}");
+                        let _ = item.reply.send(Err(format!("{e:#}")));
+                    }
+                }
+            }
+        }
+    }
+    let mean_batch =
+        if batches > 0 { served as f64 / batches as f64 } else { 0.0 };
+    ServeSummary {
+        served,
+        wall: t0.elapsed(),
+        e2e,
+        engine: eng,
+        batches,
+        mean_batch,
+        rejected: 0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, Task};
+    use crate::hwmodel::resource::ReuseFactors;
+    use crate::nn::model::Model;
+    use crate::nn::Params;
+    use crate::rng::Rng;
+
+    fn tiny_cfg() -> ArchConfig {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = 20;
+        cfg
+    }
+
+    fn fpga_factories(
+        n: usize,
+        s: usize,
+        seed: u64,
+    ) -> Vec<Box<dyn FnOnce() -> Engine + Send + 'static>> {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        (0..n)
+            .map(|_| {
+                let c = cfg.clone();
+                let p = params.clone();
+                let f: Box<dyn FnOnce() -> Engine + Send + 'static> =
+                    Box::new(move || {
+                        let model = Model::new(c.clone(), p);
+                        Engine::fpga(
+                            &c,
+                            &model,
+                            ReuseFactors::new(2, 1, 1),
+                            s,
+                            seed,
+                        )
+                    });
+                f
+            })
+            .collect()
+    }
+
+    fn beat() -> Vec<f32> {
+        (0..20).map(|i| (i as f32 * 0.3).sin()).collect()
+    }
+
+    #[test]
+    fn round_robin_fleet_serves_all_and_spreads_load() {
+        let s = 2;
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                samples: s,
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s, 5),
+        );
+        let tickets: Vec<Ticket> =
+            (0..12).filter_map(|_| fleet.submit(beat())).collect();
+        assert_eq!(tickets.len(), 12, "no shedding by default");
+        for t in tickets {
+            let resp = fleet.wait(t).expect("response");
+            assert_eq!(resp.prediction.mean.len(), 4);
+            assert_eq!(resp.shards, 1);
+            assert!(resp.e2e_ms >= 0.0);
+        }
+        let summary = fleet.join();
+        assert_eq!(summary.served, 12);
+        assert_eq!(summary.rejected, 0);
+        assert_eq!(summary.per_engine.len(), 2);
+        assert_eq!(summary.items(), 12);
+        // Round-robin must touch both engines.
+        assert!(summary.per_engine.iter().all(|e| e.served == 6));
+        assert!(summary.throughput() > 0.0);
+    }
+
+    /// The headline invariant: MC-shard over 3 engines reproduces the
+    /// single-engine prediction (same design seed, same request id).
+    #[test]
+    fn mc_shard_matches_single_engine_prediction() {
+        let s = 8;
+        let mut single = Fleet::start(
+            FleetConfig { engines: 1, samples: s, ..FleetConfig::default() },
+            fpga_factories(1, s, 9),
+        );
+        let t = single.submit(beat()).unwrap();
+        let base = single.wait(t).expect("response");
+        single.join();
+
+        let mut sharded = Fleet::start(
+            FleetConfig {
+                engines: 3,
+                router: RouterPolicy::McShard,
+                samples: s,
+                ..FleetConfig::default()
+            },
+            fpga_factories(3, s, 9),
+        );
+        let t = sharded.submit(beat()).unwrap();
+        let resp = sharded.wait(t).expect("response");
+        assert_eq!(resp.shards, 3);
+        let summary = sharded.join();
+        assert_eq!(summary.served, 1);
+        assert_eq!(summary.items(), 3, "one shard per engine");
+
+        assert_eq!(base.prediction.mean.len(), resp.prediction.mean.len());
+        for i in 0..base.prediction.mean.len() {
+            assert!(
+                (base.prediction.mean[i] - resp.prediction.mean[i]).abs()
+                    < 1e-5,
+                "mean[{i}]: {} vs {}",
+                base.prediction.mean[i],
+                resp.prediction.mean[i]
+            );
+            assert!(
+                (base.prediction.std[i] - resp.prediction.std[i]).abs()
+                    < 1e-4,
+                "std[{i}]"
+            );
+        }
+        // Sharding must cut the modelled per-request hardware latency.
+        assert!(
+            resp.prediction.model_latency_ms
+                < base.prediction.model_latency_ms,
+            "{} !< {}",
+            resp.prediction.model_latency_ms,
+            base.prediction.model_latency_ms
+        );
+    }
+
+    #[test]
+    fn mc_shard_with_more_engines_than_samples_skips_empty_shards() {
+        let s = 2;
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 4,
+                router: RouterPolicy::McShard,
+                samples: s,
+                ..FleetConfig::default()
+            },
+            fpga_factories(4, s, 1),
+        );
+        let t = fleet.submit(beat()).unwrap();
+        let resp = fleet.wait(t).expect("response");
+        assert_eq!(resp.shards, 2, "only non-empty shards dispatched");
+        let summary = fleet.join();
+        assert_eq!(summary.items(), 2);
+    }
+
+    #[test]
+    fn shedding_rejects_when_queues_fill() {
+        let s = 6; // slow enough that a depth-1 queue backs up
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 1,
+                queue_depth: 1,
+                shed: true,
+                samples: s,
+                ..FleetConfig::default()
+            },
+            fpga_factories(1, s, 3),
+        );
+        let mut tickets = Vec::new();
+        for _ in 0..64 {
+            if let Some(t) = fleet.submit(beat()) {
+                tickets.push(t);
+            }
+        }
+        let accepted = tickets.len();
+        for t in tickets {
+            fleet.wait(t).expect("response");
+        }
+        let summary = fleet.join();
+        assert_eq!(summary.served, accepted);
+        assert_eq!(summary.served + summary.rejected, 64);
+        assert!(
+            summary.rejected > 0,
+            "64 instant submits into a depth-1 queue must shed"
+        );
+    }
+
+    #[test]
+    fn least_loaded_fleet_completes() {
+        let s = 2;
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 3,
+                router: RouterPolicy::LeastLoaded,
+                samples: s,
+                ..FleetConfig::default()
+            },
+            fpga_factories(3, s, 7),
+        );
+        let tickets: Vec<Ticket> =
+            (0..9).filter_map(|_| fleet.submit(beat())).collect();
+        for t in tickets {
+            fleet.wait(t).expect("response");
+        }
+        let summary = fleet.join();
+        assert_eq!(summary.served, 9);
+        assert_eq!(summary.items(), 9);
+    }
+}

@@ -9,18 +9,25 @@
 //!   batching,
 //! * worker threads driving an inference engine,
 //! * MC aggregation (mean prediction + uncertainty per request),
-//! * latency/throughput metrics.
+//! * latency/throughput metrics,
+//! * a sharded multi-engine fleet ([`fleet`]) with round-robin /
+//!   least-loaded / MC-shard placement ([`router`]) and queue-depth
+//!   admission control — see `docs/serving.md` for the architecture.
 //!
 //! No tokio in this offline environment (DESIGN.md §Substitutions):
 //! std::thread + mpsc channels implement the same event loop.
 
 pub mod batcher;
+pub mod fleet;
 pub mod loadgen;
 pub mod engines;
+pub mod router;
 pub mod server;
 pub mod stats;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
-pub use engines::{Engine, EngineKind, Prediction};
+pub use engines::{Engine, EngineKind, PartialPrediction, Prediction};
+pub use fleet::{Fleet, FleetConfig, FleetResponse, FleetSummary, Ticket};
+pub use router::{Router, RouterPolicy};
 pub use server::{Server, ServerConfig, ServeSummary};
 pub use stats::LatencyStats;

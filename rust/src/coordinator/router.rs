@@ -1,0 +1,167 @@
+//! Request placement across the engine fleet.
+//!
+//! Three policies (see `docs/serving.md`):
+//!
+//! * **round-robin** — stateless rotation; best when engines are
+//!   homogeneous and requests are uniform.
+//! * **least-loaded** — picks the engine with the fewest outstanding work
+//!   items (queue-depth snapshot); absorbs heterogeneous engines (`mix`
+//!   backends) and bursty arrivals.
+//! * **mc-shard** — splits one request's S Monte-Carlo samples across all
+//!   engines (the dimension Fan et al. and VIBNN parallelise across
+//!   compute units); the coordinator merges the partial predictive
+//!   distributions. Cuts per-request latency ~N× instead of raising
+//!   request-level throughput.
+
+/// Placement policy for the fleet.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RouterPolicy {
+    RoundRobin,
+    LeastLoaded,
+    McShard,
+}
+
+impl RouterPolicy {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RouterPolicy::RoundRobin => "rr",
+            RouterPolicy::LeastLoaded => "least-loaded",
+            RouterPolicy::McShard => "mc-shard",
+        }
+    }
+}
+
+impl std::str::FromStr for RouterPolicy {
+    type Err = String;
+    fn from_str(s: &str) -> Result<Self, Self::Err> {
+        match s {
+            "rr" | "round-robin" => Ok(RouterPolicy::RoundRobin),
+            "ll" | "least-loaded" => Ok(RouterPolicy::LeastLoaded),
+            "mc-shard" | "mcshard" => Ok(RouterPolicy::McShard),
+            other => Err(format!(
+                "unknown router {other:?} (rr | least-loaded | mc-shard)"
+            )),
+        }
+    }
+}
+
+/// Stateful placement: owns the round-robin cursor.
+pub struct Router {
+    policy: RouterPolicy,
+    next: usize,
+}
+
+impl Router {
+    pub fn new(policy: RouterPolicy) -> Self {
+        Self { policy, next: 0 }
+    }
+
+    pub fn policy(&self) -> RouterPolicy {
+        self.policy
+    }
+
+    /// Pick one engine for a whole request. `loads` is a snapshot of
+    /// outstanding work items per engine (only consulted by
+    /// least-loaded; ties break to the lowest index).
+    pub fn route(&mut self, loads: &[usize]) -> usize {
+        assert!(!loads.is_empty());
+        match self.policy {
+            RouterPolicy::LeastLoaded => loads
+                .iter()
+                .enumerate()
+                .min_by_key(|&(i, &l)| (l, i))
+                .map(|(i, _)| i)
+                .unwrap_or(0),
+            _ => {
+                let j = self.next % loads.len();
+                self.next = self.next.wrapping_add(1);
+                j
+            }
+        }
+    }
+
+    /// Split `s` MC samples over `n` engines: `(start, count)` per
+    /// engine, contiguous, disjoint, covering `0..s`. The first `s % n`
+    /// engines take one extra sample; with `s < n` the tail engines get
+    /// zero-size shards (callers skip those).
+    pub fn shards(&self, s: usize, n: usize) -> Vec<(usize, usize)> {
+        let n = n.max(1);
+        let base = s / n;
+        let rem = s % n;
+        let mut out = Vec::with_capacity(n);
+        let mut start = 0;
+        for j in 0..n {
+            let count = base + usize::from(j < rem);
+            out.push((start, count));
+            start += count;
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_policy_names() {
+        assert_eq!("rr".parse::<RouterPolicy>(), Ok(RouterPolicy::RoundRobin));
+        assert_eq!(
+            "round-robin".parse::<RouterPolicy>(),
+            Ok(RouterPolicy::RoundRobin)
+        );
+        assert_eq!(
+            "least-loaded".parse::<RouterPolicy>(),
+            Ok(RouterPolicy::LeastLoaded)
+        );
+        assert_eq!(
+            "mc-shard".parse::<RouterPolicy>(),
+            Ok(RouterPolicy::McShard)
+        );
+        assert!("banana".parse::<RouterPolicy>().is_err());
+        assert_eq!(RouterPolicy::McShard.as_str(), "mc-shard");
+    }
+
+    #[test]
+    fn round_robin_cycles() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let loads = [0usize; 3];
+        let picks: Vec<usize> = (0..7).map(|_| r.route(&loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0, 1, 2, 0]);
+    }
+
+    #[test]
+    fn least_loaded_picks_min_with_low_index_ties() {
+        let mut r = Router::new(RouterPolicy::LeastLoaded);
+        assert_eq!(r.route(&[3, 1, 2]), 1);
+        assert_eq!(r.route(&[2, 0, 0]), 1, "ties break to lowest index");
+        assert_eq!(r.route(&[0, 0, 0]), 0);
+    }
+
+    #[test]
+    fn shards_are_balanced_disjoint_and_cover() {
+        let r = Router::new(RouterPolicy::McShard);
+        for (s, n) in [(30usize, 4usize), (8, 3), (5, 5), (1, 4), (16, 1)] {
+            let shards = r.shards(s, n);
+            assert_eq!(shards.len(), n);
+            let mut expect_start = 0;
+            let mut total = 0;
+            for &(start, count) in &shards {
+                assert_eq!(start, expect_start, "s={s} n={n}");
+                expect_start += count;
+                total += count;
+            }
+            assert_eq!(total, s, "shards must cover all samples");
+            let max = shards.iter().map(|&(_, c)| c).max().unwrap();
+            let min = shards.iter().map(|&(_, c)| c).min().unwrap();
+            assert!(max - min <= 1, "balanced to within one sample");
+        }
+    }
+
+    #[test]
+    fn small_s_leaves_empty_tail_shards() {
+        let r = Router::new(RouterPolicy::McShard);
+        let shards = r.shards(2, 4);
+        assert_eq!(shards, vec![(0, 1), (1, 1), (2, 0), (2, 0)]);
+    }
+}

@@ -42,7 +42,8 @@ pub struct Response {
     pub e2e_ms: f64,
 }
 
-/// Summary returned by `Server::join`.
+/// Summary returned by `Server::join` (also the per-engine summary type
+/// of the fleet, `coordinator::fleet`).
 #[derive(Debug, Clone)]
 pub struct ServeSummary {
     pub served: usize,
@@ -52,6 +53,9 @@ pub struct ServeSummary {
     pub engine: LatencyStats,
     pub batches: usize,
     pub mean_batch: f64,
+    /// Requests shed by admission control (always 0 for the single-engine
+    /// `Server`, which blocks instead; the fleet counts rejections here).
+    pub rejected: usize,
 }
 
 /// Handle for submitting requests.
@@ -142,7 +146,15 @@ impl Server {
             } else {
                 0.0
             };
-            ServeSummary { served, wall, e2e, engine: eng, batches, mean_batch }
+            ServeSummary {
+                served,
+                wall,
+                e2e,
+                engine: eng,
+                batches,
+                mean_batch,
+                rejected: 0,
+            }
         });
         Self { tx: Some(tx), worker: Some(worker), next_id: 0 }
     }

@@ -49,6 +49,13 @@ impl LatencyStats {
         self.samples_us.iter().cloned().fold(0.0, f64::max) / 1e3
     }
 
+    pub fn min_ms(&self) -> f64 {
+        if self.samples_us.is_empty() {
+            return 0.0;
+        }
+        self.samples_us.iter().cloned().fold(f64::INFINITY, f64::min) / 1e3
+    }
+
     /// Requests per second given a wall-clock window.
     pub fn throughput(&self, wall: Duration) -> f64 {
         if wall.is_zero() {
@@ -85,6 +92,39 @@ mod tests {
         let s = LatencyStats::new();
         assert_eq!(s.percentile_ms(99.0), 0.0);
         assert_eq!(s.mean_ms(), 0.0);
+    }
+
+    /// Percentile edge cases: 0, 1 and 2 samples must never index out of
+    /// bounds and must follow nearest-rank semantics.
+    #[test]
+    fn percentile_zero_one_two_samples() {
+        // 0 samples: everything is 0.
+        let s0 = LatencyStats::new();
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(s0.percentile_ms(p), 0.0);
+        }
+        assert_eq!(s0.min_ms(), 0.0);
+        assert_eq!(s0.max_ms(), 0.0);
+
+        // 1 sample: every percentile is that sample.
+        let mut s1 = LatencyStats::new();
+        s1.record_ms(7.0);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert!((s1.percentile_ms(p) - 7.0).abs() < 1e-9, "p={p}");
+        }
+        assert!((s1.min_ms() - 7.0).abs() < 1e-9);
+
+        // 2 samples: nearest-rank splits at p = 50.
+        let mut s2 = LatencyStats::new();
+        s2.record_ms(1.0);
+        s2.record_ms(9.0);
+        assert!((s2.percentile_ms(0.0) - 1.0).abs() < 1e-9);
+        assert!((s2.percentile_ms(50.0) - 1.0).abs() < 1e-9);
+        assert!((s2.percentile_ms(51.0) - 9.0).abs() < 1e-9);
+        assert!((s2.percentile_ms(99.0) - 9.0).abs() < 1e-9);
+        assert!((s2.percentile_ms(100.0) - 9.0).abs() < 1e-9);
+        assert!((s2.min_ms() - 1.0).abs() < 1e-9);
+        assert!((s2.max_ms() - 9.0).abs() < 1e-9);
     }
 
     #[test]

@@ -55,6 +55,9 @@ pub struct Accelerator {
     pub lstms: Vec<LstmEngine>,
     pub dense: DenseEngine,
     pub samplers: Vec<Option<BernoulliSampler>>,
+    /// Base LFSR seed the design was "synthesised" with; the fleet's
+    /// seeded prediction path derives per-(request, sample) seeds from it.
+    seed: u64,
     // Scratch.
     beat_q: Vec<Fx16>,
     hid_a: Vec<Fx16>,
@@ -96,8 +99,22 @@ impl Accelerator {
             lstms,
             dense,
             samplers,
+            seed,
             beat_q: Vec::new(),
             hid_a: vec![Fx16::ZERO; max_h],
+        }
+    }
+
+    /// Re-seed every Bayesian layer's LFSR bank from one sample seed —
+    /// the hardware analogue of loading fresh LFSR init values over AXI
+    /// before a pass. Layer salting matches [`Accelerator::new`].
+    fn reseed_samplers(&mut self, sample_seed: u64) {
+        for (l, slot) in self.samplers.iter_mut().enumerate() {
+            if slot.is_some() {
+                *slot = Some(BernoulliSampler::new(
+                    sample_seed ^ (l as u64 + 1) * 0x9E37,
+                ));
+            }
         }
     }
 
@@ -188,18 +205,42 @@ impl Accelerator {
         }
     }
 
-    /// Full Bayesian prediction: S MC passes with fresh LFSR masks.
+    /// Full Bayesian prediction: S MC passes with fresh LFSR masks
+    /// (free-running sampler state — passes depend on sampler history).
     pub fn predict(&mut self, beat: &[f32], s: usize) -> McOutput {
-        let out_len = match self.cfg.task {
-            Task::Anomaly => self.cfg.seq_len,
-            Task::Classify => self.cfg.num_classes,
-        };
+        let out_len = self.cfg.out_len();
         let mut samples = Vec::with_capacity(s * out_len);
         for _ in 0..s {
             samples.extend(self.run_pass(beat));
         }
         let _ = &self.hid_a;
         McOutput { samples, s, out_len }
+    }
+
+    /// MC passes `start..start+count` of a request's sample schedule,
+    /// with each pass's masks seeded as `mix3(design_seed, req_seed, k)`.
+    /// Unlike [`Accelerator::predict`], sample `k` is a pure function of
+    /// `(design_seed, req_seed, k)` — independent of sampler history — so
+    /// splitting a request's S samples across fleet engines (MC-shard)
+    /// reproduces exactly the sample set a single engine would compute.
+    pub fn predict_seeded(
+        &mut self,
+        beat: &[f32],
+        req_seed: u64,
+        start: usize,
+        count: usize,
+    ) -> McOutput {
+        let out_len = self.cfg.out_len();
+        let mut samples = Vec::with_capacity(count * out_len);
+        for k in start..start + count {
+            self.reseed_samplers(crate::rng::mix3(
+                self.seed,
+                req_seed,
+                k as u64,
+            ));
+            samples.extend(self.run_pass(beat));
+        }
+        McOutput { samples, s: count, out_len }
     }
 
     /// Post-synthesis resource report (the Table III "Used" row).
@@ -330,6 +371,36 @@ mod tests {
         // Mean is still a distribution.
         let m = out.mean();
         assert!((m.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+    }
+
+    /// Seeded prediction is a pure function of (design seed, request
+    /// seed, sample index): shards concatenated in order must be
+    /// bit-identical to one whole-range pass — the MC-shard invariant.
+    #[test]
+    fn seeded_shards_concatenate_to_whole() {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.2).cos()).collect();
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let mut whole = Accelerator::new(&cfg, &params, reuse, 9);
+        let all = whole.predict_seeded(&beat, 77, 0, 8);
+
+        let mut sharded = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut cat = Vec::new();
+        for (start, count) in [(0usize, 3usize), (3, 3), (6, 2)] {
+            cat.extend(sharded.predict_seeded(&beat, 77, start, count).samples);
+        }
+        assert_eq!(all.samples, cat, "shard union must equal whole range");
+
+        // A different request seed must change the sample set.
+        let other = sharded.predict_seeded(&beat, 78, 0, 8);
+        assert_ne!(all.samples, other.samples);
+
+        // Samples still vary across k (dropout active).
+        let first = &all.samples[0..4];
+        assert!((1..8).any(|s| &all.samples[s * 4..s * 4 + 4] != first));
     }
 
     #[test]

@@ -11,7 +11,9 @@
 //!   algorithmic–hardware design-space-exploration framework ([`dse`]),
 //!   a PJRT runtime executing the AOT artifacts ([`runtime`]), a
 //!   Rust-driven training loop ([`train`]), a native float reference
-//!   engine ([`nn`]) and an async serving coordinator ([`coordinator`]).
+//!   engine ([`nn`]) and an async serving coordinator ([`coordinator`])
+//!   with a sharded multi-engine fleet ([`coordinator::fleet`] —
+//!   architecture and MC-shard semantics in `docs/serving.md`).
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.

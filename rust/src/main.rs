@@ -16,7 +16,10 @@ use std::path::PathBuf;
 
 use anyhow::{Context, Result};
 use bayes_rnn_fpga::config::{ArchConfig, Task};
-use bayes_rnn_fpga::coordinator::{BatchPolicy, Engine, Server, ServerConfig};
+use bayes_rnn_fpga::coordinator::loadgen::PoissonTrace;
+use bayes_rnn_fpga::coordinator::{
+    BatchPolicy, Engine, Fleet, FleetConfig, RouterPolicy,
+};
 use bayes_rnn_fpga::data;
 use bayes_rnn_fpga::dse::space::reuse_search;
 use bayes_rnn_fpga::dse::{LookupTable, Optimizer};
@@ -24,6 +27,7 @@ use bayes_rnn_fpga::fpga::accel::Accelerator;
 use bayes_rnn_fpga::hwmodel::ZC706;
 use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
+use bayes_rnn_fpga::rng::Rng;
 use bayes_rnn_fpga::runtime::Runtime;
 use bayes_rnn_fpga::tensor::{load_tensors, save_tensors, Tensor};
 use bayes_rnn_fpga::train::eval::{eval_anomaly, eval_classify, ModelPredictor};
@@ -99,9 +103,45 @@ fn parse_arch(name: &str) -> Result<ArchConfig> {
     Ok(ArchConfig::new(task, h, nl, parts[3]))
 }
 
+fn print_usage() {
+    eprintln!(
+        "repro — Bayesian-RNN-on-FPGA reproduction CLI
+
+usage: repro <subcommand> [--key value | --flag] ...
+
+subcommands:
+  sweep   run the algorithmic DSE sweep, write the lookup table
+          [--task anomaly|classify] [--full] [--epochs N]
+          [--train-subset N] [--test-subset N] [--samples S] [--out PATH]
+  dse     optimise over a lookup table (Tables V/VI)
+          [--task T] [--lookup PATH] [--batch N] [--samples S]
+  train   train one architecture
+          --arch NAME [--backend native|pjrt] [--epochs N] [--batch N]
+          [--lr F] [--seed N] [--out PATH]
+  eval    evaluate a trained checkpoint (float / --fixed FPGA sim)
+          --arch NAME [--weights PATH] [--samples S] [--test-subset N]
+          [--fixed]
+  serve   run the serving fleet on synthetic ECG traffic
+          [--arch NAME] [--engines N] [--router rr|least-loaded|mc-shard]
+          [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
+          [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
+          [--seed N] [--json]
+          (missing weights fall back to a deterministic random init —
+           synthetic load mode, used by the bench harness)
+  info    show artifact manifest + platform
+  help    this message (also: --help on any subcommand)
+
+common flags: --artifacts DIR (default ./artifacts), --weights PATH"
+    );
+}
+
 fn main() -> Result<()> {
     let argv: Vec<String> = std::env::args().skip(1).collect();
     let (cmd, args) = Args::parse(&argv);
+    if args.flag("help") {
+        print_usage();
+        return Ok(());
+    }
     match cmd.as_deref() {
         Some("sweep") => cmd_sweep(&args),
         Some("dse") => cmd_dse(&args),
@@ -109,12 +149,13 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
         Some("info") => cmd_info(&args),
-        _ => {
-            eprintln!(
-                "usage: repro <sweep|dse|train|eval|serve|info> [--task \
-                 anomaly|classify] [--arch NAME] [--epochs N] [--full] ..."
-            );
+        Some("help") | None => {
+            print_usage();
             Ok(())
+        }
+        Some(other) => {
+            print_usage();
+            anyhow::bail!("unknown subcommand {other:?}");
         }
     }
 }
@@ -350,45 +391,104 @@ fn cmd_eval(args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
-    let arch = args.get("arch").context("--arch NAME required")?.to_string();
+    // Default arch lets the bench harness drive a bare checkout.
+    let arch =
+        args.get("arch").unwrap_or("classify_h8_nl1_Y").to_string();
     let cfg = parse_arch(&arch)?;
-    let model = load_model(args, &cfg, &arch)?;
     let s =
         if cfg.is_bayesian() { args.usize_or("samples", 30) } else { 1 };
     let n_req = args.usize_or("requests", 100);
-    let engine_kind = args.get("engine").unwrap_or("fpga").to_string();
+    let n_engines = args.usize_or("engines", 1).max(1);
+    let router: RouterPolicy = args
+        .get("router")
+        .unwrap_or("rr")
+        .parse()
+        .map_err(|e: String| anyhow::anyhow!(e))?;
+    // --engine kept as a legacy alias for --backend.
+    let backend = args
+        .get("backend")
+        .or_else(|| args.get("engine"))
+        .unwrap_or("fpga")
+        .to_string();
+    // MC-shard merges shards numerically; mixing fixed-point FPGA and
+    // float GPU samples in one reduction would break the documented
+    // engine-count invariance.
+    anyhow::ensure!(
+        !(backend == "mix" && router == RouterPolicy::McShard),
+        "--backend mix cannot be combined with --router mc-shard \
+         (shards from fixed-point and float engines would be merged)"
+    );
     let batch = args.usize_or("batch", 8);
+    let queue_depth = args.usize_or("queue-depth", 256);
+    let shed = args.flag("shed");
+    let json_out = args.flag("json");
+    let seed = args.usize_or("seed", 3) as u64;
     let artifacts = args.artifacts_dir();
 
-    let policy = if engine_kind == "fpga" {
-        BatchPolicy::stream()
-    } else {
-        BatchPolicy::batched(batch, std::time::Duration::from_millis(2))
+    // Trained weights if available; otherwise a deterministic random
+    // init so load runs (and their predictions) are reproducible
+    // without artifacts — the bench harness relies on this.
+    let model = match load_model(args, &cfg, &arch) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "note: {e:#}; serving untrained weights (synthetic mode)"
+            );
+            Model::init(cfg.clone(), &mut Rng::new(seed ^ 0xC0FFEE))
+        }
     };
-    let cfg2 = cfg.clone();
+
+    // All engines share one design seed: MC-shard predictions are then
+    // identical for any engine count (same request => same sample set).
     let params = model.params.tensors.clone();
-    let mut server = Server::start(
-        move || match engine_kind.as_str() {
+    let mut factories: Vec<Box<dyn FnOnce() -> Engine + Send>> =
+        Vec::with_capacity(n_engines);
+    for j in 0..n_engines {
+        let kind = match backend.as_str() {
+            "mix" => (if j % 2 == 0 { "fpga" } else { "gpu" }).to_string(),
+            other => other.to_string(),
+        };
+        let cfg2 = cfg.clone();
+        let p2 = params.clone();
+        let arts = artifacts.clone();
+        factories.push(Box::new(move || match kind.as_str() {
             "gpu" => Engine::gpu(
-                Model::new(cfg2.clone(), Params { tensors: params.clone() }),
+                Model::new(cfg2.clone(), Params { tensors: p2.clone() }),
                 s,
-                3,
+                seed,
             ),
             "pjrt" => {
-                let rt = Runtime::new(&artifacts).expect("artifacts");
-                Engine::pjrt(rt, &cfg2.name(), &params, s, 3)
+                let rt = Runtime::new(&arts).expect("artifacts");
+                Engine::pjrt(rt, &cfg2.name(), &p2, s, seed)
                     .expect("pjrt engine")
             }
             _ => {
                 let reuse = reuse_search(&cfg2, &ZC706).expect("fits ZC706");
-                let model = Model::new(
+                let m = Model::new(
                     cfg2.clone(),
-                    Params { tensors: params.clone() },
+                    Params { tensors: p2.clone() },
                 );
-                Engine::fpga(&cfg2, &model, reuse, s, 3)
+                Engine::fpga(&cfg2, &m, reuse, s, seed)
             }
+        }));
+    }
+
+    let policy = match backend.as_str() {
+        "gpu" | "pjrt" => {
+            BatchPolicy::batched(batch, std::time::Duration::from_millis(2))
+        }
+        _ => BatchPolicy::stream(),
+    };
+    let mut fleet = Fleet::start(
+        FleetConfig {
+            engines: n_engines,
+            router,
+            policy,
+            queue_depth,
+            shed,
+            samples: s,
         },
-        ServerConfig { policy, queue_depth: 256 },
+        factories,
     );
 
     let (_, test) = match cfg.task {
@@ -396,19 +496,97 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Task::Classify => data::splits(0),
     };
     let t0 = std::time::Instant::now();
-    let receivers: Vec<_> = (0..n_req)
-        .map(|i| server.submit(test.beat(i % test.n).to_vec()))
-        .collect();
-    for rx in receivers {
-        rx.recv()?;
+    let mut tickets = Vec::with_capacity(n_req);
+    if let Some(rate) = args.get("rate").and_then(|v| v.parse::<f64>().ok())
+    {
+        // Open-loop Poisson arrivals: exposes the latency knee and, with
+        // --shed, the admission-control behaviour under overload.
+        let trace = PoissonTrace::generate(rate, n_req, &test, seed);
+        let start = std::time::Instant::now();
+        for a in &trace.arrivals {
+            if let Some(wait) = a.at.checked_sub(start.elapsed()) {
+                if !wait.is_zero() {
+                    std::thread::sleep(wait);
+                }
+            }
+            if let Some(t) = fleet.submit(test.beat(a.beat_idx).to_vec()) {
+                tickets.push(t);
+            }
+        }
+    } else {
+        // Closed loop: submit everything, then wait.
+        for i in 0..n_req {
+            if let Some(t) = fleet.submit(test.beat(i % test.n).to_vec()) {
+                tickets.push(t);
+            }
+        }
+    }
+
+    // Checksums over the first 8 responses (submit order): the bench
+    // harness compares these across engine counts to verify the
+    // MC-shard reduction numerically.
+    let mut pred_checksum = 0f64;
+    let mut unc_checksum = 0f64;
+    for (i, t) in tickets.into_iter().enumerate() {
+        let resp = fleet.wait(t)?;
+        if i < 8 {
+            pred_checksum +=
+                resp.prediction.mean.iter().map(|&v| v as f64).sum::<f64>();
+            unc_checksum +=
+                resp.prediction.std.iter().map(|&v| v as f64).sum::<f64>();
+        }
     }
     let wall = t0.elapsed();
-    let summary = server.join();
-    println!(
-        "served {} requests in {:.2}s  ({:.1} req/s)",
-        summary.served,
-        wall.as_secs_f64(),
+    let summary = fleet.join();
+    let throughput = if wall.as_secs_f64() > 0.0 {
         summary.served as f64 / wall.as_secs_f64()
+    } else {
+        0.0
+    };
+    let engine_stats = summary.engine_stats();
+
+    if json_out {
+        // Single-line JSON for the process-based bench harness.
+        println!(
+            "{{\"cmd\":\"serve\",\"arch\":\"{arch}\",\"engines\":{n_engines},\
+             \"router\":\"{}\",\"backend\":\"{backend}\",\"samples\":{s},\
+             \"requests\":{n_req},\"served\":{},\"rejected\":{},\
+             \"wall_s\":{:.6},\"throughput_rps\":{:.3},\
+             \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\
+             \"max\":{:.4}}},\
+             \"engine_ms\":{{\"mean\":{:.4},\"p99\":{:.4}}},\
+             \"batches\":{},\"pred_checksum\":{:.6},\
+             \"unc_checksum\":{:.6}}}",
+            router.as_str(),
+            summary.served,
+            summary.rejected,
+            wall.as_secs_f64(),
+            throughput,
+            summary.e2e.mean_ms(),
+            summary.e2e.percentile_ms(50.0),
+            summary.e2e.percentile_ms(99.0),
+            summary.e2e.max_ms(),
+            engine_stats.mean_ms(),
+            engine_stats.percentile_ms(99.0),
+            summary.batches(),
+            pred_checksum,
+            unc_checksum,
+        );
+        return Ok(());
+    }
+
+    println!(
+        "fleet: {n_engines} x {backend} engines, router {}, S={s}{}",
+        router.as_str(),
+        if shed { ", shedding on" } else { "" }
+    );
+    println!(
+        "served {} / {} requests in {:.2}s  ({throughput:.1} req/s)  \
+         rejected {}",
+        summary.served,
+        n_req,
+        wall.as_secs_f64(),
+        summary.rejected
     );
     println!(
         "e2e    mean {:.3} ms  p50 {:.3}  p99 {:.3}  max {:.3}",
@@ -418,11 +596,21 @@ fn cmd_serve(args: &Args) -> Result<()> {
         summary.e2e.max_ms()
     );
     println!(
-        "engine mean {:.3} ms  batches {} (avg size {:.1})",
-        summary.engine.mean_ms(),
-        summary.batches,
-        summary.mean_batch
+        "engine mean {:.3} ms  batches {} (avg size {:.2})",
+        engine_stats.mean_ms(),
+        summary.batches(),
+        if summary.batches() > 0 {
+            summary.items() as f64 / summary.batches() as f64
+        } else {
+            0.0
+        }
     );
+    for (j, e) in summary.per_engine.iter().enumerate() {
+        println!(
+            "  engine[{j}]  items {:<6} batches {:<6} model mean {:.3} ms",
+            e.served, e.batches, e.engine.mean_ms()
+        );
+    }
     Ok(())
 }
 

@@ -252,6 +252,34 @@ pub fn mc_mean_std(samples: &[f32], s: usize, n: usize) -> (Vec<f32>, Vec<f32>) 
     (mean, std)
 }
 
+/// Pooled per-point mean/std from accumulated MC moment sums
+/// (`sum[i] = Σ_s x_si`, `sumsq[i] = Σ_s x_si²` over all `s` samples).
+/// This is the fleet's MC-shard reduction: each engine returns its
+/// shard's partial sums, the coordinator adds them element-wise and
+/// finalises here. Matches [`mc_mean_std`] (sample std, n−1 divisor) up
+/// to f64-accumulation order.
+pub fn pooled_mean_std(
+    sum: &[f64],
+    sumsq: &[f64],
+    s: usize,
+) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(sum.len(), sumsq.len());
+    assert!(s > 0, "pooled moments need at least one sample");
+    let n = sum.len();
+    let mut mean = vec![0f32; n];
+    let mut std = vec![0f32; n];
+    for i in 0..n {
+        let m = sum[i] / s as f64;
+        mean[i] = m as f32;
+        if s > 1 {
+            let var =
+                ((sumsq[i] - s as f64 * m * m) / (s as f64 - 1.0)).max(0.0);
+            std[i] = var.sqrt() as f32;
+        }
+    }
+    (mean, std)
+}
+
 /// Average categorical distribution over S samples: `probs` [s][k] -> [k].
 pub fn mc_mean_probs(probs: &[f64], s: usize, k: usize) -> Vec<f64> {
     let mut mean = vec![0f64; k];
@@ -427,6 +455,38 @@ mod tests {
         let probs = [0.6, 0.4, 0.2, 0.8];
         let m = mc_mean_probs(&probs, 2, 2);
         assert!((m[0] - 0.4).abs() < 1e-12 && (m[1] - 0.6).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pooled_moments_match_direct_mc_aggregation() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(11);
+        let (s, n) = (10usize, 7usize);
+        let samples: Vec<f32> =
+            (0..s * n).map(|_| rng.normal() as f32).collect();
+        let (dm, ds) = mc_mean_std(&samples, s, n);
+        // Accumulate shard-style partial sums (3 + 4 + 3 samples).
+        let mut sum = vec![0f64; n];
+        let mut sumsq = vec![0f64; n];
+        for si in 0..s {
+            for i in 0..n {
+                let v = samples[si * n + i] as f64;
+                sum[i] += v;
+                sumsq[i] += v * v;
+            }
+        }
+        let (pm, ps) = pooled_mean_std(&sum, &sumsq, s);
+        for i in 0..n {
+            assert!((pm[i] - dm[i]).abs() < 1e-5, "mean[{i}]");
+            assert!((ps[i] - ds[i]).abs() < 1e-4, "std[{i}]");
+        }
+    }
+
+    #[test]
+    fn pooled_single_sample_has_zero_std() {
+        let (m, s) = pooled_mean_std(&[2.0, 4.0], &[4.0, 16.0], 1);
+        assert_eq!(m, vec![2.0, 4.0]);
+        assert_eq!(s, vec![0.0, 0.0]);
     }
 
     #[test]

@@ -94,6 +94,21 @@ impl Rng {
     }
 }
 
+/// Mix three seed words into one (SplitMix64 finalizer over a rotated
+/// combination). The serving fleet derives the per-(request, MC-sample)
+/// mask seed as `mix3(engine_seed, request_seed, sample_index)`, which is
+/// what makes MC-shard serving produce the *same* sample set no matter
+/// how many engines the samples are split across.
+pub fn mix3(a: u64, b: u64, c: u64) -> u64 {
+    let mut z = a
+        .wrapping_mul(0x9E3779B97F4A7C15)
+        .wrapping_add(b.rotate_left(23) ^ 0xD1B54A32D192ED03)
+        .wrapping_add(c.rotate_left(47));
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -165,5 +180,17 @@ mod tests {
         let mut f1 = r.fork();
         let mut f2 = r.fork();
         assert_ne!(f1.next_u64(), f2.next_u64());
+    }
+
+    #[test]
+    fn mix3_is_deterministic_and_sensitive() {
+        assert_eq!(mix3(1, 2, 3), mix3(1, 2, 3));
+        // Each argument position must perturb the output.
+        let base = mix3(1, 2, 3);
+        assert_ne!(base, mix3(2, 2, 3));
+        assert_ne!(base, mix3(1, 3, 3));
+        assert_ne!(base, mix3(1, 2, 4));
+        // Argument order matters (positions are not interchangeable).
+        assert_ne!(mix3(1, 2, 3), mix3(3, 2, 1));
     }
 }

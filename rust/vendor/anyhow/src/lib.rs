@@ -1,0 +1,251 @@
+//! Offline drop-in subset of [dtolnay/anyhow](https://github.com/dtolnay/anyhow).
+//!
+//! The reproduction container has no crates.io access, so the crate's one
+//! external dependency is vendored as the minimal API surface the tree
+//! actually uses: [`Error`], [`Result`], the [`anyhow!`]/[`bail!`]/
+//! [`ensure!`] macros and the [`Context`] extension trait (on both
+//! `Result` and `Option`). Error values carry a root message plus a stack
+//! of context strings; `{}` shows the outermost context, `{:#}` the full
+//! chain separated by `": "`, and `{:?}` an anyhow-style report — the
+//! three renderings the codebase relies on.
+
+use std::fmt;
+
+/// Dynamic error with a context chain (message-only — no backtraces, no
+/// downcasting; nothing in this tree uses either).
+pub struct Error {
+    /// Root cause message.
+    msg: String,
+    /// Contexts, innermost first (pushed by [`Context::context`]).
+    contexts: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Self { msg: message.to_string(), contexts: Vec::new() }
+    }
+
+    /// Attach a higher-level context (outermost last).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.contexts.push(context.to_string());
+        self
+    }
+
+    /// The chain outermost-first, ending at the root cause.
+    fn chain(&self) -> impl Iterator<Item = &str> {
+        self.contexts
+            .iter()
+            .rev()
+            .map(String::as_str)
+            .chain(std::iter::once(self.msg.as_str()))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}`: the whole chain on one line.
+            let joined: Vec<&str> = self.chain().collect();
+            write!(f, "{}", joined.join(": "))
+        } else {
+            // `{}`: outermost context only (anyhow semantics).
+            let outer = self.contexts.last().map(String::as_str);
+            write!(f, "{}", outer.unwrap_or(&self.msg))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut chain = self.chain();
+        write!(f, "{}", chain.next().unwrap_or(""))?;
+        let rest: Vec<&str> = chain.collect();
+        if !rest.is_empty() {
+            write!(f, "\n\nCaused by:")?;
+            if rest.len() == 1 {
+                write!(f, "\n    {}", rest[0])?;
+            } else {
+                for (i, c) in rest.iter().enumerate() {
+                    write!(f, "\n    {i}: {c}")?;
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like real anyhow, `Error` deliberately does NOT implement
+// `std::error::Error` — that is what makes the blanket `From` below
+// coherent with the reflexive `From<Error> for Error`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(err: E) -> Self {
+        // Flatten the source chain into context strings so `{:#}` and
+        // `{:?}` keep showing causes.
+        let mut contexts = Vec::new();
+        let top = err.to_string();
+        let mut source = err.source();
+        let mut msgs = Vec::new();
+        while let Some(s) = source {
+            msgs.push(s.to_string());
+            source = s.source();
+        }
+        // Innermost cause becomes the root message.
+        let msg = msgs.pop().unwrap_or_else(|| top.clone());
+        if msg != top {
+            contexts.extend(msgs.into_iter().rev());
+            contexts.push(top);
+        }
+        Self { msg, contexts }
+    }
+}
+
+/// `anyhow::Result<T>` — plain `Result` defaulting the error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding `.context(..)` / `.with_context(..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error>;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T, E> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(
+        self,
+        context: C,
+    ) -> Result<T, Error> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("Condition failed: `{}`", stringify!($cond));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn display_shows_outermost_context() {
+        let e: Error = Error::msg("root").context("mid").context("outer");
+        assert_eq!(format!("{e}"), "outer");
+        assert_eq!(format!("{e:#}"), "outer: mid: root");
+        let dbg = format!("{e:?}");
+        assert!(dbg.contains("Caused by"), "{dbg}");
+        assert!(dbg.contains("root"), "{dbg}");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn inner() -> Result<u32> {
+            let n: u32 = "notanum".parse()?;
+            Ok(n)
+        }
+        assert!(inner().is_err());
+    }
+
+    #[test]
+    fn context_on_result_and_option() {
+        let r: std::result::Result<(), std::io::Error> = Err(io_err());
+        let e = r.context("reading config").unwrap_err();
+        assert_eq!(format!("{e}"), "reading config");
+        assert!(format!("{e:#}").contains("gone"));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(format!("{e}"), "missing key");
+    }
+
+    #[test]
+    fn macros() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let s = 4usize;
+        let e = anyhow!("no fwd_n{s} artifact");
+        assert_eq!(e.to_string(), "no fwd_n4 artifact");
+        let msg = String::from("from a value");
+        let e = anyhow!(msg);
+        assert_eq!(e.to_string(), "from a value");
+
+        fn f(flag: bool) -> Result<()> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always fails after ensure")
+        }
+        assert_eq!(f(false).unwrap_err().to_string(), "flag was false");
+        assert_eq!(
+            f(true).unwrap_err().to_string(),
+            "always fails after ensure"
+        );
+    }
+}
