@@ -11,12 +11,17 @@
 //!   fan_out         4 engines, round-robin
 //!   fleet_scaling   1/2/4/8 engines, least-loaded
 //!   mc_shard        1/2/4 engines, MC-shard sample parallelism
+//!   adaptive_mc     1 engine rr + 4 engines mc-shard with the adaptive
+//!                   early-exit controller, vs. the fixed-S baseline
+//!                   (mean samples used, samples-saved %, tier counts)
 //!
 //! Checks printed at the end:
 //!   * fan-out and 4-way MC-shard throughput vs. baseline (target ≥ 2x),
 //!   * MC-shard prediction checksums vs. baseline (must match to 1e-3 —
 //!     the sample-seeding invariant). A numeric mismatch exits non-zero;
-//!     a missed throughput target only warns (machine-dependent).
+//!     a missed throughput target only warns (machine-dependent),
+//!   * adaptive-MC accounting: tier counts must cover every request and
+//!     mean samples must respect the [s_min, S] envelope (hard FAIL).
 //!
 //! Env: REPRO_BIN overrides the binary path; REPRO_BENCH_REQUESTS and
 //! REPRO_BENCH_SAMPLES scale the load (defaults 64 requests, S = 24).
@@ -53,6 +58,17 @@ fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
+/// Adaptive-MC accounting parsed from the serve JSON's nested
+/// `"adaptive"` object.
+struct AdaptiveStats {
+    mean_samples: f64,
+    samples_saved_pct: f64,
+    converged: usize,
+    accept: usize,
+    defer: usize,
+    abstain: usize,
+}
+
 /// One `repro serve --json` run, parsed.
 struct Run {
     engines: usize,
@@ -64,6 +80,7 @@ struct Run {
     e2e_p99_ms: f64,
     pred_checksum: f64,
     unc_checksum: f64,
+    adaptive: Option<AdaptiveStats>,
 }
 
 fn serve(
@@ -72,24 +89,27 @@ fn serve(
     router: &str,
     requests: usize,
     samples: usize,
+    extra: &[&str],
 ) -> Run {
+    let mut argv = vec![
+        "serve".to_string(),
+        "--arch".to_string(),
+        ARCH.to_string(),
+        "--engines".to_string(),
+        engines.to_string(),
+        "--router".to_string(),
+        router.to_string(),
+        "--backend".to_string(),
+        "fpga".to_string(),
+        "--requests".to_string(),
+        requests.to_string(),
+        "--samples".to_string(),
+        samples.to_string(),
+        "--json".to_string(),
+    ];
+    argv.extend(extra.iter().map(|s| s.to_string()));
     let out = Command::new(bin)
-        .args([
-            "serve",
-            "--arch",
-            ARCH,
-            "--engines",
-            &engines.to_string(),
-            "--router",
-            router,
-            "--backend",
-            "fpga",
-            "--requests",
-            &requests.to_string(),
-            "--samples",
-            &samples.to_string(),
-            "--json",
-        ])
+        .args(&argv)
         .output()
         .expect("spawn repro serve");
     assert!(
@@ -116,6 +136,27 @@ fn serve(
         .and_then(|o| o.get("p99"))
         .and_then(Json::as_f64)
         .expect("e2e_ms.p99");
+    let adaptive = j.get("adaptive").map(|a| {
+        let g = |key: &str| -> f64 {
+            a.get(key).and_then(Json::as_f64).unwrap_or_else(|| {
+                panic!("adaptive object missing {key:?} in {line}")
+            })
+        };
+        let tiers = a.get("tiers").expect("adaptive.tiers");
+        let t = |key: &str| -> usize {
+            tiers.get(key).and_then(Json::as_usize).unwrap_or_else(|| {
+                panic!("adaptive.tiers missing {key:?} in {line}")
+            })
+        };
+        AdaptiveStats {
+            mean_samples: g("mean_samples"),
+            samples_saved_pct: g("samples_saved_pct"),
+            converged: g("converged") as usize,
+            accept: t("accept"),
+            defer: t("defer"),
+            abstain: t("abstain"),
+        }
+    });
     Run {
         engines,
         router: router.to_string(),
@@ -126,6 +167,7 @@ fn serve(
         e2e_p99_ms,
         pred_checksum: f("pred_checksum"),
         unc_checksum: f("unc_checksum"),
+        adaptive,
     }
 }
 
@@ -173,19 +215,19 @@ fn main() {
 
     // --- baseline: one FPGA-sim engine, streamed ---
     println!("[baseline] 1 engine, rr");
-    let baseline = serve(&bin, 1, "rr", requests, samples);
+    let baseline = serve(&bin, 1, "rr", requests, samples, &[]);
     write_scenario(&results, "baseline", &baseline.json_line);
 
     // --- fan-out: 4 engines, whole-request round-robin ---
     println!("[fan_out] 4 engines, rr");
-    let fan_out = serve(&bin, 4, "rr", requests, samples);
+    let fan_out = serve(&bin, 4, "rr", requests, samples, &[]);
     write_scenario(&results, "fan_out", &fan_out.json_line);
 
     // --- fleet-scaling: throughput trajectory over engine count ---
     let mut scaling = Vec::new();
     for n in [1usize, 2, 4, 8] {
         println!("[fleet_scaling] {n} engines, least-loaded");
-        scaling.push(serve(&bin, n, "least-loaded", requests, samples));
+        scaling.push(serve(&bin, n, "least-loaded", requests, samples, &[]));
     }
     let refs: Vec<&Run> = scaling.iter().collect();
     write_scenario(
@@ -198,7 +240,7 @@ fn main() {
     let mut shard = Vec::new();
     for n in [1usize, 2, 4] {
         println!("[mc_shard] {n} engines, mc-shard");
-        shard.push(serve(&bin, n, "mc-shard", requests, samples));
+        shard.push(serve(&bin, n, "mc-shard", requests, samples, &[]));
     }
     let mut worst_pred = 0f64;
     let mut worst_unc = 0f64;
@@ -221,6 +263,72 @@ fn main() {
         &points_summary("mc_shard", &refs, &extra),
     );
 
+    // --- adaptive MC: early-exit controller vs. the fixed-S baseline ---
+    let s_min = 4usize.min(samples);
+    let adaptive_flags: Vec<String> = vec![
+        "--adaptive-mc".into(),
+        "--target-ci".into(),
+        "0.05".into(),
+        "--s-min".into(),
+        s_min.to_string(),
+    ];
+    let flag_refs: Vec<&str> =
+        adaptive_flags.iter().map(String::as_str).collect();
+    let mut adaptive_runs = Vec::new();
+    for (n, router) in [(1usize, "rr"), (4, "mc-shard")] {
+        println!("[adaptive_mc] {n} engines, {router}, target-ci 0.05");
+        adaptive_runs
+            .push(serve(&bin, n, router, requests, samples, &flag_refs));
+    }
+    let mut adaptive_ok = true;
+    let adaptive_points: Vec<String> = adaptive_runs
+        .iter()
+        .map(|r| {
+            let a = r
+                .adaptive
+                .as_ref()
+                .expect("--adaptive-mc run must report adaptive stats");
+            // Accounting invariants: every served request is tiered and
+            // the sample budget respects the envelope.
+            adaptive_ok &= a.accept + a.defer + a.abstain == r.served;
+            adaptive_ok &= a.mean_samples >= s_min as f64 - 1e-9
+                && a.mean_samples <= samples as f64 + 1e-9;
+            format!(
+                "{{\"engines\":{},\"router\":\"{}\",\"served\":{},\
+                 \"mean_samples\":{:.3},\"samples_saved_pct\":{:.2},\
+                 \"converged\":{},\"tiers\":{{\"accept\":{},\
+                 \"defer\":{},\"abstain\":{}}},\
+                 \"throughput_rps\":{:.3},\"e2e_p99_ms\":{:.4}}}",
+                r.engines,
+                r.router,
+                r.served,
+                a.mean_samples,
+                a.samples_saved_pct,
+                a.converged,
+                a.accept,
+                a.defer,
+                a.abstain,
+                r.throughput,
+                r.e2e_p99_ms
+            )
+        })
+        .collect();
+    write_scenario(
+        &results,
+        "adaptive_mc",
+        &format!(
+            "{{\"scenario\":\"adaptive_mc\",\"arch\":\"{ARCH}\",\
+             \"fixed_s\":{samples},\"s_min\":{s_min},\
+             \"target_ci\":0.05,\"baseline_throughput_rps\":{:.3},\
+             \"baseline_e2e_p99_ms\":{:.4},\"points\":[{}],\
+             \"accounting_ok\":{}}}",
+            baseline.throughput,
+            baseline.e2e_p99_ms,
+            adaptive_points.join(","),
+            adaptive_ok
+        ),
+    );
+
     // --- report ---
     println!("\nscenario           engines  served  rejected   req/s   vs base");
     let mut rows: Vec<(&str, &Run)> = vec![
@@ -232,6 +340,9 @@ fn main() {
     }
     for r in &shard {
         rows.push(("mc_shard", r));
+    }
+    for r in &adaptive_runs {
+        rows.push(("adaptive_mc", r));
     }
     for (name, r) in &rows {
         println!(
@@ -260,8 +371,29 @@ fn main() {
          max |Δstd| {worst_unc:.2e}  {}",
         if numerics_ok { "PASS" } else { "FAIL" }
     );
-    if !numerics_ok {
-        // Sample-seeding invariant broken — that is a correctness bug.
+    for r in &adaptive_runs {
+        let a = r.adaptive.as_ref().expect("adaptive stats");
+        println!(
+            "adaptive-mc [{} engines, {}]: mean samples {:.2}/{} \
+             ({:.1}% saved)  tiers accept {} / defer {} / abstain {}",
+            r.engines,
+            r.router,
+            a.mean_samples,
+            samples,
+            a.samples_saved_pct,
+            a.accept,
+            a.defer,
+            a.abstain
+        );
+    }
+    println!(
+        "adaptive-mc accounting (tiers cover requests, samples within \
+         [{s_min}, {samples}]): {}",
+        if adaptive_ok { "PASS" } else { "FAIL" }
+    );
+    if !numerics_ok || !adaptive_ok {
+        // Sample-seeding invariant or adaptive accounting broken —
+        // correctness bugs, not perf regressions.
         std::process::exit(1);
     }
 }

@@ -67,6 +67,26 @@ impl PartialPrediction {
     }
 }
 
+/// A shard of one request's MC schedule as *raw samples* — the adaptive
+/// serving path's reply unit. Unlike [`PartialPrediction`] the samples
+/// are not pre-reduced: the coordinator's
+/// [`crate::uq::McAccumulator`] needs them individually (a) to reduce
+/// in ascending-`k` order regardless of shard arrival order (the
+/// bit-identity invariant) and (b) to run the epistemic/aleatoric
+/// decomposition behind the risk tiers.
+#[derive(Debug, Clone)]
+pub struct SampleBlock {
+    /// First sample index of the shard within the request's schedule.
+    pub start: usize,
+    /// Samples in this shard.
+    pub count: usize,
+    pub out_len: usize,
+    /// Raw outputs, `[count][out_len]` row-major.
+    pub samples: Vec<f32>,
+    /// Engine-model latency for computing the shard, in ms.
+    pub model_latency_ms: f64,
+}
+
 /// Engine selector.
 pub enum EngineKind {
     /// Fixed-point accelerator simulator + cycle-level timing.
@@ -244,6 +264,27 @@ impl Engine {
         count: usize,
         group: usize,
     ) -> Result<PartialPrediction> {
+        let block = self.infer_samples(beat, req_seed, start, count, group)?;
+        Ok(PartialPrediction::from_samples(
+            &block.samples,
+            block.count,
+            block.out_len,
+            block.model_latency_ms,
+        ))
+    }
+
+    /// Like [`Engine::infer_partial`] but returning the shard's raw
+    /// samples instead of moment sums — the adaptive-MC reply unit.
+    /// Same seeding contract: sample `k` is a pure function of
+    /// `(engine_seed, req_seed, k)`.
+    pub fn infer_samples(
+        &mut self,
+        beat: &[f32],
+        req_seed: u64,
+        start: usize,
+        count: usize,
+        group: usize,
+    ) -> Result<SampleBlock> {
         anyhow::ensure!(count > 0, "empty MC shard");
         match &mut self.kind {
             EngineKind::FpgaSim { accel, sim } => {
@@ -252,12 +293,13 @@ impl Engine {
                 // MC-parallel win).
                 let ms = sim.simulate_ms(1, count, ZC706.clock_hz);
                 let out = accel.predict_seeded(beat, req_seed, start, count);
-                Ok(PartialPrediction::from_samples(
-                    &out.samples,
+                Ok(SampleBlock {
+                    start,
                     count,
-                    out.out_len,
-                    ms,
-                ))
+                    out_len: out.out_len,
+                    samples: out.samples,
+                    model_latency_ms: ms,
+                })
             }
             EngineKind::GpuModel { model, seed, .. } => {
                 let cfg = model.cfg.clone();
@@ -274,9 +316,13 @@ impl Engine {
                     };
                     samples.extend(model.forward(beat, 1, &masks));
                 }
-                Ok(PartialPrediction::from_samples(
-                    &samples, count, out_len, ms,
-                ))
+                Ok(SampleBlock {
+                    start,
+                    count,
+                    out_len,
+                    samples,
+                    model_latency_ms: ms,
+                })
             }
             EngineKind::PjrtCpu { runtime, cfg, params, seed, .. } => {
                 // Needs a fwd artifact with rows = the shard size.
@@ -312,11 +358,15 @@ impl Engine {
                 let exe = runtime.load(&meta.name)?;
                 let out = exe.run(&args)?;
                 let ms = t0.elapsed().as_secs_f64() * 1e3;
-                let y = &out[0];
+                let y = out.into_iter().next().expect("fwd output");
                 let out_len = y.data.len() / count;
-                Ok(PartialPrediction::from_samples(
-                    &y.data, count, out_len, ms,
-                ))
+                Ok(SampleBlock {
+                    start,
+                    count,
+                    out_len,
+                    samples: y.data,
+                    model_latency_ms: ms,
+                })
             }
         }
     }
@@ -451,6 +501,34 @@ mod tests {
         for i in 0..wm.len() {
             assert!((mm[i] - wm[i]).abs() < 1e-5, "mean[{i}]");
             assert!((ms[i] - ws[i]).abs() < 1e-4, "std[{i}]");
+        }
+    }
+
+    /// `infer_partial` is exactly `infer_samples` + moment reduction,
+    /// for every backend shape we can build offline.
+    #[test]
+    fn raw_samples_reduce_to_the_partial_prediction() {
+        let (cfg, model) = tiny_model("YY");
+        let mut fpga =
+            Engine::fpga(&cfg, &model, ReuseFactors::new(1, 1, 1), 8, 9);
+        let (c2, m2) = tiny_model("YY");
+        let _ = c2;
+        let mut gpu = Engine::gpu(m2, 8, 9);
+        for e in [&mut fpga, &mut gpu] {
+            let block = e.infer_samples(&beat20(), 7, 2, 5, 1).unwrap();
+            assert_eq!(block.start, 2);
+            assert_eq!(block.count, 5);
+            assert_eq!(block.samples.len(), 5 * block.out_len);
+            let p = e.infer_partial(&beat20(), 7, 2, 5, 1).unwrap();
+            let from_raw = PartialPrediction::from_samples(
+                &block.samples,
+                block.count,
+                block.out_len,
+                block.model_latency_ms,
+            );
+            assert_eq!(p.sum, from_raw.sum);
+            assert_eq!(p.sumsq, from_raw.sumsq);
+            assert_eq!(p.count, from_raw.count);
         }
     }
 

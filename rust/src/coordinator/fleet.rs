@@ -30,11 +30,14 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatchPolicy};
-use super::engines::{Engine, PartialPrediction, Prediction};
+use super::engines::{Engine, PartialPrediction, Prediction, SampleBlock};
 use super::router::{Router, RouterPolicy};
 use super::server::ServeSummary;
 use super::stats::LatencyStats;
 use crate::metrics::pooled_mean_std;
+use crate::uq::controller::{
+    AdaptiveController, AdaptiveMcConfig, McDecision,
+};
 
 /// Fleet configuration.
 pub struct FleetConfig {
@@ -65,6 +68,15 @@ impl Default for FleetConfig {
     }
 }
 
+/// What a worker sends back for one shard: pre-reduced moment sums on
+/// the fixed-S path, raw samples on the adaptive path (the coordinator
+/// needs individual samples for order-stable reduction and the
+/// epistemic decomposition).
+enum ShardReply {
+    Moments(PartialPrediction),
+    Samples(SampleBlock),
+}
+
 /// One unit of engine work: a whole request (`start = 0, count = S`) or
 /// one MC shard of it.
 struct WorkItem {
@@ -72,10 +84,12 @@ struct WorkItem {
     req_seed: u64,
     start: usize,
     count: usize,
+    /// `true` requests raw samples ([`ShardReply::Samples`]).
+    raw: bool,
     enqueued: Instant,
-    /// Shard outcome: partial sums, or the engine error (stringified so
-    /// the worker keeps running and the waiter can surface it).
-    reply: mpsc::Sender<Result<PartialPrediction, String>>,
+    /// Shard outcome, or the engine error (stringified so the worker
+    /// keeps running and the waiter can surface it).
+    reply: mpsc::Sender<Result<ShardReply, String>>,
 }
 
 /// Handle for one in-flight request: hold it, then pass it back to
@@ -85,7 +99,38 @@ pub struct Ticket {
     enqueued: Instant,
     expected: usize,
     total_s: usize,
-    rx: mpsc::Receiver<Result<PartialPrediction, String>>,
+    rx: mpsc::Receiver<Result<ShardReply, String>>,
+}
+
+/// Handle for one in-flight *adaptive* request
+/// ([`Fleet::submit_adaptive`]): carries the sampling envelope and the
+/// beat so [`Fleet::wait_adaptive`] can dispatch follow-up rounds.
+pub struct AdaptiveTicket {
+    pub id: u64,
+    req_seed: u64,
+    beat: Arc<Vec<f32>>,
+    mc: AdaptiveMcConfig,
+    enqueued: Instant,
+    /// Shards outstanding from the first round.
+    outstanding: usize,
+    rx: mpsc::Receiver<Result<ShardReply, String>>,
+    reply_tx: mpsc::Sender<Result<ShardReply, String>>,
+}
+
+/// A completed adaptive request.
+pub struct AdaptiveResponse {
+    pub id: u64,
+    pub prediction: Prediction,
+    /// Raw MC samples in ascending-`k` order, `[s_used][out_len]`.
+    pub samples: Vec<f32>,
+    pub out_len: usize,
+    /// Samples actually drawn (`<= s_max`).
+    pub s_used: usize,
+    /// `true` if the CI stopping rule fired before `s_max`.
+    pub converged: bool,
+    /// Sequential sampling rounds the request took.
+    pub rounds: usize,
+    pub e2e_ms: f64,
 }
 
 /// A completed fleet request.
@@ -204,10 +249,25 @@ impl Fleet {
         self.txs.len()
     }
 
-    /// Submit a beat. Returns `None` if admission control shed it (any
-    /// target queue full with `shed = true`); shards already enqueued for
-    /// a shed request still execute but their replies are discarded.
+    /// Submit a beat at the fleet's configured S. Returns `None` if
+    /// admission control shed it (any target queue full with
+    /// `shed = true`); shards already enqueued for a shed request still
+    /// execute but their replies are discarded.
     pub fn submit(&mut self, beat: Vec<f32>) -> Option<Ticket> {
+        let s = self.samples;
+        self.submit_with_samples(beat, s)
+    }
+
+    /// Submit a beat with a per-request sample count — the fixed-S
+    /// entry point for callers that already know how much evidence a
+    /// request needs (the adaptive path instead discovers it, see
+    /// [`Fleet::submit_adaptive`]).
+    pub fn submit_with_samples(
+        &mut self,
+        beat: Vec<f32>,
+        s: usize,
+    ) -> Option<Ticket> {
+        assert!(s >= 1, "S must be positive");
         let id = self.next_id;
         self.next_id += 1;
         // The request seed IS the request id: every engine derives the
@@ -216,16 +276,86 @@ impl Fleet {
         let enqueued = Instant::now();
         let beat = Arc::new(beat);
         let (reply_tx, reply_rx) = mpsc::channel();
+        let expected = match self.dispatch_round(
+            &beat, req_seed, 0, s, false, enqueued, &reply_tx, self.shed,
+        ) {
+            Some(n) => n,
+            None => {
+                // Reject the whole request; dropping `reply_rx` voids
+                // any shards already enqueued.
+                self.rejected += 1;
+                return None;
+            }
+        };
+        Some(Ticket { id, enqueued, expected, total_s: s, rx: reply_rx })
+    }
 
+    /// Submit a beat under an adaptive sampling envelope: the first
+    /// round draws `mc.s_min` samples; [`Fleet::wait_adaptive`]
+    /// dispatches follow-up rounds until the CI stopping rule fires or
+    /// `mc.s_max` is exhausted. Admission control (shedding) applies to
+    /// the first round only — a request the fleet has started sampling
+    /// is never dropped half-served.
+    pub fn submit_adaptive(
+        &mut self,
+        beat: Vec<f32>,
+        mc: &AdaptiveMcConfig,
+    ) -> Option<AdaptiveTicket> {
+        mc.validate().expect("invalid AdaptiveMcConfig");
+        let id = self.next_id;
+        self.next_id += 1;
+        let req_seed = id;
+        let enqueued = Instant::now();
+        let beat = Arc::new(beat);
+        let (reply_tx, reply_rx) = mpsc::channel();
+        let outstanding = match self.dispatch_round(
+            &beat, req_seed, 0, mc.s_min, true, enqueued, &reply_tx,
+            self.shed,
+        ) {
+            Some(n) => n,
+            None => {
+                self.rejected += 1;
+                return None;
+            }
+        };
+        Some(AdaptiveTicket {
+            id,
+            req_seed,
+            beat,
+            mc: *mc,
+            enqueued,
+            outstanding,
+            rx: reply_rx,
+            reply_tx,
+        })
+    }
+
+    /// Place one sampling round `start..start + count` on the fleet
+    /// according to the router policy (MC-shard splits it across all
+    /// engines; rr/least-loaded give the whole round to one engine).
+    /// Returns the number of shards dispatched, or `None` if `shed` and
+    /// a target queue was full.
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_round(
+        &mut self,
+        beat: &Arc<Vec<f32>>,
+        req_seed: u64,
+        start: usize,
+        count: usize,
+        raw: bool,
+        enqueued: Instant,
+        reply_tx: &mpsc::Sender<Result<ShardReply, String>>,
+        shed: bool,
+    ) -> Option<usize> {
         // (engine, start, count) assignments.
         let assignments: Vec<(usize, usize, usize)> =
             if self.router.policy() == RouterPolicy::McShard {
                 self.router
-                    .shards(self.samples, self.txs.len())
+                    .shards(count, self.txs.len())
                     .into_iter()
                     .enumerate()
-                    .filter(|&(_, (_, count))| count > 0)
-                    .map(|(j, (start, count))| (j, start, count))
+                    .filter(|&(_, (_, c))| c > 0)
+                    .map(|(j, (s0, c))| (j, start + s0, c))
                     .collect()
             } else {
                 let loads: Vec<usize> = self
@@ -233,42 +363,32 @@ impl Fleet {
                     .iter()
                     .map(|l| l.load(Ordering::Acquire))
                     .collect();
-                vec![(self.router.route(&loads), 0, self.samples)]
+                vec![(self.router.route(&loads), start, count)]
             };
 
-        for &(j, start, count) in &assignments {
+        for &(j, s0, c) in &assignments {
             let item = WorkItem {
-                beat: Arc::clone(&beat),
+                beat: Arc::clone(beat),
                 req_seed,
-                start,
-                count,
+                start: s0,
+                count: c,
+                raw,
                 enqueued,
                 reply: reply_tx.clone(),
             };
-            if self.shed {
+            if shed {
                 match self.txs[j].try_send(item) {
                     Ok(()) => {
                         self.loads[j].fetch_add(1, Ordering::AcqRel);
                     }
-                    Err(_) => {
-                        // Reject the whole request; dropping `reply_rx`
-                        // voids any shards already enqueued.
-                        self.rejected += 1;
-                        return None;
-                    }
+                    Err(_) => return None,
                 }
             } else {
                 self.loads[j].fetch_add(1, Ordering::AcqRel);
                 self.txs[j].send(item).expect("fleet worker gone");
             }
         }
-        Some(Ticket {
-            id,
-            enqueued,
-            expected: assignments.len(),
-            total_s: self.samples,
-            rx: reply_rx,
-        })
+        Some(assignments.len())
     }
 
     /// Block until all of a ticket's shards arrive, reduce them, and
@@ -281,7 +401,7 @@ impl Fleet {
         let mut got_s = 0usize;
         let mut latency = 0f64;
         for _ in 0..ticket.expected {
-            let partial = ticket
+            let reply = ticket
                 .rx
                 .recv_timeout(Duration::from_secs(120))
                 .map_err(|e| {
@@ -296,6 +416,15 @@ impl Fleet {
                         ticket.id
                     )
                 })?;
+            let partial = match reply {
+                ShardReply::Moments(p) => p,
+                ShardReply::Samples(_) => {
+                    anyhow::bail!(
+                        "request {}: raw-sample reply on the fixed path",
+                        ticket.id
+                    )
+                }
+            };
             if sum.is_empty() {
                 sum = vec![0.0; partial.sum.len()];
                 sumsq = vec![0.0; partial.sum.len()];
@@ -318,6 +447,101 @@ impl Fleet {
             prediction: Prediction { mean, std, model_latency_ms: latency },
             e2e_ms,
             shards: ticket.expected,
+        })
+    }
+
+    /// Drive one adaptive request to completion: collect the round in
+    /// flight, consult the controller, dispatch follow-up rounds until
+    /// it stops, then reduce. Sample blocks are merged in ascending
+    /// sample order, so for a fixed seed the result is bit-identical to
+    /// the single-engine eager path — for any engine count, router
+    /// policy or chunking (the determinism invariant; tested below and
+    /// in `fpga::accel`).
+    pub fn wait_adaptive(
+        &mut self,
+        ticket: AdaptiveTicket,
+    ) -> Result<AdaptiveResponse> {
+        let mut ctl: Option<AdaptiveController> = None;
+        let mut outstanding = ticket.outstanding;
+        let mut latency_ms = 0f64;
+        let mut rounds = 0usize;
+        let converged = loop {
+            // Collect the round in flight. Shards run in parallel, so
+            // the round costs its slowest shard; rounds are sequential,
+            // so the request costs the sum over rounds.
+            let mut round_ms = 0f64;
+            for _ in 0..outstanding {
+                let block = ticket
+                    .rx
+                    .recv_timeout(Duration::from_secs(120))
+                    .map_err(|e| {
+                        anyhow::anyhow!(
+                            "request {}: shard reply lost ({e:?})",
+                            ticket.id
+                        )
+                    })?
+                    .map_err(|msg| {
+                        anyhow::anyhow!(
+                            "request {}: engine failed: {msg}",
+                            ticket.id
+                        )
+                    })?;
+                let block = match block {
+                    ShardReply::Samples(b) => b,
+                    ShardReply::Moments(_) => anyhow::bail!(
+                        "request {}: moment reply on the adaptive path",
+                        ticket.id
+                    ),
+                };
+                round_ms = round_ms.max(block.model_latency_ms);
+                ctl.get_or_insert_with(|| {
+                    AdaptiveController::new(ticket.mc, block.out_len)
+                })
+                .push_block(block.start, block.samples);
+            }
+            latency_ms += round_ms;
+            rounds += 1;
+            let ctl_ref =
+                ctl.as_ref().expect("round collected at least one shard");
+            match ctl_ref.decision() {
+                McDecision::Converged => break true,
+                McDecision::Exhausted => break false,
+                McDecision::Draw { start, count } => {
+                    // Later rounds bypass admission control: the fleet
+                    // has already invested in this request.
+                    outstanding = self
+                        .dispatch_round(
+                            &ticket.beat,
+                            ticket.req_seed,
+                            start,
+                            count,
+                            true,
+                            ticket.enqueued,
+                            &ticket.reply_tx,
+                            false,
+                        )
+                        .expect("unshed dispatch cannot fail");
+                }
+            }
+        };
+        let ctl = ctl.expect("at least one round collected");
+        let (mean, std) = ctl.acc.finalize();
+        let e2e_ms = ticket.enqueued.elapsed().as_secs_f64() * 1e3;
+        self.e2e.record_ms(e2e_ms);
+        self.served += 1;
+        Ok(AdaptiveResponse {
+            id: ticket.id,
+            prediction: Prediction {
+                mean,
+                std,
+                model_latency_ms: latency_ms,
+            },
+            samples: ctl.acc.samples_ordered(),
+            out_len: ctl.acc.out_len(),
+            s_used: ctl.acc.count(),
+            converged,
+            rounds,
+            e2e_ms,
         })
     }
 
@@ -384,23 +608,41 @@ fn worker_loop(
             batches += 1;
             let group = batch.items.len();
             for item in batch.items {
-                let result = engine.infer_partial(
-                    item.beat.as_slice(),
-                    item.req_seed,
-                    item.start,
-                    item.count,
-                    group,
-                );
+                let result: Result<ShardReply> = if item.raw {
+                    engine
+                        .infer_samples(
+                            item.beat.as_slice(),
+                            item.req_seed,
+                            item.start,
+                            item.count,
+                            group,
+                        )
+                        .map(ShardReply::Samples)
+                } else {
+                    engine
+                        .infer_partial(
+                            item.beat.as_slice(),
+                            item.req_seed,
+                            item.start,
+                            item.count,
+                            group,
+                        )
+                        .map(ShardReply::Moments)
+                };
                 load.fetch_sub(1, Ordering::AcqRel);
                 match result {
-                    Ok(partial) => {
+                    Ok(reply) => {
+                        let ms = match &reply {
+                            ShardReply::Moments(p) => p.model_latency_ms,
+                            ShardReply::Samples(b) => b.model_latency_ms,
+                        };
                         e2e.record_ms(
                             item.enqueued.elapsed().as_secs_f64() * 1e3,
                         );
-                        eng.record_ms(partial.model_latency_ms);
+                        eng.record_ms(ms);
                         served += 1;
                         // Receiver may be gone (shed request): ignore.
-                        let _ = item.reply.send(Ok(partial));
+                        let _ = item.reply.send(Ok(reply));
                     }
                     Err(e) => {
                         eprintln!("fleet engine error: {e:#}");
@@ -602,6 +844,129 @@ mod tests {
             summary.rejected > 0,
             "64 instant submits into a depth-1 queue must shed"
         );
+    }
+
+    /// ISSUE 2 acceptance: with `s_max` samples forced (early exit
+    /// disabled), the adaptive path is *bit-identical* to the fixed-S
+    /// eager path for the same seed — for 1 engine and for N engines
+    /// under MC-shard.
+    #[test]
+    fn adaptive_forced_matches_fixed_path_bitwise_across_engine_counts() {
+        use crate::fpga::accel::Accelerator;
+        use crate::uq::McAccumulator;
+        let s_max = 8;
+        let design_seed = 9;
+        let mc = AdaptiveMcConfig {
+            s_min: 3,
+            s_max,
+            target_ci: 0.0, // force the full budget
+            z: 1.96,
+            chunk: 3,
+        };
+
+        // Fixed-S reference: eager seeded range on a bare accelerator,
+        // reduced the canonical way. Request seed 0 = first fleet id.
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        let mut accel = Accelerator::new(
+            &cfg,
+            &params,
+            ReuseFactors::new(2, 1, 1),
+            design_seed,
+        );
+        let whole = accel.predict_seeded(&beat(), 0, 0, s_max);
+        let mut acc = McAccumulator::new(whole.out_len);
+        acc.push_block(0, whole.samples);
+        let (fixed_mean, fixed_std) = acc.finalize();
+
+        for (engines, router) in
+            [(1usize, RouterPolicy::RoundRobin), (3, RouterPolicy::McShard)]
+        {
+            let mut fleet = Fleet::start(
+                FleetConfig {
+                    engines,
+                    router,
+                    samples: s_max,
+                    ..FleetConfig::default()
+                },
+                fpga_factories(engines, s_max, design_seed),
+            );
+            let t = fleet.submit_adaptive(beat(), &mc).unwrap();
+            let resp = fleet.wait_adaptive(t).expect("adaptive response");
+            fleet.join();
+            assert_eq!(resp.s_used, s_max, "{engines} engines: no exit");
+            assert!(!resp.converged);
+            assert_eq!(
+                resp.prediction.mean, fixed_mean,
+                "{engines} engines: mean must be bit-identical"
+            );
+            assert_eq!(
+                resp.prediction.std, fixed_std,
+                "{engines} engines: std must be bit-identical"
+            );
+            assert_eq!(resp.samples.len(), s_max * resp.out_len);
+        }
+    }
+
+    #[test]
+    fn adaptive_early_exit_saves_samples_in_the_fleet() {
+        let s_max = 24;
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                router: RouterPolicy::McShard,
+                samples: s_max,
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s_max, 5),
+        );
+        // Probabilities are bounded in [0, 1]: CI half-width at s = 4
+        // is far below 1.0, so this target always converges at s_min.
+        let mc = AdaptiveMcConfig {
+            s_min: 4,
+            s_max,
+            target_ci: 1.0,
+            z: 1.96,
+            chunk: 4,
+        };
+        let t = fleet.submit_adaptive(beat(), &mc).unwrap();
+        let resp = fleet.wait_adaptive(t).expect("adaptive response");
+        assert!(resp.converged);
+        assert_eq!(resp.s_used, 4, "converges at s_min");
+        assert_eq!(resp.rounds, 1);
+        assert!(resp.prediction.model_latency_ms > 0.0);
+        let summary = fleet.join();
+        assert_eq!(summary.served, 1);
+        assert_eq!(
+            summary.items(),
+            2,
+            "one 2-sample shard per engine, single round"
+        );
+    }
+
+    #[test]
+    fn per_request_sample_counts_are_honoured() {
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 1,
+                samples: 2,
+                ..FleetConfig::default()
+            },
+            fpga_factories(1, 2, 3),
+        );
+        let small = fleet.submit_with_samples(beat(), 1).unwrap();
+        let big = fleet.submit_with_samples(beat(), 6).unwrap();
+        let r_small = fleet.wait(small).expect("response");
+        let r_big = fleet.wait(big).expect("response");
+        // S = 1 has no spread; S = 6 on a Bayesian layer does.
+        assert!(r_small.prediction.std.iter().all(|&v| v == 0.0));
+        assert!(r_big.prediction.std.iter().any(|&v| v > 0.0));
+        // More samples cost more simulated hardware time.
+        assert!(
+            r_big.prediction.model_latency_ms
+                > r_small.prediction.model_latency_ms
+        );
+        fleet.join();
     }
 
     #[test]

@@ -12,7 +12,10 @@
 //! * latency/throughput metrics,
 //! * a sharded multi-engine fleet ([`fleet`]) with round-robin /
 //!   least-loaded / MC-shard placement ([`router`]) and queue-depth
-//!   admission control — see `docs/serving.md` for the architecture.
+//!   admission control — see `docs/serving.md` for the architecture,
+//! * adaptive per-request MC sampling ([`Fleet::submit_adaptive`] /
+//!   [`Fleet::wait_adaptive`]) driven by the [`crate::uq`] controller —
+//!   see `docs/uncertainty.md`.
 //!
 //! No tokio in this offline environment (DESIGN.md §Substitutions):
 //! std::thread + mpsc channels implement the same event loop.
@@ -26,8 +29,13 @@ pub mod server;
 pub mod stats;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
-pub use engines::{Engine, EngineKind, PartialPrediction, Prediction};
-pub use fleet::{Fleet, FleetConfig, FleetResponse, FleetSummary, Ticket};
+pub use engines::{
+    Engine, EngineKind, PartialPrediction, Prediction, SampleBlock,
+};
+pub use fleet::{
+    AdaptiveResponse, AdaptiveTicket, Fleet, FleetConfig, FleetResponse,
+    FleetSummary, Ticket,
+};
 pub use router::{Router, RouterPolicy};
 pub use server::{Server, ServerConfig, ServeSummary};
 pub use stats::LatencyStats;

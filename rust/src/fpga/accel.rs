@@ -10,6 +10,9 @@ use crate::hwmodel::resource::{ResourceEstimate, ResourceModel, ReuseFactors};
 use crate::lfsr::BernoulliSampler;
 use crate::nn::model::softmax_row;
 use crate::nn::Params;
+use crate::uq::controller::{
+    AdaptiveController, AdaptiveMcConfig, McDecision,
+};
 
 /// MC-aggregated prediction for one input beat.
 #[derive(Debug, Clone)]
@@ -46,6 +49,23 @@ impl McOutput {
         let _ = mean;
         std
     }
+}
+
+/// Result of one adaptive prediction ([`Accelerator::predict_adaptive`]).
+#[derive(Debug, Clone)]
+pub struct AdaptiveOutcome {
+    /// MC-mean output over the samples actually drawn.
+    pub mean: Vec<f32>,
+    /// Per-point MC std over the samples actually drawn.
+    pub std: Vec<f32>,
+    /// Raw samples in draw order, `[s_used][out_len]` row-major (the
+    /// risk policy's epistemic decomposition needs them).
+    pub samples: Vec<f32>,
+    /// Samples drawn before the stopping rule fired.
+    pub s_used: usize,
+    pub out_len: usize,
+    /// `true` if the CI rule fired before `s_max` was exhausted.
+    pub converged: bool,
 }
 
 /// The synthesised design: engines, samplers, reuse factors.
@@ -243,6 +263,43 @@ impl Accelerator {
         McOutput { samples, s: count, out_len }
     }
 
+    /// Adaptive Bayesian prediction: draw seeded MC passes incrementally
+    /// and stop once the controller's confidence-interval rule fires
+    /// (`docs/uncertainty.md`). Every pass goes through
+    /// [`Accelerator::predict_seeded`], so sample `k` is bit-identical
+    /// whether drawn here chunk-by-chunk, eagerly in one range, or on
+    /// another fleet engine — and with early exit disabled
+    /// (`target_ci <= 0`) the outcome reduces to exactly the fixed-S
+    /// path's sample set.
+    pub fn predict_adaptive(
+        &mut self,
+        beat: &[f32],
+        req_seed: u64,
+        cfg: &AdaptiveMcConfig,
+    ) -> AdaptiveOutcome {
+        let mut ctl = AdaptiveController::new(*cfg, self.cfg.out_len());
+        let converged = loop {
+            match ctl.decision() {
+                McDecision::Draw { start, count } => {
+                    let out =
+                        self.predict_seeded(beat, req_seed, start, count);
+                    ctl.push_block(start, out.samples);
+                }
+                McDecision::Converged => break true,
+                McDecision::Exhausted => break false,
+            }
+        };
+        let (mean, std) = ctl.acc.finalize();
+        AdaptiveOutcome {
+            mean,
+            std,
+            samples: ctl.acc.samples_ordered(),
+            s_used: ctl.acc.count(),
+            out_len: ctl.acc.out_len(),
+            converged,
+        }
+    }
+
     /// Post-synthesis resource report (the Table III "Used" row).
     pub fn resources_synthesized(&self) -> ResourceEstimate {
         // The autoencoder's temporal dense must sustain one output per
@@ -401,6 +458,80 @@ mod tests {
         // Samples still vary across k (dropout active).
         let first = &all.samples[0..4];
         assert!((1..8).any(|s| &all.samples[s * 4..s * 4 + 4] != first));
+    }
+
+    /// Determinism invariant (ISSUE 2 acceptance): with early exit
+    /// disabled the adaptive path must be *bit-identical* to the fixed-S
+    /// seeded path — same samples, same reduction order.
+    #[test]
+    fn adaptive_with_no_early_exit_matches_fixed_path_bitwise() {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.2).cos()).collect();
+        let s_max = 10;
+
+        // Fixed-S reference: one eager seeded range, reduced the
+        // canonical way (ascending-k moment sums -> pooled mean/std).
+        let mut fixed = Accelerator::new(&cfg, &params, reuse, 9);
+        let whole = fixed.predict_seeded(&beat, 55, 0, s_max);
+        let mut acc = crate::uq::McAccumulator::new(whole.out_len);
+        acc.push_block(0, whole.samples.clone());
+        let (fm, fs) = acc.finalize();
+
+        // Adaptive with target_ci = 0: draws chunks until s_max.
+        let mut adaptive = Accelerator::new(&cfg, &params, reuse, 9);
+        let mc = AdaptiveMcConfig {
+            s_min: 3,
+            s_max,
+            target_ci: 0.0,
+            z: 1.96,
+            chunk: 4,
+        };
+        let out = adaptive.predict_adaptive(&beat, 55, &mc);
+        assert_eq!(out.s_used, s_max, "no early exit at target_ci = 0");
+        assert!(!out.converged);
+        assert_eq!(out.samples, whole.samples, "identical sample set");
+        assert_eq!(out.mean, fm, "bit-identical mean");
+        assert_eq!(out.std, fs, "bit-identical std");
+    }
+
+    #[test]
+    fn adaptive_early_exit_saves_samples_and_stays_in_envelope() {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(4));
+        let mut acc = Accelerator::new(
+            &cfg,
+            &params,
+            ReuseFactors::new(2, 1, 1),
+            7,
+        );
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.3).sin()).collect();
+        // Probabilities live in [0, 1]: per-point std <= 0.5, so the CI
+        // half-width at s_min = 4 is <= 1.96*0.5/2 < 1.0 — a target of
+        // 1.0 must always converge at exactly s_min.
+        let mc = AdaptiveMcConfig {
+            s_min: 4,
+            s_max: 32,
+            target_ci: 1.0,
+            z: 1.96,
+            chunk: 4,
+        };
+        let out = acc.predict_adaptive(&beat, 3, &mc);
+        assert!(out.converged);
+        assert_eq!(out.s_used, 4, "easy target converges at s_min");
+        assert_eq!(out.samples.len(), out.s_used * out.out_len);
+        assert!((out.mean.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+
+        // An impossible target exhausts the budget instead.
+        let hard = AdaptiveMcConfig { target_ci: 1e-12, ..mc };
+        let out = acc.predict_adaptive(&beat, 3, &hard);
+        assert!(!out.converged);
+        assert_eq!(out.s_used, 32);
     }
 
     #[test]

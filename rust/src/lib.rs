@@ -11,9 +11,11 @@
 //!   algorithmic–hardware design-space-exploration framework ([`dse`]),
 //!   a PJRT runtime executing the AOT artifacts ([`runtime`]), a
 //!   Rust-driven training loop ([`train`]), a native float reference
-//!   engine ([`nn`]) and an async serving coordinator ([`coordinator`])
+//!   engine ([`nn`]), an async serving coordinator ([`coordinator`])
 //!   with a sharded multi-engine fleet ([`coordinator::fleet`] —
-//!   architecture and MC-shard semantics in `docs/serving.md`).
+//!   architecture and MC-shard semantics in `docs/serving.md`) and an
+//!   adaptive uncertainty-quantification layer ([`uq`] — sequential MC
+//!   early-exit, risk tiers and calibration; `docs/uncertainty.md`).
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
@@ -33,3 +35,4 @@ pub mod rng;
 pub mod runtime;
 pub mod tensor;
 pub mod train;
+pub mod uq;

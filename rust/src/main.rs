@@ -6,6 +6,9 @@
 //!   train   train one architecture (native engine or PJRT AOT train step)
 //!   eval    evaluate a trained checkpoint (float / fixed-point FPGA sim)
 //!   serve   run the serving coordinator on synthetic ECG traffic
+//!           (--adaptive-mc switches to early-exit sequential sampling)
+//!   uq      uncertainty-quantification pipeline: calibrate / evaluate /
+//!           report (docs/uncertainty.md)
 //!   info    show artifact manifest + platform
 //!
 //! Arg parsing is hand-rolled (`--key value` / flags) — no clap in this
@@ -18,13 +21,15 @@ use anyhow::{Context, Result};
 use bayes_rnn_fpga::config::{ArchConfig, Task};
 use bayes_rnn_fpga::coordinator::loadgen::PoissonTrace;
 use bayes_rnn_fpga::coordinator::{
-    BatchPolicy, Engine, Fleet, FleetConfig, RouterPolicy,
+    AdaptiveTicket, BatchPolicy, Engine, Fleet, FleetConfig, RouterPolicy,
+    Ticket,
 };
 use bayes_rnn_fpga::data;
 use bayes_rnn_fpga::dse::space::reuse_search;
 use bayes_rnn_fpga::dse::{LookupTable, Optimizer};
 use bayes_rnn_fpga::fpga::accel::Accelerator;
 use bayes_rnn_fpga::hwmodel::ZC706;
+use bayes_rnn_fpga::jsonio::{self, Json};
 use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
 use bayes_rnn_fpga::rng::Rng;
@@ -33,16 +38,22 @@ use bayes_rnn_fpga::tensor::{load_tensors, save_tensors, Tensor};
 use bayes_rnn_fpga::train::eval::{eval_anomaly, eval_classify, ModelPredictor};
 use bayes_rnn_fpga::train::sweep::{self, SweepOpts};
 use bayes_rnn_fpga::train::{NativeTrainer, PjrtTrainer, TrainOpts};
+use bayes_rnn_fpga::uq::{
+    AdaptiveMcConfig, OodScorer, RiskPolicy, RiskTier, TemperatureScaler,
+    UqCollector, UqReport,
+};
 
-/// Tiny `--key value` parser: positional subcommand + options.
+/// Tiny `--key value` parser: positional tokens (subcommand and, for
+/// `uq`, its action) + options.
 struct Args {
     opts: HashMap<String, String>,
+    pos: Vec<String>,
 }
 
 impl Args {
     fn parse(argv: &[String]) -> (Option<String>, Args) {
         let mut opts = HashMap::new();
-        let mut cmd = None;
+        let mut pos = Vec::new();
         let mut i = 0;
         while i < argv.len() {
             let a = &argv[i];
@@ -55,13 +66,17 @@ impl Args {
                     i += 1;
                 }
             } else {
-                if cmd.is_none() {
-                    cmd = Some(a.clone());
-                }
+                pos.push(a.clone());
                 i += 1;
             }
         }
-        (cmd, Args { opts })
+        let cmd = pos.first().cloned();
+        (cmd, Args { opts, pos })
+    }
+
+    /// Positional token `i` (0 = the subcommand itself).
+    fn positional(&self, i: usize) -> Option<&str> {
+        self.pos.get(i).map(|s| s.as_str())
     }
 
     fn get(&self, key: &str) -> Option<&str> {
@@ -73,6 +88,10 @@ impl Args {
     }
 
     fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
@@ -90,6 +109,60 @@ impl Args {
     fn artifacts_dir(&self) -> PathBuf {
         PathBuf::from(self.get("artifacts").unwrap_or("artifacts"))
     }
+}
+
+/// A submitted request on either serving path.
+enum AnyTicket {
+    Fixed(Ticket),
+    Adaptive(AdaptiveTicket),
+}
+
+/// Parse the shared adaptive-UQ flags (`--s-min --target-ci --chunk
+/// --abstain-entropy --defer-entropy --max-epistemic --calibration`)
+/// into the controller envelope and risk policy. An explicit
+/// `--calibration PATH` must be readable (hard error); `default_cal`
+/// is tried opportunistically with a fallback note, identity otherwise.
+fn uq_flags(
+    args: &Args,
+    s_max: usize,
+    default_cal: Option<PathBuf>,
+) -> Result<(AdaptiveMcConfig, RiskPolicy)> {
+    anyhow::ensure!(s_max >= 1, "--samples must be >= 1");
+    let mc = AdaptiveMcConfig {
+        s_min: args.usize_or("s-min", 4).clamp(1, s_max),
+        s_max,
+        target_ci: args.f64_or("target-ci", 0.02),
+        z: 1.96,
+        chunk: args.usize_or("chunk", 4).max(1),
+    };
+    let scaler = match args.get("calibration") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .with_context(|| format!("reading calibration {path}"))?;
+            TemperatureScaler::from_json(&text)?
+        }
+        None => match &default_cal {
+            Some(p) => match std::fs::read_to_string(p) {
+                Ok(text) => TemperatureScaler::from_json(&text)?,
+                Err(_) => {
+                    eprintln!(
+                        "note: no calibration at {} (run `repro uq \
+                         calibrate`); using T = 1",
+                        p.display()
+                    );
+                    TemperatureScaler::identity()
+                }
+            },
+            None => TemperatureScaler::identity(),
+        },
+    };
+    let risk = RiskPolicy {
+        abstain_entropy: args.f64_or("abstain-entropy", 0.9),
+        defer_entropy: args.f64_or("defer-entropy", 0.5),
+        ood: OodScorer::with_threshold(args.f64_or("max-epistemic", 0.15)),
+        scaler,
+    };
+    Ok((mc, risk))
 }
 
 /// Parse "anomaly_h16_nl2_YNYN"-style names back into a config.
@@ -126,8 +199,23 @@ subcommands:
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
           [--seed N] [--json]
+          adaptive MC (docs/uncertainty.md): [--adaptive-mc]
+          [--target-ci F] [--s-min N] [--chunk N] [--abstain-entropy F]
+          [--defer-entropy F] [--max-epistemic F] [--calibration PATH]
           (missing weights fall back to a deterministic random init —
            synthetic load mode, used by the bench harness)
+  uq      uncertainty-quantification pipeline (classify task)
+          uq calibrate  fit temperature scaling offline
+                        [--arch NAME] [--samples S] [--subset N]
+                        [--out PATH] [--json]
+          uq evaluate   run the adaptive controller + risk tiers
+                        [--arch NAME] [--samples S] [--subset N]
+                        [--target-ci F] [--s-min N] [--chunk N]
+                        [--abstain-entropy F] [--defer-entropy F]
+                        [--max-epistemic F] [--calibration PATH]
+                        [--out PATH] [--json]
+          uq report     render a saved evaluation report
+                        [--file PATH] [--json]
   info    show artifact manifest + platform
   help    this message (also: --help on any subcommand)
 
@@ -148,6 +236,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("uq") => cmd_uq(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
             print_usage();
@@ -425,6 +514,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let seed = args.usize_or("seed", 3) as u64;
     let artifacts = args.artifacts_dir();
 
+    // Adaptive MC: sequential early-exit sampling + risk tiers
+    // (docs/uncertainty.md).
+    let adaptive = args.flag("adaptive-mc");
+    anyhow::ensure!(
+        !(adaptive && !cfg.is_bayesian()),
+        "--adaptive-mc needs a Bayesian arch (pointwise nets run S = 1)"
+    );
+    // Adaptive rounds may land on different engines, so mixed
+    // fixed-point/float backends would blend sample sets mid-request —
+    // same reduction hazard as mix + mc-shard.
+    anyhow::ensure!(
+        !(adaptive && backend == "mix"),
+        "--adaptive-mc cannot be combined with --backend mix"
+    );
+    let (mc_cfg, risk) = uq_flags(args, s, None)?;
+
     // Trained weights if available; otherwise a deterministic random
     // init so load runs (and their predictions) are reproducible
     // without artifacts — the bench harness relies on this.
@@ -495,6 +600,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Task::Anomaly => data::anomaly_splits(0),
         Task::Classify => data::splits(0),
     };
+    let submit_one = |fleet: &mut Fleet,
+                      beat: Vec<f32>|
+     -> Option<AnyTicket> {
+        if adaptive {
+            fleet.submit_adaptive(beat, &mc_cfg).map(AnyTicket::Adaptive)
+        } else {
+            fleet.submit(beat).map(AnyTicket::Fixed)
+        }
+    };
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n_req);
     if let Some(rate) = args.get("rate").and_then(|v| v.parse::<f64>().ok())
@@ -509,14 +623,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     std::thread::sleep(wait);
                 }
             }
-            if let Some(t) = fleet.submit(test.beat(a.beat_idx).to_vec()) {
+            if let Some(t) =
+                submit_one(&mut fleet, test.beat(a.beat_idx).to_vec())
+            {
                 tickets.push(t);
             }
         }
     } else {
         // Closed loop: submit everything, then wait.
         for i in 0..n_req {
-            if let Some(t) = fleet.submit(test.beat(i % test.n).to_vec()) {
+            if let Some(t) =
+                submit_one(&mut fleet, test.beat(i % test.n).to_vec())
+            {
                 tickets.push(t);
             }
         }
@@ -527,15 +645,46 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // MC-shard reduction numerically.
     let mut pred_checksum = 0f64;
     let mut unc_checksum = 0f64;
+    let mut collector = UqCollector::new();
     for (i, t) in tickets.into_iter().enumerate() {
-        let resp = fleet.wait(t)?;
+        let (mean, std) = match t {
+            AnyTicket::Fixed(t) => {
+                let resp = fleet.wait(t)?;
+                (resp.prediction.mean, resp.prediction.std)
+            }
+            AnyTicket::Adaptive(t) => {
+                let resp = fleet.wait_adaptive(t)?;
+                // Risk-tier the request on its raw MC evidence.
+                let tier = match cfg.task {
+                    Task::Classify => {
+                        let probs: Vec<f64> = resp
+                            .samples
+                            .iter()
+                            .map(|&v| v as f64)
+                            .collect();
+                        risk.classify(
+                            &probs,
+                            resp.s_used,
+                            resp.out_len,
+                            resp.converged,
+                        )
+                        .tier
+                    }
+                    Task::Anomaly => risk.grade_regression(
+                        &resp.prediction.std,
+                        resp.converged,
+                    ),
+                };
+                collector.record(resp.s_used, resp.converged, tier);
+                (resp.prediction.mean, resp.prediction.std)
+            }
+        };
         if i < 8 {
-            pred_checksum +=
-                resp.prediction.mean.iter().map(|&v| v as f64).sum::<f64>();
-            unc_checksum +=
-                resp.prediction.std.iter().map(|&v| v as f64).sum::<f64>();
+            pred_checksum += mean.iter().map(|&v| v as f64).sum::<f64>();
+            unc_checksum += std.iter().map(|&v| v as f64).sum::<f64>();
         }
     }
+    let uq_report = adaptive.then(|| collector.finish(s));
     let wall = t0.elapsed();
     let summary = fleet.join();
     let throughput = if wall.as_secs_f64() > 0.0 {
@@ -546,7 +695,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let engine_stats = summary.engine_stats();
 
     if json_out {
-        // Single-line JSON for the process-based bench harness.
+        // Single-line JSON for the process-based bench harness. The
+        // adaptive report rides along as one nested object.
+        let adaptive_json = uq_report
+            .as_ref()
+            .map(|r| format!(",\"adaptive\":{}", r.to_json_line()))
+            .unwrap_or_default();
         println!(
             "{{\"cmd\":\"serve\",\"arch\":\"{arch}\",\"engines\":{n_engines},\
              \"router\":\"{}\",\"backend\":\"{backend}\",\"samples\":{s},\
@@ -556,7 +710,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"max\":{:.4}}},\
              \"engine_ms\":{{\"mean\":{:.4},\"p99\":{:.4}}},\
              \"batches\":{},\"pred_checksum\":{:.6},\
-             \"unc_checksum\":{:.6}}}",
+             \"unc_checksum\":{:.6}{}}}",
             router.as_str(),
             summary.served,
             summary.rejected,
@@ -571,6 +725,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             summary.batches(),
             pred_checksum,
             unc_checksum,
+            adaptive_json,
         );
         return Ok(());
     }
@@ -610,6 +765,284 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "  engine[{j}]  items {:<6} batches {:<6} model mean {:.3} ms",
             e.served, e.batches, e.engine.mean_ms()
         );
+    }
+    if let Some(r) = &uq_report {
+        println!("{}", r.render());
+    }
+    Ok(())
+}
+
+fn cmd_uq(args: &Args) -> Result<()> {
+    match args.positional(1).unwrap_or("evaluate") {
+        "calibrate" => cmd_uq_calibrate(args),
+        "evaluate" => cmd_uq_evaluate(args),
+        "report" => cmd_uq_report(args),
+        other => {
+            print_usage();
+            anyhow::bail!(
+                "unknown uq action {other:?} (calibrate | evaluate | report)"
+            )
+        }
+    }
+}
+
+/// Shared `repro uq` setup: arch + accelerator + test subset. Falls back
+/// to a deterministic random init when trained weights are missing, like
+/// `repro serve` (synthetic mode — relative numbers still exercise the
+/// whole pipeline). `offset` slices disjoint windows of the test split:
+/// `calibrate` fits on beats `0..subset`, `evaluate` scores the *next*
+/// `subset` beats so its NLL/ECE/accuracy are held-out, not in-sample.
+struct UqSetup {
+    arch: String,
+    k: usize,
+    s: usize,
+    /// First beat index of the subset window (also salts request seeds
+    /// so calibrate and evaluate never share an MC sample set).
+    offset: usize,
+    acc: Accelerator,
+    test: data::Dataset,
+}
+
+fn uq_setup(args: &Args, offset_windows: usize) -> Result<UqSetup> {
+    let arch =
+        args.get("arch").unwrap_or("classify_h8_nl1_Y").to_string();
+    let cfg = parse_arch(&arch)?;
+    anyhow::ensure!(
+        cfg.task == Task::Classify,
+        "repro uq needs the classify task (probabilistic head); \
+         the anomaly task is tiered inline by `repro serve --adaptive-mc`"
+    );
+    anyhow::ensure!(
+        cfg.is_bayesian(),
+        "repro uq needs a Bayesian arch (MC dropout off ⇒ no uncertainty)"
+    );
+    let seed = args.usize_or("seed", 7) as u64;
+    let model = match load_model(args, &cfg, &arch) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "note: {e:#}; using deterministic random init \
+                 (synthetic mode)"
+            );
+            Model::init(cfg.clone(), &mut Rng::new(seed ^ 0xC0FFEE))
+        }
+    };
+    let reuse =
+        reuse_search(&cfg, &ZC706).context("does not fit ZC706")?;
+    let acc = Accelerator::new(&cfg, &model.params, reuse, seed);
+    let (_, test) = data::splits(0);
+    let subset = args.usize_or("subset", 200).max(1);
+    let offset = (offset_windows * subset).min(test.n.saturating_sub(1));
+    let end = (offset + subset).min(test.n);
+    let test = test.subset(&(offset..end).collect::<Vec<_>>());
+    anyhow::ensure!(test.n > 0, "empty test window ({offset}..{end})");
+    let s = args.usize_or("samples", 30);
+    anyhow::ensure!(s >= 1, "--samples must be >= 1");
+    Ok(UqSetup { arch, k: cfg.num_classes, s, offset, acc, test })
+}
+
+fn default_calibration_path(args: &Args, arch: &str) -> PathBuf {
+    args.artifacts_dir().join(format!("uq_calibration_{arch}.json"))
+}
+
+/// `repro uq calibrate`: fixed-S MC predictions on the held-out subset,
+/// temperature fitted by NLL, saved for `uq evaluate` / `serve
+/// --calibration`.
+fn cmd_uq_calibrate(args: &Args) -> Result<()> {
+    let mut su = uq_setup(args, 0)?;
+    let k = su.k;
+    let mut probs = Vec::with_capacity(su.test.n * k);
+    for i in 0..su.test.n {
+        let out = su.acc.predict_seeded(
+            su.test.beat(i),
+            (su.offset + i) as u64,
+            0,
+            su.s,
+        );
+        probs.extend(out.mean().iter().map(|&v| v as f64));
+    }
+    let labels = &su.test.y;
+    let scaler = TemperatureScaler::fit(&probs, labels, k);
+    let id = TemperatureScaler::identity();
+    let nll_raw = id.nll(&probs, labels, k);
+    let nll_cal = scaler.nll(&probs, labels, k);
+    let ece_raw = id.ece(&probs, labels, k);
+    let ece_cal = scaler.ece(&probs, labels, k);
+    let out = args
+        .get("out")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| default_calibration_path(args, &su.arch));
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, format!("{}\n", scaler.to_json()))
+        .with_context(|| format!("writing {}", out.display()))?;
+    if args.flag("json") {
+        println!(
+            "{{\"cmd\":\"uq_calibrate\",\"arch\":\"{}\",\"samples\":{},\
+             \"subset\":{},\"temperature\":{:.4},\"nll_raw\":{:.4},\
+             \"nll_calibrated\":{:.4},\"ece_raw\":{:.4},\
+             \"ece_calibrated\":{:.4},\"out\":\"{}\"}}",
+            su.arch,
+            su.s,
+            su.test.n,
+            scaler.temperature,
+            nll_raw,
+            nll_cal,
+            ece_raw,
+            ece_cal,
+            out.display()
+        );
+    } else {
+        println!(
+            "fitted temperature T = {:.3} on {} beats (S = {})",
+            scaler.temperature, su.test.n, su.s
+        );
+        println!("NLL  {nll_raw:.4} -> {nll_cal:.4}");
+        println!("ECE  {ece_raw:.4} -> {ece_cal:.4}");
+        println!("saved {}", out.display());
+    }
+    Ok(())
+}
+
+/// `repro uq evaluate`: run the adaptive controller + risk tiers over
+/// the test subset and a Gaussian-noise OOD probe, write the report.
+fn cmd_uq_evaluate(args: &Args) -> Result<()> {
+    // Window 1: disjoint from the window `uq calibrate` fitted on, so
+    // every calibrated metric below is held-out.
+    let mut su = uq_setup(args, 1)?;
+    let k = su.k;
+    let (mc, risk) = uq_flags(
+        args,
+        su.s,
+        Some(default_calibration_path(args, &su.arch)),
+    )?;
+
+    let mut collector = UqCollector::new();
+    let (mut correct_all, mut correct_accept, mut accept_n) = (0, 0, 0);
+    for i in 0..su.test.n {
+        let out = su.acc.predict_adaptive(
+            su.test.beat(i),
+            (su.offset + i) as u64,
+            &mc,
+        );
+        let probs: Vec<f64> =
+            out.samples.iter().map(|&v| v as f64).collect();
+        let d = risk.classify(&probs, out.s_used, k, out.converged);
+        collector.record(out.s_used, out.converged, d.tier);
+        let ok = bayes_rnn_fpga::metrics::argmax(&d.calibrated)
+            == su.test.label(i) as usize;
+        if ok {
+            correct_all += 1;
+        }
+        if d.tier == RiskTier::Accept {
+            accept_n += 1;
+            if ok {
+                correct_accept += 1;
+            }
+        }
+    }
+    // OOD probe: Gaussian noise should land in the abstain tier.
+    let noise = data::gaussian_noise(32, 1);
+    let mut noise_abstain = 0usize;
+    for i in 0..noise.n {
+        let out = su.acc.predict_adaptive(
+            noise.beat(i),
+            (su.offset + su.test.n + i) as u64,
+            &mc,
+        );
+        let probs: Vec<f64> =
+            out.samples.iter().map(|&v| v as f64).collect();
+        let d = risk.classify(&probs, out.s_used, k, out.converged);
+        if d.tier == RiskTier::Abstain {
+            noise_abstain += 1;
+        }
+    }
+
+    let report = collector.finish(su.s);
+    let mut j = report.to_json();
+    if let Json::Obj(m) = &mut j {
+        m.insert("cmd".into(), Json::Str("uq_evaluate".into()));
+        m.insert("arch".into(), Json::Str(su.arch.clone()));
+        m.insert(
+            "accuracy".into(),
+            Json::Num(correct_all as f64 / su.test.n.max(1) as f64),
+        );
+        m.insert(
+            "accuracy_accept".into(),
+            Json::Num(correct_accept as f64 / accept_n.max(1) as f64),
+        );
+        m.insert(
+            "noise_abstain_pct".into(),
+            Json::Num(
+                noise_abstain as f64 * 100.0 / noise.n.max(1) as f64,
+            ),
+        );
+        m.insert(
+            "temperature".into(),
+            Json::Num(risk.scaler.temperature),
+        );
+    }
+    let line = jsonio::write(&j);
+    let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
+        args.artifacts_dir().join(format!("uq_report_{}.json", su.arch))
+    });
+    if let Some(dir) = out.parent() {
+        std::fs::create_dir_all(dir)?;
+    }
+    std::fs::write(&out, format!("{line}\n"))
+        .with_context(|| format!("writing {}", out.display()))?;
+    if args.flag("json") {
+        println!("{line}");
+    } else {
+        println!("{}", report.render());
+        println!(
+            "\x20 accuracy              {:.3} overall, {:.3} on accepted",
+            correct_all as f64 / su.test.n.max(1) as f64,
+            correct_accept as f64 / accept_n.max(1) as f64
+        );
+        println!(
+            "\x20 noise abstain rate    {:.1}% of {} OOD probes",
+            noise_abstain as f64 * 100.0 / noise.n.max(1) as f64,
+            noise.n
+        );
+        println!("saved {}", out.display());
+    }
+    Ok(())
+}
+
+/// `repro uq report`: render a saved evaluation report.
+fn cmd_uq_report(args: &Args) -> Result<()> {
+    let arch = args.get("arch").unwrap_or("classify_h8_nl1_Y");
+    let path = args.get("file").map(PathBuf::from).unwrap_or_else(|| {
+        args.artifacts_dir().join(format!("uq_report_{arch}.json"))
+    });
+    let text = std::fs::read_to_string(&path).with_context(|| {
+        format!(
+            "{} missing — run `repro uq evaluate` first",
+            path.display()
+        )
+    })?;
+    let line = text
+        .lines()
+        .find(|l| l.trim_start().starts_with('{'))
+        .context("no JSON object in report file")?
+        .trim();
+    if args.flag("json") {
+        println!("{line}");
+        return Ok(());
+    }
+    let j = jsonio::parse(line)?;
+    let report = UqReport::from_json(&j)?;
+    println!("{}", report.render());
+    if let Some(a) = j.get("accuracy").and_then(Json::as_f64) {
+        println!("\x20 accuracy (all)        {a:.3}");
+    }
+    if let Some(a) = j.get("accuracy_accept").and_then(Json::as_f64) {
+        println!("\x20 accuracy (accepted)   {a:.3}");
+    }
+    if let Some(a) = j.get("noise_abstain_pct").and_then(Json::as_f64) {
+        println!("\x20 noise abstain         {a:.1}%");
     }
     Ok(())
 }

@@ -548,6 +548,97 @@ mod tests {
     }
 
     #[test]
+    #[should_panic]
+    fn ece_rejects_empty_input() {
+        expected_calibration_error(&[], &[], 2, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn ece_rejects_zero_bins() {
+        expected_calibration_error(&[1.0, 0.0], &[0u8], 2, 0);
+    }
+
+    #[test]
+    fn ece_one_hot_probs_land_in_top_bin() {
+        // One-hot rows have confidence exactly 1.0, which must clamp
+        // into the last bin instead of indexing out of bounds.
+        let probs = [1.0, 0.0, 0.0, 1.0, 1.0, 0.0];
+        let labels = [0u8, 1, 1]; // 2/3 correct at confidence 1.0
+        let ece = expected_calibration_error(&probs, &labels, 2, 10);
+        assert!((ece - 1.0 / 3.0).abs() < 1e-9, "{ece}");
+    }
+
+    #[test]
+    fn ece_single_bin_degenerates_to_confidence_minus_accuracy() {
+        // bins = 1: every prediction shares one bin, so ECE is
+        // |mean confidence − accuracy|.
+        let probs = [0.9, 0.1, 0.7, 0.3, 0.8, 0.2];
+        let labels = [0u8, 0, 1]; // accuracy 2/3, mean confidence 0.8
+        let ece = expected_calibration_error(&probs, &labels, 2, 1);
+        assert!((ece - (0.8 - 2.0 / 3.0)).abs() < 1e-9, "{ece}");
+    }
+
+    #[test]
+    fn ece_single_example_single_sample() {
+        // n = 1 (the S = 1 serving edge): one confident correct row.
+        let ece = expected_calibration_error(&[1.0, 0.0], &[0u8], 2, 15);
+        assert!(ece < 1e-12);
+        // ...and one confident wrong row: ECE = |1.0 - 0.0| = 1.
+        let ece = expected_calibration_error(&[1.0, 0.0], &[1u8], 2, 15);
+        assert!((ece - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncertainty_decomposition_single_sample_has_no_epistemic() {
+        // S = 1: the MC mean *is* the sample, so total = aleatoric and
+        // mutual information is exactly zero.
+        let probs = [0.4, 0.3, 0.2, 0.1];
+        let (t, a, e) = uncertainty_decomposition(&probs, 1, 4);
+        assert!((t - a).abs() < 1e-15);
+        assert_eq!(e, 0.0);
+        assert!((t - entropy(&probs)).abs() < 1e-15);
+    }
+
+    #[test]
+    fn uncertainty_decomposition_one_hot_samples() {
+        // Identical one-hot samples: all three terms are zero.
+        let same = [1.0, 0.0, 1.0, 0.0];
+        let (t, a, e) = uncertainty_decomposition(&same, 2, 2);
+        assert_eq!((t, a, e), (0.0, 0.0, 0.0));
+        // Disagreeing one-hots: purely epistemic, total = MI = ln 2.
+        let split = [1.0, 0.0, 0.0, 1.0];
+        let (t2, a2, e2) = uncertainty_decomposition(&split, 2, 2);
+        assert!((t2 - (2f64).ln()).abs() < 1e-12);
+        assert!(a2 < 1e-15);
+        assert!((e2 - (2f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn uncertainty_decomposition_epistemic_never_negative() {
+        // f64 rounding can push total slightly below aleatoric for
+        // near-identical samples; the clamp must hold the invariant.
+        use crate::rng::Rng;
+        let mut rng = Rng::new(13);
+        for _ in 0..50 {
+            let k = 2 + rng.below(4);
+            let s = 1 + rng.below(6);
+            let mut probs = Vec::with_capacity(s * k);
+            for _ in 0..s {
+                let mut row: Vec<f64> =
+                    (0..k).map(|_| rng.uniform() + 1e-6).collect();
+                let sum: f64 = row.iter().sum();
+                row.iter_mut().for_each(|v| *v /= sum);
+                probs.extend(row);
+            }
+            let (t, a, e) = uncertainty_decomposition(&probs, s, k);
+            assert!(e >= 0.0, "epistemic clamped at zero");
+            assert!(t >= 0.0 && a >= 0.0);
+            assert!(e <= t + 1e-12, "MI cannot exceed total entropy");
+        }
+    }
+
+    #[test]
     fn uncertainty_decomposition_identities() {
         // Identical samples: epistemic = 0, total = aleatoric.
         let probs = [0.5, 0.5, 0.5, 0.5];

@@ -1,0 +1,219 @@
+//! Temperature scaling (Guo et al. 2017) fitted offline on held-out
+//! MC-mean predictions — the single-parameter calibration map the risk
+//! policy consumes.
+//!
+//! The serving path only sees *probabilities* (the classifier head
+//! softmaxes on-device), so scaling happens in log space:
+//!
+//! ```text
+//!     q_i ∝ p_i^(1/T)        (softmax(log p / T))
+//! ```
+//!
+//! which is exactly logit temperature scaling for any distribution that
+//! came out of a softmax. `T > 1` flattens an overconfident model,
+//! `T < 1` sharpens an underconfident one, `T = 1` is the identity. The
+//! fit minimises NLL of the scaled distributions with a golden-section
+//! search over `log T` — NLL is convex in `log T` for this family, so
+//! the 1-D search is exact to tolerance.
+
+use crate::jsonio::{self, Json};
+use crate::metrics::expected_calibration_error;
+
+/// A fitted temperature-scaling map.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TemperatureScaler {
+    pub temperature: f64,
+}
+
+impl Default for TemperatureScaler {
+    fn default() -> Self {
+        Self::identity()
+    }
+}
+
+impl TemperatureScaler {
+    /// The no-op calibration (`T = 1`).
+    pub fn identity() -> Self {
+        Self { temperature: 1.0 }
+    }
+
+    /// Fit `T` on MC-mean distributions `probs` `[n][k]` against labels
+    /// by NLL minimisation over `log T ∈ [ln 0.05, ln 20]`.
+    pub fn fit(probs: &[f64], labels: &[u8], k: usize) -> Self {
+        assert!(k > 0 && !labels.is_empty(), "calibration needs data");
+        assert_eq!(probs.len(), labels.len() * k);
+        let nll_at = |log_t: f64| -> f64 {
+            Self { temperature: log_t.exp() }.nll(probs, labels, k)
+        };
+        // Golden-section search on the convex 1-D objective.
+        let phi = (5f64.sqrt() - 1.0) / 2.0;
+        let (mut lo, mut hi) = (0.05f64.ln(), 20f64.ln());
+        let mut x1 = hi - phi * (hi - lo);
+        let mut x2 = lo + phi * (hi - lo);
+        let (mut f1, mut f2) = (nll_at(x1), nll_at(x2));
+        while hi - lo > 1e-4 {
+            if f1 <= f2 {
+                hi = x2;
+                x2 = x1;
+                f2 = f1;
+                x1 = hi - phi * (hi - lo);
+                f1 = nll_at(x1);
+            } else {
+                lo = x1;
+                x1 = x2;
+                f1 = f2;
+                x2 = lo + phi * (hi - lo);
+                f2 = nll_at(x2);
+            }
+        }
+        Self { temperature: ((lo + hi) / 2.0).exp() }
+    }
+
+    /// Scale one distribution row in place (`p_i^(1/T)`, renormalised).
+    pub fn apply_row(&self, row: &mut [f64]) {
+        if (self.temperature - 1.0).abs() < 1e-12 {
+            return;
+        }
+        let inv_t = 1.0 / self.temperature;
+        let mut sum = 0.0;
+        for p in row.iter_mut() {
+            *p = p.max(1e-300).powf(inv_t);
+            sum += *p;
+        }
+        for p in row.iter_mut() {
+            *p /= sum;
+        }
+    }
+
+    /// Scale `[n][k]` distributions, returning the calibrated copy.
+    pub fn apply(&self, probs: &[f64], k: usize) -> Vec<f64> {
+        let mut out = probs.to_vec();
+        for row in out.chunks_exact_mut(k) {
+            self.apply_row(row);
+        }
+        out
+    }
+
+    /// Mean NLL of the labels under the scaled distributions.
+    pub fn nll(&self, probs: &[f64], labels: &[u8], k: usize) -> f64 {
+        let n = labels.len();
+        let mut total = 0.0;
+        for (i, &y) in labels.iter().enumerate() {
+            let mut row = probs[i * k..(i + 1) * k].to_vec();
+            self.apply_row(&mut row);
+            total -= row[y as usize].max(1e-300).ln();
+        }
+        total / n as f64
+    }
+
+    /// ECE of the scaled distributions (15 bins, the common default).
+    pub fn ece(&self, probs: &[f64], labels: &[u8], k: usize) -> f64 {
+        expected_calibration_error(
+            &self.apply(probs, k),
+            labels,
+            k,
+            15,
+        )
+    }
+
+    /// Serialise as a single-line JSON object.
+    pub fn to_json(&self) -> String {
+        jsonio::write(&jsonio::obj(vec![(
+            "temperature",
+            Json::Num(self.temperature),
+        )]))
+    }
+
+    /// Parse the object written by [`TemperatureScaler::to_json`].
+    pub fn from_json(text: &str) -> anyhow::Result<Self> {
+        let j = jsonio::parse(text)?;
+        let t = j
+            .get("temperature")
+            .and_then(Json::as_f64)
+            .ok_or_else(|| {
+                anyhow::anyhow!("calibration JSON missing \"temperature\"")
+            })?;
+        anyhow::ensure!(
+            t.is_finite() && t > 0.0,
+            "temperature must be positive, got {t}"
+        );
+        Ok(Self { temperature: t })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Overconfident synthetic model: says 0.9 but is right 60% of the
+    /// time. The fitted temperature must flatten (T > 1) and both NLL
+    /// and ECE must improve.
+    #[test]
+    fn fit_flattens_overconfident_model() {
+        let k = 2;
+        let n = 200;
+        let mut probs = Vec::with_capacity(n * k);
+        let mut labels = Vec::with_capacity(n);
+        for i in 0..n {
+            probs.extend_from_slice(&[0.9, 0.1]);
+            labels.push(if i % 5 < 3 { 0u8 } else { 1 }); // 60% class 0
+        }
+        let scaler = TemperatureScaler::fit(&probs, &labels, k);
+        assert!(
+            scaler.temperature > 1.5,
+            "overconfident ⇒ T > 1, got {}",
+            scaler.temperature
+        );
+        let id = TemperatureScaler::identity();
+        assert!(scaler.nll(&probs, &labels, k) < id.nll(&probs, &labels, k));
+        assert!(scaler.ece(&probs, &labels, k) < id.ece(&probs, &labels, k));
+    }
+
+    #[test]
+    fn fit_sharpens_underconfident_model() {
+        // Always right but only 60% confident: T < 1 sharpens.
+        let k = 2;
+        let n = 100;
+        let mut probs = Vec::with_capacity(n * k);
+        let mut labels = Vec::with_capacity(n);
+        for _ in 0..n {
+            probs.extend_from_slice(&[0.6, 0.4]);
+            labels.push(0u8);
+        }
+        let scaler = TemperatureScaler::fit(&probs, &labels, k);
+        assert!(
+            scaler.temperature < 0.5,
+            "underconfident ⇒ T < 1, got {}",
+            scaler.temperature
+        );
+    }
+
+    #[test]
+    fn identity_preserves_rows_and_argmax_invariant() {
+        let id = TemperatureScaler::identity();
+        let probs = [0.7, 0.2, 0.1];
+        let mut row = probs.to_vec();
+        id.apply_row(&mut row);
+        assert_eq!(row, probs.to_vec());
+
+        // Any temperature preserves the argmax (monotone map).
+        let hot = TemperatureScaler { temperature: 3.0 };
+        let mut r2 = probs.to_vec();
+        hot.apply_row(&mut r2);
+        assert!((r2.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!(r2[0] > r2[1] && r2[1] > r2[2]);
+        // Flattened towards uniform.
+        assert!(r2[0] < probs[0]);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let s = TemperatureScaler { temperature: 1.75 };
+        let back = TemperatureScaler::from_json(&s.to_json()).unwrap();
+        assert!((back.temperature - 1.75).abs() < 1e-9);
+        assert!(TemperatureScaler::from_json("{}").is_err());
+        assert!(
+            TemperatureScaler::from_json("{\"temperature\":-1}").is_err()
+        );
+    }
+}

@@ -1,0 +1,431 @@
+//! Adaptive Monte-Carlo controller: draw samples sequentially and stop
+//! as soon as the predictive distribution has converged.
+//!
+//! S — the MC sample count — is the paper's dominant algorithmic knob:
+//! latency and energy scale linearly in it (Sec. IV-C), yet a fixed S
+//! spends the same budget on an unambiguous beat as on a borderline
+//! one. The controller replaces fixed S with a *stopping rule*: after
+//! `s` samples, the standard error of the running MC mean at output
+//! point `i` is `σ̂_i / √s` (σ̂ the sample std), so the half-width of
+//! the `z`-level confidence interval on the mean is
+//!
+//! ```text
+//!     hw_i(s) = z · σ̂_i / √s
+//! ```
+//!
+//! Sampling stops at the first `s ∈ [s_min, s_max]` with
+//! `max_i hw_i(s) ≤ target_ci`; hitting `s_max` without convergence
+//! marks the request unconverged (the risk policy defers or abstains).
+//! `target_ci ≤ 0` disables early exit entirely — every request draws
+//! exactly `s_max` samples, which is the determinism escape hatch the
+//! fixed-S comparison tests rely on.
+//!
+//! Because every sample `k` is a pure function of
+//! `(design_seed, request_seed, k)` ([`crate::fpga::accel::Accelerator::
+//! predict_seeded`]), the sample *set* is identical whether drawn
+//! eagerly, in chunks, or sharded across fleet engines; the
+//! [`McAccumulator`] additionally fixes the *reduction order* (ascending
+//! `k`) so the finalised mean/std is bit-identical across all of those
+//! schedules.
+
+use crate::metrics::pooled_mean_std;
+
+/// Configuration of the sequential sampling envelope.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveMcConfig {
+    /// Samples always drawn before the stopping rule is consulted
+    /// (a variance estimate needs at least 2; default 4).
+    pub s_min: usize,
+    /// Hard budget — the fixed-S equivalent and latency upper bound.
+    pub s_max: usize,
+    /// Target half-width of the confidence interval on the MC mean,
+    /// in output units (probability for the classifier, reconstruction
+    /// amplitude for the autoencoder). `<= 0` forces exactly `s_max`
+    /// samples (no early exit).
+    pub target_ci: f64,
+    /// Confidence multiplier (1.96 ≈ 95% under the CLT normal approx).
+    pub z: f64,
+    /// Samples drawn per incremental round after `s_min`.
+    pub chunk: usize,
+}
+
+impl Default for AdaptiveMcConfig {
+    fn default() -> Self {
+        Self { s_min: 4, s_max: 30, target_ci: 0.02, z: 1.96, chunk: 4 }
+    }
+}
+
+impl AdaptiveMcConfig {
+    /// Envelope with early exit disabled: always draws exactly `s`.
+    pub fn fixed(s: usize) -> Self {
+        Self {
+            s_min: s,
+            s_max: s,
+            target_ci: 0.0,
+            ..Self::default()
+        }
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.s_min == 0 || self.chunk == 0 {
+            return Err("s_min and chunk must be positive".into());
+        }
+        if self.s_max < self.s_min {
+            return Err(format!(
+                "s_max {} < s_min {}",
+                self.s_max, self.s_min
+            ));
+        }
+        if self.z <= 0.0 {
+            return Err("z must be positive".into());
+        }
+        Ok(())
+    }
+}
+
+/// Order-stable accumulator of MC sample blocks.
+///
+/// Blocks may arrive out of order (fleet shards complete whenever their
+/// engine does); `finalize` always reduces in ascending sample index, so
+/// the result is independent of arrival order and of how the schedule
+/// was chunked — the property behind the adaptive-vs-fixed bit-identity
+/// test.
+#[derive(Debug, Clone)]
+pub struct McAccumulator {
+    out_len: usize,
+    /// `(start, samples)` with `samples.len() = count * out_len`.
+    blocks: Vec<(usize, Vec<f32>)>,
+    count: usize,
+}
+
+impl McAccumulator {
+    pub fn new(out_len: usize) -> Self {
+        assert!(out_len > 0, "output length must be positive");
+        Self { out_len, blocks: Vec::new(), count: 0 }
+    }
+
+    pub fn out_len(&self) -> usize {
+        self.out_len
+    }
+
+    /// Samples accumulated so far.
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Add the block of samples `start..start + len/out_len`.
+    pub fn push_block(&mut self, start: usize, samples: Vec<f32>) {
+        assert!(
+            !samples.is_empty() && samples.len() % self.out_len == 0,
+            "block must hold whole samples"
+        );
+        self.count += samples.len() / self.out_len;
+        // Keep blocks sorted by start index (insertion point search —
+        // block counts are tiny).
+        let pos = self
+            .blocks
+            .iter()
+            .position(|&(s, _)| s > start)
+            .unwrap_or(self.blocks.len());
+        self.blocks.insert(pos, (start, samples));
+    }
+
+    /// Per-point moment sums (Σx, Σx²) reduced in ascending sample
+    /// order — the exact accumulation a single eager pass would do.
+    pub fn moments(&self) -> (Vec<f64>, Vec<f64>) {
+        let mut sum = vec![0f64; self.out_len];
+        let mut sumsq = vec![0f64; self.out_len];
+        for (_, samples) in &self.blocks {
+            for row in samples.chunks_exact(self.out_len) {
+                for (i, &x) in row.iter().enumerate() {
+                    let v = x as f64;
+                    sum[i] += v;
+                    sumsq[i] += v * v;
+                }
+            }
+        }
+        (sum, sumsq)
+    }
+
+    /// All samples in ascending-`k` order, `[count][out_len]` row-major.
+    pub fn samples_ordered(&self) -> Vec<f32> {
+        let mut out = Vec::with_capacity(self.count * self.out_len);
+        for (_, samples) in &self.blocks {
+            out.extend_from_slice(samples);
+        }
+        out
+    }
+
+    /// Pooled per-point MC mean/std over everything accumulated.
+    pub fn finalize(&self) -> (Vec<f32>, Vec<f32>) {
+        assert!(self.count > 0, "finalize needs at least one sample");
+        let (sum, sumsq) = self.moments();
+        pooled_mean_std(&sum, &sumsq, self.count)
+    }
+
+    /// Worst-case (max over output points) CI half-width `z·σ̂/√s`.
+    /// Infinite below 2 samples (no variance estimate).
+    pub fn max_ci_halfwidth(&self, z: f64) -> f64 {
+        if self.count < 2 {
+            return f64::INFINITY;
+        }
+        let (_, std) = self.finalize();
+        let sem = (self.count as f64).sqrt();
+        std.iter()
+            .map(|&s| z * s as f64 / sem)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// What the controller wants next.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum McDecision {
+    /// Draw `count` more samples starting at index `start`.
+    Draw { start: usize, count: usize },
+    /// Stop: the distribution converged under the stopping rule.
+    Converged,
+    /// Stop: `s_max` exhausted without convergence.
+    Exhausted,
+}
+
+/// The sequential controller: owns the envelope and the accumulator.
+#[derive(Debug, Clone)]
+pub struct AdaptiveController {
+    pub cfg: AdaptiveMcConfig,
+    pub acc: McAccumulator,
+}
+
+impl AdaptiveController {
+    pub fn new(cfg: AdaptiveMcConfig, out_len: usize) -> Self {
+        cfg.validate().expect("invalid AdaptiveMcConfig");
+        Self { cfg, acc: McAccumulator::new(out_len) }
+    }
+
+    /// Consult the stopping rule against the accumulated evidence.
+    pub fn decision(&self) -> McDecision {
+        let s = self.acc.count();
+        if s < self.cfg.s_min {
+            return McDecision::Draw {
+                start: s,
+                count: self.cfg.s_min - s,
+            };
+        }
+        if self.cfg.target_ci > 0.0
+            && self.acc.max_ci_halfwidth(self.cfg.z) <= self.cfg.target_ci
+        {
+            return McDecision::Converged;
+        }
+        if s >= self.cfg.s_max {
+            return McDecision::Exhausted;
+        }
+        McDecision::Draw {
+            start: s,
+            count: self.cfg.chunk.min(self.cfg.s_max - s),
+        }
+    }
+
+    /// Feed a drawn block back in.
+    pub fn push_block(&mut self, start: usize, samples: Vec<f32>) {
+        self.acc.push_block(start, samples);
+    }
+
+    /// True once `decision()` is a stop verdict.
+    pub fn done(&self) -> bool {
+        !matches!(self.decision(), McDecision::Draw { .. })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::mc_mean_std;
+    use crate::rng::Rng;
+
+    #[test]
+    fn accumulator_is_order_and_chunk_invariant() {
+        let (s, n) = (12usize, 5usize);
+        let mut rng = Rng::new(3);
+        let samples: Vec<f32> =
+            (0..s * n).map(|_| rng.normal() as f32).collect();
+
+        // One eager block.
+        let mut whole = McAccumulator::new(n);
+        whole.push_block(0, samples.clone());
+        let (wm, ws) = whole.finalize();
+
+        // Same samples as out-of-order chunks.
+        let mut chunked = McAccumulator::new(n);
+        for (start, count) in [(8usize, 4usize), (0, 3), (3, 5)] {
+            chunked.push_block(
+                start,
+                samples[start * n..(start + count) * n].to_vec(),
+            );
+        }
+        assert_eq!(chunked.count(), s);
+        assert_eq!(chunked.samples_ordered(), samples);
+        let (cm, cs) = chunked.finalize();
+        // Bit-identical, not approximately equal: same reduction order.
+        assert_eq!(wm, cm);
+        assert_eq!(ws, cs);
+
+        // And both agree with the reference reducer numerically.
+        let (rm, rs) = mc_mean_std(&samples, s, n);
+        for i in 0..n {
+            assert!((wm[i] - rm[i]).abs() < 1e-5);
+            assert!((ws[i] - rs[i]).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn halfwidth_shrinks_with_samples() {
+        let mut rng = Rng::new(7);
+        let n = 3;
+        let mut acc = McAccumulator::new(n);
+        assert_eq!(acc.max_ci_halfwidth(1.96), f64::INFINITY);
+        let mut prev = f64::INFINITY;
+        for round in 0..4 {
+            let block: Vec<f32> =
+                (0..16 * n).map(|_| rng.normal() as f32).collect();
+            acc.push_block(round * 16, block);
+            if round == 0 {
+                prev = acc.max_ci_halfwidth(1.96);
+                continue;
+            }
+            let hw = acc.max_ci_halfwidth(1.96);
+            assert!(hw < prev, "round {round}: {hw} !< {prev}");
+            prev = hw;
+        }
+    }
+
+    #[test]
+    fn controller_converges_within_envelope() {
+        let cfg = AdaptiveMcConfig {
+            s_min: 4,
+            s_max: 64,
+            target_ci: 0.5,
+            z: 1.96,
+            chunk: 4,
+        };
+        let mut ctl = AdaptiveController::new(cfg, 2);
+        let mut rng = Rng::new(1);
+        let mut drawn = 0usize;
+        loop {
+            match ctl.decision() {
+                McDecision::Draw { start, count } => {
+                    assert_eq!(start, drawn, "contiguous schedule");
+                    let block: Vec<f32> = (0..count * 2)
+                        .map(|_| 0.1 * rng.normal() as f32)
+                        .collect();
+                    ctl.push_block(start, block);
+                    drawn += count;
+                }
+                McDecision::Converged => break,
+                McDecision::Exhausted => {
+                    panic!("σ=0.1 must converge before 64 at ci=0.5")
+                }
+            }
+        }
+        assert!(drawn >= cfg.s_min && drawn <= cfg.s_max);
+        // σ=0.1: hw(4) = 1.96*0.1/2 ≈ 0.098 « 0.5 — converges at s_min.
+        assert_eq!(drawn, cfg.s_min);
+        assert!(ctl.done());
+    }
+
+    #[test]
+    fn zero_target_ci_forces_s_max() {
+        let cfg = AdaptiveMcConfig {
+            s_min: 2,
+            s_max: 9,
+            target_ci: 0.0,
+            z: 1.96,
+            chunk: 4,
+        };
+        let mut ctl = AdaptiveController::new(cfg, 1);
+        let mut drawn = 0usize;
+        while let McDecision::Draw { start, count } = ctl.decision() {
+            // Identical constant samples: would converge instantly if
+            // early exit were allowed.
+            ctl.push_block(start, vec![1.0f32; count]);
+            drawn += count;
+        }
+        assert_eq!(drawn, 9, "no early exit at target_ci = 0");
+        assert_eq!(ctl.decision(), McDecision::Exhausted);
+    }
+
+    #[test]
+    fn high_variance_exhausts_budget() {
+        let cfg = AdaptiveMcConfig {
+            s_min: 2,
+            s_max: 6,
+            target_ci: 1e-9,
+            z: 1.96,
+            chunk: 2,
+        };
+        let mut ctl = AdaptiveController::new(cfg, 1);
+        let mut rng = Rng::new(9);
+        while let McDecision::Draw { start, count } = ctl.decision() {
+            let block: Vec<f32> =
+                (0..count).map(|_| rng.normal() as f32).collect();
+            ctl.push_block(start, block);
+        }
+        assert_eq!(ctl.decision(), McDecision::Exhausted);
+        assert_eq!(ctl.acc.count(), 6);
+    }
+
+    #[test]
+    fn chunk_never_overshoots_s_max() {
+        let cfg = AdaptiveMcConfig {
+            s_min: 3,
+            s_max: 10,
+            target_ci: 1e-12,
+            z: 1.96,
+            chunk: 4,
+        };
+        let mut ctl = AdaptiveController::new(cfg, 1);
+        let mut rng = Rng::new(2);
+        let mut schedule = Vec::new();
+        while let McDecision::Draw { start, count } = ctl.decision() {
+            schedule.push((start, count));
+            let block: Vec<f32> =
+                (0..count).map(|_| rng.normal() as f32).collect();
+            ctl.push_block(start, block);
+        }
+        assert_eq!(schedule, vec![(0, 3), (3, 4), (7, 3)]);
+    }
+
+    #[test]
+    fn fixed_envelope_draws_exactly_s() {
+        let cfg = AdaptiveMcConfig::fixed(5);
+        assert!(cfg.validate().is_ok());
+        let mut ctl = AdaptiveController::new(cfg, 1);
+        match ctl.decision() {
+            McDecision::Draw { start: 0, count: 5 } => {}
+            d => panic!("expected one whole draw, got {d:?}"),
+        }
+        ctl.push_block(0, vec![0.0; 5]);
+        assert_eq!(ctl.decision(), McDecision::Exhausted);
+    }
+
+    #[test]
+    fn invalid_configs_rejected() {
+        assert!(AdaptiveMcConfig {
+            s_min: 0,
+            ..AdaptiveMcConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(AdaptiveMcConfig {
+            s_min: 8,
+            s_max: 4,
+            ..AdaptiveMcConfig::default()
+        }
+        .validate()
+        .is_err());
+        assert!(AdaptiveMcConfig {
+            chunk: 0,
+            ..AdaptiveMcConfig::default()
+        }
+        .validate()
+        .is_err());
+    }
+}

@@ -1,0 +1,38 @@
+//! Adaptive uncertainty quantification — the runtime layer that turns
+//! the paper's S Monte-Carlo passes from a fixed cost into a controlled
+//! budget, and its uncertainty estimates from reported numbers into
+//! serving decisions.
+//!
+//! Four cooperating pieces (math and semantics in
+//! `docs/uncertainty.md`):
+//!
+//! * [`controller`] — sequential MC sampling with a confidence-interval
+//!   stopping rule inside a hard `[s_min, s_max]` envelope, plus the
+//!   order-stable sample accumulator that keeps adaptive, eager and
+//!   fleet-sharded schedules bit-identical.
+//! * [`calibrate`] — offline temperature scaling fitted by NLL descent,
+//!   applied before any entropy threshold is consulted.
+//! * [`ood`] — max-epistemic (mutual-information) out-of-distribution
+//!   scoring with a quantile-fitted threshold.
+//! * [`policy`] — the accept / defer / abstain risk tiers.
+//! * [`report`] — per-run aggregation into the one-line JSON consumed
+//!   by the `adaptive_mc` bench scenario.
+//!
+//! Entry points: [`crate::fpga::accel::Accelerator::predict_adaptive`]
+//! (single engine), [`crate::coordinator::Fleet::submit_adaptive`] /
+//! [`crate::coordinator::Fleet::wait_adaptive`] (fleet), `repro uq`
+//! and `repro serve --adaptive-mc` (CLI).
+
+pub mod calibrate;
+pub mod controller;
+pub mod ood;
+pub mod policy;
+pub mod report;
+
+pub use calibrate::TemperatureScaler;
+pub use controller::{
+    AdaptiveController, AdaptiveMcConfig, McAccumulator, McDecision,
+};
+pub use ood::OodScorer;
+pub use policy::{RiskPolicy, RiskTier, TierDecision};
+pub use report::{TierCounts, UqCollector, UqReport};

@@ -1,0 +1,96 @@
+//! Out-of-distribution scoring from the epistemic half of the MC
+//! uncertainty decomposition.
+//!
+//! For categorical MC predictions the mutual information
+//! `MI = H(mean p) − mean H(p_s)` isolates *model* disagreement from
+//! inherent class overlap: dropout samples that each commit confidently
+//! but to different classes drive MI up, which is the signature of an
+//! input the posterior has never seen (the paper's Gaussian-noise
+//! entropy experiment, Sec. V-A2, reports the entropy analogue). The
+//! scorer is fitted offline as a quantile of in-distribution MI scores;
+//! serving marks anything above the threshold as OOD and the risk
+//! policy abstains.
+
+use crate::metrics::uncertainty_decomposition;
+
+/// Epistemic-score OOD detector with a quantile-fitted threshold.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct OodScorer {
+    /// Scores above this are out-of-distribution.
+    pub threshold: f64,
+}
+
+impl OodScorer {
+    /// Fixed-threshold scorer (the CLI's `--max-epistemic`).
+    pub fn with_threshold(threshold: f64) -> Self {
+        Self { threshold }
+    }
+
+    /// Fit the threshold as the `quantile` (in [0, 1]) of in-distribution
+    /// epistemic scores, e.g. 0.99 to flag the most model-uncertain 1%.
+    pub fn fit(in_dist_scores: &[f64], quantile: f64) -> Self {
+        assert!(
+            !in_dist_scores.is_empty(),
+            "OOD fit needs in-distribution scores"
+        );
+        assert!((0.0..=1.0).contains(&quantile), "quantile in [0,1]");
+        let mut sorted = in_dist_scores.to_vec();
+        sorted.sort_by(|a, b| {
+            a.partial_cmp(b).unwrap_or(std::cmp::Ordering::Equal)
+        });
+        let rank = ((quantile * sorted.len() as f64).ceil() as usize)
+            .clamp(1, sorted.len());
+        Self { threshold: sorted[rank - 1] }
+    }
+
+    /// Epistemic score of one request: mutual information of its MC
+    /// sample distributions `probs` `[s][k]`.
+    pub fn score(probs: &[f64], s: usize, k: usize) -> f64 {
+        let (_, _, epistemic) = uncertainty_decomposition(probs, s, k);
+        epistemic
+    }
+
+    pub fn is_ood(&self, score: f64) -> bool {
+        score > self.threshold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disagreeing_samples_score_higher_than_agreeing() {
+        // Two confident-but-contradictory samples vs two identical ones.
+        let disagree = [1.0, 0.0, 0.0, 1.0];
+        let agree = [0.7, 0.3, 0.7, 0.3];
+        let hi = OodScorer::score(&disagree, 2, 2);
+        let lo = OodScorer::score(&agree, 2, 2);
+        assert!(hi > 0.6, "max MI for k=2 is ln2 ≈ 0.69, got {hi}");
+        assert!(lo < 1e-9, "identical samples have zero MI, got {lo}");
+    }
+
+    #[test]
+    fn quantile_fit_flags_the_tail() {
+        // 99 small in-distribution scores + 1 large.
+        let mut scores: Vec<f64> =
+            (0..99).map(|i| 0.001 * i as f64).collect();
+        scores.push(0.5);
+        let scorer = OodScorer::fit(&scores, 0.95);
+        assert!(scorer.threshold < 0.5);
+        assert!(scorer.is_ood(0.5));
+        assert!(!scorer.is_ood(0.01));
+
+        // quantile 1.0 keeps everything in-distribution.
+        let all = OodScorer::fit(&scores, 1.0);
+        assert!(!all.is_ood(0.5));
+        assert!(all.is_ood(0.6));
+    }
+
+    #[test]
+    fn fixed_threshold_scorer() {
+        let s = OodScorer::with_threshold(0.15);
+        assert!(!s.is_ood(0.15));
+        assert!(s.is_ood(0.150001));
+    }
+}

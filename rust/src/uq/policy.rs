@@ -1,0 +1,244 @@
+//! Risk-tiered serving policy: map a request's uncertainty evidence to
+//! an operational decision.
+//!
+//! The clinical deployment the paper motivates (and van der Westhuizen
+//! & Lasenby's "Bayesian LSTMs in medicine" argues for explicitly) never
+//! consumes a bare class label — it consumes a label *plus permission to
+//! act on it*. The policy grades each served prediction into:
+//!
+//! * **Accept** — calibrated confidence is high, the MC distribution
+//!   converged, epistemic uncertainty is in-distribution: safe to act.
+//! * **Defer** — the prediction is usable but under-determined (didn't
+//!   converge within `s_max`, or entropy above the defer line): queue
+//!   for more samples / second-stage model / batch review.
+//! * **Abstain** — the model should not be trusted at all: epistemic
+//!   score above the OOD threshold or calibrated entropy above the
+//!   abstain line. Route to a human.
+//!
+//! Thresholds are in nats of the *calibrated* predictive distribution
+//! (temperature scaling first — an overconfident model would otherwise
+//! sail through the entropy gates).
+
+use super::calibrate::TemperatureScaler;
+use super::ood::OodScorer;
+use crate::metrics::{entropy, mc_mean_probs, uncertainty_decomposition};
+
+/// The three serving tiers, ordered by escalation.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RiskTier {
+    Accept,
+    Defer,
+    Abstain,
+}
+
+impl RiskTier {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RiskTier::Accept => "accept",
+            RiskTier::Defer => "defer",
+            RiskTier::Abstain => "abstain",
+        }
+    }
+}
+
+/// Tiering thresholds + the fitted calibration/OOD maps.
+#[derive(Debug, Clone, Copy)]
+pub struct RiskPolicy {
+    /// Calibrated predictive entropy (nats) above which the model
+    /// abstains outright.
+    pub abstain_entropy: f64,
+    /// Calibrated predictive entropy above which an otherwise-healthy
+    /// prediction is deferred.
+    pub defer_entropy: f64,
+    /// Epistemic (mutual-information) OOD gate.
+    pub ood: OodScorer,
+    /// Offline-fitted temperature map applied before the entropy gates.
+    pub scaler: TemperatureScaler,
+}
+
+impl Default for RiskPolicy {
+    fn default() -> Self {
+        Self {
+            abstain_entropy: 0.9,
+            defer_entropy: 0.5,
+            ood: OodScorer::with_threshold(0.15),
+            scaler: TemperatureScaler::identity(),
+        }
+    }
+}
+
+/// The graded outcome for one request.
+#[derive(Debug, Clone)]
+pub struct TierDecision {
+    pub tier: RiskTier,
+    /// Calibrated MC-mean distribution the gates were evaluated on.
+    pub calibrated: Vec<f64>,
+    /// Entropy of the calibrated mean distribution (nats).
+    pub entropy: f64,
+    /// Mutual-information epistemic score.
+    pub epistemic: f64,
+    /// Mean per-sample entropy (aleatoric component, nats).
+    pub aleatoric: f64,
+    /// Whether the epistemic gate fired.
+    pub ood: bool,
+}
+
+impl RiskPolicy {
+    /// Grade one classification request from its raw MC sample
+    /// distributions `probs` `[s][k]`. `converged` is the adaptive
+    /// controller's verdict (fixed-S callers pass `true`).
+    pub fn classify(
+        &self,
+        probs: &[f64],
+        s: usize,
+        k: usize,
+        converged: bool,
+    ) -> TierDecision {
+        assert!(s > 0 && k > 0);
+        assert_eq!(probs.len(), s * k);
+        // Epistemic/aleatoric split on the *raw* samples: calibration
+        // rescales confidence, but model disagreement is a property of
+        // the uncalibrated posterior draws. (The epistemic term is the
+        // same mutual information `OodScorer::score` computes.)
+        let (_, aleatoric, epistemic) =
+            uncertainty_decomposition(probs, s, k);
+        let mut calibrated = mc_mean_probs(probs, s, k);
+        self.scaler.apply_row(&mut calibrated);
+        let h = entropy(&calibrated);
+        let ood = self.ood.is_ood(epistemic);
+        let tier = if ood || h > self.abstain_entropy {
+            RiskTier::Abstain
+        } else if !converged || h > self.defer_entropy {
+            RiskTier::Defer
+        } else {
+            RiskTier::Accept
+        };
+        TierDecision {
+            tier,
+            calibrated,
+            entropy: h,
+            epistemic,
+            aleatoric,
+            ood,
+        }
+    }
+
+    /// Grade a regression (autoencoder) request from its MC mean/std:
+    /// the entropy gates read the mean per-point epistemic std instead
+    /// of entropy (same units as the reconstruction), the OOD gate reads
+    /// the max per-point std.
+    pub fn grade_regression(
+        &self,
+        std: &[f32],
+        converged: bool,
+    ) -> RiskTier {
+        assert!(!std.is_empty());
+        let mean_std = std.iter().map(|&v| v as f64).sum::<f64>()
+            / std.len() as f64;
+        let max_std =
+            std.iter().map(|&v| v as f64).fold(0.0, f64::max);
+        if self.ood.is_ood(max_std) || mean_std > self.abstain_entropy {
+            RiskTier::Abstain
+        } else if !converged || mean_std > self.defer_entropy {
+            RiskTier::Defer
+        } else {
+            RiskTier::Accept
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> RiskPolicy {
+        RiskPolicy {
+            abstain_entropy: 0.9,
+            defer_entropy: 0.5,
+            ood: OodScorer::with_threshold(0.3),
+            scaler: TemperatureScaler::identity(),
+        }
+    }
+
+    #[test]
+    fn confident_converged_prediction_accepts() {
+        // 3 near-identical confident samples.
+        let probs = [
+            0.97, 0.01, 0.01, 0.01, //
+            0.96, 0.02, 0.01, 0.01, //
+            0.97, 0.01, 0.01, 0.01,
+        ];
+        let d = policy().classify(&probs, 3, 4, true);
+        assert_eq!(d.tier, RiskTier::Accept);
+        assert!(!d.ood);
+        assert!(d.entropy < 0.5);
+        assert!((d.calibrated.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unconverged_prediction_defers() {
+        let probs = [0.97, 0.01, 0.01, 0.01, 0.97, 0.01, 0.01, 0.01];
+        let d = policy().classify(&probs, 2, 4, false);
+        assert_eq!(d.tier, RiskTier::Defer);
+    }
+
+    #[test]
+    fn ambiguous_prediction_defers_then_abstains() {
+        // Entropy between defer and abstain lines: ~0.69 nats for a
+        // clean two-way split over k=4.
+        let two_way = [0.5, 0.5, 0.0, 0.0, 0.5, 0.5, 0.0, 0.0];
+        let d = policy().classify(&two_way, 2, 4, true);
+        assert!((d.entropy - (2f64).ln()).abs() < 1e-9);
+        assert_eq!(d.tier, RiskTier::Defer);
+        assert!(d.epistemic < 1e-9, "identical samples: no epistemic");
+
+        // Near-uniform: entropy ≈ ln 4 ≈ 1.39 > abstain line.
+        let uniform = [0.25; 8];
+        let d = policy().classify(&uniform, 2, 4, true);
+        assert_eq!(d.tier, RiskTier::Abstain);
+        assert!(!d.ood, "aleatoric abstain, not epistemic");
+    }
+
+    #[test]
+    fn epistemic_disagreement_abstains_via_ood_gate() {
+        // Confident but contradictory: MI ≈ ln 2 ≈ 0.69 > 0.3 threshold.
+        let probs = [1.0, 0.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0];
+        let d = policy().classify(&probs, 2, 4, true);
+        assert_eq!(d.tier, RiskTier::Abstain);
+        assert!(d.ood);
+        assert!(d.aleatoric < 1e-9);
+        assert!(d.epistemic > 0.6);
+    }
+
+    #[test]
+    fn calibration_moves_the_entropy_gate() {
+        // Overconfident prediction that a hot temperature flattens past
+        // the defer line.
+        let probs = [0.8, 0.2 / 3.0, 0.2 / 3.0, 0.2 / 3.0];
+        let cool = policy().classify(&probs, 1, 4, true);
+        assert_eq!(cool.tier, RiskTier::Defer, "H ≈ 0.72 nats raw");
+
+        let mut hot = policy();
+        hot.scaler = TemperatureScaler { temperature: 4.0 };
+        let d = hot.classify(&probs, 1, 4, true);
+        assert!(d.entropy > cool.entropy);
+        assert_eq!(d.tier, RiskTier::Abstain);
+    }
+
+    #[test]
+    fn regression_grading_uses_std() {
+        let p = policy();
+        assert_eq!(
+            p.grade_regression(&[0.01, 0.02, 0.01], true),
+            RiskTier::Accept
+        );
+        assert_eq!(
+            p.grade_regression(&[0.01, 0.02, 0.01], false),
+            RiskTier::Defer
+        );
+        assert_eq!(
+            p.grade_regression(&[0.6, 0.7, 0.6], true),
+            RiskTier::Abstain
+        );
+    }
+}

@@ -1,0 +1,221 @@
+//! Aggregation of per-request adaptive-UQ outcomes into the one-line
+//! JSON report shared by `repro uq --json`, `repro serve --adaptive-mc
+//! --json` and the `adaptive_mc` bench scenario.
+
+use super::policy::RiskTier;
+use crate::jsonio::{self, Json};
+
+/// Per-tier request counts.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TierCounts {
+    pub accept: usize,
+    pub defer: usize,
+    pub abstain: usize,
+}
+
+impl TierCounts {
+    pub fn record(&mut self, tier: RiskTier) {
+        match tier {
+            RiskTier::Accept => self.accept += 1,
+            RiskTier::Defer => self.defer += 1,
+            RiskTier::Abstain => self.abstain += 1,
+        }
+    }
+
+    pub fn total(&self) -> usize {
+        self.accept + self.defer + self.abstain
+    }
+
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("accept", Json::Num(self.accept as f64)),
+            ("defer", Json::Num(self.defer as f64)),
+            ("abstain", Json::Num(self.abstain as f64)),
+        ])
+    }
+}
+
+/// Streaming collector: feed one record per served request.
+#[derive(Debug, Clone, Default)]
+pub struct UqCollector {
+    samples_used: Vec<usize>,
+    converged: usize,
+    pub tiers: TierCounts,
+}
+
+impl UqCollector {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(
+        &mut self,
+        samples_used: usize,
+        converged: bool,
+        tier: RiskTier,
+    ) {
+        self.samples_used.push(samples_used);
+        if converged {
+            self.converged += 1;
+        }
+        self.tiers.record(tier);
+    }
+
+    pub fn requests(&self) -> usize {
+        self.samples_used.len()
+    }
+
+    pub fn mean_samples(&self) -> f64 {
+        if self.samples_used.is_empty() {
+            return 0.0;
+        }
+        self.samples_used.iter().sum::<usize>() as f64
+            / self.samples_used.len() as f64
+    }
+
+    /// Finalise against the fixed-S budget the adaptive run replaced.
+    pub fn finish(&self, s_max: usize) -> UqReport {
+        let n = self.requests();
+        let mean = self.mean_samples();
+        let saved = if s_max > 0 && n > 0 {
+            (1.0 - mean / s_max as f64) * 100.0
+        } else {
+            0.0
+        };
+        UqReport {
+            requests: n,
+            s_max,
+            mean_samples: mean,
+            samples_saved_pct: saved,
+            converged: self.converged,
+            tiers: self.tiers,
+        }
+    }
+}
+
+/// The finalised adaptive-UQ summary.
+#[derive(Debug, Clone, PartialEq)]
+pub struct UqReport {
+    pub requests: usize,
+    /// The fixed-S budget the controller was capped at.
+    pub s_max: usize,
+    pub mean_samples: f64,
+    /// `(1 − mean_samples / s_max) · 100` — the headline win.
+    pub samples_saved_pct: f64,
+    /// Requests whose CI converged before `s_max`.
+    pub converged: usize,
+    pub tiers: TierCounts,
+}
+
+impl UqReport {
+    /// One-line JSON (bench-harness consumable).
+    pub fn to_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("requests", Json::Num(self.requests as f64)),
+            ("s_max", Json::Num(self.s_max as f64)),
+            ("mean_samples", Json::Num(self.mean_samples)),
+            ("samples_saved_pct", Json::Num(self.samples_saved_pct)),
+            ("converged", Json::Num(self.converged as f64)),
+            ("tiers", self.tiers.to_json()),
+        ])
+    }
+
+    pub fn to_json_line(&self) -> String {
+        jsonio::write(&self.to_json())
+    }
+
+    pub fn from_json(j: &Json) -> anyhow::Result<Self> {
+        let num = |key: &str| -> anyhow::Result<f64> {
+            j.get(key).and_then(Json::as_f64).ok_or_else(|| {
+                anyhow::anyhow!("report missing numeric field {key:?}")
+            })
+        };
+        let tiers = j
+            .get("tiers")
+            .ok_or_else(|| anyhow::anyhow!("report missing \"tiers\""))?;
+        let tier = |key: &str| -> anyhow::Result<usize> {
+            tiers.get(key).and_then(Json::as_usize).ok_or_else(|| {
+                anyhow::anyhow!("tiers missing field {key:?}")
+            })
+        };
+        Ok(Self {
+            requests: num("requests")? as usize,
+            s_max: num("s_max")? as usize,
+            mean_samples: num("mean_samples")?,
+            samples_saved_pct: num("samples_saved_pct")?,
+            converged: num("converged")? as usize,
+            tiers: TierCounts {
+                accept: tier("accept")?,
+                defer: tier("defer")?,
+                abstain: tier("abstain")?,
+            },
+        })
+    }
+
+    /// Multi-line human rendering for the CLI's non-JSON mode.
+    pub fn render(&self) -> String {
+        format!(
+            "adaptive MC over {} requests (S_max = {}):\n\
+             \x20 mean samples/request  {:.2}  ({:.1}% saved vs fixed S)\n\
+             \x20 converged             {} / {}\n\
+             \x20 tiers                 accept {}  defer {}  abstain {}",
+            self.requests,
+            self.s_max,
+            self.mean_samples,
+            self.samples_saved_pct,
+            self.converged,
+            self.requests,
+            self.tiers.accept,
+            self.tiers.defer,
+            self.tiers.abstain,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn collector_aggregates_and_reports() {
+        let mut c = UqCollector::new();
+        c.record(4, true, RiskTier::Accept);
+        c.record(8, true, RiskTier::Accept);
+        c.record(24, false, RiskTier::Defer);
+        c.record(12, true, RiskTier::Abstain);
+        let r = c.finish(24);
+        assert_eq!(r.requests, 4);
+        assert_eq!(r.converged, 3);
+        assert!((r.mean_samples - 12.0).abs() < 1e-9);
+        assert!((r.samples_saved_pct - 50.0).abs() < 1e-9);
+        assert_eq!(
+            r.tiers,
+            TierCounts { accept: 2, defer: 1, abstain: 1 }
+        );
+        assert_eq!(r.tiers.total(), 4);
+    }
+
+    #[test]
+    fn report_json_roundtrip() {
+        let mut c = UqCollector::new();
+        c.record(6, true, RiskTier::Accept);
+        c.record(24, false, RiskTier::Defer);
+        let r = c.finish(24);
+        let line = r.to_json_line();
+        let parsed = jsonio::parse(&line).expect("valid JSON");
+        let back = UqReport::from_json(&parsed).expect("roundtrip");
+        assert_eq!(back, r);
+        // Required bench fields present by name.
+        for key in ["mean_samples", "samples_saved_pct", "tiers"] {
+            assert!(parsed.get(key).is_some(), "missing {key}");
+        }
+    }
+
+    #[test]
+    fn empty_collector_is_well_defined() {
+        let r = UqCollector::new().finish(30);
+        assert_eq!(r.requests, 0);
+        assert_eq!(r.mean_samples, 0.0);
+        assert_eq!(r.samples_saved_pct, 0.0);
+    }
+}
