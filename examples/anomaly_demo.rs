@@ -64,8 +64,7 @@ fn main() {
     {
         let beat = test.beat(idx);
         let out = pred.predict(beat, s);
-        let mean = out.mean();
-        let std = out.std();
+        let (mean, std) = out.mean_std();
         let nll = metrics::gaussian_nll(beat, &mean, &std);
         let l1 = metrics::l1(&mean, beat);
         let rmse = metrics::rmse(&mean, beat);

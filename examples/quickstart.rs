@@ -51,8 +51,7 @@ fn main() {
     let s = 30;
     let beat = test.beat(0);
     let out = accel.predict(beat, s);
-    let mean = out.mean();
-    let std = out.std();
+    let (mean, std) = out.mean_std();
     let lat = PipelineSim::new(&cfg, reuse).simulate_ms(1, s, ZC706.clock_hz);
     println!("\nbeat 0 (true class {}):", test.label(0));
     for k in 0..4 {

@@ -14,6 +14,9 @@
 //!   table6    optimisation framework, classification modes
 //!   ablation  latency model vs cycle-accurate simulation error
 //!   perf      L3 hot-path microbenchmarks (engine step, serve overhead)
+//!   kernels   blocked vs scalar kernel layer: raw MVM MMAC/s and
+//!             accelerator beats/s at S in {10, 30, 100}, one-line JSON
+//!             to bench_results/kernel_microbench.json (docs/kernels.md)
 //!
 //! Filter by passing section names: `cargo bench -- table4 ablation`.
 //! Paper reference values are printed alongside for eyeball comparison;
@@ -99,6 +102,9 @@ fn main() {
     }
     if want("perf") {
         perf();
+    }
+    if want("kernels") {
+        kernels_bench();
     }
     println!("\n[bench] total wall time {:.1}s", t0.elapsed().as_secs_f64());
 }
@@ -852,6 +858,125 @@ fn openloop_serving() {
 // ---------------------------------------------------------------------------
 // Perf microbenches (EXPERIMENTS.md §Perf).
 // ---------------------------------------------------------------------------
+
+/// Blocked-kernel layer microbench (docs/kernels.md): raw MVM kernel
+/// throughput scalar vs blocked, then the accelerator-level MC-batch
+/// comparison the ISSUE acceptance targets — blocked `predict_seeded`
+/// vs the legacy per-sample loop at S in {10, 30, 100}, beats/s and
+/// speedup, with a bit-identity assertion. Writes one single-line JSON
+/// summary to bench_results/kernel_microbench.json.
+fn kernels_bench() {
+    use bayes_rnn_fpga::fixedpoint::{Fx16, MacAcc};
+    use bayes_rnn_fpga::kernels::{BlockedKernel, Kernel, ScalarKernel};
+
+    banner("Kernels — blocked vs scalar compute layer");
+
+    // 1. Raw MVM kernel: one h128 gate matmul, 100 sample rows.
+    let (in_dim, out_dim, rows) = (128usize, 128usize, 100usize);
+    let mut rng = Rng::new(7);
+    let w: Vec<Fx16> = (0..in_dim * out_dim)
+        .map(|_| Fx16::from_f32(rng.normal_scaled(0.0, 0.3) as f32))
+        .collect();
+    let x: Vec<Fx16> = (0..rows * in_dim)
+        .map(|_| Fx16::from_f32(rng.normal() as f32))
+        .collect();
+    let iters = 60;
+    let mut mvm_rates = Vec::new();
+    for (name, kernel) in [
+        ("scalar", &ScalarKernel as &dyn Kernel),
+        ("blocked", &BlockedKernel::default() as &dyn Kernel),
+    ] {
+        let mut acc = vec![MacAcc::new(); rows * out_dim];
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            for a in acc.iter_mut() {
+                *a = MacAcc::new();
+            }
+            kernel.mvm_fx(
+                &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc,
+                out_dim,
+            );
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mmacs =
+            (iters * rows * in_dim * out_dim) as f64 / dt / 1e6;
+        println!(
+            "mvm_fx {name:<8} {in_dim}x{out_dim} x {rows} rows: \
+             {mmacs:.0} MMAC/s"
+        );
+        mvm_rates.push((name, mmacs));
+    }
+
+    // 2. Accelerator MC batching: blocked predict_seeded vs the legacy
+    //    per-sample loop (ISSUE 3 acceptance: >= 2x beats/s at S=100).
+    let mut cfg = ArchConfig::new(Task::Classify, 32, 2, "YY");
+    cfg.seq_len = 64;
+    let params = Params::init(&cfg, &mut Rng::new(1));
+    let reuse = ReuseFactors::new(1, 1, 1);
+    let beat: Vec<f32> =
+        (0..cfg.seq_len).map(|i| (i as f32 * 0.23).sin()).collect();
+    let mut points = Vec::new();
+    let mut speedup_s100 = 0f64;
+    for s in [10usize, 30, 100] {
+        let beats = if s >= 100 { 4 } else { 8 };
+        let mut scalar = Accelerator::new(&cfg, &params, reuse, 9);
+        scalar.scalar_reference = true;
+        let mut blocked = Accelerator::new(&cfg, &params, reuse, 9);
+        // Warm + bit-identity check.
+        let a = scalar.predict_seeded(&beat, 0, 0, s);
+        let b = blocked.predict_seeded(&beat, 0, 0, s);
+        assert_eq!(
+            a.samples, b.samples,
+            "blocked path must be bit-identical to the per-sample loop"
+        );
+        let t0 = Instant::now();
+        for r in 0..beats {
+            let _ = scalar.predict_seeded(&beat, r as u64, 0, s);
+        }
+        let dt_scalar = t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for r in 0..beats {
+            let _ = blocked.predict_seeded(&beat, r as u64, 0, s);
+        }
+        let dt_blocked = t0.elapsed().as_secs_f64();
+        let rate_s = beats as f64 / dt_scalar;
+        let rate_b = beats as f64 / dt_blocked;
+        let speedup = rate_b / rate_s.max(1e-12);
+        if s == 100 {
+            speedup_s100 = speedup;
+        }
+        println!(
+            "predict S={s:<4} scalar {rate_s:>8.1} beats/s   blocked \
+             {rate_b:>8.1} beats/s   speedup {speedup:.2}x"
+        );
+        points.push(format!(
+            "{{\"s\":{s},\"scalar_beats_per_s\":{rate_s:.3},\
+             \"blocked_beats_per_s\":{rate_b:.3},\
+             \"speedup\":{speedup:.3}}}"
+        ));
+    }
+    println!(
+        "blocked vs scalar @ S=100: {speedup_s100:.2}x  {}",
+        if speedup_s100 >= 2.0 { "PASS (>=2x)" } else { "WARN (<2x)" }
+    );
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir).expect("create bench_results/");
+    let line = format!(
+        "{{\"scenario\":\"kernel_microbench\",\
+         \"arch\":\"{}\",\"mvm_mmacs\":{{\"scalar\":{:.1},\
+         \"blocked\":{:.1}}},\"points\":[{}],\
+         \"speedup_s100\":{:.3}}}",
+        cfg.name(),
+        mvm_rates[0].1,
+        mvm_rates[1].1,
+        points.join(","),
+        speedup_s100
+    );
+    let path = dir.join("kernel_microbench.json");
+    std::fs::write(&path, format!("{line}\n")).expect("write summary");
+    println!("  -> {}", path.display());
+}
 
 fn perf() {
     banner("Perf — L3 hot-path microbenchmarks");

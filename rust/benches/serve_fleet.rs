@@ -14,6 +14,11 @@
 //!   adaptive_mc     1 engine rr + 4 engines mc-shard with the adaptive
 //!                   early-exit controller, vs. the fixed-S baseline
 //!                   (mean samples used, samples-saved %, tier counts)
+//!   mc_batch        blocked MC-sample batching (--kernel blocked, the
+//!                   default) vs. the legacy per-sample scalar path
+//!                   (--kernel scalar) at S in {10, 30, 100}: beats/s
+//!                   each, speedup, and a bit-identity check on the
+//!                   prediction checksums (docs/kernels.md)
 //!
 //! Checks printed at the end:
 //!   * fan-out and 4-way MC-shard throughput vs. baseline (target ≥ 2x),
@@ -32,6 +37,10 @@ use std::process::Command;
 use bayes_rnn_fpga::jsonio::{self, Json};
 
 const ARCH: &str = "classify_h8_nl1_Y";
+/// The MC-batch comparison uses a paper-sized model: bigger gate
+/// matrices make the weight-fetch amortisation visible (h8 fits in L1
+/// and mostly measures loop overhead).
+const MC_BATCH_ARCH: &str = "classify_h32_nl2_YY";
 
 fn manifest_dir() -> PathBuf {
     PathBuf::from(env!("CARGO_MANIFEST_DIR"))
@@ -85,6 +94,7 @@ struct Run {
 
 fn serve(
     bin: &Path,
+    arch: &str,
     engines: usize,
     router: &str,
     requests: usize,
@@ -94,7 +104,7 @@ fn serve(
     let mut argv = vec![
         "serve".to_string(),
         "--arch".to_string(),
-        ARCH.to_string(),
+        arch.to_string(),
         "--engines".to_string(),
         engines.to_string(),
         "--router".to_string(),
@@ -215,19 +225,19 @@ fn main() {
 
     // --- baseline: one FPGA-sim engine, streamed ---
     println!("[baseline] 1 engine, rr");
-    let baseline = serve(&bin, 1, "rr", requests, samples, &[]);
+    let baseline = serve(&bin, ARCH, 1, "rr", requests, samples, &[]);
     write_scenario(&results, "baseline", &baseline.json_line);
 
     // --- fan-out: 4 engines, whole-request round-robin ---
     println!("[fan_out] 4 engines, rr");
-    let fan_out = serve(&bin, 4, "rr", requests, samples, &[]);
+    let fan_out = serve(&bin, ARCH, 4, "rr", requests, samples, &[]);
     write_scenario(&results, "fan_out", &fan_out.json_line);
 
     // --- fleet-scaling: throughput trajectory over engine count ---
     let mut scaling = Vec::new();
     for n in [1usize, 2, 4, 8] {
         println!("[fleet_scaling] {n} engines, least-loaded");
-        scaling.push(serve(&bin, n, "least-loaded", requests, samples, &[]));
+        scaling.push(serve(&bin, ARCH, n, "least-loaded", requests, samples, &[]));
     }
     let refs: Vec<&Run> = scaling.iter().collect();
     write_scenario(
@@ -240,7 +250,7 @@ fn main() {
     let mut shard = Vec::new();
     for n in [1usize, 2, 4] {
         println!("[mc_shard] {n} engines, mc-shard");
-        shard.push(serve(&bin, n, "mc-shard", requests, samples, &[]));
+        shard.push(serve(&bin, ARCH, n, "mc-shard", requests, samples, &[]));
     }
     let mut worst_pred = 0f64;
     let mut worst_unc = 0f64;
@@ -278,7 +288,7 @@ fn main() {
     for (n, router) in [(1usize, "rr"), (4, "mc-shard")] {
         println!("[adaptive_mc] {n} engines, {router}, target-ci 0.05");
         adaptive_runs
-            .push(serve(&bin, n, router, requests, samples, &flag_refs));
+            .push(serve(&bin, ARCH, n, router, requests, samples, &flag_refs));
     }
     let mut adaptive_ok = true;
     let adaptive_points: Vec<String> = adaptive_runs
@@ -326,6 +336,69 @@ fn main() {
             baseline.e2e_p99_ms,
             adaptive_points.join(","),
             adaptive_ok
+        ),
+    );
+
+    // --- mc_batch: blocked MC batching vs the scalar per-sample path ---
+    // One FPGA-sim engine, round-robin; the blocked path computes all of
+    // a request's S samples (and batch-mates) in one kernel call, the
+    // scalar path walks the weights once per sample. Outputs must be
+    // bit-identical (checksums printed with 6 decimals must match
+    // exactly); acceptance targets >= 2x beats/s at S = 100.
+    let mut mcb_points = Vec::new();
+    let mut mcb_bits_ok = true;
+    let mut speedup_s100 = 0f64;
+    for s in [10usize, 30, 100] {
+        // Bound wall time at the large-S points.
+        let reqs = if s >= 100 {
+            requests.min(24)
+        } else if s >= 30 {
+            requests.min(48)
+        } else {
+            requests
+        };
+        println!("[mc_batch] S={s}, {reqs} requests, scalar kernel");
+        let scalar = serve(
+            &bin, MC_BATCH_ARCH, 1, "rr", reqs, s, &["--kernel", "scalar"],
+        );
+        println!("[mc_batch] S={s}, {reqs} requests, blocked kernel");
+        let blocked = serve(
+            &bin, MC_BATCH_ARCH, 1, "rr", reqs, s, &["--kernel", "blocked"],
+        );
+        let speedup =
+            blocked.throughput / scalar.throughput.max(1e-9);
+        if s == 100 {
+            speedup_s100 = speedup;
+        }
+        // One beat per request: throughput_rps is beats/s.
+        let bits_ok = (blocked.pred_checksum - scalar.pred_checksum).abs()
+            < 1e-9
+            && (blocked.unc_checksum - scalar.unc_checksum).abs() < 1e-9;
+        mcb_bits_ok &= bits_ok;
+        mcb_points.push(format!(
+            "{{\"s\":{s},\"requests\":{reqs},\
+             \"scalar_beats_per_s\":{:.3},\"blocked_beats_per_s\":{:.3},\
+             \"speedup\":{:.3},\"bits_match\":{}}}",
+            scalar.throughput, blocked.throughput, speedup, bits_ok
+        ));
+        println!(
+            "  S={s:<4} scalar {:.1} beats/s  blocked {:.1} beats/s  \
+             speedup {speedup:.2}x  bits {}",
+            scalar.throughput,
+            blocked.throughput,
+            if bits_ok { "MATCH" } else { "MISMATCH" }
+        );
+    }
+    write_scenario(
+        &results,
+        "mc_batch",
+        &format!(
+            "{{\"scenario\":\"mc_batch\",\"arch\":\"{MC_BATCH_ARCH}\",\
+             \"points\":[{}],\"speedup_s100\":{:.3},\
+             \"bits_match\":{}}}",
+            mcb_points.join(","),
+            speedup_s100,
+            mcb_bits_ok
         ),
     );
 
@@ -391,9 +464,17 @@ fn main() {
          [{s_min}, {samples}]): {}",
         if adaptive_ok { "PASS" } else { "FAIL" }
     );
-    if !numerics_ok || !adaptive_ok {
-        // Sample-seeding invariant or adaptive accounting broken —
-        // correctness bugs, not perf regressions.
+    println!(
+        "mc-batch blocked vs scalar @ S=100: {speedup_s100:.2}x  {}",
+        if speedup_s100 >= 2.0 { "PASS (>=2x)" } else { "WARN (<2x)" }
+    );
+    println!(
+        "mc-batch bit-identity (blocked == scalar checksums): {}",
+        if mcb_bits_ok { "PASS" } else { "FAIL" }
+    );
+    if !numerics_ok || !adaptive_ok || !mcb_bits_ok {
+        // Sample-seeding invariant, adaptive accounting or blocked-kernel
+        // bit-identity broken — correctness bugs, not perf regressions.
         std::process::exit(1);
     }
 }

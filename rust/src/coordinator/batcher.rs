@@ -1,7 +1,10 @@
 //! Dynamic batcher: groups queued requests into engine batches under a
-//! size/deadline policy. The FPGA path uses batch 1 (the paper streams
-//! each request as it arrives); the CPU/GPU baseline paths batch up to
-//! the configured size the way PyTorch serving does.
+//! size/deadline policy. Streaming (batch 1) mirrors the paper's
+//! request-at-a-time arrival; batched policies feed the engines'
+//! blocked entry points (`docs/kernels.md`), which compute one blocked
+//! kernel call per batch. An optional *row budget* additionally caps
+//! the total MC-sample rows per batch, since a blocked call's cost
+//! scales with sample rows, not request count.
 
 use std::time::{Duration, Instant};
 
@@ -12,16 +15,32 @@ pub struct BatchPolicy {
     pub max_batch: usize,
     /// Max time the first queued request may wait for company.
     pub max_wait: Duration,
+    /// Max total weight (MC-sample rows) per batch; 0 = unlimited.
+    /// Items pushed via [`Batcher::push_weighted`] count their weight,
+    /// plain pushes count 1. A single over-budget item still forms its
+    /// own batch (never starve).
+    pub max_rows: usize,
 }
 
 impl BatchPolicy {
     pub fn stream() -> Self {
-        Self { max_batch: 1, max_wait: Duration::ZERO }
+        Self { max_batch: 1, max_wait: Duration::ZERO, max_rows: 0 }
     }
 
     pub fn batched(max_batch: usize, max_wait: Duration) -> Self {
         assert!(max_batch >= 1);
-        Self { max_batch, max_wait }
+        Self { max_batch, max_wait, max_rows: 0 }
+    }
+
+    /// Batched with a row budget: flush once the pending MC-sample rows
+    /// reach `max_rows` (whichever of size / rows / deadline first).
+    pub fn batched_rows(
+        max_batch: usize,
+        max_wait: Duration,
+        max_rows: usize,
+    ) -> Self {
+        assert!(max_batch >= 1);
+        Self { max_batch, max_wait, max_rows }
     }
 }
 
@@ -37,6 +56,9 @@ pub struct Batcher<T> {
     policy: BatchPolicy,
     pending_ids: Vec<u64>,
     pending: Vec<T>,
+    /// Per-item weight (MC-sample rows), parallel to `pending`.
+    weights: Vec<usize>,
+    pending_rows: usize,
     oldest: Option<Instant>,
 }
 
@@ -46,16 +68,26 @@ impl<T> Batcher<T> {
             policy,
             pending_ids: Vec::new(),
             pending: Vec::new(),
+            weights: Vec::new(),
+            pending_rows: 0,
             oldest: None,
         }
     }
 
     pub fn push(&mut self, id: u64, item: T) {
+        self.push_weighted(id, item, 1);
+    }
+
+    /// Queue an item carrying `rows` MC-sample rows of engine work
+    /// (what a blocked call's cost actually scales with).
+    pub fn push_weighted(&mut self, id: u64, item: T, rows: usize) {
         if self.pending.is_empty() {
             self.oldest = Some(Instant::now());
         }
         self.pending_ids.push(id);
         self.pending.push(item);
+        self.weights.push(rows.max(1));
+        self.pending_rows += rows.max(1);
     }
 
     pub fn len(&self) -> usize {
@@ -64,6 +96,11 @@ impl<T> Batcher<T> {
 
     pub fn is_empty(&self) -> bool {
         self.pending.is_empty()
+    }
+
+    /// Pending MC-sample rows across all queued items.
+    pub fn pending_rows(&self) -> usize {
+        self.pending_rows
     }
 
     /// Is a batch ready under the policy? `queue_empty` signals that no
@@ -77,6 +114,10 @@ impl<T> Batcher<T> {
         if self.pending.len() >= self.policy.max_batch {
             return true;
         }
+        if self.policy.max_rows > 0 && self.pending_rows >= self.policy.max_rows
+        {
+            return true;
+        }
         if queue_empty {
             return true;
         }
@@ -86,11 +127,27 @@ impl<T> Batcher<T> {
         }
     }
 
-    /// Take up to max_batch items as a batch.
+    /// Take a batch: up to `max_batch` items and (if a row budget is
+    /// set) at most `max_rows` total rows — but always at least one
+    /// item, so an over-budget request still runs.
     pub fn take(&mut self) -> Batch<T> {
-        let n = self.pending.len().min(self.policy.max_batch);
+        let mut n = 0;
+        let mut rows = 0;
+        while n < self.pending.len() && n < self.policy.max_batch {
+            let w = self.weights[n];
+            if n > 0
+                && self.policy.max_rows > 0
+                && rows + w > self.policy.max_rows
+            {
+                break;
+            }
+            rows += w;
+            n += 1;
+        }
         let items: Vec<T> = self.pending.drain(..n).collect();
         let ids: Vec<u64> = self.pending_ids.drain(..n).collect();
+        self.weights.drain(..n);
+        self.pending_rows -= rows;
         if self.pending.is_empty() {
             self.oldest = None;
         } else {
@@ -180,6 +237,35 @@ mod tests {
         std::thread::sleep(Duration::from_millis(30));
         assert!(b.ready(false), "deadline flush");
         assert_eq!(b.take().ids, vec![1]);
+    }
+
+    /// The row budget fires on total MC-sample rows and `take` splits
+    /// at the budget boundary (never starving an over-budget item).
+    #[test]
+    fn row_budget_flushes_and_splits() {
+        let mut b: Batcher<u32> = Batcher::new(BatchPolicy::batched_rows(
+            8,
+            Duration::from_secs(10),
+            10,
+        ));
+        b.push_weighted(1, 0, 4);
+        b.push_weighted(2, 0, 4);
+        assert!(!b.ready(false), "8 rows under the 10-row budget");
+        b.push_weighted(3, 0, 4);
+        assert_eq!(b.pending_rows(), 12);
+        assert!(b.ready(false), "12 rows over the 10-row budget");
+        let batch = b.take();
+        assert_eq!(batch.ids, vec![1, 2], "third item exceeds the budget");
+        assert_eq!(b.pending_rows(), 4);
+        assert_eq!(b.take().ids, vec![3]);
+
+        // A single over-budget item still forms its own batch.
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched_rows(8, Duration::ZERO, 10));
+        b.push_weighted(9, 0, 64);
+        assert!(b.ready(false));
+        assert_eq!(b.take().ids, vec![9]);
+        assert_eq!(b.pending_rows(), 0);
     }
 
     #[test]

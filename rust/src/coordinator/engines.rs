@@ -160,6 +160,15 @@ impl Engine {
         })
     }
 
+    /// Put an FPGA-sim engine on the legacy per-sample scalar path
+    /// (bench baseline; no-op for other backends). Output bits are
+    /// unchanged — only the simulator's wall-clock cost model differs.
+    pub fn set_scalar_reference(&mut self, on: bool) {
+        if let EngineKind::FpgaSim { accel, .. } = &mut self.kind {
+            accel.scalar_reference = on;
+        }
+    }
+
     pub fn task(&self) -> Task {
         match &self.kind {
             EngineKind::FpgaSim { accel, .. } => accel.cfg.task,
@@ -180,9 +189,10 @@ impl Engine {
                     .iter()
                     .map(|b| {
                         let out = accel.predict(b, s);
+                        let (mean, std) = out.mean_std();
                         Ok(Prediction {
-                            mean: out.mean(),
-                            std: out.std(),
+                            mean,
+                            std,
                             model_latency_ms: per_req_ms,
                         })
                     })
@@ -195,11 +205,8 @@ impl Engine {
                     .iter()
                     .map(|b| {
                         let out = predict_float(model, b, s, rng);
-                        Ok(Prediction {
-                            mean: out.mean(),
-                            std: out.std(),
-                            model_latency_ms: ms,
-                        })
+                        let (mean, std) = out.mean_std();
+                        Ok(Prediction { mean, std, model_latency_ms: ms })
                     })
                     .collect()
             }
@@ -238,11 +245,8 @@ impl Engine {
                         s,
                         out_len,
                     };
-                    preds.push(Prediction {
-                        mean: mc.mean(),
-                        std: mc.std(),
-                        model_latency_ms: ms,
-                    });
+                    let (mean, std) = mc.mean_std();
+                    preds.push(Prediction { mean, std, model_latency_ms: ms });
                 }
                 Ok(preds)
             }
@@ -305,17 +309,18 @@ impl Engine {
                 let cfg = model.cfg.clone();
                 let ms = GpuModel::latency_ms(&cfg, group.max(1), count);
                 let out_len = cfg.out_len();
-                let mut samples = Vec::with_capacity(count * out_len);
-                for k in start..start + count {
-                    let mut rng =
-                        Rng::new(mix3(*seed, req_seed, k as u64));
-                    let masks = if cfg.is_bayesian() {
-                        Masks::sample(&cfg, 1, &mut rng)
-                    } else {
-                        Masks::ones(&cfg, 1)
-                    };
-                    samples.extend(model.forward(beat, 1, &masks));
+                // All `count` samples as rows of one blocked forward
+                // (the float kernel amortises each weight-row fetch over
+                // the sample block); per-row masks are the same
+                // mix3-seeded draws the per-sample loop made, so the
+                // sample set is bit-identical.
+                let mut xs = Vec::with_capacity(count * beat.len());
+                for _ in 0..count {
+                    xs.extend_from_slice(beat);
                 }
+                let masks = seeded_masks(&cfg, *seed, req_seed, start, count);
+                let samples = model.forward(&xs, count, &masks);
+                debug_assert_eq!(samples.len(), count * out_len);
                 Ok(SampleBlock {
                     start,
                     count,
@@ -369,6 +374,71 @@ impl Engine {
                 })
             }
         }
+    }
+}
+
+/// One request's shard in a batched engine call
+/// ([`Engine::infer_samples_batch`]).
+#[derive(Debug, Clone, Copy)]
+pub struct ShardRequest<'a> {
+    pub beat: &'a [f32],
+    pub req_seed: u64,
+    pub start: usize,
+    pub count: usize,
+}
+
+impl Engine {
+    /// Batched shard inference — the fleet worker's blocked entry
+    /// point. On the FPGA simulator the whole batch runs as **one**
+    /// blocked accelerator call ([`Accelerator::predict_batch_shards`]):
+    /// every weight row is fetched once per timestep for all
+    /// (request, sample) lanes, instead of once per request shard. Other
+    /// backends fall back to per-shard calls (PJRT already batches rows
+    /// internally; the GPU model batches its sample block). Outputs are
+    /// bit-identical to per-shard [`Engine::infer_samples`] calls.
+    /// Returns one result per request, in order.
+    pub fn infer_samples_batch(
+        &mut self,
+        reqs: &[ShardRequest],
+        group: usize,
+    ) -> Vec<Result<SampleBlock>> {
+        if let EngineKind::FpgaSim { accel, sim } = &mut self.kind {
+            if reqs.iter().all(|q| q.count > 0) {
+                let batch: Vec<crate::fpga::accel::BatchRequest> = reqs
+                    .iter()
+                    .map(|q| crate::fpga::accel::BatchRequest {
+                        beat: q.beat,
+                        req_seed: q.req_seed,
+                        start: q.start,
+                        count: q.count,
+                    })
+                    .collect();
+                let outs = accel.predict_batch_shards(&batch);
+                return reqs
+                    .iter()
+                    .zip(outs)
+                    .map(|(q, out)| {
+                        // Per-shard hardware latency is unchanged by the
+                        // batched simulation: the modelled FPGA still
+                        // streams `count` passes for this request.
+                        let ms =
+                            sim.simulate_ms(1, q.count, ZC706.clock_hz);
+                        Ok(SampleBlock {
+                            start: q.start,
+                            count: q.count,
+                            out_len: out.out_len,
+                            samples: out.samples,
+                            model_latency_ms: ms,
+                        })
+                    })
+                    .collect();
+            }
+        }
+        reqs.iter()
+            .map(|q| {
+                self.infer_samples(q.beat, q.req_seed, q.start, q.count, group)
+            })
+            .collect()
     }
 }
 

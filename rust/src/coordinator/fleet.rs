@@ -30,7 +30,9 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatchPolicy};
-use super::engines::{Engine, PartialPrediction, Prediction, SampleBlock};
+use super::engines::{
+    Engine, PartialPrediction, Prediction, SampleBlock, ShardRequest,
+};
 use super::router::{Router, RouterPolicy};
 use super::server::ServeSummary;
 use super::stats::LatencyStats;
@@ -559,7 +561,12 @@ impl Fleet {
 
 /// Per-engine event loop: bounded queue -> batcher -> engine ->
 /// per-shard replies. Same drain discipline as `server.rs` (block 1 ms
-/// when idle, never sleep while work is pending).
+/// when idle, never sleep while work is pending). Each formed batch is
+/// issued to the engine as **one** blocked call
+/// ([`Engine::infer_samples_batch`]) instead of a per-request loop —
+/// on the FPGA simulator every weight row is then fetched once per
+/// timestep for the whole batch. Items are queued with their MC-row
+/// weight so a `max_rows` batch policy can bound blocked-call size.
 fn worker_loop(
     factory: Box<dyn FnOnce() -> Engine + Send>,
     rx: mpsc::Receiver<WorkItem>,
@@ -580,7 +587,8 @@ fn worker_loop(
             if batcher.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(1)) {
                     Ok(item) => {
-                        batcher.push(seq, item);
+                        let rows = item.count;
+                        batcher.push_weighted(seq, item, rows);
                         seq += 1;
                     }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
@@ -592,7 +600,8 @@ fn worker_loop(
             loop {
                 match rx.try_recv() {
                     Ok(item) => {
-                        batcher.push(seq, item);
+                        let rows = item.count;
+                        batcher.push_weighted(seq, item, rows);
                         seq += 1;
                     }
                     Err(mpsc::TryRecvError::Empty) => break,
@@ -607,28 +616,32 @@ fn worker_loop(
             let batch = batcher.take();
             batches += 1;
             let group = batch.items.len();
-            for item in batch.items {
-                let result: Result<ShardReply> = if item.raw {
-                    engine
-                        .infer_samples(
-                            item.beat.as_slice(),
-                            item.req_seed,
-                            item.start,
-                            item.count,
-                            group,
-                        )
-                        .map(ShardReply::Samples)
-                } else {
-                    engine
-                        .infer_partial(
-                            item.beat.as_slice(),
-                            item.req_seed,
-                            item.start,
-                            item.count,
-                            group,
-                        )
-                        .map(ShardReply::Moments)
-                };
+            let reqs: Vec<ShardRequest> = batch
+                .items
+                .iter()
+                .map(|item| ShardRequest {
+                    beat: item.beat.as_slice(),
+                    req_seed: item.req_seed,
+                    start: item.start,
+                    count: item.count,
+                })
+                .collect();
+            let results = engine.infer_samples_batch(&reqs, group);
+            for (item, result) in batch.items.iter().zip(results) {
+                // Moments-path items reduce the raw shard to moment
+                // sums here; raw-path items forward the samples.
+                let result: Result<ShardReply> = result.map(|block| {
+                    if item.raw {
+                        ShardReply::Samples(block)
+                    } else {
+                        ShardReply::Moments(PartialPrediction::from_samples(
+                            &block.samples,
+                            block.count,
+                            block.out_len,
+                            block.model_latency_ms,
+                        ))
+                    }
+                });
                 load.fetch_sub(1, Ordering::AcqRel);
                 match result {
                     Ok(reply) => {
@@ -967,6 +980,52 @@ mod tests {
                 > r_small.prediction.model_latency_ms
         );
         fleet.join();
+    }
+
+    /// A worker forming multi-request batches (one blocked engine call
+    /// per batch, bounded by a row budget) must produce bit-identical
+    /// predictions to the streamed per-request path.
+    #[test]
+    fn batched_worker_blocked_calls_match_streamed_results() {
+        let s = 6;
+        let n_req = 8;
+        let mut stream = Fleet::start(
+            FleetConfig { engines: 1, samples: s, ..FleetConfig::default() },
+            fpga_factories(1, s, 9),
+        );
+        let tickets: Vec<Ticket> =
+            (0..n_req).filter_map(|_| stream.submit(beat())).collect();
+        let base: Vec<Prediction> = tickets
+            .into_iter()
+            .map(|t| stream.wait(t).expect("response").prediction)
+            .collect();
+        stream.join();
+
+        let mut batched = Fleet::start(
+            FleetConfig {
+                engines: 1,
+                samples: s,
+                policy: BatchPolicy::batched_rows(
+                    4,
+                    Duration::from_millis(5),
+                    4 * s,
+                ),
+                ..FleetConfig::default()
+            },
+            fpga_factories(1, s, 9),
+        );
+        let tickets: Vec<Ticket> =
+            (0..n_req).filter_map(|_| batched.submit(beat())).collect();
+        let got: Vec<Prediction> = tickets
+            .into_iter()
+            .map(|t| batched.wait(t).expect("response").prediction)
+            .collect();
+        let summary = batched.join();
+        assert_eq!(summary.served, n_req);
+        for (i, (b, g)) in base.iter().zip(&got).enumerate() {
+            assert_eq!(b.mean, g.mean, "request {i}: mean must be bitwise");
+            assert_eq!(b.std, g.std, "request {i}: std must be bitwise");
+        }
     }
 
     #[test]

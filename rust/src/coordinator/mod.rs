@@ -31,6 +31,7 @@ pub mod stats;
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use engines::{
     Engine, EngineKind, PartialPrediction, Prediction, SampleBlock,
+    ShardRequest,
 };
 pub use fleet::{
     AdaptiveResponse, AdaptiveTicket, Fleet, FleetConfig, FleetResponse,

@@ -25,12 +25,20 @@ pub struct McOutput {
 }
 
 impl McOutput {
-    /// Mean prediction over the MC samples.
+    /// Per-point MC mean and std in one walk over the samples — callers
+    /// needing both (every serving path) should use this rather than
+    /// `mean()` + `std()`, which each walk the sample buffer.
+    pub fn mean_std(&self) -> (Vec<f32>, Vec<f32>) {
+        crate::metrics::mc_mean_std(&self.samples, self.s, self.out_len)
+    }
+
+    /// Mean prediction over the MC samples (single sum pass — no
+    /// variance work for mean-only callers like the eval loops).
     pub fn mean(&self) -> Vec<f32> {
         let mut m = vec![0f32; self.out_len];
-        for si in 0..self.s {
-            for i in 0..self.out_len {
-                m[i] += self.samples[si * self.out_len + i];
+        for row in self.samples.chunks_exact(self.out_len) {
+            for (mi, &v) in m.iter_mut().zip(row) {
+                *mi += v;
             }
         }
         for v in m.iter_mut() {
@@ -41,13 +49,7 @@ impl McOutput {
 
     /// Per-point std over samples (epistemic spread).
     pub fn std(&self) -> Vec<f32> {
-        let (mean, std) = crate::metrics::mc_mean_std(
-            &self.samples,
-            self.s,
-            self.out_len,
-        );
-        let _ = mean;
-        std
+        self.mean_std().1
     }
 }
 
@@ -68,6 +70,17 @@ pub struct AdaptiveOutcome {
     pub converged: bool,
 }
 
+/// One request's shard of a blocked batch pass: `count` MC samples
+/// `start..start + count` of `beat`'s schedule, mask-seeded from
+/// `req_seed` exactly like [`Accelerator::predict_seeded`].
+#[derive(Debug, Clone, Copy)]
+pub struct BatchRequest<'a> {
+    pub beat: &'a [f32],
+    pub req_seed: u64,
+    pub start: usize,
+    pub count: usize,
+}
+
 /// The synthesised design: engines, samplers, reuse factors.
 pub struct Accelerator {
     pub cfg: ArchConfig,
@@ -75,12 +88,18 @@ pub struct Accelerator {
     pub lstms: Vec<LstmEngine>,
     pub dense: DenseEngine,
     pub samplers: Vec<Option<BernoulliSampler>>,
+    /// When true, MC predictions run the legacy per-sample loop (one
+    /// full pass per sample, weights re-walked every time) instead of
+    /// the blocked kernel path. Bit-identical output either way
+    /// (tested below) — this is the bench baseline, not a feature.
+    pub scalar_reference: bool,
     /// Base LFSR seed the design was "synthesised" with; the fleet's
     /// seeded prediction path derives per-(request, sample) seeds from it.
     seed: u64,
-    // Scratch.
+    // Scratch (no allocation in the hot loop).
     beat_q: Vec<Fx16>,
-    hid_a: Vec<Fx16>,
+    mask_zx: Vec<f32>,
+    mask_zh: Vec<f32>,
 }
 
 impl Accelerator {
@@ -112,17 +131,27 @@ impl Accelerator {
         }
         let (w, b) = params.dense();
         let dense = DenseEngine::new(w, b, reuse.rd);
-        let max_h = dims.iter().map(|d| d.1).max().unwrap_or(1);
         Self {
             cfg: cfg.clone(),
             reuse,
             lstms,
             dense,
             samplers,
+            scalar_reference: false,
             seed,
             beat_q: Vec::new(),
-            hid_a: vec![Fx16::ZERO; max_h],
+            mask_zx: Vec::new(),
+            mask_zh: Vec::new(),
         }
+    }
+
+    /// Configure every engine for `rows` sample lanes (masks reset to
+    /// all-ones, state zeroed).
+    fn set_block(&mut self, rows: usize) {
+        for e in self.lstms.iter_mut() {
+            e.set_rows(rows);
+        }
+        self.dense.set_rows(rows);
     }
 
     /// Re-seed every Bayesian layer's LFSR bank from one sample seed —
@@ -138,34 +167,51 @@ impl Accelerator {
         }
     }
 
-    /// Pre-sample masks for one input (Fig. 4 overlap) and load the DXs.
-    fn presample_masks(&mut self) {
-        for (l, engine) in self.lstms.iter_mut().enumerate() {
-            if let Some(sampler) = &mut self.samplers[l] {
-                let mut zx = vec![0f32; GATES * engine.idim];
-                let mut zh = vec![0f32; GATES * engine.hdim];
-                sampler.fill(&mut zx);
-                sampler.fill(&mut zh);
-                engine.set_masks(&zx, &zh);
+    /// Pre-sample masks for lane `r` (Fig. 4 overlap) and load the DXs.
+    /// Per Bayesian layer the LFSR stream is consumed zx-then-zh, lanes
+    /// in ascending order — exactly the per-pass order of the legacy
+    /// per-sample loop, so blocked and scalar paths see identical bits.
+    fn presample_masks_row(&mut self, r: usize) {
+        for (engine, slot) in
+            self.lstms.iter_mut().zip(self.samplers.iter_mut())
+        {
+            if let Some(sampler) = slot {
+                self.mask_zx.clear();
+                self.mask_zx.resize(GATES * engine.idim, 0.0);
+                self.mask_zh.clear();
+                self.mask_zh.resize(GATES * engine.hdim, 0.0);
+                sampler.fill(&mut self.mask_zx);
+                sampler.fill(&mut self.mask_zh);
+                engine.set_masks_row(r, &self.mask_zx, &self.mask_zh);
             }
         }
     }
 
-    /// One feedforward pass of one beat (`[T]` for the univariate ECG).
-    /// Returns the raw output (T reconstruction values or K probs).
-    pub fn run_pass(&mut self, beat: &[f32]) -> Vec<f32> {
+    /// One blocked feedforward pass over the configured sample lanes.
+    /// `row_beat[r]` selects which of `beats` lane `r` streams; masks
+    /// must already be loaded (`set_block` + per-lane presample).
+    /// Returns `[rows][out_len]` row-major.
+    fn run_pass_rows(
+        &mut self,
+        beats: &[&[f32]],
+        row_beat: &[usize],
+    ) -> Vec<f32> {
         let t = self.cfg.seq_len;
-        debug_assert_eq!(beat.len(), t * self.cfg.input_dim);
-        self.presample_masks();
+        let idim = self.cfg.input_dim;
+        let rows = row_beat.len();
+        debug_assert!(rows >= 1);
+        debug_assert_eq!(self.lstms[0].rows(), rows, "set_block first");
+        // Quantise each DMA'd beat once.
+        self.beat_q.clear();
+        for b in beats {
+            debug_assert_eq!(b.len(), t * idim);
+            self.beat_q.extend(b.iter().map(|&v| Fx16::from_f32(v)));
+        }
         for e in self.lstms.iter_mut() {
             e.reset();
         }
-        // Quantise the DMA'd input once.
-        self.beat_q.clear();
-        self.beat_q.extend(beat.iter().map(|&v| Fx16::from_f32(v)));
-
         let nl = self.cfg.nl;
-        // One reusable inter-layer buffer per pass (no per-timestep
+        // One reusable inter-layer bus for all lanes (no per-timestep
         // allocation in the hot loop — EXPERIMENTS.md §Perf).
         let max_h = self
             .lstms
@@ -173,67 +219,101 @@ impl Accelerator {
             .map(|e| e.hdim)
             .max()
             .unwrap_or(1)
-            .max(self.cfg.input_dim);
-        let mut bus: Vec<Fx16> = Vec::with_capacity(max_h);
+            .max(idim);
+        let mut bus: Vec<Fx16> = vec![Fx16::ZERO; rows * max_h];
+        // Stream the beats through the encoder stack, all lanes in
+        // lockstep: every gate weight row fetched by a timestep serves
+        // every lane (the blocked-kernel amortisation).
+        let mut width = idim;
+        for ti in 0..t {
+            for (r, &b) in row_beat.iter().enumerate() {
+                let src = b * t * idim + ti * idim;
+                bus[r * idim..r * idim + idim]
+                    .copy_from_slice(&self.beat_q[src..src + idim]);
+            }
+            width = idim;
+            for l in 0..nl {
+                let hd = self.lstms[l].hdim;
+                let h = self.lstms[l].step_rows(&bus, width);
+                bus[..rows * hd].copy_from_slice(h);
+                width = hd;
+            }
+        }
         match self.cfg.task {
             Task::Anomaly => {
-                // Encoder: stream the beat through NL engines.
-                for ti in 0..t {
-                    bus.clear();
-                    bus.push(self.beat_q[ti]);
-                    for l in 0..nl {
-                        let h = self.lstms[l].step(&bus);
-                        bus.clear();
-                        bus.extend_from_slice(h);
-                    }
-                }
-                // Bottleneck h_T cached for T steps.
+                // Bottleneck h_T cached for T steps, per lane.
                 let emb: Vec<Fx16> = self.lstms[nl - 1].hidden().to_vec();
-                let mut out = Vec::with_capacity(t);
-                for _ti in 0..t {
-                    bus.clear();
-                    bus.extend_from_slice(&emb);
+                let hb = self.lstms[nl - 1].hdim;
+                let dense_o = self.cfg.dense_dims().1;
+                let out_len = self.cfg.out_len();
+                let mut out = vec![0f32; rows * out_len];
+                for ti in 0..t {
+                    bus[..rows * hb].copy_from_slice(&emb);
+                    width = hb;
                     for l in nl..2 * nl {
-                        let h = self.lstms[l].step(&bus);
-                        bus.clear();
-                        bus.extend_from_slice(h);
+                        let hd = self.lstms[l].hdim;
+                        let h = self.lstms[l].step_rows(&bus, width);
+                        bus[..rows * hd].copy_from_slice(h);
+                        width = hd;
                     }
-                    // Temporal dense on this step's decoder output.
-                    let y = self.dense.step(&bus);
-                    out.push(y[0].to_f32());
+                    // Temporal dense on this step's decoder output (the
+                    // univariate ECG reconstruction point, as in the
+                    // single-lane pass).
+                    let y = self.dense.step_rows(&bus, width);
+                    for r in 0..rows {
+                        out[r * out_len + ti] = y[r * dense_o].to_f32();
+                    }
                 }
                 out
             }
             Task::Classify => {
-                for ti in 0..t {
-                    bus.clear();
-                    bus.push(self.beat_q[ti]);
-                    for l in 0..nl {
-                        let h = self.lstms[l].step(&bus);
-                        bus.clear();
-                        bus.extend_from_slice(h);
-                    }
-                }
-                let logits = self.dense.step(&bus);
+                let k = self.cfg.out_len();
+                let logits = self.dense.step_rows(&bus, width);
                 // Softmax on the dequantised logits (ARM-side postprocess,
                 // as in the paper's classifier head).
                 let mut probs: Vec<f32> =
                     logits.iter().map(|v| v.to_f32()).collect();
-                softmax_row(&mut probs);
+                for r in 0..rows {
+                    softmax_row(&mut probs[r * k..(r + 1) * k]);
+                }
                 probs
             }
         }
     }
 
+    /// One feedforward pass of one beat (`[T]` for the univariate ECG).
+    /// Returns the raw output (T reconstruction values or K probs).
+    pub fn run_pass(&mut self, beat: &[f32]) -> Vec<f32> {
+        self.set_block(1);
+        self.presample_masks_row(0);
+        self.run_pass_rows(&[beat], &[0])
+    }
+
     /// Full Bayesian prediction: S MC passes with fresh LFSR masks
     /// (free-running sampler state — passes depend on sampler history).
+    /// All S samples run as lanes of one blocked pass; each lane's
+    /// masks are drawn from the free-running samplers in pass order, so
+    /// the sample set is bit-identical to the legacy per-sample loop.
     pub fn predict(&mut self, beat: &[f32], s: usize) -> McOutput {
         let out_len = self.cfg.out_len();
-        let mut samples = Vec::with_capacity(s * out_len);
-        for _ in 0..s {
-            samples.extend(self.run_pass(beat));
+        if s == 0 {
+            // Degenerate S: keep the pre-kernel behaviour (empty sample
+            // set) instead of configuring a zero-lane block.
+            return McOutput { samples: Vec::new(), s: 0, out_len };
         }
-        let _ = &self.hid_a;
+        if self.scalar_reference {
+            let mut samples = Vec::with_capacity(s * out_len);
+            for _ in 0..s {
+                samples.extend(self.run_pass(beat));
+            }
+            return McOutput { samples, s, out_len };
+        }
+        self.set_block(s);
+        for r in 0..s {
+            self.presample_masks_row(r);
+        }
+        let row_beat = vec![0usize; s];
+        let samples = self.run_pass_rows(&[beat], &row_beat);
         McOutput { samples, s, out_len }
     }
 
@@ -243,7 +323,26 @@ impl Accelerator {
     /// `(design_seed, req_seed, k)` — independent of sampler history — so
     /// splitting a request's S samples across fleet engines (MC-shard)
     /// reproduces exactly the sample set a single engine would compute.
+    /// The whole shard runs as one blocked pass (`docs/kernels.md`).
     pub fn predict_seeded(
+        &mut self,
+        beat: &[f32],
+        req_seed: u64,
+        start: usize,
+        count: usize,
+    ) -> McOutput {
+        if self.scalar_reference {
+            return self.predict_seeded_scalar(beat, req_seed, start, count);
+        }
+        let req = BatchRequest { beat, req_seed, start, count };
+        self.predict_batch_shards(&[req]).pop().expect("one request")
+    }
+
+    /// Legacy per-sample reference path: one full pass per sample, every
+    /// weight matrix re-walked each time. Bit-identical to
+    /// [`Accelerator::predict_seeded`] (tested below); kept as the
+    /// equivalence oracle and the `mc_batch` bench baseline.
+    pub fn predict_seeded_scalar(
         &mut self,
         beat: &[f32],
         req_seed: u64,
@@ -261,6 +360,91 @@ impl Accelerator {
             samples.extend(self.run_pass(beat));
         }
         McOutput { samples, s: count, out_len }
+    }
+
+    /// Batched MC prediction — the fleet's blocked entry point: every
+    /// request shard in `reqs` contributes `count` lanes to **one**
+    /// blocked pass, so each weight row is fetched once per timestep
+    /// for the whole batch instead of once per (request, sample).
+    /// Lane (request `q`, sample `k`) reseeds its LFSRs from
+    /// `mix3(design_seed, q.req_seed, k)` — bit-for-bit the
+    /// [`Accelerator::predict_seeded`] schedule.
+    pub fn predict_batch_shards(
+        &mut self,
+        reqs: &[BatchRequest],
+    ) -> Vec<McOutput> {
+        let out_len = self.cfg.out_len();
+        if self.scalar_reference {
+            let mut outs = Vec::with_capacity(reqs.len());
+            for q in reqs {
+                outs.push(self.predict_seeded_scalar(
+                    q.beat, q.req_seed, q.start, q.count,
+                ));
+            }
+            return outs;
+        }
+        let rows: usize = reqs.iter().map(|q| q.count).sum();
+        if rows == 0 {
+            // All-empty shards: answer with empty sample sets (the
+            // pre-kernel predict_seeded behaviour for count = 0).
+            return reqs
+                .iter()
+                .map(|_| McOutput { samples: Vec::new(), s: 0, out_len })
+                .collect();
+        }
+        self.set_block(rows);
+        let mut row_beat = Vec::with_capacity(rows);
+        let mut r = 0;
+        for (qi, q) in reqs.iter().enumerate() {
+            for k in q.start..q.start + q.count {
+                self.reseed_samplers(crate::rng::mix3(
+                    self.seed,
+                    q.req_seed,
+                    k as u64,
+                ));
+                self.presample_masks_row(r);
+                row_beat.push(qi);
+                r += 1;
+            }
+        }
+        let beats: Vec<&[f32]> = reqs.iter().map(|q| q.beat).collect();
+        let flat = self.run_pass_rows(&beats, &row_beat);
+        let mut outs = Vec::with_capacity(reqs.len());
+        let mut off = 0;
+        for q in reqs {
+            let n = q.count * out_len;
+            outs.push(McOutput {
+                samples: flat[off..off + n].to_vec(),
+                s: q.count,
+                out_len,
+            });
+            off += n;
+        }
+        outs
+    }
+
+    /// Batched fixed-S prediction over `beats`: `s` MC samples each,
+    /// request `b` seeded by `req_seeds[b]`. One blocked pass computes
+    /// the whole `[B x S]` lane grid; outputs are bit-identical to
+    /// per-request [`Accelerator::predict_seeded`] calls.
+    pub fn predict_batch(
+        &mut self,
+        beats: &[&[f32]],
+        req_seeds: &[u64],
+        s: usize,
+    ) -> Vec<McOutput> {
+        assert_eq!(beats.len(), req_seeds.len());
+        let reqs: Vec<BatchRequest> = beats
+            .iter()
+            .zip(req_seeds)
+            .map(|(&beat, &req_seed)| BatchRequest {
+                beat,
+                req_seed,
+                start: 0,
+                count: s,
+            })
+            .collect();
+        self.predict_batch_shards(&reqs)
     }
 
     /// Adaptive Bayesian prediction: draw seeded MC passes incrementally
@@ -532,6 +716,168 @@ mod tests {
         let out = acc.predict_adaptive(&beat, 3, &hard);
         assert!(!out.converged);
         assert_eq!(out.s_used, 32);
+    }
+
+    /// ISSUE 3 acceptance: the blocked batch path is bit-identical to
+    /// per-request `predict_seeded` for every request in the batch, for
+    /// both topologies, mixed shard ranges included.
+    #[test]
+    fn predict_batch_matches_per_request_predict_seeded_bitwise() {
+        for task in [Task::Classify, Task::Anomaly] {
+            let mut cfg = match task {
+                Task::Classify => ArchConfig::new(Task::Classify, 8, 2, "YY"),
+                Task::Anomaly => ArchConfig::new(Task::Anomaly, 8, 1, "YY"),
+            };
+            cfg.seq_len = 24;
+            let params = Params::init(&cfg, &mut Rng::new(2));
+            let reuse = ReuseFactors::new(1, 1, 1);
+            let beats: Vec<Vec<f32>> = (0..3)
+                .map(|b| {
+                    (0..cfg.seq_len)
+                        .map(|i| (i as f32 * (0.2 + 0.1 * b as f32)).cos())
+                        .collect()
+                })
+                .collect();
+            let seeds = [77u64, 78, 79];
+            let s = 5;
+
+            let mut batched = Accelerator::new(&cfg, &params, reuse, 9);
+            let beat_refs: Vec<&[f32]> =
+                beats.iter().map(|b| b.as_slice()).collect();
+            let outs = batched.predict_batch(&beat_refs, &seeds, s);
+
+            let mut single = Accelerator::new(&cfg, &params, reuse, 9);
+            for (b, out) in outs.iter().enumerate() {
+                let want = single.predict_seeded(&beats[b], seeds[b], 0, s);
+                assert_eq!(out.s, s);
+                assert_eq!(
+                    out.samples, want.samples,
+                    "task {task:?}, request {b}: batch lane must equal \
+                     the per-request seeded prediction bit-for-bit"
+                );
+            }
+
+            // Heterogeneous shard ranges through the same blocked call.
+            let mut sharded = Accelerator::new(&cfg, &params, reuse, 9);
+            let reqs = [
+                BatchRequest {
+                    beat: &beats[0],
+                    req_seed: seeds[0],
+                    start: 2,
+                    count: 3,
+                },
+                BatchRequest {
+                    beat: &beats[1],
+                    req_seed: seeds[1],
+                    start: 0,
+                    count: 1,
+                },
+            ];
+            let outs = sharded.predict_batch_shards(&reqs);
+            for (q, out) in reqs.iter().zip(&outs) {
+                let want = single.predict_seeded(
+                    q.beat, q.req_seed, q.start, q.count,
+                );
+                assert_eq!(out.samples, want.samples, "shard range");
+            }
+        }
+    }
+
+    /// The blocked kernel path and the legacy per-sample scalar loop
+    /// are bit-identical — for the seeded schedule and the free-running
+    /// sampler path alike.
+    #[test]
+    fn blocked_path_matches_scalar_reference_bitwise() {
+        for task in [Task::Classify, Task::Anomaly] {
+            let mut cfg = match task {
+                Task::Classify => ArchConfig::new(Task::Classify, 8, 2, "YN"),
+                Task::Anomaly => ArchConfig::new(Task::Anomaly, 8, 1, "YY"),
+            };
+            cfg.seq_len = 24;
+            let params = Params::init(&cfg, &mut Rng::new(6));
+            let reuse = ReuseFactors::new(2, 1, 1);
+            let beat: Vec<f32> = (0..cfg.seq_len)
+                .map(|i| (i as f32 * 0.21).sin())
+                .collect();
+
+            let mut blocked = Accelerator::new(&cfg, &params, reuse, 11);
+            let mut scalar = Accelerator::new(&cfg, &params, reuse, 11);
+            scalar.scalar_reference = true;
+
+            let b = blocked.predict_seeded(&beat, 5, 1, 7);
+            let s = scalar.predict_seeded(&beat, 5, 1, 7);
+            assert_eq!(b.samples, s.samples, "task {task:?}: seeded path");
+
+            let b = blocked.predict(&beat, 6);
+            let s = scalar.predict(&beat, 6);
+            assert_eq!(
+                b.samples, s.samples,
+                "task {task:?}: free-running path"
+            );
+        }
+    }
+
+    /// Interleaving blocked batch calls with single-lane passes must
+    /// not leak lane state (set_block reconfigures cleanly both ways).
+    #[test]
+    fn block_size_changes_do_not_leak_state() {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(3));
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.3).sin()).collect();
+        let mut acc = Accelerator::new(&cfg, &params, reuse, 5);
+        let first = acc.predict_seeded(&beat, 1, 0, 4);
+        let _ = acc.predict_batch(&[&beat, &beat], &[2, 3], 6);
+        let _ = acc.run_pass(&beat);
+        let again = acc.predict_seeded(&beat, 1, 0, 4);
+        assert_eq!(first.samples, again.samples);
+    }
+
+    /// Degenerate S = 0 keeps the pre-kernel behaviour: empty sample
+    /// set, no panic (the blocked path must not configure a zero-lane
+    /// block).
+    #[test]
+    fn zero_samples_yield_empty_output() {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(3));
+        let mut acc = Accelerator::new(
+            &cfg,
+            &params,
+            ReuseFactors::new(1, 1, 1),
+            5,
+        );
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.3).sin()).collect();
+        let out = acc.predict(&beat, 0);
+        assert_eq!(out.s, 0);
+        assert!(out.samples.is_empty());
+        let out = acc.predict_seeded(&beat, 1, 4, 0);
+        assert_eq!(out.s, 0);
+        assert!(out.samples.is_empty());
+        // Mixed batch: empty shards ride along with real ones.
+        let outs = acc.predict_batch_shards(&[
+            BatchRequest { beat: &beat, req_seed: 1, start: 0, count: 2 },
+            BatchRequest { beat: &beat, req_seed: 2, start: 0, count: 0 },
+        ]);
+        assert_eq!(outs[0].s, 2);
+        assert_eq!(outs[1].s, 0);
+        assert!(outs[1].samples.is_empty());
+    }
+
+    #[test]
+    fn mean_std_walks_once_and_matches_accessors() {
+        let out = McOutput {
+            samples: vec![0.2, 0.8, 0.6, 0.4, 0.5, 0.5],
+            s: 3,
+            out_len: 2,
+        };
+        let (mean, std) = out.mean_std();
+        assert_eq!(mean, out.mean());
+        assert_eq!(std, out.std());
+        assert!((mean[0] - (0.2 + 0.6 + 0.5) / 3.0).abs() < 1e-6);
     }
 
     #[test]

@@ -1,9 +1,19 @@
 //! Functional fixed-point engines: MVM units, the LSTM engine (4 gate
 //! MVM pairs + LUT activations + 32-bit tail) and the dense engine —
 //! the hardware blocks of Fig. 2.
+//!
+//! All MVM inner loops run on the shared blocked kernel layer
+//! ([`crate::kernels`]): an engine can hold `rows` independent sample
+//! lanes (MC samples x batched beats), each with its own DX masks and
+//! architectural state, and every weight row fetched by a timestep is
+//! MAC'd into all lanes — the paper's weight-fetch amortisation. The
+//! classic single-lane API (`step`, `set_masks`, `reset`) is the
+//! `rows == 1` special case and is bit-identical to the pre-kernel
+//! implementation.
 
 use crate::config::GATES;
 use crate::fixedpoint::{ActLut, Fx16, Fx32, MacAcc};
+use crate::kernels::{self, Kernel};
 use crate::tensor::Tensor;
 
 /// One matrix-vector-multiply engine with a reuse factor: `in_dim` x
@@ -35,15 +45,7 @@ impl MvmUnit {
     pub fn mac_into(&self, x: &[Fx16], acc: &mut [MacAcc]) {
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(acc.len(), self.out_dim);
-        for (i, &xi) in x.iter().enumerate() {
-            if xi.0 == 0 {
-                continue; // gated by DX: zero rows do no switching
-            }
-            let row = &self.weights[i * self.out_dim..(i + 1) * self.out_dim];
-            for (a, &w) in acc.iter_mut().zip(row) {
-                a.mac(xi, w);
-            }
-        }
+        self.mac_rows(x, self.in_dim, acc, self.out_dim, 1);
     }
 
     /// Masked MAC: rows whose DX mask bit is zero are skipped entirely —
@@ -57,16 +59,65 @@ impl MvmUnit {
     ) {
         debug_assert_eq!(x.len(), self.in_dim);
         debug_assert_eq!(mask.len(), self.in_dim);
-        for i in 0..self.in_dim {
-            let xi = x[i];
-            if xi.0 == 0 || mask[i].0 == 0 {
-                continue;
-            }
-            let row = &self.weights[i * self.out_dim..(i + 1) * self.out_dim];
-            for (a, &w) in acc.iter_mut().zip(row) {
-                a.mac(xi, w);
-            }
-        }
+        self.mac_rows_masked(
+            x,
+            self.in_dim,
+            mask,
+            self.in_dim,
+            acc,
+            self.out_dim,
+            1,
+        );
+    }
+
+    /// Blocked multi-lane MAC through the kernel layer: one weight-row
+    /// fetch serves all `rows` sample lanes.
+    pub fn mac_rows(
+        &self,
+        x: &[Fx16],
+        x_stride: usize,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+        rows: usize,
+    ) {
+        kernels::active().mvm_fx(
+            &self.weights,
+            self.in_dim,
+            self.out_dim,
+            rows,
+            x,
+            x_stride,
+            None,
+            acc,
+            acc_stride,
+        );
+    }
+
+    /// Blocked multi-lane masked MAC: per-lane DX masks, strided so the
+    /// kernel reads gate lanes straight out of `[rows][GATES][dim]`
+    /// mask buffers.
+    #[allow(clippy::too_many_arguments)]
+    pub fn mac_rows_masked(
+        &self,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: &[Fx16],
+        mask_stride: usize,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+        rows: usize,
+    ) {
+        kernels::active().mvm_fx(
+            &self.weights,
+            self.in_dim,
+            self.out_dim,
+            rows,
+            x,
+            x_stride,
+            Some((mask, mask_stride)),
+            acc,
+            acc_stride,
+        );
     }
 
     /// Physical multipliers (DSP blocks) after time-multiplexing.
@@ -112,10 +163,13 @@ pub struct LstmEngine {
     pub bayesian: bool,
     sigmoid: ActLut,
     tanh: ActLut,
-    /// Current per-gate masks (pre-sampled per input, Fig. 4).
+    /// Sample lanes currently configured (MC samples x batched beats).
+    rows: usize,
+    /// Current per-gate masks, `[rows][GATES][dim]` (pre-sampled per
+    /// input, Fig. 4).
     pub zx: Vec<Fx16>,
     pub zh: Vec<Fx16>,
-    /// Architectural state registers.
+    /// Architectural state registers, `[rows][hdim]`.
     h: Vec<Fx16>,
     c: Vec<Fx32>,
     // Scratch buffers (no allocation in the hot loop).
@@ -165,6 +219,7 @@ impl LstmEngine {
             bayesian,
             sigmoid: ActLut::sigmoid(),
             tanh: ActLut::tanh(),
+            rows: 1,
             zx: vec![Fx16::ONE; GATES * idim],
             zh: vec![Fx16::ONE; GATES * hdim],
             h: vec![Fx16::ZERO; hdim],
@@ -174,65 +229,128 @@ impl LstmEngine {
         }
     }
 
-    /// Load pre-sampled masks (one per input sequence). Masks are binary
-    /// {0,1} scaled to fixed point.
-    pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
-        debug_assert_eq!(zx.len(), GATES * self.idim);
-        debug_assert_eq!(zh.len(), GATES * self.hdim);
-        for (d, &s) in self.zx.iter_mut().zip(zx) {
-            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
-        }
-        for (d, &s) in self.zh.iter_mut().zip(zh) {
-            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+    /// Sample lanes currently configured.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Configure `rows` independent sample lanes: state zeroed, masks
+    /// all-ones (the non-Bayesian default — Bayesian layers get per-lane
+    /// masks via [`LstmEngine::set_masks_row`]).
+    pub fn set_rows(&mut self, rows: usize) {
+        assert!(rows >= 1, "at least one sample lane");
+        if rows != self.rows {
+            self.rows = rows;
+            self.zx = vec![Fx16::ONE; rows * GATES * self.idim];
+            self.zh = vec![Fx16::ONE; rows * GATES * self.hdim];
+            self.h = vec![Fx16::ZERO; rows * self.hdim];
+            self.c = vec![Fx32::ZERO; rows * self.hdim];
+            self.acc = vec![MacAcc::new(); rows * self.hdim];
+            self.pre = vec![Fx16::ZERO; rows * GATES * self.hdim];
+        } else {
+            self.zx.fill(Fx16::ONE);
+            self.zh.fill(Fx16::ONE);
+            self.reset();
         }
     }
 
-    /// Reset h/c registers (new sequence).
+    /// Load pre-sampled masks into lane `r`. Masks are binary {0,1}
+    /// scaled to fixed point.
+    pub fn set_masks_row(&mut self, r: usize, zx: &[f32], zh: &[f32]) {
+        debug_assert!(r < self.rows);
+        debug_assert_eq!(zx.len(), GATES * self.idim);
+        debug_assert_eq!(zh.len(), GATES * self.hdim);
+        let xb = r * GATES * self.idim;
+        for (j, &s) in zx.iter().enumerate() {
+            self.zx[xb + j] = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+        }
+        let hb = r * GATES * self.hdim;
+        for (j, &s) in zh.iter().enumerate() {
+            self.zh[hb + j] = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+        }
+    }
+
+    /// Load pre-sampled masks (one per input sequence) — the single-lane
+    /// path.
+    pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
+        self.set_masks_row(0, zx, zh);
+    }
+
+    /// Reset h/c registers in every lane (new sequence).
     pub fn reset(&mut self) {
         self.h.fill(Fx16::ZERO);
         self.c.fill(Fx32::ZERO);
     }
 
-    /// One timestep: consume x_t, update (h, c), expose h_t.
-    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
-        debug_assert_eq!(x.len(), self.idim);
+    /// One timestep over all lanes: lane `r` consumes
+    /// `xs[r * x_stride ..][..idim]`, updates its (h, c), and the
+    /// returned slice exposes all lanes' h as `[rows][hdim]`. Each gate
+    /// weight row is fetched once and MAC'd into every lane (the
+    /// blocked-kernel amortisation); per-lane arithmetic is bit-identical
+    /// to the single-lane [`LstmEngine::step`].
+    pub fn step_rows(&mut self, xs: &[Fx16], x_stride: usize) -> &[Fx16] {
+        let rows = self.rows;
         let hdim = self.hdim;
+        let idim = self.idim;
         for g in 0..GATES {
             for a in self.acc.iter_mut() {
                 *a = MacAcc::new();
             }
-            // DX gating fused into the MVMs (no masked copy — §Perf).
-            self.mvm_x[g].mac_into_masked(
-                x,
-                &self.zx[g * self.idim..(g + 1) * self.idim],
+            // DX gating fused into the MVMs (no masked copy — §Perf);
+            // gate-lane masks read strided out of [rows][GATES][dim].
+            self.mvm_x[g].mac_rows_masked(
+                xs,
+                x_stride,
+                &self.zx[g * idim..],
+                GATES * idim,
                 &mut self.acc,
+                hdim,
+                rows,
             );
-            self.mvm_h[g].mac_into_masked(
+            self.mvm_h[g].mac_rows_masked(
                 &self.h,
-                &self.zh[g * hdim..(g + 1) * hdim],
+                hdim,
+                &self.zh[g * hdim..],
+                GATES * hdim,
                 &mut self.acc,
+                hdim,
+                rows,
             );
-            for k in 0..hdim {
-                self.pre[g * hdim + k] =
-                    self.acc[k].finish(self.bias[g * hdim + k]);
+            for r in 0..rows {
+                for k in 0..hdim {
+                    self.pre[(r * GATES + g) * hdim + k] =
+                        self.acc[r * hdim + k].finish(self.bias[g * hdim + k]);
+                }
             }
         }
         // Tail: activations from BRAM LUTs, cell path in 32-bit.
-        for k in 0..hdim {
-            let i_g = self.sigmoid.eval(self.pre[k]);
-            let f_g = self.sigmoid.eval(self.pre[hdim + k]);
-            let g_g = self.tanh.eval(self.pre[2 * hdim + k]);
-            let o_g = self.sigmoid.eval(self.pre[3 * hdim + k]);
-            // c = f*c + i*g  (f*c on the 2-DSP 16x32 path).
-            let fc = self.c[k].mul_fx16(f_g);
-            let ig = i_g.saturating_mul(g_g).widen();
-            self.c[k] = fc.saturating_add(ig);
-            let tanh_c = self.tanh.eval(self.c[k].narrow());
-            self.h[k] = o_g.saturating_mul(tanh_c);
+        for r in 0..rows {
+            let pb = r * GATES * hdim;
+            for k in 0..hdim {
+                let i_g = self.sigmoid.eval(self.pre[pb + k]);
+                let f_g = self.sigmoid.eval(self.pre[pb + hdim + k]);
+                let g_g = self.tanh.eval(self.pre[pb + 2 * hdim + k]);
+                let o_g = self.sigmoid.eval(self.pre[pb + 3 * hdim + k]);
+                // c = f*c + i*g  (f*c on the 2-DSP 16x32 path).
+                let fc = self.c[r * hdim + k].mul_fx16(f_g);
+                let ig = i_g.saturating_mul(g_g).widen();
+                self.c[r * hdim + k] = fc.saturating_add(ig);
+                let tanh_c = self.tanh.eval(self.c[r * hdim + k].narrow());
+                self.h[r * hdim + k] = o_g.saturating_mul(tanh_c);
+            }
         }
         &self.h
     }
 
+    /// One timestep: consume x_t, update (h, c), expose h_t — the
+    /// single-lane path.
+    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
+        debug_assert_eq!(x.len(), self.idim);
+        debug_assert_eq!(self.rows, 1, "use step_rows on a blocked engine");
+        self.step_rows(x, self.idim)
+    }
+
+    /// All lanes' hidden state, `[rows][hdim]`.
     pub fn hidden(&self) -> &[Fx16] {
         &self.h
     }
@@ -268,6 +386,7 @@ impl LstmEngine {
 pub struct DenseEngine {
     pub mvm: MvmUnit,
     pub bias: Vec<Fx16>,
+    rows: usize,
     acc: Vec<MacAcc>,
     out: Vec<Fx16>,
 }
@@ -278,20 +397,42 @@ impl DenseEngine {
         Self {
             mvm: MvmUnit::new(&w.data, f, o, rd),
             bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            rows: 1,
             acc: vec![MacAcc::new(); o],
             out: vec![Fx16::ZERO; o],
         }
     }
 
-    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
+    /// Configure `rows` sample lanes.
+    pub fn set_rows(&mut self, rows: usize) {
+        assert!(rows >= 1, "at least one sample lane");
+        if rows != self.rows {
+            let o = self.mvm.out_dim;
+            self.rows = rows;
+            self.acc = vec![MacAcc::new(); rows * o];
+            self.out = vec![Fx16::ZERO; rows * o];
+        }
+    }
+
+    /// One dense pass over all lanes; returns `[rows][out_dim]`.
+    pub fn step_rows(&mut self, xs: &[Fx16], x_stride: usize) -> &[Fx16] {
+        let o = self.mvm.out_dim;
         for a in self.acc.iter_mut() {
             *a = MacAcc::new();
         }
-        self.mvm.mac_into(x, &mut self.acc);
-        for (k, a) in self.acc.iter().enumerate() {
-            self.out[k] = a.finish(self.bias[k]);
+        self.mvm.mac_rows(xs, x_stride, &mut self.acc, o, self.rows);
+        for r in 0..self.rows {
+            for k in 0..o {
+                self.out[r * o + k] =
+                    self.acc[r * o + k].finish(self.bias[k]);
+            }
         }
         &self.out
+    }
+
+    pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
+        debug_assert_eq!(self.rows, 1, "use step_rows on a blocked engine");
+        self.step_rows(x, self.mvm.in_dim)
     }
 
     pub fn dsps_synthesized(&self) -> u64 {
@@ -419,6 +560,88 @@ mod tests {
         let eb = LstmEngine::new(&wx, &wh, &b, 4, 4, true);
         assert_eq!(eb.mask_bits(), GATES * 16);
         assert_eq!(eb.ii(), 4);
+    }
+
+    /// Sample lanes are bit-identical to independent single-lane
+    /// engines over a multi-step sequence — the engine-level half of
+    /// the blocked-kernel contract.
+    #[test]
+    fn blocked_lanes_match_single_lane_engines_bitwise() {
+        let mut rng = Rng::new(11);
+        let (idim, hdim, rows, steps) = (3, 5, 4, 6);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        // Per-lane random masks and inputs.
+        let masks: Vec<(Vec<f32>, Vec<f32>)> = (0..rows)
+            .map(|_| {
+                let zx: Vec<f32> = (0..GATES * idim)
+                    .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                    .collect();
+                let zh: Vec<f32> = (0..GATES * hdim)
+                    .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                    .collect();
+                (zx, zh)
+            })
+            .collect();
+        let xs: Vec<Fx16> = (0..steps * rows * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+
+        let mut blocked = LstmEngine::new(&wx, &wh, &b, 2, 1, true);
+        blocked.set_rows(rows);
+        for (r, (zx, zh)) in masks.iter().enumerate() {
+            blocked.set_masks_row(r, zx, zh);
+        }
+        let mut h_blocked = Vec::new();
+        for t in 0..steps {
+            let frame = &xs[t * rows * idim..(t + 1) * rows * idim];
+            h_blocked = blocked.step_rows(frame, idim).to_vec();
+        }
+
+        for (r, (zx, zh)) in masks.iter().enumerate() {
+            let mut single = LstmEngine::new(&wx, &wh, &b, 2, 1, true);
+            single.set_masks(zx, zh);
+            let mut h_single = Vec::new();
+            for t in 0..steps {
+                let x =
+                    &xs[(t * rows + r) * idim..(t * rows + r + 1) * idim];
+                h_single = single.step(x).to_vec();
+            }
+            assert_eq!(
+                h_blocked[r * hdim..(r + 1) * hdim]
+                    .iter()
+                    .map(|v| v.0)
+                    .collect::<Vec<_>>(),
+                h_single.iter().map(|v| v.0).collect::<Vec<_>>(),
+                "lane {r} must match its single-lane engine bit-for-bit"
+            );
+        }
+    }
+
+    #[test]
+    fn dense_engine_blocked_rows_match_single() {
+        let mut rng = Rng::new(13);
+        let w = rand_tensor(&mut rng, &[6, 4], 0.5);
+        let b = rand_tensor(&mut rng, &[4], 0.2);
+        let rows = 3;
+        let xs: Vec<Fx16> = (0..rows * 6)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+        let mut blocked = DenseEngine::new(&w, &b, 2);
+        blocked.set_rows(rows);
+        let y = blocked.step_rows(&xs, 6).to_vec();
+        for r in 0..rows {
+            let mut single = DenseEngine::new(&w, &b, 2);
+            let yr = single.step(&xs[r * 6..(r + 1) * 6]).to_vec();
+            assert_eq!(
+                y[r * 4..(r + 1) * 4]
+                    .iter()
+                    .map(|v| v.0)
+                    .collect::<Vec<_>>(),
+                yr.iter().map(|v| v.0).collect::<Vec<_>>()
+            );
+        }
     }
 
     #[test]

@@ -24,6 +24,6 @@ pub mod engine;
 pub mod gru;
 pub mod pipeline;
 
-pub use accel::{Accelerator, McOutput};
+pub use accel::{Accelerator, BatchRequest, McOutput};
 pub use engine::{DenseEngine, LstmEngine, MvmUnit};
 pub use pipeline::{PipelineReport, PipelineSim};

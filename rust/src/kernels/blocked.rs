@@ -1,0 +1,133 @@
+//! Blocked production kernel: weight row outer, sample block inner.
+//!
+//! Rows (MC samples x batched beats) are processed in chunks of
+//! `s_block`. Within a chunk the loop nest is inverted relative to the
+//! scalar reference: each weight row `w[i]` is fetched **once** and
+//! MAC'd into every live accumulator row before the next row is
+//! touched — the paper's weight-fetch amortisation (Sec. IV), with
+//! `[s_block x out_dim]` accumulators playing the role of the engine's
+//! parallel sample lanes.
+//!
+//! Bit-exactness: for a fixed output element `(r, k)` the terms still
+//! arrive in ascending `i`, so results are bit-identical to
+//! [`super::ScalarKernel`] (asserted by the property tests in
+//! `super::tests` for both `Fx16` and `f32`).
+
+use super::{check_bounds, Kernel};
+use crate::fixedpoint::{Fx16, MacAcc};
+
+pub struct BlockedKernel {
+    /// Live accumulator rows per chunk (the MC-sample block size).
+    pub s_block: usize,
+}
+
+impl Default for BlockedKernel {
+    fn default() -> Self {
+        Self { s_block: super::DEFAULT_S_BLOCK }
+    }
+}
+
+impl Kernel for BlockedKernel {
+    fn name(&self) -> &'static str {
+        "blocked"
+    }
+
+    fn mvm_fx(
+        &self,
+        w: &[Fx16],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<(&[Fx16], usize)>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        check_bounds(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.map(|(m, s)| (m.len(), s)),
+            acc.len(),
+            acc_stride,
+        );
+        let s_block = self.s_block.max(1);
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + s_block).min(rows);
+            for i in 0..in_dim {
+                let wrow = &w[i * out_dim..(i + 1) * out_dim];
+                for r in r0..r1 {
+                    let xi = x[r * x_stride + i];
+                    if xi.0 == 0 {
+                        continue; // DX gating, as in the scalar kernel
+                    }
+                    if let Some((m, ms)) = mask {
+                        if m[r * ms + i].0 == 0 {
+                            continue;
+                        }
+                    }
+                    let acc_r =
+                        &mut acc[r * acc_stride..r * acc_stride + out_dim];
+                    for (a, &wv) in acc_r.iter_mut().zip(wrow) {
+                        a.mac(xi, wv);
+                    }
+                }
+            }
+            r0 = r1;
+        }
+    }
+
+    fn mvm_f32(
+        &self,
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[f32],
+        x_stride: usize,
+        mask: Option<(&[f32], usize)>,
+        out: &mut [f32],
+        out_stride: usize,
+    ) {
+        check_bounds(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.map(|(m, s)| (m.len(), s)),
+            out.len(),
+            out_stride,
+        );
+        let s_block = self.s_block.max(1);
+        let mut r0 = 0;
+        while r0 < rows {
+            let r1 = (r0 + s_block).min(rows);
+            for i in 0..in_dim {
+                let wrow = &w[i * out_dim..(i + 1) * out_dim];
+                for r in r0..r1 {
+                    let xi = x[r * x_stride + i];
+                    let xv = match mask {
+                        Some((m, ms)) => xi * m[r * ms + i],
+                        None => xi,
+                    };
+                    if xv == 0.0 {
+                        continue;
+                    }
+                    let out_r =
+                        &mut out[r * out_stride..r * out_stride + out_dim];
+                    for (o, &wv) in out_r.iter_mut().zip(wrow) {
+                        *o += xv * wv;
+                    }
+                }
+            }
+            r0 = r1;
+        }
+    }
+}

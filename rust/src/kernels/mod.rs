@@ -1,0 +1,381 @@
+//! Unified blocked-kernel compute layer (paper Sec. IV co-design).
+//!
+//! The paper's central hardware win is amortising each weight fetch
+//! across Monte-Carlo samples and batched inputs: the LSTM engines keep
+//! one copy of the weights on chip and stream S MC samples (and B
+//! batched beats) through them, so a weight row is read once per
+//! timestep instead of once per sample. The simulator used to walk
+//! every weight matrix once per sample per beat; this module is the
+//! shared kernel layer that gives every matrix-vector hot loop in the
+//! crate — the float model ([`crate::nn`]), the fixed-point engines
+//! ([`crate::fpga::engine`]) and the serving fleet's batched entry
+//! points — that same amortisation.
+//!
+//! Two implementations of one [`Kernel`] contract:
+//!
+//! * [`ScalarKernel`] — the reference. Row-at-a-time, literally the
+//!   loop nest the engines shipped with (sample outer, weight row
+//!   inner). Kept for equivalence tests and as the bench baseline.
+//! * [`BlockedKernel`] — the production kernel. Weight row outer,
+//!   sample block inner: each fetched row is MAC'd into up to
+//!   `s_block` accumulator rows before the next row is touched
+//!   (`[S_block x out_dim]` live accumulators, the Fig. 2 gate-engine
+//!   shape).
+//!
+//! ## Bit-exactness contract
+//!
+//! Both kernels produce **bit-identical** results (`docs/kernels.md`):
+//! for every output element `(r, k)` the contributing terms are
+//! accumulated in ascending weight-row order `i`, whatever the blocking.
+//! For the fixed-point path that is trivially exact (the [`MacAcc`]
+//! accumulator is a plain `i64` add); for `f32` the identical term
+//! order makes float rounding identical too. The property tests below
+//! assert bitwise equality across random shapes, strides, block sizes
+//! and mask patterns; `fpga::accel` asserts the same contract one level
+//! up (`predict_batch` vs per-request `predict_seeded`).
+//!
+//! ## Masking semantics
+//!
+//! Masks are the MC-dropout DX gates (binary keep/drop):
+//!
+//! * fixed point: a row with `mask[i] == 0` is *skipped* (the engine's
+//!   DX gating — zero rows do no switching); kept rows use `x[i]`
+//!   unchanged.
+//! * float: the masked input is `x[i] * mask[i]` (the software models
+//!   multiply by the {0.0, 1.0} mask before the matmul); rows whose
+//!   masked value is exactly `0.0` are skipped, matching the zero-skip
+//!   in the original `nn::lstm` loops.
+
+pub mod blocked;
+pub mod scalar;
+
+pub use blocked::BlockedKernel;
+pub use scalar::ScalarKernel;
+
+use crate::fixedpoint::{Fx16, MacAcc};
+
+/// Default MC-sample block: 16 live accumulator rows keeps the working
+/// set (`s_block * out_dim` accumulators) inside L1 for the paper's
+/// hidden sizes while amortising each weight-row fetch 16x.
+pub const DEFAULT_S_BLOCK: usize = 16;
+
+/// The production kernel every engine runs on.
+static ACTIVE: BlockedKernel = BlockedKernel { s_block: DEFAULT_S_BLOCK };
+
+/// The kernel the engines use on the hot path.
+#[inline]
+pub fn active() -> &'static BlockedKernel {
+    &ACTIVE
+}
+
+/// A blocked masked matrix-vector-multiply kernel over row-major
+/// `[in_dim][out_dim]` weights.
+///
+/// For each row `r` in `0..rows`, reading input row
+/// `x[r * x_stride ..][..in_dim]` and (if present) mask row
+/// `mask[r * mask_stride ..][..in_dim]`, the kernel accumulates
+///
+/// ```text
+///   out[r * out_stride + k] += masked(x_r[i]) * w[i * out_dim + k]
+/// ```
+///
+/// over the kept rows `i` in **ascending order** — the bit-exactness
+/// contract both implementations share. Strides let callers point the
+/// kernel directly at interleaved tensors (e.g. per-gate mask rows in a
+/// `[rows][GATES][dim]` buffer) without gather copies.
+pub trait Kernel {
+    fn name(&self) -> &'static str;
+
+    /// Fixed-point MVM into wide [`MacAcc`] accumulators (the DSP48
+    /// cascade). Kept rows use `x[i]` unchanged; `mask[i].0 == 0` or
+    /// `x[i].0 == 0` skips the row (DX gating).
+    #[allow(clippy::too_many_arguments)]
+    fn mvm_fx(
+        &self,
+        w: &[Fx16],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<(&[Fx16], usize)>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    );
+
+    /// Float MVM accumulating into `out` (add, not overwrite — callers
+    /// preload bias rows). The masked input is `x[i] * mask[i]`; exact
+    /// zeros are skipped.
+    #[allow(clippy::too_many_arguments)]
+    fn mvm_f32(
+        &self,
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[f32],
+        x_stride: usize,
+        mask: Option<(&[f32], usize)>,
+        out: &mut [f32],
+        out_stride: usize,
+    );
+}
+
+/// Shared bounds checks: every row's input, mask and output slice must
+/// lie inside its buffer.
+#[inline]
+pub(crate) fn check_bounds(
+    w_len: usize,
+    in_dim: usize,
+    out_dim: usize,
+    rows: usize,
+    x_len: usize,
+    x_stride: usize,
+    mask: Option<(usize, usize)>,
+    out_len: usize,
+    out_stride: usize,
+) {
+    assert_eq!(w_len, in_dim * out_dim, "weight shape mismatch");
+    if rows == 0 {
+        return;
+    }
+    assert!(
+        (rows - 1) * x_stride + in_dim <= x_len,
+        "input rows out of bounds"
+    );
+    if let Some((m_len, m_stride)) = mask {
+        assert!(
+            (rows - 1) * m_stride + in_dim <= m_len,
+            "mask rows out of bounds"
+        );
+    }
+    assert!(
+        (rows - 1) * out_stride + out_dim <= out_len,
+        "output rows out of bounds"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    /// Random Fx16 in roughly [-2, 2] with exact zeros sprinkled in.
+    fn rand_fx(rng: &mut Rng, zero_p: f64) -> Fx16 {
+        if rng.bernoulli(zero_p) {
+            Fx16::ZERO
+        } else {
+            Fx16::from_f32(rng.uniform_in(-2.0, 2.0) as f32)
+        }
+    }
+
+    fn rand_mask_fx(rng: &mut Rng, drop_p: f64) -> Fx16 {
+        if rng.bernoulli(drop_p) {
+            Fx16::ZERO
+        } else {
+            Fx16::ONE
+        }
+    }
+
+    /// Blocked kernel is bit-identical to the scalar reference for
+    /// `Fx16` across random shapes, strides, block sizes and mask
+    /// patterns (ISSUE 3 acceptance).
+    #[test]
+    fn blocked_fx_bit_identical_to_scalar_reference() {
+        let mut rng = Rng::new(41);
+        let scalar = ScalarKernel;
+        for trial in 0..60 {
+            let in_dim = 1 + rng.below(24);
+            let out_dim = 1 + rng.below(24);
+            let rows = 1 + rng.below(12);
+            let s_block = 1 + rng.below(rows + 4);
+            let blocked = BlockedKernel { s_block };
+            // Padded strides exercise the interleaved-tensor case.
+            let x_stride = in_dim + rng.below(3);
+            let m_stride = in_dim + rng.below(5);
+            let a_stride = out_dim + rng.below(3);
+            let w: Vec<Fx16> = (0..in_dim * out_dim)
+                .map(|_| rand_fx(&mut rng, 0.1))
+                .collect();
+            let x: Vec<Fx16> = (0..rows * x_stride)
+                .map(|_| rand_fx(&mut rng, 0.2))
+                .collect();
+            let mask: Vec<Fx16> = (0..rows * m_stride)
+                .map(|_| rand_mask_fx(&mut rng, 0.125))
+                .collect();
+            for use_mask in [false, true] {
+                // Non-zero accumulator start states must be preserved.
+                let mut acc_s: Vec<MacAcc> =
+                    vec![MacAcc::new(); rows * a_stride];
+                for (j, a) in acc_s.iter_mut().enumerate() {
+                    a.mac(Fx16(j as i16 % 7), Fx16::ONE);
+                }
+                let mut acc_b = acc_s.clone();
+                let m = use_mask.then_some((mask.as_slice(), m_stride));
+                scalar.mvm_fx(
+                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut acc_s,
+                    a_stride,
+                );
+                blocked.mvm_fx(
+                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut acc_b,
+                    a_stride,
+                );
+                let fin_s: Vec<i16> = acc_s
+                    .iter()
+                    .map(|a| a.finish(Fx16::ZERO).0)
+                    .collect();
+                let fin_b: Vec<i16> = acc_b
+                    .iter()
+                    .map(|a| a.finish(Fx16::ZERO).0)
+                    .collect();
+                assert_eq!(
+                    fin_s, fin_b,
+                    "trial {trial} (mask {use_mask}, s_block {s_block}): \
+                     blocked Fx16 kernel drifted from scalar reference"
+                );
+            }
+        }
+    }
+
+    /// Same property for the float kernel: identical term order makes
+    /// float rounding identical, so equality is bitwise here too.
+    #[test]
+    fn blocked_f32_bit_identical_to_scalar_reference() {
+        let mut rng = Rng::new(97);
+        let scalar = ScalarKernel;
+        for trial in 0..60 {
+            let in_dim = 1 + rng.below(20);
+            let out_dim = 1 + rng.below(20);
+            let rows = 1 + rng.below(10);
+            let blocked = BlockedKernel { s_block: 1 + rng.below(8) };
+            let x_stride = in_dim + rng.below(4);
+            let m_stride = in_dim;
+            let o_stride = out_dim + rng.below(4);
+            let w: Vec<f32> = (0..in_dim * out_dim)
+                .map(|_| rng.normal() as f32)
+                .collect();
+            let x: Vec<f32> = (0..rows * x_stride)
+                .map(|_| {
+                    if rng.bernoulli(0.15) { 0.0 } else { rng.normal() as f32 }
+                })
+                .collect();
+            let mask: Vec<f32> = (0..rows * m_stride)
+                .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                .collect();
+            for use_mask in [false, true] {
+                let init: Vec<f32> = (0..rows * o_stride)
+                    .map(|_| rng.normal() as f32)
+                    .collect();
+                let mut out_s = init.clone();
+                let mut out_b = init;
+                let m = use_mask.then_some((mask.as_slice(), m_stride));
+                scalar.mvm_f32(
+                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut out_s,
+                    o_stride,
+                );
+                blocked.mvm_f32(
+                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut out_b,
+                    o_stride,
+                );
+                let bits_s: Vec<u32> =
+                    out_s.iter().map(|v| v.to_bits()).collect();
+                let bits_b: Vec<u32> =
+                    out_b.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(
+                    bits_s, bits_b,
+                    "trial {trial} (mask {use_mask}): blocked f32 kernel \
+                     drifted from scalar reference"
+                );
+            }
+        }
+    }
+
+    /// The kernels agree with a plain from-scratch matmul numerically
+    /// (the contract is not just self-consistency).
+    #[test]
+    fn kernels_match_naive_matmul() {
+        let mut rng = Rng::new(5);
+        let (in_dim, out_dim, rows) = (7, 5, 4);
+        let w: Vec<f32> =
+            (0..in_dim * out_dim).map(|_| rng.normal() as f32).collect();
+        let x: Vec<f32> =
+            (0..rows * in_dim).map(|_| rng.normal() as f32).collect();
+        let mut out = vec![0f32; rows * out_dim];
+        active().mvm_f32(
+            &w, in_dim, out_dim, rows, &x, in_dim, None, &mut out, out_dim,
+        );
+        for r in 0..rows {
+            for k in 0..out_dim {
+                let want: f32 = (0..in_dim)
+                    .map(|i| x[r * in_dim + i] * w[i * out_dim + k])
+                    .sum();
+                let got = out[r * out_dim + k];
+                assert!(
+                    (got - want).abs() < 1e-4,
+                    "[{r}][{k}]: {got} vs {want}"
+                );
+            }
+        }
+    }
+
+    /// Fully-masked rows contribute nothing; strided mask rows pick the
+    /// right gate lane.
+    #[test]
+    fn mask_strides_select_the_right_rows() {
+        let in_dim = 4;
+        let out_dim = 3;
+        let w: Vec<Fx16> = (0..in_dim * out_dim)
+            .map(|j| Fx16::from_f32(0.25 * (j as f32 + 1.0)))
+            .collect();
+        let x = vec![Fx16::ONE; 2 * in_dim];
+        // Interleaved 2-lane mask buffer: lane 0 drops everything, lane
+        // 1 keeps everything.
+        let mut mask = Vec::new();
+        for _ in 0..2 {
+            mask.extend(vec![Fx16::ZERO; in_dim]);
+            mask.extend(vec![Fx16::ONE; in_dim]);
+        }
+        for lane in 0..2 {
+            let mut acc = vec![MacAcc::new(); 2 * out_dim];
+            active().mvm_fx(
+                &w,
+                in_dim,
+                out_dim,
+                2,
+                &x,
+                in_dim,
+                Some((&mask[lane * in_dim..], 2 * in_dim)),
+                &mut acc,
+                out_dim,
+            );
+            let all_zero = acc
+                .iter()
+                .all(|a| a.finish(Fx16::ZERO).0 == 0);
+            if lane == 0 {
+                assert!(all_zero, "dropped lane must not accumulate");
+            } else {
+                assert!(!all_zero, "kept lane must accumulate");
+            }
+        }
+    }
+
+    #[test]
+    fn zero_rows_are_noops() {
+        let w = vec![Fx16::ONE; 6];
+        let x: Vec<Fx16> = Vec::new();
+        let mut acc: Vec<MacAcc> = Vec::new();
+        active().mvm_fx(&w, 2, 3, 0, &x, 2, None, &mut acc, 3);
+        let mut out: Vec<f32> = Vec::new();
+        active().mvm_f32(
+            &[1.0; 6],
+            2,
+            3,
+            0,
+            &[],
+            2,
+            None,
+            &mut out,
+            3,
+        );
+    }
+}

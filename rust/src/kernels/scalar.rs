@@ -1,0 +1,101 @@
+//! Scalar reference kernel: row-at-a-time, the exact loop nest the
+//! engines shipped with (sample outer, weight row inner). Every weight
+//! row is re-fetched once per sample — the per-sample cost model the
+//! blocked kernel amortises away. Kept as the bit-exactness oracle and
+//! the bench baseline.
+
+use super::{check_bounds, Kernel};
+use crate::fixedpoint::{Fx16, MacAcc};
+
+pub struct ScalarKernel;
+
+impl Kernel for ScalarKernel {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+
+    fn mvm_fx(
+        &self,
+        w: &[Fx16],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<(&[Fx16], usize)>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        check_bounds(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.map(|(m, s)| (m.len(), s)),
+            acc.len(),
+            acc_stride,
+        );
+        for r in 0..rows {
+            let xr = &x[r * x_stride..r * x_stride + in_dim];
+            let acc_r = &mut acc[r * acc_stride..r * acc_stride + out_dim];
+            for (i, &xi) in xr.iter().enumerate() {
+                if xi.0 == 0 {
+                    continue; // gated by DX: zero rows do no switching
+                }
+                if let Some((m, ms)) = mask {
+                    if m[r * ms + i].0 == 0 {
+                        continue;
+                    }
+                }
+                let wrow = &w[i * out_dim..(i + 1) * out_dim];
+                for (a, &wv) in acc_r.iter_mut().zip(wrow) {
+                    a.mac(xi, wv);
+                }
+            }
+        }
+    }
+
+    fn mvm_f32(
+        &self,
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[f32],
+        x_stride: usize,
+        mask: Option<(&[f32], usize)>,
+        out: &mut [f32],
+        out_stride: usize,
+    ) {
+        check_bounds(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.map(|(m, s)| (m.len(), s)),
+            out.len(),
+            out_stride,
+        );
+        for r in 0..rows {
+            let xr = &x[r * x_stride..r * x_stride + in_dim];
+            let out_r = &mut out[r * out_stride..r * out_stride + out_dim];
+            for (i, &xi) in xr.iter().enumerate() {
+                let xv = match mask {
+                    Some((m, ms)) => xi * m[r * ms + i],
+                    None => xi,
+                };
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &w[i * out_dim..(i + 1) * out_dim];
+                for (o, &wv) in out_r.iter_mut().zip(wrow) {
+                    *o += xv * wv;
+                }
+            }
+        }
+    }
+}

@@ -11,7 +11,10 @@
 //!   algorithmic–hardware design-space-exploration framework ([`dse`]),
 //!   a PJRT runtime executing the AOT artifacts ([`runtime`]), a
 //!   Rust-driven training loop ([`train`]), a native float reference
-//!   engine ([`nn`]), an async serving coordinator ([`coordinator`])
+//!   engine ([`nn`]), a shared blocked-MVM kernel layer ([`kernels`] —
+//!   one weight fetch amortised over MC samples and batched beats,
+//!   bit-exactness contract in `docs/kernels.md`), an async serving
+//!   coordinator ([`coordinator`])
 //!   with a sharded multi-engine fleet ([`coordinator::fleet`] —
 //!   architecture and MC-shard semantics in `docs/serving.md`) and an
 //!   adaptive uncertainty-quantification layer ([`uq`] — sequential MC
@@ -28,6 +31,7 @@ pub mod fixedpoint;
 pub mod fpga;
 pub mod hwmodel;
 pub mod jsonio;
+pub mod kernels;
 pub mod lfsr;
 pub mod metrics;
 pub mod nn;

@@ -198,7 +198,9 @@ subcommands:
           [--arch NAME] [--engines N] [--router rr|least-loaded|mc-shard]
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
-          [--seed N] [--json]
+          [--seed N] [--json] [--kernel blocked|scalar]
+          (--kernel scalar forces the legacy per-sample FPGA-sim
+           path — bench baseline; bit-identical output)
           adaptive MC (docs/uncertainty.md): [--adaptive-mc]
           [--target-ci F] [--s-min N] [--chunk N] [--abstain-entropy F]
           [--defer-entropy F] [--max-epistemic F] [--calibration PATH]
@@ -513,6 +515,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let json_out = args.flag("json");
     let seed = args.usize_or("seed", 3) as u64;
     let artifacts = args.artifacts_dir();
+    // Kernel selection: the blocked MC-batching path (default) or the
+    // legacy per-sample scalar loop (bench baseline — docs/kernels.md).
+    let kernel = args.get("kernel").unwrap_or("blocked").to_string();
+    anyhow::ensure!(
+        kernel == "blocked" || kernel == "scalar",
+        "--kernel must be blocked or scalar"
+    );
 
     // Adaptive MC: sequential early-exit sampling + risk tiers
     // (docs/uncertainty.md).
@@ -556,6 +565,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let cfg2 = cfg.clone();
         let p2 = params.clone();
         let arts = artifacts.clone();
+        let scalar_kernel = kernel == "scalar";
         factories.push(Box::new(move || match kind.as_str() {
             "gpu" => Engine::gpu(
                 Model::new(cfg2.clone(), Params { tensors: p2.clone() }),
@@ -573,16 +583,25 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     cfg2.clone(),
                     Params { tensors: p2.clone() },
                 );
-                Engine::fpga(&cfg2, &m, reuse, s, seed)
+                let mut e = Engine::fpga(&cfg2, &m, reuse, s, seed);
+                e.set_scalar_reference(scalar_kernel);
+                e
             }
         }));
     }
 
-    let policy = match backend.as_str() {
-        "gpu" | "pjrt" => {
-            BatchPolicy::batched(batch, std::time::Duration::from_millis(2))
-        }
-        _ => BatchPolicy::stream(),
+    // Every backend batches: a formed batch becomes one blocked engine
+    // call (FPGA-sim amortises weight fetches across the batch's MC
+    // lanes), bounded by a row budget so a burst cannot form an
+    // arbitrarily large blocked pass. --batch 1 streams.
+    let policy = if batch <= 1 {
+        BatchPolicy::stream()
+    } else {
+        BatchPolicy::batched_rows(
+            batch,
+            std::time::Duration::from_millis(2),
+            batch * s.max(1),
+        )
     };
     let mut fleet = Fleet::start(
         FleetConfig {
@@ -703,7 +722,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             .unwrap_or_default();
         println!(
             "{{\"cmd\":\"serve\",\"arch\":\"{arch}\",\"engines\":{n_engines},\
-             \"router\":\"{}\",\"backend\":\"{backend}\",\"samples\":{s},\
+             \"router\":\"{}\",\"backend\":\"{backend}\",\
+             \"kernel\":\"{kernel}\",\"samples\":{s},\
              \"requests\":{n_req},\"served\":{},\"rejected\":{},\
              \"wall_s\":{:.6},\"throughput_rps\":{:.3},\
              \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\

@@ -12,6 +12,7 @@
 //! n_t = tanh( (x*zx_n) Wx_n + r_t * ((h*zh_n) Wh_n) + b_n )
 //! h_t = (1 - z_t) * n_t + z_t * h_{t-1}
 
+use crate::kernels::{self, Kernel};
 use crate::tensor::Tensor;
 
 pub const GRU_GATES: usize = 3;
@@ -81,51 +82,60 @@ pub fn forward(
     let mut hn_term = vec![0f32; t * n * hdim];
     let mut hs = vec![0f32; t * n * hdim];
     let mut h_prev = vec![0f32; n * hdim];
-    let mut pre = vec![0f32; GRU_GATES * hdim];
+    // Per-timestep scratch, all n rows: x-path pre terms and h-path
+    // terms, `[n][GRU_GATES][hdim]` (no allocation in the loop).
+    let mut pre = vec![0f32; n * GRU_GATES * hdim];
+    let mut hterm = vec![0f32; n * GRU_GATES * hdim];
+    let kernel = kernels::active();
+    let gate_stride = GRU_GATES * hdim;
 
     for ti in 0..t {
+        // pre[g] = (x*zx_g) Wx_g + b_g and separately the h-path terms,
+        // all batch rows per weight-row fetch (blocked kernel, masks
+        // fused via strided lanes — bit-identical to the per-row loop).
+        hterm.fill(0.0);
+        for g in 0..GRU_GATES {
+            let bg = &layer.b.data[g * hdim..(g + 1) * hdim];
+            for ni in 0..n {
+                pre[ni * gate_stride + g * hdim
+                    ..ni * gate_stride + (g + 1) * hdim]
+                    .copy_from_slice(bg);
+            }
+            let wxg = &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
+            kernel.mvm_f32(
+                wxg,
+                idim,
+                hdim,
+                n,
+                &xs[ti * idim..],
+                t * idim,
+                Some((&zx.data[g * idim..], GRU_GATES * idim)),
+                &mut pre[g * hdim..],
+                gate_stride,
+            );
+            let whg = &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
+            kernel.mvm_f32(
+                whg,
+                hdim,
+                hdim,
+                n,
+                &h_prev,
+                hdim,
+                Some((&zh.data[g * hdim..], GRU_GATES * hdim)),
+                &mut hterm[g * hdim..],
+                gate_stride,
+            );
+        }
         for ni in 0..n {
-            let x_t = &xs[(ni * t + ti) * idim..(ni * t + ti + 1) * idim];
             let hp = &h_prev[ni * hdim..(ni + 1) * hdim];
-            // pre[g] = (x*zx_g) Wx_g + b_g  and separately h-path terms.
-            for g in 0..GRU_GATES {
-                let bg = &layer.b.data[g * hdim..(g + 1) * hdim];
-                let out = &mut pre[g * hdim..(g + 1) * hdim];
-                out.copy_from_slice(bg);
-                let zx_row = zx.slice3(ni, g);
-                let wxg =
-                    &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
-                for i in 0..idim {
-                    let xv = x_t[i] * zx_row[i];
-                    if xv != 0.0 {
-                        for k in 0..hdim {
-                            out[k] += xv * wxg[i * hdim + k];
-                        }
-                    }
-                }
-            }
-            // h-path: r and z add directly; n's h-term is kept separate.
-            let mut hterm = vec![0f32; GRU_GATES * hdim];
-            for g in 0..GRU_GATES {
-                let zh_row = zh.slice3(ni, g);
-                let whg =
-                    &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
-                let out = &mut hterm[g * hdim..(g + 1) * hdim];
-                for j in 0..hdim {
-                    let hv = hp[j] * zh_row[j];
-                    if hv != 0.0 {
-                        for k in 0..hdim {
-                            out[k] += hv * whg[j * hdim + k];
-                        }
-                    }
-                }
-            }
+            let pr = &pre[ni * gate_stride..(ni + 1) * gate_stride];
+            let ht = &hterm[ni * gate_stride..(ni + 1) * gate_stride];
             let gb = ((ti * n) + ni) * GRU_GATES * hdim;
             for k in 0..hdim {
-                let r = sigmoid(pre[k] + hterm[k]);
-                let z = sigmoid(pre[hdim + k] + hterm[hdim + k]);
-                let hn = hterm[2 * hdim + k];
-                let nv = (pre[2 * hdim + k] + r * hn).tanh();
+                let r = sigmoid(pr[k] + ht[k]);
+                let z = sigmoid(pr[hdim + k] + ht[hdim + k]);
+                let hn = ht[2 * hdim + k];
+                let nv = (pr[2 * hdim + k] + r * hn).tanh();
                 gates[gb + k] = r;
                 gates[gb + hdim + k] = z;
                 gates[gb + 2 * hdim + k] = nv;

@@ -4,6 +4,7 @@
 //! mask (sampled once per sequence), gate order (i, f, g, o).
 
 use crate::config::GATES;
+use crate::kernels::{self, Kernel};
 use crate::tensor::Tensor;
 
 #[inline]
@@ -99,53 +100,59 @@ pub fn forward(
     let mut hs = vec![0f32; t * n * hdim];
     let mut h_prev = vec![0f32; n * hdim];
     let mut c_prev = vec![0f32; n * hdim];
-    // Scratch: masked x and masked h for one (row, gate).
-    let mut xm = vec![0f32; idim];
-    let mut hm = vec![0f32; hdim];
+    let kernel = kernels::active();
 
     for ti in 0..t {
-        for ni in 0..n {
-            let x_t = &xs[(ni * t + ti) * idim..(ni * t + ti + 1) * idim];
-            let hp = &h_prev[ni * hdim..(ni + 1) * hdim];
-            let cp = &c_prev[ni * hdim..(ni + 1) * hdim];
-            let gate_base = ((ti * n) + ni) * GATES * hdim;
-            for g in 0..GATES {
-                // DX masking of the decoupled copies.
-                let zx_row = zx.slice3(ni, g);
-                let zh_row = zh.slice3(ni, g);
-                for i in 0..idim {
-                    xm[i] = x_t[i] * zx_row[i];
-                }
-                for k in 0..hdim {
-                    hm[k] = hp[k] * zh_row[k];
-                }
-                // pre = xm @ wx[g] + hm @ wh[g] + b[g]
-                let wxg = &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
-                let whg = &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
-                let bg = &layer.b.data[g * hdim..(g + 1) * hdim];
-                let out = &mut gates[gate_base + g * hdim..gate_base + (g + 1) * hdim];
-                out.copy_from_slice(bg);
-                for i in 0..idim {
-                    let xv = xm[i];
-                    if xv != 0.0 {
-                        let wrow = &wxg[i * hdim..(i + 1) * hdim];
-                        for k in 0..hdim {
-                            out[k] += xv * wrow[k];
-                        }
-                    }
-                }
-                for j in 0..hdim {
-                    let hv = hm[j];
-                    if hv != 0.0 {
-                        let wrow = &whg[j * hdim..(j + 1) * hdim];
-                        for k in 0..hdim {
-                            out[k] += hv * wrow[k];
-                        }
-                    }
-                }
+        // Gate pre-activations for all n rows through the blocked
+        // kernel: each weight row is fetched once per gate and MAC'd
+        // into every batch row. The DX masks (x*zx, h*zh) are fused in
+        // via the kernel's strided mask lanes; per-element term order
+        // (bias, x-path rows ascending, h-path rows ascending) is the
+        // one the original per-row loop used, so outputs are
+        // bit-identical.
+        for g in 0..GATES {
+            let wxg =
+                &layer.wx.data[g * idim * hdim..(g + 1) * idim * hdim];
+            let whg =
+                &layer.wh.data[g * hdim * hdim..(g + 1) * hdim * hdim];
+            let bg = &layer.b.data[g * hdim..(g + 1) * hdim];
+            let gate_stride = GATES * hdim;
+            let base = ti * n * GATES * hdim + g * hdim;
+            for ni in 0..n {
+                gates[base + ni * gate_stride..base + ni * gate_stride + hdim]
+                    .copy_from_slice(bg);
             }
-            // Activations + tail.
-            let gb = gate_base;
+            let out = &mut gates[base..];
+            // pre = (x*zx_g) @ wx[g] + b[g]: batch row ni reads the
+            // frame at xs[(ni*t + ti)*idim], i.e. stride t*idim.
+            kernel.mvm_f32(
+                wxg,
+                idim,
+                hdim,
+                n,
+                &xs[ti * idim..],
+                t * idim,
+                Some((&zx.data[g * idim..], GATES * idim)),
+                out,
+                gate_stride,
+            );
+            // += (h*zh_g) @ wh[g]
+            kernel.mvm_f32(
+                whg,
+                hdim,
+                hdim,
+                n,
+                &h_prev,
+                hdim,
+                Some((&zh.data[g * hdim..], GATES * hdim)),
+                out,
+                gate_stride,
+            );
+        }
+        // Activations + tail.
+        for ni in 0..n {
+            let cp = &c_prev[ni * hdim..(ni + 1) * hdim];
+            let gb = ((ti * n) + ni) * GATES * hdim;
             for k in 0..hdim {
                 let i_g = sigmoid(gates[gb + k]);
                 let f_g = sigmoid(gates[gb + hdim + k]);

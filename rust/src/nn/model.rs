@@ -7,6 +7,7 @@ use super::adam::{AdamHp, AdamState};
 use super::lstm::{self, LstmCache, LstmLayer};
 use super::Params;
 use crate::config::{ArchConfig, Task, GATES};
+use crate::kernels::{self, Kernel};
 use crate::lfsr::BernoulliSampler;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -158,22 +159,19 @@ impl Model {
                     cur = cache.hs_ntk();
                     caches.push(cache);
                 }
-                // Temporal dense: every timestep through the same weights.
+                // Temporal dense: every timestep through the same
+                // weights — one blocked kernel call over all n*t rows
+                // (each weight row fetched once for the whole batch).
                 let (w, bd) = self.params.dense();
                 let (f, o) = cfg.dense_dims();
                 let rows = n * t;
                 let mut out = vec![0f32; rows * o];
                 for r in 0..rows {
-                    let xrow = &cur[r * f..(r + 1) * f];
-                    let orow = &mut out[r * o..(r + 1) * o];
-                    orow.copy_from_slice(&bd.data);
-                    for i in 0..f {
-                        let xv = xrow[i];
-                        for k in 0..o {
-                            orow[k] += xv * w.data[i * o + k];
-                        }
-                    }
+                    out[r * o..(r + 1) * o].copy_from_slice(&bd.data);
                 }
+                kernels::active().mvm_f32(
+                    &w.data, f, o, rows, &cur, f, None, &mut out, o,
+                );
                 ForwardCache { lstm_caches: caches, dense_in: cur, output: out, n }
             }
             Task::Classify => {
@@ -182,16 +180,11 @@ impl Model {
                 let (f, k) = cfg.dense_dims();
                 let mut logits = vec![0f32; n * k];
                 for ni in 0..n {
-                    let xrow = &h_t[ni * f..(ni + 1) * f];
-                    let orow = &mut logits[ni * k..(ni + 1) * k];
-                    orow.copy_from_slice(&bd.data);
-                    for i in 0..f {
-                        let xv = xrow[i];
-                        for j in 0..k {
-                            orow[j] += xv * w.data[i * k + j];
-                        }
-                    }
+                    logits[ni * k..(ni + 1) * k].copy_from_slice(&bd.data);
                 }
+                kernels::active().mvm_f32(
+                    &w.data, f, k, n, &h_t, f, None, &mut logits, k,
+                );
                 // Softmax rows.
                 let mut probs = logits.clone();
                 for ni in 0..n {
