@@ -40,8 +40,8 @@ fn main() {
     for mode in Optimizer::modes_for(task) {
         if let Some(c) = opt.optimize(task, mode) {
             println!(
-                "  {:<14} -> {{{},{},{}}} R={{{},{},{}}} S={} \
-                 ({:.2} ms, objective {:.3})",
+                "  {:<14} -> {{{},{},{}}} R={{{},{},{}}} Q={} S={} \
+                 ({:.2} ms, {:.0} DSPs, objective {:.3})",
                 c.mode,
                 c.arch.hidden,
                 c.arch.nl,
@@ -49,8 +49,10 @@ fn main() {
                 c.reuse.rx,
                 c.reuse.rh,
                 c.reuse.rd,
+                c.precision.name(),
                 c.s,
                 c.fpga_latency_ms,
+                c.resources.dsps,
                 c.objective
             );
         }

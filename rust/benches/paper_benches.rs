@@ -17,6 +17,11 @@
 //!   kernels   blocked vs scalar kernel layer: raw MVM MMAC/s and
 //!             accelerator beats/s at S in {10, 30, 100}, one-line JSON
 //!             to bench_results/kernel_microbench.json (docs/kernels.md)
+//!   precision quantisation axis (docs/quantization.md): accuracy +
+//!             simulated beats/s + modelled latency/DSPs at q8/q12/q16,
+//!             one-line JSON to bench_results/precision.json; any
+//!             checksum drift of the parametric Q6.10 path vs the
+//!             legacy constructor / scalar loop hard-fails (exit 1)
 //!
 //! Filter by passing section names: `cargo bench -- table4 ablation`.
 //! Paper reference values are printed alongside for eyeball comparison;
@@ -106,6 +111,9 @@ fn main() {
     if want("kernels") {
         kernels_bench();
     }
+    if want("precision") {
+        precision_bench();
+    }
     println!("\n[bench] total wall time {:.1}s", t0.elapsed().as_secs_f64());
 }
 
@@ -113,6 +121,10 @@ fn banner(s: &str) {
     println!("\n================================================================");
     println!("{s}");
     println!("================================================================");
+}
+
+fn env_usize(key: &str, default: usize) -> usize {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
 
 // ---------------------------------------------------------------------------
@@ -974,6 +986,143 @@ fn kernels_bench() {
         speedup_s100
     );
     let path = dir.join("kernel_microbench.json");
+    std::fs::write(&path, format!("{line}\n")).expect("write summary");
+    println!("  -> {}", path.display());
+}
+
+/// Precision-axis scenario (ISSUE 4 satellite): quality and speed vs
+/// bitwidth. Trains one Bayesian classifier, then for each format in
+/// the DSE's precision space measures (a) fixed-point accuracy/AP on a
+/// held-out window, (b) simulated-engine throughput in beats/s at
+/// S = 20, and (c) the modelled deployment latency + DSP footprint at
+/// that format's constraint-solved reuse. Before any of that it
+/// re-checks the Q6.10 contract: the parametric q16 path must be
+/// bit-identical (checksum-exact) to the legacy constructor AND the
+/// legacy per-sample scalar loop — any drift exits non-zero.
+fn precision_bench() {
+    use bayes_rnn_fpga::dse::{precision_space, reuse_search_q};
+    use bayes_rnn_fpga::fixedpoint::Precision;
+
+    banner(
+        "Precision — quantisation as a co-design axis (q8/q12/q16)\n\
+         quality vs DSP/latency, Q6.10 checksum drift hard-fails",
+    );
+    // A DSP-constrained net (II > 1 at q16): the packed formats' freed
+    // budget buys lower reuse, so the latency column actually moves.
+    // Scale knobs (CI smoke uses small values, like serve_fleet's
+    // REPRO_BENCH_* convention): full run by default.
+    let epochs = env_usize("REPRO_BENCH_PRECISION_EPOCHS", 10);
+    let eval_beats = env_usize("REPRO_BENCH_PRECISION_BEATS", 96);
+    let s = env_usize("REPRO_BENCH_PRECISION_SAMPLES", 16).max(2);
+    let cfg = ArchConfig::new(Task::Classify, 32, 2, "YY");
+    let (train, test) = data::splits(0);
+    let mut tr = NativeTrainer::new(
+        cfg.clone(),
+        TrainOpts { epochs, batch: 64, lr: 5e-3, seed: 0 },
+    );
+    tr.fit(&train.subset(&(0..256).collect::<Vec<_>>()));
+    let te = test.subset(&(0..eval_beats.clamp(8, test.n)).collect::<Vec<_>>());
+    let noise = data::gaussian_noise(16, 0);
+    let beat: Vec<f32> =
+        (0..cfg.seq_len).map(|i| (i as f32 * 0.23).sin()).collect();
+
+    // --- Q6.10 drift gate -------------------------------------------
+    let reuse16 = reuse_search(&cfg, &ZC706).expect("fits at q16");
+    let checksum = |samples: &[f32]| -> f64 {
+        samples.iter().map(|&v| v as f64).sum()
+    };
+    let mut legacy = Accelerator::new(&cfg, &tr.model.params, reuse16, 9);
+    let want = legacy.predict_seeded(&beat, 3, 0, s);
+    let mut parametric = Accelerator::with_precision(
+        &cfg,
+        &tr.model.params,
+        reuse16,
+        9,
+        Precision::q16(),
+    );
+    let got = parametric.predict_seeded(&beat, 3, 0, s);
+    let mut scalar = Accelerator::new(&cfg, &tr.model.params, reuse16, 9);
+    scalar.scalar_reference = true;
+    let scal = scalar.predict_seeded(&beat, 3, 0, s);
+    if got.samples != want.samples || scal.samples != want.samples {
+        eprintln!(
+            "FATAL: Q6.10 checksum drift — parametric {:.9} / legacy \
+             {:.9} / scalar {:.9}",
+            checksum(&got.samples),
+            checksum(&want.samples),
+            checksum(&scal.samples)
+        );
+        std::process::exit(1);
+    }
+    println!(
+        "Q6.10 bit-exactness: parametric == legacy == scalar \
+         (checksum {:.6}) PASS",
+        checksum(&want.samples)
+    );
+
+    // --- per-format quality + speed ---------------------------------
+    println!(
+        "\n{:>5} {:>12} {:>7} {:>8} {:>8} {:>10} {:>12}",
+        "Q", "R:{x,h,d}", "DSP", "ACC", "AP", "beats/s", "model [ms]"
+    );
+    let mut points = Vec::new();
+    for prec in precision_space() {
+        let reuse = reuse_search_q(&cfg, &ZC706, &prec).expect("fits");
+        let mut acc = Accelerator::with_precision(
+            &cfg,
+            &tr.model.params,
+            reuse,
+            9,
+            prec.clone(),
+        );
+        let rep = eval_classify(&mut acc, &te, &noise, s);
+        // Simulated-engine throughput: blocked predict_seeded beats/s.
+        let bench_beats = 8;
+        let t0 = Instant::now();
+        for r in 0..bench_beats {
+            let _ = acc.predict_seeded(&beat, r as u64, 0, s);
+        }
+        let beats_per_s = bench_beats as f64 / t0.elapsed().as_secs_f64();
+        // Modelled deployment latency + footprint at this format (the
+        // format enters through its constraint-solved reuse).
+        let est = ResourceModel::estimate_q(&cfg, &reuse, &prec);
+        let model_ms = LatencyModel::batch_ms(&cfg, &reuse, 50, s, ZC706.clock_hz);
+        println!(
+            "{:>5} {:>12} {:>7.0} {:>8.3} {:>8.3} {:>10.1} {:>12.2}",
+            prec.name(),
+            format!("{{{},{},{}}}", reuse.rx, reuse.rh, reuse.rd),
+            est.dsps,
+            rep.accuracy,
+            rep.ap,
+            beats_per_s,
+            model_ms
+        );
+        points.push(format!(
+            "{{\"precision\":\"{}\",\"reuse\":[{},{},{}],\
+             \"dsps\":{:.1},\"accuracy\":{:.4},\"ap\":{:.4},\
+             \"beats_per_s\":{:.3},\"model_ms\":{:.4}}}",
+            prec.name(),
+            reuse.rx,
+            reuse.rh,
+            reuse.rd,
+            est.dsps,
+            rep.accuracy,
+            rep.ap,
+            beats_per_s,
+            model_ms
+        ));
+    }
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir).expect("create bench_results/");
+    let line = format!(
+        "{{\"scenario\":\"precision\",\"arch\":\"{}\",\"samples\":{s},\
+         \"q16_checksum\":{:.6},\"q16_bits_ok\":true,\"points\":[{}]}}",
+        cfg.name(),
+        checksum(&want.samples),
+        points.join(",")
+    );
+    let path = dir.join("precision.json");
     std::fs::write(&path, format!("{line}\n")).expect("write summary");
     println!("  -> {}", path.display());
 }

@@ -13,7 +13,12 @@
 //!   mc_shard        1/2/4 engines, MC-shard sample parallelism
 //!   adaptive_mc     1 engine rr + 4 engines mc-shard with the adaptive
 //!                   early-exit controller, vs. the fixed-S baseline
-//!                   (mean samples used, samples-saved %, tier counts)
+//!                   (mean samples used, samples-saved %, mean rounds,
+//!                   tier counts). Continuation rounds are dispatched by
+//!                   the fleet's adaptive coordinator thread, so e2e
+//!                   latencies are completion-timed — submit-all-then-
+//!                   wait no longer serialises multi-round requests
+//!                   head-of-line (ROADMAP PR 3 finding a)
 //!   mc_batch        blocked MC-sample batching (--kernel blocked, the
 //!                   default) vs. the legacy per-sample scalar path
 //!                   (--kernel scalar) at S in {10, 30, 100}: beats/s
@@ -72,6 +77,8 @@ fn env_usize(key: &str, default: usize) -> usize {
 struct AdaptiveStats {
     mean_samples: f64,
     samples_saved_pct: f64,
+    /// Mean sequential sampling rounds per request (coordinator-driven).
+    mean_rounds: f64,
     converged: usize,
     accept: usize,
     defer: usize,
@@ -161,6 +168,11 @@ fn serve(
         AdaptiveStats {
             mean_samples: g("mean_samples"),
             samples_saved_pct: g("samples_saved_pct"),
+            // Optional for replay of pre-rounds-tracking JSON.
+            mean_rounds: a
+                .get("mean_rounds")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
             converged: g("converged") as usize,
             accept: t("accept"),
             defer: t("defer"),
@@ -298,15 +310,18 @@ fn main() {
                 .adaptive
                 .as_ref()
                 .expect("--adaptive-mc run must report adaptive stats");
-            // Accounting invariants: every served request is tiered and
-            // the sample budget respects the envelope.
+            // Accounting invariants: every served request is tiered,
+            // the sample budget respects the envelope, and the
+            // coordinator reported at least one round per request.
             adaptive_ok &= a.accept + a.defer + a.abstain == r.served;
             adaptive_ok &= a.mean_samples >= s_min as f64 - 1e-9
                 && a.mean_samples <= samples as f64 + 1e-9;
+            adaptive_ok &= a.mean_rounds >= 1.0 - 1e-9;
             format!(
                 "{{\"engines\":{},\"router\":\"{}\",\"served\":{},\
                  \"mean_samples\":{:.3},\"samples_saved_pct\":{:.2},\
-                 \"converged\":{},\"tiers\":{{\"accept\":{},\
+                 \"mean_rounds\":{:.3},\"converged\":{},\
+                 \"tiers\":{{\"accept\":{},\
                  \"defer\":{},\"abstain\":{}}},\
                  \"throughput_rps\":{:.3},\"e2e_p99_ms\":{:.4}}}",
                 r.engines,
@@ -314,6 +329,7 @@ fn main() {
                 r.served,
                 a.mean_samples,
                 a.samples_saved_pct,
+                a.mean_rounds,
                 a.converged,
                 a.accept,
                 a.defer,
@@ -448,12 +464,14 @@ fn main() {
         let a = r.adaptive.as_ref().expect("adaptive stats");
         println!(
             "adaptive-mc [{} engines, {}]: mean samples {:.2}/{} \
-             ({:.1}% saved)  tiers accept {} / defer {} / abstain {}",
+             ({:.1}% saved, {:.2} rounds)  tiers accept {} / defer {} / \
+             abstain {}",
             r.engines,
             r.router,
             a.mean_samples,
             samples,
             a.samples_saved_pct,
+            a.mean_rounds,
             a.accept,
             a.defer,
             a.abstain
@@ -461,7 +479,7 @@ fn main() {
     }
     println!(
         "adaptive-mc accounting (tiers cover requests, samples within \
-         [{s_min}, {samples}]): {}",
+         [{s_min}, {samples}], rounds >= 1, e2e completion-timed): {}",
         if adaptive_ok { "PASS" } else { "FAIL" }
     );
     println!(

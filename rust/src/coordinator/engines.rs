@@ -8,6 +8,7 @@ use anyhow::Result;
 use std::time::Instant;
 
 use crate::config::{ArchConfig, Task};
+use crate::fixedpoint::Precision;
 use crate::fpga::accel::{Accelerator, McOutput};
 use crate::fpga::pipeline::PipelineSim;
 use crate::hwmodel::resource::ReuseFactors;
@@ -119,7 +120,30 @@ impl Engine {
         s: usize,
         seed: u64,
     ) -> Self {
-        let accel = Accelerator::new(cfg, &model.params, reuse, seed);
+        Self::fpga_q(cfg, model, reuse, s, seed, &Precision::q16())
+    }
+
+    /// FPGA-sim engine at an explicit precision: the functional
+    /// simulator quantises at the given formats; `reuse` should come
+    /// from `reuse_search_q` at the same precision, which is how narrow
+    /// formats reach the cycle model (`docs/quantization.md`). A fleet
+    /// must run all engines at ONE precision — mc-shard merges shard
+    /// numerics across engines.
+    pub fn fpga_q(
+        cfg: &ArchConfig,
+        model: &Model,
+        reuse: ReuseFactors,
+        s: usize,
+        seed: u64,
+        precision: &Precision,
+    ) -> Self {
+        let accel = Accelerator::with_precision(
+            cfg,
+            &model.params,
+            reuse,
+            seed,
+            precision.clone(),
+        );
         let sim = PipelineSim::new(cfg, reuse);
         Self { kind: EngineKind::FpgaSim { accel, sim }, s }
     }

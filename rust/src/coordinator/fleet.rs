@@ -21,7 +21,19 @@
 //! Threading mirrors `server.rs`: std::thread + mpsc, engines built
 //! inside their worker threads from `Send` factories (PJRT handles are
 //! not `Send`). Usage: `submit` all → `wait` each ticket → `join`.
+//!
+//! Adaptive requests are driven by a dedicated **adaptive coordinator
+//! thread**: workers stream raw sample blocks to it, it runs each
+//! request's stopping-rule controller and dispatches follow-up sampling
+//! rounds the moment a round completes. `wait_adaptive` only collects
+//! the finished response — so multi-round requests make progress
+//! concurrently, whatever order the caller waits in (previously rounds
+//! were driven from the waiter thread, serialising them head-of-line in
+//! submit-all-then-wait loops and inflating later requests' e2e;
+//! ROADMAP PR 3 review finding a). Request e2e is stamped by the
+//! coordinator at completion time, not at `wait` time.
 
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
@@ -70,13 +82,14 @@ impl Default for FleetConfig {
     }
 }
 
-/// What a worker sends back for one shard: pre-reduced moment sums on
-/// the fixed-S path, raw samples on the adaptive path (the coordinator
-/// needs individual samples for order-stable reduction and the
-/// epistemic decomposition).
-enum ShardReply {
-    Moments(PartialPrediction),
-    Samples(SampleBlock),
+/// Where a worker sends one shard's outcome: the fixed path pre-reduces
+/// the shard to moment sums and replies on the request's own channel;
+/// the adaptive path forwards the raw sample block to the fleet's
+/// adaptive coordinator thread (which needs individual samples for
+/// order-stable reduction and the epistemic decomposition).
+enum ReplySink {
+    Fixed(mpsc::Sender<Result<PartialPrediction, String>>),
+    Adaptive(mpsc::Sender<AdaptiveEvent>, u64),
 }
 
 /// One unit of engine work: a whole request (`start = 0, count = S`) or
@@ -86,12 +99,10 @@ struct WorkItem {
     req_seed: u64,
     start: usize,
     count: usize,
-    /// `true` requests raw samples ([`ShardReply::Samples`]).
-    raw: bool,
     enqueued: Instant,
-    /// Shard outcome, or the engine error (stringified so the worker
-    /// keeps running and the waiter can surface it).
-    reply: mpsc::Sender<Result<ShardReply, String>>,
+    /// Shard outcome destination (errors are stringified so the worker
+    /// keeps running and the waiter can surface them).
+    sink: ReplySink,
 }
 
 /// Handle for one in-flight request: hold it, then pass it back to
@@ -101,22 +112,48 @@ pub struct Ticket {
     enqueued: Instant,
     expected: usize,
     total_s: usize,
-    rx: mpsc::Receiver<Result<ShardReply, String>>,
+    rx: mpsc::Receiver<Result<PartialPrediction, String>>,
 }
 
 /// Handle for one in-flight *adaptive* request
-/// ([`Fleet::submit_adaptive`]): carries the sampling envelope and the
-/// beat so [`Fleet::wait_adaptive`] can dispatch follow-up rounds.
+/// ([`Fleet::submit_adaptive`]): the coordinator thread drives the
+/// sampling rounds; the ticket only receives the finished response.
 pub struct AdaptiveTicket {
     pub id: u64,
-    req_seed: u64,
-    beat: Arc<Vec<f32>>,
-    mc: AdaptiveMcConfig,
-    enqueued: Instant,
-    /// Shards outstanding from the first round.
-    outstanding: usize,
-    rx: mpsc::Receiver<Result<ShardReply, String>>,
-    reply_tx: mpsc::Sender<Result<ShardReply, String>>,
+    /// Wait bound scaled by the envelope's worst-case round count, so a
+    /// long-but-healthy multi-round request is at least as patient as
+    /// the old per-shard-per-round timeout was.
+    timeout: Duration,
+    rx: mpsc::Receiver<Result<AdaptiveResponse, String>>,
+}
+
+/// Events feeding the adaptive coordinator thread. `Submit` always
+/// precedes any of its request's `Shard`s (sent before the first round
+/// is dispatched); `Started` / `Cancelled` resolve the first round's
+/// shard count after dispatch (admission control may shed mid-round,
+/// leaving `stray` already-enqueued shards to swallow).
+enum AdaptiveEvent {
+    Submit {
+        id: u64,
+        beat: Arc<Vec<f32>>,
+        req_seed: u64,
+        mc: AdaptiveMcConfig,
+        enqueued: Instant,
+        done: mpsc::Sender<Result<AdaptiveResponse, String>>,
+    },
+    Started {
+        id: u64,
+        outstanding: usize,
+    },
+    Cancelled {
+        id: u64,
+        stray: usize,
+    },
+    Shard {
+        id: u64,
+        block: Result<SampleBlock, String>,
+    },
+    Shutdown,
 }
 
 /// A completed adaptive request.
@@ -194,6 +231,8 @@ pub struct Fleet {
     txs: Vec<mpsc::SyncSender<WorkItem>>,
     loads: Vec<Arc<AtomicUsize>>,
     workers: Vec<thread::JoinHandle<ServeSummary>>,
+    adaptive_tx: mpsc::Sender<AdaptiveEvent>,
+    adaptive_coord: Option<thread::JoinHandle<()>>,
     router: Router,
     samples: usize,
     shed: bool,
@@ -232,10 +271,29 @@ impl Fleet {
             txs.push(tx);
             loads.push(load);
         }
+        // The adaptive coordinator: owns its own router cursor and
+        // worker-queue senders so it can place continuation rounds
+        // without the submitting thread.
+        let (adaptive_tx, adaptive_rx) = mpsc::channel::<AdaptiveEvent>();
+        let coord_txs = txs.clone();
+        let coord_loads = loads.clone();
+        let coord_self_tx = adaptive_tx.clone();
+        let coord_router = Router::new(cfg.router);
+        let adaptive_coord = thread::spawn(move || {
+            adaptive_coordinator(
+                adaptive_rx,
+                coord_self_tx,
+                coord_txs,
+                coord_loads,
+                coord_router,
+            )
+        });
         Self {
             txs,
             loads,
             workers,
+            adaptive_tx,
+            adaptive_coord: Some(adaptive_coord),
             router: Router::new(cfg.router),
             samples: cfg.samples,
             shed: cfg.shed,
@@ -278,11 +336,20 @@ impl Fleet {
         let enqueued = Instant::now();
         let beat = Arc::new(beat);
         let (reply_tx, reply_rx) = mpsc::channel();
-        let expected = match self.dispatch_round(
-            &beat, req_seed, 0, s, false, enqueued, &reply_tx, self.shed,
+        let expected = match place_round(
+            &mut self.router,
+            &self.txs,
+            &self.loads,
+            &beat,
+            req_seed,
+            0,
+            s,
+            enqueued,
+            &mut || ReplySink::Fixed(reply_tx.clone()),
+            self.shed,
         ) {
-            Some(n) => n,
-            None => {
+            Ok(n) => n,
+            Err(_stray) => {
                 // Reject the whole request; dropping `reply_rx` voids
                 // any shards already enqueued.
                 self.rejected += 1;
@@ -293,11 +360,12 @@ impl Fleet {
     }
 
     /// Submit a beat under an adaptive sampling envelope: the first
-    /// round draws `mc.s_min` samples; [`Fleet::wait_adaptive`]
-    /// dispatches follow-up rounds until the CI stopping rule fires or
-    /// `mc.s_max` is exhausted. Admission control (shedding) applies to
-    /// the first round only — a request the fleet has started sampling
-    /// is never dropped half-served.
+    /// round draws `mc.s_min` samples; the fleet's adaptive coordinator
+    /// thread dispatches follow-up rounds until the CI stopping rule
+    /// fires or `mc.s_max` is exhausted — requests progress without
+    /// anyone calling [`Fleet::wait_adaptive`]. Admission control
+    /// (shedding) applies to the first round only — a request the fleet
+    /// has started sampling is never dropped half-served.
     pub fn submit_adaptive(
         &mut self,
         beat: Vec<f32>,
@@ -309,88 +377,60 @@ impl Fleet {
         let req_seed = id;
         let enqueued = Instant::now();
         let beat = Arc::new(beat);
-        let (reply_tx, reply_rx) = mpsc::channel();
-        let outstanding = match self.dispatch_round(
-            &beat, req_seed, 0, mc.s_min, true, enqueued, &reply_tx,
+        let (done_tx, done_rx) = mpsc::channel();
+        // Register with the coordinator BEFORE dispatching, so the
+        // Submit event orders ahead of any worker's Shard event in the
+        // coordinator's queue.
+        self.adaptive_tx
+            .send(AdaptiveEvent::Submit {
+                id,
+                beat: Arc::clone(&beat),
+                req_seed,
+                mc: *mc,
+                enqueued,
+                done: done_tx,
+            })
+            .expect("adaptive coordinator alive");
+        let sink_tx = self.adaptive_tx.clone();
+        match place_round(
+            &mut self.router,
+            &self.txs,
+            &self.loads,
+            &beat,
+            req_seed,
+            0,
+            mc.s_min,
+            enqueued,
+            &mut || ReplySink::Adaptive(sink_tx.clone(), id),
             self.shed,
         ) {
-            Some(n) => n,
-            None => {
-                self.rejected += 1;
-                return None;
+            Ok(n) => {
+                self.adaptive_tx
+                    .send(AdaptiveEvent::Started { id, outstanding: n })
+                    .expect("adaptive coordinator alive");
+                // Worst-case sequential rounds under this envelope:
+                // s_min first, then chunk-sized draws to s_max.
+                let max_rounds = 1 + mc
+                    .s_max
+                    .saturating_sub(mc.s_min)
+                    .div_ceil(mc.chunk.max(1));
+                Some(AdaptiveTicket {
+                    id,
+                    timeout: Duration::from_secs(120)
+                        * max_rounds.min(512) as u32,
+                    rx: done_rx,
+                })
             }
-        };
-        Some(AdaptiveTicket {
-            id,
-            req_seed,
-            beat,
-            mc: *mc,
-            enqueued,
-            outstanding,
-            rx: reply_rx,
-            reply_tx,
-        })
-    }
-
-    /// Place one sampling round `start..start + count` on the fleet
-    /// according to the router policy (MC-shard splits it across all
-    /// engines; rr/least-loaded give the whole round to one engine).
-    /// Returns the number of shards dispatched, or `None` if `shed` and
-    /// a target queue was full.
-    #[allow(clippy::too_many_arguments)]
-    fn dispatch_round(
-        &mut self,
-        beat: &Arc<Vec<f32>>,
-        req_seed: u64,
-        start: usize,
-        count: usize,
-        raw: bool,
-        enqueued: Instant,
-        reply_tx: &mpsc::Sender<Result<ShardReply, String>>,
-        shed: bool,
-    ) -> Option<usize> {
-        // (engine, start, count) assignments.
-        let assignments: Vec<(usize, usize, usize)> =
-            if self.router.policy() == RouterPolicy::McShard {
-                self.router
-                    .shards(count, self.txs.len())
-                    .into_iter()
-                    .enumerate()
-                    .filter(|&(_, (_, c))| c > 0)
-                    .map(|(j, (s0, c))| (j, start + s0, c))
-                    .collect()
-            } else {
-                let loads: Vec<usize> = self
-                    .loads
-                    .iter()
-                    .map(|l| l.load(Ordering::Acquire))
-                    .collect();
-                vec![(self.router.route(&loads), start, count)]
-            };
-
-        for &(j, s0, c) in &assignments {
-            let item = WorkItem {
-                beat: Arc::clone(beat),
-                req_seed,
-                start: s0,
-                count: c,
-                raw,
-                enqueued,
-                reply: reply_tx.clone(),
-            };
-            if shed {
-                match self.txs[j].try_send(item) {
-                    Ok(()) => {
-                        self.loads[j].fetch_add(1, Ordering::AcqRel);
-                    }
-                    Err(_) => return None,
-                }
-            } else {
-                self.loads[j].fetch_add(1, Ordering::AcqRel);
-                self.txs[j].send(item).expect("fleet worker gone");
+            Err(stray) => {
+                // Shed: tell the coordinator how many already-enqueued
+                // shards to swallow, then forget the request.
+                self.adaptive_tx
+                    .send(AdaptiveEvent::Cancelled { id, stray })
+                    .expect("adaptive coordinator alive");
+                self.rejected += 1;
+                None
             }
         }
-        Some(assignments.len())
     }
 
     /// Block until all of a ticket's shards arrive, reduce them, and
@@ -403,7 +443,7 @@ impl Fleet {
         let mut got_s = 0usize;
         let mut latency = 0f64;
         for _ in 0..ticket.expected {
-            let reply = ticket
+            let partial = ticket
                 .rx
                 .recv_timeout(Duration::from_secs(120))
                 .map_err(|e| {
@@ -418,15 +458,6 @@ impl Fleet {
                         ticket.id
                     )
                 })?;
-            let partial = match reply {
-                ShardReply::Moments(p) => p,
-                ShardReply::Samples(_) => {
-                    anyhow::bail!(
-                        "request {}: raw-sample reply on the fixed path",
-                        ticket.id
-                    )
-                }
-            };
             if sum.is_empty() {
                 sum = vec![0.0; partial.sum.len()];
                 sumsq = vec![0.0; partial.sum.len()];
@@ -452,110 +483,329 @@ impl Fleet {
         })
     }
 
-    /// Drive one adaptive request to completion: collect the round in
-    /// flight, consult the controller, dispatch follow-up rounds until
-    /// it stops, then reduce. Sample blocks are merged in ascending
-    /// sample order, so for a fixed seed the result is bit-identical to
-    /// the single-engine eager path — for any engine count, router
-    /// policy or chunking (the determinism invariant; tested below and
-    /// in `fpga::accel`).
+    /// Collect one adaptive request's finished response. The adaptive
+    /// coordinator thread has been driving its rounds since submit;
+    /// sample blocks are merged in ascending sample order, so for a
+    /// fixed seed the result is bit-identical to the single-engine
+    /// eager path — for any engine count, router policy, chunking or
+    /// wait order (the determinism invariant; tested below and in
+    /// `fpga::accel`).
     pub fn wait_adaptive(
         &mut self,
         ticket: AdaptiveTicket,
     ) -> Result<AdaptiveResponse> {
-        let mut ctl: Option<AdaptiveController> = None;
-        let mut outstanding = ticket.outstanding;
-        let mut latency_ms = 0f64;
-        let mut rounds = 0usize;
-        let converged = loop {
-            // Collect the round in flight. Shards run in parallel, so
-            // the round costs its slowest shard; rounds are sequential,
-            // so the request costs the sum over rounds.
-            let mut round_ms = 0f64;
-            for _ in 0..outstanding {
-                let block = ticket
-                    .rx
-                    .recv_timeout(Duration::from_secs(120))
-                    .map_err(|e| {
-                        anyhow::anyhow!(
-                            "request {}: shard reply lost ({e:?})",
-                            ticket.id
-                        )
-                    })?
-                    .map_err(|msg| {
-                        anyhow::anyhow!(
-                            "request {}: engine failed: {msg}",
-                            ticket.id
-                        )
-                    })?;
-                let block = match block {
-                    ShardReply::Samples(b) => b,
-                    ShardReply::Moments(_) => anyhow::bail!(
-                        "request {}: moment reply on the adaptive path",
-                        ticket.id
-                    ),
-                };
-                round_ms = round_ms.max(block.model_latency_ms);
-                ctl.get_or_insert_with(|| {
-                    AdaptiveController::new(ticket.mc, block.out_len)
-                })
-                .push_block(block.start, block.samples);
-            }
-            latency_ms += round_ms;
-            rounds += 1;
-            let ctl_ref =
-                ctl.as_ref().expect("round collected at least one shard");
-            match ctl_ref.decision() {
-                McDecision::Converged => break true,
-                McDecision::Exhausted => break false,
-                McDecision::Draw { start, count } => {
-                    // Later rounds bypass admission control: the fleet
-                    // has already invested in this request.
-                    outstanding = self
-                        .dispatch_round(
-                            &ticket.beat,
-                            ticket.req_seed,
-                            start,
-                            count,
-                            true,
-                            ticket.enqueued,
-                            &ticket.reply_tx,
-                            false,
-                        )
-                        .expect("unshed dispatch cannot fail");
-                }
-            }
-        };
-        let ctl = ctl.expect("at least one round collected");
-        let (mean, std) = ctl.acc.finalize();
-        let e2e_ms = ticket.enqueued.elapsed().as_secs_f64() * 1e3;
-        self.e2e.record_ms(e2e_ms);
+        let resp = ticket
+            .rx
+            .recv_timeout(ticket.timeout)
+            .map_err(|e| {
+                anyhow::anyhow!(
+                    "request {}: adaptive response lost ({e:?})",
+                    ticket.id
+                )
+            })?
+            .map_err(|msg| {
+                anyhow::anyhow!(
+                    "request {}: engine failed: {msg}",
+                    ticket.id
+                )
+            })?;
+        // e2e was stamped by the coordinator at completion time — the
+        // request stopped costing latency when its last round landed,
+        // not when the caller got around to waiting.
+        self.e2e.record_ms(resp.e2e_ms);
         self.served += 1;
-        Ok(AdaptiveResponse {
-            id: ticket.id,
-            prediction: Prediction {
-                mean,
-                std,
-                model_latency_ms: latency_ms,
-            },
-            samples: ctl.acc.samples_ordered(),
-            out_len: ctl.acc.out_len(),
-            s_used: ctl.acc.count(),
-            converged,
-            rounds,
-            e2e_ms,
-        })
+        Ok(resp)
     }
 
     /// Close all queues, wait for the workers, and return fleet stats.
-    pub fn join(self) -> FleetSummary {
-        let Fleet { txs, workers, rejected, served, e2e, t0, .. } = self;
-        drop(txs);
+    pub fn join(mut self) -> FleetSummary {
+        // Shut the adaptive coordinator down first: it drains any
+        // still-in-flight adaptive requests (workers stay alive while
+        // the coordinator holds queue senders), then drops its senders
+        // so the workers can exit.
+        let _ = self.adaptive_tx.send(AdaptiveEvent::Shutdown);
+        if let Some(coord) = self.adaptive_coord.take() {
+            coord.join().expect("adaptive coordinator panicked");
+        }
+        // Dropping the queue senders lets the workers drain and exit.
+        self.txs.clear();
+        let workers = std::mem::take(&mut self.workers);
         let per_engine: Vec<ServeSummary> = workers
             .into_iter()
             .map(|w| w.join().expect("fleet worker panicked"))
             .collect();
-        FleetSummary { served, rejected, wall: t0.elapsed(), e2e, per_engine }
+        FleetSummary {
+            served: self.served,
+            rejected: self.rejected,
+            wall: self.t0.elapsed(),
+            e2e: self.e2e.clone(),
+            per_engine,
+        }
+    }
+}
+
+impl Drop for Fleet {
+    fn drop(&mut self) {
+        // A fleet dropped without `join` must not leak its threads: the
+        // coordinator blocks on its event channel (and holds worker
+        // queue senders), so nudge it to shut down. After it drains and
+        // exits, the workers observe queue disconnection and exit too
+        // (their join handles are detached here). After a normal
+        // `join` the send simply fails and is ignored.
+        let _ = self.adaptive_tx.send(AdaptiveEvent::Shutdown);
+    }
+}
+
+/// Place one sampling round `start..start + count` on the fleet
+/// according to the router policy (MC-shard splits it across all
+/// engines; rr/least-loaded give the whole round to one engine).
+/// Returns `Ok(shards dispatched)`, or — when `shed` and a target queue
+/// was full — `Err(shards already enqueued before the rejection)`.
+#[allow(clippy::too_many_arguments)]
+fn place_round(
+    router: &mut Router,
+    txs: &[mpsc::SyncSender<WorkItem>],
+    loads: &[Arc<AtomicUsize>],
+    beat: &Arc<Vec<f32>>,
+    req_seed: u64,
+    start: usize,
+    count: usize,
+    enqueued: Instant,
+    sink: &mut dyn FnMut() -> ReplySink,
+    shed: bool,
+) -> std::result::Result<usize, usize> {
+    // (engine, start, count) assignments.
+    let assignments: Vec<(usize, usize, usize)> =
+        if router.policy() == RouterPolicy::McShard {
+            router
+                .shards(count, txs.len())
+                .into_iter()
+                .enumerate()
+                .filter(|&(_, (_, c))| c > 0)
+                .map(|(j, (s0, c))| (j, start + s0, c))
+                .collect()
+        } else {
+            let load_snapshot: Vec<usize> =
+                loads.iter().map(|l| l.load(Ordering::Acquire)).collect();
+            vec![(router.route(&load_snapshot), start, count)]
+        };
+
+    for (done, &(j, s0, c)) in assignments.iter().enumerate() {
+        let item = WorkItem {
+            beat: Arc::clone(beat),
+            req_seed,
+            start: s0,
+            count: c,
+            enqueued,
+            sink: sink(),
+        };
+        if shed {
+            match txs[j].try_send(item) {
+                Ok(()) => {
+                    loads[j].fetch_add(1, Ordering::AcqRel);
+                }
+                Err(_) => return Err(done),
+            }
+        } else {
+            loads[j].fetch_add(1, Ordering::AcqRel);
+            txs[j].send(item).expect("fleet worker gone");
+        }
+    }
+    Ok(assignments.len())
+}
+
+/// Per-request state inside the adaptive coordinator.
+struct AdaptiveState {
+    beat: Arc<Vec<f32>>,
+    req_seed: u64,
+    mc: AdaptiveMcConfig,
+    enqueued: Instant,
+    done: mpsc::Sender<Result<AdaptiveResponse, String>>,
+    ctl: Option<AdaptiveController>,
+    /// Shards outstanding this round (`None` until `Started` resolves
+    /// the first round's dispatch count).
+    outstanding: Option<usize>,
+    received: usize,
+    round_ms: f64,
+    latency_ms: f64,
+    rounds: usize,
+    failed: Option<String>,
+    /// Set by `Cancelled`: swallow this many stray shard replies, then
+    /// drop the request without responding.
+    cancelled_stray: Option<usize>,
+}
+
+/// The adaptive coordinator loop: one thread per fleet owning every
+/// in-flight adaptive request's controller. Rounds complete and
+/// follow-up rounds dispatch here — independent of the waiter — which
+/// removes the head-of-line serialisation of multi-round requests in
+/// submit-all-then-wait loops (ROADMAP PR 3 review finding a).
+fn adaptive_coordinator(
+    rx: mpsc::Receiver<AdaptiveEvent>,
+    self_tx: mpsc::Sender<AdaptiveEvent>,
+    txs: Vec<mpsc::SyncSender<WorkItem>>,
+    loads: Vec<Arc<AtomicUsize>>,
+    mut router: Router,
+) {
+    let mut states: HashMap<u64, AdaptiveState> = HashMap::new();
+    let mut shutdown = false;
+    while !(shutdown && states.is_empty()) {
+        let ev = match rx.recv() {
+            Ok(ev) => ev,
+            // All senders gone (fleet dropped mid-flight): nothing more
+            // can arrive — bail out.
+            Err(_) => break,
+        };
+        match ev {
+            AdaptiveEvent::Submit {
+                id,
+                beat,
+                req_seed,
+                mc,
+                enqueued,
+                done,
+            } => {
+                states.insert(
+                    id,
+                    AdaptiveState {
+                        beat,
+                        req_seed,
+                        mc,
+                        enqueued,
+                        done,
+                        ctl: None,
+                        outstanding: None,
+                        received: 0,
+                        round_ms: 0.0,
+                        latency_ms: 0.0,
+                        rounds: 0,
+                        failed: None,
+                        cancelled_stray: None,
+                    },
+                );
+            }
+            AdaptiveEvent::Started { id, outstanding } => {
+                if let Some(st) = states.get_mut(&id) {
+                    st.outstanding = Some(outstanding);
+                }
+                finish_round_if_complete(
+                    id, &mut states, &self_tx, &txs, &loads, &mut router,
+                );
+            }
+            AdaptiveEvent::Cancelled { id, stray } => {
+                if let Some(st) = states.get_mut(&id) {
+                    if st.received >= stray {
+                        states.remove(&id);
+                    } else {
+                        st.cancelled_stray = Some(stray);
+                    }
+                }
+            }
+            AdaptiveEvent::Shard { id, block } => {
+                let Some(st) = states.get_mut(&id) else {
+                    continue; // stray shard of an already-dropped request
+                };
+                st.received += 1;
+                if let Some(stray) = st.cancelled_stray {
+                    if st.received >= stray {
+                        states.remove(&id);
+                    }
+                    continue;
+                }
+                match block {
+                    Ok(b) => {
+                        st.round_ms = st.round_ms.max(b.model_latency_ms);
+                        st.ctl
+                            .get_or_insert_with(|| {
+                                AdaptiveController::new(st.mc, b.out_len)
+                            })
+                            .push_block(b.start, b.samples);
+                    }
+                    Err(msg) => st.failed = Some(msg),
+                }
+                finish_round_if_complete(
+                    id, &mut states, &self_tx, &txs, &loads, &mut router,
+                );
+            }
+            AdaptiveEvent::Shutdown => shutdown = true,
+        }
+    }
+    // Dropping `txs` here releases the coordinator's queue senders so
+    // the workers can observe disconnection and exit.
+}
+
+/// If request `id`'s current round is fully collected, advance it:
+/// record the round, consult the stopping rule, dispatch the next round
+/// or finalise the response.
+fn finish_round_if_complete(
+    id: u64,
+    states: &mut HashMap<u64, AdaptiveState>,
+    self_tx: &mpsc::Sender<AdaptiveEvent>,
+    txs: &[mpsc::SyncSender<WorkItem>],
+    loads: &[Arc<AtomicUsize>],
+    router: &mut Router,
+) {
+    let Some(st) = states.get_mut(&id) else { return };
+    let Some(outstanding) = st.outstanding else { return };
+    if st.received < outstanding {
+        return;
+    }
+    // Round complete. Shards ran in parallel: the round costs its
+    // slowest shard; rounds are sequential: the request sums rounds.
+    st.latency_ms += st.round_ms;
+    st.round_ms = 0.0;
+    st.received = 0;
+    st.rounds += 1;
+    if let Some(msg) = st.failed.take() {
+        let st = states.remove(&id).expect("state present");
+        let _ = st.done.send(Err(msg));
+        return;
+    }
+    let decision = st
+        .ctl
+        .as_ref()
+        .expect("completed round pushed at least one block")
+        .decision();
+    match decision {
+        McDecision::Draw { start, count } => {
+            // Later rounds bypass admission control: the fleet has
+            // already invested in this request.
+            let n = place_round(
+                router,
+                txs,
+                loads,
+                &Arc::clone(&st.beat),
+                st.req_seed,
+                start,
+                count,
+                st.enqueued,
+                &mut || ReplySink::Adaptive(self_tx.clone(), id),
+                false,
+            )
+            .expect("unshed dispatch cannot fail");
+            st.outstanding = Some(n);
+        }
+        McDecision::Converged | McDecision::Exhausted => {
+            let converged = matches!(decision, McDecision::Converged);
+            let st = states.remove(&id).expect("state present");
+            let ctl = st.ctl.expect("at least one round collected");
+            let (mean, std) = ctl.acc.finalize();
+            let e2e_ms = st.enqueued.elapsed().as_secs_f64() * 1e3;
+            let _ = st.done.send(Ok(AdaptiveResponse {
+                id,
+                prediction: Prediction {
+                    mean,
+                    std,
+                    model_latency_ms: st.latency_ms,
+                },
+                samples: ctl.acc.samples_ordered(),
+                out_len: ctl.acc.out_len(),
+                s_used: ctl.acc.count(),
+                converged,
+                rounds: st.rounds,
+                e2e_ms,
+            }));
+        }
     }
 }
 
@@ -628,38 +878,42 @@ fn worker_loop(
                 .collect();
             let results = engine.infer_samples_batch(&reqs, group);
             for (item, result) in batch.items.iter().zip(results) {
-                // Moments-path items reduce the raw shard to moment
-                // sums here; raw-path items forward the samples.
-                let result: Result<ShardReply> = result.map(|block| {
-                    if item.raw {
-                        ShardReply::Samples(block)
-                    } else {
-                        ShardReply::Moments(PartialPrediction::from_samples(
-                            &block.samples,
-                            block.count,
-                            block.out_len,
-                            block.model_latency_ms,
-                        ))
-                    }
-                });
                 load.fetch_sub(1, Ordering::AcqRel);
-                match result {
-                    Ok(reply) => {
-                        let ms = match &reply {
-                            ShardReply::Moments(p) => p.model_latency_ms,
-                            ShardReply::Samples(b) => b.model_latency_ms,
-                        };
-                        e2e.record_ms(
-                            item.enqueued.elapsed().as_secs_f64() * 1e3,
-                        );
-                        eng.record_ms(ms);
-                        served += 1;
-                        // Receiver may be gone (shed request): ignore.
-                        let _ = item.reply.send(Ok(reply));
+                let outcome: std::result::Result<SampleBlock, String> =
+                    match result {
+                        Ok(block) => {
+                            e2e.record_ms(
+                                item.enqueued.elapsed().as_secs_f64() * 1e3,
+                            );
+                            eng.record_ms(block.model_latency_ms);
+                            served += 1;
+                            Ok(block)
+                        }
+                        Err(e) => {
+                            eprintln!("fleet engine error: {e:#}");
+                            Err(format!("{e:#}"))
+                        }
+                    };
+                // Fixed-path sinks get the shard pre-reduced to moment
+                // sums; adaptive sinks get the raw samples forwarded to
+                // the coordinator. Receivers may be gone (shed
+                // request / dropped fleet): ignore send failures.
+                match &item.sink {
+                    ReplySink::Fixed(tx) => {
+                        let _ = tx.send(outcome.map(|b| {
+                            PartialPrediction::from_samples(
+                                &b.samples,
+                                b.count,
+                                b.out_len,
+                                b.model_latency_ms,
+                            )
+                        }));
                     }
-                    Err(e) => {
-                        eprintln!("fleet engine error: {e:#}");
-                        let _ = item.reply.send(Err(format!("{e:#}")));
+                    ReplySink::Adaptive(tx, id) => {
+                        let _ = tx.send(AdaptiveEvent::Shard {
+                            id: *id,
+                            block: outcome,
+                        });
                     }
                 }
             }
@@ -955,6 +1209,102 @@ mod tests {
             2,
             "one 2-sample shard per engine, single round"
         );
+    }
+
+    /// Head-of-line regression (ROADMAP PR 3 finding a): continuation
+    /// rounds are driven by the coordinator thread, so multi-round
+    /// adaptive requests submitted together progress concurrently and
+    /// can be waited in ANY order — here strictly reverse submit order,
+    /// which under waiter-driven rounds would have serialised every
+    /// request behind the last-submitted one. Results must still be
+    /// bit-identical to the eager fixed-S reference per request.
+    #[test]
+    fn adaptive_requests_progress_without_waiters_in_any_order() {
+        use crate::fpga::accel::Accelerator;
+        use crate::uq::McAccumulator;
+        let s_max = 9;
+        let design_seed = 9;
+        let n_req = 6;
+        // target_ci 0 forces ceil((s_max - s_min)/chunk) + 1 = 4 rounds.
+        let mc = AdaptiveMcConfig {
+            s_min: 3,
+            s_max,
+            target_ci: 0.0,
+            z: 1.96,
+            chunk: 2,
+        };
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                router: RouterPolicy::McShard,
+                samples: s_max,
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s_max, design_seed),
+        );
+        let tickets: Vec<AdaptiveTicket> = (0..n_req)
+            .map(|_| fleet.submit_adaptive(beat(), &mc).unwrap())
+            .collect();
+
+        // Eager per-request references on a bare accelerator (request
+        // seed == submit index).
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        let mut accel = Accelerator::new(
+            &cfg,
+            &params,
+            ReuseFactors::new(2, 1, 1),
+            design_seed,
+        );
+        let mut want = Vec::new();
+        for req in 0..n_req as u64 {
+            let whole = accel.predict_seeded(&beat(), req, 0, s_max);
+            let mut acc = McAccumulator::new(whole.out_len);
+            acc.push_block(0, whole.samples);
+            want.push(acc.finalize());
+        }
+
+        // Wait in reverse submit order.
+        for (i, t) in tickets.into_iter().enumerate().rev().collect::<Vec<_>>()
+        {
+            let resp = fleet.wait_adaptive(t).expect("adaptive response");
+            assert_eq!(resp.s_used, s_max);
+            assert_eq!(resp.rounds, 4, "request {i}: forced round count");
+            let (ref m, ref s) = want[i];
+            assert_eq!(&resp.prediction.mean, m, "request {i}: mean");
+            assert_eq!(&resp.prediction.std, s, "request {i}: std");
+        }
+        let summary = fleet.join();
+        assert_eq!(summary.served, n_req);
+    }
+
+    /// Requests complete inside the fleet even if nobody waits before
+    /// join (the coordinator drains in-flight adaptive work).
+    #[test]
+    fn join_drains_unwaited_adaptive_requests() {
+        let s_max = 6;
+        let mc = AdaptiveMcConfig {
+            s_min: 2,
+            s_max,
+            target_ci: 0.0,
+            z: 1.96,
+            chunk: 2,
+        };
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 1,
+                samples: s_max,
+                ..FleetConfig::default()
+            },
+            fpga_factories(1, s_max, 3),
+        );
+        let _unwaited = fleet.submit_adaptive(beat(), &mc).unwrap();
+        // join must not deadlock; the unwaited request is simply not
+        // counted as served.
+        let summary = fleet.join();
+        assert_eq!(summary.served, 0);
+        // Its work items were still executed by the engine.
+        assert!(summary.items() >= 1);
     }
 
     #[test]

@@ -12,6 +12,15 @@ use std::path::Path;
 use crate::config::{ArchConfig, Task};
 use crate::jsonio::{self, Json};
 
+/// Column-name convention for quantised-accuracy entries: the metric
+/// measured by running the simulated fixed-point engine at `precision`
+/// over the eval split is stored as `"{metric}@{precision}"` (e.g.
+/// `accuracy@q8`) alongside the float metrics — the precision axis of
+/// the DSE (`docs/quantization.md`).
+pub fn quant_key(metric: &str, precision: &str) -> String {
+    format!("{metric}@{precision}")
+}
+
 /// One benchmarked architecture point.
 #[derive(Debug, Clone)]
 pub struct AlgoEntry {
@@ -21,7 +30,8 @@ pub struct AlgoEntry {
     pub nl: usize,
     pub bayes: String,
     /// Metric name -> value. Anomaly: accuracy/ap/auc/rmse.
-    /// Classify: accuracy/ap/ar/entropy.
+    /// Classify: accuracy/ap/ar/entropy. Quantised columns use the
+    /// [`quant_key`] convention (`accuracy@q8` ...).
     pub metrics: BTreeMap<String, f64>,
 }
 
@@ -32,6 +42,21 @@ impl AlgoEntry {
 
     pub fn metric(&self, key: &str) -> Option<f64> {
         self.metrics.get(key).copied()
+    }
+
+    /// The metric as measured at `precision`. Tables swept before the
+    /// precision axis existed carry no quantised columns; for those the
+    /// float metric stands in for the 16-bit path (Tables I/II: 16-bit
+    /// quantisation preserves quality), and narrower precisions are
+    /// reported as unmeasured (`None`) so the optimizer cannot pick a
+    /// format nobody benchmarked.
+    pub fn metric_at(&self, metric: &str, precision: &str) -> Option<f64> {
+        self.metrics
+            .get(&quant_key(metric, precision))
+            .copied()
+            .or_else(|| {
+                (precision == "q16").then(|| self.metric(metric)).flatten()
+            })
     }
 }
 
@@ -181,5 +206,23 @@ mod tests {
     fn arch_reconstruction() {
         let e = entry("anomaly_h16_nl2_YNYN", 0.9);
         assert_eq!(e.arch().name(), "anomaly_h16_nl2_YNYN");
+    }
+
+    #[test]
+    fn quant_columns_roundtrip_and_fall_back() {
+        let mut e = entry("a", 0.9);
+        e.metrics.insert("accuracy".into(), 0.95);
+        e.metrics.insert(quant_key("accuracy", "q8"), 0.91);
+        // Measured column wins.
+        assert_eq!(e.metric_at("accuracy", "q8"), Some(0.91));
+        // q16 falls back to the float column when unmeasured.
+        assert_eq!(e.metric_at("accuracy", "q16"), Some(0.95));
+        // Narrow precisions without a measured column are unmeasured.
+        assert_eq!(e.metric_at("accuracy", "q12"), None);
+        // And the @-columns survive the JSON round trip.
+        let mut t = LookupTable::new();
+        t.insert(e);
+        let t2 = LookupTable::from_json(&t.to_json()).unwrap();
+        assert_eq!(t2.get("a").unwrap().metric_at("accuracy", "q8"), Some(0.91));
     }
 }

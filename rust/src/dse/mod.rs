@@ -11,6 +11,8 @@ pub mod lookup;
 pub mod optimizer;
 pub mod space;
 
-pub use lookup::{AlgoEntry, LookupTable};
+pub use lookup::{quant_key, AlgoEntry, LookupTable};
 pub use optimizer::{ChosenConfig, OptMode, Optimizer};
-pub use space::{arch_space, bayes_patterns, reuse_search};
+pub use space::{
+    arch_space, bayes_patterns, precision_space, reuse_search, reuse_search_q,
+};

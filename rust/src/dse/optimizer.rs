@@ -3,13 +3,22 @@
 //! configuration minimising latency under the DSP constraint, estimate
 //! the latency from the model, and filter infeasible points — producing
 //! the rows of Tables V and VI.
+//!
+//! The search space is A x R x Q: every candidate is additionally tried
+//! at each precision in [`Optimizer::precisions`] (default 8/12/16-bit,
+//! `docs/quantization.md`). Metric objectives read the lookup table's
+//! quantised-accuracy columns (`accuracy@q8` ...) so a narrow format
+//! only wins on the quality it actually measured; the chosen config
+//! reports its precision, its resource estimate at that precision, and
+//! the delta against the 16-bit baseline.
 
 use super::lookup::LookupTable;
-use super::space::reuse_search;
+use super::space::{precision_space, reuse_search_q};
 use crate::config::{ArchConfig, Task};
+use crate::fixedpoint::Precision;
 use crate::hwmodel::latency::LatencyModel;
 use crate::hwmodel::power::PowerModel;
-use crate::hwmodel::resource::{ResourceModel, ReuseFactors};
+use crate::hwmodel::resource::{ResourceEstimate, ResourceModel, ReuseFactors};
 use crate::hwmodel::{GpuModel, Platform};
 
 /// User-selected optimisation mode (Sec. V-D).
@@ -45,13 +54,37 @@ pub struct ChosenConfig {
     pub mode: String,
     pub arch: ArchConfig,
     pub reuse: ReuseFactors,
+    /// Chosen quantisation (the Q axis of the search).
+    pub precision: Precision,
     /// MC samples the deployment will run (30 for Bayesian, 1 pointwise).
     pub s: usize,
     pub fpga_latency_ms: f64,
     pub gpu_latency_ms: f64,
     pub fpga_watts: f64,
     pub objective: f64,
+    /// Resource estimate at the chosen precision.
+    pub resources: ResourceEstimate,
+    /// The same architecture's estimate at the 16-bit baseline, when it
+    /// fits there at all — the "resource delta" column of the report.
+    pub resources_q16: Option<ResourceEstimate>,
     pub metrics: std::collections::BTreeMap<String, f64>,
+}
+
+impl ChosenConfig {
+    /// DSP saving vs the 16-bit baseline, in percent (None when the
+    /// architecture does not fit the chip at 16 bit).
+    pub fn dsp_delta_vs_q16_pct(&self) -> Option<f64> {
+        self.resources_q16.map(|q16| {
+            (1.0 - self.resources.dsps / q16.dsps) * 100.0
+        })
+    }
+
+    /// The quantised metric column backing this choice, if measured.
+    pub fn quant_metric(&self, metric: &str) -> Option<f64> {
+        self.metrics
+            .get(&super::lookup::quant_key(metric, &self.precision.name()))
+            .copied()
+    }
 }
 
 pub struct Optimizer<'a> {
@@ -61,19 +94,31 @@ pub struct Optimizer<'a> {
     pub batch: usize,
     /// MC samples for Bayesian deployments (paper: S=30, Fig. 10).
     pub mc_samples: usize,
+    /// Quantisation grid to search (default 8/12/16-bit).
+    pub precisions: Vec<Precision>,
 }
 
 impl<'a> Optimizer<'a> {
     pub fn new(platform: &'a Platform, lookup: &'a LookupTable) -> Self {
-        Self { platform, lookup, batch: 50, mc_samples: 30 }
+        Self {
+            platform,
+            lookup,
+            batch: 50,
+            mc_samples: 30,
+            precisions: precision_space(),
+        }
     }
 
-    /// Latency (ms) of one candidate on the FPGA under its best reuse.
+    /// Latency (ms) of one candidate on the FPGA under its best reuse at
+    /// the given precision (the precision enters through the reuse the
+    /// constraint solver can afford; timing at fixed reuse is
+    /// format-independent).
     fn candidate(
         &self,
         arch: &ArchConfig,
+        precision: &Precision,
     ) -> Option<(ReuseFactors, usize, f64)> {
-        let reuse = reuse_search(arch, self.platform)?;
+        let reuse = reuse_search_q(arch, self.platform, precision)?;
         let s = if arch.is_bayesian() { self.mc_samples } else { 1 };
         let ms = LatencyModel::batch_ms(
             arch,
@@ -85,67 +130,96 @@ impl<'a> Optimizer<'a> {
         Some((reuse, s, ms))
     }
 
-    /// Run one optimisation mode over the lookup table.
+    /// Run one optimisation mode over the lookup table, searching the
+    /// architecture grid at every precision.
     pub fn optimize(&self, task: Task, mode: OptMode) -> Option<ChosenConfig> {
         let mut best: Option<(f64, f64, ChosenConfig)> = None;
-        for entry in self.lookup.for_task(task) {
-            let arch = entry.arch();
-            let Some((reuse, s, fpga_ms)) = self.candidate(&arch) else {
-                continue; // filtered: does not meet the DSP constraint
-            };
-            let objective = match mode {
-                OptMode::Latency => -fpga_ms,
-                OptMode::Metric(m) => match entry.metric(m) {
-                    Some(v) => v,
-                    None => continue,
-                },
-            };
-            // Tie-break on latency (then fewer DSPs implicitly via reuse).
-            let tiebreak = -fpga_ms;
-            let better = match &best {
-                None => true,
-                Some((o, t, _)) => {
-                    objective > *o + 1e-12
-                        || ((objective - *o).abs() <= 1e-12 && tiebreak > *t)
-                }
-            };
-            if better {
-                let res = ResourceModel::estimate(&arch, &reuse);
-                best = Some((
-                    objective,
-                    tiebreak,
-                    ChosenConfig {
-                        mode: mode.name(),
-                        arch: arch.clone(),
-                        reuse,
-                        s,
-                        fpga_latency_ms: fpga_ms,
-                        gpu_latency_ms: GpuModel::latency_ms(
-                            &arch, self.batch, s,
-                        ),
-                        fpga_watts: PowerModel::fpga_watts(&res),
+        for precision in &self.precisions {
+            for entry in self.lookup.for_task(task) {
+                let arch = entry.arch();
+                let Some((reuse, s, fpga_ms)) =
+                    self.candidate(&arch, precision)
+                else {
+                    continue; // filtered: does not meet the DSP constraint
+                };
+                let objective = match mode {
+                    OptMode::Latency => -fpga_ms,
+                    // Quality objectives only credit what was measured at
+                    // this precision (q16 falls back to the float column).
+                    OptMode::Metric(m) => {
+                        match entry.metric_at(m, &precision.name()) {
+                            Some(v) => v,
+                            None => continue,
+                        }
+                    }
+                };
+                // Tie-break on latency (then fewer DSPs implicitly via
+                // reuse/precision).
+                let tiebreak = -fpga_ms;
+                let better = match &best {
+                    None => true,
+                    Some((o, t, _)) => {
+                        objective > *o + 1e-12
+                            || ((objective - *o).abs() <= 1e-12
+                                && tiebreak > *t)
+                    }
+                };
+                if better {
+                    let res =
+                        ResourceModel::estimate_q(&arch, &reuse, precision);
+                    best = Some((
                         objective,
-                        metrics: entry.metrics.clone(),
-                    },
-                ));
+                        tiebreak,
+                        ChosenConfig {
+                            mode: mode.name(),
+                            arch: arch.clone(),
+                            reuse,
+                            precision: precision.clone(),
+                            s,
+                            fpga_latency_ms: fpga_ms,
+                            gpu_latency_ms: GpuModel::latency_ms(
+                                &arch, self.batch, s,
+                            ),
+                            fpga_watts: PowerModel::fpga_watts(&res),
+                            objective,
+                            resources: res,
+                            // Filled in once for the winner below — the
+                            // baseline solve is report-only and need not
+                            // run inside the search loop.
+                            resources_q16: None,
+                            metrics: entry.metrics.clone(),
+                        },
+                    ));
+                }
             }
         }
-        best.map(|(_, _, c)| c)
+        best.map(|(_, _, mut c)| {
+            let q16 = Precision::q16();
+            c.resources_q16 = if c.precision == q16 {
+                Some(c.resources)
+            } else {
+                reuse_search_q(&c.arch, self.platform, &q16).map(|r16| {
+                    ResourceModel::estimate_q(&c.arch, &r16, &q16)
+                })
+            };
+            c
+        })
     }
 
-    /// The latency-vs-metric Pareto front over the lookup table (the
-    /// paper's Fig. 8 observation that the front is at least partially
-    /// Bayesian). Returns non-dominated (arch, latency, metric) points
-    /// sorted by latency.
+    /// The latency-vs-metric Pareto front over the lookup table at the
+    /// 16-bit reference precision (the paper's Fig. 8 observation that
+    /// the front is at least partially Bayesian). Returns non-dominated
+    /// (arch, latency, metric) points sorted by latency.
     pub fn pareto_front(
         &self,
         task: Task,
         metric: &str,
     ) -> Vec<(ArchConfig, f64, f64)> {
         let mut pts: Vec<(ArchConfig, f64, f64)> = Vec::new();
+        let q16 = Precision::q16();
         for entry in self.lookup.for_task(task) {
             let arch = entry.arch();
-            let Some((_, _, ms)) = self.candidate(&arch) else {
+            let Some((_, _, ms)) = self.candidate(&arch, &q16) else {
                 continue;
             };
             let Some(m) = entry.metric(metric) else { continue };
@@ -333,6 +407,87 @@ mod tests {
         let opt = Optimizer::new(&ZC706, &lookup);
         let front = opt.pareto_front(Task::Classify, "accuracy");
         assert!(front.iter().all(|(a, _, _)| a.bayes_str() != "NNN"));
+    }
+
+    #[test]
+    fn latency_mode_exploits_the_precision_axis() {
+        // With no quality constraint, Opt-Latency takes the packed
+        // 8-bit path — and still reports the q16 baseline for the
+        // resource-delta column. Note the toy winner (h8, nl1) already
+        // reaches II = 1 at 16 bit, so its *latency* cannot improve
+        // (ceil(1/2) = 1): q8 wins the exact tie by search order and
+        // must never be slower.
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        assert_eq!(opt.precisions.len(), 3, "searches >= 3 bitwidths");
+        let c = opt.optimize(Task::Classify, OptMode::Latency).unwrap();
+        assert_eq!(c.precision.name(), "q8");
+        let q16_ms = {
+            let mut o16 = Optimizer::new(&ZC706, &lookup);
+            o16.precisions = vec![crate::fixedpoint::Precision::q16()];
+            o16.optimize(Task::Classify, OptMode::Latency)
+                .unwrap()
+                .fpga_latency_ms
+        };
+        assert!(c.fpga_latency_ms <= q16_ms, "q8 must never be slower");
+        let delta = c.dsp_delta_vs_q16_pct().expect("fits at q16 too");
+        assert!(delta > 0.0, "packed MVMs must save DSPs: {delta}");
+
+        // Where the design IS DSP-constrained (II > 1), the packed
+        // format's DSP headroom buys a lower feasible reuse and with it
+        // real modelled speedup.
+        use crate::dse::space::reuse_search_q;
+        use crate::fixedpoint::Precision;
+        use crate::hwmodel::latency::LatencyModel;
+        let arch = ArchConfig::new(Task::Classify, 32, 3, "YYY");
+        let r16 = reuse_search_q(&arch, &ZC706, &Precision::q16()).unwrap();
+        let r8 = reuse_search_q(&arch, &ZC706, &Precision::q8()).unwrap();
+        assert!(
+            LatencyModel::design_timing(&arch, &r16).ii > 1,
+            "test premise: the big net is DSP-constrained"
+        );
+        let ms16 =
+            LatencyModel::batch_ms(&arch, &r16, 50, 30, ZC706.clock_hz);
+        let ms8 = LatencyModel::batch_ms(&arch, &r8, 50, 30, ZC706.clock_hz);
+        assert!(
+            ms8 < 0.75 * ms16,
+            "q8 must be materially faster when constrained: {ms8} vs {ms16}"
+        );
+    }
+
+    #[test]
+    fn metric_modes_only_credit_measured_precisions() {
+        use crate::dse::lookup::quant_key;
+        // Entry without quantised columns: Metric modes must stay at the
+        // q16 fallback even though q8 would be faster.
+        let lookup = toy_lookup();
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let c = opt
+            .optimize(Task::Classify, OptMode::Metric("accuracy"))
+            .unwrap();
+        assert_eq!(c.precision.name(), "q16");
+        assert_eq!(c.arch.bayes_str(), "NYN");
+
+        // Now measure a q8 column that beats every float column: the
+        // optimizer should move to it and report the quantised value.
+        let mut lookup = toy_lookup();
+        let mut e = entry(
+            Task::Classify,
+            8,
+            2,
+            "YN",
+            &[("accuracy", 0.91)],
+        );
+        e.metrics.insert(quant_key("accuracy", "q8"), 0.94);
+        lookup.insert(e);
+        let opt = Optimizer::new(&ZC706, &lookup);
+        let c = opt
+            .optimize(Task::Classify, OptMode::Metric("accuracy"))
+            .unwrap();
+        assert_eq!(c.precision.name(), "q8");
+        assert_eq!(c.arch.bayes_str(), "YN");
+        assert!((c.objective - 0.94).abs() < 1e-12);
+        assert_eq!(c.quant_metric("accuracy"), Some(0.94));
     }
 
     #[test]

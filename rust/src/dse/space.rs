@@ -1,4 +1,5 @@
-//! The search space: architecture grid A and hardware parameters R.
+//! The search space: architecture grid A, hardware parameters R, and
+//! the quantisation axis Q.
 //!
 //! Paper grids (Sec. V-A): anomaly H in {8,16,24,32}, NL in {1,2};
 //! classification H in {8,16,32,64}, NL in {1,2,3}; dropout benchmarked
@@ -7,8 +8,14 @@
 //! that the figures highlight (all-N pointwise, all-Y, and the paper's
 //! named mixed patterns) to keep the default sweep minutes-scale —
 //! `full = true` restores the complete combination grid.
+//!
+//! The precision axis ([`precision_space`], `docs/quantization.md`) adds
+//! the 8/12/16-bit activation formats the companion accelerator work
+//! trades against parallelism; `reuse_search_q` solves the DSP
+//! constraint at each format.
 
 use crate::config::{ArchConfig, Task};
+use crate::fixedpoint::Precision;
 use crate::hwmodel::resource::{ResourceModel, ReuseFactors};
 use crate::hwmodel::Platform;
 
@@ -74,18 +81,36 @@ pub fn arch_space(task: Task, full: bool) -> Vec<ArchConfig> {
     out
 }
 
+/// The quantisation grid the DSE searches: uniform 8/12/16-bit
+/// activation paths (each with its widened cell format).
+pub fn precision_space() -> Vec<Precision> {
+    vec![Precision::q8(), Precision::q12(), Precision::q16()]
+}
+
+/// Hardware optimisation at the paper's 16-bit precision.
+pub fn reuse_search(cfg: &ArchConfig, platform: &Platform) -> Option<ReuseFactors> {
+    reuse_search_q(cfg, platform, &Precision::q16())
+}
+
 /// Hardware optimisation: the smallest achievable II (and its reuse
-/// factors) such that the design fits the platform's DSP budget.
+/// factors) such that the design fits the platform's DSP budget at the
+/// given precision.
 ///
 /// DSP usage is monotone non-increasing in every reuse factor and II =
 /// max(R_x, R_h), so feasibility at a given II is decided at
 /// R_x = R_h = II; we then shrink R_x (and R_d) back down while the design
 /// still fits, spending leftover DSPs to shorten the pipeline fill.
 /// Returns None if even maximal reuse cannot fit.
-pub fn reuse_search(cfg: &ArchConfig, platform: &Platform) -> Option<ReuseFactors> {
+pub fn reuse_search_q(
+    cfg: &ArchConfig,
+    platform: &Platform,
+    precision: &Precision,
+) -> Option<ReuseFactors> {
     const MAX_REUSE: usize = 256;
     let budget = platform.dsps as f64 * 1.05; // the paper's HLS slack
-    let fits = |r: &ReuseFactors| ResourceModel::estimate(cfg, r).dsps <= budget;
+    let fits = |r: &ReuseFactors| {
+        ResourceModel::estimate_q(cfg, r, precision).dsps <= budget
+    };
 
     let mut chosen = None;
     for ii in 1..=MAX_REUSE {
@@ -188,6 +213,42 @@ mod tests {
         // reject it no matter the reuse (the paper's Fig. 7 filter stage).
         let cfg = ArchConfig::new(Task::Classify, 64, 3, "NNN");
         assert!(reuse_search(&cfg, &ZC706).is_none());
+    }
+
+    #[test]
+    fn precision_space_covers_three_bitwidths() {
+        let precs = precision_space();
+        assert_eq!(precs.len(), 3);
+        let names: Vec<String> = precs.iter().map(Precision::name).collect();
+        assert_eq!(names, vec!["q8", "q12", "q16"]);
+    }
+
+    #[test]
+    fn narrower_precision_unlocks_lower_reuse() {
+        // At q8 the packed MVMs leave DSP headroom, so the constraint
+        // solver can run the same net at equal-or-lower reuse (faster).
+        let cfg = ArchConfig::new(Task::Classify, 32, 3, "YYY");
+        let r16 = reuse_search_q(&cfg, &ZC706, &Precision::q16()).unwrap();
+        let r8 = reuse_search_q(&cfg, &ZC706, &Precision::q8()).unwrap();
+        assert!(
+            r8.rh <= r16.rh && r8.rx <= r16.rx,
+            "q8 {r8:?} vs q16 {r16:?}"
+        );
+        assert!(r8.rh < r16.rh, "h32 nl3 must gain from packing");
+    }
+
+    #[test]
+    fn q8_packing_unlocks_nets_infeasible_at_q16() {
+        // H=64, NL=3 blows the DSP budget at 16 bit at any reuse (the
+        // Fig. 7 filter rejects it) but squeezes in once the MVMs pack
+        // two MACs per DSP — precision widens the feasible region, the
+        // co-design effect the ISSUE 4 axis exists for.
+        let cfg = ArchConfig::new(Task::Classify, 64, 3, "NNN");
+        assert!(reuse_search_q(&cfg, &ZC706, &Precision::q16()).is_none());
+        let r8 = reuse_search_q(&cfg, &ZC706, &Precision::q8())
+            .expect("feasible at q8");
+        let est = ResourceModel::estimate_q(&cfg, &r8, &Precision::q8());
+        assert!(est.dsps <= ZC706.dsps as f64 * 1.05);
     }
 
     #[test]

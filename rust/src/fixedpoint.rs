@@ -1,15 +1,42 @@
-//! 16-bit fixed-point substrate (paper Sec. IV-A/V-B).
+//! Parametric fixed-point substrate (paper Sec. IV-A/V-B; precision as a
+//! co-design axis per Fan et al., arXiv:2105.09163, and VIBNN).
 //!
-//! The accelerator quantises weights and activations to 16-bit fixed point
-//! and keeps the LSTM cell state `c` in 32 bits ("16-bit representation,
-//! except c which is represented in 32-bit"). We use Q6.10 for the 16-bit
-//! path (range [-32, 32), LSB 2^-10 ≈ 1e-3 — comfortably covering
-//! z-normalised ECG and gate pre-activations) and Q12.20 for the 32-bit
-//! cell path. Activation functions are BRAM-style lookup tables over a
-//! precomputed input range, exactly like the hardware (Sec. III-A).
+//! The accelerator quantises weights and activations to a narrow fixed
+//! point and keeps the LSTM cell state `c` in a widened path ("16-bit
+//! representation, except c which is represented in 32-bit"). The paper's
+//! reference instance is Q6.10 for the 16-bit path (range [-32, 32), LSB
+//! 2^-10 ≈ 1e-3 — comfortably covering z-normalised ECG and gate
+//! pre-activations) and Q12.20 for the 32-bit cell path; this module
+//! generalises that pair into a runtime [`QFormat`] descriptor so the DSE
+//! can trade precision for DSP/BRAM cost and throughput
+//! (`docs/quantization.md`).
 //!
-//! All arithmetic saturates (no wrap-around), matching DSP-block behaviour
-//! with saturation logic.
+//! Layering:
+//!
+//! * [`Fx16`] / [`Fx32`] — raw storage (an `i16` / `i32` lattice point).
+//!   Their inherent methods are the frozen **Q6.10 legacy ops**: they are
+//!   kept bit-for-bit as the pre-refactor implementation and serve as the
+//!   regression oracle the parametric path is property-tested against.
+//! * [`QFormat`] — one format: total bits (≤ 16 on the activation path,
+//!   32 on the cell path) and fractional bits. Owns quantise /
+//!   dequantise / saturating arithmetic at that format.
+//! * [`QuantSpec`] — an engine's format pair `{act, cell}` plus the
+//!   widen/narrow/cell arithmetic between them.
+//! * [`Precision`] — a whole design's quantisation: a default spec with
+//!   per-LSTM-layer overrides.
+//!
+//! Activation functions are BRAM-style lookup tables over a precomputed
+//! input range, exactly like the hardware (Sec. III-A); tables are built
+//! per format ([`ActLut::with_format`]).
+//!
+//! All arithmetic rounds to nearest and saturates (no wrap-around),
+//! matching DSP-block behaviour with saturation logic.
+//!
+//! **Bit-exactness contract:** every parametric operation at
+//! `QFormat::Q16_ACT` / `QuantSpec::q16()` is bit-identical to the
+//! corresponding legacy Q6.10 op (tested below at the op level; the
+//! engine and accelerator levels pin the same contract in
+//! `fpga::engine` / `fpga::accel`).
 
 /// Fractional bits of the 16-bit path (Q6.10).
 pub const FRAC16: i32 = 10;
@@ -98,6 +125,346 @@ impl Fx32 {
     }
 }
 
+// ---------------------------------------------------------------------------
+// Parametric quantisation descriptors.
+// ---------------------------------------------------------------------------
+
+/// One fixed-point format: `total_bits` two's-complement bits with
+/// `frac_bits` of them fractional (Q`{total-frac}`.`{frac}` in Q
+/// notation). Activation/weight formats use ≤ 16 bits and are stored in
+/// [`Fx16`]; the widened cell format uses 32 bits in [`Fx32`]. Narrow
+/// formats keep the 16-bit container — the hardware packs them, the
+/// simulator only narrows the *rails* — so the resource/latency models,
+/// not the container, carry the bitwidth cost.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QFormat {
+    pub total_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    /// The paper's 16-bit activation format, Q6.10.
+    pub const Q16_ACT: QFormat = QFormat::new(16, FRAC16 as u32);
+    /// 12-bit activation format, Q4.8 (range ±8, LSB 2^-8).
+    pub const Q12_ACT: QFormat = QFormat::new(12, 8);
+    /// 8-bit activation format, Q3.5 (range ±4, LSB 2^-5).
+    pub const Q8_ACT: QFormat = QFormat::new(8, 5);
+    /// The paper's 32-bit cell format, Q12.20.
+    pub const Q32_CELL: QFormat = QFormat::new(32, FRAC32 as u32);
+
+    pub const fn new(total_bits: u32, frac_bits: u32) -> Self {
+        assert!(total_bits >= 2 && total_bits <= 32);
+        assert!(frac_bits >= 1 && frac_bits < total_bits);
+        Self { total_bits, frac_bits }
+    }
+
+    /// Largest representable raw value.
+    #[inline]
+    pub fn max_raw(self) -> i32 {
+        if self.total_bits >= 32 {
+            i32::MAX
+        } else {
+            (1i32 << (self.total_bits - 1)) - 1
+        }
+    }
+
+    /// Smallest representable raw value.
+    #[inline]
+    pub fn min_raw(self) -> i32 {
+        if self.total_bits >= 32 {
+            i32::MIN
+        } else {
+            -(1i32 << (self.total_bits - 1))
+        }
+    }
+
+    /// One least-significant bit in real units.
+    #[inline]
+    pub fn lsb(self) -> f32 {
+        1.0 / (1i64 << self.frac_bits) as f32
+    }
+
+    /// Largest representable real value.
+    #[inline]
+    pub fn max_value(self) -> f32 {
+        self.max_raw() as f32 * self.lsb()
+    }
+
+    /// MACs one DSP48 slice performs per cycle at this operand width:
+    /// two ≤ 8-bit multiplies pack into one 25x18 slice (the INT8
+    /// packing the companion accelerator exploits), wider operands use
+    /// a full slice each.
+    #[inline]
+    pub fn macs_per_dsp(self) -> u64 {
+        if self.total_bits <= 8 {
+            2
+        } else {
+            1
+        }
+    }
+
+    /// Quantise an f32 (round-to-nearest, saturate at the format rails).
+    /// At `Q16_ACT` this is bit-identical to [`Fx16::from_f32`].
+    #[inline]
+    pub fn quantize(self, v: f32) -> Fx16 {
+        debug_assert!(self.total_bits <= 16, "activation-path format");
+        let scaled = (v as f64 * (1i64 << self.frac_bits) as f64).round();
+        Fx16(scaled.clamp(self.min_raw() as f64, self.max_raw() as f64)
+            as i16)
+    }
+
+    /// Quantise onto the (32-bit container) cell lattice.
+    #[inline]
+    pub fn quantize_cell(self, v: f32) -> Fx32 {
+        let scaled = (v as f64 * (1i64 << self.frac_bits) as f64).round();
+        Fx32(scaled.clamp(self.min_raw() as f64, self.max_raw() as f64)
+            as i32)
+    }
+
+    #[inline]
+    pub fn dequantize(self, v: Fx16) -> f32 {
+        v.0 as f32 / (1i64 << self.frac_bits) as f32
+    }
+
+    #[inline]
+    pub fn dequantize_cell(self, v: Fx32) -> f32 {
+        v.0 as f32 / (1i64 << self.frac_bits) as f32
+    }
+
+    /// Saturating add at this format's rails.
+    #[inline]
+    pub fn sat_add(self, a: Fx16, b: Fx16) -> Fx16 {
+        let s = a.0 as i32 + b.0 as i32;
+        Fx16(s.clamp(self.min_raw(), self.max_raw()) as i16)
+    }
+
+    /// Fixed-point multiply at this format: `(a*b) >> frac` with
+    /// round-to-nearest and saturation — one DSP multiplier.
+    #[inline]
+    pub fn sat_mul(self, a: Fx16, b: Fx16) -> Fx16 {
+        let prod = a.0 as i32 * b.0 as i32;
+        let rounded = (prod + (1 << (self.frac_bits - 1))) >> self.frac_bits;
+        Fx16(rounded.clamp(self.min_raw(), self.max_raw()) as i16)
+    }
+
+    /// Re-express a value quantised in `from` on this format's lattice
+    /// (exact when gaining fractional bits, round-to-nearest when
+    /// losing them; saturates at this format's rails). Identity when
+    /// the formats match — the inter-layer buses of a uniform design
+    /// never touch the data.
+    #[inline]
+    pub fn requantize_from(self, v: Fx16, from: QFormat) -> Fx16 {
+        if self == from {
+            return v;
+        }
+        let raw = if self.frac_bits >= from.frac_bits {
+            (v.0 as i32) << (self.frac_bits - from.frac_bits)
+        } else {
+            let shift = from.frac_bits - self.frac_bits;
+            ((v.0 as i32) + (1 << (shift - 1))) >> shift
+        };
+        Fx16(raw.clamp(self.min_raw(), self.max_raw()) as i16)
+    }
+
+    /// Short name used by the CLI / lookup-table columns: the preset
+    /// names `q8` / `q12` / `q16`, or `q<total>f<frac>` otherwise.
+    pub fn name(self) -> String {
+        match self {
+            QFormat::Q16_ACT => "q16".into(),
+            QFormat::Q12_ACT => "q12".into(),
+            QFormat::Q8_ACT => "q8".into(),
+            _ => format!("q{}f{}", self.total_bits, self.frac_bits),
+        }
+    }
+}
+
+/// An engine's quantisation: the activation/weight format and the
+/// widened cell format, plus the arithmetic that crosses between them
+/// (the `f_t * c_{t-1}` tail of the LSTM engine).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct QuantSpec {
+    pub act: QFormat,
+    pub cell: QFormat,
+}
+
+impl QuantSpec {
+    pub const fn new(act: QFormat, cell: QFormat) -> Self {
+        assert!(cell.frac_bits > act.frac_bits, "cell path must widen");
+        Self { act, cell }
+    }
+
+    /// The paper's reference pair: Q6.10 activations, Q12.20 cell.
+    pub const fn q16() -> Self {
+        Self::new(QFormat::Q16_ACT, QFormat::Q32_CELL)
+    }
+
+    /// 12-bit activations (Q4.8), cell widened to Q(32,16).
+    pub const fn q12() -> Self {
+        Self::new(QFormat::Q12_ACT, QFormat::new(32, 16))
+    }
+
+    /// 8-bit activations (Q3.5), cell widened to Q(32,10).
+    pub const fn q8() -> Self {
+        Self::new(QFormat::Q8_ACT, QFormat::new(32, 10))
+    }
+
+    /// Parse a preset name (`q8` / `q12` / `q16`, bare `8|12|16` also
+    /// accepted).
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "q16" | "16" => Ok(Self::q16()),
+            "q12" | "12" => Ok(Self::q12()),
+            "q8" | "8" => Ok(Self::q8()),
+            other => Err(format!(
+                "unknown precision {other:?} (q8 | q12 | q16)"
+            )),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.act.name()
+    }
+
+    /// Shift between the cell and activation lattices.
+    #[inline]
+    fn widen_shift(&self) -> u32 {
+        self.cell.frac_bits - self.act.frac_bits
+    }
+
+    /// Widen an activation-path value onto the cell lattice (exact).
+    /// At `q16` bit-identical to [`Fx16::widen`].
+    #[inline]
+    pub fn widen(&self, a: Fx16) -> Fx32 {
+        Fx32((a.0 as i32) << self.widen_shift())
+    }
+
+    /// Narrow a cell value back to the activation path (round, saturate
+    /// at the activation rails). At `q16` bit-identical to
+    /// [`Fx32::narrow`].
+    #[inline]
+    pub fn narrow(&self, c: Fx32) -> Fx16 {
+        let shift = self.widen_shift();
+        let shifted = (c.0 + (1 << (shift - 1))) >> shift;
+        Fx16(shifted.clamp(self.act.min_raw(), self.act.max_raw()) as i16)
+    }
+
+    /// `c * a` on the widened path (the 2-cascaded-DSP 16x32 multiply of
+    /// the paper). At `q16` bit-identical to [`Fx32::mul_fx16`].
+    #[inline]
+    pub fn cell_mul_act(&self, c: Fx32, a: Fx16) -> Fx32 {
+        let prod = c.0 as i64 * a.0 as i64;
+        let rounded =
+            (prod + (1 << (self.act.frac_bits - 1))) >> self.act.frac_bits;
+        Fx32(
+            rounded.clamp(self.cell.min_raw() as i64, self.cell.max_raw() as i64)
+                as i32,
+        )
+    }
+
+    /// Saturating add on the cell path. At `q16` (32-bit cell rails)
+    /// bit-identical to [`Fx32::saturating_add`].
+    #[inline]
+    pub fn cell_add(&self, a: Fx32, b: Fx32) -> Fx32 {
+        let s = a.0 as i64 + b.0 as i64;
+        Fx32(
+            s.clamp(self.cell.min_raw() as i64, self.cell.max_raw() as i64)
+                as i32,
+        )
+    }
+}
+
+/// A whole design's quantisation: one default [`QuantSpec`] plus
+/// per-LSTM-layer overrides — the paper's per-layer `B` pattern extended
+/// to the precision axis. The final dense head runs at the default
+/// activation format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Precision {
+    pub default: QuantSpec,
+    /// `(lstm_layer_index, spec)` overrides, later entries win.
+    pub overrides: Vec<(usize, QuantSpec)>,
+}
+
+impl Precision {
+    pub fn uniform(spec: QuantSpec) -> Self {
+        Self { default: spec, overrides: Vec::new() }
+    }
+
+    pub fn q16() -> Self {
+        Self::uniform(QuantSpec::q16())
+    }
+
+    pub fn q12() -> Self {
+        Self::uniform(QuantSpec::q12())
+    }
+
+    pub fn q8() -> Self {
+        Self::uniform(QuantSpec::q8())
+    }
+
+    /// Builder-style per-layer override.
+    pub fn with_layer(mut self, layer: usize, spec: QuantSpec) -> Self {
+        self.overrides.push((layer, spec));
+        self
+    }
+
+    /// The spec LSTM layer `l` runs at.
+    pub fn spec_for(&self, layer: usize) -> QuantSpec {
+        self.overrides
+            .iter()
+            .rev()
+            .find(|&&(l, _)| l == layer)
+            .map(|&(_, s)| s)
+            .unwrap_or(self.default)
+    }
+
+    /// Whether this is exactly the paper's uniform Q6.10/Q12.20 design
+    /// (the bit-exactness baseline).
+    pub fn is_q16(&self) -> bool {
+        self.default == QuantSpec::q16()
+            && self.overrides.iter().all(|&(_, s)| s == QuantSpec::q16())
+    }
+
+    /// `q8` / `q12` / `q16`, with `+l<i>=<fmt>` suffixes for overrides
+    /// (e.g. `q8+l0=q16`). The name is canonical: overrides that merely
+    /// restate the default are dropped, so a semantically-uniform
+    /// precision (e.g. parsed from `q16,l0=q16`) names itself exactly
+    /// like the plain preset — the lookup table's quantised-accuracy
+    /// columns and their q16 float fallback key off this name.
+    pub fn name(&self) -> String {
+        let mut out = self.default.name();
+        for &(l, s) in &self.overrides {
+            if s != self.default {
+                out.push_str(&format!("+l{l}={}", s.name()));
+            }
+        }
+        out
+    }
+
+    /// Parse `q8` / `q12` / `q16` with optional per-layer overrides:
+    /// `q8,l0=q16,l2=q12`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut parts = s.split(',');
+        let default = QuantSpec::parse(
+            parts.next().ok_or_else(|| "empty precision".to_string())?,
+        )?;
+        let mut prec = Precision::uniform(default);
+        for part in parts {
+            let (layer, fmt) = part
+                .trim()
+                .strip_prefix('l')
+                .and_then(|p| p.split_once('='))
+                .ok_or_else(|| {
+                    format!("bad per-layer override {part:?} (want l<i>=q8)")
+                })?;
+            let l: usize = layer
+                .parse()
+                .map_err(|_| format!("bad layer index {layer:?}"))?;
+            prec = prec.with_layer(l, QuantSpec::parse(fmt)?);
+        }
+        Ok(prec)
+    }
+}
+
 /// 16-bit MAC accumulator for MVM engines: products are accumulated in a
 /// wide register (as DSP48 cascades do) and narrowed once at the end —
 /// avoids per-term quantisation error.
@@ -115,12 +482,28 @@ impl MacAcc {
         self.0 += a.0 as i64 * b.0 as i64; // Q(2*FRAC16)
     }
 
-    /// Finish: add bias (Q10) and narrow to Fx16 with rounding/saturation.
+    /// Finish: add bias (Q10) and narrow to Fx16 with rounding/saturation
+    /// — the frozen Q6.10 legacy op ([`MacAcc::finish_fmt`] generalises
+    /// it; bit-identical at `QFormat::Q16_ACT`, property-tested below).
     #[inline]
     pub fn finish(self, bias: Fx16) -> Fx16 {
         let with_bias = self.0 + ((bias.0 as i64) << FRAC16);
         let rounded = (with_bias + (1 << (FRAC16 - 1))) >> FRAC16;
         Fx16(rounded.clamp(i16::MIN as i64, i16::MAX as i64) as i16)
+    }
+
+    /// Format-parametric finish: operands and bias are quantised in
+    /// `fmt` (so the accumulator holds Q`2*frac` products), the result
+    /// is rounded back to `fmt` and saturated at its rails.
+    #[inline]
+    pub fn finish_fmt(self, bias: Fx16, fmt: QFormat) -> Fx16 {
+        let with_bias = self.0 + ((bias.0 as i64) << fmt.frac_bits);
+        let rounded =
+            (with_bias + (1 << (fmt.frac_bits - 1))) >> fmt.frac_bits;
+        Fx16(
+            rounded.clamp(fmt.min_raw() as i64, fmt.max_raw() as i64)
+                as i16,
+        )
     }
 }
 
@@ -139,29 +522,48 @@ pub struct ActLut {
 }
 
 /// LUT input range: |x| <= 8 saturates both sigmoid and tanh to <1 LSB of
-/// the 16-bit output.
+/// the 16-bit output. Formats whose rails sit below ±8 clamp the table
+/// to their representable range instead.
 pub const LUT_RANGE: f32 = 8.0;
-/// log2(entries): 1024-entry tables fit one BRAM18 each at 16-bit width.
+/// log2(max entries): 1024-entry tables fit one BRAM18 each at 16-bit
+/// width. Narrow formats whose input span is smaller use one bucket per
+/// raw unit (an exact, smaller table).
 pub const LUT_BITS: u32 = 10;
 
 impl ActLut {
+    /// Q6.10 table — the legacy constructor, bit-identical to
+    /// `with_format(f, QFormat::Q16_ACT)`.
     pub fn new(f: impl Fn(f64) -> f64) -> Self {
-        let entries = 1usize << LUT_BITS;
-        let lo_raw = Fx16::from_f32(-LUT_RANGE).0 as i32;
-        let hi_raw = Fx16::from_f32(LUT_RANGE).0 as i32;
+        Self::with_format(f, QFormat::Q16_ACT)
+    }
+
+    /// Build the table over `fmt`'s representation of [-LUT_RANGE,
+    /// LUT_RANGE] (clamped to the format rails), with at most
+    /// `2^LUT_BITS` buckets; inputs and outputs are both quantised in
+    /// `fmt`. Each bucket is evaluated at its raw midpoint.
+    pub fn with_format(f: impl Fn(f64) -> f64, fmt: QFormat) -> Self {
+        let lo_raw = fmt.quantize(-LUT_RANGE).0 as i32;
+        let hi_raw = fmt.quantize(LUT_RANGE).0 as i32;
         let span = (hi_raw - lo_raw) as i64;
-        // Each LUT bucket covers `span / entries` raw units; precompute the
-        // function at each bucket midpoint.
+        debug_assert!(span > 0, "degenerate LUT span");
+        // Bucket width: the smallest power of two keeping the table
+        // within 2^LUT_BITS entries (shift 4 at Q6.10: span 2^14 over
+        // 2^10 entries; shift 0 — exact per-raw-unit buckets — for
+        // narrow formats whose whole span fits).
+        let max_entries = 1i64 << LUT_BITS;
+        let mut shift = 0i32;
+        while (span >> shift) > max_entries {
+            shift += 1;
+        }
+        let entries = ((span + (1i64 << shift) - 1) >> shift) as usize;
         let mut table = Vec::with_capacity(entries);
         for i in 0..entries {
             let raw_mid = lo_raw as i64
-                + (span * (2 * i as i64 + 1)) / (2 * entries as i64);
-            let x = raw_mid as f64 / (1 << FRAC16) as f64;
-            table.push(Fx16::from_f32(f(x) as f32));
+                + ((i as i64) << shift)
+                + ((1i64 << shift) >> 1);
+            let x = raw_mid as f64 / (1i64 << fmt.frac_bits) as f64;
+            table.push(fmt.quantize(f(x) as f32));
         }
-        // span / entries as a shift: span = 16 * 2^10 raw = 2^14; entries =
-        // 2^10 -> 16 raw units per bucket = shift 4.
-        let shift = (span as f64 / entries as f64).log2().round() as i32;
         Self { table, lo_raw, hi_raw, shift }
     }
 
@@ -171,6 +573,14 @@ impl ActLut {
 
     pub fn tanh() -> Self {
         Self::new(|x| x.tanh())
+    }
+
+    pub fn sigmoid_fmt(fmt: QFormat) -> Self {
+        Self::with_format(|x| 1.0 / (1.0 + (-x).exp()), fmt)
+    }
+
+    pub fn tanh_fmt(fmt: QFormat) -> Self {
+        Self::with_format(|x| x.tanh(), fmt)
     }
 
     /// One BRAM read: clamp, index by upper bits, return table entry.
@@ -186,7 +596,7 @@ impl ActLut {
     }
 }
 
-/// Quantise an f32 slice to Fx16.
+/// Quantise an f32 slice to Fx16 (legacy Q6.10).
 pub fn quantize(v: &[f32]) -> Vec<Fx16> {
     v.iter().map(|&x| Fx16::from_f32(x)).collect()
 }
@@ -194,6 +604,16 @@ pub fn quantize(v: &[f32]) -> Vec<Fx16> {
 /// Dequantise back to f32 (for metric evaluation of the quantised model).
 pub fn dequantize(v: &[Fx16]) -> Vec<f32> {
     v.iter().map(|x| x.to_f32()).collect()
+}
+
+/// Quantise an f32 slice in an explicit format.
+pub fn quantize_fmt(v: &[f32], fmt: QFormat) -> Vec<Fx16> {
+    v.iter().map(|&x| fmt.quantize(x)).collect()
+}
+
+/// Dequantise a slice quantised in `fmt`.
+pub fn dequantize_fmt(v: &[Fx16], fmt: QFormat) -> Vec<f32> {
+    v.iter().map(|&x| fmt.dequantize(x)).collect()
 }
 
 #[cfg(test)]
@@ -348,5 +768,282 @@ mod tests {
                 x += 0.01;
             }
         }
+    }
+
+    // -----------------------------------------------------------------
+    // Parametric substrate: Q6.10 bit-exactness oracle.
+    //
+    // The inherent `Fx16` / `Fx32` / `MacAcc::finish` methods above are
+    // the frozen pre-refactor implementation; every parametric op at
+    // `QFormat::Q16_ACT` / `QuantSpec::q16()` must reproduce them
+    // bit-for-bit (the refactor's regression contract).
+    // -----------------------------------------------------------------
+
+    #[test]
+    fn q16_ops_bit_identical_to_legacy() {
+        use crate::rng::Rng;
+        let fmt = QFormat::Q16_ACT;
+        let spec = QuantSpec::q16();
+        let mut rng = Rng::new(123);
+        for _ in 0..4000 {
+            // Values deliberately past the rails to exercise saturation.
+            let a = rng.uniform_in(-80.0, 80.0) as f32;
+            let b = rng.uniform_in(-80.0, 80.0) as f32;
+            assert_eq!(fmt.quantize(a).0, Fx16::from_f32(a).0, "quantize {a}");
+            let qa = Fx16::from_f32(a);
+            let qb = Fx16::from_f32(b);
+            assert_eq!(fmt.dequantize(qa), qa.to_f32());
+            assert_eq!(fmt.sat_add(qa, qb), qa.saturating_add(qb));
+            assert_eq!(fmt.sat_mul(qa, qb), qa.saturating_mul(qb));
+            assert_eq!(spec.widen(qa), qa.widen());
+            let c = Fx32::from_f32(rng.uniform_in(-2000.0, 2000.0) as f32);
+            assert_eq!(spec.narrow(c), c.narrow());
+            assert_eq!(spec.cell_mul_act(c, qa), c.mul_fx16(qa));
+            let c2 = Fx32::from_f32(rng.uniform_in(-2000.0, 2000.0) as f32);
+            assert_eq!(spec.cell_add(c, c2), c.saturating_add(c2));
+            // Requantize q16 -> q16 is the identity.
+            assert_eq!(fmt.requantize_from(qa, fmt), qa);
+        }
+    }
+
+    #[test]
+    fn q16_mac_finish_bit_identical_to_legacy() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(5);
+        for _ in 0..500 {
+            let mut acc_a = MacAcc::new();
+            let mut acc_b = MacAcc::new();
+            for _ in 0..1 + rng.below(24) {
+                let x = Fx16::from_f32(rng.uniform_in(-8.0, 8.0) as f32);
+                let w = Fx16::from_f32(rng.uniform_in(-8.0, 8.0) as f32);
+                acc_a.mac(x, w);
+                acc_b.mac(x, w);
+            }
+            let bias = Fx16::from_f32(rng.uniform_in(-4.0, 4.0) as f32);
+            assert_eq!(
+                acc_a.finish(bias),
+                acc_b.finish_fmt(bias, QFormat::Q16_ACT)
+            );
+        }
+    }
+
+    #[test]
+    fn q16_luts_bit_identical_to_legacy_tables() {
+        // `ActLut::new` now routes through `with_format`; pin the table
+        // geometry so a drift in the generic construction is caught.
+        let lut = ActLut::sigmoid_fmt(QFormat::Q16_ACT);
+        assert_eq!(lut.entries(), 1 << LUT_BITS);
+        assert_eq!(lut.shift, 4, "Q6.10 over ±8 is 16 raw units/bucket");
+        assert_eq!(lut.lo_raw, -(8 << FRAC16));
+        assert_eq!(lut.hi_raw, 8 << FRAC16);
+        // Midpoint rule: bucket i evaluated at lo + 16 i + 8.
+        let i = 137usize;
+        let x = (lut.lo_raw as i64 + 16 * i as i64 + 8) as f64
+            / (1 << FRAC16) as f64;
+        let want = Fx16::from_f32((1.0 / (1.0 + (-x).exp())) as f32);
+        assert_eq!(lut.table[i], want);
+    }
+
+    // -----------------------------------------------------------------
+    // Per-format edge cases (ISSUE 4 satellite): saturation rails,
+    // ±0.5 LSB rounding, quantisation error bounds.
+    // -----------------------------------------------------------------
+
+    fn act_formats() -> [QFormat; 3] {
+        [QFormat::Q8_ACT, QFormat::Q12_ACT, QFormat::Q16_ACT]
+    }
+
+    #[test]
+    fn format_rails_saturate_and_roundtrip() {
+        for fmt in act_formats() {
+            let max = fmt.max_value();
+            // Far past the rails: clamps exactly to them.
+            assert_eq!(fmt.quantize(1e9).0 as i32, fmt.max_raw());
+            assert_eq!(fmt.quantize(-1e9).0 as i32, fmt.min_raw());
+            // The rails survive a dequantize -> quantize round trip.
+            let hi = fmt.quantize(max);
+            assert_eq!(fmt.quantize(fmt.dequantize(hi)), hi);
+            // Additive saturation pins at the rail instead of wrapping.
+            let near = fmt.quantize(max * 0.75);
+            assert_eq!(fmt.sat_add(near, near).0 as i32, fmt.max_raw());
+            let lo = Fx16(fmt.min_raw() as i16);
+            assert_eq!(fmt.sat_add(lo, lo).0 as i32, fmt.min_raw());
+        }
+    }
+
+    #[test]
+    fn widen_narrow_roundtrips_at_saturation_rails() {
+        for spec in [QuantSpec::q8(), QuantSpec::q12(), QuantSpec::q16()] {
+            // widen().narrow() is the identity on the whole activation
+            // lattice, rails included.
+            for raw in [
+                spec.act.min_raw(),
+                spec.act.min_raw() + 1,
+                -1,
+                0,
+                1,
+                spec.act.max_raw() - 1,
+                spec.act.max_raw(),
+            ] {
+                let a = Fx16(raw as i16);
+                assert_eq!(
+                    spec.narrow(spec.widen(a)),
+                    a,
+                    "{}: widen/narrow must be identity at raw {raw}",
+                    spec.name()
+                );
+            }
+            // A cell value past the activation rails narrows to the rail.
+            let big = Fx32(
+                (spec.act.max_raw() + 7) << (spec.cell.frac_bits
+                    - spec.act.frac_bits),
+            );
+            assert_eq!(spec.narrow(big).0 as i32, spec.act.max_raw());
+            let small = Fx32(
+                (spec.act.min_raw() - 7) << (spec.cell.frac_bits
+                    - spec.act.frac_bits),
+            );
+            assert_eq!(spec.narrow(small).0 as i32, spec.act.min_raw());
+        }
+    }
+
+    #[test]
+    fn rounding_at_half_lsb_ties_away_from_zero() {
+        for fmt in act_formats() {
+            let lsb = fmt.lsb() as f64;
+            for k in [-5i32, -1, 0, 1, 5] {
+                let base = k as f64 * lsb;
+                // Exactly ±0.5 LSB is a tie on the scaled integer;
+                // `f64::round` (the legacy Q6.10 rule too) breaks ties
+                // away from zero.
+                let tie = fmt.quantize((base + 0.5 * lsb) as f32);
+                let want_tie = if 2 * k + 1 > 0 { k + 1 } else { k };
+                assert_eq!(
+                    tie.0 as i32,
+                    want_tie,
+                    "{}: tie at {base} + 0.5 LSB",
+                    fmt.name()
+                );
+                // Just below the tie rounds to nearest (k).
+                let down = fmt.quantize((base + 0.49 * lsb) as f32);
+                assert_eq!(
+                    down.0 as i32,
+                    k,
+                    "{}: {base} + 0.49 LSB",
+                    fmt.name()
+                );
+                // Just above rounds to k + 1.
+                let up = fmt.quantize((base + 0.51 * lsb) as f32);
+                assert_eq!(
+                    up.0 as i32,
+                    k + 1,
+                    "{}: {base} + 0.51 LSB",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
+    /// Property sweep: every supported format quantises in-range values
+    /// to within half an LSB, and requantisation between formats stays
+    /// within the coarser format's half-LSB of the real value.
+    #[test]
+    fn per_format_quantization_error_bounds() {
+        use crate::rng::Rng;
+        let mut rng = Rng::new(31);
+        for fmt in act_formats() {
+            let range = fmt.max_value() * 0.95;
+            for _ in 0..2000 {
+                let v = rng.uniform_in(-range as f64, range as f64) as f32;
+                let q = fmt.quantize(v);
+                assert!(
+                    (fmt.dequantize(q) - v).abs() <= 0.5 * fmt.lsb() + 1e-6,
+                    "{}: quantize({v})",
+                    fmt.name()
+                );
+            }
+        }
+        // Cross-format requantisation: q16 -> q8 -> value within q8's
+        // half-LSB (plus the q16 residue); q8 -> q16 is exact.
+        let (fine, coarse) = (QFormat::Q16_ACT, QFormat::Q8_ACT);
+        for _ in 0..2000 {
+            let v = rng.uniform_in(-3.5, 3.5) as f32;
+            let qf = fine.quantize(v);
+            let qc = coarse.requantize_from(qf, fine);
+            assert!(
+                (coarse.dequantize(qc) - fine.dequantize(qf)).abs()
+                    <= 0.5 * coarse.lsb() + 1e-6,
+                "q16 -> q8 at {v}"
+            );
+            let back = fine.requantize_from(qc, coarse);
+            assert_eq!(
+                fine.dequantize(back),
+                coarse.dequantize(qc),
+                "q8 -> q16 must be exact"
+            );
+        }
+    }
+
+    #[test]
+    fn narrow_format_luts_stay_accurate_and_monotone() {
+        for fmt in act_formats() {
+            let sig = ActLut::sigmoid_fmt(fmt);
+            let tanh = ActLut::tanh_fmt(fmt);
+            assert!(sig.entries() <= 1 << LUT_BITS);
+            // Tolerance: one output LSB plus the input-bucket slope.
+            let tol = (2.0 * fmt.lsb() + 0.01) as f64;
+            let (mut prev_s, mut prev_t) = (i16::MIN, i16::MIN);
+            let mut x = -(fmt.max_value() as f64) * 0.98;
+            while x < fmt.max_value() as f64 * 0.98 {
+                let q = fmt.quantize(x as f32);
+                let got_s = fmt.dequantize(sig.eval(q)) as f64;
+                let want_s = 1.0 / (1.0 + (-x).exp());
+                assert!(
+                    (got_s - want_s).abs() < tol,
+                    "{}: sigmoid({x}) = {got_s} vs {want_s}",
+                    fmt.name()
+                );
+                let got_t = fmt.dequantize(tanh.eval(q)) as f64;
+                assert!(
+                    (got_t - x.tanh()).abs() < tol,
+                    "{}: tanh({x}) = {got_t}",
+                    fmt.name()
+                );
+                assert!(sig.eval(q).0 >= prev_s, "{}: sigmoid monotone", fmt.name());
+                assert!(tanh.eval(q).0 >= prev_t, "{}: tanh monotone", fmt.name());
+                prev_s = sig.eval(q).0;
+                prev_t = tanh.eval(q).0;
+                x += 0.01;
+            }
+        }
+    }
+
+    #[test]
+    fn precision_presets_parse_and_name() {
+        assert_eq!(QuantSpec::parse("q8").unwrap(), QuantSpec::q8());
+        assert_eq!(QuantSpec::parse("16").unwrap(), QuantSpec::q16());
+        assert!(QuantSpec::parse("q7").is_err());
+        let p = Precision::parse("q8,l1=q16").unwrap();
+        assert_eq!(p.default, QuantSpec::q8());
+        assert_eq!(p.spec_for(0), QuantSpec::q8());
+        assert_eq!(p.spec_for(1), QuantSpec::q16());
+        assert_eq!(p.name(), "q8+l1=q16");
+        assert!(!p.is_q16());
+        assert!(Precision::q16().is_q16());
+        // Canonical names: redundant overrides don't perturb the name,
+        // so a `q16,l0=q16` precision still reads the lookup table's
+        // q16 columns (float fallback included).
+        let redundant = Precision::parse("q16,l0=q16").unwrap();
+        assert!(redundant.is_q16());
+        assert_eq!(redundant.name(), "q16");
+        assert_eq!(
+            Precision::parse("q8,l2=q8").unwrap().name(),
+            "q8"
+        );
+        assert!(Precision::parse("q8,x=q16").is_err());
+        // Packing: two 8-bit MACs per DSP, one otherwise.
+        assert_eq!(QFormat::Q8_ACT.macs_per_dsp(), 2);
+        assert_eq!(QFormat::Q12_ACT.macs_per_dsp(), 1);
+        assert_eq!(QFormat::Q16_ACT.macs_per_dsp(), 1);
     }
 }

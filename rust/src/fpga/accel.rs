@@ -2,10 +2,18 @@
 //! autoencoder / classifier topologies of Fig. 6, with per-layer LFSR
 //! Bernoulli samplers and MC-sample aggregation — the functional
 //! (fixed-point) half of the simulator.
+//!
+//! Quantisation is a constructor parameter ([`Accelerator::
+//! with_precision`], `docs/quantization.md`): every LSTM layer runs at
+//! its [`crate::fixedpoint::QuantSpec`] (per-layer overridable), the
+//! dense head at the design default, and the inter-layer bus is
+//! requantised only where adjacent layers disagree — a uniform design
+//! never touches lane data between layers, so the Q6.10 instance is
+//! bit-identical to the pre-refactor accelerator.
 
 use super::engine::{DenseEngine, LstmEngine};
 use crate::config::{ArchConfig, Task, GATES};
-use crate::fixedpoint::Fx16;
+use crate::fixedpoint::{Fx16, Precision, QFormat};
 use crate::hwmodel::resource::{ResourceEstimate, ResourceModel, ReuseFactors};
 use crate::lfsr::BernoulliSampler;
 use crate::nn::model::softmax_row;
@@ -81,10 +89,25 @@ pub struct BatchRequest<'a> {
     pub count: usize,
 }
 
-/// The synthesised design: engines, samplers, reuse factors.
+/// Requantise a bus slice in place when adjacent layers run different
+/// formats. Exact no-op (not even a copy) when the formats match, so
+/// uniform designs — the Q6.10 baseline in particular — never touch
+/// lane data between layers.
+#[inline]
+fn requantize_rows(buf: &mut [Fx16], from: QFormat, to: QFormat) {
+    if from == to {
+        return;
+    }
+    for v in buf.iter_mut() {
+        *v = to.requantize_from(*v, from);
+    }
+}
+
+/// The synthesised design: engines, samplers, reuse factors, precision.
 pub struct Accelerator {
     pub cfg: ArchConfig,
     pub reuse: ReuseFactors,
+    pub precision: Precision,
     pub lstms: Vec<LstmEngine>,
     pub dense: DenseEngine,
     pub samplers: Vec<Option<BernoulliSampler>>,
@@ -103,25 +126,40 @@ pub struct Accelerator {
 }
 
 impl Accelerator {
-    /// "Synthesise" the design from trained float parameters.
+    /// "Synthesise" the design from trained float parameters at the
+    /// paper's Q6.10/Q12.20 precision.
     pub fn new(
         cfg: &ArchConfig,
         params: &Params,
         reuse: ReuseFactors,
         seed: u64,
     ) -> Self {
+        Self::with_precision(cfg, params, reuse, seed, Precision::q16())
+    }
+
+    /// "Synthesise" the design at an explicit [`Precision`]: LSTM layer
+    /// `l` is quantised at `precision.spec_for(l)`, the dense head at
+    /// the default activation format.
+    pub fn with_precision(
+        cfg: &ArchConfig,
+        params: &Params,
+        reuse: ReuseFactors,
+        seed: u64,
+        precision: Precision,
+    ) -> Self {
         let dims = cfg.lstm_dims();
         let mut lstms = Vec::with_capacity(dims.len());
         let mut samplers = Vec::with_capacity(dims.len());
         for (l, _) in dims.iter().enumerate() {
             let (wx, wh, b) = params.lstm(l);
-            lstms.push(LstmEngine::new(
+            lstms.push(LstmEngine::with_format(
                 wx,
                 wh,
                 b,
                 reuse.rx,
                 reuse.rh,
                 cfg.bayes[l],
+                precision.spec_for(l),
             ));
             samplers.push(if cfg.bayes[l] {
                 Some(BernoulliSampler::new(seed ^ (l as u64 + 1) * 0x9E37))
@@ -130,10 +168,12 @@ impl Accelerator {
             });
         }
         let (w, b) = params.dense();
-        let dense = DenseEngine::new(w, b, reuse.rd);
+        let dense =
+            DenseEngine::with_format(w, b, reuse.rd, precision.default.act);
         Self {
             cfg: cfg.clone(),
             reuse,
+            precision,
             lstms,
             dense,
             samplers,
@@ -201,11 +241,12 @@ impl Accelerator {
         let rows = row_beat.len();
         debug_assert!(rows >= 1);
         debug_assert_eq!(self.lstms[0].rows(), rows, "set_block first");
-        // Quantise each DMA'd beat once.
+        // Quantise each DMA'd beat once, at the first layer's format.
+        let in_fmt = self.lstms[0].act_format();
         self.beat_q.clear();
         for b in beats {
             debug_assert_eq!(b.len(), t * idim);
-            self.beat_q.extend(b.iter().map(|&v| Fx16::from_f32(v)));
+            self.beat_q.extend(b.iter().map(|&v| in_fmt.quantize(v)));
         }
         for e in self.lstms.iter_mut() {
             e.reset();
@@ -223,8 +264,12 @@ impl Accelerator {
         let mut bus: Vec<Fx16> = vec![Fx16::ZERO; rows * max_h];
         // Stream the beats through the encoder stack, all lanes in
         // lockstep: every gate weight row fetched by a timestep serves
-        // every lane (the blocked-kernel amortisation).
+        // every lane (the blocked-kernel amortisation). Where adjacent
+        // layers run at different formats the bus is requantised in
+        // place (a no-op on uniform designs — the bit-exactness
+        // contract at Q6.10).
         let mut width = idim;
+        let mut bus_fmt = in_fmt;
         for ti in 0..t {
             for (r, &b) in row_beat.iter().enumerate() {
                 let src = b * t * idim + ti * idim;
@@ -232,47 +277,63 @@ impl Accelerator {
                     .copy_from_slice(&self.beat_q[src..src + idim]);
             }
             width = idim;
+            bus_fmt = in_fmt;
             for l in 0..nl {
+                let lf = self.lstms[l].act_format();
+                requantize_rows(&mut bus[..rows * width], bus_fmt, lf);
                 let hd = self.lstms[l].hdim;
                 let h = self.lstms[l].step_rows(&bus, width);
                 bus[..rows * hd].copy_from_slice(h);
                 width = hd;
+                bus_fmt = lf;
             }
         }
         match self.cfg.task {
             Task::Anomaly => {
                 // Bottleneck h_T cached for T steps, per lane.
                 let emb: Vec<Fx16> = self.lstms[nl - 1].hidden().to_vec();
+                let emb_fmt = self.lstms[nl - 1].act_format();
                 let hb = self.lstms[nl - 1].hdim;
                 let dense_o = self.cfg.dense_dims().1;
+                let dense_fmt = self.dense.fmt;
                 let out_len = self.cfg.out_len();
                 let mut out = vec![0f32; rows * out_len];
                 for ti in 0..t {
                     bus[..rows * hb].copy_from_slice(&emb);
                     width = hb;
+                    bus_fmt = emb_fmt;
                     for l in nl..2 * nl {
+                        let lf = self.lstms[l].act_format();
+                        requantize_rows(&mut bus[..rows * width], bus_fmt, lf);
                         let hd = self.lstms[l].hdim;
                         let h = self.lstms[l].step_rows(&bus, width);
                         bus[..rows * hd].copy_from_slice(h);
                         width = hd;
+                        bus_fmt = lf;
                     }
                     // Temporal dense on this step's decoder output (the
                     // univariate ECG reconstruction point, as in the
                     // single-lane pass).
+                    requantize_rows(&mut bus[..rows * width], bus_fmt, dense_fmt);
                     let y = self.dense.step_rows(&bus, width);
                     for r in 0..rows {
-                        out[r * out_len + ti] = y[r * dense_o].to_f32();
+                        out[r * out_len + ti] =
+                            dense_fmt.dequantize(y[r * dense_o]);
                     }
                 }
                 out
             }
             Task::Classify => {
                 let k = self.cfg.out_len();
+                let dense_fmt = self.dense.fmt;
+                requantize_rows(&mut bus[..rows * width], bus_fmt, dense_fmt);
                 let logits = self.dense.step_rows(&bus, width);
                 // Softmax on the dequantised logits (ARM-side postprocess,
                 // as in the paper's classifier head).
-                let mut probs: Vec<f32> =
-                    logits.iter().map(|v| v.to_f32()).collect();
+                let mut probs: Vec<f32> = logits
+                    .iter()
+                    .map(|&v| dense_fmt.dequantize(v))
+                    .collect();
                 for r in 0..rows {
                     softmax_row(&mut probs[r * k..(r + 1) * k]);
                 }
@@ -494,7 +555,9 @@ impl Accelerator {
         let dense_dsps = match self.cfg.task {
             Task::Anomaly => {
                 let (f, o) = self.cfg.dense_dims();
-                ((f * o * self.cfg.seq_len).div_ceil(self.reuse.rd)) as u64
+                let pack = self.dense.fmt.macs_per_dsp() as usize;
+                ((f * o * self.cfg.seq_len).div_ceil(self.reuse.rd * pack))
+                    as u64
             }
             Task::Classify => self.dense.dsps_synthesized(),
         };
@@ -506,7 +569,8 @@ impl Accelerator {
             + dense_dsps;
         // LUT/FF/BRAM from the analytic model (fabric is not re-estimated
         // by the simulator; DSPs are the contended resource).
-        let analytic = ResourceModel::estimate(&self.cfg, &self.reuse);
+        let analytic =
+            ResourceModel::estimate_q(&self.cfg, &self.reuse, &self.precision);
         ResourceEstimate {
             dsps: dsps as f64,
             luts: analytic.luts,
@@ -518,7 +582,7 @@ impl Accelerator {
     /// Analytic estimate for the same design (the Sec. IV-B model) —
     /// compared against `resources_synthesized` for the 98% claim.
     pub fn resources_estimated(&self) -> ResourceEstimate {
-        ResourceModel::estimate(&self.cfg, &self.reuse)
+        ResourceModel::estimate_q(&self.cfg, &self.reuse, &self.precision)
     }
 }
 
@@ -895,6 +959,155 @@ mod tests {
         assert!(
             a2.resources_synthesized().dsps < a1.resources_synthesized().dsps
         );
+    }
+
+    /// Accelerator-level half of the Q6.10 contract: the parametric
+    /// constructor at `Precision::q16()` — including an explicit
+    /// all-layers-q16 override set — is bit-identical to
+    /// `Accelerator::new`, across both topologies and both kernel paths.
+    #[test]
+    fn q16_precision_bit_identical_to_legacy_constructor() {
+        use crate::fixedpoint::QuantSpec;
+        for task in [Task::Classify, Task::Anomaly] {
+            let mut cfg = match task {
+                Task::Classify => ArchConfig::new(Task::Classify, 8, 2, "YY"),
+                Task::Anomaly => ArchConfig::new(Task::Anomaly, 8, 1, "YY"),
+            };
+            cfg.seq_len = 24;
+            let params = Params::init(&cfg, &mut Rng::new(2));
+            let reuse = ReuseFactors::new(1, 1, 1);
+            let beat: Vec<f32> = (0..cfg.seq_len)
+                .map(|i| (i as f32 * 0.2).cos())
+                .collect();
+            let mut legacy = Accelerator::new(&cfg, &params, reuse, 9);
+            let want = legacy.predict_seeded(&beat, 77, 0, 6);
+
+            let mut uniform = Accelerator::with_precision(
+                &cfg,
+                &params,
+                reuse,
+                9,
+                Precision::q16(),
+            );
+            assert_eq!(
+                uniform.predict_seeded(&beat, 77, 0, 6).samples,
+                want.samples,
+                "{task:?}: uniform q16"
+            );
+
+            // Explicit per-layer overrides that all resolve to q16 must
+            // not perturb a single bit (the requantise hook is a no-op).
+            let mut overridden = Precision::q16();
+            for l in 0..cfg.num_lstm_layers() {
+                overridden = overridden.with_layer(l, QuantSpec::q16());
+            }
+            let mut explicit = Accelerator::with_precision(
+                &cfg, &params, reuse, 9, overridden,
+            );
+            assert_eq!(
+                explicit.predict_seeded(&beat, 77, 0, 6).samples,
+                want.samples,
+                "{task:?}: per-layer q16 overrides"
+            );
+
+            // The scalar-reference loop agrees at q16 too.
+            let mut scalar = Accelerator::with_precision(
+                &cfg,
+                &params,
+                reuse,
+                9,
+                Precision::q16(),
+            );
+            scalar.scalar_reference = true;
+            assert_eq!(
+                scalar.predict_seeded(&beat, 77, 0, 6).samples,
+                want.samples,
+                "{task:?}: scalar reference at q16"
+            );
+        }
+    }
+
+    /// Narrow uniform precisions still track the float model, with a
+    /// coarser error bound — the accuracy axis the DSE measures.
+    #[test]
+    fn narrow_precisions_track_float_loosely() {
+        for (prec, tol) in [
+            (Precision::q12(), 0.1f32),
+            (Precision::q8(), 0.3),
+        ] {
+            let cfg = short_cfg(Task::Classify);
+            let mut rng = Rng::new(4);
+            let model = Model::init(cfg.clone(), &mut rng);
+            let mut acc = Accelerator::with_precision(
+                &cfg,
+                &model.params,
+                ReuseFactors::new(1, 1, 1),
+                3,
+                prec.clone(),
+            );
+            let beat: Vec<f32> = (0..cfg.seq_len)
+                .map(|i| (i as f32 * 0.37).sin())
+                .collect();
+            let fx = acc.run_pass(&beat);
+            let fl = model.forward(&beat, 1, &Masks::ones(&cfg, 1));
+            let rmse = crate::metrics::rmse(&fx, &fl);
+            assert!(
+                rmse < tol,
+                "{}: drifted too far from float, rmse {rmse}",
+                prec.name()
+            );
+        }
+    }
+
+    /// Per-layer mixed precision runs end to end: deterministic, valid
+    /// probabilities, and actually different bits from the uniform q16
+    /// design (the override is live).
+    #[test]
+    fn mixed_per_layer_precision_runs_and_differs() {
+        use crate::fixedpoint::QuantSpec;
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.2).cos()).collect();
+        let prec = Precision::q16().with_layer(1, QuantSpec::q8());
+        let mut mixed =
+            Accelerator::with_precision(&cfg, &params, reuse, 9, prec);
+        let a = mixed.predict_seeded(&beat, 5, 0, 4);
+        let b = mixed.predict_seeded(&beat, 5, 0, 4);
+        assert_eq!(a.samples, b.samples, "mixed precision is deterministic");
+        for row in a.samples.chunks_exact(a.out_len) {
+            assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+        }
+        let mut q16 = Accelerator::new(&cfg, &params, reuse, 9);
+        let w = q16.predict_seeded(&beat, 5, 0, 4);
+        assert_ne!(
+            a.samples, w.samples,
+            "a q8 layer override must change the computed bits"
+        );
+    }
+
+    /// Narrower precision shrinks the synthesised DSP footprint (the
+    /// resource axis the DSE trades against accuracy).
+    #[test]
+    fn narrower_precision_uses_fewer_resources() {
+        let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        let reuse = ReuseFactors::new(2, 1, 1);
+        let q16 =
+            Accelerator::new(&cfg, &params, reuse, 0).resources_synthesized();
+        let q8 = Accelerator::with_precision(
+            &cfg,
+            &params,
+            reuse,
+            0,
+            Precision::q8(),
+        )
+        .resources_synthesized();
+        assert!(q8.dsps < q16.dsps, "{} !< {}", q8.dsps, q16.dsps);
+        assert!(q8.luts < q16.luts);
+        assert!(q8.brams < q16.brams);
     }
 
     #[test]

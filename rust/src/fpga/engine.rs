@@ -1,6 +1,6 @@
 //! Functional fixed-point engines: MVM units, the LSTM engine (4 gate
-//! MVM pairs + LUT activations + 32-bit tail) and the dense engine —
-//! the hardware blocks of Fig. 2.
+//! MVM pairs + LUT activations + widened cell tail) and the dense
+//! engine — the hardware blocks of Fig. 2.
 //!
 //! All MVM inner loops run on the shared blocked kernel layer
 //! ([`crate::kernels`]): an engine can hold `rows` independent sample
@@ -10,34 +10,55 @@
 //! classic single-lane API (`step`, `set_masks`, `reset`) is the
 //! `rows == 1` special case and is bit-identical to the pre-kernel
 //! implementation.
+//!
+//! Engines are precision-parametric ([`crate::fixedpoint::QuantSpec`],
+//! `docs/quantization.md`): the `new` constructors build the paper's
+//! Q6.10/Q12.20 instance (bit-identical to the pre-refactor engines —
+//! see the legacy-oracle test below), `with_format` opens the 8/12-bit
+//! activation paths the DSE searches over.
 
 use crate::config::GATES;
-use crate::fixedpoint::{ActLut, Fx16, Fx32, MacAcc};
+use crate::fixedpoint::{ActLut, Fx16, Fx32, MacAcc, QFormat, QuantSpec};
 use crate::kernels::{self, Kernel};
 use crate::tensor::Tensor;
 
 /// One matrix-vector-multiply engine with a reuse factor: `in_dim` x
 /// `out_dim` quantised weights; `reuse` time-multiplexes each physical
 /// multiplier, so the unit has ceil(in*out/reuse) DSP multipliers and an
-/// initiation interval of `reuse` cycles.
+/// initiation interval of `reuse` cycles (divided by the format's DSP
+/// packing — two ≤ 8-bit MACs share one slice).
 pub struct MvmUnit {
     pub in_dim: usize,
     pub out_dim: usize,
     pub reuse: usize,
+    /// Activation/weight format the unit is quantised in.
+    pub fmt: QFormat,
     /// Row-major `[in_dim][out_dim]` quantised weights (on-chip).
     pub weights: Vec<Fx16>,
 }
 
 impl MvmUnit {
-    /// Quantise a float weight matrix `[in_dim][out_dim]`.
+    /// Quantise a float weight matrix `[in_dim][out_dim]` at Q6.10.
     pub fn new(weights: &[f32], in_dim: usize, out_dim: usize, reuse: usize) -> Self {
+        Self::with_format(weights, in_dim, out_dim, reuse, QFormat::Q16_ACT)
+    }
+
+    /// Quantise a float weight matrix in an explicit format.
+    pub fn with_format(
+        weights: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        reuse: usize,
+        fmt: QFormat,
+    ) -> Self {
         assert_eq!(weights.len(), in_dim * out_dim);
         assert!(reuse >= 1);
         Self {
             in_dim,
             out_dim,
             reuse,
-            weights: weights.iter().map(|&w| Fx16::from_f32(w)).collect(),
+            fmt,
+            weights: weights.iter().map(|&w| fmt.quantize(w)).collect(),
         }
     }
 
@@ -127,13 +148,14 @@ impl MvmUnit {
 
     /// DSPs as synthesis would allocate them: units that shrink below 4
     /// multipliers get folded into fabric logic by HLS (the paper adds 5%
-    /// DSP slack for exactly this effect).
+    /// DSP slack for exactly this effect); at ≤ 8-bit operands two
+    /// multipliers pack into one DSP48 slice.
     pub fn dsps_synthesized(&self) -> u64 {
         let m = self.multipliers();
         if m < 4 {
             0
         } else {
-            m
+            m.div_ceil(self.fmt.macs_per_dsp())
         }
     }
 
@@ -149,7 +171,7 @@ fn div_ceil(a: usize, b: usize) -> usize {
 }
 
 /// The full LSTM engine of Fig. 2: DX mask gating, 4 gate MVM pairs,
-/// bias add, BRAM-LUT activations, 32-bit cell tail.
+/// bias add, BRAM-LUT activations, widened cell tail.
 pub struct LstmEngine {
     pub idim: usize,
     pub hdim: usize,
@@ -161,6 +183,8 @@ pub struct LstmEngine {
     pub bias: Vec<Fx16>,
     /// Whether this layer has MCD enabled (Bernoulli sampler + DX present).
     pub bayesian: bool,
+    /// Activation + cell formats this engine is quantised in.
+    pub spec: QuantSpec,
     sigmoid: ActLut,
     tanh: ActLut,
     /// Sample lanes currently configured (MC samples x batched beats).
@@ -179,7 +203,7 @@ pub struct LstmEngine {
 
 impl LstmEngine {
     /// Build from float parameters in the crate ABI: wx `[4,I,H]`,
-    /// wh `[4,H,H]`, b `[4,H]`.
+    /// wh `[4,H,H]`, b `[4,H]` — the paper's Q6.10/Q12.20 instance.
     pub fn new(
         wx: &Tensor,
         wh: &Tensor,
@@ -188,25 +212,41 @@ impl LstmEngine {
         rh: usize,
         bayesian: bool,
     ) -> Self {
+        Self::with_format(wx, wh, b, rx, rh, bayesian, QuantSpec::q16())
+    }
+
+    /// Build at an explicit activation/cell format pair.
+    #[allow(clippy::too_many_arguments)]
+    pub fn with_format(
+        wx: &Tensor,
+        wh: &Tensor,
+        b: &Tensor,
+        rx: usize,
+        rh: usize,
+        bayesian: bool,
+        spec: QuantSpec,
+    ) -> Self {
         let idim = wx.shape[1];
         let hdim = wx.shape[2];
         let mvm_x = (0..GATES)
             .map(|g| {
-                MvmUnit::new(
+                MvmUnit::with_format(
                     &wx.data[g * idim * hdim..(g + 1) * idim * hdim],
                     idim,
                     hdim,
                     rx,
+                    spec.act,
                 )
             })
             .collect();
         let mvm_h = (0..GATES)
             .map(|g| {
-                MvmUnit::new(
+                MvmUnit::with_format(
                     &wh.data[g * hdim * hdim..(g + 1) * hdim * hdim],
                     hdim,
                     hdim,
                     rh,
+                    spec.act,
                 )
             })
             .collect();
@@ -215,10 +255,11 @@ impl LstmEngine {
             hdim,
             mvm_x,
             mvm_h,
-            bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            bias: b.data.iter().map(|&v| spec.act.quantize(v)).collect(),
             bayesian,
-            sigmoid: ActLut::sigmoid(),
-            tanh: ActLut::tanh(),
+            spec,
+            sigmoid: ActLut::sigmoid_fmt(spec.act),
+            tanh: ActLut::tanh_fmt(spec.act),
             rows: 1,
             zx: vec![Fx16::ONE; GATES * idim],
             zh: vec![Fx16::ONE; GATES * hdim],
@@ -227,6 +268,11 @@ impl LstmEngine {
             acc: vec![MacAcc::new(); hdim],
             pre: vec![Fx16::ZERO; GATES * hdim],
         }
+    }
+
+    /// The format lane data enters/leaves this engine in.
+    pub fn act_format(&self) -> QFormat {
+        self.spec.act
     }
 
     /// Sample lanes currently configured.
@@ -318,12 +364,15 @@ impl LstmEngine {
             );
             for r in 0..rows {
                 for k in 0..hdim {
-                    self.pre[(r * GATES + g) * hdim + k] =
-                        self.acc[r * hdim + k].finish(self.bias[g * hdim + k]);
+                    self.pre[(r * GATES + g) * hdim + k] = self.acc
+                        [r * hdim + k]
+                        .finish_fmt(self.bias[g * hdim + k], self.spec.act);
                 }
             }
         }
-        // Tail: activations from BRAM LUTs, cell path in 32-bit.
+        // Tail: activations from BRAM LUTs, cell path widened
+        // (Q12.20 at the paper's q16 instance).
+        let spec = self.spec;
         for r in 0..rows {
             let pb = r * GATES * hdim;
             for k in 0..hdim {
@@ -332,11 +381,12 @@ impl LstmEngine {
                 let g_g = self.tanh.eval(self.pre[pb + 2 * hdim + k]);
                 let o_g = self.sigmoid.eval(self.pre[pb + 3 * hdim + k]);
                 // c = f*c + i*g  (f*c on the 2-DSP 16x32 path).
-                let fc = self.c[r * hdim + k].mul_fx16(f_g);
-                let ig = i_g.saturating_mul(g_g).widen();
-                self.c[r * hdim + k] = fc.saturating_add(ig);
-                let tanh_c = self.tanh.eval(self.c[r * hdim + k].narrow());
-                self.h[r * hdim + k] = o_g.saturating_mul(tanh_c);
+                let fc = spec.cell_mul_act(self.c[r * hdim + k], f_g);
+                let ig = spec.widen(spec.act.sat_mul(i_g, g_g));
+                self.c[r * hdim + k] = spec.cell_add(fc, ig);
+                let tanh_c =
+                    self.tanh.eval(spec.narrow(self.c[r * hdim + k]));
+                self.h[r * hdim + k] = spec.act.sat_mul(o_g, tanh_c);
             }
         }
         &self.h
@@ -386,6 +436,8 @@ impl LstmEngine {
 pub struct DenseEngine {
     pub mvm: MvmUnit,
     pub bias: Vec<Fx16>,
+    /// Activation/weight format (no cell path in the dense head).
+    pub fmt: QFormat,
     rows: usize,
     acc: Vec<MacAcc>,
     out: Vec<Fx16>,
@@ -393,10 +445,20 @@ pub struct DenseEngine {
 
 impl DenseEngine {
     pub fn new(w: &Tensor, b: &Tensor, rd: usize) -> Self {
+        Self::with_format(w, b, rd, QFormat::Q16_ACT)
+    }
+
+    pub fn with_format(
+        w: &Tensor,
+        b: &Tensor,
+        rd: usize,
+        fmt: QFormat,
+    ) -> Self {
         let (f, o) = (w.shape[0], w.shape[1]);
         Self {
-            mvm: MvmUnit::new(&w.data, f, o, rd),
-            bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            mvm: MvmUnit::with_format(&w.data, f, o, rd, fmt),
+            bias: b.data.iter().map(|&v| fmt.quantize(v)).collect(),
+            fmt,
             rows: 1,
             acc: vec![MacAcc::new(); o],
             out: vec![Fx16::ZERO; o],
@@ -424,7 +486,7 @@ impl DenseEngine {
         for r in 0..self.rows {
             for k in 0..o {
                 self.out[r * o + k] =
-                    self.acc[r * o + k].finish(self.bias[k]);
+                    self.acc[r * o + k].finish_fmt(self.bias[k], self.fmt);
             }
         }
         &self.out
@@ -642,6 +704,190 @@ mod tests {
                 yr.iter().map(|v| v.0).collect::<Vec<_>>()
             );
         }
+    }
+
+    /// Engine-level half of the Q6.10 bit-exactness contract: the
+    /// parametric engine at `QuantSpec::q16()` must reproduce, bit for
+    /// bit, a from-scratch reference step written entirely in the frozen
+    /// legacy `Fx16`/`Fx32`/`MacAcc::finish` ops (the pre-refactor
+    /// implementation).
+    #[test]
+    fn q16_engine_matches_legacy_op_oracle_bitwise() {
+        let mut rng = Rng::new(29);
+        let (idim, hdim, steps) = (3, 5, 8);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let zx: Vec<f32> = (0..GATES * idim)
+            .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+            .collect();
+        let zh: Vec<f32> = (0..GATES * hdim)
+            .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+            .collect();
+        let xs: Vec<Fx16> = (0..steps * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+
+        // Parametric engine at the q16 spec.
+        let mut engine =
+            LstmEngine::with_format(&wx, &wh, &b, 1, 1, true, QuantSpec::q16());
+        engine.set_masks(&zx, &zh);
+
+        // Legacy oracle: quantise with Fx16::from_f32, MAC in ascending
+        // weight-row order, finish with MacAcc::finish, tail with the
+        // frozen mul_fx16 / widen / narrow / saturating_mul ops and the
+        // legacy Q6.10 LUTs.
+        let sigmoid = ActLut::sigmoid();
+        let tanh = ActLut::tanh();
+        let qw = |t: &Tensor| -> Vec<Fx16> {
+            t.data.iter().map(|&v| Fx16::from_f32(v)).collect()
+        };
+        let (qwx, qwh, qb) = (qw(&wx), qw(&wh), qw(&b));
+        let mut h = vec![Fx16::ZERO; hdim];
+        let mut c = vec![Fx32::ZERO; hdim];
+        for t in 0..steps {
+            let x = &xs[t * idim..(t + 1) * idim];
+            let mut pre = vec![Fx16::ZERO; GATES * hdim];
+            for g in 0..GATES {
+                let mut acc = vec![MacAcc::new(); hdim];
+                for (i, &xi) in x.iter().enumerate() {
+                    if xi.0 == 0 || zx[g * idim + i] == 0.0 {
+                        continue;
+                    }
+                    for k in 0..hdim {
+                        acc[k].mac(xi, qwx[(g * idim + i) * hdim + k]);
+                    }
+                }
+                for (j, &hj) in h.iter().enumerate() {
+                    if hj.0 == 0 || zh[g * hdim + j] == 0.0 {
+                        continue;
+                    }
+                    for k in 0..hdim {
+                        acc[k].mac(hj, qwh[(g * hdim + j) * hdim + k]);
+                    }
+                }
+                for k in 0..hdim {
+                    pre[g * hdim + k] =
+                        acc[k].finish(qb[g * hdim + k]);
+                }
+            }
+            for k in 0..hdim {
+                let i_g = sigmoid.eval(pre[k]);
+                let f_g = sigmoid.eval(pre[hdim + k]);
+                let g_g = tanh.eval(pre[2 * hdim + k]);
+                let o_g = sigmoid.eval(pre[3 * hdim + k]);
+                let fc = c[k].mul_fx16(f_g);
+                let ig = i_g.saturating_mul(g_g).widen();
+                c[k] = fc.saturating_add(ig);
+                let tanh_c = tanh.eval(c[k].narrow());
+                h[k] = o_g.saturating_mul(tanh_c);
+            }
+            let got = engine.step(x);
+            assert_eq!(
+                got.iter().map(|v| v.0).collect::<Vec<_>>(),
+                h.iter().map(|v| v.0).collect::<Vec<_>>(),
+                "step {t}: parametric q16 engine drifted from the \
+                 legacy-op oracle"
+            );
+        }
+    }
+
+    /// Narrow formats still track the float cell, just with a coarser
+    /// error bound — the accuracy/resource trade the DSE measures.
+    #[test]
+    fn narrow_format_engines_track_float_loosely() {
+        let mut rng = Rng::new(17);
+        let (idim, hdim) = (3, 6);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let x: Vec<f32> =
+            (0..idim).map(|_| rng.normal() as f32 * 0.8).collect();
+
+        use crate::nn::lstm::{forward, LstmLayer};
+        let layer = LstmLayer { wx: &wx, wh: &wh, b: &b };
+        let zx = Tensor::ones(&[1, GATES, idim]);
+        let zh = Tensor::ones(&[1, GATES, hdim]);
+        let cache = forward(&layer, &x, 1, 1, &zx, &zh);
+
+        for (spec, tol) in [
+            (QuantSpec::q16(), 0.03f32),
+            (QuantSpec::q12(), 0.05),
+            (QuantSpec::q8(), 0.2),
+        ] {
+            let mut e =
+                LstmEngine::with_format(&wx, &wh, &b, 1, 1, false, spec);
+            let xq: Vec<Fx16> =
+                x.iter().map(|&v| spec.act.quantize(v)).collect();
+            let h = e.step(&xq).to_vec();
+            for k in 0..hdim {
+                let got = spec.act.dequantize(h[k]);
+                let want = cache.last_h()[k];
+                assert!(
+                    (got - want).abs() < tol,
+                    "{} h[{k}]: fx {got} vs float {want}",
+                    spec.name()
+                );
+            }
+        }
+    }
+
+    /// Blocked sample lanes stay bit-identical to single-lane engines at
+    /// a narrow format too (the kernel contract is format-agnostic).
+    #[test]
+    fn q8_blocked_lanes_match_single_lane_bitwise() {
+        let mut rng = Rng::new(23);
+        let (idim, hdim, rows, steps) = (2, 4, 3, 5);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let spec = QuantSpec::q8();
+        let xs: Vec<Fx16> = (0..steps * rows * idim)
+            .map(|_| spec.act.quantize(rng.normal() as f32))
+            .collect();
+        let mut blocked =
+            LstmEngine::with_format(&wx, &wh, &b, 1, 1, false, spec);
+        blocked.set_rows(rows);
+        let mut h_blocked = Vec::new();
+        for t in 0..steps {
+            let frame = &xs[t * rows * idim..(t + 1) * rows * idim];
+            h_blocked = blocked.step_rows(frame, idim).to_vec();
+        }
+        for r in 0..rows {
+            let mut single =
+                LstmEngine::with_format(&wx, &wh, &b, 1, 1, false, spec);
+            let mut h_single = Vec::new();
+            for t in 0..steps {
+                let x = &xs[(t * rows + r) * idim..(t * rows + r + 1) * idim];
+                h_single = single.step(x).to_vec();
+            }
+            assert_eq!(
+                h_blocked[r * hdim..(r + 1) * hdim]
+                    .iter()
+                    .map(|v| v.0)
+                    .collect::<Vec<_>>(),
+                h_single.iter().map(|v| v.0).collect::<Vec<_>>(),
+                "q8 lane {r}"
+            );
+        }
+    }
+
+    #[test]
+    fn q8_mvm_packs_two_macs_per_dsp() {
+        let w = Tensor::zeros(&[8, 8]);
+        let q16 = MvmUnit::with_format(&w.data, 8, 8, 1, QFormat::Q16_ACT);
+        let q8 = MvmUnit::with_format(&w.data, 8, 8, 1, QFormat::Q8_ACT);
+        assert_eq!(q16.dsps_synthesized(), 64);
+        assert_eq!(q8.dsps_synthesized(), 32, "INT8 packing halves DSPs");
+        // Folding below 4 multipliers still applies.
+        let tiny = MvmUnit::with_format(
+            &Tensor::zeros(&[1, 3]).data,
+            1,
+            3,
+            1,
+            QFormat::Q8_ACT,
+        );
+        assert_eq!(tiny.dsps_synthesized(), 0);
     }
 
     #[test]

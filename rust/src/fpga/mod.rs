@@ -3,10 +3,12 @@
 //!
 //! Two coupled views of the same design:
 //!
-//! * **functional** ([`engine`], [`accel`]): 16-bit fixed-point numerics —
-//!   quantised on-chip weights, DX mask gating, MVM engines with MAC
-//!   accumulators, BRAM-LUT activations, 32-bit cell path, LFSR Bernoulli
-//!   samplers. This produces the *quantised model outputs* evaluated in
+//! * **functional** ([`engine`], [`accel`]): parametric fixed-point
+//!   numerics (8/12/16-bit activation paths, the paper's Q6.10 as the
+//!   bit-exact default — `docs/quantization.md`) — quantised on-chip
+//!   weights, DX mask gating, MVM engines with MAC accumulators,
+//!   BRAM-LUT activations, widened cell path, LFSR Bernoulli samplers.
+//!   This produces the *quantised model outputs* evaluated in
 //!   Tables I/II.
 //! * **timing** ([`pipeline`]): a cycle-accurate event simulation of the
 //!   II-balanced layer pipeline with timestep pipelining (Fig. 5) and

@@ -16,6 +16,14 @@
 //! pipeline fill depth: the MVM adder tree, the activation LUT read and
 //! the 3-stage tail.
 //!
+//! Precision does NOT enter here directly: at a fixed reuse R the II is
+//! R regardless of operand width — INT8 DSP packing halves the *slice
+//! count* (the resource model's `estimate_q`), and the constraint
+//! solver (`dse::space::reuse_search_q`) converts that freed budget
+//! into a lower feasible R, which is where narrow formats gain latency
+//! (`docs/quantization.md`). Crediting both halved DSPs and halved II
+//! at the same R would double-count the packing.
+//!
 //! Multi-sample / multi-beat streaming: consecutive MC samples and batch
 //! elements follow each other through the same pipeline at the sample
 //! interval II*T (sample-wise pipelining, Fig. 4/5), so a batch of B
@@ -40,7 +48,9 @@ impl LatencyModel {
     const ACT_LUT_CYCLES: u64 = 2;
     const TAIL_CYCLES: u64 = 3;
 
-    /// Timing of one LSTM layer.
+    /// Timing of one LSTM layer. Format-independent at fixed reuse —
+    /// see the module docs for how precision reaches latency (through
+    /// the constraint-solved reuse, not the II formula).
     pub fn lstm_timing(
         idim: usize,
         hdim: usize,
@@ -179,6 +189,29 @@ mod tests {
             (ms - 25.23).abs() / 25.23 < 0.05,
             "model {ms} ms vs paper 25.23 ms"
         );
+    }
+
+    /// Precision reaches latency through the constraint-solved reuse
+    /// (INT8 packing frees DSPs; `reuse_search_q` spends them on lower
+    /// R), NOT through the II formula — at a fixed reuse the timing is
+    /// format-independent by design (crediting both halved DSPs and
+    /// halved II would double-count the packing).
+    #[test]
+    fn precision_gains_latency_via_reuse_not_ii() {
+        use crate::dse::space::reuse_search_q;
+        use crate::fixedpoint::Precision;
+        // DSP-constrained net: II > 1 at q16.
+        let cfg = ArchConfig::new(Task::Classify, 32, 3, "YYY");
+        let r16 = reuse_search_q(&cfg, &ZC706, &Precision::q16()).unwrap();
+        let r8 = reuse_search_q(&cfg, &ZC706, &Precision::q8()).unwrap();
+        let t16 = LatencyModel::design_timing(&cfg, &r16);
+        let t8 = LatencyModel::design_timing(&cfg, &r8);
+        assert!(t16.ii > 1, "premise: DSP-constrained at 16 bit");
+        assert!(t8.ii < t16.ii, "packed DSPs buy a lower feasible reuse");
+        let ms16 =
+            LatencyModel::batch_ms(&cfg, &r16, 50, 30, ZC706.clock_hz);
+        let ms8 = LatencyModel::batch_ms(&cfg, &r8, 50, 30, ZC706.clock_hz);
+        assert!(ms8 < 0.75 * ms16, "{ms8} !< 0.75 * {ms16}");
     }
 
     #[test]

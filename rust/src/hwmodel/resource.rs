@@ -1,23 +1,30 @@
-//! Resource model (paper Sec. IV-B).
+//! Resource model (paper Sec. IV-B), precision-aware.
 //!
 //! DSPs are the bottleneck resource. For LSTM layer i with input I_i,
-//! hidden H_i and reuse factors (R_x, R_h):
+//! hidden H_i, reuse factors (R_x, R_h) and per-layer DSP packing P_i
+//! (two ≤ 8-bit MACs per DSP48 slice, one otherwise — the INT8 packing
+//! Fan et al., arXiv:2105.09163, exploit):
 //!
 //! ```text
-//! DSP_i      = 4*I_i*H_i / R_x  +  4*H_i^2 / R_h  +  4*H_i
+//! DSP_i      = 4*I_i*H_i / (R_x*P_i)  +  4*H_i^2 / (R_h*P_i)  +  4*H_i
 //! DSP_design = sum_i DSP_i + DSP_d   <=   DSP_total
-//! DSP_d      = H_L*O*T / R_d   (autoencoder: temporal dense)
-//!            = H_L*O   / R_d   (classifier)
+//! DSP_d      = H_L*O*T / (R_d*P_d)   (autoencoder: temporal dense)
+//!            = H_L*O   / (R_d*P_d)   (classifier)
 //! ```
 //!
 //! The `4*H_i` term is the LSTM tail: `f_t * c_{t-1}` needs two cascaded
-//! Xilinx DSPs per multiplier on the 32-bit c path plus `i_t * g_t` and
-//! `o_t * tanh(c_t)`. The paper adds 5% slack to DSP_total because HLS
-//! replaces some multipliers with fabric logic.
+//! Xilinx DSPs per multiplier on the widened c path plus `i_t * g_t` and
+//! `o_t * tanh(c_t)`; the cell path stays wide at every activation
+//! format, so the tail does not scale with precision. The paper adds 5%
+//! slack to DSP_total because HLS replaces some multipliers with fabric
+//! logic.
 //!
-//! LUT/FF/BRAM estimators are calibrated against Table III.
+//! LUT/FF/BRAM estimators are calibrated against Table III at the
+//! paper's 16-bit instance; on-chip weight fabric and the activation
+//! tables scale with the word width (`docs/quantization.md`).
 
 use crate::config::{ArchConfig, Task};
+use crate::fixedpoint::Precision;
 use super::Platform;
 
 /// Reuse factors R = {R_x, R_h, R_d} (Sec. IV-A: hardware parameters).
@@ -70,56 +77,105 @@ impl ResourceEstimate {
 pub struct ResourceModel;
 
 impl ResourceModel {
-    /// DSPs of LSTM layer i (continuous, as in the paper's formula).
+    /// DSPs of LSTM layer i (continuous, as in the paper's formula) at
+    /// the 16-bit reference precision.
     pub fn lstm_dsps(idim: usize, hdim: usize, r: &ReuseFactors) -> f64 {
-        let mvm_x = 4.0 * idim as f64 * hdim as f64 / r.rx as f64;
-        let mvm_h = 4.0 * (hdim * hdim) as f64 / r.rh as f64;
+        Self::lstm_dsps_packed(idim, hdim, r, 1)
+    }
+
+    /// DSPs of LSTM layer i with `pack` MACs per DSP slice (2 at ≤ 8-bit
+    /// operands). The 4H tail runs on the widened cell path and does not
+    /// pack.
+    pub fn lstm_dsps_packed(
+        idim: usize,
+        hdim: usize,
+        r: &ReuseFactors,
+        pack: u64,
+    ) -> f64 {
+        let pack = pack as f64;
+        let mvm_x = 4.0 * idim as f64 * hdim as f64 / (r.rx as f64 * pack);
+        let mvm_h = 4.0 * (hdim * hdim) as f64 / (r.rh as f64 * pack);
         let tail = 4.0 * hdim as f64;
         mvm_x + mvm_h + tail
     }
 
-    /// DSPs of the final dense layer.
+    /// DSPs of the final dense layer at the 16-bit reference precision.
     pub fn dense_dsps(cfg: &ArchConfig, r: &ReuseFactors) -> f64 {
+        Self::dense_dsps_packed(cfg, r, 1)
+    }
+
+    /// DSPs of the final dense layer with `pack` MACs per DSP slice.
+    pub fn dense_dsps_packed(
+        cfg: &ArchConfig,
+        r: &ReuseFactors,
+        pack: u64,
+    ) -> f64 {
         let (f, o) = cfg.dense_dims();
+        let div = r.rd as f64 * pack as f64;
         match cfg.task {
             // Temporal dense applies over all T steps in the pipeline.
-            Task::Anomaly => {
-                (f * o * cfg.seq_len) as f64 / r.rd as f64
-            }
-            Task::Classify => (f * o) as f64 / r.rd as f64,
+            Task::Anomaly => (f * o * cfg.seq_len) as f64 / div,
+            Task::Classify => (f * o) as f64 / div,
         }
     }
 
-    /// Whole-design estimate (Sec. IV-B formulas + Table III-calibrated
-    /// LUT/FF/BRAM coefficients).
+    /// Whole-design estimate at the paper's 16-bit precision
+    /// (numerically identical to `estimate_q` with `Precision::q16()`).
     pub fn estimate(cfg: &ArchConfig, r: &ReuseFactors) -> ResourceEstimate {
+        Self::estimate_q(cfg, r, &Precision::q16())
+    }
+
+    /// Whole-design estimate (Sec. IV-B formulas + Table III-calibrated
+    /// LUT/FF/BRAM coefficients) at an explicit precision: MVM DSPs pack
+    /// at ≤ 8 bit, weight-register fabric and the activation tables /
+    /// stream buffers scale with the activation word width.
+    pub fn estimate_q(
+        cfg: &ArchConfig,
+        r: &ReuseFactors,
+        precision: &Precision,
+    ) -> ResourceEstimate {
         let mut dsps = 0.0;
         let mut luts = 8_000.0; // AXI/DMA + control plumbing
         let mut ffs = 10_000.0;
         let mut brams = 4.0; // I/O FIFOs
         for (l, (idim, hdim)) in cfg.lstm_dims().iter().enumerate() {
-            dsps += Self::lstm_dsps(*idim, *hdim, r);
+            let spec = precision.spec_for(l);
+            let bits = spec.act.total_bits as f64;
+            let scale = bits / 16.0;
+            dsps += Self::lstm_dsps_packed(
+                *idim,
+                *hdim,
+                r,
+                spec.act.macs_per_dsp(),
+            );
             // On-chip weights become registers/LUTs when synthesised
             // (Sec. III-A: "weights and biases are mapped on-chip ...
-            // into registers"), so LUT/FF scale with weight count and
-            // with the unrolled MVM adder trees.
+            // into registers"), so LUT/FF scale with weight count, the
+            // unrolled MVM adder trees — and the word width.
             let weights = (4 * idim * hdim + 4 * hdim * hdim + 4 * hdim) as f64;
-            luts += weights * 9.5;
-            ffs += weights * 10.0;
+            luts += weights * 9.5 * scale;
+            ffs += weights * 10.0 * scale;
             // Activation LUTs: 2 BRAM-backed tables (sigmoid + tanh) per
-            // engine, plus h/c stream buffers per timestep pipe stage.
-            brams += 6.0 + (*hdim as f64 / 16.0).ceil() * 2.0;
-            // Bernoulli sampler (3 LFSRs + SIPO + FIFO) per Bayesian layer.
+            // engine — word width scales their footprint — plus h/c
+            // stream buffers per timestep pipe stage.
+            brams += 2.0 + 4.0 * scale + (*hdim as f64 * bits / 256.0).ceil() * 2.0;
+            // Bernoulli sampler (3 LFSRs + SIPO + FIFO) per Bayesian
+            // layer; mask bits are width-independent (1 bit per DX).
             if cfg.bayes[l] {
                 luts += 220.0;
                 ffs += 180.0;
                 brams += 1.0; // mask FIFO
             }
         }
-        dsps += Self::dense_dsps(cfg, r);
+        let dense_bits = precision.default.act.total_bits as f64;
+        dsps += Self::dense_dsps_packed(
+            cfg,
+            r,
+            precision.default.act.macs_per_dsp(),
+        );
         let (f, o) = cfg.dense_dims();
-        luts += (f * o) as f64 * 9.5;
-        ffs += (f * o) as f64 * 10.0;
+        luts += (f * o) as f64 * 9.5 * (dense_bits / 16.0);
+        ffs += (f * o) as f64 * 10.0 * (dense_bits / 16.0);
         ResourceEstimate { dsps, luts, ffs, brams }
     }
 }
@@ -180,6 +236,57 @@ mod tests {
         assert!(eb.luts > ep.luts);
         assert!(eb.brams > ep.brams);
         assert_eq!(eb.dsps, ep.dsps, "samplers use no DSPs");
+    }
+
+    #[test]
+    fn q16_estimate_identical_to_legacy_wrapper() {
+        // `estimate` routes through `estimate_q(Precision::q16())`; the
+        // numbers must be exactly the Table III-calibrated ones (scale
+        // factors of 1.0 are exact in f64).
+        let cfg = ArchConfig::new(Task::Classify, 8, 3, "YNY");
+        let r = ReuseFactors::new(12, 1, 1);
+        let a = ResourceModel::estimate(&cfg, &r);
+        let b = ResourceModel::estimate_q(&cfg, &r, &Precision::q16());
+        assert_eq!(a, b);
+        // And the hand-checked classifier point still holds.
+        assert!(a.fits(&ZC706));
+    }
+
+    #[test]
+    fn narrower_precision_costs_less_everywhere() {
+        let cfg = ArchConfig::new(Task::Classify, 16, 2, "YY");
+        let r = ReuseFactors::new(4, 2, 1);
+        let q16 = ResourceModel::estimate_q(&cfg, &r, &Precision::q16());
+        let q12 = ResourceModel::estimate_q(&cfg, &r, &Precision::q12());
+        let q8 = ResourceModel::estimate_q(&cfg, &r, &Precision::q8());
+        // 12-bit: same DSP packing, narrower fabric/BRAM.
+        assert_eq!(q12.dsps, q16.dsps, "12-bit MACs still use a full DSP");
+        assert!(q12.luts < q16.luts);
+        assert!(q12.brams < q16.brams);
+        // 8-bit: packed MVMs — only the reuse-independent 4H tail and
+        // the dense head keep their full cost.
+        assert!(q8.dsps < q16.dsps);
+        assert!(q8.luts < q12.luts);
+        // Tail is precision-independent: DSPs never drop below 4H/layer.
+        assert!(q8.dsps >= (4 * 16 * 2) as f64);
+    }
+
+    #[test]
+    fn per_layer_override_changes_only_that_layer() {
+        use crate::fixedpoint::QuantSpec;
+        let cfg = ArchConfig::new(Task::Classify, 16, 2, "YY");
+        let r = ReuseFactors::new(4, 2, 1);
+        let uniform = ResourceModel::estimate_q(&cfg, &r, &Precision::q16());
+        let mixed = ResourceModel::estimate_q(
+            &cfg,
+            &r,
+            &Precision::q16().with_layer(1, QuantSpec::q8()),
+        );
+        assert!(mixed.dsps < uniform.dsps);
+        // Exactly layer 1's packable MVM DSPs are halved.
+        let saved = ResourceModel::lstm_dsps_packed(16, 16, &r, 1)
+            - ResourceModel::lstm_dsps_packed(16, 16, &r, 2);
+        assert!((uniform.dsps - mixed.dsps - saved).abs() < 1e-9);
     }
 
     #[test]

@@ -359,6 +359,60 @@ mod tests {
         }
     }
 
+    /// The kernel layer is format-agnostic — it MACs raw lattice points
+    /// into wide accumulators and never shifts — so the blocked/scalar
+    /// bit-identity contract holds for every quantisation format the
+    /// substrate supports (`docs/quantization.md`). This is the
+    /// kernel-level leg of the ISSUE 4 acceptance.
+    #[test]
+    fn blocked_matches_scalar_for_every_qformat() {
+        use crate::fixedpoint::QFormat;
+        let scalar = ScalarKernel;
+        for fmt in [QFormat::Q8_ACT, QFormat::Q12_ACT, QFormat::Q16_ACT] {
+            let mut rng = Rng::new(fmt.total_bits as u64);
+            for trial in 0..20 {
+                let in_dim = 1 + rng.below(16);
+                let out_dim = 1 + rng.below(16);
+                let rows = 1 + rng.below(8);
+                let blocked = BlockedKernel { s_block: 1 + rng.below(6) };
+                let range = fmt.max_value() as f64 * 0.9;
+                let w: Vec<Fx16> = (0..in_dim * out_dim)
+                    .map(|_| fmt.quantize(rng.uniform_in(-range, range) as f32))
+                    .collect();
+                let x: Vec<Fx16> = (0..rows * in_dim)
+                    .map(|_| {
+                        if rng.bernoulli(0.2) {
+                            Fx16::ZERO
+                        } else {
+                            fmt.quantize(rng.uniform_in(-range, range) as f32)
+                        }
+                    })
+                    .collect();
+                let mut acc_s = vec![MacAcc::new(); rows * out_dim];
+                let mut acc_b = acc_s.clone();
+                scalar.mvm_fx(
+                    &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_s,
+                    out_dim,
+                );
+                blocked.mvm_fx(
+                    &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_b,
+                    out_dim,
+                );
+                let fin = |acc: &[MacAcc]| -> Vec<i16> {
+                    acc.iter()
+                        .map(|a| a.finish_fmt(Fx16::ZERO, fmt).0)
+                        .collect()
+                };
+                assert_eq!(
+                    fin(&acc_s),
+                    fin(&acc_b),
+                    "{} trial {trial}: blocked kernel drifted",
+                    fmt.name()
+                );
+            }
+        }
+    }
+
     #[test]
     fn zero_rows_are_noops() {
         let w = vec![Fx16::ONE; 6];

@@ -11,7 +11,10 @@
 //!   algorithmic–hardware design-space-exploration framework ([`dse`]),
 //!   a PJRT runtime executing the AOT artifacts ([`runtime`]), a
 //!   Rust-driven training loop ([`train`]), a native float reference
-//!   engine ([`nn`]), a shared blocked-MVM kernel layer ([`kernels`] —
+//!   engine ([`nn`]), a parametric-precision fixed-point substrate
+//!   ([`fixedpoint`] — 8/12/16-bit activation paths with a widened
+//!   cell path, quantisation as a DSE axis; `docs/quantization.md`),
+//!   a shared blocked-MVM kernel layer ([`kernels`] —
 //!   one weight fetch amortised over MC samples and batched beats,
 //!   bit-exactness contract in `docs/kernels.md`), an async serving
 //!   coordinator ([`coordinator`])

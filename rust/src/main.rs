@@ -25,8 +25,9 @@ use bayes_rnn_fpga::coordinator::{
     Ticket,
 };
 use bayes_rnn_fpga::data;
-use bayes_rnn_fpga::dse::space::reuse_search;
+use bayes_rnn_fpga::dse::space::{reuse_search, reuse_search_q};
 use bayes_rnn_fpga::dse::{LookupTable, Optimizer};
+use bayes_rnn_fpga::fixedpoint::Precision;
 use bayes_rnn_fpga::fpga::accel::Accelerator;
 use bayes_rnn_fpga::hwmodel::ZC706;
 use bayes_rnn_fpga::jsonio::{self, Json};
@@ -109,6 +110,17 @@ impl Args {
     fn artifacts_dir(&self) -> PathBuf {
         PathBuf::from(self.get("artifacts").unwrap_or("artifacts"))
     }
+
+    /// `--precision q8|q12|q16[,l<i>=<fmt>...]` (default the paper's
+    /// q16).
+    fn precision(&self) -> Result<Precision> {
+        match self.get("precision") {
+            Some(s) => {
+                Precision::parse(s).map_err(|e| anyhow::anyhow!(e))
+            }
+            None => Ok(Precision::q16()),
+        }
+    }
 }
 
 /// A submitted request on either serving path.
@@ -184,21 +196,28 @@ usage: repro <subcommand> [--key value | --flag] ...
 
 subcommands:
   sweep   run the algorithmic DSE sweep, write the lookup table
+          (each point also gains accuracy@q8/q12/q16 fixed-point columns)
           [--task anomaly|classify] [--full] [--epochs N]
-          [--train-subset N] [--test-subset N] [--samples S] [--out PATH]
-  dse     optimise over a lookup table (Tables V/VI)
+          [--train-subset N] [--test-subset N] [--samples S]
+          [--quant-subset N] [--out PATH]
+  dse     optimise over a lookup table (Tables V/VI); searches the
+          8/12/16-bit precision axis and reports the chosen format,
+          its resources and the quantised accuracy (docs/quantization.md)
           [--task T] [--lookup PATH] [--batch N] [--samples S]
+          [--precision q8|q12|q16]  (restrict the search to one format)
   train   train one architecture
           --arch NAME [--backend native|pjrt] [--epochs N] [--batch N]
           [--lr F] [--seed N] [--out PATH]
   eval    evaluate a trained checkpoint (float / --fixed FPGA sim)
           --arch NAME [--weights PATH] [--samples S] [--test-subset N]
-          [--fixed]
+          [--fixed] [--precision q8|q12|q16[,l<i>=FMT...]]
   serve   run the serving fleet on synthetic ECG traffic
           [--arch NAME] [--engines N] [--router rr|least-loaded|mc-shard]
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
           [--seed N] [--json] [--kernel blocked|scalar]
+          [--precision q8|q12|q16[,l<i>=FMT...]]  (fpga backend only;
+           every engine runs at the one given format)
           (--kernel scalar forces the legacy per-sample FPGA-sim
            path — bench baseline; bit-identical output)
           adaptive MC (docs/uncertainty.md): [--adaptive-mc]
@@ -259,6 +278,9 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         train_subset: args.usize_or("train-subset", 500),
         test_subset: args.usize_or("test-subset", 400),
         mc_samples: args.usize_or("samples", 10),
+        // Per-precision fixed-point eval window (0 skips the
+        // accuracy@q8/q12/q16 lookup columns).
+        quant_subset: args.usize_or("quant-subset", 64),
         ..Default::default()
     };
     let out = args.get("out").map(PathBuf::from).unwrap_or_else(|| {
@@ -295,21 +317,42 @@ fn cmd_dse(args: &Args) -> Result<()> {
     let mut opt = Optimizer::new(&ZC706, &lookup);
     opt.batch = args.usize_or("batch", 50);
     opt.mc_samples = args.usize_or("samples", 30);
+    if args.get("precision").is_some() {
+        // Restrict the Q axis to one format.
+        opt.precisions = vec![args.precision()?];
+    }
     println!(
-        "{:<14} {:>20} {:>12} {:>4} {:>11} {:>11} {:>7}  metrics",
-        "Mode", "A:{H,NL,B}", "R:{x,h,d}", "S", "FPGA [ms]", "GPU [ms]",
-        "P [W]"
+        "{:<14} {:>20} {:>12} {:>5} {:>4} {:>11} {:>11} {:>6} {:>7}  metrics",
+        "Mode", "A:{H,NL,B}", "R:{x,h,d}", "Q", "S", "FPGA [ms]",
+        "GPU [ms]", "DSP", "P [W]"
     );
+    let mut chosen = Vec::new();
     for mode in Optimizer::modes_for(task) {
         match opt.optimize(task, mode) {
             Some(c) => {
-                let metr: Vec<String> = c
+                // Float metrics, plus the quantised column backing the
+                // choice when one was measured.
+                let mut metr: Vec<String> = c
                     .metrics
                     .iter()
+                    .filter(|(k, _)| !k.contains('@'))
                     .map(|(k, v)| format!("{k}={v:.3}"))
                     .collect();
+                for m in ["accuracy", "auc", "ap"] {
+                    if let Some(v) = c.quant_metric(m) {
+                        metr.push(format!(
+                            "{m}@{}={v:.3}",
+                            c.precision.name()
+                        ));
+                    }
+                }
+                let delta = c
+                    .dsp_delta_vs_q16_pct()
+                    .map(|d| format!(" ({d:+.0}% vs q16)"))
+                    .unwrap_or_else(|| " (q16 infeasible)".into());
                 println!(
-                    "{:<14} {:>20} {:>12} {:>4} {:>11.2} {:>11.2} {:>7.2}  {}",
+                    "{:<14} {:>20} {:>12} {:>5} {:>4} {:>11.2} {:>11.2} \
+                     {:>6.0} {:>7.2}  {}{}",
                     c.mode,
                     format!(
                         "{{{},{},{}}}",
@@ -321,16 +364,67 @@ fn cmd_dse(args: &Args) -> Result<()> {
                         "{{{},{},{}}}",
                         c.reuse.rx, c.reuse.rh, c.reuse.rd
                     ),
+                    c.precision.name(),
                     c.s,
                     c.fpga_latency_ms,
                     c.gpu_latency_ms,
+                    c.resources.dsps,
                     c.fpga_watts,
-                    metr.join(" ")
+                    metr.join(" "),
+                    if c.precision.name() == "q16" {
+                        String::new()
+                    } else {
+                        delta
+                    },
                 );
+                chosen.push(c);
             }
             None => {
                 println!("{:<14} (no feasible configuration)", mode.name())
             }
+        }
+    }
+    // Precision axis detail for each winning architecture: per-format
+    // resource estimate, modelled latency and quantised accuracy.
+    for c in &chosen {
+        println!("\nprecision axis for {} ({}):", c.arch.name(), c.mode);
+        println!(
+            "  {:<5} {:>12} {:>7} {:>11} {:>13}",
+            "Q", "R:{x,h,d}", "DSP", "FPGA [ms]", "acc@Q"
+        );
+        for prec in bayes_rnn_fpga::dse::precision_space() {
+            let Some(reuse) = reuse_search_q(&c.arch, &ZC706, &prec) else {
+                println!("  {:<5} (does not fit)", prec.name());
+                continue;
+            };
+            let est =
+                bayes_rnn_fpga::hwmodel::resource::ResourceModel::estimate_q(
+                    &c.arch, &reuse, &prec,
+                );
+            // Latency at this format's constraint-solved reuse (timing
+            // itself is format-independent at fixed reuse).
+            let ms = bayes_rnn_fpga::hwmodel::LatencyModel::batch_ms(
+                &c.arch,
+                &reuse,
+                opt.batch,
+                c.s,
+                ZC706.clock_hz,
+            );
+            let acc = lookup
+                .get(&c.arch.name())
+                .and_then(|e| {
+                    e.metric_at("accuracy", &prec.name())
+                })
+                .map(|v| format!("{v:.3}"))
+                .unwrap_or_else(|| "n/a".into());
+            println!(
+                "  {:<5} {:>12} {:>7.0} {:>11.2} {:>13}",
+                prec.name(),
+                format!("{{{},{},{}}}", reuse.rx, reuse.rh, reuse.rd),
+                est.dsps,
+                ms,
+                acc
+            );
         }
     }
     Ok(())
@@ -434,13 +528,23 @@ fn cmd_eval(args: &Args) -> Result<()> {
             let te =
                 test.subset(&(0..subset.min(test.n)).collect::<Vec<_>>());
             if args.flag("fixed") {
-                let reuse = reuse_search(&cfg, &ZC706)
-                    .context("does not fit ZC706")?;
-                let mut acc = Accelerator::new(&cfg, &model.params, reuse, 7);
+                let prec = args.precision()?;
+                let reuse = reuse_search_q(&cfg, &ZC706, &prec)
+                    .context("does not fit ZC706 at this precision")?;
+                let mut acc = Accelerator::with_precision(
+                    &cfg,
+                    &model.params,
+                    reuse,
+                    7,
+                    prec.clone(),
+                );
                 let rep = eval_anomaly(&mut acc, &te, s);
                 println!(
-                    "fixed-point  AUC {:.3}  AP {:.3}  ACC {:.3}",
-                    rep.auc, rep.ap, rep.accuracy
+                    "fixed-point ({})  AUC {:.3}  AP {:.3}  ACC {:.3}",
+                    prec.name(),
+                    rep.auc,
+                    rep.ap,
+                    rep.accuracy
                 );
             }
             let mut p = ModelPredictor::new(&model, 7);
@@ -461,13 +565,25 @@ fn cmd_eval(args: &Args) -> Result<()> {
                 test.subset(&(0..subset.min(test.n)).collect::<Vec<_>>());
             let noise = data::gaussian_noise(50, 0);
             if args.flag("fixed") {
-                let reuse = reuse_search(&cfg, &ZC706)
-                    .context("does not fit ZC706")?;
-                let mut acc = Accelerator::new(&cfg, &model.params, reuse, 7);
+                let prec = args.precision()?;
+                let reuse = reuse_search_q(&cfg, &ZC706, &prec)
+                    .context("does not fit ZC706 at this precision")?;
+                let mut acc = Accelerator::with_precision(
+                    &cfg,
+                    &model.params,
+                    reuse,
+                    7,
+                    prec.clone(),
+                );
                 let rep = eval_classify(&mut acc, &te, &noise, s);
                 println!(
-                    "fixed-point  ACC {:.3}  AP {:.3}  AR {:.3}  H {:.3} nats",
-                    rep.accuracy, rep.ap, rep.ar, rep.noise_entropy
+                    "fixed-point ({})  ACC {:.3}  AP {:.3}  AR {:.3}  \
+                     H {:.3} nats",
+                    prec.name(),
+                    rep.accuracy,
+                    rep.ap,
+                    rep.ar,
+                    rep.noise_entropy
                 );
             }
             let mut p = ModelPredictor::new(&model, 7);
@@ -522,6 +638,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         kernel == "blocked" || kernel == "scalar",
         "--kernel must be blocked or scalar"
     );
+    // Quantisation (fpga backend only): one format for every engine —
+    // mc-shard merges shard numerics across engines, and the gpu/pjrt
+    // float baselines have no fixed-point path.
+    let precision = args.precision()?;
+    anyhow::ensure!(
+        precision.is_q16() || backend == "fpga",
+        "--precision requires --backend fpga (float backends have no \
+         quantised path)"
+    );
 
     // Adaptive MC: sequential early-exit sampling + risk tiers
     // (docs/uncertainty.md).
@@ -566,6 +691,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let p2 = params.clone();
         let arts = artifacts.clone();
         let scalar_kernel = kernel == "scalar";
+        let prec = precision.clone();
         factories.push(Box::new(move || match kind.as_str() {
             "gpu" => Engine::gpu(
                 Model::new(cfg2.clone(), Params { tensors: p2.clone() }),
@@ -578,12 +704,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     .expect("pjrt engine")
             }
             _ => {
-                let reuse = reuse_search(&cfg2, &ZC706).expect("fits ZC706");
+                let reuse = reuse_search_q(&cfg2, &ZC706, &prec)
+                    .expect("fits ZC706 at this precision");
                 let m = Model::new(
                     cfg2.clone(),
                     Params { tensors: p2.clone() },
                 );
-                let mut e = Engine::fpga(&cfg2, &m, reuse, s, seed);
+                let mut e = Engine::fpga_q(&cfg2, &m, reuse, s, seed, &prec);
                 e.set_scalar_reference(scalar_kernel);
                 e
             }
@@ -695,6 +822,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     ),
                 };
                 collector.record(resp.s_used, resp.converged, tier);
+                collector.record_rounds(resp.rounds);
                 (resp.prediction.mean, resp.prediction.std)
             }
         };
@@ -723,7 +851,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "{{\"cmd\":\"serve\",\"arch\":\"{arch}\",\"engines\":{n_engines},\
              \"router\":\"{}\",\"backend\":\"{backend}\",\
-             \"kernel\":\"{kernel}\",\"samples\":{s},\
+             \"kernel\":\"{kernel}\",\"precision\":\"{}\",\"samples\":{s},\
              \"requests\":{n_req},\"served\":{},\"rejected\":{},\
              \"wall_s\":{:.6},\"throughput_rps\":{:.3},\
              \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\
@@ -732,6 +860,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"batches\":{},\"pred_checksum\":{:.6},\
              \"unc_checksum\":{:.6}{}}}",
             router.as_str(),
+            precision.name(),
             summary.served,
             summary.rejected,
             wall.as_secs_f64(),
@@ -751,8 +880,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
 
     println!(
-        "fleet: {n_engines} x {backend} engines, router {}, S={s}{}",
+        "fleet: {n_engines} x {backend} engines, router {}, S={s}, \
+         precision {}{}",
         router.as_str(),
+        precision.name(),
         if shed { ", shedding on" } else { "" }
     );
     println!(
@@ -823,6 +954,29 @@ struct UqSetup {
     test: data::Dataset,
 }
 
+/// Compute the `[start, end)` window of the test split for
+/// `uq calibrate` (window 0) / `uq evaluate` (window 1). The windows
+/// must be disjoint — evaluate's metrics are held-out — so a `--subset`
+/// large enough to push a later window past the end of the split is a
+/// hard error rather than a silent clamp onto the calibration window
+/// (ROADMAP PR 3 review finding b).
+fn uq_window(
+    test_n: usize,
+    subset: usize,
+    offset_windows: usize,
+) -> Result<(usize, usize)> {
+    let start = offset_windows * subset;
+    anyhow::ensure!(
+        start < test_n,
+        "--subset {subset} puts window {offset_windows} at beats \
+         {start}.. but the test split has only {test_n} beats; \
+         `uq evaluate` must score beats disjoint from the \
+         `uq calibrate` window — use --subset <= {}",
+        test_n / (offset_windows.max(1) + 1)
+    );
+    Ok((start, (start + subset).min(test_n)))
+}
+
 fn uq_setup(args: &Args, offset_windows: usize) -> Result<UqSetup> {
     let arch =
         args.get("arch").unwrap_or("classify_h8_nl1_Y").to_string();
@@ -852,8 +1006,7 @@ fn uq_setup(args: &Args, offset_windows: usize) -> Result<UqSetup> {
     let acc = Accelerator::new(&cfg, &model.params, reuse, seed);
     let (_, test) = data::splits(0);
     let subset = args.usize_or("subset", 200).max(1);
-    let offset = (offset_windows * subset).min(test.n.saturating_sub(1));
-    let end = (offset + subset).min(test.n);
+    let (offset, end) = uq_window(test.n, subset, offset_windows)?;
     let test = test.subset(&(offset..end).collect::<Vec<_>>());
     anyhow::ensure!(test.n > 0, "empty test window ({offset}..{end})");
     let s = args.usize_or("samples", 30);
@@ -1065,6 +1218,53 @@ fn cmd_uq_report(args: &Args) -> Result<()> {
         println!("\x20 noise abstain         {a:.1}%");
     }
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// ROADMAP PR 3 finding b: an oversized `--subset` used to clamp
+    /// the evaluate window back onto the calibration window (offset
+    /// `min(test.n - 1)`), silently making the "held-out" metrics
+    /// in-sample. It must now be a hard error with actionable guidance.
+    #[test]
+    fn uq_window_rejects_oversized_subsets_instead_of_clamping() {
+        // Calibration window (0) always starts at 0 and truncates.
+        assert_eq!(uq_window(500, 200, 0).unwrap(), (0, 200));
+        assert_eq!(uq_window(500, 600, 0).unwrap(), (0, 500));
+        // Evaluate window (1): disjoint, may truncate at the end.
+        assert_eq!(uq_window(500, 200, 1).unwrap(), (200, 400));
+        assert_eq!(uq_window(500, 400, 1).unwrap(), (400, 500));
+        // Oversized: previously collapsed onto beats [499, 500); now a
+        // hard error that names the largest safe subset.
+        let err = uq_window(500, 600, 1).unwrap_err().to_string();
+        assert!(err.contains("only 500 beats"), "{err}");
+        assert!(err.contains("--subset <= 250"), "{err}");
+        // Exactly at the boundary is still an error (start == n).
+        assert!(uq_window(500, 500, 1).is_err());
+        // The suggested bound is itself valid.
+        assert!(uq_window(500, 250, 1).is_ok());
+    }
+
+    #[test]
+    fn precision_flag_parses_presets_and_overrides() {
+        let (_, args) = Args::parse(&[
+            "serve".into(),
+            "--precision".into(),
+            "q8,l1=q16".into(),
+        ]);
+        let p = args.precision().unwrap();
+        assert_eq!(p.name(), "q8+l1=q16");
+        let (_, args) = Args::parse(&["serve".into()]);
+        assert!(args.precision().unwrap().is_q16());
+        let (_, args) = Args::parse(&[
+            "serve".into(),
+            "--precision".into(),
+            "q9".into(),
+        ]);
+        assert!(args.precision().is_err());
+    }
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -1,11 +1,20 @@
 //! The algorithmic DSE sweep (Figs. 8/9): train every architecture point
 //! in the grid, evaluate the paper's metrics, and populate the lookup
 //! table consumed by the optimisation framework.
+//!
+//! Besides the float metrics, each point is re-evaluated on the
+//! simulated fixed-point engine at every precision in
+//! [`crate::dse::space::precision_space`] that fits the chip
+//! ([`crate::dse::lookup::quant_key`] columns, e.g. `accuracy@q8`) —
+//! the measurements the optimizer's precision axis selects on
+//! (`docs/quantization.md`).
 
 use crate::config::Task;
 use crate::data;
-use crate::dse::lookup::{AlgoEntry, LookupTable};
-use crate::dse::space::arch_space;
+use crate::dse::lookup::{quant_key, AlgoEntry, LookupTable};
+use crate::dse::space::{arch_space, precision_space, reuse_search_q};
+use crate::fpga::accel::Accelerator;
+use crate::hwmodel::ZC706;
 use crate::train::eval::{self, ModelPredictor};
 use crate::train::native::{NativeTrainer, TrainOpts};
 
@@ -20,6 +29,10 @@ pub struct SweepOpts {
     pub test_subset: usize,
     pub noise_subset: usize,
     pub mc_samples: usize,
+    /// Beats of the test split used for the per-precision fixed-point
+    /// evals (0 skips the quantised columns entirely). Kept smaller
+    /// than `test_subset`: the fixed-point sim runs once per format.
+    pub quant_subset: usize,
     pub seed: u64,
 }
 
@@ -32,6 +45,7 @@ impl Default for SweepOpts {
             test_subset: 400,
             noise_subset: 40,
             mc_samples: 10,
+            quant_subset: 64,
             seed: 0,
         }
     }
@@ -77,6 +91,32 @@ pub fn run(
                     "rmse".into(),
                     rep.mean_rmse_normal,
                 );
+                // Per-precision fixed-point columns on a smaller window.
+                if opts.quant_subset > 0 {
+                    let te_q = test.subset(
+                        &(0..opts.quant_subset.min(test.n))
+                            .collect::<Vec<_>>(),
+                    );
+                    for prec in precision_space() {
+                        let Some(reuse) =
+                            reuse_search_q(&cfg, &ZC706, &prec)
+                        else {
+                            continue; // infeasible at this format
+                        };
+                        let mut acc = Accelerator::with_precision(
+                            &cfg,
+                            &trainer.model.params,
+                            reuse,
+                            opts.seed + 11,
+                            prec.clone(),
+                        );
+                        let q = eval::eval_anomaly(&mut acc, &te_q, s);
+                        let pn = prec.name();
+                        metrics
+                            .insert(quant_key("accuracy", &pn), q.accuracy);
+                        metrics.insert(quant_key("auc", &pn), q.auc);
+                    }
+                }
             }
             Task::Classify => {
                 let (train, test) = data::splits(opts.seed);
@@ -96,6 +136,36 @@ pub fn run(
                 metrics.insert("ap".into(), rep.ap);
                 metrics.insert("ar".into(), rep.ar);
                 metrics.insert("entropy".into(), rep.noise_entropy);
+                if opts.quant_subset > 0 {
+                    let te_q = test.subset(
+                        &(0..opts.quant_subset.min(test.n))
+                            .collect::<Vec<_>>(),
+                    );
+                    let noise_q = data::gaussian_noise(
+                        opts.noise_subset.min(8),
+                        opts.seed,
+                    );
+                    for prec in precision_space() {
+                        let Some(reuse) =
+                            reuse_search_q(&cfg, &ZC706, &prec)
+                        else {
+                            continue;
+                        };
+                        let mut acc = Accelerator::with_precision(
+                            &cfg,
+                            &trainer.model.params,
+                            reuse,
+                            opts.seed + 11,
+                            prec.clone(),
+                        );
+                        let q =
+                            eval::eval_classify(&mut acc, &te_q, &noise_q, s);
+                        let pn = prec.name();
+                        metrics
+                            .insert(quant_key("accuracy", &pn), q.accuracy);
+                        metrics.insert(quant_key("ap", &pn), q.ap);
+                    }
+                }
             }
         }
         table.insert(AlgoEntry {
@@ -124,6 +194,7 @@ mod tests {
             test_subset: 60,
             noise_subset: 8,
             mc_samples: 2,
+            quant_subset: 12,
             ..Default::default()
         };
         let mut table = LookupTable::new();
@@ -139,6 +210,26 @@ mod tests {
             assert!(e.metrics.contains_key("entropy"));
             let acc = e.metrics["accuracy"];
             assert!((0.0..=1.0).contains(&acc));
+            // Quantised columns exist for every precision the arch fits
+            // at (q8 always fits whenever anything does on this grid).
+            for prec in precision_space() {
+                if reuse_search_q(&e.arch(), &crate::hwmodel::ZC706, &prec)
+                    .is_some()
+                {
+                    let key = quant_key("accuracy", &prec.name());
+                    let q = *e
+                        .metrics
+                        .get(&key)
+                        .unwrap_or_else(|| panic!("{} missing {key}", e.name));
+                    assert!((0.0..=1.0).contains(&q));
+                }
+            }
         }
+        assert!(
+            table.entries.iter().any(|e| {
+                e.metrics.contains_key(&quant_key("accuracy", "q8"))
+            }),
+            "at least one point must carry a q8 column"
+        );
     }
 }

@@ -39,6 +39,10 @@ impl TierCounts {
 #[derive(Debug, Clone, Default)]
 pub struct UqCollector {
     samples_used: Vec<usize>,
+    /// Sequential sampling rounds per request, when the serving path
+    /// reports them (the fleet's adaptive coordinator does; the bare
+    /// accelerator path does not).
+    rounds: Vec<usize>,
     converged: usize,
     pub tiers: TierCounts,
 }
@@ -61,6 +65,12 @@ impl UqCollector {
         self.tiers.record(tier);
     }
 
+    /// Record one request's sequential round count (optional —
+    /// call alongside `record` when the serving path exposes it).
+    pub fn record_rounds(&mut self, rounds: usize) {
+        self.rounds.push(rounds);
+    }
+
     pub fn requests(&self) -> usize {
         self.samples_used.len()
     }
@@ -71,6 +81,13 @@ impl UqCollector {
         }
         self.samples_used.iter().sum::<usize>() as f64
             / self.samples_used.len() as f64
+    }
+
+    pub fn mean_rounds(&self) -> f64 {
+        if self.rounds.is_empty() {
+            return 0.0;
+        }
+        self.rounds.iter().sum::<usize>() as f64 / self.rounds.len() as f64
     }
 
     /// Finalise against the fixed-S budget the adaptive run replaced.
@@ -87,6 +104,7 @@ impl UqCollector {
             s_max,
             mean_samples: mean,
             samples_saved_pct: saved,
+            mean_rounds: self.mean_rounds(),
             converged: self.converged,
             tiers: self.tiers,
         }
@@ -102,6 +120,9 @@ pub struct UqReport {
     pub mean_samples: f64,
     /// `(1 − mean_samples / s_max) · 100` — the headline win.
     pub samples_saved_pct: f64,
+    /// Mean sequential sampling rounds per request (0 when the serving
+    /// path did not report rounds).
+    pub mean_rounds: f64,
     /// Requests whose CI converged before `s_max`.
     pub converged: usize,
     pub tiers: TierCounts,
@@ -115,6 +136,7 @@ impl UqReport {
             ("s_max", Json::Num(self.s_max as f64)),
             ("mean_samples", Json::Num(self.mean_samples)),
             ("samples_saved_pct", Json::Num(self.samples_saved_pct)),
+            ("mean_rounds", Json::Num(self.mean_rounds)),
             ("converged", Json::Num(self.converged as f64)),
             ("tiers", self.tiers.to_json()),
         ])
@@ -143,6 +165,11 @@ impl UqReport {
             s_max: num("s_max")? as usize,
             mean_samples: num("mean_samples")?,
             samples_saved_pct: num("samples_saved_pct")?,
+            // Optional: reports written before rounds were tracked.
+            mean_rounds: j
+                .get("mean_rounds")
+                .and_then(Json::as_f64)
+                .unwrap_or(0.0),
             converged: num("converged")? as usize,
             tiers: TierCounts {
                 accept: tier("accept")?,
@@ -154,15 +181,25 @@ impl UqReport {
 
     /// Multi-line human rendering for the CLI's non-JSON mode.
     pub fn render(&self) -> String {
+        let rounds = if self.mean_rounds > 0.0 {
+            format!(
+                "\n\x20 mean rounds/request   {:.2}",
+                self.mean_rounds
+            )
+        } else {
+            String::new()
+        };
         format!(
             "adaptive MC over {} requests (S_max = {}):\n\
-             \x20 mean samples/request  {:.2}  ({:.1}% saved vs fixed S)\n\
+             \x20 mean samples/request  {:.2}  ({:.1}% saved vs fixed S)\
+             {}\n\
              \x20 converged             {} / {}\n\
              \x20 tiers                 accept {}  defer {}  abstain {}",
             self.requests,
             self.s_max,
             self.mean_samples,
             self.samples_saved_pct,
+            rounds,
             self.converged,
             self.requests,
             self.tiers.accept,

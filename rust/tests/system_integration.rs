@@ -53,6 +53,9 @@ fn dse_end_to_end() {
         test_subset: 80,
         noise_subset: 10,
         mc_samples: 3,
+        // Small per-precision fixed-point window: enough to populate
+        // the accuracy@q* columns the optimizer's Q axis reads.
+        quant_subset: 24,
         ..Default::default()
     };
     let mut table = LookupTable::new();
@@ -60,6 +63,10 @@ fn dse_end_to_end() {
     assert!(!table.entries.is_empty());
 
     let opt = Optimizer::new(&ZC706, &table);
+    assert!(
+        opt.precisions.len() >= 3,
+        "the DSE must search at least 3 bitwidths"
+    );
     let lat = opt.optimize(Task::Classify, OptMode::Latency).expect("latency");
     assert!(!lat.arch.is_bayesian(), "Opt-Latency picks pointwise");
     assert_eq!(lat.s, 1);
@@ -67,13 +74,18 @@ fn dse_end_to_end() {
         .optimize(Task::Classify, OptMode::Metric("accuracy"))
         .expect("accuracy");
     assert!(acc.fpga_latency_ms >= lat.fpga_latency_ms);
-    // Every chosen design must actually fit the chip.
+    // Every chosen design must actually fit the chip at its chosen
+    // precision, and report that precision + resource estimate.
     for c in [&lat, &acc] {
-        let est = bayes_rnn_fpga::hwmodel::resource::ResourceModel::estimate(
-            &c.arch, &c.reuse,
-        );
-        assert!(est.dsps <= ZC706.dsps as f64 * 1.05);
+        assert!(c.resources.dsps <= ZC706.dsps as f64 * 1.05);
+        assert!(!c.precision.name().is_empty());
     }
+    // The quality mode picked a precision whose accuracy was measured
+    // (the sweep writes accuracy@q* columns), so the report can show
+    // the quantised accuracy of the chosen format.
+    let measured = acc.quant_metric("accuracy").is_some()
+        || acc.precision.name() == "q16";
+    assert!(measured, "chosen precision must have measured accuracy");
 }
 
 /// Functional + timing sims agree with the deployment story: serving via
