@@ -14,8 +14,10 @@
 //!   table6    optimisation framework, classification modes
 //!   ablation  latency model vs cycle-accurate simulation error
 //!   perf      L3 hot-path microbenchmarks (engine step, serve overhead)
-//!   kernels   blocked vs scalar kernel layer: raw MVM MMAC/s and
-//!             accelerator beats/s at S in {10, 30, 100}, one-line JSON
+//!   kernels   scalar vs blocked vs simd kernel backends: per-backend
+//!             MVM MMAC/s (fx + f32) with a bit-identity drift gate
+//!             (exit 1), packed-weight bytes/MAC per format, and
+//!             accelerator beats/s at S in {10, 30, 100}; one-line JSON
 //!             to bench_results/kernel_microbench.json (docs/kernels.md)
 //!   precision quantisation axis (docs/quantization.md): accuracy +
 //!             simulated beats/s + modelled latency/DSPs at q8/q12/q16,
@@ -871,19 +873,24 @@ fn openloop_serving() {
 // Perf microbenches (EXPERIMENTS.md §Perf).
 // ---------------------------------------------------------------------------
 
-/// Blocked-kernel layer microbench (docs/kernels.md): raw MVM kernel
-/// throughput scalar vs blocked, then the accelerator-level MC-batch
-/// comparison the ISSUE acceptance targets — blocked `predict_seeded`
-/// vs the legacy per-sample loop at S in {10, 30, 100}, beats/s and
-/// speedup, with a bit-identity assertion. Writes one single-line JSON
-/// summary to bench_results/kernel_microbench.json.
+/// Multi-backend kernel-layer microbench (docs/kernels.md §Backends):
+/// per-backend raw MVM MMAC/s (scalar | blocked | simd, fixed point
+/// and f32) with a checksum whose bit-identity check exits non-zero on
+/// drift; packed-weight bytes/MAC per format (>= 2x reduction at q8 is
+/// hard-asserted); then the accelerator-level MC-batch comparison —
+/// per-backend `predict_seeded` beats/s at S in {10, 30, 100}, bits
+/// re-checked. Writes one single-line JSON summary to
+/// bench_results/kernel_microbench.json (wired into the CI bench
+/// gate).
 fn kernels_bench() {
-    use bayes_rnn_fpga::fixedpoint::{Fx16, MacAcc};
-    use bayes_rnn_fpga::kernels::{BlockedKernel, Kernel, ScalarKernel};
+    use bayes_rnn_fpga::fixedpoint::{Fx16, MacAcc, QFormat};
+    use bayes_rnn_fpga::kernels::{KernelBackend, PackedWeights};
 
-    banner("Kernels — blocked vs scalar compute layer");
+    banner("Kernels — scalar vs blocked vs simd compute layer");
+    let iters = env_usize("REPRO_BENCH_KERNEL_ITERS", 60).max(1);
 
-    // 1. Raw MVM kernel: one h128 gate matmul, 100 sample rows.
+    // 1. Raw fixed-point MVM: one h128 gate matmul, 100 sample rows,
+    //    per backend, with a drift gate on the finished checksums.
     let (in_dim, out_dim, rows) = (128usize, 128usize, 100usize);
     let mut rng = Rng::new(7);
     let w: Vec<Fx16> = (0..in_dim * out_dim)
@@ -892,12 +899,13 @@ fn kernels_bench() {
     let x: Vec<Fx16> = (0..rows * in_dim)
         .map(|_| Fx16::from_f32(rng.normal() as f32))
         .collect();
-    let iters = 60;
-    let mut mvm_rates = Vec::new();
-    for (name, kernel) in [
-        ("scalar", &ScalarKernel as &dyn Kernel),
-        ("blocked", &BlockedKernel::default() as &dyn Kernel),
-    ] {
+    let checksum_fx = |acc: &[MacAcc]| -> i64 {
+        acc.iter().map(|a| a.finish(Fx16::ZERO).0 as i64).sum()
+    };
+    let mut mvm_json = Vec::new();
+    let mut fx_checksums = Vec::new();
+    for backend in KernelBackend::ALL {
+        let kernel = backend.kernel();
         let mut acc = vec![MacAcc::new(); rows * out_dim];
         let t0 = Instant::now();
         for _ in 0..iters {
@@ -910,80 +918,175 @@ fn kernels_bench() {
             );
         }
         let dt = t0.elapsed().as_secs_f64();
-        let mmacs =
-            (iters * rows * in_dim * out_dim) as f64 / dt / 1e6;
+        let mmacs = (iters * rows * in_dim * out_dim) as f64 / dt / 1e6;
+        let ck = checksum_fx(&acc);
         println!(
-            "mvm_fx {name:<8} {in_dim}x{out_dim} x {rows} rows: \
-             {mmacs:.0} MMAC/s"
+            "mvm_fx  {:<8} {in_dim}x{out_dim} x {rows} rows: \
+             {mmacs:>7.0} MMAC/s  checksum {ck}",
+            backend.name()
         );
-        mvm_rates.push((name, mmacs));
+        fx_checksums.push((backend.name(), ck));
+        mvm_json.push(format!(
+            "{{\"backend\":\"{}\",\"fx_mmacs\":{mmacs:.1},\
+             \"fx_checksum\":{ck}}}",
+            backend.name()
+        ));
+    }
+    if fx_checksums.iter().any(|&(_, c)| c != fx_checksums[0].1) {
+        eprintln!(
+            "FATAL: kernel backend checksum drift — {fx_checksums:?}"
+        );
+        std::process::exit(1);
     }
 
-    // 2. Accelerator MC batching: blocked predict_seeded vs the legacy
-    //    per-sample loop (ISSUE 3 acceptance: >= 2x beats/s at S=100).
+    // 1b. f32 MVM at h64 — the ISSUE 5 simd-vs-blocked record point
+    //     (>= 1.5x is recorded, not hard-gated).
+    let (fi, fo, fr) = (64usize, 64usize, 100usize);
+    let wf: Vec<f32> = (0..fi * fo).map(|_| rng.normal() as f32).collect();
+    let xf: Vec<f32> = (0..fr * fi).map(|_| rng.normal() as f32).collect();
+    let f32_iters = iters * 4;
+    let mut f32_rates = Vec::new();
+    for backend in KernelBackend::ALL {
+        let kernel = backend.kernel();
+        let mut out = vec![0f32; fr * fo];
+        let t0 = Instant::now();
+        for _ in 0..f32_iters {
+            out.fill(0.0);
+            kernel.mvm_f32(&wf, fi, fo, fr, &xf, fi, None, &mut out, fo);
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let mmacs = (f32_iters * fr * fi * fo) as f64 / dt / 1e6;
+        println!(
+            "mvm_f32 {:<8} {fi}x{fo} x {fr} rows: {mmacs:>7.0} MMAC/s",
+            backend.name()
+        );
+        f32_rates.push((backend.name(), mmacs));
+    }
+    let simd_vs_blocked_f32 = f32_rates[2].1 / f32_rates[1].1.max(1e-9);
+    println!(
+        "simd vs blocked (f32 h64): {simd_vs_blocked_f32:.2}x  {}",
+        if simd_vs_blocked_f32 >= 1.5 {
+            "PASS (>=1.5x)"
+        } else {
+            "WARN (<1.5x, recorded)"
+        }
+    );
+
+    // 1c. Packed-weight bandwidth: bytes/MAC per format. The q8 i8
+    //     plane must at least halve the Fx16 baseline's 2 bytes/MAC
+    //     (ISSUE 5 acceptance — hard gate).
+    let mut packed_json = Vec::new();
+    for fmt in [QFormat::Q8_ACT, QFormat::Q12_ACT, QFormat::Q16_ACT] {
+        let wq: Vec<Fx16> = w.iter().map(|v| fmt.quantize(v.to_f32())).collect();
+        let p = PackedWeights::pack(&wq, in_dim, out_dim, fmt);
+        let bpm = p.bytes_per_weight();
+        println!(
+            "packed  {:<8} {:>4.1} bytes/MAC (Fx16 baseline 2.0, f32 4.0)",
+            fmt.name(),
+            bpm
+        );
+        packed_json
+            .push(format!("{{\"format\":\"{}\",\"bytes_per_mac\":{bpm:.2}}}", fmt.name()));
+        if fmt == QFormat::Q8_ACT && bpm > 1.0 {
+            eprintln!("FATAL: q8 packing must halve weight bytes/MAC, got {bpm}");
+            std::process::exit(1);
+        }
+    }
+
+    // 2. Accelerator MC batching: per-backend predict_seeded beats/s
+    //    (scalar = the legacy per-sample loop) at S in {10, 30, 100}.
     let mut cfg = ArchConfig::new(Task::Classify, 32, 2, "YY");
     cfg.seq_len = 64;
     let params = Params::init(&cfg, &mut Rng::new(1));
     let reuse = ReuseFactors::new(1, 1, 1);
     let beat: Vec<f32> =
         (0..cfg.seq_len).map(|i| (i as f32 * 0.23).sin()).collect();
+    let s_max = env_usize("REPRO_BENCH_KERNEL_SMAX", 100);
     let mut points = Vec::new();
     let mut speedup_s100 = 0f64;
+    let mut simd_speedup_s100 = 0f64;
     for s in [10usize, 30, 100] {
+        if s > s_max {
+            continue;
+        }
         let beats = if s >= 100 { 4 } else { 8 };
-        let mut scalar = Accelerator::new(&cfg, &params, reuse, 9);
-        scalar.scalar_reference = true;
-        let mut blocked = Accelerator::new(&cfg, &params, reuse, 9);
-        // Warm + bit-identity check.
-        let a = scalar.predict_seeded(&beat, 0, 0, s);
-        let b = blocked.predict_seeded(&beat, 0, 0, s);
-        assert_eq!(
-            a.samples, b.samples,
-            "blocked path must be bit-identical to the per-sample loop"
-        );
-        let t0 = Instant::now();
-        for r in 0..beats {
-            let _ = scalar.predict_seeded(&beat, r as u64, 0, s);
+        let mut rates = Vec::new();
+        let mut ref_samples: Option<Vec<f32>> = None;
+        for backend in KernelBackend::ALL {
+            let mut acc = Accelerator::new(&cfg, &params, reuse, 9);
+            acc.set_kernel_backend(backend);
+            if backend == KernelBackend::Scalar {
+                acc.scalar_reference = true; // full legacy cost model
+            }
+            // Warm + bit-identity gate.
+            let samples = acc.predict_seeded(&beat, 0, 0, s).samples;
+            if let Some(want) = &ref_samples {
+                if &samples != want {
+                    eprintln!(
+                        "FATAL: {} backend drifted from scalar at S={s}",
+                        backend.name()
+                    );
+                    std::process::exit(1);
+                }
+            } else {
+                ref_samples = Some(samples);
+            }
+            let t0 = Instant::now();
+            for r in 0..beats {
+                let _ = acc.predict_seeded(&beat, r as u64, 0, s);
+            }
+            rates.push(beats as f64 / t0.elapsed().as_secs_f64());
         }
-        let dt_scalar = t0.elapsed().as_secs_f64();
-        let t0 = Instant::now();
-        for r in 0..beats {
-            let _ = blocked.predict_seeded(&beat, r as u64, 0, s);
-        }
-        let dt_blocked = t0.elapsed().as_secs_f64();
-        let rate_s = beats as f64 / dt_scalar;
-        let rate_b = beats as f64 / dt_blocked;
+        let (rate_s, rate_b, rate_v) = (rates[0], rates[1], rates[2]);
         let speedup = rate_b / rate_s.max(1e-12);
+        let simd_speedup = rate_v / rate_b.max(1e-12);
         if s == 100 {
             speedup_s100 = speedup;
+            simd_speedup_s100 = simd_speedup;
         }
         println!(
-            "predict S={s:<4} scalar {rate_s:>8.1} beats/s   blocked \
-             {rate_b:>8.1} beats/s   speedup {speedup:.2}x"
+            "predict S={s:<4} scalar {rate_s:>8.1}  blocked {rate_b:>8.1}  \
+             simd {rate_v:>8.1} beats/s   blocked/scalar {speedup:.2}x  \
+             simd/blocked {simd_speedup:.2}x"
         );
         points.push(format!(
             "{{\"s\":{s},\"scalar_beats_per_s\":{rate_s:.3},\
              \"blocked_beats_per_s\":{rate_b:.3},\
-             \"speedup\":{speedup:.3}}}"
+             \"simd_beats_per_s\":{rate_v:.3},\
+             \"speedup\":{speedup:.3},\
+             \"simd_vs_blocked\":{simd_speedup:.3}}}"
         ));
     }
-    println!(
-        "blocked vs scalar @ S=100: {speedup_s100:.2}x  {}",
-        if speedup_s100 >= 2.0 { "PASS (>=2x)" } else { "WARN (<2x)" }
-    );
+    if s_max >= 100 {
+        println!(
+            "blocked vs scalar @ S=100: {speedup_s100:.2}x  {}",
+            if speedup_s100 >= 2.0 { "PASS (>=2x)" } else { "WARN (<2x)" }
+        );
+    }
 
     let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
     std::fs::create_dir_all(&dir).expect("create bench_results/");
+    // The S=100 speedups only exist when the S=100 point ran (smoke
+    // runs cap SMAX lower): emit null, not a fake 0.000, so downstream
+    // diffs don't read a skipped point as a catastrophic regression.
+    let (s100, simd_s100) = if s_max >= 100 {
+        (
+            format!("{speedup_s100:.3}"),
+            format!("{simd_speedup_s100:.3}"),
+        )
+    } else {
+        ("null".into(), "null".into())
+    };
     let line = format!(
-        "{{\"scenario\":\"kernel_microbench\",\
-         \"arch\":\"{}\",\"mvm_mmacs\":{{\"scalar\":{:.1},\
-         \"blocked\":{:.1}}},\"points\":[{}],\
-         \"speedup_s100\":{:.3}}}",
+        "{{\"scenario\":\"kernel_microbench\",\"arch\":\"{}\",\
+         \"backends\":[{}],\"bits_ok\":true,\
+         \"simd_vs_blocked_f32_h64\":{simd_vs_blocked_f32:.3},\
+         \"packed\":[{}],\"points\":[{}],\
+         \"speedup_s100\":{s100},\"simd_speedup_s100\":{simd_s100}}}",
         cfg.name(),
-        mvm_rates[0].1,
-        mvm_rates[1].1,
-        points.join(","),
-        speedup_s100
+        mvm_json.join(","),
+        packed_json.join(","),
+        points.join(",")
     );
     let path = dir.join("kernel_microbench.json");
     std::fs::write(&path, format!("{line}\n")).expect("write summary");

@@ -13,8 +13,9 @@ use crate::fpga::accel::{Accelerator, McOutput};
 use crate::fpga::pipeline::PipelineSim;
 use crate::hwmodel::resource::ReuseFactors;
 use crate::hwmodel::{GpuModel, ZC706};
-use crate::nn::model::{Masks, Model};
-use crate::rng::{mix3, Rng};
+use crate::kernels::KernelBackend;
+use crate::nn::model::{MaskBlock, Masks, Model};
+use crate::rng::Rng;
 use crate::runtime::{HostValue, Runtime};
 use crate::tensor::Tensor;
 
@@ -184,12 +185,19 @@ impl Engine {
         })
     }
 
-    /// Put an FPGA-sim engine on the legacy per-sample scalar path
-    /// (bench baseline; no-op for other backends). Output bits are
-    /// unchanged — only the simulator's wall-clock cost model differs.
-    pub fn set_scalar_reference(&mut self, on: bool) {
+    /// Select the kernel backend for an FPGA-sim engine (`repro serve
+    /// --kernel`, `docs/kernels.md` §Backends). `scalar` additionally
+    /// forces the structural per-sample loop — the full legacy cost
+    /// model, as the bench baseline expects — and the two flags are
+    /// only ever set together here, so the serve JSON's `"kernel"`
+    /// field can't desynchronize from the loop actually running.
+    /// Output bits never change. No-op for float backends (they
+    /// dispatch through the process-wide
+    /// [`crate::kernels::default_backend`]).
+    pub fn set_kernel_backend(&mut self, backend: KernelBackend) {
         if let EngineKind::FpgaSim { accel, .. } = &mut self.kind {
-            accel.scalar_reference = on;
+            accel.set_kernel_backend(backend);
+            accel.scalar_reference = backend == KernelBackend::Scalar;
         }
     }
 
@@ -467,9 +475,14 @@ impl Engine {
 }
 
 /// Per-sample-seeded dropout masks for samples `start..start+count`:
-/// sample `k` is drawn from `Rng::new(mix3(base, req_seed, k))` and rows
-/// are concatenated, mirroring the accelerator's per-sample LFSR
-/// reseeding so software baselines shard the same schedule shape.
+/// sample `k` is drawn from `Rng::new(mix3(base, req_seed, k))`,
+/// mirroring the accelerator's per-sample LFSR reseeding so software
+/// baselines shard the same schedule shape. The whole shard is
+/// block-generated as bitplanes ([`MaskBlock::seeded`] — identical
+/// `Rng` streams, 1 bit/element) and expanded to the f32 tensor ABI
+/// only here, at the float-consumer boundary. The bit-for-bit oracle
+/// against the old per-(sample, beat) tensor draws is
+/// `mask_block_matches_per_sample_masks_sample_oracle` below.
 fn seeded_masks(
     cfg: &ArchConfig,
     base: u64,
@@ -480,26 +493,7 @@ fn seeded_masks(
     if !cfg.is_bayesian() || count == 0 {
         return Masks::ones(cfg, count);
     }
-    let per: Vec<Masks> = (0..count)
-        .map(|j| {
-            let mut rng =
-                Rng::new(mix3(base, req_seed, (start + j) as u64));
-            Masks::sample(cfg, 1, &mut rng)
-        })
-        .collect();
-    let tensors = (0..per[0].tensors.len())
-        .map(|ti| {
-            let mut shape = per[0].tensors[ti].shape.clone();
-            shape[0] = count;
-            let mut data =
-                Vec::with_capacity(count * per[0].tensors[ti].data.len());
-            for m in &per {
-                data.extend_from_slice(&m.tensors[ti].data);
-            }
-            Tensor::new(shape, data)
-        })
-        .collect();
-    Masks { tensors }
+    MaskBlock::seeded(cfg, base, req_seed, start, count).to_masks()
 }
 
 /// Float-model MC prediction (shared by the GPU engine and tests).
@@ -639,6 +633,104 @@ mod tests {
 
     fn beat20() -> Vec<f32> {
         (0..20).map(|i| (i as f32 * 0.3).sin()).collect()
+    }
+
+    /// Bitplane-mask oracle (ISSUE 5): the block-generated
+    /// [`MaskBlock`] must reproduce, bit for bit, the legacy
+    /// per-(sample) tensor draws — one `Masks::sample` per mix3-seeded
+    /// `Rng`, rows concatenated — that `seeded_masks` used to make.
+    #[test]
+    fn mask_block_matches_per_sample_masks_sample_oracle() {
+        use crate::rng::mix3;
+        for bayes in ["YY", "YN", "NY"] {
+            let (cfg, _) = tiny_model(bayes);
+            let (base, req_seed, start, count) = (9u64, 42u64, 3usize, 5usize);
+            // Legacy oracle, reconstructed verbatim: per-sample tensors
+            // from the same seed schedule, concatenated along rows.
+            let per: Vec<Masks> = (0..count)
+                .map(|j| {
+                    let mut rng = Rng::new(mix3(
+                        base,
+                        req_seed,
+                        (start + j) as u64,
+                    ));
+                    Masks::sample(&cfg, 1, &mut rng)
+                })
+                .collect();
+            let want: Vec<Tensor> = (0..per[0].tensors.len())
+                .map(|ti| {
+                    let mut shape = per[0].tensors[ti].shape.clone();
+                    shape[0] = count;
+                    let mut data = Vec::new();
+                    for m in &per {
+                        data.extend_from_slice(&m.tensors[ti].data);
+                    }
+                    Tensor::new(shape, data)
+                })
+                .collect();
+
+            let block =
+                MaskBlock::seeded(&cfg, base, req_seed, start, count);
+            let got = block.to_masks();
+            assert_eq!(got.tensors.len(), want.len());
+            for (ti, (g, w)) in
+                got.tensors.iter().zip(&want).enumerate()
+            {
+                assert_eq!(g.shape, w.shape, "{bayes} tensor {ti} shape");
+                assert_eq!(
+                    g.data, w.data,
+                    "{bayes} tensor {ti}: block-generated bitplane \
+                     masks drifted from the per-sample draws"
+                );
+            }
+            // The packed block is a small fraction of the expanded f32
+            // tensors it replaces.
+            let expanded: usize =
+                want.iter().map(|t| t.data.len() * 4).sum();
+            if cfg.is_bayesian() {
+                assert!(
+                    block.bytes() < expanded / 4,
+                    "packed {}B vs expanded {}B",
+                    block.bytes(),
+                    expanded
+                );
+            }
+        }
+    }
+
+    /// Fleet-level leg of the backend-equivalence contract: a batched
+    /// engine call computes bit-identical sample blocks under every
+    /// kernel backend (including scalar, which also flips the
+    /// structural per-sample loop).
+    #[test]
+    fn all_kernel_backends_bit_identical_at_fleet_level() {
+        use crate::kernels::KernelBackend;
+        let (cfg, model) = tiny_model("YY");
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let beat_a = beat20();
+        let beat_b: Vec<f32> =
+            (0..20).map(|i| (i as f32 * 0.41).cos()).collect();
+        let reqs = [
+            ShardRequest { beat: &beat_a, req_seed: 7, start: 0, count: 4 },
+            ShardRequest { beat: &beat_b, req_seed: 8, start: 2, count: 3 },
+        ];
+        let run = |backend: KernelBackend| -> Vec<Vec<f32>> {
+            let mut e = Engine::fpga(&cfg, &model, reuse, 8, 9);
+            e.set_kernel_backend(backend);
+            e.infer_samples_batch(&reqs, 1)
+                .into_iter()
+                .map(|r| r.unwrap().samples)
+                .collect()
+        };
+        let want = run(KernelBackend::Blocked);
+        for backend in [KernelBackend::Scalar, KernelBackend::Simd] {
+            assert_eq!(
+                run(backend),
+                want,
+                "{}: fleet-level batch drifted",
+                backend.name()
+            );
+        }
     }
 
     #[test]

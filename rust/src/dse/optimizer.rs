@@ -180,7 +180,15 @@ impl<'a> Optimizer<'a> {
                             gpu_latency_ms: GpuModel::latency_ms(
                                 &arch, self.batch, s,
                             ),
-                            fpga_watts: PowerModel::fpga_watts(&res),
+                            // Width-sensitive power (docs/quantization.md):
+                            // narrow operands shrink both the resource
+                            // counts (inside `res`) and the per-resource
+                            // toggle activity.
+                            fpga_watts: PowerModel::fpga_watts_q(
+                                &res,
+                                precision,
+                                arch.num_lstm_layers(),
+                            ),
                             objective,
                             resources: res,
                             // Filled in once for the winner below — the
@@ -422,16 +430,26 @@ mod tests {
         assert_eq!(opt.precisions.len(), 3, "searches >= 3 bitwidths");
         let c = opt.optimize(Task::Classify, OptMode::Latency).unwrap();
         assert_eq!(c.precision.name(), "q8");
-        let q16_ms = {
+        let q16 = {
             let mut o16 = Optimizer::new(&ZC706, &lookup);
             o16.precisions = vec![crate::fixedpoint::Precision::q16()];
-            o16.optimize(Task::Classify, OptMode::Latency)
-                .unwrap()
-                .fpga_latency_ms
+            o16.optimize(Task::Classify, OptMode::Latency).unwrap()
         };
-        assert!(c.fpga_latency_ms <= q16_ms, "q8 must never be slower");
+        assert!(
+            c.fpga_latency_ms <= q16.fpga_latency_ms,
+            "q8 must never be slower"
+        );
         let delta = c.dsp_delta_vs_q16_pct().expect("fits at q16 too");
         assert!(delta > 0.0, "packed MVMs must save DSPs: {delta}");
+        // Width-sensitive power (ISSUE 5 satellite): the chosen q8
+        // design reports lower watts than the q16 baseline — fewer
+        // resources *and* fewer toggling operand bits.
+        assert!(
+            c.fpga_watts < q16.fpga_watts,
+            "q8 watts {} !< q16 watts {}",
+            c.fpga_watts,
+            q16.fpga_watts
+        );
 
         // Where the design IS DSP-constrained (II > 1), the packed
         // format's DSP headroom buys a lower feasible reuse and with it

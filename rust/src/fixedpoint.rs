@@ -479,7 +479,15 @@ impl MacAcc {
 
     #[inline]
     pub fn mac(&mut self, a: Fx16, b: Fx16) {
-        self.0 += a.0 as i64 * b.0 as i64; // Q(2*FRAC16)
+        self.mac_raw(a.0, b.0); // Q(2*frac)
+    }
+
+    /// MAC of raw lattice points — the kernels' entry: packed `i8`/`i16`
+    /// weight planes widen to `i16` in-register and land here, so the
+    /// accumulated bits are identical to the unpacked [`MacAcc::mac`].
+    #[inline]
+    pub fn mac_raw(&mut self, a: i16, b: i16) {
+        self.0 += a as i64 * b as i64;
     }
 
     /// Finish: add bias (Q10) and narrow to Fx16 with rounding/saturation

@@ -12,8 +12,9 @@
 //! bit-identical to the pre-refactor accelerator.
 
 use super::engine::{DenseEngine, LstmEngine};
-use crate::config::{ArchConfig, Task, GATES};
+use crate::config::{ArchConfig, Task};
 use crate::fixedpoint::{Fx16, Precision, QFormat};
+use crate::kernels::{self, KernelBackend};
 use crate::hwmodel::resource::{ResourceEstimate, ResourceModel, ReuseFactors};
 use crate::lfsr::BernoulliSampler;
 use crate::nn::model::softmax_row;
@@ -116,13 +117,14 @@ pub struct Accelerator {
     /// the blocked kernel path. Bit-identical output either way
     /// (tested below) — this is the bench baseline, not a feature.
     pub scalar_reference: bool,
+    /// Kernel backend every engine MVM dispatches to
+    /// (`docs/kernels.md` §Backends) — bit-identical across backends.
+    pub kernel_backend: KernelBackend,
     /// Base LFSR seed the design was "synthesised" with; the fleet's
     /// seeded prediction path derives per-(request, sample) seeds from it.
     seed: u64,
     // Scratch (no allocation in the hot loop).
     beat_q: Vec<Fx16>,
-    mask_zx: Vec<f32>,
-    mask_zh: Vec<f32>,
 }
 
 impl Accelerator {
@@ -178,11 +180,23 @@ impl Accelerator {
             dense,
             samplers,
             scalar_reference: false,
+            kernel_backend: kernels::default_backend(),
             seed,
             beat_q: Vec::new(),
-            mask_zx: Vec::new(),
-            mask_zh: Vec::new(),
         }
+    }
+
+    /// Switch every engine MVM to a kernel backend. Output bits are
+    /// unchanged (the backend-equivalence contract, tested below);
+    /// only the simulator's wall-clock cost shape moves. The
+    /// structural per-sample loop is a separate axis
+    /// ([`Accelerator::scalar_reference`]).
+    pub fn set_kernel_backend(&mut self, backend: KernelBackend) {
+        self.kernel_backend = backend;
+        for e in self.lstms.iter_mut() {
+            e.set_backend(backend);
+        }
+        self.dense.set_backend(backend);
     }
 
     /// Configure every engine for `rows` sample lanes (masks reset to
@@ -207,22 +221,19 @@ impl Accelerator {
         }
     }
 
-    /// Pre-sample masks for lane `r` (Fig. 4 overlap) and load the DXs.
-    /// Per Bayesian layer the LFSR stream is consumed zx-then-zh, lanes
-    /// in ascending order — exactly the per-pass order of the legacy
-    /// per-sample loop, so blocked and scalar paths see identical bits.
+    /// Pre-sample masks for lane `r` (Fig. 4 overlap) straight into the
+    /// engines' bitplanes — the SIPO bit stream never expands into f32
+    /// words. Per Bayesian layer the LFSR stream is consumed zx-then-zh,
+    /// lanes in ascending order — exactly the per-pass order of the
+    /// legacy per-sample loop, so blocked and scalar paths (and the
+    /// pre-bitplane implementation) see identical bits
+    /// (`fpga::engine::tests::fill_masks_row_matches_legacy_f32_fill_bit_for_bit`).
     fn presample_masks_row(&mut self, r: usize) {
         for (engine, slot) in
             self.lstms.iter_mut().zip(self.samplers.iter_mut())
         {
             if let Some(sampler) = slot {
-                self.mask_zx.clear();
-                self.mask_zx.resize(GATES * engine.idim, 0.0);
-                self.mask_zh.clear();
-                self.mask_zh.resize(GATES * engine.hdim, 0.0);
-                sampler.fill(&mut self.mask_zx);
-                sampler.fill(&mut self.mask_zh);
-                engine.set_masks_row(r, &self.mask_zx, &self.mask_zh);
+                engine.fill_masks_row(r, || sampler.sample() != 0.0);
             }
         }
     }
@@ -877,6 +888,66 @@ mod tests {
             assert_eq!(
                 b.samples, s.samples,
                 "task {task:?}: free-running path"
+            );
+        }
+    }
+
+    /// Accelerator-level leg of the backend-equivalence contract:
+    /// every kernel backend — and the structural per-sample scalar
+    /// loop — computes bit-identical sample sets on the seeded and
+    /// batched paths, at q16 and at a packed narrow precision.
+    #[test]
+    fn all_kernel_backends_bit_identical_at_accel_level() {
+        for prec in [Precision::q16(), Precision::q8()] {
+            let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+            cfg.seq_len = 24;
+            let params = Params::init(&cfg, &mut Rng::new(2));
+            let reuse = ReuseFactors::new(1, 1, 1);
+            let beat: Vec<f32> = (0..cfg.seq_len)
+                .map(|i| (i as f32 * 0.2).cos())
+                .collect();
+            let build = |backend: KernelBackend| {
+                let mut a = Accelerator::with_precision(
+                    &cfg, &params, reuse, 9, prec.clone(),
+                );
+                a.set_kernel_backend(backend);
+                a
+            };
+            let want = build(KernelBackend::Blocked)
+                .predict_seeded(&beat, 77, 1, 6);
+            for backend in KernelBackend::ALL {
+                let mut acc = build(backend);
+                assert_eq!(acc.kernel_backend, backend);
+                let got = acc.predict_seeded(&beat, 77, 1, 6);
+                assert_eq!(
+                    got.samples,
+                    want.samples,
+                    "{} {}: seeded path drifted",
+                    prec.name(),
+                    backend.name()
+                );
+                let batch =
+                    acc.predict_batch(&[&beat, &beat], &[77, 78], 4);
+                let mut blocked = build(KernelBackend::Blocked);
+                let wb = blocked.predict_batch(&[&beat, &beat], &[77, 78], 4);
+                for (g, w) in batch.iter().zip(&wb) {
+                    assert_eq!(
+                        g.samples,
+                        w.samples,
+                        "{} {}: batched path drifted",
+                        prec.name(),
+                        backend.name()
+                    );
+                }
+            }
+            // The structural scalar loop agrees under any backend too.
+            let mut scalar = build(KernelBackend::Simd);
+            scalar.scalar_reference = true;
+            assert_eq!(
+                scalar.predict_seeded(&beat, 77, 1, 6).samples,
+                want.samples,
+                "{}: per-sample loop drifted",
+                prec.name()
             );
         }
     }

@@ -2,14 +2,24 @@
 //! MVM pairs + LUT activations + widened cell tail) and the dense
 //! engine — the hardware blocks of Fig. 2.
 //!
-//! All MVM inner loops run on the shared blocked kernel layer
-//! ([`crate::kernels`]): an engine can hold `rows` independent sample
-//! lanes (MC samples x batched beats), each with its own DX masks and
-//! architectural state, and every weight row fetched by a timestep is
-//! MAC'd into all lanes — the paper's weight-fetch amortisation. The
-//! classic single-lane API (`step`, `set_masks`, `reset`) is the
-//! `rows == 1` special case and is bit-identical to the pre-kernel
-//! implementation.
+//! All MVM inner loops run on the shared runtime-dispatched kernel
+//! layer ([`crate::kernels`]): an engine can hold `rows` independent
+//! sample lanes (MC samples x batched beats), each with its own DX
+//! masks and architectural state, and every weight row fetched by a
+//! timestep is MAC'd into all lanes — the paper's weight-fetch
+//! amortisation. The classic single-lane API (`step`, `set_masks`,
+//! `reset`) is the `rows == 1` special case and is bit-identical to the
+//! pre-kernel implementation.
+//!
+//! Operand packing mirrors the accelerator's bandwidth story: weights
+//! live in [`PackedWeights`] planes at their container width (`i8` rows
+//! at q8), and the DX masks in [`BitPlanes`] bitsets (1 bit/element,
+//! 16x smaller than the `Fx16` lanes they replaced) the kernels probe
+//! directly. The kernel backend (`scalar | blocked | simd`,
+//! `docs/kernels.md` §Backends) is captured from
+//! [`crate::kernels::default_backend`] at construction and switchable
+//! per engine via `set_backend` — every backend computes identical
+//! bits.
 //!
 //! Engines are precision-parametric ([`crate::fixedpoint::QuantSpec`],
 //! `docs/quantization.md`): the `new` constructors build the paper's
@@ -19,7 +29,7 @@
 
 use crate::config::GATES;
 use crate::fixedpoint::{ActLut, Fx16, Fx32, MacAcc, QFormat, QuantSpec};
-use crate::kernels::{self, Kernel};
+use crate::kernels::{self, BitPlanes, KernelBackend, MaskRef, PackedWeights};
 use crate::tensor::Tensor;
 
 /// One matrix-vector-multiply engine with a reuse factor: `in_dim` x
@@ -33,8 +43,12 @@ pub struct MvmUnit {
     pub reuse: usize,
     /// Activation/weight format the unit is quantised in.
     pub fmt: QFormat,
-    /// Row-major `[in_dim][out_dim]` quantised weights (on-chip).
-    pub weights: Vec<Fx16>,
+    /// Row-major `[in_dim][out_dim]` quantised weights (on-chip),
+    /// packed at the format's container width.
+    pub weights: PackedWeights,
+    /// Kernel backend this unit dispatches to (bit-identical across
+    /// backends; cost shape differs).
+    pub backend: KernelBackend,
 }
 
 impl MvmUnit {
@@ -53,13 +67,27 @@ impl MvmUnit {
     ) -> Self {
         assert_eq!(weights.len(), in_dim * out_dim);
         assert!(reuse >= 1);
+        let q: Vec<Fx16> =
+            weights.iter().map(|&w| fmt.quantize(w)).collect();
         Self {
             in_dim,
             out_dim,
             reuse,
             fmt,
-            weights: weights.iter().map(|&w| fmt.quantize(w)).collect(),
+            weights: PackedWeights::pack(&q, in_dim, out_dim, fmt),
+            backend: kernels::default_backend(),
         }
+    }
+
+    /// Switch the kernel backend (output bits unchanged).
+    pub fn set_backend(&mut self, backend: KernelBackend) {
+        self.backend = backend;
+    }
+
+    /// Weight-plane bytes the MVM streams (the packed-bandwidth axis
+    /// the `kernels` bench reports).
+    pub fn weight_bytes(&self) -> usize {
+        self.weights.bytes()
     }
 
     /// y[k] += x . W[:,k] accumulated into wide MACs.
@@ -83,8 +111,7 @@ impl MvmUnit {
         self.mac_rows_masked(
             x,
             self.in_dim,
-            mask,
-            self.in_dim,
+            MaskRef::Lanes(mask, self.in_dim),
             acc,
             self.out_dim,
             1,
@@ -92,7 +119,8 @@ impl MvmUnit {
     }
 
     /// Blocked multi-lane MAC through the kernel layer: one weight-row
-    /// fetch serves all `rows` sample lanes.
+    /// fetch serves all `rows` sample lanes, streamed from the packed
+    /// plane.
     pub fn mac_rows(
         &self,
         x: &[Fx16],
@@ -101,10 +129,8 @@ impl MvmUnit {
         acc_stride: usize,
         rows: usize,
     ) {
-        kernels::active().mvm_fx(
+        self.backend.kernel().mvm_fx_packed(
             &self.weights,
-            self.in_dim,
-            self.out_dim,
             rows,
             x,
             x_stride,
@@ -114,28 +140,25 @@ impl MvmUnit {
         );
     }
 
-    /// Blocked multi-lane masked MAC: per-lane DX masks, strided so the
-    /// kernel reads gate lanes straight out of `[rows][GATES][dim]`
-    /// mask buffers.
-    #[allow(clippy::too_many_arguments)]
+    /// Blocked multi-lane masked MAC: per-lane DX masks — strided
+    /// `Fx16` lanes or bitplane views ([`MaskRef`]) — so the kernel
+    /// reads gate lanes straight out of `[rows][GATES][dim]` mask
+    /// buffers without gather copies.
     pub fn mac_rows_masked(
         &self,
         x: &[Fx16],
         x_stride: usize,
-        mask: &[Fx16],
-        mask_stride: usize,
+        mask: MaskRef,
         acc: &mut [MacAcc],
         acc_stride: usize,
         rows: usize,
     ) {
-        kernels::active().mvm_fx(
+        self.backend.kernel().mvm_fx_packed(
             &self.weights,
-            self.in_dim,
-            self.out_dim,
             rows,
             x,
             x_stride,
-            Some((mask, mask_stride)),
+            Some(mask),
             acc,
             acc_stride,
         );
@@ -189,10 +212,11 @@ pub struct LstmEngine {
     tanh: ActLut,
     /// Sample lanes currently configured (MC samples x batched beats).
     rows: usize,
-    /// Current per-gate masks, `[rows][GATES][dim]` (pre-sampled per
-    /// input, Fig. 4).
-    pub zx: Vec<Fx16>,
-    pub zh: Vec<Fx16>,
+    /// Current per-gate DX masks, `[rows][GATES * dim]` bitplanes
+    /// (pre-sampled per input, Fig. 4) — 1 bit/element, consumed
+    /// directly by the kernels.
+    pub zx: BitPlanes,
+    pub zh: BitPlanes,
     /// Architectural state registers, `[rows][hdim]`.
     h: Vec<Fx16>,
     c: Vec<Fx32>,
@@ -261,8 +285,8 @@ impl LstmEngine {
             sigmoid: ActLut::sigmoid_fmt(spec.act),
             tanh: ActLut::tanh_fmt(spec.act),
             rows: 1,
-            zx: vec![Fx16::ONE; GATES * idim],
-            zh: vec![Fx16::ONE; GATES * hdim],
+            zx: BitPlanes::ones(1, GATES * idim),
+            zh: BitPlanes::ones(1, GATES * hdim),
             h: vec![Fx16::ZERO; hdim],
             c: vec![Fx32::ZERO; hdim],
             acc: vec![MacAcc::new(); hdim],
@@ -273,6 +297,13 @@ impl LstmEngine {
     /// The format lane data enters/leaves this engine in.
     pub fn act_format(&self) -> QFormat {
         self.spec.act
+    }
+
+    /// Switch every gate MVM to a kernel backend (bits unchanged).
+    pub fn set_backend(&mut self, backend: KernelBackend) {
+        for u in self.mvm_x.iter_mut().chain(self.mvm_h.iter_mut()) {
+            u.set_backend(backend);
+        }
     }
 
     /// Sample lanes currently configured.
@@ -287,33 +318,53 @@ impl LstmEngine {
         assert!(rows >= 1, "at least one sample lane");
         if rows != self.rows {
             self.rows = rows;
-            self.zx = vec![Fx16::ONE; rows * GATES * self.idim];
-            self.zh = vec![Fx16::ONE; rows * GATES * self.hdim];
+            self.zx = BitPlanes::ones(rows, GATES * self.idim);
+            self.zh = BitPlanes::ones(rows, GATES * self.hdim);
             self.h = vec![Fx16::ZERO; rows * self.hdim];
             self.c = vec![Fx32::ZERO; rows * self.hdim];
             self.acc = vec![MacAcc::new(); rows * self.hdim];
             self.pre = vec![Fx16::ZERO; rows * GATES * self.hdim];
         } else {
-            self.zx.fill(Fx16::ONE);
-            self.zh.fill(Fx16::ONE);
+            self.zx.fill_ones();
+            self.zh.fill_ones();
             self.reset();
         }
     }
 
-    /// Load pre-sampled masks into lane `r`. Masks are binary {0,1}
-    /// scaled to fixed point.
+    /// Load pre-sampled masks into lane `r`. Masks are binary {0,1}.
     pub fn set_masks_row(&mut self, r: usize, zx: &[f32], zh: &[f32]) {
         debug_assert!(r < self.rows);
         debug_assert_eq!(zx.len(), GATES * self.idim);
         debug_assert_eq!(zh.len(), GATES * self.hdim);
-        let xb = r * GATES * self.idim;
         for (j, &s) in zx.iter().enumerate() {
-            self.zx[xb + j] = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+            self.zx.set(r, j, s != 0.0);
         }
-        let hb = r * GATES * self.hdim;
         for (j, &s) in zh.iter().enumerate() {
-            self.zh[hb + j] = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+            self.zh.set(r, j, s != 0.0);
         }
+    }
+
+    /// Fill lane `r`'s masks straight from a Bernoulli bit source — the
+    /// SIPO widening of Fig. 3, with no f32 intermediate. Draw order is
+    /// the legacy contract: all `GATES * idim` zx bits, then all
+    /// `GATES * hdim` zh bits, each in ascending element order, so a
+    /// sampler driving this consumes exactly the stream positions the
+    /// old `fill`-into-f32 + `set_masks_row` path did (oracle-tested
+    /// below).
+    pub fn fill_masks_row(
+        &mut self,
+        r: usize,
+        mut keep: impl FnMut() -> bool,
+    ) {
+        debug_assert!(r < self.rows);
+        self.zx.fill_row(r, &mut keep);
+        self.zh.fill_row(r, &mut keep);
+    }
+
+    /// Bytes of DX-mask state currently held (16x below the `Fx16`
+    /// lane buffers these planes replaced).
+    pub fn mask_bytes(&self) -> usize {
+        self.zx.bytes() + self.zh.bytes()
     }
 
     /// Load pre-sampled masks (one per input sequence) — the single-lane
@@ -343,12 +394,12 @@ impl LstmEngine {
                 *a = MacAcc::new();
             }
             // DX gating fused into the MVMs (no masked copy — §Perf);
-            // gate-lane masks read strided out of [rows][GATES][dim].
+            // gate-lane mask bits probed strided out of the
+            // [rows][GATES * dim] bitplanes.
             self.mvm_x[g].mac_rows_masked(
                 xs,
                 x_stride,
-                &self.zx[g * idim..],
-                GATES * idim,
+                MaskRef::Bits(self.zx.lanes(g * idim)),
                 &mut self.acc,
                 hdim,
                 rows,
@@ -356,8 +407,7 @@ impl LstmEngine {
             self.mvm_h[g].mac_rows_masked(
                 &self.h,
                 hdim,
-                &self.zh[g * hdim..],
-                GATES * hdim,
+                MaskRef::Bits(self.zh.lanes(g * hdim)),
                 &mut self.acc,
                 hdim,
                 rows,
@@ -474,6 +524,11 @@ impl DenseEngine {
             self.acc = vec![MacAcc::new(); rows * o];
             self.out = vec![Fx16::ZERO; rows * o];
         }
+    }
+
+    /// Switch the head MVM to a kernel backend (bits unchanged).
+    pub fn set_backend(&mut self, backend: KernelBackend) {
+        self.mvm.set_backend(backend);
     }
 
     /// One dense pass over all lanes; returns `[rows][out_dim]`.
@@ -888,6 +943,123 @@ mod tests {
             QFormat::Q8_ACT,
         );
         assert_eq!(tiny.dsps_synthesized(), 0);
+    }
+
+    /// Engine-level leg of the backend-equivalence contract: scalar,
+    /// blocked and simd backends produce bit-identical hidden state
+    /// over a masked multi-lane, multi-step run.
+    #[test]
+    fn all_kernel_backends_bit_identical_at_engine_level() {
+        use crate::kernels::KernelBackend;
+        let mut rng = Rng::new(37);
+        let (idim, hdim, rows, steps) = (3, 5, 4, 6);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let masks: Vec<(Vec<f32>, Vec<f32>)> = (0..rows)
+            .map(|_| {
+                let zx: Vec<f32> = (0..GATES * idim)
+                    .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                    .collect();
+                let zh: Vec<f32> = (0..GATES * hdim)
+                    .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                    .collect();
+                (zx, zh)
+            })
+            .collect();
+        let xs: Vec<Fx16> = (0..steps * rows * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+        for spec in [QuantSpec::q16(), QuantSpec::q8()] {
+            let mut outs = Vec::new();
+            for backend in KernelBackend::ALL {
+                let mut e = LstmEngine::with_format(
+                    &wx, &wh, &b, 2, 1, true, spec,
+                );
+                e.set_backend(backend);
+                e.set_rows(rows);
+                for (r, (zx, zh)) in masks.iter().enumerate() {
+                    e.set_masks_row(r, zx, zh);
+                }
+                let mut h = Vec::new();
+                for t in 0..steps {
+                    let frame =
+                        &xs[t * rows * idim..(t + 1) * rows * idim];
+                    h = e.step_rows(frame, idim).to_vec();
+                }
+                outs.push((
+                    backend.name(),
+                    h.iter().map(|v| v.0).collect::<Vec<_>>(),
+                ));
+            }
+            for w in outs.windows(2) {
+                assert_eq!(
+                    w[0].1, w[1].1,
+                    "{}: {} != {} at engine level",
+                    spec.name(),
+                    w[0].0,
+                    w[1].0
+                );
+            }
+        }
+    }
+
+    /// Bitplane mask oracle: filling lane masks straight from the
+    /// sampler's bit stream consumes exactly the draws — and lands
+    /// exactly the bits — of the legacy f32-buffer fill +
+    /// `set_masks_row` path.
+    #[test]
+    fn fill_masks_row_matches_legacy_f32_fill_bit_for_bit() {
+        use crate::lfsr::BernoulliSampler;
+        let mut rng = Rng::new(43);
+        let (idim, hdim, rows) = (5, 7, 3);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let mut legacy = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        let mut planes = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        legacy.set_rows(rows);
+        planes.set_rows(rows);
+        let mut s1 = BernoulliSampler::new(77);
+        let mut s2 = BernoulliSampler::new(77);
+        for r in 0..rows {
+            // Legacy order: fill zx f32 buffer, fill zh, convert.
+            let mut zx = vec![0.0f32; GATES * idim];
+            let mut zh = vec![0.0f32; GATES * hdim];
+            s1.fill(&mut zx);
+            s1.fill(&mut zh);
+            legacy.set_masks_row(r, &zx, &zh);
+            // New order: bits straight off the same stream.
+            planes.fill_masks_row(r, || s2.sample() != 0.0);
+        }
+        assert_eq!(s1.cycles(), s2.cycles(), "same draw count");
+        for r in 0..rows {
+            for j in 0..GATES * idim {
+                assert_eq!(legacy.zx.get(r, j), planes.zx.get(r, j));
+            }
+            for j in 0..GATES * hdim {
+                assert_eq!(legacy.zh.get(r, j), planes.zh.get(r, j));
+            }
+        }
+        // And the planes undercut the Fx16 lanes they replaced even at
+        // these toy dims (the full 16x shows at word-filling widths —
+        // `kernels::bitplane` pins that ratio exactly).
+        let fx16_bytes = rows * GATES * (idim + hdim) * 2;
+        assert!(
+            planes.mask_bytes() < fx16_bytes,
+            "mask planes {}B vs {}B of Fx16 lanes",
+            planes.mask_bytes(),
+            fx16_bytes
+        );
+    }
+
+    #[test]
+    fn packed_weight_planes_shrink_with_the_format() {
+        let w = Tensor::zeros(&[8, 8]);
+        let q16 = MvmUnit::with_format(&w.data, 8, 8, 1, QFormat::Q16_ACT);
+        let q8 = MvmUnit::with_format(&w.data, 8, 8, 1, QFormat::Q8_ACT);
+        assert_eq!(q16.weight_bytes(), 128, "i16 rows at q16");
+        assert_eq!(q8.weight_bytes(), 64, "i8 rows halve weight traffic");
     }
 
     #[test]

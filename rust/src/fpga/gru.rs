@@ -4,8 +4,18 @@
 //! cell path (the GRU state is bounded by tanh, so the 16-bit path
 //! suffices), and an extra elementwise multiplier for r*(Wh_n h). The
 //! ablation bench compares DSP/latency/accuracy against the LSTM engine.
+//!
+//! Like the LSTM engine, the GRU is precision-parametric
+//! ([`GruEngine::with_format`], `docs/quantization.md`): `new` builds
+//! the paper's Q6.10 instance — bit-identical to the pre-parametric
+//! implementation, pinned by the legacy-op oracle test below — and
+//! `with_format` opens the 8/12-bit paths so `--precision` applies to
+//! GRU designs too. DX masks are packed [`BitPlanes`] fused into the
+//! MVMs through the shared kernel layer (no masked input copy), and the
+//! kernel backend is switchable per engine (`set_backend`).
 
-use crate::fixedpoint::{ActLut, Fx16, MacAcc};
+use crate::fixedpoint::{ActLut, Fx16, MacAcc, QFormat, QuantSpec};
+use crate::kernels::{BitPlanes, KernelBackend, MaskRef};
 use crate::nn::gru::GRU_GATES;
 use crate::tensor::Tensor;
 
@@ -18,19 +28,25 @@ pub struct GruEngine {
     pub mvm_h: Vec<MvmUnit>,
     pub bias: Vec<Fx16>,
     pub bayesian: bool,
+    /// Activation format this engine is quantised in (single-width —
+    /// no widened cell path in a GRU).
+    pub spec: QuantSpec,
     sigmoid: ActLut,
     tanh: ActLut,
-    pub zx: Vec<Fx16>,
-    pub zh: Vec<Fx16>,
+    /// 1.0 on the activation lattice (the `(1 - z)` constant).
+    one: Fx16,
+    /// DX masks, `[1][GRU_GATES * dim]` bitplanes.
+    pub zx: BitPlanes,
+    pub zh: BitPlanes,
     h: Vec<Fx16>,
-    masked: Vec<Fx16>,
     acc: Vec<MacAcc>,
     xterm: Vec<Fx16>,
     hterm: Vec<Fx16>,
 }
 
 impl GruEngine {
-    /// wx `[3, I, H]`, wh `[3, H, H]`, b `[3, H]` (gate order r, z, n).
+    /// wx `[3, I, H]`, wh `[3, H, H]`, b `[3, H]` (gate order r, z, n) —
+    /// the paper's Q6.10 instance.
     pub fn new(
         wx: &Tensor,
         wh: &Tensor,
@@ -39,25 +55,43 @@ impl GruEngine {
         rh: usize,
         bayesian: bool,
     ) -> Self {
+        Self::with_format(wx, wh, b, rx, rh, bayesian, QuantSpec::q16())
+    }
+
+    /// Build at an explicit format (the `--precision` path for GRU
+    /// designs). At `QuantSpec::q16()` this is bit-identical to the
+    /// legacy constructor (oracle test below).
+    pub fn with_format(
+        wx: &Tensor,
+        wh: &Tensor,
+        b: &Tensor,
+        rx: usize,
+        rh: usize,
+        bayesian: bool,
+        spec: QuantSpec,
+    ) -> Self {
         let idim = wx.shape[1];
         let hdim = wx.shape[2];
+        let fmt = spec.act;
         let mvm_x = (0..GRU_GATES)
             .map(|g| {
-                MvmUnit::new(
+                MvmUnit::with_format(
                     &wx.data[g * idim * hdim..(g + 1) * idim * hdim],
                     idim,
                     hdim,
                     rx,
+                    fmt,
                 )
             })
             .collect();
         let mvm_h = (0..GRU_GATES)
             .map(|g| {
-                MvmUnit::new(
+                MvmUnit::with_format(
                     &wh.data[g * hdim * hdim..(g + 1) * hdim * hdim],
                     hdim,
                     hdim,
                     rh,
+                    fmt,
                 )
             })
             .collect();
@@ -66,26 +100,41 @@ impl GruEngine {
             hdim,
             mvm_x,
             mvm_h,
-            bias: b.data.iter().map(|&v| Fx16::from_f32(v)).collect(),
+            bias: b.data.iter().map(|&v| fmt.quantize(v)).collect(),
             bayesian,
-            sigmoid: ActLut::sigmoid(),
-            tanh: ActLut::tanh(),
-            zx: vec![Fx16::ONE; GRU_GATES * idim],
-            zh: vec![Fx16::ONE; GRU_GATES * hdim],
+            spec,
+            sigmoid: ActLut::sigmoid_fmt(fmt),
+            tanh: ActLut::tanh_fmt(fmt),
+            one: fmt.quantize(1.0),
+            zx: BitPlanes::ones(1, GRU_GATES * idim),
+            zh: BitPlanes::ones(1, GRU_GATES * hdim),
             h: vec![Fx16::ZERO; hdim],
-            masked: vec![Fx16::ZERO; idim.max(hdim)],
             acc: vec![MacAcc::new(); hdim],
             xterm: vec![Fx16::ZERO; GRU_GATES * hdim],
             hterm: vec![Fx16::ZERO; GRU_GATES * hdim],
         }
     }
 
-    pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
-        for (d, &s) in self.zx.iter_mut().zip(zx) {
-            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+    /// The format lane data enters/leaves this engine in.
+    pub fn act_format(&self) -> QFormat {
+        self.spec.act
+    }
+
+    /// Switch every gate MVM to a kernel backend (bits unchanged).
+    pub fn set_backend(&mut self, backend: KernelBackend) {
+        for u in self.mvm_x.iter_mut().chain(self.mvm_h.iter_mut()) {
+            u.set_backend(backend);
         }
-        for (d, &s) in self.zh.iter_mut().zip(zh) {
-            *d = if s == 0.0 { Fx16::ZERO } else { Fx16::ONE };
+    }
+
+    pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
+        debug_assert_eq!(zx.len(), GRU_GATES * self.idim);
+        debug_assert_eq!(zh.len(), GRU_GATES * self.hdim);
+        for (j, &s) in zx.iter().enumerate() {
+            self.zx.set(0, j, s != 0.0);
+        }
+        for (j, &s) in zh.iter().enumerate() {
+            self.zh.set(0, j, s != 0.0);
         }
     }
 
@@ -95,22 +144,24 @@ impl GruEngine {
 
     pub fn step(&mut self, x: &[Fx16]) -> &[Fx16] {
         let hdim = self.hdim;
-        // x-path terms per gate: (x*zx_g) Wx_g + b_g.
+        let fmt = self.spec.act;
+        // x-path terms per gate: (x*zx_g) Wx_g + b_g — DX gating fused
+        // into the MVM through the kernel layer (no masked copy).
         for g in 0..GRU_GATES {
             for a in self.acc.iter_mut() {
                 *a = MacAcc::new();
             }
-            for i in 0..self.idim {
-                self.masked[i] = if self.zx[g * self.idim + i].0 == 0 {
-                    Fx16::ZERO
-                } else {
-                    x[i]
-                };
-            }
-            self.mvm_x[g].mac_into(&self.masked[..self.idim], &mut self.acc);
+            self.mvm_x[g].mac_rows_masked(
+                x,
+                self.idim,
+                MaskRef::Bits(self.zx.lanes(g * self.idim)),
+                &mut self.acc,
+                hdim,
+                1,
+            );
             for k in 0..hdim {
-                self.xterm[g * hdim + k] =
-                    self.acc[k].finish(self.bias[g * hdim + k]);
+                self.xterm[g * hdim + k] = self.acc[k]
+                    .finish_fmt(self.bias[g * hdim + k], fmt);
             }
         }
         // h-path terms per gate: (h*zh_g) Wh_g (bias already in xterm).
@@ -118,35 +169,37 @@ impl GruEngine {
             for a in self.acc.iter_mut() {
                 *a = MacAcc::new();
             }
-            for j in 0..hdim {
-                self.masked[j] = if self.zh[g * hdim + j].0 == 0 {
-                    Fx16::ZERO
-                } else {
-                    self.h[j]
-                };
-            }
-            self.mvm_h[g].mac_into(&self.masked[..hdim], &mut self.acc);
+            self.mvm_h[g].mac_rows_masked(
+                &self.h,
+                hdim,
+                MaskRef::Bits(self.zh.lanes(g * hdim)),
+                &mut self.acc,
+                hdim,
+                1,
+            );
             for k in 0..hdim {
-                self.hterm[g * hdim + k] = self.acc[k].finish(Fx16::ZERO);
+                self.hterm[g * hdim + k] =
+                    self.acc[k].finish_fmt(Fx16::ZERO, fmt);
             }
         }
         // Tail: r, z sigmoid on (xterm+hterm); n = tanh(xterm_n + r*hterm_n);
-        // h = (1-z) n + z h_prev.
+        // h = (1-z) n + z h_prev — all at the engine's format rails.
         for k in 0..hdim {
             let r = self.sigmoid.eval(
-                self.xterm[k].saturating_add(self.hterm[k]),
+                fmt.sat_add(self.xterm[k], self.hterm[k]),
             );
             let z = self.sigmoid.eval(
-                self.xterm[hdim + k].saturating_add(self.hterm[hdim + k]),
+                fmt.sat_add(self.xterm[hdim + k], self.hterm[hdim + k]),
             );
-            let n = self.tanh.eval(
-                self.xterm[2 * hdim + k]
-                    .saturating_add(r.saturating_mul(self.hterm[2 * hdim + k])),
+            let n = self.tanh.eval(fmt.sat_add(
+                self.xterm[2 * hdim + k],
+                fmt.sat_mul(r, self.hterm[2 * hdim + k]),
+            ));
+            let one_minus_z = fmt.sat_add(self.one, Fx16(-z.0));
+            self.h[k] = fmt.sat_add(
+                fmt.sat_mul(one_minus_z, n),
+                fmt.sat_mul(z, self.h[k]),
             );
-            let one_minus_z = Fx16::ONE.saturating_add(Fx16(-z.0));
-            self.h[k] = one_minus_z
-                .saturating_mul(n)
-                .saturating_add(z.saturating_mul(self.h[k]));
         }
         &self.h
     }
@@ -224,6 +277,184 @@ mod tests {
         }
     }
 
+    /// GRU-level leg of the Q6.10 contract (ISSUE 5 satellite): the
+    /// parametric engine at `QuantSpec::q16()` must reproduce, bit for
+    /// bit, a from-scratch reference step written entirely in the
+    /// frozen legacy `Fx16` ops and Q6.10 LUTs — the pre-parametric
+    /// implementation, masked-copy semantics included.
+    #[test]
+    fn q16_gru_matches_legacy_op_oracle_bitwise() {
+        let mut rng = Rng::new(19);
+        let (idim, hdim, steps) = (3, 5, 8);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let zx: Vec<f32> = (0..GRU_GATES * idim)
+            .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+            .collect();
+        let zh: Vec<f32> = (0..GRU_GATES * hdim)
+            .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+            .collect();
+        let xs: Vec<Fx16> = (0..steps * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+
+        let mut engine =
+            GruEngine::with_format(&wx, &wh, &b, 1, 1, true, QuantSpec::q16());
+        engine.set_masks(&zx, &zh);
+
+        // Legacy oracle: Fx16::from_f32 quantisation, masked input
+        // copies, ascending-row MACs, MacAcc::finish, tail with the
+        // frozen saturating ops and legacy Q6.10 LUTs.
+        let sigmoid = ActLut::sigmoid();
+        let tanh = ActLut::tanh();
+        let qw = |t: &Tensor| -> Vec<Fx16> {
+            t.data.iter().map(|&v| Fx16::from_f32(v)).collect()
+        };
+        let (qwx, qwh, qb) = (qw(&wx), qw(&wh), qw(&b));
+        let mut h = vec![Fx16::ZERO; hdim];
+        for t in 0..steps {
+            let x = &xs[t * idim..(t + 1) * idim];
+            let mut xterm = vec![Fx16::ZERO; GRU_GATES * hdim];
+            let mut hterm = vec![Fx16::ZERO; GRU_GATES * hdim];
+            for g in 0..GRU_GATES {
+                let mut acc = vec![MacAcc::new(); hdim];
+                for (i, &xi) in x.iter().enumerate() {
+                    let masked = if zx[g * idim + i] == 0.0 {
+                        Fx16::ZERO
+                    } else {
+                        xi
+                    };
+                    if masked.0 == 0 {
+                        continue;
+                    }
+                    for k in 0..hdim {
+                        acc[k].mac(masked, qwx[(g * idim + i) * hdim + k]);
+                    }
+                }
+                for k in 0..hdim {
+                    xterm[g * hdim + k] = acc[k].finish(qb[g * hdim + k]);
+                }
+            }
+            for g in 0..GRU_GATES {
+                let mut acc = vec![MacAcc::new(); hdim];
+                for (j, &hj) in h.iter().enumerate() {
+                    let masked = if zh[g * hdim + j] == 0.0 {
+                        Fx16::ZERO
+                    } else {
+                        hj
+                    };
+                    if masked.0 == 0 {
+                        continue;
+                    }
+                    for k in 0..hdim {
+                        acc[k].mac(masked, qwh[(g * hdim + j) * hdim + k]);
+                    }
+                }
+                for k in 0..hdim {
+                    hterm[g * hdim + k] = acc[k].finish(Fx16::ZERO);
+                }
+            }
+            for k in 0..hdim {
+                let r = sigmoid.eval(xterm[k].saturating_add(hterm[k]));
+                let z = sigmoid.eval(
+                    xterm[hdim + k].saturating_add(hterm[hdim + k]),
+                );
+                let n = tanh.eval(
+                    xterm[2 * hdim + k].saturating_add(
+                        r.saturating_mul(hterm[2 * hdim + k]),
+                    ),
+                );
+                let one_minus_z = Fx16::ONE.saturating_add(Fx16(-z.0));
+                h[k] = one_minus_z
+                    .saturating_mul(n)
+                    .saturating_add(z.saturating_mul(h[k]));
+            }
+            let got = engine.step(x);
+            assert_eq!(
+                got.iter().map(|v| v.0).collect::<Vec<_>>(),
+                h.iter().map(|v| v.0).collect::<Vec<_>>(),
+                "step {t}: parametric q16 GRU drifted from the \
+                 legacy-op oracle"
+            );
+        }
+    }
+
+    /// Narrow formats still track the float GRU, with a coarser bound —
+    /// the accuracy/resource trade `--precision` now opens for GRU
+    /// designs.
+    #[test]
+    fn narrow_format_gru_tracks_float_loosely() {
+        let mut rng = Rng::new(21);
+        let (idim, hdim, t) = (2, 6, 10);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let xs: Vec<f32> =
+            (0..t * idim).map(|_| rng.normal() as f32 * 0.7).collect();
+        let layer = GruLayer { wx: &wx, wh: &wh, b: &b };
+        let zx = Tensor::ones(&[1, GRU_GATES, idim]);
+        let zh = Tensor::ones(&[1, GRU_GATES, hdim]);
+        let cache = gru::forward(&layer, &xs, 1, t, &zx, &zh);
+        for (spec, tol) in [
+            (QuantSpec::q16(), 0.06f32),
+            (QuantSpec::q12(), 0.1),
+            (QuantSpec::q8(), 0.3),
+        ] {
+            let mut e =
+                GruEngine::with_format(&wx, &wh, &b, 1, 1, false, spec);
+            let mut last = vec![];
+            for ti in 0..t {
+                let xq: Vec<Fx16> = xs[ti * idim..(ti + 1) * idim]
+                    .iter()
+                    .map(|&v| spec.act.quantize(v))
+                    .collect();
+                last = e.step(&xq).to_vec();
+            }
+            for k in 0..hdim {
+                let got = spec.act.dequantize(last[k]);
+                let want = cache.last_h()[k];
+                assert!(
+                    (got - want).abs() < tol,
+                    "{} h[{k}]: fx {got} vs float {want}",
+                    spec.name()
+                );
+            }
+        }
+    }
+
+    /// Backend equivalence holds for the GRU engine too.
+    #[test]
+    fn all_kernel_backends_bit_identical_for_gru() {
+        let mut rng = Rng::new(25);
+        let (idim, hdim, steps) = (3, 6, 5);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let zx: Vec<f32> = (0..GRU_GATES * idim)
+            .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+            .collect();
+        let zh: Vec<f32> = (0..GRU_GATES * hdim)
+            .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+            .collect();
+        let xs: Vec<Fx16> = (0..steps * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+        let mut outs = Vec::new();
+        for backend in KernelBackend::ALL {
+            let mut e = GruEngine::new(&wx, &wh, &b, 1, 1, true);
+            e.set_backend(backend);
+            e.set_masks(&zx, &zh);
+            let mut h = vec![];
+            for t in 0..steps {
+                h = e.step(&xs[t * idim..(t + 1) * idim]).to_vec();
+            }
+            outs.push(h.iter().map(|v| v.0).collect::<Vec<_>>());
+        }
+        assert_eq!(outs[0], outs[1]);
+        assert_eq!(outs[1], outs[2]);
+    }
+
     #[test]
     fn gru_state_bounded() {
         let mut rng = Rng::new(9);
@@ -256,6 +487,31 @@ mod tests {
         assert!(g.dsps_synthesized() < l.dsps_synthesized());
         assert_eq!(g.ii(), l.ii());
         assert!(g.mask_bits() < l.mask_bits());
+    }
+
+    /// Packed q8 GRUs halve both their MVM DSPs and their weight-plane
+    /// bytes — `--precision q8` is now a real axis for GRU designs.
+    #[test]
+    fn q8_gru_packs_dsps_and_weight_bytes() {
+        let mut rng = Rng::new(2);
+        let (idim, hdim) = (8, 8);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.2);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.2);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let q16 = GruEngine::new(&wx, &wh, &b, 1, 1, true);
+        let q8 = GruEngine::with_format(
+            &wx, &wh, &b, 1, 1, true, QuantSpec::q8(),
+        );
+        assert!(q8.dsps_synthesized() < q16.dsps_synthesized());
+        let bytes =
+            |e: &GruEngine| -> usize {
+                e.mvm_x
+                    .iter()
+                    .chain(e.mvm_h.iter())
+                    .map(MvmUnit::weight_bytes)
+                    .sum()
+            };
+        assert_eq!(bytes(&q8) * 2, bytes(&q16), "i8 planes halve bytes");
     }
 
     #[test]

@@ -9,25 +9,65 @@
 //! P * latency / batch.
 
 use super::resource::ResourceEstimate;
+use crate::fixedpoint::Precision;
 
 pub struct PowerModel;
 
 impl PowerModel {
     /// Static + per-resource dynamic power [W], least-squares calibrated
-    /// on the two Table III/IV design points.
+    /// on the two Table III/IV design points (at the paper's 16-bit
+    /// operands — the coefficients embed full-width toggle activity).
     pub const FPGA_STATIC_W: f64 = 0.30;
     pub const W_PER_LUT: f64 = 8.46e-6;
     pub const W_PER_DSP: f64 = 1.83e-3;
     pub const W_PER_BRAM: f64 = 8.0e-4;
     pub const W_PER_FF: f64 = 4.0e-7;
 
-    /// FPGA board power for a synthesised design.
+    /// FPGA board power for a synthesised design at the 16-bit
+    /// reference operands (numerically identical to
+    /// [`PowerModel::fpga_watts_q`] with `Precision::q16()`).
     pub fn fpga_watts(res: &ResourceEstimate) -> f64 {
         Self::FPGA_STATIC_W
             + Self::W_PER_LUT * res.luts
             + Self::W_PER_DSP * res.dsps
             + Self::W_PER_BRAM * res.brams
             + Self::W_PER_FF * res.ffs
+    }
+
+    /// Dynamic-activity scale for narrow operands: switching energy in
+    /// the MVM datapaths tracks the number of toggling operand bits, so
+    /// the *dynamic* term scales linearly between half activity (datapath
+    /// width fixed, operands narrowed to nothing) and full activity at
+    /// 16 bits — `0.5 + 0.5 * bits / 16`. Clock trees, control and the
+    /// static term do not narrow, which is why the floor is 1/2 rather
+    /// than `bits / 16`. Per-layer overrides are averaged over the
+    /// design's LSTM layers.
+    pub fn width_activity(precision: &Precision, lstm_layers: usize) -> f64 {
+        let layers = lstm_layers.max(1);
+        let mean_bits: f64 = (0..layers)
+            .map(|l| precision.spec_for(l).act.total_bits as f64)
+            .sum::<f64>()
+            / layers as f64;
+        0.5 + 0.5 * mean_bits / 16.0
+    }
+
+    /// FPGA board power at an explicit precision (ISSUE 5 satellite,
+    /// PR 4 follow-up): the resource *counts* already shrink with the
+    /// format (`ResourceModel::estimate_q`); this adds the second-order
+    /// effect that the resources which remain also toggle fewer bits.
+    /// Exactly [`PowerModel::fpga_watts`] at q16 — the Table IV
+    /// calibration is untouched.
+    pub fn fpga_watts_q(
+        res: &ResourceEstimate,
+        precision: &Precision,
+        lstm_layers: usize,
+    ) -> f64 {
+        let a = Self::width_activity(precision, lstm_layers);
+        Self::FPGA_STATIC_W
+            + a * (Self::W_PER_LUT * res.luts
+                + Self::W_PER_DSP * res.dsps
+                + Self::W_PER_BRAM * res.brams
+                + Self::W_PER_FF * res.ffs)
     }
 
     /// Xeon E5-2680 v2 under the MKLDNN RNN workload (paper power meter:
@@ -89,6 +129,35 @@ mod tests {
         let w = PowerModel::fpga_watts(&res);
         assert!(w < PowerModel::cpu_watts() / 2.0);
         assert!(w < PowerModel::gpu_watts() / 10.0);
+    }
+
+    /// Bitwidth sensitivity (ISSUE 5 satellite): q16 reproduces the
+    /// calibrated model exactly; narrower operands cut the dynamic
+    /// term monotonically but never below static + half dynamic.
+    #[test]
+    fn width_scaled_power_is_calibrated_at_q16_and_monotone() {
+        use crate::fixedpoint::QuantSpec;
+        let res = ResourceEstimate {
+            dsps: 758.0,
+            luts: 207_000.0,
+            ffs: 218_000.0,
+            brams: 149.0,
+        };
+        let nl = 4;
+        let w16 = PowerModel::fpga_watts_q(&res, &Precision::q16(), nl);
+        assert_eq!(w16, PowerModel::fpga_watts(&res), "q16 == legacy");
+        let w12 = PowerModel::fpga_watts_q(&res, &Precision::q12(), nl);
+        let w8 = PowerModel::fpga_watts_q(&res, &Precision::q8(), nl);
+        assert!(w8 < w12 && w12 < w16, "{w8} < {w12} < {w16}");
+        let dynamic = PowerModel::fpga_watts(&res) - PowerModel::FPGA_STATIC_W;
+        assert!(w8 > PowerModel::FPGA_STATIC_W + 0.5 * dynamic);
+        // Mixed per-layer precision lands between the uniform bounds.
+        let mixed = Precision::q16().with_layer(0, QuantSpec::q8());
+        let wm = PowerModel::fpga_watts_q(&res, &mixed, nl);
+        assert!(w8 < wm && wm < w16);
+        // Activity scale itself: q8 over 16 bits = 0.5 + 0.25.
+        let a8 = PowerModel::width_activity(&Precision::q8(), 1);
+        assert!((a8 - 0.75).abs() < 1e-12);
     }
 
     #[test]

@@ -1,0 +1,204 @@
+//! Bitplane dropout masks: the DX keep/drop gates packed one bit per
+//! element.
+//!
+//! The hardware never materialises masks as words — the Bernoulli
+//! sampler's bit stream is widened through a SIPO register and consumed
+//! as *bits* by the gate engines (paper Sec. III-B, Fig. 3; VIBNN,
+//! arXiv:1802.00822, makes the same point that mask generation and
+//! storage are first-order costs in a Bayesian accelerator). The
+//! simulator used to expand every mask bit into a 16-bit `Fx16` word
+//! (`[rows][GATES][dim]` buffers), moving 16x the hardware's mask
+//! traffic through memory on every beat. [`BitPlanes`] restores the
+//! hardware's layout: a `[rows][width]` bitset the kernels probe
+//! directly through a [`BitLanes`] view — same bits, 1/16th the bytes.
+//!
+//! Generation order is the contract: [`BitPlanes::fill_row`] consumes a
+//! bit source in ascending element order, exactly the order the old
+//! f32 buffer fills (`BernoulliSampler::fill`, `Rng`-driven
+//! `Masks::sample`) drew, so the packed masks are bit-for-bit the masks
+//! the scalar path produced (oracle-tested in `fpga::engine` and
+//! `coordinator::engines`).
+
+/// A `[rows][width]` bitset of keep/drop mask bits. Bit set = keep.
+/// Rows are word-aligned so a lane view's stride is a whole number of
+/// bits and the kernel's per-element probe is one shift+mask.
+#[derive(Debug, Clone)]
+pub struct BitPlanes {
+    words: Vec<u64>,
+    rows: usize,
+    width: usize,
+    words_per_row: usize,
+}
+
+impl BitPlanes {
+    /// All-ones planes (every element kept — the non-Bayesian default).
+    pub fn ones(rows: usize, width: usize) -> Self {
+        let words_per_row = width.div_ceil(64).max(1);
+        Self {
+            words: vec![u64::MAX; rows * words_per_row],
+            rows,
+            width,
+            words_per_row,
+        }
+    }
+
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    pub fn width(&self) -> usize {
+        self.width
+    }
+
+    /// Reset every bit to keep.
+    pub fn fill_ones(&mut self) {
+        self.words.fill(u64::MAX);
+    }
+
+    #[inline]
+    fn pos(&self, r: usize, i: usize) -> (usize, u32) {
+        debug_assert!(r < self.rows && i < self.width);
+        (r * self.words_per_row + i / 64, (i % 64) as u32)
+    }
+
+    /// Set element `(r, i)` to keep (`true`) or drop (`false`).
+    #[inline]
+    pub fn set(&mut self, r: usize, i: usize, keep: bool) {
+        let (w, b) = self.pos(r, i);
+        if keep {
+            self.words[w] |= 1u64 << b;
+        } else {
+            self.words[w] &= !(1u64 << b);
+        }
+    }
+
+    #[inline]
+    pub fn get(&self, r: usize, i: usize) -> bool {
+        let (w, b) = self.pos(r, i);
+        (self.words[w] >> b) & 1 == 1
+    }
+
+    /// Fill row `r` from a bit source in **ascending element order** —
+    /// the SIPO widening. The source is called exactly `width` times,
+    /// so a sampler driving it consumes the same stream positions the
+    /// legacy f32-buffer fill did.
+    pub fn fill_row(&mut self, r: usize, mut keep: impl FnMut() -> bool) {
+        for i in 0..self.width {
+            let k = keep();
+            self.set(r, i, k);
+        }
+    }
+
+    /// Mask bytes actually stored (the 16x-vs-`Fx16` claim is
+    /// `bytes() * 16 ~ rows * width * 2`).
+    pub fn bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Lane view starting `base` bits into every row — the per-gate
+    /// mask lanes of a `[rows][GATES * dim]` plane are
+    /// `lanes(g * dim)`.
+    #[inline]
+    pub fn lanes(&self, base: usize) -> BitLanes<'_> {
+        BitLanes { words: &self.words, base, stride: self.words_per_row * 64 }
+    }
+}
+
+/// A borrowed strided view into a bitset: element `(r, i)` is bit
+/// `base + r * stride + i`. This is the form the kernels consume
+/// ([`super::MaskRef::Bits`]).
+#[derive(Debug, Clone, Copy)]
+pub struct BitLanes<'a> {
+    pub words: &'a [u64],
+    /// Bit offset of element (0, 0).
+    pub base: usize,
+    /// Row stride in bits.
+    pub stride: usize,
+}
+
+impl BitLanes<'_> {
+    #[inline]
+    pub fn keep(&self, r: usize, i: usize) -> bool {
+        let bit = self.base + r * self.stride + i;
+        (self.words[bit / 64] >> (bit % 64)) & 1 == 1
+    }
+
+    /// Every probed bit must lie inside the word array.
+    pub(crate) fn check(&self, rows: usize, in_dim: usize) {
+        if rows == 0 || in_dim == 0 {
+            return;
+        }
+        let last = self.base + (rows - 1) * self.stride + in_dim - 1;
+        assert!(last / 64 < self.words.len(), "bitplane mask out of bounds");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip_across_word_boundaries() {
+        let mut p = BitPlanes::ones(3, 130);
+        assert!(p.get(2, 129));
+        p.set(1, 63, false);
+        p.set(1, 64, false);
+        p.set(2, 129, false);
+        assert!(!p.get(1, 63));
+        assert!(!p.get(1, 64));
+        assert!(!p.get(2, 129));
+        assert!(p.get(0, 63), "other rows untouched");
+        assert!(p.get(1, 65));
+        p.fill_ones();
+        assert!(p.get(1, 63) && p.get(2, 129));
+    }
+
+    #[test]
+    fn fill_row_consumes_bits_in_ascending_order() {
+        let mut p = BitPlanes::ones(2, 9);
+        let mut seq = Vec::new();
+        let mut n = 0u32;
+        p.fill_row(1, || {
+            n += 1;
+            let keep = n % 3 != 0;
+            seq.push(keep);
+            keep
+        });
+        assert_eq!(seq.len(), 9, "exactly width draws");
+        for (i, &k) in seq.iter().enumerate() {
+            assert_eq!(p.get(1, i), k, "bit {i}");
+        }
+        // Row 0 untouched.
+        assert!((0..9).all(|i| p.get(0, i)));
+    }
+
+    #[test]
+    fn lane_views_select_strided_elements() {
+        // [rows = 2][GATES = 3 x dim = 5] layout, lane g = base g*5.
+        let mut p = BitPlanes::ones(2, 15);
+        p.set(0, 5 + 2, false); // row 0, gate 1, elem 2
+        p.set(1, 10 + 4, false); // row 1, gate 2, elem 4
+        let g1 = p.lanes(5);
+        assert!(!g1.keep(0, 2));
+        assert!(g1.keep(1, 2));
+        let g2 = p.lanes(10);
+        assert!(!g2.keep(1, 4));
+        assert!(g2.keep(0, 4));
+        g2.check(2, 5); // in bounds
+    }
+
+    #[test]
+    fn packed_storage_is_16x_smaller_than_fx16_words() {
+        // 8 lanes x 4 gates x 64 elements: Fx16 masks are 2 bytes/elem.
+        let p = BitPlanes::ones(8, 4 * 64);
+        let fx16_bytes = 8 * 4 * 64 * 2;
+        assert_eq!(p.bytes() * 16, fx16_bytes);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn lane_bounds_are_checked() {
+        let p = BitPlanes::ones(2, 8);
+        p.lanes(60).check(2, 8); // row 1 would read past the words
+    }
+}

@@ -8,12 +8,20 @@
 //! `[s_block x out_dim]` accumulators playing the role of the engine's
 //! parallel sample lanes.
 //!
-//! Bit-exactness: for a fixed output element `(r, k)` the terms still
-//! arrive in ascending `i`, so results are bit-identical to
+//! The schedule itself lives in the shared cores
+//! ([`super::run_fx_blocked`] / [`super::run_f32_blocked`]); this
+//! backend contributes the plain per-element row MAC. Bit-exactness:
+//! for a fixed output element `(r, k)` the terms still arrive in
+//! ascending `i`, so results are bit-identical to
 //! [`super::ScalarKernel`] (asserted by the property tests in
-//! `super::tests` for both `Fx16` and `f32`).
+//! `super::tests` for both `Fx16` and `f32`, packed planes and bitplane
+//! masks included).
 
-use super::{check_bounds, Kernel};
+use super::packed::{with_plane, WeightElem};
+use super::{
+    check_bounds_f32, check_bounds_fx, run_f32_blocked, run_fx_blocked,
+    Kernel, MaskRef, PackedWeights,
+};
 use crate::fixedpoint::{Fx16, MacAcc};
 
 pub struct BlockedKernel {
@@ -24,6 +32,14 @@ pub struct BlockedKernel {
 impl Default for BlockedKernel {
     fn default() -> Self {
         Self { s_block: super::DEFAULT_S_BLOCK }
+    }
+}
+
+/// Plain row MAC: one widening multiply-accumulate per output element.
+#[inline(always)]
+fn mac_row<W: WeightElem>(xi: i16, wrow: &[W], acc_r: &mut [MacAcc]) {
+    for (a, &wv) in acc_r.iter_mut().zip(wrow) {
+        a.mac_raw(xi, wv.raw());
     }
 }
 
@@ -40,46 +56,70 @@ impl Kernel for BlockedKernel {
         rows: usize,
         x: &[Fx16],
         x_stride: usize,
-        mask: Option<(&[Fx16], usize)>,
+        mask: Option<MaskRef>,
         acc: &mut [MacAcc],
         acc_stride: usize,
     ) {
-        check_bounds(
+        check_bounds_fx(
             w.len(),
             in_dim,
             out_dim,
             rows,
             x.len(),
             x_stride,
-            mask.map(|(m, s)| (m.len(), s)),
+            mask.as_ref(),
             acc.len(),
             acc_stride,
         );
-        let s_block = self.s_block.max(1);
-        let mut r0 = 0;
-        while r0 < rows {
-            let r1 = (r0 + s_block).min(rows);
-            for i in 0..in_dim {
-                let wrow = &w[i * out_dim..(i + 1) * out_dim];
-                for r in r0..r1 {
-                    let xi = x[r * x_stride + i];
-                    if xi.0 == 0 {
-                        continue; // DX gating, as in the scalar kernel
-                    }
-                    if let Some((m, ms)) = mask {
-                        if m[r * ms + i].0 == 0 {
-                            continue;
-                        }
-                    }
-                    let acc_r =
-                        &mut acc[r * acc_stride..r * acc_stride + out_dim];
-                    for (a, &wv) in acc_r.iter_mut().zip(wrow) {
-                        a.mac(xi, wv);
-                    }
-                }
-            }
-            r0 = r1;
-        }
+        run_fx_blocked(
+            self.s_block,
+            w,
+            in_dim,
+            out_dim,
+            rows,
+            x,
+            x_stride,
+            mask,
+            acc,
+            acc_stride,
+            mac_row,
+        );
+    }
+
+    fn mvm_fx_packed(
+        &self,
+        w: &PackedWeights,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        check_bounds_fx(
+            w.len(),
+            w.in_dim,
+            w.out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.as_ref(),
+            acc.len(),
+            acc_stride,
+        );
+        with_plane!(w, p => run_fx_blocked(
+            self.s_block,
+            p,
+            w.in_dim,
+            w.out_dim,
+            rows,
+            x,
+            x_stride,
+            mask,
+            acc,
+            acc_stride,
+            mac_row,
+        ));
     }
 
     fn mvm_f32(
@@ -94,7 +134,7 @@ impl Kernel for BlockedKernel {
         out: &mut [f32],
         out_stride: usize,
     ) {
-        check_bounds(
+        check_bounds_f32(
             w.len(),
             in_dim,
             out_dim,
@@ -105,29 +145,22 @@ impl Kernel for BlockedKernel {
             out.len(),
             out_stride,
         );
-        let s_block = self.s_block.max(1);
-        let mut r0 = 0;
-        while r0 < rows {
-            let r1 = (r0 + s_block).min(rows);
-            for i in 0..in_dim {
-                let wrow = &w[i * out_dim..(i + 1) * out_dim];
-                for r in r0..r1 {
-                    let xi = x[r * x_stride + i];
-                    let xv = match mask {
-                        Some((m, ms)) => xi * m[r * ms + i],
-                        None => xi,
-                    };
-                    if xv == 0.0 {
-                        continue;
-                    }
-                    let out_r =
-                        &mut out[r * out_stride..r * out_stride + out_dim];
-                    for (o, &wv) in out_r.iter_mut().zip(wrow) {
-                        *o += xv * wv;
-                    }
+        run_f32_blocked(
+            self.s_block,
+            w,
+            in_dim,
+            out_dim,
+            rows,
+            x,
+            x_stride,
+            mask,
+            out,
+            out_stride,
+            |xv, wrow, out_r| {
+                for (o, &wv) in out_r.iter_mut().zip(wrow) {
+                    *o += xv * wv;
                 }
-            }
-            r0 = r1;
-        }
+            },
+        );
     }
 }

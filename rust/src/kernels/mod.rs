@@ -1,56 +1,84 @@
-//! Unified blocked-kernel compute layer (paper Sec. IV co-design).
+//! Runtime-dispatched multi-backend kernel layer (paper Sec. IV
+//! co-design).
 //!
 //! The paper's central hardware win is amortising each weight fetch
 //! across Monte-Carlo samples and batched inputs: the LSTM engines keep
 //! one copy of the weights on chip and stream S MC samples (and B
 //! batched beats) through them, so a weight row is read once per
-//! timestep instead of once per sample. The simulator used to walk
-//! every weight matrix once per sample per beat; this module is the
-//! shared kernel layer that gives every matrix-vector hot loop in the
-//! crate — the float model ([`crate::nn`]), the fixed-point engines
+//! timestep instead of once per sample. This module is the shared
+//! kernel layer that gives every matrix-vector hot loop in the crate —
+//! the float model ([`crate::nn`]), the fixed-point engines
 //! ([`crate::fpga::engine`]) and the serving fleet's batched entry
-//! points — that same amortisation.
-//!
-//! Two implementations of one [`Kernel`] contract:
+//! points — that same amortisation, behind one [`Kernel`] contract
+//! with three selectable backends (`docs/kernels.md` §Backends):
 //!
 //! * [`ScalarKernel`] — the reference. Row-at-a-time, literally the
 //!   loop nest the engines shipped with (sample outer, weight row
 //!   inner). Kept for equivalence tests and as the bench baseline.
-//! * [`BlockedKernel`] — the production kernel. Weight row outer,
-//!   sample block inner: each fetched row is MAC'd into up to
-//!   `s_block` accumulator rows before the next row is touched
-//!   (`[S_block x out_dim]` live accumulators, the Fig. 2 gate-engine
-//!   shape).
+//! * [`BlockedKernel`] — weight row outer, sample block inner: each
+//!   fetched row is MAC'd into up to `s_block` accumulator rows before
+//!   the next row is touched (`[S_block x out_dim]` live accumulators,
+//!   the Fig. 2 gate-engine shape).
+//! * [`SimdKernel`] — the blocked schedule with the inner `out_dim`
+//!   loop tiled into fixed-width lanes ([`simd::LANES`]) the compiler
+//!   autovectorizes (stable Rust, no intrinsics, no new deps).
+//!
+//! The backend is selected at runtime through the [`KernelBackend`]
+//! registry: process-wide via `REPRO_KERNEL` / [`set_default_backend`]
+//! (the `repro serve --kernel` flag), per engine via the `set_backend`
+//! hooks in [`crate::fpga::engine`] / [`crate::fpga::accel`] /
+//! [`crate::coordinator`].
+//!
+//! Two further operand-packing layers mirror the accelerator's
+//! bandwidth story on the software side:
+//!
+//! * [`PackedWeights`] — q8 weight planes stored as `i8` rows (i16 at
+//!   q12/q16), widened in-register at MAC time ([`packed`]).
+//! * [`BitPlanes`] / [`MaskRef::Bits`] — dropout masks packed one bit
+//!   per element, probed directly by the kernels ([`bitplane`]).
 //!
 //! ## Bit-exactness contract
 //!
-//! Both kernels produce **bit-identical** results (`docs/kernels.md`):
+//! All backends produce **bit-identical** results (`docs/kernels.md`):
 //! for every output element `(r, k)` the contributing terms are
-//! accumulated in ascending weight-row order `i`, whatever the blocking.
-//! For the fixed-point path that is trivially exact (the [`MacAcc`]
-//! accumulator is a plain `i64` add); for `f32` the identical term
-//! order makes float rounding identical too. The property tests below
-//! assert bitwise equality across random shapes, strides, block sizes
-//! and mask patterns; `fpga::accel` asserts the same contract one level
-//! up (`predict_batch` vs per-request `predict_seeded`).
+//! accumulated in ascending weight-row order `i`, whatever the blocking
+//! or lane tiling. For the fixed-point path that is trivially exact
+//! (the [`MacAcc`] accumulator is a plain `i64` add); for `f32` the
+//! identical term order makes float rounding identical too. Packed
+//! weights and bitplane masks preserve the contract because widening a
+//! raw lattice point and probing a mask bit are both exact. The
+//! property tests below assert bitwise equality across random shapes,
+//! strides, block sizes, mask representations and weight planes;
+//! `fpga::engine`, `fpga::accel` and `coordinator::engines` assert the
+//! same contract at the engine, accelerator and fleet levels.
 //!
 //! ## Masking semantics
 //!
 //! Masks are the MC-dropout DX gates (binary keep/drop):
 //!
-//! * fixed point: a row with `mask[i] == 0` is *skipped* (the engine's
-//!   DX gating — zero rows do no switching); kept rows use `x[i]`
-//!   unchanged.
+//! * fixed point: a dropped row is *skipped* (the engine's DX gating —
+//!   zero rows do no switching); kept rows use `x[i]` unchanged. The
+//!   mask is either strided `Fx16` lanes ([`MaskRef::Lanes`], zero raw
+//!   = drop) or a packed bitplane ([`MaskRef::Bits`], clear bit =
+//!   drop) — identical skip set either way.
 //! * float: the masked input is `x[i] * mask[i]` (the software models
 //!   multiply by the {0.0, 1.0} mask before the matmul); rows whose
 //!   masked value is exactly `0.0` are skipped, matching the zero-skip
 //!   in the original `nn::lstm` loops.
 
+pub mod bitplane;
 pub mod blocked;
+pub mod packed;
 pub mod scalar;
+pub mod simd;
 
+pub use bitplane::{BitLanes, BitPlanes};
 pub use blocked::BlockedKernel;
+pub use packed::{PackedWeights, WeightElem};
 pub use scalar::ScalarKernel;
+pub use simd::SimdKernel;
+
+use std::sync::atomic::{AtomicU8, Ordering};
 
 use crate::fixedpoint::{Fx16, MacAcc};
 
@@ -59,37 +87,161 @@ use crate::fixedpoint::{Fx16, MacAcc};
 /// hidden sizes while amortising each weight-row fetch 16x.
 pub const DEFAULT_S_BLOCK: usize = 16;
 
-/// The production kernel every engine runs on.
-static ACTIVE: BlockedKernel = BlockedKernel { s_block: DEFAULT_S_BLOCK };
+/// The selectable kernel backends (`docs/kernels.md` §Backends).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+pub enum KernelBackend {
+    /// Legacy per-sample loop nest — the bit-exactness oracle and bench
+    /// baseline.
+    Scalar = 0,
+    /// Weight-row-outer sample blocking (the PR 3 production kernel).
+    Blocked = 1,
+    /// Blocked schedule + fixed-width autovectorized lanes.
+    Simd = 2,
+}
 
-/// The kernel the engines use on the hot path.
+impl KernelBackend {
+    pub const ALL: [KernelBackend; 3] =
+        [KernelBackend::Scalar, KernelBackend::Blocked, KernelBackend::Simd];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Blocked => "blocked",
+            KernelBackend::Simd => "simd",
+        }
+    }
+
+    /// Parse a CLI / `REPRO_KERNEL` selector.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s.trim() {
+            "scalar" => Ok(KernelBackend::Scalar),
+            "blocked" => Ok(KernelBackend::Blocked),
+            "simd" => Ok(KernelBackend::Simd),
+            other => Err(format!(
+                "unknown kernel backend {other:?} (scalar | blocked | simd)"
+            )),
+        }
+    }
+
+    /// The registry: one static instance per backend.
+    pub fn kernel(self) -> &'static dyn Kernel {
+        static SCALAR: ScalarKernel = ScalarKernel;
+        static BLOCKED: BlockedKernel =
+            BlockedKernel { s_block: DEFAULT_S_BLOCK };
+        static SIMD: SimdKernel = SimdKernel { s_block: DEFAULT_S_BLOCK };
+        match self {
+            KernelBackend::Scalar => &SCALAR,
+            KernelBackend::Blocked => &BLOCKED,
+            KernelBackend::Simd => &SIMD,
+        }
+    }
+
+    fn from_u8(v: u8) -> Self {
+        match v {
+            0 => KernelBackend::Scalar,
+            2 => KernelBackend::Simd,
+            _ => KernelBackend::Blocked,
+        }
+    }
+}
+
+/// Sentinel: the process default has not been resolved yet.
+const BACKEND_UNSET: u8 = u8::MAX;
+static DEFAULT_BACKEND: AtomicU8 = AtomicU8::new(BACKEND_UNSET);
+
+/// The process-wide default backend: `REPRO_KERNEL` if set and valid
+/// (resolved once), otherwise [`KernelBackend::Blocked`]. Engines
+/// capture it at construction; [`set_default_backend`] (the `--kernel`
+/// flag) overrides it for everything constructed afterwards.
+pub fn default_backend() -> KernelBackend {
+    match DEFAULT_BACKEND.load(Ordering::Relaxed) {
+        BACKEND_UNSET => {
+            let b = std::env::var("REPRO_KERNEL")
+                .ok()
+                .and_then(|s| match KernelBackend::parse(&s) {
+                    Ok(b) => Some(b),
+                    Err(e) => {
+                        eprintln!("note: REPRO_KERNEL ignored — {e}");
+                        None
+                    }
+                })
+                .unwrap_or(KernelBackend::Blocked);
+            DEFAULT_BACKEND.store(b as u8, Ordering::Relaxed);
+            b
+        }
+        v => KernelBackend::from_u8(v),
+    }
+}
+
+/// Override the process-wide default backend (CLI `--kernel`). Every
+/// backend computes bit-identical results, so flipping this mid-run
+/// changes cost shape, never numerics.
+pub fn set_default_backend(b: KernelBackend) {
+    DEFAULT_BACKEND.store(b as u8, Ordering::Relaxed);
+}
+
+/// The kernel used by paths without an engine-level backend override
+/// (the float model's forward loops).
 #[inline]
-pub fn active() -> &'static BlockedKernel {
-    &ACTIVE
+pub fn active() -> &'static dyn Kernel {
+    default_backend().kernel()
+}
+
+/// A dropout-mask view the fixed-point kernels probe per element.
+#[derive(Debug, Clone, Copy)]
+pub enum MaskRef<'a> {
+    /// Strided `{0, 1}` `Fx16` lanes: element `(r, i)` at
+    /// `m[r * stride + i]`; zero raw value = drop.
+    Lanes(&'a [Fx16], usize),
+    /// Packed bitplane lanes (1 bit/element): clear bit = drop.
+    Bits(BitLanes<'a>),
+}
+
+impl MaskRef<'_> {
+    #[inline(always)]
+    pub fn keep(&self, r: usize, i: usize) -> bool {
+        match self {
+            MaskRef::Lanes(m, stride) => m[r * stride + i].0 != 0,
+            MaskRef::Bits(b) => b.keep(r, i),
+        }
+    }
+
+    fn check(&self, rows: usize, in_dim: usize) {
+        if rows == 0 {
+            return;
+        }
+        match self {
+            MaskRef::Lanes(m, stride) => assert!(
+                (rows - 1) * stride + in_dim <= m.len(),
+                "mask rows out of bounds"
+            ),
+            MaskRef::Bits(b) => b.check(rows, in_dim),
+        }
+    }
 }
 
 /// A blocked masked matrix-vector-multiply kernel over row-major
 /// `[in_dim][out_dim]` weights.
 ///
 /// For each row `r` in `0..rows`, reading input row
-/// `x[r * x_stride ..][..in_dim]` and (if present) mask row
-/// `mask[r * mask_stride ..][..in_dim]`, the kernel accumulates
+/// `x[r * x_stride ..][..in_dim]` and (if present) mask element
+/// `(r, i)`, the kernel accumulates
 ///
 /// ```text
 ///   out[r * out_stride + k] += masked(x_r[i]) * w[i * out_dim + k]
 /// ```
 ///
 /// over the kept rows `i` in **ascending order** — the bit-exactness
-/// contract both implementations share. Strides let callers point the
-/// kernel directly at interleaved tensors (e.g. per-gate mask rows in a
+/// contract every backend shares. Strides let callers point the kernel
+/// directly at interleaved tensors (e.g. per-gate mask lanes in a
 /// `[rows][GATES][dim]` buffer) without gather copies.
-pub trait Kernel {
+pub trait Kernel: Sync {
     fn name(&self) -> &'static str;
 
     /// Fixed-point MVM into wide [`MacAcc`] accumulators (the DSP48
-    /// cascade). Kept rows use `x[i]` unchanged; `mask[i].0 == 0` or
-    /// `x[i].0 == 0` skips the row (DX gating).
-    #[allow(clippy::too_many_arguments)]
+    /// cascade). Kept rows use `x[i]` unchanged; a dropped mask element
+    /// or `x[i].0 == 0` skips the row (DX gating).
     fn mvm_fx(
         &self,
         w: &[Fx16],
@@ -98,7 +250,21 @@ pub trait Kernel {
         rows: usize,
         x: &[Fx16],
         x_stride: usize,
-        mask: Option<(&[Fx16], usize)>,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    );
+
+    /// Fixed-point MVM over a packed narrow weight plane — identical
+    /// contract and bits as [`Kernel::mvm_fx`] on the unpacked plane;
+    /// the narrow rows are widened in-register at MAC time.
+    fn mvm_fx_packed(
+        &self,
+        w: &PackedWeights,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
         acc: &mut [MacAcc],
         acc_stride: usize,
     );
@@ -106,7 +272,6 @@ pub trait Kernel {
     /// Float MVM accumulating into `out` (add, not overwrite — callers
     /// preload bias rows). The masked input is `x[i] * mask[i]`; exact
     /// zeros are skipped.
-    #[allow(clippy::too_many_arguments)]
     fn mvm_f32(
         &self,
         w: &[f32],
@@ -124,7 +289,126 @@ pub trait Kernel {
 /// Shared bounds checks: every row's input, mask and output slice must
 /// lie inside its buffer.
 #[inline]
-pub(crate) fn check_bounds(
+pub(crate) fn check_bounds_fx(
+    w_len: usize,
+    in_dim: usize,
+    out_dim: usize,
+    rows: usize,
+    x_len: usize,
+    x_stride: usize,
+    mask: Option<&MaskRef>,
+    out_len: usize,
+    out_stride: usize,
+) {
+    assert_eq!(w_len, in_dim * out_dim, "weight shape mismatch");
+    if rows == 0 {
+        return;
+    }
+    assert!(
+        (rows - 1) * x_stride + in_dim <= x_len,
+        "input rows out of bounds"
+    );
+    if let Some(m) = mask {
+        m.check(rows, in_dim);
+    }
+    assert!(
+        (rows - 1) * out_stride + out_dim <= out_len,
+        "output rows out of bounds"
+    );
+}
+
+/// Shared blocked-schedule fixed-point core (weight row outer, sample
+/// block inner), generic over the weight element and the per-row MAC:
+/// [`BlockedKernel`] passes the plain element loop, [`SimdKernel`] the
+/// lane-tiled one. Keeping the schedule — skip set, chunking, ascending
+/// `i` — in exactly one place is what keeps the backends' bit-exactness
+/// contract from silently diverging.
+#[inline(always)]
+pub(crate) fn run_fx_blocked<W: WeightElem>(
+    s_block: usize,
+    w: &[W],
+    in_dim: usize,
+    out_dim: usize,
+    rows: usize,
+    x: &[Fx16],
+    x_stride: usize,
+    mask: Option<MaskRef>,
+    acc: &mut [MacAcc],
+    acc_stride: usize,
+    mac_row: impl Fn(i16, &[W], &mut [MacAcc]),
+) {
+    let s_block = s_block.max(1);
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + s_block).min(rows);
+        for i in 0..in_dim {
+            let wrow = &w[i * out_dim..(i + 1) * out_dim];
+            for r in r0..r1 {
+                let xi = x[r * x_stride + i];
+                if xi.0 == 0 {
+                    continue; // DX gating, as in the scalar kernel
+                }
+                if let Some(m) = mask {
+                    if !m.keep(r, i) {
+                        continue;
+                    }
+                }
+                mac_row(
+                    xi.0,
+                    wrow,
+                    &mut acc[r * acc_stride..r * acc_stride + out_dim],
+                );
+            }
+        }
+        r0 = r1;
+    }
+}
+
+/// Float twin of [`run_fx_blocked`]: same schedule, `x * mask`
+/// semantics with exact-zero skip.
+#[inline(always)]
+pub(crate) fn run_f32_blocked(
+    s_block: usize,
+    w: &[f32],
+    in_dim: usize,
+    out_dim: usize,
+    rows: usize,
+    x: &[f32],
+    x_stride: usize,
+    mask: Option<(&[f32], usize)>,
+    out: &mut [f32],
+    out_stride: usize,
+    mac_row: impl Fn(f32, &[f32], &mut [f32]),
+) {
+    let s_block = s_block.max(1);
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + s_block).min(rows);
+        for i in 0..in_dim {
+            let wrow = &w[i * out_dim..(i + 1) * out_dim];
+            for r in r0..r1 {
+                let xi = x[r * x_stride + i];
+                let xv = match mask {
+                    Some((m, ms)) => xi * m[r * ms + i],
+                    None => xi,
+                };
+                if xv == 0.0 {
+                    continue;
+                }
+                mac_row(
+                    xv,
+                    wrow,
+                    &mut out[r * out_stride..r * out_stride + out_dim],
+                );
+            }
+        }
+        r0 = r1;
+    }
+}
+
+/// The float-path bounds checks (mask is a strided `f32` buffer).
+#[inline]
+pub(crate) fn check_bounds_f32(
     w_len: usize,
     in_dim: usize,
     out_dim: usize,
@@ -158,6 +442,7 @@ pub(crate) fn check_bounds(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::fixedpoint::QFormat;
     use crate::rng::Rng;
 
     /// Random Fx16 in roughly [-2, 2] with exact zeros sprinkled in.
@@ -177,11 +462,15 @@ mod tests {
         }
     }
 
-    /// Blocked kernel is bit-identical to the scalar reference for
+    fn finish_all(acc: &[MacAcc]) -> Vec<i16> {
+        acc.iter().map(|a| a.finish(Fx16::ZERO).0).collect()
+    }
+
+    /// Every backend is bit-identical to the scalar reference for
     /// `Fx16` across random shapes, strides, block sizes and mask
-    /// patterns (ISSUE 3 acceptance).
+    /// patterns — the ISSUE 3 contract extended over the registry.
     #[test]
-    fn blocked_fx_bit_identical_to_scalar_reference() {
+    fn all_backends_fx_bit_identical_to_scalar_reference() {
         let mut rng = Rng::new(41);
         let scalar = ScalarKernel;
         for trial in 0..60 {
@@ -189,7 +478,10 @@ mod tests {
             let out_dim = 1 + rng.below(24);
             let rows = 1 + rng.below(12);
             let s_block = 1 + rng.below(rows + 4);
-            let blocked = BlockedKernel { s_block };
+            let backends: [&dyn Kernel; 2] = [
+                &BlockedKernel { s_block },
+                &SimdKernel { s_block },
+            ];
             // Padded strides exercise the interleaved-tensor case.
             let x_stride = in_dim + rng.below(3);
             let m_stride = in_dim + rng.below(5);
@@ -210,29 +502,29 @@ mod tests {
                 for (j, a) in acc_s.iter_mut().enumerate() {
                     a.mac(Fx16(j as i16 % 7), Fx16::ONE);
                 }
-                let mut acc_b = acc_s.clone();
-                let m = use_mask.then_some((mask.as_slice(), m_stride));
+                let init = acc_s.clone();
+                let m = use_mask
+                    .then_some(MaskRef::Lanes(mask.as_slice(), m_stride));
                 scalar.mvm_fx(
                     &w, in_dim, out_dim, rows, &x, x_stride, m, &mut acc_s,
                     a_stride,
                 );
-                blocked.mvm_fx(
-                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut acc_b,
-                    a_stride,
-                );
-                let fin_s: Vec<i16> = acc_s
-                    .iter()
-                    .map(|a| a.finish(Fx16::ZERO).0)
-                    .collect();
-                let fin_b: Vec<i16> = acc_b
-                    .iter()
-                    .map(|a| a.finish(Fx16::ZERO).0)
-                    .collect();
-                assert_eq!(
-                    fin_s, fin_b,
-                    "trial {trial} (mask {use_mask}, s_block {s_block}): \
-                     blocked Fx16 kernel drifted from scalar reference"
-                );
+                let want = finish_all(&acc_s);
+                for k in backends {
+                    let mut acc_b = init.clone();
+                    k.mvm_fx(
+                        &w, in_dim, out_dim, rows, &x, x_stride, m,
+                        &mut acc_b, a_stride,
+                    );
+                    assert_eq!(
+                        want,
+                        finish_all(&acc_b),
+                        "trial {trial} (mask {use_mask}, s_block \
+                         {s_block}): {} Fx16 kernel drifted from scalar \
+                         reference",
+                        k.name()
+                    );
+                }
             }
         }
     }
@@ -240,14 +532,18 @@ mod tests {
     /// Same property for the float kernel: identical term order makes
     /// float rounding identical, so equality is bitwise here too.
     #[test]
-    fn blocked_f32_bit_identical_to_scalar_reference() {
+    fn all_backends_f32_bit_identical_to_scalar_reference() {
         let mut rng = Rng::new(97);
         let scalar = ScalarKernel;
         for trial in 0..60 {
             let in_dim = 1 + rng.below(20);
             let out_dim = 1 + rng.below(20);
             let rows = 1 + rng.below(10);
-            let blocked = BlockedKernel { s_block: 1 + rng.below(8) };
+            let s_block = 1 + rng.below(8);
+            let backends: [&dyn Kernel; 2] = [
+                &BlockedKernel { s_block },
+                &SimdKernel { s_block },
+            ];
             let x_stride = in_dim + rng.below(4);
             let m_stride = in_dim;
             let o_stride = out_dim + rng.below(4);
@@ -267,25 +563,154 @@ mod tests {
                     .map(|_| rng.normal() as f32)
                     .collect();
                 let mut out_s = init.clone();
-                let mut out_b = init;
                 let m = use_mask.then_some((mask.as_slice(), m_stride));
                 scalar.mvm_f32(
                     &w, in_dim, out_dim, rows, &x, x_stride, m, &mut out_s,
                     o_stride,
                 );
-                blocked.mvm_f32(
-                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut out_b,
-                    o_stride,
-                );
                 let bits_s: Vec<u32> =
                     out_s.iter().map(|v| v.to_bits()).collect();
-                let bits_b: Vec<u32> =
-                    out_b.iter().map(|v| v.to_bits()).collect();
-                assert_eq!(
-                    bits_s, bits_b,
-                    "trial {trial} (mask {use_mask}): blocked f32 kernel \
-                     drifted from scalar reference"
+                for k in backends {
+                    let mut out_b = init.clone();
+                    k.mvm_f32(
+                        &w, in_dim, out_dim, rows, &x, x_stride, m,
+                        &mut out_b, o_stride,
+                    );
+                    let bits_b: Vec<u32> =
+                        out_b.iter().map(|v| v.to_bits()).collect();
+                    assert_eq!(
+                        bits_s,
+                        bits_b,
+                        "trial {trial} (mask {use_mask}): {} f32 kernel \
+                         drifted from scalar reference",
+                        k.name()
+                    );
+                }
+            }
+        }
+    }
+
+    /// Bitplane masks select exactly the same skip set as the strided
+    /// `Fx16` lanes they replace — for every backend, bitwise.
+    #[test]
+    fn bitplane_masks_match_fx16_lane_masks_bitwise() {
+        let mut rng = Rng::new(59);
+        for trial in 0..40 {
+            let in_dim = 1 + rng.below(20);
+            let out_dim = 1 + rng.below(16);
+            let rows = 1 + rng.below(10);
+            // Gate-lane geometry: `lanes` gates interleaved per row,
+            // the kernel reads lane `g`.
+            let lanes = 1 + rng.below(4);
+            let g = rng.below(lanes);
+            let w: Vec<Fx16> = (0..in_dim * out_dim)
+                .map(|_| rand_fx(&mut rng, 0.1))
+                .collect();
+            let x: Vec<Fx16> =
+                (0..rows * in_dim).map(|_| rand_fx(&mut rng, 0.1)).collect();
+            let m_stride = lanes * in_dim;
+            let mut lane_buf = vec![Fx16::ONE; rows * m_stride];
+            let mut planes = BitPlanes::ones(rows, m_stride);
+            for r in 0..rows {
+                for i in 0..m_stride {
+                    let keep = !rng.bernoulli(0.2);
+                    lane_buf[r * m_stride + i] =
+                        if keep { Fx16::ONE } else { Fx16::ZERO };
+                    planes.set(r, i, keep);
+                }
+            }
+            for backend in KernelBackend::ALL {
+                let k = backend.kernel();
+                let mut acc_lane = vec![MacAcc::new(); rows * out_dim];
+                let mut acc_bits = acc_lane.clone();
+                k.mvm_fx(
+                    &w,
+                    in_dim,
+                    out_dim,
+                    rows,
+                    &x,
+                    in_dim,
+                    Some(MaskRef::Lanes(&lane_buf[g * in_dim..], m_stride)),
+                    &mut acc_lane,
+                    out_dim,
                 );
+                k.mvm_fx(
+                    &w,
+                    in_dim,
+                    out_dim,
+                    rows,
+                    &x,
+                    in_dim,
+                    Some(MaskRef::Bits(planes.lanes(g * in_dim))),
+                    &mut acc_bits,
+                    out_dim,
+                );
+                assert_eq!(
+                    finish_all(&acc_lane),
+                    finish_all(&acc_bits),
+                    "trial {trial}: {} bitplane mask drifted",
+                    backend.name()
+                );
+            }
+        }
+    }
+
+    /// Packed weight planes are bit-identical to the unpacked `Fx16`
+    /// MVM for every format and backend (the widening is exact).
+    #[test]
+    fn packed_mvm_matches_unpacked_bitwise_per_format() {
+        for fmt in [QFormat::Q8_ACT, QFormat::Q12_ACT, QFormat::Q16_ACT] {
+            let mut rng = Rng::new(fmt.total_bits as u64 + 100);
+            for _ in 0..20 {
+                let in_dim = 1 + rng.below(16);
+                let out_dim = 1 + rng.below(16);
+                let rows = 1 + rng.below(8);
+                let range = fmt.max_value() as f64 * 0.9;
+                let w: Vec<Fx16> = (0..in_dim * out_dim)
+                    .map(|_| fmt.quantize(rng.uniform_in(-range, range) as f32))
+                    .collect();
+                let packed = PackedWeights::pack(&w, in_dim, out_dim, fmt);
+                let x: Vec<Fx16> = (0..rows * in_dim)
+                    .map(|_| {
+                        if rng.bernoulli(0.2) {
+                            Fx16::ZERO
+                        } else {
+                            fmt.quantize(rng.uniform_in(-range, range) as f32)
+                        }
+                    })
+                    .collect();
+                let mask: Vec<Fx16> = (0..rows * in_dim)
+                    .map(|_| rand_mask_fx(&mut rng, 0.125))
+                    .collect();
+                for use_mask in [false, true] {
+                    let m = use_mask
+                        .then_some(MaskRef::Lanes(mask.as_slice(), in_dim));
+                    for backend in KernelBackend::ALL {
+                        let k = backend.kernel();
+                        let mut acc_u = vec![MacAcc::new(); rows * out_dim];
+                        let mut acc_p = acc_u.clone();
+                        k.mvm_fx(
+                            &w, in_dim, out_dim, rows, &x, in_dim, m,
+                            &mut acc_u, out_dim,
+                        );
+                        k.mvm_fx_packed(
+                            &packed, rows, &x, in_dim, m, &mut acc_p,
+                            out_dim,
+                        );
+                        let fin = |acc: &[MacAcc]| -> Vec<i16> {
+                            acc.iter()
+                                .map(|a| a.finish_fmt(Fx16::ZERO, fmt).0)
+                                .collect()
+                        };
+                        assert_eq!(
+                            fin(&acc_u),
+                            fin(&acc_p),
+                            "{} {}: packed plane drifted",
+                            fmt.name(),
+                            backend.name()
+                        );
+                    }
+                }
             }
         }
     }
@@ -300,20 +725,24 @@ mod tests {
             (0..in_dim * out_dim).map(|_| rng.normal() as f32).collect();
         let x: Vec<f32> =
             (0..rows * in_dim).map(|_| rng.normal() as f32).collect();
-        let mut out = vec![0f32; rows * out_dim];
-        active().mvm_f32(
-            &w, in_dim, out_dim, rows, &x, in_dim, None, &mut out, out_dim,
-        );
-        for r in 0..rows {
-            for k in 0..out_dim {
-                let want: f32 = (0..in_dim)
-                    .map(|i| x[r * in_dim + i] * w[i * out_dim + k])
-                    .sum();
-                let got = out[r * out_dim + k];
-                assert!(
-                    (got - want).abs() < 1e-4,
-                    "[{r}][{k}]: {got} vs {want}"
-                );
+        for backend in KernelBackend::ALL {
+            let mut out = vec![0f32; rows * out_dim];
+            backend.kernel().mvm_f32(
+                &w, in_dim, out_dim, rows, &x, in_dim, None, &mut out,
+                out_dim,
+            );
+            for r in 0..rows {
+                for k in 0..out_dim {
+                    let want: f32 = (0..in_dim)
+                        .map(|i| x[r * in_dim + i] * w[i * out_dim + k])
+                        .sum();
+                    let got = out[r * out_dim + k];
+                    assert!(
+                        (got - want).abs() < 1e-4,
+                        "{} [{r}][{k}]: {got} vs {want}",
+                        backend.name()
+                    );
+                }
             }
         }
     }
@@ -344,7 +773,7 @@ mod tests {
                 2,
                 &x,
                 in_dim,
-                Some((&mask[lane * in_dim..], 2 * in_dim)),
+                Some(MaskRef::Lanes(&mask[lane * in_dim..], 2 * in_dim)),
                 &mut acc,
                 out_dim,
             );
@@ -360,13 +789,11 @@ mod tests {
     }
 
     /// The kernel layer is format-agnostic — it MACs raw lattice points
-    /// into wide accumulators and never shifts — so the blocked/scalar
+    /// into wide accumulators and never shifts — so the backend
     /// bit-identity contract holds for every quantisation format the
-    /// substrate supports (`docs/quantization.md`). This is the
-    /// kernel-level leg of the ISSUE 4 acceptance.
+    /// substrate supports (`docs/quantization.md`).
     #[test]
-    fn blocked_matches_scalar_for_every_qformat() {
-        use crate::fixedpoint::QFormat;
+    fn backends_match_scalar_for_every_qformat() {
         let scalar = ScalarKernel;
         for fmt in [QFormat::Q8_ACT, QFormat::Q12_ACT, QFormat::Q16_ACT] {
             let mut rng = Rng::new(fmt.total_bits as u64);
@@ -374,7 +801,7 @@ mod tests {
                 let in_dim = 1 + rng.below(16);
                 let out_dim = 1 + rng.below(16);
                 let rows = 1 + rng.below(8);
-                let blocked = BlockedKernel { s_block: 1 + rng.below(6) };
+                let s_block = 1 + rng.below(6);
                 let range = fmt.max_value() as f64 * 0.9;
                 let w: Vec<Fx16> = (0..in_dim * out_dim)
                     .map(|_| fmt.quantize(rng.uniform_in(-range, range) as f32))
@@ -389,13 +816,8 @@ mod tests {
                     })
                     .collect();
                 let mut acc_s = vec![MacAcc::new(); rows * out_dim];
-                let mut acc_b = acc_s.clone();
                 scalar.mvm_fx(
                     &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_s,
-                    out_dim,
-                );
-                blocked.mvm_fx(
-                    &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_b,
                     out_dim,
                 );
                 let fin = |acc: &[MacAcc]| -> Vec<i16> {
@@ -403,33 +825,54 @@ mod tests {
                         .map(|a| a.finish_fmt(Fx16::ZERO, fmt).0)
                         .collect()
                 };
-                assert_eq!(
-                    fin(&acc_s),
-                    fin(&acc_b),
-                    "{} trial {trial}: blocked kernel drifted",
-                    fmt.name()
-                );
+                let want = fin(&acc_s);
+                let others: [&dyn Kernel; 2] = [
+                    &BlockedKernel { s_block },
+                    &SimdKernel { s_block },
+                ];
+                for k in others {
+                    let mut acc_b = vec![MacAcc::new(); rows * out_dim];
+                    k.mvm_fx(
+                        &w, in_dim, out_dim, rows, &x, in_dim, None,
+                        &mut acc_b, out_dim,
+                    );
+                    assert_eq!(
+                        want,
+                        fin(&acc_b),
+                        "{} trial {trial}: {} kernel drifted",
+                        fmt.name(),
+                        k.name()
+                    );
+                }
             }
         }
     }
 
     #[test]
     fn zero_rows_are_noops() {
-        let w = vec![Fx16::ONE; 6];
-        let x: Vec<Fx16> = Vec::new();
-        let mut acc: Vec<MacAcc> = Vec::new();
-        active().mvm_fx(&w, 2, 3, 0, &x, 2, None, &mut acc, 3);
-        let mut out: Vec<f32> = Vec::new();
-        active().mvm_f32(
-            &[1.0; 6],
-            2,
-            3,
-            0,
-            &[],
-            2,
-            None,
-            &mut out,
-            3,
-        );
+        for backend in KernelBackend::ALL {
+            let k = backend.kernel();
+            let w = vec![Fx16::ONE; 6];
+            let x: Vec<Fx16> = Vec::new();
+            let mut acc: Vec<MacAcc> = Vec::new();
+            k.mvm_fx(&w, 2, 3, 0, &x, 2, None, &mut acc, 3);
+            let packed = PackedWeights::pack(&w, 2, 3, QFormat::Q16_ACT);
+            k.mvm_fx_packed(&packed, 0, &x, 2, None, &mut acc, 3);
+            let mut out: Vec<f32> = Vec::new();
+            k.mvm_f32(&[1.0; 6], 2, 3, 0, &[], 2, None, &mut out, 3);
+        }
+    }
+
+    #[test]
+    fn registry_parses_and_names_backends() {
+        for b in KernelBackend::ALL {
+            assert_eq!(KernelBackend::parse(b.name()).unwrap(), b);
+            assert_eq!(b.kernel().name(), b.name());
+        }
+        assert!(KernelBackend::parse("avx512").is_err());
+        // The default resolves (env-independent assertion: it is one of
+        // the registered backends and dispatch follows it).
+        let d = default_backend();
+        assert_eq!(active().name(), d.name());
     }
 }

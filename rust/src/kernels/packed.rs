@@ -1,0 +1,186 @@
+//! Packed narrow weight planes: q8/q12 weights stored as `i8`/`i16`
+//! rows, widened in-register at MAC time.
+//!
+//! The paper's DSP packing (two ≤ 8-bit MACs per DSP48 slice; also Fan
+//! et al., arXiv:2105.09163) is an *operand-width* win: narrow weights
+//! cost less to move as well as to multiply. The simulator used to
+//! store every format's weights in 16-bit `Fx16` containers, so a q8
+//! design moved exactly as many weight bytes per MAC as a q16 one.
+//! [`PackedWeights`] stores the raw lattice points at their container
+//! width — `i8` rows for ≤ 8-bit formats, `i16` otherwise — halving
+//! weight bandwidth at q8 (and quartering it against the float model's
+//! `f32` weights). Values are widened to `i16` in-register inside the
+//! kernel's MAC (`MacAcc::mac_raw`), which is exact: the raw lattice
+//! point is unchanged, so packed MVMs are **bit-identical** to unpacked
+//! ones (property-tested in `super::tests`).
+
+use crate::fixedpoint::{Fx16, QFormat};
+
+/// Row-major `[in_dim][out_dim]` weights at their format's container
+/// width.
+#[derive(Debug, Clone)]
+pub struct PackedWeights {
+    pub fmt: QFormat,
+    pub in_dim: usize,
+    pub out_dim: usize,
+    pub(crate) plane: Plane,
+}
+
+/// The storage plane: one narrow integer per weight.
+#[derive(Debug, Clone)]
+pub(crate) enum Plane {
+    I8(Vec<i8>),
+    I16(Vec<i16>),
+}
+
+impl PackedWeights {
+    /// Pack quantised weights. A ≤ 8-bit format's raw values fit `i8`
+    /// by construction (the rails are `±2^(total-1)`); values quantised
+    /// at a wider format are rejected here — this is a cold
+    /// construction path, and a silent `as i8` wrap would corrupt every
+    /// subsequent MVM.
+    pub fn pack(w: &[Fx16], in_dim: usize, out_dim: usize, fmt: QFormat) -> Self {
+        assert_eq!(w.len(), in_dim * out_dim, "weight shape mismatch");
+        let plane = if fmt.total_bits <= 8 {
+            Plane::I8(
+                w.iter()
+                    .map(|v| {
+                        assert!(
+                            v.0 >= i8::MIN as i16 && v.0 <= i8::MAX as i16,
+                            "raw {} exceeds the {}-bit container",
+                            v.0,
+                            fmt.total_bits
+                        );
+                        v.0 as i8
+                    })
+                    .collect(),
+            )
+        } else {
+            Plane::I16(w.iter().map(|v| v.0).collect())
+        };
+        Self { fmt, in_dim, out_dim, plane }
+    }
+
+    /// Elements actually stored in the plane (the kernels' shape guard
+    /// compares this against `in_dim * out_dim`, so it must come from
+    /// the storage, not the dims).
+    pub fn len(&self) -> usize {
+        match &self.plane {
+            Plane::I8(p) => p.len(),
+            Plane::I16(p) => p.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Bytes the weight plane occupies — the bandwidth the MVM streams.
+    pub fn bytes(&self) -> usize {
+        match &self.plane {
+            Plane::I8(p) => p.len(),
+            Plane::I16(p) => p.len() * 2,
+        }
+    }
+
+    /// Bytes moved per MAC (1 at q8, 2 at q12/q16; the `Fx16` baseline
+    /// is always 2 and the float model's 4).
+    pub fn bytes_per_weight(&self) -> f64 {
+        if self.len() == 0 {
+            0.0
+        } else {
+            self.bytes() as f64 / self.len() as f64
+        }
+    }
+
+    /// Read one weight back as its `Fx16` lattice point (tests/debug;
+    /// the kernels stream whole rows instead).
+    pub fn get(&self, i: usize, k: usize) -> Fx16 {
+        let j = i * self.out_dim + k;
+        match &self.plane {
+            Plane::I8(p) => Fx16(p[j] as i16),
+            Plane::I16(p) => Fx16(p[j]),
+        }
+    }
+}
+
+/// Dispatch a packed plane to a generic body: `with_plane!(w, p =>
+/// expr)` binds `p` to the typed row slice in each arm — the single
+/// place the [`Plane`] variants are enumerated by the kernel backends
+/// (one monomorphized body per width, no per-element matching).
+macro_rules! with_plane {
+    ($w:expr, $p:ident => $body:expr) => {
+        match &$w.plane {
+            $crate::kernels::packed::Plane::I8($p) => $body,
+            $crate::kernels::packed::Plane::I16($p) => $body,
+        }
+    };
+}
+pub(crate) use with_plane;
+
+/// A weight lattice point the kernels widen in-register at MAC time.
+/// The widening is exact (raw value unchanged), which is what keeps
+/// packed and unpacked MVMs bit-identical.
+pub trait WeightElem: Copy {
+    fn raw(self) -> i16;
+}
+
+impl WeightElem for Fx16 {
+    #[inline(always)]
+    fn raw(self) -> i16 {
+        self.0
+    }
+}
+
+impl WeightElem for i8 {
+    #[inline(always)]
+    fn raw(self) -> i16 {
+        self as i16
+    }
+}
+
+impl WeightElem for i16 {
+    #[inline(always)]
+    fn raw(self) -> i16 {
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn q8_packs_one_byte_per_weight() {
+        let fmt = QFormat::Q8_ACT;
+        let w: Vec<Fx16> = (0..6).map(|i| fmt.quantize(i as f32 * 0.5 - 1.0)).collect();
+        let p = PackedWeights::pack(&w, 2, 3, fmt);
+        assert_eq!(p.bytes(), 6);
+        assert!((p.bytes_per_weight() - 1.0).abs() < 1e-12);
+        for i in 0..2 {
+            for k in 0..3 {
+                assert_eq!(p.get(i, k), w[i * 3 + k], "widening must be exact");
+            }
+        }
+    }
+
+    #[test]
+    fn wide_formats_keep_i16_rows() {
+        for fmt in [QFormat::Q12_ACT, QFormat::Q16_ACT] {
+            let w: Vec<Fx16> = (0..4).map(|i| fmt.quantize(i as f32 - 1.5)).collect();
+            let p = PackedWeights::pack(&w, 2, 2, fmt);
+            assert_eq!(p.bytes(), 8, "{}", fmt.name());
+            assert!((p.bytes_per_weight() - 2.0).abs() < 1e-12);
+            assert_eq!(p.get(1, 1), w[3]);
+        }
+    }
+
+    #[test]
+    fn q8_rails_survive_the_i8_container() {
+        let fmt = QFormat::Q8_ACT;
+        let w = [Fx16(fmt.min_raw() as i16), Fx16(fmt.max_raw() as i16)];
+        let p = PackedWeights::pack(&w, 1, 2, fmt);
+        assert_eq!(p.get(0, 0).0 as i32, fmt.min_raw());
+        assert_eq!(p.get(0, 1).0 as i32, fmt.max_raw());
+    }
+}

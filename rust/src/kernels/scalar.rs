@@ -1,13 +1,48 @@
 //! Scalar reference kernel: row-at-a-time, the exact loop nest the
 //! engines shipped with (sample outer, weight row inner). Every weight
 //! row is re-fetched once per sample — the per-sample cost model the
-//! blocked kernel amortises away. Kept as the bit-exactness oracle and
+//! blocked kernels amortise away. Kept as the bit-exactness oracle and
 //! the bench baseline.
 
-use super::{check_bounds, Kernel};
+use super::packed::{with_plane, WeightElem};
+use super::{check_bounds_f32, check_bounds_fx, Kernel, MaskRef, PackedWeights};
 use crate::fixedpoint::{Fx16, MacAcc};
 
 pub struct ScalarKernel;
+
+/// The shared fixed-point core, generic over the weight plane element
+/// (`Fx16`, packed `i8`, packed `i16`): widened in-register at MAC
+/// time, so every instantiation computes identical bits.
+fn run_fx<W: WeightElem>(
+    w: &[W],
+    in_dim: usize,
+    out_dim: usize,
+    rows: usize,
+    x: &[Fx16],
+    x_stride: usize,
+    mask: Option<MaskRef>,
+    acc: &mut [MacAcc],
+    acc_stride: usize,
+) {
+    for r in 0..rows {
+        let xr = &x[r * x_stride..r * x_stride + in_dim];
+        let acc_r = &mut acc[r * acc_stride..r * acc_stride + out_dim];
+        for (i, &xi) in xr.iter().enumerate() {
+            if xi.0 == 0 {
+                continue; // gated by DX: zero rows do no switching
+            }
+            if let Some(m) = mask {
+                if !m.keep(r, i) {
+                    continue;
+                }
+            }
+            let wrow = &w[i * out_dim..(i + 1) * out_dim];
+            for (a, &wv) in acc_r.iter_mut().zip(wrow) {
+                a.mac_raw(xi.0, wv.raw());
+            }
+        }
+    }
+}
 
 impl Kernel for ScalarKernel {
     fn name(&self) -> &'static str {
@@ -22,39 +57,49 @@ impl Kernel for ScalarKernel {
         rows: usize,
         x: &[Fx16],
         x_stride: usize,
-        mask: Option<(&[Fx16], usize)>,
+        mask: Option<MaskRef>,
         acc: &mut [MacAcc],
         acc_stride: usize,
     ) {
-        check_bounds(
+        check_bounds_fx(
             w.len(),
             in_dim,
             out_dim,
             rows,
             x.len(),
             x_stride,
-            mask.map(|(m, s)| (m.len(), s)),
+            mask.as_ref(),
             acc.len(),
             acc_stride,
         );
-        for r in 0..rows {
-            let xr = &x[r * x_stride..r * x_stride + in_dim];
-            let acc_r = &mut acc[r * acc_stride..r * acc_stride + out_dim];
-            for (i, &xi) in xr.iter().enumerate() {
-                if xi.0 == 0 {
-                    continue; // gated by DX: zero rows do no switching
-                }
-                if let Some((m, ms)) = mask {
-                    if m[r * ms + i].0 == 0 {
-                        continue;
-                    }
-                }
-                let wrow = &w[i * out_dim..(i + 1) * out_dim];
-                for (a, &wv) in acc_r.iter_mut().zip(wrow) {
-                    a.mac(xi, wv);
-                }
-            }
-        }
+        run_fx(w, in_dim, out_dim, rows, x, x_stride, mask, acc, acc_stride);
+    }
+
+    fn mvm_fx_packed(
+        &self,
+        w: &PackedWeights,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        check_bounds_fx(
+            w.len(),
+            w.in_dim,
+            w.out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.as_ref(),
+            acc.len(),
+            acc_stride,
+        );
+        with_plane!(w, p => run_fx(
+            p, w.in_dim, w.out_dim, rows, x, x_stride, mask, acc,
+            acc_stride,
+        ));
     }
 
     fn mvm_f32(
@@ -69,7 +114,7 @@ impl Kernel for ScalarKernel {
         out: &mut [f32],
         out_stride: usize,
     ) {
-        check_bounds(
+        check_bounds_f32(
             w.len(),
             in_dim,
             out_dim,

@@ -1,0 +1,197 @@
+//! Vectorized kernel backend: the blocked schedule with the inner
+//! `out_dim` loop tiled into fixed-width lanes the compiler
+//! autovectorizes.
+//!
+//! Stable Rust only — no nightly `std::simd`, no platform intrinsics,
+//! no new dependencies. The vector shape is expressed structurally:
+//! accumulator and weight rows are walked in [`LANES`]-wide
+//! `chunks_exact` tiles whose trip count is a compile-time constant, so
+//! the per-tile micro-loop is fully unrolled and vectorized by LLVM
+//! (i16 x i16 -> i64 widening MACs on the fixed-point path, f32 FMA
+//! lanes on the float path). The tail (`out_dim % LANES` elements)
+//! falls back to the scalar epilogue.
+//!
+//! The schedule lives in the shared cores ([`super::run_fx_blocked`] /
+//! [`super::run_f32_blocked`]) — this backend only swaps in the
+//! lane-tiled row MAC. Bit-exactness: lane tiling partitions the
+//! *output elements* `k`, it never reorders the terms *within* an
+//! element — for every `(r, k)` the contributions still arrive in
+//! ascending weight-row order `i`, so this backend is bit-identical to
+//! [`super::ScalarKernel`] and [`super::BlockedKernel`] for `Fx16`
+//! (exact `i64` adds) and `f32` (identical rounding order) alike.
+//! Property-tested in `super::tests`; the engine/accelerator/fleet
+//! levels pin the same contract one layer up.
+
+use super::packed::{with_plane, WeightElem};
+use super::{
+    check_bounds_f32, check_bounds_fx, run_f32_blocked, run_fx_blocked,
+    Kernel, MaskRef, PackedWeights,
+};
+use crate::fixedpoint::{Fx16, MacAcc};
+
+/// Lane width of the inner tile. Eight i64 accumulators span two AVX2
+/// registers (or four NEON ones) while keeping the live tile small
+/// enough that `s_block` sample rows still fit in L1 alongside it.
+pub const LANES: usize = 8;
+
+pub struct SimdKernel {
+    /// Live accumulator rows per chunk (the MC-sample block size),
+    /// identical semantics to [`super::BlockedKernel::s_block`].
+    pub s_block: usize,
+}
+
+impl Default for SimdKernel {
+    fn default() -> Self {
+        Self { s_block: super::DEFAULT_S_BLOCK }
+    }
+}
+
+/// One lane-tiled row MAC: `acc_r[k] += xi * wrow[k]` over the whole
+/// row, widened in-register. The fixed-trip-count inner loops are the
+/// autovectorization seeds.
+#[inline(always)]
+fn mac_row_lanes<W: WeightElem>(xi: i16, wrow: &[W], acc_r: &mut [MacAcc]) {
+    let mut at = acc_r.chunks_exact_mut(LANES);
+    let mut wt = wrow.chunks_exact(LANES);
+    for (a8, w8) in at.by_ref().zip(wt.by_ref()) {
+        for l in 0..LANES {
+            a8[l].mac_raw(xi, w8[l].raw());
+        }
+    }
+    for (a, &wv) in at.into_remainder().iter_mut().zip(wt.remainder()) {
+        a.mac_raw(xi, wv.raw());
+    }
+}
+
+/// Float twin of [`mac_row_lanes`].
+#[inline(always)]
+fn mac_row_lanes_f32(xv: f32, wrow: &[f32], out_r: &mut [f32]) {
+    let mut ot = out_r.chunks_exact_mut(LANES);
+    let mut wt = wrow.chunks_exact(LANES);
+    for (o8, w8) in ot.by_ref().zip(wt.by_ref()) {
+        for l in 0..LANES {
+            o8[l] += xv * w8[l];
+        }
+    }
+    for (o, &wv) in ot.into_remainder().iter_mut().zip(wt.remainder()) {
+        *o += xv * wv;
+    }
+}
+
+impl Kernel for SimdKernel {
+    fn name(&self) -> &'static str {
+        "simd"
+    }
+
+    fn mvm_fx(
+        &self,
+        w: &[Fx16],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        check_bounds_fx(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.as_ref(),
+            acc.len(),
+            acc_stride,
+        );
+        run_fx_blocked(
+            self.s_block,
+            w,
+            in_dim,
+            out_dim,
+            rows,
+            x,
+            x_stride,
+            mask,
+            acc,
+            acc_stride,
+            mac_row_lanes,
+        );
+    }
+
+    fn mvm_fx_packed(
+        &self,
+        w: &PackedWeights,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        check_bounds_fx(
+            w.len(),
+            w.in_dim,
+            w.out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.as_ref(),
+            acc.len(),
+            acc_stride,
+        );
+        with_plane!(w, p => run_fx_blocked(
+            self.s_block,
+            p,
+            w.in_dim,
+            w.out_dim,
+            rows,
+            x,
+            x_stride,
+            mask,
+            acc,
+            acc_stride,
+            mac_row_lanes,
+        ));
+    }
+
+    fn mvm_f32(
+        &self,
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[f32],
+        x_stride: usize,
+        mask: Option<(&[f32], usize)>,
+        out: &mut [f32],
+        out_stride: usize,
+    ) {
+        check_bounds_f32(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.map(|(m, s)| (m.len(), s)),
+            out.len(),
+            out_stride,
+        );
+        run_f32_blocked(
+            self.s_block,
+            w,
+            in_dim,
+            out_dim,
+            rows,
+            x,
+            x_stride,
+            mask,
+            out,
+            out_stride,
+            mac_row_lanes_f32,
+        );
+    }
+}

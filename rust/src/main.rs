@@ -31,6 +31,7 @@ use bayes_rnn_fpga::fixedpoint::Precision;
 use bayes_rnn_fpga::fpga::accel::Accelerator;
 use bayes_rnn_fpga::hwmodel::ZC706;
 use bayes_rnn_fpga::jsonio::{self, Json};
+use bayes_rnn_fpga::kernels::{self, KernelBackend};
 use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
 use bayes_rnn_fpga::rng::Rng;
@@ -215,11 +216,13 @@ subcommands:
           [--arch NAME] [--engines N] [--router rr|least-loaded|mc-shard]
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
-          [--seed N] [--json] [--kernel blocked|scalar]
+          [--seed N] [--json] [--kernel scalar|blocked|simd]
           [--precision q8|q12|q16[,l<i>=FMT...]]  (fpga backend only;
            every engine runs at the one given format)
-          (--kernel scalar forces the legacy per-sample FPGA-sim
-           path — bench baseline; bit-identical output)
+          (--kernel selects the MVM backend — docs/kernels.md
+           §Backends; REPRO_KERNEL sets the default. All backends
+           emit bit-identical outputs; scalar additionally forces the
+           legacy per-sample FPGA-sim loop, the bench baseline)
           adaptive MC (docs/uncertainty.md): [--adaptive-mc]
           [--target-ci F] [--s-min N] [--chunk N] [--abstain-entropy F]
           [--defer-entropy F] [--max-epistemic F] [--calibration PATH]
@@ -631,13 +634,22 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let json_out = args.flag("json");
     let seed = args.usize_or("seed", 3) as u64;
     let artifacts = args.artifacts_dir();
-    // Kernel selection: the blocked MC-batching path (default) or the
-    // legacy per-sample scalar loop (bench baseline — docs/kernels.md).
-    let kernel = args.get("kernel").unwrap_or("blocked").to_string();
-    anyhow::ensure!(
-        kernel == "blocked" || kernel == "scalar",
-        "--kernel must be blocked or scalar"
-    );
+    // Kernel backend selection (docs/kernels.md §Backends): --kernel
+    // overrides the REPRO_KERNEL-resolved default. Every backend emits
+    // bit-identical outputs — this is a cost-shape knob. `scalar`
+    // additionally forces the legacy per-sample FPGA-sim loop (bench
+    // baseline).
+    let kernel_backend = match args.get("kernel") {
+        Some(s) => {
+            let b = KernelBackend::parse(s)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            // Float engines (gpu/pjrt model forwards) dispatch through
+            // the process default; keep it in sync with the flag.
+            kernels::set_default_backend(b);
+            b
+        }
+        None => kernels::default_backend(),
+    };
     // Quantisation (fpga backend only): one format for every engine —
     // mc-shard merges shard numerics across engines, and the gpu/pjrt
     // float baselines have no fixed-point path.
@@ -690,7 +702,6 @@ fn cmd_serve(args: &Args) -> Result<()> {
         let cfg2 = cfg.clone();
         let p2 = params.clone();
         let arts = artifacts.clone();
-        let scalar_kernel = kernel == "scalar";
         let prec = precision.clone();
         factories.push(Box::new(move || match kind.as_str() {
             "gpu" => Engine::gpu(
@@ -711,7 +722,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
                     Params { tensors: p2.clone() },
                 );
                 let mut e = Engine::fpga_q(&cfg2, &m, reuse, s, seed, &prec);
-                e.set_scalar_reference(scalar_kernel);
+                e.set_kernel_backend(kernel_backend);
                 e
             }
         }));
@@ -851,7 +862,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "{{\"cmd\":\"serve\",\"arch\":\"{arch}\",\"engines\":{n_engines},\
              \"router\":\"{}\",\"backend\":\"{backend}\",\
-             \"kernel\":\"{kernel}\",\"precision\":\"{}\",\"samples\":{s},\
+             \"kernel\":\"{}\",\"precision\":\"{}\",\"samples\":{s},\
              \"requests\":{n_req},\"served\":{},\"rejected\":{},\
              \"wall_s\":{:.6},\"throughput_rps\":{:.3},\
              \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\
@@ -860,6 +871,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"batches\":{},\"pred_checksum\":{:.6},\
              \"unc_checksum\":{:.6}{}}}",
             router.as_str(),
+            kernel_backend.name(),
             precision.name(),
             summary.served,
             summary.rejected,
@@ -881,8 +893,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
     println!(
         "fleet: {n_engines} x {backend} engines, router {}, S={s}, \
-         precision {}{}",
+         kernel {}, precision {}{}",
         router.as_str(),
+        kernel_backend.name(),
         precision.name(),
         if shed { ", shedding on" } else { "" }
     );

@@ -12,7 +12,7 @@
 //! n_t = tanh( (x*zx_n) Wx_n + r_t * ((h*zh_n) Wh_n) + b_n )
 //! h_t = (1 - z_t) * n_t + z_t * h_{t-1}
 
-use crate::kernels::{self, Kernel};
+use crate::kernels;
 use crate::tensor::Tensor;
 
 pub const GRU_GATES: usize = 3;

@@ -4,7 +4,7 @@
 //! mask (sampled once per sequence), gate order (i, f, g, o).
 
 use crate::config::GATES;
-use crate::kernels::{self, Kernel};
+use crate::kernels;
 use crate::tensor::Tensor;
 
 #[inline]

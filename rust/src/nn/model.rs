@@ -7,7 +7,7 @@ use super::adam::{AdamHp, AdamState};
 use super::lstm::{self, LstmCache, LstmLayer};
 use super::Params;
 use crate::config::{ArchConfig, Task, GATES};
-use crate::kernels::{self, Kernel};
+use crate::kernels;
 use crate::lfsr::BernoulliSampler;
 use crate::rng::Rng;
 use crate::tensor::Tensor;
@@ -76,6 +76,128 @@ impl Masks {
 
     pub fn layer(&self, l: usize) -> (&Tensor, &Tensor) {
         (&self.tensors[2 * l], &self.tensors[2 * l + 1])
+    }
+}
+
+/// Block-generated MC-dropout masks for a whole shard of samples,
+/// packed one bit per element ([`crate::kernels::BitPlanes`]).
+///
+/// The software baselines used to draw masks per (sample, beat) as
+/// full `f32` tensors (`Masks::sample` once per sample index, 32 bits
+/// per mask bit). A `MaskBlock` draws the **identical** mix3-seeded
+/// `Rng` stream per sample — same seeds, same draw order, same bits,
+/// oracle-tested in `coordinator::engines` — but generates the whole
+/// `[count]`-sample block in one pass into bitplanes, and only expands
+/// to `f32` tensors at the consumer that genuinely needs them (the
+/// float matmul ABI, PJRT artifact arguments). The FPGA-sim engines
+/// never expand: their kernels probe bitplanes directly
+/// (`docs/kernels.md` §Bitplane masks).
+#[derive(Debug, Clone)]
+pub struct MaskBlock {
+    /// Per LSTM layer: (zx, zh) planes with `count` rows; `None` for a
+    /// non-Bayesian layer (all-ones, nothing drawn — matching
+    /// `Masks::sample`).
+    pub planes: Vec<Option<(crate::kernels::BitPlanes, crate::kernels::BitPlanes)>>,
+    /// Per-layer (idim, hdim) the planes were shaped for.
+    dims: Vec<(usize, usize)>,
+    count: usize,
+}
+
+impl MaskBlock {
+    /// Masks for samples `start..start + count` of a request's
+    /// schedule: sample `k`'s row is drawn from
+    /// `Rng::new(mix3(base, req_seed, k))` in exactly `Masks::sample`'s
+    /// element order (per layer: zx `[GATES][idim]` then zh
+    /// `[GATES][hdim]`, ascending) — the fleet's MC-shard seeding
+    /// contract (`docs/serving.md`).
+    pub fn seeded(
+        cfg: &ArchConfig,
+        base: u64,
+        req_seed: u64,
+        start: usize,
+        count: usize,
+    ) -> Self {
+        let dims = cfg.lstm_dims();
+        let mut planes: Vec<Option<(crate::kernels::BitPlanes, crate::kernels::BitPlanes)>> =
+            dims.iter()
+                .enumerate()
+                .map(|(l, (idim, hdim))| {
+                    cfg.bayes[l].then(|| {
+                        (
+                            crate::kernels::BitPlanes::ones(
+                                count,
+                                GATES * idim,
+                            ),
+                            crate::kernels::BitPlanes::ones(
+                                count,
+                                GATES * hdim,
+                            ),
+                        )
+                    })
+                })
+                .collect();
+        let p = cfg.dropout_p as f64;
+        for j in 0..count {
+            let mut rng = crate::rng::Rng::new(crate::rng::mix3(
+                base,
+                req_seed,
+                (start + j) as u64,
+            ));
+            for pair in planes.iter_mut() {
+                if let Some((zx, zh)) = pair {
+                    zx.fill_row(j, || !rng.bernoulli(p));
+                    zh.fill_row(j, || !rng.bernoulli(p));
+                }
+            }
+        }
+        Self { planes, dims, count }
+    }
+
+    pub fn count(&self) -> usize {
+        self.count
+    }
+
+    /// Packed mask bytes held for the block (vs `count * bits * 4` for
+    /// the expanded f32 tensors).
+    pub fn bytes(&self) -> usize {
+        self.planes
+            .iter()
+            .flatten()
+            .map(|(zx, zh)| zx.bytes() + zh.bytes())
+            .sum()
+    }
+
+    /// Expand to the ABI `Masks` tensors — only for consumers whose
+    /// call interface requires f32 planes (the float model forward,
+    /// PJRT artifact arguments).
+    pub fn to_masks(&self) -> Masks {
+        let n = self.count;
+        let tensors = self
+            .dims
+            .iter()
+            .zip(&self.planes)
+            .flat_map(|((idim, hdim), pair)| {
+                let expand = |dim: usize, which: usize| -> Tensor {
+                    let shape = [n, GATES, dim];
+                    match pair {
+                        None => Tensor::ones(&shape),
+                        Some((zx, zh)) => {
+                            let plane = if which == 0 { zx } else { zh };
+                            let mut t = Tensor::zeros(&shape);
+                            for r in 0..n {
+                                for i in 0..GATES * dim {
+                                    t.data[r * GATES * dim + i] =
+                                        if plane.get(r, i) { 1.0 } else { 0.0 };
+                                }
+                            }
+                            t
+                        }
+                    }
+                };
+                [expand(*idim, 0), expand(*hdim, 1)]
+            })
+            .collect();
+        Masks { tensors }
     }
 }
 
