@@ -125,6 +125,19 @@ fn banner(s: &str) {
     println!("================================================================");
 }
 
+/// Process RSS/CPU block for bench JSON (`null` off-Linux, where
+/// /proc/self is unavailable) — lets perf-trajectory diffs catch
+/// memory regressions alongside throughput ones.
+fn proc_json() -> String {
+    match bayes_rnn_fpga::obs::proc_sample() {
+        Some(p) => format!(
+            "{{\"rss_bytes\":{},\"cpu_seconds\":{:.3}}}",
+            p.rss_bytes, p.cpu_seconds
+        ),
+        None => "null".into(),
+    }
+}
+
 fn env_usize(key: &str, default: usize) -> usize {
     std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
 }
@@ -858,7 +871,7 @@ fn openloop_serving() {
             rx.recv().unwrap();
         }
         let wall = t0.elapsed();
-        let summary = server.join();
+        let mut summary = server.join();
         println!(
             "{:>12.0} {:>10.2} {:>10.2} {:>10.1}",
             rate,
@@ -1082,11 +1095,13 @@ fn kernels_bench() {
          \"backends\":[{}],\"bits_ok\":true,\
          \"simd_vs_blocked_f32_h64\":{simd_vs_blocked_f32:.3},\
          \"packed\":[{}],\"points\":[{}],\
-         \"speedup_s100\":{s100},\"simd_speedup_s100\":{simd_s100}}}",
+         \"speedup_s100\":{s100},\"simd_speedup_s100\":{simd_s100},\
+         \"proc\":{}}}",
         cfg.name(),
         mvm_json.join(","),
         packed_json.join(","),
-        points.join(",")
+        points.join(","),
+        proc_json()
     );
     let path = dir.join("kernel_microbench.json");
     std::fs::write(&path, format!("{line}\n")).expect("write summary");
@@ -1220,10 +1235,12 @@ fn precision_bench() {
     std::fs::create_dir_all(&dir).expect("create bench_results/");
     let line = format!(
         "{{\"scenario\":\"precision\",\"arch\":\"{}\",\"samples\":{s},\
-         \"q16_checksum\":{:.6},\"q16_bits_ok\":true,\"points\":[{}]}}",
+         \"q16_checksum\":{:.6},\"q16_bits_ok\":true,\"points\":[{}],\
+         \"proc\":{}}}",
         cfg.name(),
         checksum(&want.samples),
-        points.join(",")
+        points.join(","),
+        proc_json()
     );
     let path = dir.join("precision.json");
     std::fs::write(&path, format!("{line}\n")).expect("write summary");
@@ -1310,7 +1327,7 @@ fn perf() {
             rx.recv().unwrap();
         }
         let dt = t0.elapsed().as_secs_f64();
-        let summary = server.join();
+        let mut summary = server.join();
         println!(
             "coordinator: {:.1} req/s end-to-end, e2e p50 {:.3} ms \
              (queue+dispatch overhead on a {:.0} us engine)",

@@ -25,6 +25,12 @@
 //!                   each, speedup, and a bit-identity check on the
 //!                   prediction checksums (docs/kernels.md)
 //!
+//! Every run passes `--obs`, so scenario points carry the per-stage
+//! (queue / batch-form / compute / merge) p99 breakdown, and the
+//! headline scenarios are additionally written to the *committed*
+//! `BENCH_serve.json` at the repo root — the serving-perf trajectory
+//! diffable across PRs (docs/observability.md §Perf trajectory).
+//!
 //! Checks printed at the end:
 //!   * fan-out and 4-way MC-shard throughput vs. baseline (target ≥ 2x),
 //!   * MC-shard prediction checksums vs. baseline (must match to 1e-3 —
@@ -85,6 +91,16 @@ struct AdaptiveStats {
     abstain: usize,
 }
 
+/// Per-stage p99 latencies parsed from the serve JSON's nested
+/// `"obs"."stages"` object (0.0 when a stage recorded nothing).
+#[derive(Default)]
+struct StageP99s {
+    queue_ms: f64,
+    batch_ms: f64,
+    compute_ms: f64,
+    merge_ms: f64,
+}
+
 /// One `repro serve --json` run, parsed.
 struct Run {
     engines: usize,
@@ -93,7 +109,9 @@ struct Run {
     served: usize,
     rejected: usize,
     throughput: f64,
+    e2e_p50_ms: f64,
     e2e_p99_ms: f64,
+    stages: StageP99s,
     pred_checksum: f64,
     unc_checksum: f64,
     adaptive: Option<AdaptiveStats>,
@@ -123,6 +141,9 @@ fn serve(
         "--samples".to_string(),
         samples.to_string(),
         "--json".to_string(),
+        // Stage-latency breakdown rides into every scenario summary
+        // (and into the committed BENCH_serve.json trajectory).
+        "--obs".to_string(),
     ];
     argv.extend(extra.iter().map(|s| s.to_string()));
     let out = Command::new(bin)
@@ -148,11 +169,30 @@ fn serve(
             panic!("missing numeric field {key:?} in {line}")
         })
     };
+    let e2e_p50_ms = j
+        .get("e2e_ms")
+        .and_then(|o| o.get("p50"))
+        .and_then(Json::as_f64)
+        .expect("e2e_ms.p50");
     let e2e_p99_ms = j
         .get("e2e_ms")
         .and_then(|o| o.get("p99"))
         .and_then(Json::as_f64)
         .expect("e2e_ms.p99");
+    let stage_p99 = |name: &str| -> f64 {
+        j.get("obs")
+            .and_then(|o| o.get("stages"))
+            .and_then(|s| s.get(name))
+            .and_then(|h| h.get("p99"))
+            .and_then(Json::as_f64)
+            .unwrap_or(0.0)
+    };
+    let stages = StageP99s {
+        queue_ms: stage_p99("queue"),
+        batch_ms: stage_p99("batch"),
+        compute_ms: stage_p99("compute"),
+        merge_ms: stage_p99("merge"),
+    };
     let adaptive = j.get("adaptive").map(|a| {
         let g = |key: &str| -> f64 {
             a.get(key).and_then(Json::as_f64).unwrap_or_else(|| {
@@ -186,7 +226,9 @@ fn serve(
         served: f("served") as usize,
         rejected: f("rejected") as usize,
         throughput: f("throughput_rps"),
+        e2e_p50_ms,
         e2e_p99_ms,
+        stages,
         pred_checksum: f("pred_checksum"),
         unc_checksum: f("unc_checksum"),
         adaptive,
@@ -199,24 +241,33 @@ fn write_scenario(dir: &Path, name: &str, line: &str) {
     println!("  -> {}", path.display());
 }
 
+/// One run as a JSON point: throughput + e2e percentiles + the
+/// per-stage p99 breakdown from the obs layer.
+fn point_json(r: &Run) -> String {
+    format!(
+        "{{\"engines\":{},\"router\":\"{}\",\"served\":{},\
+         \"rejected\":{},\"throughput_rps\":{:.3},\
+         \"e2e_p50_ms\":{:.4},\"e2e_p99_ms\":{:.4},\
+         \"stage_p99_ms\":{{\"queue\":{:.4},\"batch\":{:.4},\
+         \"compute\":{:.4},\"merge\":{:.4}}}}}",
+        r.engines,
+        r.router,
+        r.served,
+        r.rejected,
+        r.throughput,
+        r.e2e_p50_ms,
+        r.e2e_p99_ms,
+        r.stages.queue_ms,
+        r.stages.batch_ms,
+        r.stages.compute_ms,
+        r.stages.merge_ms
+    )
+}
+
 /// Wrap several runs into one single-line JSON scenario summary.
 fn points_summary(name: &str, runs: &[&Run], extra: &str) -> String {
-    let points: Vec<String> = runs
-        .iter()
-        .map(|r| {
-            format!(
-                "{{\"engines\":{},\"router\":\"{}\",\"served\":{},\
-                 \"rejected\":{},\"throughput_rps\":{:.3},\
-                 \"e2e_p99_ms\":{:.4}}}",
-                r.engines,
-                r.router,
-                r.served,
-                r.rejected,
-                r.throughput,
-                r.e2e_p99_ms
-            )
-        })
-        .collect();
+    let points: Vec<String> =
+        runs.iter().map(|r| point_json(r)).collect();
     format!(
         "{{\"scenario\":\"{name}\",\"arch\":\"{ARCH}\",\"points\":[{}]{}}}",
         points.join(","),
@@ -417,6 +468,30 @@ fn main() {
             mcb_bits_ok
         ),
     );
+
+    // --- committed perf trajectory: BENCH_serve.json at the repo root ---
+    // One line covering the headline scenarios (with the obs stage
+    // breakdown), overwritten by every `cargo bench --bench serve_fleet`
+    // run and committed so serving-perf history is diffable in git
+    // (docs/observability.md §Perf trajectory). Machine-dependent
+    // absolute numbers; the within-file ratios are the signal.
+    let trajectory = format!(
+        "{{\"scenario\":\"serve_perf_trajectory\",\
+         \"source\":\"serve_fleet\",\"arch\":\"{ARCH}\",\
+         \"requests\":{requests},\"samples\":{samples},\
+         \"baseline\":{},\"fan_out\":{},\"fleet_scaling\":[{}]}}",
+        point_json(&baseline),
+        point_json(&fan_out),
+        scaling
+            .iter()
+            .map(point_json)
+            .collect::<Vec<_>>()
+            .join(",")
+    );
+    let traj_path = manifest_dir().join("BENCH_serve.json");
+    std::fs::write(&traj_path, format!("{trajectory}\n"))
+        .expect("write BENCH_serve.json");
+    println!("  -> {}", traj_path.display());
 
     // --- report ---
     println!("\nscenario           engines  served  rejected   req/s   vs base");

@@ -60,6 +60,10 @@ pub struct Batcher<T> {
     weights: Vec<usize>,
     pending_rows: usize,
     oldest: Option<Instant>,
+    // Occupancy counters (observability; never consulted by policy).
+    formed: usize,
+    peak_batch: usize,
+    peak_pending_rows: usize,
 }
 
 impl<T> Batcher<T> {
@@ -71,6 +75,9 @@ impl<T> Batcher<T> {
             weights: Vec::new(),
             pending_rows: 0,
             oldest: None,
+            formed: 0,
+            peak_batch: 0,
+            peak_pending_rows: 0,
         }
     }
 
@@ -88,6 +95,7 @@ impl<T> Batcher<T> {
         self.pending.push(item);
         self.weights.push(rows.max(1));
         self.pending_rows += rows.max(1);
+        self.peak_pending_rows = self.peak_pending_rows.max(self.pending_rows);
     }
 
     pub fn len(&self) -> usize {
@@ -101,6 +109,21 @@ impl<T> Batcher<T> {
     /// Pending MC-sample rows across all queued items.
     pub fn pending_rows(&self) -> usize {
         self.pending_rows
+    }
+
+    /// Batches formed so far (`take` calls).
+    pub fn formed(&self) -> usize {
+        self.formed
+    }
+
+    /// Largest batch ever taken (occupancy high-water, in items).
+    pub fn peak_batch(&self) -> usize {
+        self.peak_batch
+    }
+
+    /// Deepest the pending row backlog ever got.
+    pub fn peak_pending_rows(&self) -> usize {
+        self.peak_pending_rows
     }
 
     /// Is a batch ready under the policy? `queue_empty` signals that no
@@ -148,6 +171,8 @@ impl<T> Batcher<T> {
         let ids: Vec<u64> = self.pending_ids.drain(..n).collect();
         self.weights.drain(..n);
         self.pending_rows -= rows;
+        self.formed += 1;
+        self.peak_batch = self.peak_batch.max(n);
         if self.pending.is_empty() {
             self.oldest = None;
         } else {
@@ -266,6 +291,25 @@ mod tests {
         assert!(b.ready(false));
         assert_eq!(b.take().ids, vec![9]);
         assert_eq!(b.pending_rows(), 0);
+    }
+
+    /// Occupancy counters track formed batches, the size high-water and
+    /// the deepest pending-row backlog, without influencing policy.
+    #[test]
+    fn occupancy_counters_track_peaks() {
+        let mut b: Batcher<u32> =
+            Batcher::new(BatchPolicy::batched(3, Duration::from_secs(10)));
+        assert_eq!((b.formed(), b.peak_batch(), b.peak_pending_rows()), (0, 0, 0));
+        b.push_weighted(1, 0, 4);
+        b.push_weighted(2, 0, 8);
+        assert_eq!(b.peak_pending_rows(), 12);
+        assert_eq!(b.take().ids.len(), 2);
+        assert_eq!((b.formed(), b.peak_batch()), (1, 2));
+        b.push(3, 0);
+        assert_eq!(b.take().ids.len(), 1);
+        assert_eq!(b.formed(), 2);
+        assert_eq!(b.peak_batch(), 2, "peak survives a smaller batch");
+        assert_eq!(b.peak_pending_rows(), 12, "peak survives the drain");
     }
 
     #[test]

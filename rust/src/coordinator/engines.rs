@@ -209,6 +209,20 @@ impl Engine {
         }
     }
 
+    /// Stable backend label for health reporting
+    /// (`repro_engine_kernel_info`): `fpga:<kernel>` for the simulator
+    /// (kernel = the active [`KernelBackend`]), `gpu` / `pjrt` for the
+    /// float baselines.
+    pub fn backend_label(&self) -> String {
+        match &self.kind {
+            EngineKind::FpgaSim { accel, .. } => {
+                format!("fpga:{}", accel.kernel_backend.name())
+            }
+            EngineKind::GpuModel { .. } => "gpu".to_string(),
+            EngineKind::PjrtCpu { .. } => "pjrt".to_string(),
+        }
+    }
+
     /// Serve a batch of beats; returns one prediction per beat.
     pub fn infer_batch(&mut self, beats: &[&[f32]]) -> Result<Vec<Prediction>> {
         let s = self.s;

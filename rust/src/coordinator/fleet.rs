@@ -34,7 +34,6 @@
 //! coordinator at completion time, not at `wait` time.
 
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -49,6 +48,7 @@ use super::router::{Router, RouterPolicy};
 use super::server::ServeSummary;
 use super::stats::LatencyStats;
 use crate::metrics::pooled_mean_std;
+use crate::obs::{EngineLoad, LogHistogram, McCounters, ObsConfig, StageStats};
 use crate::uq::controller::{
     AdaptiveController, AdaptiveMcConfig, McDecision,
 };
@@ -67,6 +67,10 @@ pub struct FleetConfig {
     pub shed: bool,
     /// MC samples per request.
     pub samples: usize,
+    /// Observability switches (stage timing, histograms, optional
+    /// JSONL tracing). Off by default; when off, serve outputs are
+    /// bit-identical to a fleet without the observability layer.
+    pub obs: ObsConfig,
 }
 
 impl Default for FleetConfig {
@@ -78,6 +82,7 @@ impl Default for FleetConfig {
             queue_depth: 256,
             shed: false,
             samples: 1,
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -100,6 +105,16 @@ struct WorkItem {
     start: usize,
     count: usize,
     enqueued: Instant,
+    /// When this round was dispatched onto the engine queue. Distinct
+    /// from `enqueued` (request arrival): adaptive continuation rounds
+    /// reuse the request-level `enqueued`, so queue-stage timing must
+    /// not conflate a later round's channel wait with the whole
+    /// request's age.
+    sent: Instant,
+    /// When the worker pulled the item off its queue (stamped only with
+    /// observability enabled; queue stage = `sent → pulled`, batch
+    /// stage = `pulled → dispatch`).
+    pulled: Option<Instant>,
     /// Shard outcome destination (errors are stringified so the worker
     /// keeps running and the waiter can surface them).
     sink: ReplySink,
@@ -170,6 +185,9 @@ pub struct AdaptiveResponse {
     /// Sequential sampling rounds the request took.
     pub rounds: usize,
     pub e2e_ms: f64,
+    /// Wall time of the final MC-merge (ordered reduction +
+    /// finalisation) on the coordinator thread, in microseconds.
+    pub merge_us: f64,
 }
 
 /// A completed fleet request.
@@ -180,6 +198,28 @@ pub struct FleetResponse {
     pub e2e_ms: f64,
     /// Engine shards that contributed (1 unless MC-shard).
     pub shards: usize,
+}
+
+/// Fleet-level observability aggregates carried in [`FleetSummary`]
+/// (populated only with [`ObsConfig::enabled`]; the health counters —
+/// MC accounting, placements — are always-on, they are too cheap to
+/// gate).
+#[derive(Debug, Clone, Default)]
+pub struct FleetObs {
+    /// Whether stage timing / histograms were collected.
+    pub enabled: bool,
+    /// Request end-to-end latency (log-bucketed, mergeable).
+    pub e2e: LogHistogram,
+    /// MC-merge (reduction) stage latency.
+    pub merge: LogHistogram,
+    /// MC samples drawn across all served requests.
+    pub mc_spent: usize,
+    /// MC samples the adaptive controller's early exit avoided.
+    pub mc_saved: usize,
+    /// Submit-path placement decisions per engine (the adaptive
+    /// coordinator's continuation rounds route on its own thread-owned
+    /// cursor and are not tallied here).
+    pub placements: Vec<usize>,
 }
 
 /// Aggregate + per-engine serving stats, returned by [`Fleet::join`].
@@ -195,6 +235,8 @@ pub struct FleetSummary {
     /// Per-engine summaries (`served` there counts work *items*, i.e.
     /// shards — an MC-shard request contributes to several engines).
     pub per_engine: Vec<ServeSummary>,
+    /// Fleet-level observability aggregates.
+    pub obs: FleetObs,
 }
 
 impl FleetSummary {
@@ -224,12 +266,25 @@ impl FleetSummary {
     pub fn batches(&self) -> usize {
         self.per_engine.iter().map(|e| e.batches).sum()
     }
+
+    /// Per-stage latency merged across all engines (exact associative
+    /// histogram merge — fleet tails, not averaged per-engine tails).
+    /// Empty unless the fleet ran with observability enabled.
+    pub fn stage_stats(&self) -> StageStats {
+        let mut all = StageStats::default();
+        for e in &self.per_engine {
+            if let Some(st) = &e.stages {
+                all.merge(st);
+            }
+        }
+        all
+    }
 }
 
 /// The sharded serving fleet.
 pub struct Fleet {
     txs: Vec<mpsc::SyncSender<WorkItem>>,
-    loads: Vec<Arc<AtomicUsize>>,
+    loads: Vec<Arc<EngineLoad>>,
     workers: Vec<thread::JoinHandle<ServeSummary>>,
     adaptive_tx: mpsc::Sender<AdaptiveEvent>,
     adaptive_coord: Option<thread::JoinHandle<()>>,
@@ -241,6 +296,10 @@ pub struct Fleet {
     served: usize,
     e2e: LatencyStats,
     t0: Instant,
+    obs: ObsConfig,
+    e2e_hist: LogHistogram,
+    merge_hist: LogHistogram,
+    mc: Arc<McCounters>,
 }
 
 impl Fleet {
@@ -257,16 +316,18 @@ impl Fleet {
             "one factory per engine"
         );
         assert!(cfg.samples >= 1, "S must be positive");
+        let mc = Arc::new(McCounters::new());
         let mut txs = Vec::with_capacity(cfg.engines);
         let mut loads = Vec::with_capacity(cfg.engines);
         let mut workers = Vec::with_capacity(cfg.engines);
-        for factory in factories {
+        for (idx, factory) in factories.into_iter().enumerate() {
             let (tx, rx) = mpsc::sync_channel::<WorkItem>(cfg.queue_depth);
-            let load = Arc::new(AtomicUsize::new(0));
+            let load = Arc::new(EngineLoad::new());
             let worker_load = Arc::clone(&load);
             let policy = cfg.policy;
+            let worker_obs = cfg.obs.clone();
             workers.push(thread::spawn(move || {
-                worker_loop(factory, rx, policy, worker_load)
+                worker_loop(factory, rx, policy, worker_load, idx, worker_obs)
             }));
             txs.push(tx);
             loads.push(load);
@@ -279,6 +340,7 @@ impl Fleet {
         let coord_loads = loads.clone();
         let coord_self_tx = adaptive_tx.clone();
         let coord_router = Router::new(cfg.router);
+        let coord_mc = Arc::clone(&mc);
         let adaptive_coord = thread::spawn(move || {
             adaptive_coordinator(
                 adaptive_rx,
@@ -286,6 +348,7 @@ impl Fleet {
                 coord_txs,
                 coord_loads,
                 coord_router,
+                coord_mc,
             )
         });
         Self {
@@ -302,6 +365,10 @@ impl Fleet {
             served: 0,
             e2e: LatencyStats::new(),
             t0: Instant::now(),
+            obs: cfg.obs,
+            e2e_hist: LogHistogram::new(),
+            merge_hist: LogHistogram::new(),
+            mc,
         }
     }
 
@@ -334,6 +401,7 @@ impl Fleet {
         // same per-sample mask seeds from it, in any placement mode.
         let req_seed = id;
         let enqueued = Instant::now();
+        self.obs.trace_event(req_seed, "submit", None, 0.0);
         let beat = Arc::new(beat);
         let (reply_tx, reply_rx) = mpsc::channel();
         let expected = match place_round(
@@ -376,6 +444,7 @@ impl Fleet {
         self.next_id += 1;
         let req_seed = id;
         let enqueued = Instant::now();
+        self.obs.trace_event(req_seed, "submit", None, 0.0);
         let beat = Arc::new(beat);
         let (done_tx, done_rx) = mpsc::channel();
         // Register with the coordinator BEFORE dispatching, so the
@@ -471,10 +540,19 @@ impl Fleet {
             latency = latency.max(partial.model_latency_ms);
         }
         debug_assert_eq!(got_s, ticket.total_s, "shards must cover S");
+        let t_merge = Instant::now();
         let (mean, std) = pooled_mean_std(&sum, &sumsq, got_s);
+        let merge_us = t_merge.elapsed().as_secs_f64() * 1e6;
         let e2e_ms = ticket.enqueued.elapsed().as_secs_f64() * 1e3;
         self.e2e.record_ms(e2e_ms);
         self.served += 1;
+        self.mc.add_spent(got_s);
+        if self.obs.enabled {
+            self.e2e_hist.record_ms(e2e_ms);
+            self.merge_hist.record_us(merge_us);
+            self.obs.trace_event(ticket.id, "merge", None, merge_us);
+            self.obs.trace_event(ticket.id, "reply", None, e2e_ms * 1e3);
+        }
         Ok(FleetResponse {
             id: ticket.id,
             prediction: Prediction { mean, std, model_latency_ms: latency },
@@ -514,6 +592,13 @@ impl Fleet {
         // not when the caller got around to waiting.
         self.e2e.record_ms(resp.e2e_ms);
         self.served += 1;
+        if self.obs.enabled {
+            self.e2e_hist.record_ms(resp.e2e_ms);
+            self.merge_hist.record_us(resp.merge_us);
+            self.obs.trace_event(resp.id, "merge", None, resp.merge_us);
+            self.obs
+                .trace_event(resp.id, "reply", None, resp.e2e_ms * 1e3);
+        }
         Ok(resp)
     }
 
@@ -530,16 +615,39 @@ impl Fleet {
         // Dropping the queue senders lets the workers drain and exit.
         self.txs.clear();
         let workers = std::mem::take(&mut self.workers);
-        let per_engine: Vec<ServeSummary> = workers
+        let mut per_engine: Vec<ServeSummary> = workers
             .into_iter()
             .map(|w| w.join().expect("fleet worker panicked"))
             .collect();
+        // Queue pressure lives in the fleet-side EngineLoad gauges
+        // (workers only decrement them) — inject into the summaries.
+        for (e, load) in per_engine.iter_mut().zip(&self.loads) {
+            e.queue_highwater = load.highwater();
+            e.sheds = load.sheds();
+        }
+        let mut placements = self.router.placements().to_vec();
+        if placements.len() < self.loads.len() {
+            // route() is lazy (mc-shard never calls it): pad so the
+            // exported array always has one slot per engine.
+            placements.resize(self.loads.len(), 0);
+        }
+        if let Some(t) = &self.obs.trace {
+            t.flush();
+        }
         FleetSummary {
             served: self.served,
             rejected: self.rejected,
             wall: self.t0.elapsed(),
             e2e: self.e2e.clone(),
             per_engine,
+            obs: FleetObs {
+                enabled: self.obs.enabled,
+                e2e: self.e2e_hist.clone(),
+                merge: self.merge_hist.clone(),
+                mc_spent: self.mc.spent(),
+                mc_saved: self.mc.saved(),
+                placements,
+            },
         }
     }
 }
@@ -565,7 +673,7 @@ impl Drop for Fleet {
 fn place_round(
     router: &mut Router,
     txs: &[mpsc::SyncSender<WorkItem>],
-    loads: &[Arc<AtomicUsize>],
+    loads: &[Arc<EngineLoad>],
     beat: &Arc<Vec<f32>>,
     req_seed: u64,
     start: usize,
@@ -586,10 +694,12 @@ fn place_round(
                 .collect()
         } else {
             let load_snapshot: Vec<usize> =
-                loads.iter().map(|l| l.load(Ordering::Acquire)).collect();
+                loads.iter().map(|l| l.outstanding()).collect();
             vec![(router.route(&load_snapshot), start, count)]
         };
 
+    // One dispatch stamp per round: queue stage = sent → worker pull.
+    let sent = Instant::now();
     for (done, &(j, s0, c)) in assignments.iter().enumerate() {
         let item = WorkItem {
             beat: Arc::clone(beat),
@@ -597,17 +707,20 @@ fn place_round(
             start: s0,
             count: c,
             enqueued,
+            sent,
+            pulled: None,
             sink: sink(),
         };
         if shed {
             match txs[j].try_send(item) {
-                Ok(()) => {
-                    loads[j].fetch_add(1, Ordering::AcqRel);
+                Ok(()) => loads[j].inc(),
+                Err(_) => {
+                    loads[j].shed();
+                    return Err(done);
                 }
-                Err(_) => return Err(done),
             }
         } else {
-            loads[j].fetch_add(1, Ordering::AcqRel);
+            loads[j].inc();
             txs[j].send(item).expect("fleet worker gone");
         }
     }
@@ -644,8 +757,9 @@ fn adaptive_coordinator(
     rx: mpsc::Receiver<AdaptiveEvent>,
     self_tx: mpsc::Sender<AdaptiveEvent>,
     txs: Vec<mpsc::SyncSender<WorkItem>>,
-    loads: Vec<Arc<AtomicUsize>>,
+    loads: Vec<Arc<EngineLoad>>,
     mut router: Router,
+    counters: Arc<McCounters>,
 ) {
     let mut states: HashMap<u64, AdaptiveState> = HashMap::new();
     let mut shutdown = false;
@@ -690,6 +804,7 @@ fn adaptive_coordinator(
                 }
                 finish_round_if_complete(
                     id, &mut states, &self_tx, &txs, &loads, &mut router,
+                    &counters,
                 );
             }
             AdaptiveEvent::Cancelled { id, stray } => {
@@ -725,6 +840,7 @@ fn adaptive_coordinator(
                 }
                 finish_round_if_complete(
                     id, &mut states, &self_tx, &txs, &loads, &mut router,
+                    &counters,
                 );
             }
             AdaptiveEvent::Shutdown => shutdown = true,
@@ -737,13 +853,15 @@ fn adaptive_coordinator(
 /// If request `id`'s current round is fully collected, advance it:
 /// record the round, consult the stopping rule, dispatch the next round
 /// or finalise the response.
+#[allow(clippy::too_many_arguments)]
 fn finish_round_if_complete(
     id: u64,
     states: &mut HashMap<u64, AdaptiveState>,
     self_tx: &mpsc::Sender<AdaptiveEvent>,
     txs: &[mpsc::SyncSender<WorkItem>],
-    loads: &[Arc<AtomicUsize>],
+    loads: &[Arc<EngineLoad>],
     router: &mut Router,
+    counters: &McCounters,
 ) {
     let Some(st) = states.get_mut(&id) else { return };
     let Some(outstanding) = st.outstanding else { return };
@@ -789,7 +907,15 @@ fn finish_round_if_complete(
             let converged = matches!(decision, McDecision::Converged);
             let st = states.remove(&id).expect("state present");
             let ctl = st.ctl.expect("at least one round collected");
+            let t_merge = Instant::now();
             let (mean, std) = ctl.acc.finalize();
+            let samples = ctl.acc.samples_ordered();
+            let merge_us = t_merge.elapsed().as_secs_f64() * 1e6;
+            let s_used = ctl.acc.count();
+            // MC accounting happens here (not at wait) so unwaited
+            // requests the coordinator drains still count.
+            counters.add_spent(s_used);
+            counters.add_saved(st.mc.s_max.saturating_sub(s_used));
             let e2e_ms = st.enqueued.elapsed().as_secs_f64() * 1e3;
             let _ = st.done.send(Ok(AdaptiveResponse {
                 id,
@@ -798,12 +924,13 @@ fn finish_round_if_complete(
                     std,
                     model_latency_ms: st.latency_ms,
                 },
-                samples: ctl.acc.samples_ordered(),
+                samples,
                 out_len: ctl.acc.out_len(),
-                s_used: ctl.acc.count(),
+                s_used,
                 converged,
                 rounds: st.rounds,
                 e2e_ms,
+                merge_us,
             }));
         }
     }
@@ -821,14 +948,22 @@ fn worker_loop(
     factory: Box<dyn FnOnce() -> Engine + Send>,
     rx: mpsc::Receiver<WorkItem>,
     policy: BatchPolicy,
-    load: Arc<AtomicUsize>,
+    load: Arc<EngineLoad>,
+    idx: usize,
+    obs: ObsConfig,
 ) -> ServeSummary {
     let mut engine = factory();
     let mut batcher: Batcher<WorkItem> = Batcher::new(policy);
     let mut e2e = LatencyStats::new();
     let mut eng = LatencyStats::new();
+    let mut stages = if obs.enabled {
+        Some(StageStats::default())
+    } else {
+        None
+    };
     let mut served = 0usize;
     let mut batches = 0usize;
+    let mut mc_rows = 0usize;
     let mut seq = 0u64;
     let t0 = Instant::now();
     let mut open = true;
@@ -836,7 +971,10 @@ fn worker_loop(
         if open {
             if batcher.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(1)) {
-                    Ok(item) => {
+                    Ok(mut item) => {
+                        if obs.enabled {
+                            item.pulled = Some(Instant::now());
+                        }
                         let rows = item.count;
                         batcher.push_weighted(seq, item, rows);
                         seq += 1;
@@ -849,7 +987,10 @@ fn worker_loop(
             }
             loop {
                 match rx.try_recv() {
-                    Ok(item) => {
+                    Ok(mut item) => {
+                        if obs.enabled {
+                            item.pulled = Some(Instant::now());
+                        }
                         let rows = item.count;
                         batcher.push_weighted(seq, item, rows);
                         seq += 1;
@@ -876,9 +1017,13 @@ fn worker_loop(
                     count: item.count,
                 })
                 .collect();
+            let t_dispatch = Instant::now();
             let results = engine.infer_samples_batch(&reqs, group);
+            // Every item in the batch rode the same blocked engine
+            // call, so they share its wall time as the compute stage.
+            let compute_us = t_dispatch.elapsed().as_secs_f64() * 1e6;
             for (item, result) in batch.items.iter().zip(results) {
-                load.fetch_sub(1, Ordering::AcqRel);
+                load.dec();
                 let outcome: std::result::Result<SampleBlock, String> =
                     match result {
                         Ok(block) => {
@@ -887,6 +1032,32 @@ fn worker_loop(
                             );
                             eng.record_ms(block.model_latency_ms);
                             served += 1;
+                            mc_rows += item.count;
+                            if let Some(st) = stages.as_mut() {
+                                let pulled =
+                                    item.pulled.unwrap_or(t_dispatch);
+                                let queue_us = pulled
+                                    .duration_since(item.sent)
+                                    .as_secs_f64()
+                                    * 1e6;
+                                let batch_us = t_dispatch
+                                    .duration_since(pulled)
+                                    .as_secs_f64()
+                                    * 1e6;
+                                st.queue.record_us(queue_us);
+                                st.batch.record_us(batch_us);
+                                st.compute.record_us(compute_us);
+                                let req = item.req_seed;
+                                obs.trace_event(
+                                    req, "queue", Some(idx), queue_us,
+                                );
+                                obs.trace_event(
+                                    req, "batch", Some(idx), batch_us,
+                                );
+                                obs.trace_event(
+                                    req, "compute", Some(idx), compute_us,
+                                );
+                            }
                             Ok(block)
                         }
                         Err(e) => {
@@ -929,6 +1100,13 @@ fn worker_loop(
         batches,
         mean_batch,
         rejected: 0,
+        stages,
+        mc_rows,
+        kernel: engine.backend_label(),
+        peak_batch: batcher.peak_batch(),
+        // Fleet-side gauges; Fleet::join injects them from EngineLoad.
+        queue_highwater: 0,
+        sheds: 0,
     }
 }
 
@@ -1006,6 +1184,21 @@ mod tests {
         // Round-robin must touch both engines.
         assert!(summary.per_engine.iter().all(|e| e.served == 6));
         assert!(summary.throughput() > 0.0);
+        // Always-on health counters: 12 requests × S=2 samples, and
+        // one placement decision per request.
+        assert_eq!(summary.obs.mc_spent, 24);
+        assert_eq!(summary.obs.mc_saved, 0, "fixed path saves nothing");
+        assert_eq!(summary.obs.placements, vec![6, 6]);
+        assert!(
+            summary.per_engine.iter().all(|e| e.kernel.starts_with("fpga:")),
+            "FPGA-sim engines report an fpga:<kernel> label"
+        );
+        assert!(!summary.obs.enabled, "obs is opt-in");
+        assert!(summary.obs.e2e.is_empty(), "no histograms when disabled");
+        assert!(
+            summary.per_engine.iter().all(|e| e.stages.is_none()),
+            "no stage stats when disabled"
+        );
     }
 
     /// The headline invariant: MC-shard over 3 engines reproduces the
@@ -1111,6 +1304,11 @@ mod tests {
             summary.rejected > 0,
             "64 instant submits into a depth-1 queue must shed"
         );
+        // Engine health counters agree with admission control: each
+        // rejected request shed exactly one work item at the single
+        // engine, and the depth-1 queue must have filled.
+        assert_eq!(summary.per_engine[0].sheds, summary.rejected);
+        assert!(summary.per_engine[0].queue_highwater >= 1);
     }
 
     /// ISSUE 2 acceptance: with `s_max` samples forced (early exit
@@ -1209,6 +1407,9 @@ mod tests {
             2,
             "one 2-sample shard per engine, single round"
         );
+        // Adaptive MC accounting: 4 drawn, s_max − s_used = 20 saved.
+        assert_eq!(summary.obs.mc_spent, 4);
+        assert_eq!(summary.obs.mc_saved, 20);
     }
 
     /// Head-of-line regression (ROADMAP PR 3 finding a): continuation
@@ -1376,6 +1577,134 @@ mod tests {
             assert_eq!(b.mean, g.mean, "request {i}: mean must be bitwise");
             assert_eq!(b.std, g.std, "request {i}: std must be bitwise");
         }
+    }
+
+    /// The observability acceptance contract: enabling obs must not
+    /// perturb predictions (bitwise), and the collected stage stats
+    /// must be internally consistent — one sample per work item per
+    /// stage, and no queue-stage duration can exceed the longest
+    /// request end-to-end time that contains it.
+    #[test]
+    fn obs_enabled_is_bit_identical_and_stages_are_consistent() {
+        let s = 6;
+        let n_req = 8;
+        let run = |obs: ObsConfig| -> (Vec<Prediction>, FleetSummary) {
+            let mut fleet = Fleet::start(
+                FleetConfig {
+                    engines: 2,
+                    router: RouterPolicy::McShard,
+                    samples: s,
+                    obs,
+                    ..FleetConfig::default()
+                },
+                fpga_factories(2, s, 9),
+            );
+            let tickets: Vec<Ticket> =
+                (0..n_req).filter_map(|_| fleet.submit(beat())).collect();
+            let preds = tickets
+                .into_iter()
+                .map(|t| fleet.wait(t).expect("response").prediction)
+                .collect();
+            (preds, fleet.join())
+        };
+        let (base, plain) = run(ObsConfig::default());
+        let (observed, summary) = run(ObsConfig::on());
+        for (i, (b, o)) in base.iter().zip(&observed).enumerate() {
+            assert_eq!(b.mean, o.mean, "request {i}: obs changed the mean");
+            assert_eq!(b.std, o.std, "request {i}: obs changed the std");
+        }
+        assert_eq!(plain.served, summary.served);
+
+        assert!(summary.obs.enabled);
+        assert_eq!(summary.obs.e2e.count() as usize, n_req);
+        assert_eq!(summary.obs.merge.count() as usize, n_req);
+        // Per engine: one stage sample per completed work item.
+        for (j, e) in summary.per_engine.iter().enumerate() {
+            let st = e.stages.as_ref().expect("stages collected");
+            assert_eq!(st.queue.count() as usize, e.served, "engine {j}");
+            assert_eq!(st.batch.count() as usize, e.served, "engine {j}");
+            assert_eq!(st.compute.count() as usize, e.served, "engine {j}");
+            assert_eq!(e.mc_rows, e.served * s / 2, "engine {j}: s/2 shards");
+            assert!(e.peak_batch >= 1, "engine {j}");
+        }
+        // Fleet merge covers every item, and stage durations nest
+        // inside request e2e: every queue interval is contained in its
+        // request's [submit, reply] window.
+        let stages = summary.stage_stats();
+        assert_eq!(stages.queue.count() as usize, summary.items());
+        assert!(
+            stages.queue.max_ms() <= summary.obs.e2e.max_ms(),
+            "queue stage {} ms cannot exceed the slowest request {} ms",
+            stages.queue.max_ms(),
+            summary.obs.e2e.max_ms()
+        );
+    }
+
+    /// JSONL trace integration: a traced fleet writes parseable events
+    /// covering every stage of a request's life, with non-decreasing
+    /// log-relative timestamps per request.
+    #[test]
+    fn trace_log_captures_full_request_lifecycle() {
+        use crate::obs::TraceLog;
+        let path = std::env::temp_dir().join(format!(
+            "repro_fleet_trace_{}.jsonl",
+            std::process::id()
+        ));
+        let trace = Arc::new(TraceLog::create(&path).expect("trace file"));
+        let s = 4;
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                router: RouterPolicy::McShard,
+                samples: s,
+                obs: ObsConfig {
+                    enabled: true,
+                    trace: Some(Arc::clone(&trace)),
+                },
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s, 9),
+        );
+        let tickets: Vec<Ticket> =
+            (0..3).filter_map(|_| fleet.submit(beat())).collect();
+        for t in tickets {
+            fleet.wait(t).expect("response");
+        }
+        fleet.join();
+        trace.flush();
+
+        let text = std::fs::read_to_string(&path).expect("read trace");
+        let mut by_req: HashMap<u64, Vec<(String, u64)>> = HashMap::new();
+        for line in text.lines() {
+            let j = crate::jsonio::parse(line).expect("valid JSONL event");
+            let req =
+                j.req_usize("req").expect("req id") as u64;
+            let stage = j.req_str("stage").expect("stage").to_string();
+            let at = j.req_usize("at_us").expect("at_us") as u64;
+            by_req.entry(req).or_default().push((stage, at));
+        }
+        assert_eq!(by_req.len(), 3, "one event stream per request");
+        for (req, events) in &by_req {
+            for want in
+                ["submit", "queue", "batch", "compute", "merge", "reply"]
+            {
+                assert!(
+                    events.iter().any(|(s, _)| s == want),
+                    "request {req}: missing {want} event"
+                );
+            }
+            assert_eq!(events[0].0, "submit", "request {req}");
+            assert_eq!(
+                events.last().unwrap().0,
+                "reply",
+                "request {req}: reply is stamped last"
+            );
+            assert!(
+                events.windows(2).all(|w| w[0].1 <= w[1].1),
+                "request {req}: at_us must be non-decreasing"
+            );
+        }
+        let _ = std::fs::remove_file(&path);
     }
 
     #[test]

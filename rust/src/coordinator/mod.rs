@@ -15,7 +15,10 @@
 //!   admission control — see `docs/serving.md` for the architecture,
 //! * adaptive per-request MC sampling ([`Fleet::submit_adaptive`] /
 //!   [`Fleet::wait_adaptive`]) driven by the [`crate::uq`] controller —
-//!   see `docs/uncertainty.md`.
+//!   see `docs/uncertainty.md`,
+//! * staged tracing, per-stage latency histograms and engine health
+//!   counters via [`crate::obs`] (opt-in, bit-identical outputs when
+//!   off — see `docs/observability.md`).
 //!
 //! No tokio in this offline environment (DESIGN.md §Substitutions):
 //! std::thread + mpsc channels implement the same event loop.
@@ -34,8 +37,8 @@ pub use engines::{
     ShardRequest,
 };
 pub use fleet::{
-    AdaptiveResponse, AdaptiveTicket, Fleet, FleetConfig, FleetResponse,
-    FleetSummary, Ticket,
+    AdaptiveResponse, AdaptiveTicket, Fleet, FleetConfig, FleetObs,
+    FleetResponse, FleetSummary, Ticket,
 };
 pub use router::{Router, RouterPolicy};
 pub use server::{Server, ServerConfig, ServeSummary};

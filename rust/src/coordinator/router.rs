@@ -45,19 +45,28 @@ impl std::str::FromStr for RouterPolicy {
     }
 }
 
-/// Stateful placement: owns the round-robin cursor.
+/// Stateful placement: owns the round-robin cursor and a per-engine
+/// placement tally (an observability counter — how skewed did routing
+/// actually come out, e.g. under least-loaded with mixed backends).
 pub struct Router {
     policy: RouterPolicy,
     next: usize,
+    placed: Vec<usize>,
 }
 
 impl Router {
     pub fn new(policy: RouterPolicy) -> Self {
-        Self { policy, next: 0 }
+        Self { policy, next: 0, placed: Vec::new() }
     }
 
     pub fn policy(&self) -> RouterPolicy {
         self.policy
+    }
+
+    /// Placement decisions per engine so far (index = engine). Grows
+    /// lazily with the fleet width seen in `route` calls.
+    pub fn placements(&self) -> &[usize] {
+        &self.placed
     }
 
     /// Pick one engine for a whole request. `loads` is a snapshot of
@@ -65,7 +74,7 @@ impl Router {
     /// least-loaded; ties break to the lowest index).
     pub fn route(&mut self, loads: &[usize]) -> usize {
         assert!(!loads.is_empty());
-        match self.policy {
+        let j = match self.policy {
             RouterPolicy::LeastLoaded => loads
                 .iter()
                 .enumerate()
@@ -77,7 +86,12 @@ impl Router {
                 self.next = self.next.wrapping_add(1);
                 j
             }
+        };
+        if self.placed.len() < loads.len() {
+            self.placed.resize(loads.len(), 0);
         }
+        self.placed[j] += 1;
+        j
     }
 
     /// Split `s` MC samples over `n` engines: `(start, count)` per
@@ -156,6 +170,24 @@ mod tests {
             let min = shards.iter().map(|&(_, c)| c).min().unwrap();
             assert!(max - min <= 1, "balanced to within one sample");
         }
+    }
+
+    #[test]
+    fn placements_tally_every_route_call() {
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        assert!(r.placements().is_empty(), "no routing yet");
+        let loads = [0usize; 3];
+        for _ in 0..7 {
+            r.route(&loads);
+        }
+        assert_eq!(r.placements(), &[3, 2, 2]);
+        assert_eq!(r.placements().iter().sum::<usize>(), 7);
+
+        let mut ll = Router::new(RouterPolicy::LeastLoaded);
+        ll.route(&[5, 0]);
+        ll.route(&[5, 1]);
+        ll.route(&[0, 2]);
+        assert_eq!(ll.placements(), &[1, 2]);
     }
 
     #[test]

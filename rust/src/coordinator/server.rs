@@ -13,6 +13,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{Batcher, BatchPolicy};
 use super::engines::{Engine, Prediction};
 use super::stats::LatencyStats;
+use crate::obs::StageStats;
 
 /// Server configuration.
 pub struct ServerConfig {
@@ -56,6 +57,20 @@ pub struct ServeSummary {
     /// Requests shed by admission control (always 0 for the single-engine
     /// `Server`, which blocks instead; the fleet counts rejections here).
     pub rejected: usize,
+    /// Per-stage (queue / batch-form / compute) latency histograms;
+    /// `None` unless the fleet ran with observability enabled.
+    pub stages: Option<StageStats>,
+    /// MC sample rows this worker computed (items × shard sizes).
+    pub mc_rows: usize,
+    /// Engine backend label (`fpga:<kernel>` / `gpu` / `pjrt`).
+    pub kernel: String,
+    /// Largest batch the worker's batcher ever formed.
+    pub peak_batch: usize,
+    /// Deepest this engine's queue ever got (fleet-injected; the
+    /// single-engine `Server` does not track it).
+    pub queue_highwater: usize,
+    /// Work items rejected at this engine's queue (fleet-injected).
+    pub sheds: usize,
 }
 
 /// Handle for submitting requests.
@@ -154,6 +169,12 @@ impl Server {
                 batches,
                 mean_batch,
                 rejected: 0,
+                stages: None,
+                mc_rows: served * engine.s,
+                kernel: engine.backend_label(),
+                peak_batch: batcher.peak_batch(),
+                queue_highwater: 0,
+                sheds: 0,
             }
         });
         Self { tx: Some(tx), worker: Some(worker), next_id: 0 }

@@ -4,9 +4,18 @@ use std::time::Duration;
 
 /// Online latency collector (stores all samples; serving runs here are
 /// bounded, so exact percentiles beat sketches).
+///
+/// Percentile queries sort a cached copy once and reuse it until the
+/// next record/merge invalidates it — a sequence of `percentile_ms`
+/// calls (the JSON report asks for several) costs one sort, not one
+/// sort per call. For mergeable, report-time-bounded tails across a
+/// fleet prefer [`crate::obs::LogHistogram`]; this collector stays the
+/// exact reference.
 #[derive(Debug, Clone, Default)]
 pub struct LatencyStats {
     samples_us: Vec<f64>,
+    sorted_us: Vec<f64>,
+    dirty: bool,
 }
 
 impl LatencyStats {
@@ -16,10 +25,12 @@ impl LatencyStats {
 
     pub fn record(&mut self, d: Duration) {
         self.samples_us.push(d.as_secs_f64() * 1e6);
+        self.dirty = true;
     }
 
     pub fn record_ms(&mut self, ms: f64) {
         self.samples_us.push(ms * 1e3);
+        self.dirty = true;
     }
 
     pub fn count(&self) -> usize {
@@ -35,12 +46,18 @@ impl LatencyStats {
     }
 
     /// Exact percentile (nearest-rank), in milliseconds.
-    pub fn percentile_ms(&self, p: f64) -> f64 {
+    pub fn percentile_ms(&mut self, p: f64) -> f64 {
         if self.samples_us.is_empty() {
             return 0.0;
         }
-        let mut v = self.samples_us.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        if self.dirty || self.sorted_us.len() != self.samples_us.len() {
+            self.sorted_us.clear();
+            self.sorted_us.extend_from_slice(&self.samples_us);
+            self.sorted_us
+                .sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.dirty = false;
+        }
+        let v = &self.sorted_us;
         let rank = ((p / 100.0) * v.len() as f64).ceil() as usize;
         v[rank.clamp(1, v.len()) - 1] / 1e3
     }
@@ -66,6 +83,7 @@ impl LatencyStats {
 
     pub fn merge(&mut self, other: &LatencyStats) {
         self.samples_us.extend_from_slice(&other.samples_us);
+        self.dirty = true;
     }
 }
 
@@ -89,7 +107,7 @@ mod tests {
 
     #[test]
     fn empty_stats_are_zero() {
-        let s = LatencyStats::new();
+        let mut s = LatencyStats::new();
         assert_eq!(s.percentile_ms(99.0), 0.0);
         assert_eq!(s.mean_ms(), 0.0);
     }
@@ -99,7 +117,7 @@ mod tests {
     #[test]
     fn percentile_zero_one_two_samples() {
         // 0 samples: everything is 0.
-        let s0 = LatencyStats::new();
+        let mut s0 = LatencyStats::new();
         for p in [0.0, 50.0, 99.0, 100.0] {
             assert_eq!(s0.percentile_ms(p), 0.0);
         }
@@ -137,5 +155,24 @@ mod tests {
         assert_eq!(a.count(), 2);
         let thr = a.throughput(Duration::from_secs(2));
         assert!((thr - 1.0).abs() < 1e-9);
+        assert_eq!(a.throughput(Duration::ZERO), 0.0, "zero wall guard");
+    }
+
+    /// The sorted cache must invalidate on every mutation path:
+    /// record, record_ms and merge after a percentile query.
+    #[test]
+    fn sorted_cache_invalidates_on_mutation() {
+        let mut s = LatencyStats::new();
+        s.record_ms(5.0);
+        assert!((s.percentile_ms(100.0) - 5.0).abs() < 1e-9);
+        s.record_ms(9.0);
+        assert!((s.percentile_ms(100.0) - 9.0).abs() < 1e-9);
+        s.record(Duration::from_millis(20));
+        assert!((s.percentile_ms(100.0) - 20.0).abs() < 1e-9);
+        let mut other = LatencyStats::new();
+        other.record_ms(40.0);
+        s.merge(&other);
+        assert!((s.percentile_ms(100.0) - 40.0).abs() < 1e-9);
+        assert!((s.percentile_ms(0.0) - 5.0).abs() < 1e-9);
     }
 }

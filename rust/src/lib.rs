@@ -21,7 +21,11 @@
 //!   with a sharded multi-engine fleet ([`coordinator::fleet`] —
 //!   architecture and MC-shard semantics in `docs/serving.md`) and an
 //!   adaptive uncertainty-quantification layer ([`uq`] — sequential MC
-//!   early-exit, risk tiers and calibration; `docs/uncertainty.md`).
+//!   early-exit, risk tiers and calibration; `docs/uncertainty.md`),
+//!   plus a fleet-wide observability layer ([`obs`] — staged request
+//!   tracing, mergeable log-bucketed histograms, engine health
+//!   counters and Prometheus/JSON metrics export;
+//!   `docs/observability.md`).
 //!
 //! Python never runs on the request path: after `make artifacts` the Rust
 //! binary is self-contained.
@@ -38,6 +42,7 @@ pub mod kernels;
 pub mod lfsr;
 pub mod metrics;
 pub mod nn;
+pub mod obs;
 pub mod rng;
 pub mod runtime;
 pub mod tensor;

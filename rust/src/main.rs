@@ -34,6 +34,10 @@ use bayes_rnn_fpga::jsonio::{self, Json};
 use bayes_rnn_fpga::kernels::{self, KernelBackend};
 use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
+use bayes_rnn_fpga::obs::{
+    self, serve_metric_set, serve_obs_json, LogHistogram, ObsConfig,
+    TraceLog,
+};
 use bayes_rnn_fpga::rng::Rng;
 use bayes_rnn_fpga::runtime::Runtime;
 use bayes_rnn_fpga::tensor::{load_tensors, save_tensors, Tensor};
@@ -217,6 +221,11 @@ subcommands:
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
           [--seed N] [--json] [--kernel scalar|blocked|simd]
+          [--obs] [--metrics PATH] [--trace PATH]
+          (--obs adds per-stage latency histograms + engine health to
+           the output; --metrics writes metrics JSON to PATH and
+           Prometheus text to PATH.prom; --trace streams JSONL stage
+           events. Either implies --obs — docs/observability.md)
           [--precision q8|q12|q16[,l<i>=FMT...]]  (fpga backend only;
            every engine runs at the one given format)
           (--kernel selects the MVM backend — docs/kernels.md
@@ -632,6 +641,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queue_depth = args.usize_or("queue-depth", 256);
     let shed = args.flag("shed");
     let json_out = args.flag("json");
+    // Observability (docs/observability.md): --obs adds stage latency
+    // histograms and engine health counters to the output; --metrics /
+    // --trace imply it. Off by default — serve output is then
+    // byte-identical to a build without the obs layer.
+    let metrics_path = match args.get("metrics") {
+        Some("true") => anyhow::bail!("--metrics needs a file path"),
+        p => p.map(PathBuf::from),
+    };
+    let trace_path = match args.get("trace") {
+        Some("true") => anyhow::bail!("--trace needs a file path"),
+        p => p.map(PathBuf::from),
+    };
+    let obs_on =
+        args.flag("obs") || metrics_path.is_some() || trace_path.is_some();
+    let obs_cfg = ObsConfig {
+        enabled: obs_on,
+        trace: match &trace_path {
+            Some(p) => {
+                Some(std::sync::Arc::new(TraceLog::create(p).with_context(
+                    || format!("create trace log {}", p.display()),
+                )?))
+            }
+            None => None,
+        },
+    };
     let seed = args.usize_or("seed", 3) as u64;
     let artifacts = args.artifacts_dir();
     // Kernel backend selection (docs/kernels.md §Backends): --kernel
@@ -749,6 +783,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             queue_depth,
             shed,
             samples: s,
+            obs: obs_cfg,
         },
         factories,
     );
@@ -844,13 +879,31 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     let uq_report = adaptive.then(|| collector.finish(s));
     let wall = t0.elapsed();
-    let summary = fleet.join();
+    let mut summary = fleet.join();
     let throughput = if wall.as_secs_f64() > 0.0 {
         summary.served as f64 / wall.as_secs_f64()
     } else {
         0.0
     };
-    let engine_stats = summary.engine_stats();
+    // Exported metrics (JSON + Prometheus text exposition) ride on the
+    // obs histograms; written in both output modes.
+    if let Some(path) = &metrics_path {
+        let set =
+            serve_metric_set(&summary, wall.as_secs_f64(), throughput);
+        std::fs::write(path, jsonio::write(&set.to_json()) + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        let prom = PathBuf::from(format!("{}.prom", path.display()));
+        std::fs::write(&prom, set.to_prometheus())
+            .with_context(|| format!("write {}", prom.display()))?;
+    }
+    // Built before any `&mut` percentile call below; empty when obs is
+    // off so the JSON line stays byte-identical to the pre-obs format.
+    let obs_json = if obs_on {
+        format!(",\"obs\":{}", jsonio::write(&serve_obs_json(&summary)))
+    } else {
+        String::new()
+    };
+    let mut engine_stats = summary.engine_stats();
 
     if json_out {
         // Single-line JSON for the process-based bench harness. The
@@ -869,7 +922,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"max\":{:.4}}},\
              \"engine_ms\":{{\"mean\":{:.4},\"p99\":{:.4}}},\
              \"batches\":{},\"pred_checksum\":{:.6},\
-             \"unc_checksum\":{:.6}{}}}",
+             \"unc_checksum\":{:.6}{}{}}}",
             router.as_str(),
             kernel_backend.name(),
             precision.name(),
@@ -887,6 +940,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             pred_checksum,
             unc_checksum,
             adaptive_json,
+            obs_json,
         );
         return Ok(());
     }
@@ -929,6 +983,55 @@ fn cmd_serve(args: &Args) -> Result<()> {
             "  engine[{j}]  items {:<6} batches {:<6} model mean {:.3} ms",
             e.served, e.batches, e.engine.mean_ms()
         );
+    }
+    if obs_on {
+        let stages = summary.stage_stats();
+        let row = |name: &str, h: &LogHistogram| {
+            println!(
+                "  stage {name:<8} n {:<6} p50 {:>8.3} ms  p99 {:>8.3}  \
+                 max {:>8.3}",
+                h.count(),
+                h.percentile_ms(50.0),
+                h.percentile_ms(99.0),
+                h.max_ms()
+            );
+        };
+        println!("stages (queue -> batch-form -> compute -> merge):");
+        row("queue", &stages.queue);
+        row("batch", &stages.batch);
+        row("compute", &stages.compute);
+        row("merge", &summary.obs.merge);
+        row("e2e", &summary.obs.e2e);
+        println!(
+            "mc samples: spent {}  saved {}   router placements {:?}",
+            summary.obs.mc_spent,
+            summary.obs.mc_saved,
+            summary.obs.placements
+        );
+        for (j, e) in summary.per_engine.iter().enumerate() {
+            println!(
+                "  engine[{j}]  kernel {:<13} peak batch {:<4} \
+                 queue highwater {:<4} sheds {}",
+                e.kernel, e.peak_batch, e.queue_highwater, e.sheds
+            );
+        }
+        if let Some(p) = obs::proc_sample() {
+            println!(
+                "process: rss {:.1} MiB  cpu {:.2} s",
+                p.rss_bytes as f64 / (1024.0 * 1024.0),
+                p.cpu_seconds
+            );
+        }
+        if let Some(path) = &metrics_path {
+            println!(
+                "metrics written to {} (+ {}.prom)",
+                path.display(),
+                path.display()
+            );
+        }
+        if let Some(path) = &trace_path {
+            println!("trace events written to {}", path.display());
+        }
     }
     if let Some(r) = &uq_report {
         println!("{}", r.render());

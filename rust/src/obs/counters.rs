@@ -1,0 +1,120 @@
+//! Engine health counters: lock-free gauges shared between the fleet's
+//! submit path, adaptive coordinator and workers
+//! (`docs/observability.md` §Engine health).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Per-engine queue-pressure tracker. The outstanding count is the
+/// gauge the least-loaded router already consulted; this extends it
+/// with a high-water mark and a shed counter without adding any
+/// synchronisation beyond the pre-existing atomics (the high-water
+/// `fetch_max` rides the same cache line the `fetch_add` just touched).
+#[derive(Debug, Default)]
+pub struct EngineLoad {
+    outstanding: AtomicUsize,
+    highwater: AtomicUsize,
+    sheds: AtomicUsize,
+}
+
+impl EngineLoad {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// One work item enqueued.
+    pub fn inc(&self) {
+        let now = self.outstanding.fetch_add(1, Ordering::AcqRel) + 1;
+        self.highwater.fetch_max(now, Ordering::AcqRel);
+    }
+
+    /// One work item completed by the worker.
+    pub fn dec(&self) {
+        self.outstanding.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Admission control rejected a work item aimed at this engine.
+    pub fn shed(&self) {
+        self.sheds.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Outstanding work items (the router's load snapshot).
+    pub fn outstanding(&self) -> usize {
+        self.outstanding.load(Ordering::Acquire)
+    }
+
+    /// Deepest the queue ever got.
+    pub fn highwater(&self) -> usize {
+        self.highwater.load(Ordering::Acquire)
+    }
+
+    /// Work items rejected at this engine's queue.
+    pub fn sheds(&self) -> usize {
+        self.sheds.load(Ordering::Acquire)
+    }
+}
+
+/// Fleet-wide MC sample accounting: samples actually drawn vs samples
+/// the adaptive controller's early exit avoided (vs its `s_max`
+/// budget). Updated by the waiter thread (fixed path) and the adaptive
+/// coordinator thread (adaptive path), hence atomic.
+#[derive(Debug, Default)]
+pub struct McCounters {
+    spent: AtomicUsize,
+    saved: AtomicUsize,
+}
+
+impl McCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add_spent(&self, n: usize) {
+        self.spent.fetch_add(n, Ordering::AcqRel);
+    }
+
+    pub fn add_saved(&self, n: usize) {
+        self.saved.fetch_add(n, Ordering::AcqRel);
+    }
+
+    pub fn spent(&self) -> usize {
+        self.spent.load(Ordering::Acquire)
+    }
+
+    pub fn saved(&self) -> usize {
+        self.saved.load(Ordering::Acquire)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn engine_load_tracks_highwater_and_sheds() {
+        let l = EngineLoad::new();
+        l.inc();
+        l.inc();
+        l.inc();
+        assert_eq!(l.outstanding(), 3);
+        assert_eq!(l.highwater(), 3);
+        l.dec();
+        l.dec();
+        assert_eq!(l.outstanding(), 1);
+        assert_eq!(l.highwater(), 3, "high-water survives drain");
+        l.inc();
+        assert_eq!(l.highwater(), 3, "2 outstanding does not beat 3");
+        l.shed();
+        l.shed();
+        assert_eq!(l.sheds(), 2);
+    }
+
+    #[test]
+    fn mc_counters_accumulate() {
+        let c = McCounters::new();
+        c.add_spent(8);
+        c.add_spent(4);
+        c.add_saved(16);
+        assert_eq!(c.spent(), 12);
+        assert_eq!(c.saved(), 16);
+    }
+}

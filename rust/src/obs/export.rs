@@ -1,0 +1,500 @@
+//! Metrics export: a stable metrics JSON plus a Prometheus-style text
+//! exposition, built from a [`FleetSummary`] after `Fleet::join`
+//! (`repro serve --metrics <path>`; metric names and schema in
+//! `docs/observability.md`).
+
+use crate::coordinator::fleet::FleetSummary;
+use crate::jsonio::{self, Json};
+
+use super::hist::LogHistogram;
+use super::procstat;
+
+/// Every metric name `serve_metric_set` emits — the single source of
+/// truth shared by the unit test below, the docs table and the CI
+/// metrics-smoke validation.
+pub const SERVE_METRIC_NAMES: &[&str] = &[
+    "repro_requests_served_total",
+    "repro_requests_rejected_total",
+    "repro_wall_seconds",
+    "repro_throughput_rps",
+    "repro_e2e_latency_ms",
+    "repro_stage_latency_ms",
+    "repro_engine_items_total",
+    "repro_engine_batches_total",
+    "repro_engine_peak_batch",
+    "repro_engine_queue_highwater",
+    "repro_engine_sheds_total",
+    "repro_engine_mc_rows_total",
+    "repro_engine_kernel_info",
+    "repro_mc_samples_spent_total",
+    "repro_mc_samples_saved_total",
+    "repro_router_placements_total",
+];
+
+/// One exported metric sample.
+pub struct Metric {
+    pub name: &'static str,
+    /// `"counter"` or `"gauge"` (Prometheus TYPE line).
+    pub kind: &'static str,
+    pub help: &'static str,
+    pub labels: Vec<(&'static str, String)>,
+    pub value: f64,
+}
+
+/// An ordered metric collection with the two stable renderings.
+#[derive(Default)]
+pub struct MetricSet {
+    metrics: Vec<Metric>,
+}
+
+impl MetricSet {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn counter(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        labels: Vec<(&'static str, String)>,
+        value: f64,
+    ) {
+        self.metrics.push(Metric { name, kind: "counter", help, labels, value });
+    }
+
+    pub fn gauge(
+        &mut self,
+        name: &'static str,
+        help: &'static str,
+        labels: Vec<(&'static str, String)>,
+        value: f64,
+    ) {
+        self.metrics.push(Metric { name, kind: "gauge", help, labels, value });
+    }
+
+    pub fn metrics(&self) -> &[Metric] {
+        &self.metrics
+    }
+
+    /// Stable JSON: one key per metric name, each an array of
+    /// `{"labels": {...}, "value": v}` samples in emission order.
+    pub fn to_json(&self) -> Json {
+        let mut names: Vec<&'static str> = Vec::new();
+        for m in &self.metrics {
+            if !names.contains(&m.name) {
+                names.push(m.name);
+            }
+        }
+        let mut top = Vec::new();
+        for name in names {
+            let samples: Vec<Json> = self
+                .metrics
+                .iter()
+                .filter(|m| m.name == name)
+                .map(|m| {
+                    let labels = m
+                        .labels
+                        .iter()
+                        .map(|(k, v)| (*k, Json::Str(v.clone())))
+                        .collect();
+                    jsonio::obj(vec![
+                        ("labels", jsonio::obj(labels)),
+                        ("value", Json::Num(m.value)),
+                    ])
+                })
+                .collect();
+            top.push((name, Json::Arr(samples)));
+        }
+        jsonio::obj(top)
+    }
+
+    /// Prometheus text exposition: `# HELP` / `# TYPE` once per name,
+    /// then one `name{labels} value` line per sample.
+    pub fn to_prometheus(&self) -> String {
+        let mut out = String::new();
+        let mut seen: Vec<&'static str> = Vec::new();
+        for m in &self.metrics {
+            if !seen.contains(&m.name) {
+                seen.push(m.name);
+                out.push_str(&format!("# HELP {} {}\n", m.name, m.help));
+                out.push_str(&format!("# TYPE {} {}\n", m.name, m.kind));
+                for s in self.metrics.iter().filter(|s| s.name == m.name) {
+                    if s.labels.is_empty() {
+                        out.push_str(&format!("{} {}\n", s.name, s.value));
+                    } else {
+                        let labels: Vec<String> = s
+                            .labels
+                            .iter()
+                            .map(|(k, v)| format!("{k}=\"{v}\""))
+                            .collect();
+                        out.push_str(&format!(
+                            "{}{{{}}} {}\n",
+                            s.name,
+                            labels.join(","),
+                            s.value
+                        ));
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Quantile gauges for one histogram under a shared label prefix.
+fn quantile_gauges(
+    set: &mut MetricSet,
+    name: &'static str,
+    help: &'static str,
+    base: &[(&'static str, String)],
+    h: &LogHistogram,
+) {
+    let points: [(&str, f64); 4] = [
+        ("p50", h.percentile_ms(50.0)),
+        ("p99", h.percentile_ms(99.0)),
+        ("max", h.max_ms()),
+        ("mean", h.mean_ms()),
+    ];
+    for (q, v) in points {
+        let mut labels = base.to_vec();
+        labels.push(("quantile", q.to_string()));
+        set.gauge(name, help, labels, v);
+    }
+}
+
+/// Build the full serve metric set from a joined fleet summary.
+pub fn serve_metric_set(
+    summary: &FleetSummary,
+    wall_s: f64,
+    throughput: f64,
+) -> MetricSet {
+    let mut set = MetricSet::new();
+    set.counter(
+        "repro_requests_served_total",
+        "Requests fully served (all shards reduced)",
+        vec![],
+        summary.served as f64,
+    );
+    set.counter(
+        "repro_requests_rejected_total",
+        "Requests rejected by admission control",
+        vec![],
+        summary.rejected as f64,
+    );
+    set.gauge(
+        "repro_wall_seconds",
+        "Serving wall-clock window",
+        vec![],
+        wall_s,
+    );
+    set.gauge(
+        "repro_throughput_rps",
+        "Served requests per second",
+        vec![],
+        throughput,
+    );
+    quantile_gauges(
+        &mut set,
+        "repro_e2e_latency_ms",
+        "Request end-to-end latency (log-bucketed histogram)",
+        &[],
+        &summary.obs.e2e,
+    );
+    let stages = summary.stage_stats();
+    let stage_hists: [(&str, &LogHistogram); 4] = [
+        ("queue", &stages.queue),
+        ("batch", &stages.batch),
+        ("compute", &stages.compute),
+        ("merge", &summary.obs.merge),
+    ];
+    for (stage, h) in stage_hists {
+        quantile_gauges(
+            &mut set,
+            "repro_stage_latency_ms",
+            "Per-stage latency, merged across engines",
+            &[("stage", stage.to_string())],
+            h,
+        );
+    }
+    for (j, e) in summary.per_engine.iter().enumerate() {
+        let eng = vec![("engine", j.to_string())];
+        set.counter(
+            "repro_engine_items_total",
+            "Work items (shards) completed",
+            eng.clone(),
+            e.served as f64,
+        );
+        set.counter(
+            "repro_engine_batches_total",
+            "Batches formed",
+            eng.clone(),
+            e.batches as f64,
+        );
+        set.gauge(
+            "repro_engine_peak_batch",
+            "Largest batch formed (occupancy high-water)",
+            eng.clone(),
+            e.peak_batch as f64,
+        );
+        set.gauge(
+            "repro_engine_queue_highwater",
+            "Deepest the engine queue ever got",
+            eng.clone(),
+            e.queue_highwater as f64,
+        );
+        set.counter(
+            "repro_engine_sheds_total",
+            "Work items rejected at this engine's queue",
+            eng.clone(),
+            e.sheds as f64,
+        );
+        set.counter(
+            "repro_engine_mc_rows_total",
+            "MC sample rows computed",
+            eng.clone(),
+            e.mc_rows as f64,
+        );
+        let mut info = eng.clone();
+        info.push(("kernel", e.kernel.clone()));
+        set.gauge(
+            "repro_engine_kernel_info",
+            "Engine backend/kernel label (value is always 1)",
+            info,
+            1.0,
+        );
+    }
+    set.counter(
+        "repro_mc_samples_spent_total",
+        "MC samples drawn across all served requests",
+        vec![],
+        summary.obs.mc_spent as f64,
+    );
+    set.counter(
+        "repro_mc_samples_saved_total",
+        "MC samples avoided by adaptive early exit (vs s_max)",
+        vec![],
+        summary.obs.mc_saved as f64,
+    );
+    for (j, &n) in summary.obs.placements.iter().enumerate() {
+        set.counter(
+            "repro_router_placements_total",
+            "Submit-path placement decisions per engine",
+            vec![("engine", j.to_string())],
+            n as f64,
+        );
+    }
+    if let Some(p) = procstat::sample() {
+        set.gauge(
+            "repro_proc_rss_bytes",
+            "Resident set size",
+            vec![],
+            p.rss_bytes as f64,
+        );
+        set.counter(
+            "repro_proc_cpu_seconds_total",
+            "Cumulative user+system CPU time",
+            vec![],
+            p.cpu_seconds,
+        );
+    }
+    set
+}
+
+/// Histogram summary object for the nested serve JSON.
+fn hist_json(h: &LogHistogram) -> Json {
+    jsonio::obj(vec![
+        ("count", Json::Num(h.count() as f64)),
+        ("mean", Json::Num(h.mean_ms())),
+        ("p50", Json::Num(h.percentile_ms(50.0))),
+        ("p99", Json::Num(h.percentile_ms(99.0))),
+        ("max", Json::Num(h.max_ms())),
+    ])
+}
+
+/// The nested `"obs"` object added to the `repro serve --json` line
+/// when observability is enabled: fleet-wide stage percentiles, a
+/// per-engine breakdown (stages + health counters), MC sample
+/// accounting, router placements and a process snapshot.
+pub fn serve_obs_json(summary: &FleetSummary) -> Json {
+    let stages = summary.stage_stats();
+    let engines: Vec<Json> = summary
+        .per_engine
+        .iter()
+        .enumerate()
+        .map(|(j, e)| {
+            let mut fields = vec![
+                ("engine", Json::Num(j as f64)),
+                ("kernel", Json::Str(e.kernel.clone())),
+                ("items", Json::Num(e.served as f64)),
+                ("batches", Json::Num(e.batches as f64)),
+                ("mean_batch", Json::Num(e.mean_batch)),
+                ("peak_batch", Json::Num(e.peak_batch as f64)),
+                ("queue_highwater", Json::Num(e.queue_highwater as f64)),
+                ("sheds", Json::Num(e.sheds as f64)),
+                ("mc_rows", Json::Num(e.mc_rows as f64)),
+            ];
+            if let Some(st) = &e.stages {
+                fields.push(("queue_ms", hist_json(&st.queue)));
+                fields.push(("batch_ms", hist_json(&st.batch)));
+                fields.push(("compute_ms", hist_json(&st.compute)));
+            }
+            jsonio::obj(fields)
+        })
+        .collect();
+    let proc = match procstat::sample() {
+        Some(p) => jsonio::obj(vec![
+            ("rss_bytes", Json::Num(p.rss_bytes as f64)),
+            ("cpu_seconds", Json::Num(p.cpu_seconds)),
+        ]),
+        None => Json::Null,
+    };
+    jsonio::obj(vec![
+        (
+            "stages",
+            jsonio::obj(vec![
+                ("queue", hist_json(&stages.queue)),
+                ("batch", hist_json(&stages.batch)),
+                ("compute", hist_json(&stages.compute)),
+                ("merge", hist_json(&summary.obs.merge)),
+                ("e2e", hist_json(&summary.obs.e2e)),
+            ]),
+        ),
+        ("engines", Json::Arr(engines)),
+        (
+            "mc_samples",
+            jsonio::obj(vec![
+                ("spent", Json::Num(summary.obs.mc_spent as f64)),
+                ("saved", Json::Num(summary.obs.mc_saved as f64)),
+            ]),
+        ),
+        (
+            "placements",
+            Json::Arr(
+                summary
+                    .obs
+                    .placements
+                    .iter()
+                    .map(|&n| Json::Num(n as f64))
+                    .collect(),
+            ),
+        ),
+        ("proc", proc),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::fleet::FleetObs;
+    use crate::coordinator::server::ServeSummary;
+    use crate::coordinator::stats::LatencyStats;
+    use crate::obs::trace::StageStats;
+    use std::time::Duration;
+
+    fn fake_summary() -> FleetSummary {
+        let mut stages = StageStats::default();
+        stages.queue.record_ms(0.5);
+        stages.batch.record_ms(0.1);
+        stages.compute.record_ms(2.0);
+        let engine = ServeSummary {
+            served: 4,
+            wall: Duration::from_millis(10),
+            e2e: LatencyStats::new(),
+            engine: LatencyStats::new(),
+            batches: 2,
+            mean_batch: 2.0,
+            rejected: 0,
+            stages: Some(stages),
+            mc_rows: 24,
+            kernel: "fpga:blocked".to_string(),
+            queue_highwater: 3,
+            sheds: 1,
+            peak_batch: 2,
+        };
+        let mut obs = FleetObs { enabled: true, ..FleetObs::default() };
+        obs.e2e.record_ms(3.0);
+        obs.merge.record_ms(0.05);
+        obs.mc_spent = 24;
+        obs.mc_saved = 8;
+        obs.placements = vec![4];
+        FleetSummary {
+            served: 4,
+            rejected: 1,
+            wall: Duration::from_millis(10),
+            e2e: LatencyStats::new(),
+            per_engine: vec![engine],
+            obs,
+        }
+    }
+
+    #[test]
+    fn serve_metric_set_covers_every_documented_name() {
+        let set = serve_metric_set(&fake_summary(), 0.01, 400.0);
+        for name in SERVE_METRIC_NAMES {
+            assert!(
+                set.metrics().iter().any(|m| m.name == *name),
+                "metric {name} missing from serve_metric_set"
+            );
+        }
+        // proc metrics are Linux-only extras, not in the required list.
+        let json = jsonio::write(&set.to_json());
+        let parsed = jsonio::parse(&json).expect("metrics JSON parses");
+        for name in SERVE_METRIC_NAMES {
+            assert!(parsed.get(name).is_some(), "JSON missing {name}");
+        }
+    }
+
+    #[test]
+    fn prometheus_text_has_help_type_and_labelled_samples() {
+        let set = serve_metric_set(&fake_summary(), 0.01, 400.0);
+        let text = set.to_prometheus();
+        for name in SERVE_METRIC_NAMES {
+            assert_eq!(
+                text.matches(&format!("# HELP {name} ")).count(),
+                1,
+                "{name}: exactly one HELP line"
+            );
+            assert_eq!(
+                text.matches(&format!("# TYPE {name} ")).count(),
+                1,
+                "{name}: exactly one TYPE line"
+            );
+        }
+        assert!(text.contains("repro_requests_served_total 4\n"));
+        assert!(text
+            .contains("repro_stage_latency_ms{stage=\"queue\",quantile=\"p50\"}"));
+        assert!(text.contains(
+            "repro_engine_kernel_info{engine=\"0\",kernel=\"fpga:blocked\"} 1\n"
+        ));
+    }
+
+    #[test]
+    fn serve_obs_json_nests_stages_engines_and_accounting() {
+        let j = serve_obs_json(&fake_summary());
+        let line = jsonio::write(&j);
+        let parsed = jsonio::parse(&line).expect("obs JSON parses");
+        for stage in ["queue", "batch", "compute", "merge", "e2e"] {
+            assert!(
+                parsed
+                    .get("stages")
+                    .and_then(|s| s.get(stage))
+                    .and_then(|s| s.get("p99"))
+                    .is_some(),
+                "stages.{stage}.p99 missing"
+            );
+        }
+        let engines = parsed.get("engines").and_then(Json::as_arr).unwrap();
+        assert_eq!(engines.len(), 1);
+        assert_eq!(
+            engines[0].get("mc_rows").and_then(Json::as_usize),
+            Some(24)
+        );
+        assert_eq!(
+            parsed
+                .get("mc_samples")
+                .and_then(|m| m.get("saved"))
+                .and_then(Json::as_usize),
+            Some(8)
+        );
+    }
+}

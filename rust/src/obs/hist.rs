@@ -1,0 +1,357 @@
+//! Mergeable log2-bucketed latency histograms — the fleet-wide tail
+//! primitive (`docs/observability.md` §Histogram bucket scheme).
+//!
+//! [`crate::coordinator::stats::LatencyStats`] stores every sample and
+//! computes exact percentiles; that is right for one bounded serving
+//! run but cannot combine across workers without concatenating sample
+//! vectors. [`LogHistogram`] trades a bounded relative error for an
+//! **exact, associative, commutative merge**: per-engine and per-worker
+//! histograms element-wise-sum into one honest fleet-wide distribution,
+//! which is what multi-worker tail reporting (and the planned chaos
+//! harness) needs.
+//!
+//! Bucket scheme over microseconds:
+//!
+//! * bucket 0 — underflow, `[0, 1)` µs (plus non-finite junk),
+//! * `OCTAVES × SUB_BUCKETS` buckets — octave `k` covers
+//!   `[2^k, 2^(k+1))` µs, split into [`SUB_BUCKETS`] equal linear
+//!   sub-buckets, so the bucket containing a value is never wider than
+//!   `value / SUB_BUCKETS` (12.5 % relative),
+//! * last bucket — overflow, `[2^OCTAVES µs, ∞)` (≈ 17.9 min).
+//!
+//! Percentiles are nearest-rank over the cumulative bucket counts: the
+//! k-th smallest recorded value lies in the bucket where the cumulative
+//! count reaches k, so the reported value (the bucket's upper edge,
+//! clamped into the observed `[min, max]`) is within one bucket width
+//! of the exact nearest-rank sample — property-tested below.
+
+use std::time::Duration;
+
+/// Linear sub-buckets per octave (8 ⇒ ≤ 12.5 % relative bucket width).
+pub const SUB_BUCKETS: usize = 8;
+const SUB_BITS: u32 = 3;
+/// Octaves covered before overflow: `[1 µs, 2^30 µs ≈ 17.9 min)`.
+pub const OCTAVES: usize = 30;
+/// Total buckets: underflow + octaves × sub-buckets + overflow.
+pub const N_BUCKETS: usize = 2 + OCTAVES * SUB_BUCKETS;
+
+/// Bucket index for a value in microseconds. Exact (no float log):
+/// the octave is the IEEE-754 exponent, the sub-bucket the top
+/// [`SUB_BITS`] mantissa bits.
+fn bucket_index(us: f64) -> usize {
+    if !(us >= 1.0) {
+        // Underflow, negatives and NaN all land in bucket 0.
+        return 0;
+    }
+    let oct = ((us.to_bits() >> 52) & 0x7ff) as usize - 1023;
+    if oct >= OCTAVES {
+        return N_BUCKETS - 1;
+    }
+    let frac = us / (1u64 << oct) as f64; // in [1, 2)
+    let sub =
+        (((frac - 1.0) * SUB_BUCKETS as f64) as usize).min(SUB_BUCKETS - 1);
+    1 + oct * SUB_BUCKETS + sub
+}
+
+/// `[lo, hi)` bounds of bucket `i`, in microseconds. The overflow
+/// bucket's upper bound is `f64::INFINITY`.
+pub fn bucket_bounds_us(i: usize) -> (f64, f64) {
+    assert!(i < N_BUCKETS, "bucket {i} out of range");
+    if i == 0 {
+        return (0.0, 1.0);
+    }
+    if i == N_BUCKETS - 1 {
+        return ((1u64 << OCTAVES) as f64, f64::INFINITY);
+    }
+    let oct = (i - 1) / SUB_BUCKETS;
+    let sub = (i - 1) % SUB_BUCKETS;
+    let base = (1u64 << oct) as f64;
+    let step = base / SUB_BUCKETS as f64;
+    (base + sub as f64 * step, base + (sub + 1) as f64 * step)
+}
+
+/// A mergeable latency histogram. Equality is structural and exact —
+/// counts are integers and the running sum is kept in integer
+/// nanoseconds precisely so that `merge` is associative and
+/// commutative bit-for-bit (f64 addition is not associative).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LogHistogram {
+    counts: Vec<u64>,
+    count: u64,
+    sum_ns: u128,
+    min_us: f64,
+    max_us: f64,
+}
+
+impl Default for LogHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LogHistogram {
+    pub fn new() -> Self {
+        Self {
+            counts: vec![0; N_BUCKETS],
+            count: 0,
+            sum_ns: 0,
+            min_us: f64::INFINITY,
+            max_us: 0.0,
+        }
+    }
+
+    pub fn record_us(&mut self, us: f64) {
+        if !us.is_finite() || us < 0.0 {
+            return; // keep count integrity under junk input
+        }
+        self.counts[bucket_index(us)] += 1;
+        self.count += 1;
+        self.sum_ns += (us * 1e3).round() as u128;
+        self.min_us = self.min_us.min(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn record_ms(&mut self, ms: f64) {
+        self.record_us(ms * 1e3);
+    }
+
+    pub fn record(&mut self, d: Duration) {
+        self.record_us(d.as_secs_f64() * 1e6);
+    }
+
+    pub fn count(&self) -> usize {
+        self.count as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn mean_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.sum_ns as f64 / self.count as f64 / 1e6
+    }
+
+    pub fn min_ms(&self) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        self.min_us / 1e3
+    }
+
+    pub fn max_ms(&self) -> f64 {
+        self.max_us / 1e3
+    }
+
+    /// Nearest-rank percentile in milliseconds. Returns the upper edge
+    /// of the bucket holding the rank-th smallest sample, clamped into
+    /// the observed `[min, max]` — so the result is within one bucket
+    /// width of the exact nearest-rank value (and exact for singleton
+    /// histograms).
+    pub fn percentile_ms(&self, p: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = (((p / 100.0) * self.count as f64).ceil() as u64)
+            .clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            cum += c;
+            if cum >= rank {
+                let (_, hi) = bucket_bounds_us(i);
+                return hi.min(self.max_us).max(self.min_us) / 1e3;
+            }
+        }
+        self.max_us / 1e3 // unreachable: cum == count >= rank
+    }
+
+    /// Width (ms) of the bucket containing `value_ms` — the percentile
+    /// error bound at that value. Infinite in the overflow bucket.
+    pub fn bucket_width_ms(value_ms: f64) -> f64 {
+        let (lo, hi) = bucket_bounds_us(bucket_index(value_ms * 1e3));
+        (hi - lo) / 1e3
+    }
+
+    /// Exact element-wise merge: associative and commutative (counts
+    /// and the nanosecond sum are integers; min/max are order-free).
+    pub fn merge(&mut self, other: &LogHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_ns += other.sum_ns;
+        self.min_us = self.min_us.min(other.min_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Deterministic xorshift ⇒ no rand dependency; spans several
+    /// orders of magnitude so many octaves are exercised.
+    fn samples(seed: u64, n: usize) -> Vec<f64> {
+        let mut state = seed.max(1);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            state ^= state << 13;
+            state ^= state >> 7;
+            state ^= state << 17;
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+            // log-uniform over [0.5 µs, ~1.2e6 µs]
+            out.push(0.5 * (2.0f64).powf(u * 21.0));
+        }
+        out
+    }
+
+    fn hist_of(vals: &[f64]) -> LogHistogram {
+        let mut h = LogHistogram::new();
+        for &v in vals {
+            h.record_us(v);
+        }
+        h
+    }
+
+    fn exact_nearest_rank_us(sorted: &[f64], p: f64) -> f64 {
+        let rank = ((p / 100.0) * sorted.len() as f64).ceil() as usize;
+        sorted[rank.clamp(1, sorted.len()) - 1]
+    }
+
+    #[test]
+    fn bucket_bounds_partition_the_axis() {
+        // Buckets tile [0, 2^OCTAVES) without gaps or overlap, and
+        // every value indexes into the bucket whose bounds contain it.
+        let mut expect_lo = 0.0;
+        for i in 0..N_BUCKETS - 1 {
+            let (lo, hi) = bucket_bounds_us(i);
+            assert_eq!(lo, expect_lo, "bucket {i} starts at a gap/overlap");
+            assert!(hi > lo);
+            expect_lo = hi;
+        }
+        assert_eq!(expect_lo, (1u64 << OCTAVES) as f64);
+        for &us in &samples(7, 4000) {
+            let i = bucket_index(us);
+            let (lo, hi) = bucket_bounds_us(i);
+            assert!(lo <= us && us < hi, "{us} outside bucket {i} [{lo},{hi})");
+        }
+        // Edges land in the bucket they open.
+        for us in [1.0, 2.0, 1024.0, 1.5, 3.25] {
+            let (lo, _) = bucket_bounds_us(bucket_index(us));
+            assert!(lo <= us);
+        }
+        assert_eq!(bucket_index(0.0), 0);
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(1e12), N_BUCKETS - 1);
+    }
+
+    #[test]
+    fn merge_is_commutative_and_associative_exactly() {
+        let (a0, b0, c0) =
+            (samples(1, 500), samples(2, 700), samples(3, 300));
+        let (a, b, c) = (hist_of(&a0), hist_of(&b0), hist_of(&c0));
+
+        // a ⊕ b == b ⊕ a (structural equality: counts, sum, min, max).
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, ba, "merge must commute");
+
+        // (a ⊕ b) ⊕ c == a ⊕ (b ⊕ c).
+        let mut ab_c = ab.clone();
+        ab_c.merge(&c);
+        let mut bc = b.clone();
+        bc.merge(&c);
+        let mut a_bc = a.clone();
+        a_bc.merge(&bc);
+        assert_eq!(ab_c, a_bc, "merge must associate");
+
+        // And both equal the histogram of the pooled samples.
+        let mut pooled = a0.clone();
+        pooled.extend(&b0);
+        pooled.extend(&c0);
+        assert_eq!(ab_c, hist_of(&pooled));
+    }
+
+    /// The acceptance bound: percentiles of per-engine histograms
+    /// merged into one must match the exact nearest-rank value of the
+    /// pooled samples within one bucket width.
+    #[test]
+    fn merged_percentiles_match_exact_within_one_bucket() {
+        let shards =
+            [samples(11, 400), samples(12, 650), samples(13, 123)];
+        let mut merged = LogHistogram::new();
+        let mut pooled = Vec::new();
+        for sh in &shards {
+            merged.merge(&hist_of(sh));
+            pooled.extend(sh);
+        }
+        pooled.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for p in [1.0, 10.0, 25.0, 50.0, 75.0, 90.0, 99.0, 99.9, 100.0] {
+            let exact_ms = exact_nearest_rank_us(&pooled, p) / 1e3;
+            let est_ms = merged.percentile_ms(p);
+            let bound = LogHistogram::bucket_width_ms(exact_ms);
+            assert!(
+                (est_ms - exact_ms).abs() <= bound + 1e-12,
+                "p{p}: |{est_ms} - {exact_ms}| > bucket width {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn empty_and_singleton_edge_cases() {
+        let empty = LogHistogram::new();
+        assert!(empty.is_empty());
+        for p in [0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(empty.percentile_ms(p), 0.0);
+        }
+        assert_eq!(empty.mean_ms(), 0.0);
+        assert_eq!(empty.min_ms(), 0.0);
+        assert_eq!(empty.max_ms(), 0.0);
+
+        // Merging empty is the identity.
+        let a = hist_of(&samples(5, 100));
+        let mut a2 = a.clone();
+        a2.merge(&empty);
+        assert_eq!(a2, a);
+        let mut e2 = LogHistogram::new();
+        e2.merge(&a);
+        assert_eq!(e2, a);
+
+        // One sample: every percentile is that sample, exactly (the
+        // min/max clamp collapses the bucket).
+        let mut one = LogHistogram::new();
+        one.record_ms(7.25);
+        assert_eq!(one.count(), 1);
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert!((one.percentile_ms(p) - 7.25).abs() < 1e-12, "p={p}");
+        }
+        assert!((one.mean_ms() - 7.25).abs() < 1e-9);
+        assert!((one.min_ms() - 7.25).abs() < 1e-12);
+        assert!((one.max_ms() - 7.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn junk_input_is_dropped_not_counted() {
+        let mut h = LogHistogram::new();
+        h.record_us(f64::NAN);
+        h.record_us(f64::INFINITY);
+        h.record_us(-3.0);
+        assert!(h.is_empty());
+        h.record_us(5.0);
+        assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn duration_and_ms_entry_points_agree() {
+        let mut a = LogHistogram::new();
+        a.record(Duration::from_micros(1500));
+        let mut b = LogHistogram::new();
+        b.record_ms(1.5);
+        assert_eq!(a.counts, b.counts);
+        assert!((a.percentile_ms(50.0) - b.percentile_ms(50.0)).abs() < 1e-12);
+    }
+}

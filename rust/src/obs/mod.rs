@@ -1,0 +1,66 @@
+//! Fleet-wide observability: staged request tracing, mergeable
+//! log-bucketed latency histograms, engine health counters and a
+//! metrics export layer (`docs/observability.md`).
+//!
+//! Design constraints, in priority order:
+//!
+//! 1. **Never perturb the data path.** Observability reads timestamps
+//!    and counters around the serving path; it does not reorder work,
+//!    change batch formation or touch RNG state. With
+//!    [`ObsConfig::enabled`] false, `repro serve` output is
+//!    bit-identical to a build without this module.
+//! 2. **Mergeable by construction.** Per-engine and per-worker
+//!    [`LogHistogram`]s combine with an exact associative merge
+//!    (integer bucket counts + integer nanosecond sums), so fleet-wide
+//!    tail percentiles are computed from *all* samples, not from
+//!    averaged per-engine percentiles.
+//! 3. **Zero dependencies.** Like the rest of the crate: hand-rolled
+//!    JSON via [`crate::jsonio`], `/proc` parsing via `std::fs`, no
+//!    metrics crates.
+
+pub mod counters;
+pub mod export;
+pub mod hist;
+pub mod procstat;
+pub mod trace;
+
+pub use counters::{EngineLoad, McCounters};
+pub use export::{serve_metric_set, serve_obs_json, Metric, MetricSet, SERVE_METRIC_NAMES};
+pub use hist::LogHistogram;
+pub use procstat::{sample as proc_sample, ProcStat};
+pub use trace::{StageStats, TraceLog};
+
+use std::sync::Arc;
+
+/// Observability switches threaded through [`crate::coordinator::fleet::FleetConfig`].
+///
+/// `enabled` turns on stage timing, histograms and the nested serve
+/// JSON/metrics export; `trace` additionally streams per-request stage
+/// events to a JSONL file. Both default off, and the fleet guarantees
+/// bit-identical serve output when disabled.
+#[derive(Clone, Default)]
+pub struct ObsConfig {
+    pub enabled: bool,
+    pub trace: Option<Arc<TraceLog>>,
+}
+
+impl ObsConfig {
+    /// Enabled, no trace file — the common `--obs` configuration and
+    /// the one integration tests use.
+    pub fn on() -> Self {
+        Self { enabled: true, trace: None }
+    }
+
+    /// Record a trace event if a trace sink is configured.
+    pub fn trace_event(
+        &self,
+        req: u64,
+        stage: &str,
+        engine: Option<usize>,
+        dur_us: f64,
+    ) {
+        if let Some(t) = &self.trace {
+            t.event(req, stage, engine, dur_us);
+        }
+    }
+}

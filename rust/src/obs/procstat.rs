@@ -1,0 +1,63 @@
+//! Lightweight `/proc/self` process sampler: resident-set size and
+//! cumulative CPU time, read once per export (not per request). Returns
+//! `None` off Linux or when `/proc` is unreadable — callers degrade to
+//! omitting the `proc` block rather than failing the run.
+
+/// One process snapshot.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ProcStat {
+    /// Resident set size in bytes.
+    pub rss_bytes: u64,
+    /// Cumulative user + system CPU seconds.
+    pub cpu_seconds: f64,
+}
+
+/// Common Linux defaults; without libc there is no portable sysconf,
+/// and these match every mainstream distro kernel config. A wrong
+/// constant skews absolute RSS/CPU numbers but not the trends the
+/// bench trajectory tracks.
+const PAGE_SIZE: u64 = 4096;
+const USER_HZ: f64 = 100.0;
+
+/// Sample `/proc/self/{statm,stat}`.
+pub fn sample() -> Option<ProcStat> {
+    let statm = std::fs::read_to_string("/proc/self/statm").ok()?;
+    // statm: size resident shared text lib data dt (pages).
+    let resident_pages: u64 =
+        statm.split_whitespace().nth(1)?.parse().ok()?;
+    let stat = std::fs::read_to_string("/proc/self/stat").ok()?;
+    // stat field 2 (comm) may contain spaces — split after the closing
+    // paren, then utime/stime are fields 14/15 overall = 11/12 of the
+    // remainder.
+    let rest = stat.rsplit_once(')')?.1;
+    let fields: Vec<&str> = rest.split_whitespace().collect();
+    let utime: u64 = fields.get(11)?.parse().ok()?;
+    let stime: u64 = fields.get(12)?.parse().ok()?;
+    Some(ProcStat {
+        rss_bytes: resident_pages * PAGE_SIZE,
+        cpu_seconds: (utime + stime) as f64 / USER_HZ,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_is_sane_on_linux_and_none_elsewhere() {
+        match sample() {
+            Some(p) => {
+                // Any running test binary has resident pages and has
+                // burned some (possibly sub-tick) CPU.
+                assert!(p.rss_bytes > 0);
+                assert!(p.cpu_seconds >= 0.0);
+            }
+            None => {
+                assert!(
+                    !cfg!(target_os = "linux"),
+                    "/proc/self must parse on Linux"
+                );
+            }
+        }
+    }
+}

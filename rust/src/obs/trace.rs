@@ -1,0 +1,152 @@
+//! Staged request tracing: per-stage duration histograms plus an
+//! optional JSONL trace-event log (`docs/observability.md` §Trace
+//! event schema).
+//!
+//! The serving path stamps each request at
+//! `submit → queue → batch-form → dispatch/compute → MC-merge → reply`.
+//! Stage *durations* aggregate into [`StageStats`] (mergeable
+//! [`LogHistogram`]s, so per-engine stages combine into fleet-wide
+//! tails); stage *events* optionally stream to a [`TraceLog`] keyed by
+//! the deterministic fleet request id (= the request seed, so a trace
+//! can be replayed against the exact same MC sample set).
+
+use std::fs::File;
+use std::io::{self, BufWriter, Write};
+use std::path::Path;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use super::hist::LogHistogram;
+
+/// Per-stage duration histograms for one engine worker (merged across
+/// the fleet by [`StageStats::merge`]).
+///
+/// * `queue` — dispatch to worker pull (channel wait),
+/// * `batch` — worker pull to batch formation (batcher residence),
+/// * `compute` — wall time of the blocked engine call the item rode in
+///   (the modelled hardware latency is tracked separately in
+///   `ServeSummary::engine`).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct StageStats {
+    pub queue: LogHistogram,
+    pub batch: LogHistogram,
+    pub compute: LogHistogram,
+}
+
+impl StageStats {
+    pub fn merge(&mut self, other: &StageStats) {
+        self.queue.merge(&other.queue);
+        self.batch.merge(&other.batch);
+        self.compute.merge(&other.compute);
+    }
+}
+
+/// Append-only JSONL trace-event sink, shared by every fleet thread
+/// behind a mutex (tracing is opt-in; the serving path never touches
+/// the lock when no `TraceLog` is configured).
+///
+/// One event per line:
+/// `{"req":N,"stage":"queue","engine":0,"at_us":T,"us":D}` — `req` the
+/// deterministic request id, `engine` omitted for fleet-level stages
+/// (`submit` / `merge` / `reply`), `at_us` the log-relative time the
+/// event was recorded, `us` the stage duration (0 for point events).
+pub struct TraceLog {
+    t0: Instant,
+    w: Mutex<BufWriter<File>>,
+}
+
+impl TraceLog {
+    pub fn create(path: &Path) -> io::Result<Self> {
+        Ok(Self {
+            t0: Instant::now(),
+            w: Mutex::new(BufWriter::new(File::create(path)?)),
+        })
+    }
+
+    /// Record one stage event. Stage names are fixed tokens (no JSON
+    /// escaping needed); write failures are dropped — tracing must
+    /// never take the serving path down.
+    pub fn event(
+        &self,
+        req: u64,
+        stage: &str,
+        engine: Option<usize>,
+        dur_us: f64,
+    ) {
+        let engine_field = match engine {
+            Some(j) => format!(",\"engine\":{j}"),
+            None => String::new(),
+        };
+        let mut w = self.w.lock().expect("trace writer poisoned");
+        // Stamped under the writer lock: file order == `at_us` order,
+        // so the log is globally sorted without a post-pass.
+        let at_us = self.t0.elapsed().as_micros() as u64;
+        let _ = writeln!(
+            w,
+            "{{\"req\":{req},\"stage\":\"{stage}\"{engine_field},\
+             \"at_us\":{at_us},\"us\":{dur_us:.1}}}"
+        );
+    }
+
+    pub fn flush(&self) {
+        let _ = self.w.lock().expect("trace writer poisoned").flush();
+    }
+}
+
+impl Drop for TraceLog {
+    fn drop(&mut self) {
+        self.flush();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::jsonio::{self, Json};
+
+    #[test]
+    fn trace_log_writes_parseable_jsonl() {
+        let path = std::env::temp_dir().join(format!(
+            "repro_trace_test_{}.jsonl",
+            std::process::id()
+        ));
+        {
+            let log = TraceLog::create(&path).expect("create trace log");
+            log.event(0, "submit", None, 0.0);
+            log.event(0, "queue", Some(1), 42.5);
+            log.event(0, "reply", None, 1234.0);
+        } // drop flushes
+        let text = std::fs::read_to_string(&path).expect("read trace");
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3);
+        let mut last_at = 0u64;
+        for (i, line) in lines.iter().enumerate() {
+            let j = jsonio::parse(line).expect("valid JSON event");
+            assert_eq!(j.get("req").and_then(Json::as_usize), Some(0));
+            assert!(j.get("stage").and_then(Json::as_str).is_some());
+            let at = j.get("at_us").and_then(Json::as_usize).unwrap() as u64;
+            assert!(at >= last_at, "event {i}: at_us must be monotonic");
+            last_at = at;
+        }
+        let q = jsonio::parse(lines[1]).unwrap();
+        assert_eq!(q.get("engine").and_then(Json::as_usize), Some(1));
+        assert_eq!(q.get("us").and_then(Json::as_f64), Some(42.5));
+        assert!(jsonio::parse(lines[0]).unwrap().get("engine").is_none());
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn stage_stats_merge_accumulates_all_stages() {
+        let mut a = StageStats::default();
+        a.queue.record_us(10.0);
+        a.batch.record_us(20.0);
+        a.compute.record_us(30.0);
+        let mut b = StageStats::default();
+        b.queue.record_us(40.0);
+        b.compute.record_us(50.0);
+        a.merge(&b);
+        assert_eq!(a.queue.count(), 2);
+        assert_eq!(a.batch.count(), 1);
+        assert_eq!(a.compute.count(), 2);
+    }
+}

@@ -90,6 +90,13 @@ impl UqCollector {
         self.rounds.iter().sum::<usize>() as f64 / self.rounds.len() as f64
     }
 
+    /// Total MC sample rows actually drawn across all recorded requests
+    /// (the absolute counterpart of `samples_saved_pct`; matches the
+    /// fleet's `obs` spent counter when every request is recorded).
+    pub fn samples_spent(&self) -> usize {
+        self.samples_used.iter().sum()
+    }
+
     /// Finalise against the fixed-S budget the adaptive run replaced.
     pub fn finish(&self, s_max: usize) -> UqReport {
         let n = self.requests();
@@ -99,11 +106,14 @@ impl UqCollector {
         } else {
             0.0
         };
+        let spent = self.samples_spent();
         UqReport {
             requests: n,
             s_max,
             mean_samples: mean,
             samples_saved_pct: saved,
+            samples_spent: spent,
+            samples_saved: (s_max * n).saturating_sub(spent),
             mean_rounds: self.mean_rounds(),
             converged: self.converged,
             tiers: self.tiers,
@@ -120,6 +130,11 @@ pub struct UqReport {
     pub mean_samples: f64,
     /// `(1 − mean_samples / s_max) · 100` — the headline win.
     pub samples_saved_pct: f64,
+    /// Absolute MC sample rows drawn (sum over requests).
+    pub samples_spent: usize,
+    /// Absolute rows avoided vs the fixed-S budget:
+    /// `s_max · requests − samples_spent`.
+    pub samples_saved: usize,
     /// Mean sequential sampling rounds per request (0 when the serving
     /// path did not report rounds).
     pub mean_rounds: f64,
@@ -136,6 +151,8 @@ impl UqReport {
             ("s_max", Json::Num(self.s_max as f64)),
             ("mean_samples", Json::Num(self.mean_samples)),
             ("samples_saved_pct", Json::Num(self.samples_saved_pct)),
+            ("samples_spent", Json::Num(self.samples_spent as f64)),
+            ("samples_saved", Json::Num(self.samples_saved as f64)),
             ("mean_rounds", Json::Num(self.mean_rounds)),
             ("converged", Json::Num(self.converged as f64)),
             ("tiers", self.tiers.to_json()),
@@ -160,11 +177,30 @@ impl UqReport {
                 anyhow::anyhow!("tiers missing field {key:?}")
             })
         };
+        let requests = num("requests")? as usize;
+        let s_max = num("s_max")? as usize;
+        let mean_samples = num("mean_samples")?;
+        // Optional: reports written before absolute totals were tracked
+        // derive them from the mean (exact when the mean was exact).
+        let samples_spent = j
+            .get("samples_spent")
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| {
+                (mean_samples * requests as f64).round() as usize
+            });
+        let samples_saved = j
+            .get("samples_saved")
+            .and_then(Json::as_usize)
+            .unwrap_or_else(|| {
+                (s_max * requests).saturating_sub(samples_spent)
+            });
         Ok(Self {
-            requests: num("requests")? as usize,
-            s_max: num("s_max")? as usize,
-            mean_samples: num("mean_samples")?,
+            requests,
+            s_max,
+            mean_samples,
             samples_saved_pct: num("samples_saved_pct")?,
+            samples_spent,
+            samples_saved,
             // Optional: reports written before rounds were tracked.
             mean_rounds: j
                 .get("mean_rounds")
@@ -193,6 +229,7 @@ impl UqReport {
             "adaptive MC over {} requests (S_max = {}):\n\
              \x20 mean samples/request  {:.2}  ({:.1}% saved vs fixed S)\
              {}\n\
+             \x20 samples spent/saved   {} / {}\n\
              \x20 converged             {} / {}\n\
              \x20 tiers                 accept {}  defer {}  abstain {}",
             self.requests,
@@ -200,6 +237,8 @@ impl UqReport {
             self.mean_samples,
             self.samples_saved_pct,
             rounds,
+            self.samples_spent,
+            self.samples_saved,
             self.converged,
             self.requests,
             self.tiers.accept,
@@ -225,6 +264,8 @@ mod tests {
         assert_eq!(r.converged, 3);
         assert!((r.mean_samples - 12.0).abs() < 1e-9);
         assert!((r.samples_saved_pct - 50.0).abs() < 1e-9);
+        assert_eq!(r.samples_spent, 48);
+        assert_eq!(r.samples_saved, 48);
         assert_eq!(
             r.tiers,
             TierCounts { accept: 2, defer: 1, abstain: 1 }
@@ -243,9 +284,27 @@ mod tests {
         let back = UqReport::from_json(&parsed).expect("roundtrip");
         assert_eq!(back, r);
         // Required bench fields present by name.
-        for key in ["mean_samples", "samples_saved_pct", "tiers"] {
+        for key in [
+            "mean_samples",
+            "samples_saved_pct",
+            "samples_spent",
+            "samples_saved",
+            "tiers",
+        ] {
             assert!(parsed.get(key).is_some(), "missing {key}");
         }
+    }
+
+    #[test]
+    fn from_json_derives_totals_for_old_reports() {
+        // Reports written before absolute totals existed.
+        let line = "{\"requests\":2,\"s_max\":24,\"mean_samples\":15,\
+                    \"samples_saved_pct\":37.5,\"converged\":1,\
+                    \"tiers\":{\"accept\":1,\"defer\":1,\"abstain\":0}}";
+        let r = UqReport::from_json(&jsonio::parse(line).unwrap())
+            .expect("old report parses");
+        assert_eq!(r.samples_spent, 30);
+        assert_eq!(r.samples_saved, 18);
     }
 
     #[test]
