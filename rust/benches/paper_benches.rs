@@ -1106,6 +1106,13 @@ fn kernels_bench() {
     let path = dir.join("kernel_microbench.json");
     std::fs::write(&path, format!("{line}\n")).expect("write summary");
     println!("  -> {}", path.display());
+    // Committed trajectory copy at the repo root (scripts/bench-compare
+    // checks it against the saved baseline).
+    let committed =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
+    std::fs::write(&committed, format!("{line}\n"))
+        .expect("write BENCH_kernels.json");
+    println!("  -> {}", committed.display());
 }
 
 /// Precision-axis scenario (ISSUE 4 satellite): quality and speed vs
@@ -1245,6 +1252,13 @@ fn precision_bench() {
     let path = dir.join("precision.json");
     std::fs::write(&path, format!("{line}\n")).expect("write summary");
     println!("  -> {}", path.display());
+    // Committed trajectory copy at the repo root (scripts/bench-compare
+    // checks it against the saved baseline).
+    let committed =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_precision.json");
+    std::fs::write(&committed, format!("{line}\n"))
+        .expect("write BENCH_precision.json");
+    println!("  -> {}", committed.display());
 }
 
 fn perf() {

@@ -241,6 +241,17 @@ fn write_scenario(dir: &Path, name: &str, line: &str) {
     println!("  -> {}", path.display());
 }
 
+/// Overwrite the committed repo-root copy of a scenario line so the
+/// perf trajectory is diffable in git and `scripts/bench-compare` has
+/// a baseline to check against (docs/observability.md §Perf
+/// trajectory).
+fn commit_bench(file: &str, line: &str) {
+    let path = manifest_dir().join(file);
+    std::fs::write(&path, format!("{line}\n"))
+        .expect("write committed bench file");
+    println!("  -> {}", path.display());
+}
+
 /// One run as a JSON point: throughput + e2e percentiles + the
 /// per-stage p99 breakdown from the obs layer.
 fn point_json(r: &Run) -> String {
@@ -390,21 +401,20 @@ fn main() {
             )
         })
         .collect();
-    write_scenario(
-        &results,
-        "adaptive_mc",
-        &format!(
-            "{{\"scenario\":\"adaptive_mc\",\"arch\":\"{ARCH}\",\
-             \"fixed_s\":{samples},\"s_min\":{s_min},\
-             \"target_ci\":0.05,\"baseline_throughput_rps\":{:.3},\
-             \"baseline_e2e_p99_ms\":{:.4},\"points\":[{}],\
-             \"accounting_ok\":{}}}",
-            baseline.throughput,
-            baseline.e2e_p99_ms,
-            adaptive_points.join(","),
-            adaptive_ok
-        ),
+    let adaptive_line = format!(
+        "{{\"scenario\":\"adaptive_mc\",\"source\":\"serve_fleet\",\
+         \"arch\":\"{ARCH}\",\
+         \"fixed_s\":{samples},\"s_min\":{s_min},\
+         \"target_ci\":0.05,\"baseline_throughput_rps\":{:.3},\
+         \"baseline_e2e_p99_ms\":{:.4},\"points\":[{}],\
+         \"accounting_ok\":{}}}",
+        baseline.throughput,
+        baseline.e2e_p99_ms,
+        adaptive_points.join(","),
+        adaptive_ok
     );
+    write_scenario(&results, "adaptive_mc", &adaptive_line);
+    commit_bench("BENCH_adaptive_mc.json", &adaptive_line);
 
     // --- mc_batch: blocked MC batching vs the scalar per-sample path ---
     // One FPGA-sim engine, round-robin; the blocked path computes all of
@@ -456,18 +466,17 @@ fn main() {
             if bits_ok { "MATCH" } else { "MISMATCH" }
         );
     }
-    write_scenario(
-        &results,
-        "mc_batch",
-        &format!(
-            "{{\"scenario\":\"mc_batch\",\"arch\":\"{MC_BATCH_ARCH}\",\
-             \"points\":[{}],\"speedup_s100\":{:.3},\
-             \"bits_match\":{}}}",
-            mcb_points.join(","),
-            speedup_s100,
-            mcb_bits_ok
-        ),
+    let mcb_line = format!(
+        "{{\"scenario\":\"mc_batch\",\"source\":\"serve_fleet\",\
+         \"arch\":\"{MC_BATCH_ARCH}\",\
+         \"points\":[{}],\"speedup_s100\":{:.3},\
+         \"bits_match\":{}}}",
+        mcb_points.join(","),
+        speedup_s100,
+        mcb_bits_ok
     );
+    write_scenario(&results, "mc_batch", &mcb_line);
+    commit_bench("BENCH_mc_batch.json", &mcb_line);
 
     // --- committed perf trajectory: BENCH_serve.json at the repo root ---
     // One line covering the headline scenarios (with the obs stage

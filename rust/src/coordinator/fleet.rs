@@ -48,7 +48,11 @@ use super::router::{Router, RouterPolicy};
 use super::server::ServeSummary;
 use super::stats::LatencyStats;
 use crate::metrics::pooled_mean_std;
-use crate::obs::{EngineLoad, LogHistogram, McCounters, ObsConfig, StageStats};
+use crate::obs::{
+    window_index, EngineLoad, LogHistogram, McCounters, ObsConfig,
+    Sampler, StageStats, Timeline, WindowedCount, WindowedHist,
+    WorkerTimeline,
+};
 use crate::uq::controller::{
     AdaptiveController, AdaptiveMcConfig, McDecision,
 };
@@ -188,6 +192,10 @@ pub struct AdaptiveResponse {
     /// Wall time of the final MC-merge (ordered reduction +
     /// finalisation) on the coordinator thread, in microseconds.
     pub merge_us: f64,
+    /// When the coordinator finalised the request — the timeline
+    /// window the completion belongs to (a late `wait_adaptive` must
+    /// not attribute it to the window the waiter ran in).
+    pub completed_at: Instant,
 }
 
 /// A completed fleet request.
@@ -220,6 +228,9 @@ pub struct FleetObs {
     /// coordinator's continuation rounds route on its own thread-owned
     /// cursor and are not tallied here).
     pub placements: Vec<usize>,
+    /// Trace events lost to write failures (0 without `--trace`; a
+    /// non-zero value means the trace file is incomplete).
+    pub trace_dropped: u64,
 }
 
 /// Aggregate + per-engine serving stats, returned by [`Fleet::join`].
@@ -237,6 +248,10 @@ pub struct FleetSummary {
     pub per_engine: Vec<ServeSummary>,
     /// Fleet-level observability aggregates.
     pub obs: FleetObs,
+    /// Windowed time-series of the run (`ObsConfig::window`): per-window
+    /// e2e/stage histograms, request counters and gauge samples, merged
+    /// across workers at join. `None` without windowed observability.
+    pub timeline: Option<Timeline>,
 }
 
 impl FleetSummary {
@@ -281,6 +296,21 @@ impl FleetSummary {
     }
 }
 
+/// Fleet-side windowed timeline state: the shared epoch, the window
+/// streams only the submit/wait paths can record (request-level
+/// counters and e2e) and the background gauge sampler. Worker-side
+/// streams live in each worker's [`WorkerTimeline`] and merge in at
+/// join.
+struct FleetWindows {
+    epoch: Instant,
+    width: Duration,
+    e2e: WindowedHist,
+    submitted: WindowedCount,
+    served: WindowedCount,
+    rejected: WindowedCount,
+    sampler: Option<Sampler>,
+}
+
 /// The sharded serving fleet.
 pub struct Fleet {
     txs: Vec<mpsc::SyncSender<WorkItem>>,
@@ -300,6 +330,7 @@ pub struct Fleet {
     e2e_hist: LogHistogram,
     merge_hist: LogHistogram,
     mc: Arc<McCounters>,
+    win: Option<FleetWindows>,
 }
 
 impl Fleet {
@@ -316,6 +347,15 @@ impl Fleet {
             "one factory per engine"
         );
         assert!(cfg.samples >= 1, "S must be positive");
+        // The timeline epoch: window 0 of every stream (worker stages,
+        // submit/wait counters, gauge sampler, loadgen offered load)
+        // starts here, so per-window merges align across threads.
+        let epoch = Instant::now();
+        let worker_win = if cfg.obs.enabled {
+            cfg.obs.window.map(|width| (epoch, width))
+        } else {
+            None
+        };
         let mc = Arc::new(McCounters::new());
         let mut txs = Vec::with_capacity(cfg.engines);
         let mut loads = Vec::with_capacity(cfg.engines);
@@ -327,11 +367,23 @@ impl Fleet {
             let policy = cfg.policy;
             let worker_obs = cfg.obs.clone();
             workers.push(thread::spawn(move || {
-                worker_loop(factory, rx, policy, worker_load, idx, worker_obs)
+                worker_loop(
+                    factory, rx, policy, worker_load, idx, worker_obs,
+                    worker_win,
+                )
             }));
             txs.push(tx);
             loads.push(load);
         }
+        let win = worker_win.map(|(epoch, width)| FleetWindows {
+            epoch,
+            width,
+            e2e: WindowedHist::new(),
+            submitted: WindowedCount::new(),
+            served: WindowedCount::new(),
+            rejected: WindowedCount::new(),
+            sampler: Some(Sampler::spawn(epoch, width, loads.clone())),
+        });
         // The adaptive coordinator: owns its own router cursor and
         // worker-queue senders so it can place continuation rounds
         // without the submitting thread.
@@ -364,16 +416,24 @@ impl Fleet {
             rejected: 0,
             served: 0,
             e2e: LatencyStats::new(),
-            t0: Instant::now(),
+            t0: epoch,
             obs: cfg.obs,
             e2e_hist: LogHistogram::new(),
             merge_hist: LogHistogram::new(),
             mc,
+            win,
         }
     }
 
     pub fn engines(&self) -> usize {
         self.txs.len()
+    }
+
+    /// Timeline window parameters when windowed observability is on.
+    /// The open-loop load generator aligns its offered-load windows to
+    /// the fleet's epoch through this.
+    pub fn obs_window(&self) -> Option<(Instant, Duration)> {
+        self.win.as_ref().map(|w| (w.epoch, w.width))
     }
 
     /// Submit a beat at the fleet's configured S. Returns `None` if
@@ -394,13 +454,29 @@ impl Fleet {
         beat: Vec<f32>,
         s: usize,
     ) -> Option<Ticket> {
+        self.submit_with_samples_at(beat, s, Instant::now())
+    }
+
+    /// Coordinated-omission-correct submit: the request's e2e clock
+    /// starts at `scheduled` (its intended arrival time), not at the
+    /// moment this call ran. An open-loop load generator that fell
+    /// behind its schedule therefore charges the slip to the measured
+    /// latency instead of silently forgiving it — the closed-loop
+    /// submit-then-wait pattern under-reports tail latency exactly when
+    /// the system is overloaded (see docs/observability.md).
+    pub fn submit_with_samples_at(
+        &mut self,
+        beat: Vec<f32>,
+        s: usize,
+        scheduled: Instant,
+    ) -> Option<Ticket> {
         assert!(s >= 1, "S must be positive");
         let id = self.next_id;
         self.next_id += 1;
         // The request seed IS the request id: every engine derives the
         // same per-sample mask seeds from it, in any placement mode.
         let req_seed = id;
-        let enqueued = Instant::now();
+        let enqueued = scheduled;
         self.obs.trace_event(req_seed, "submit", None, 0.0);
         let beat = Arc::new(beat);
         let (reply_tx, reply_rx) = mpsc::channel();
@@ -421,9 +497,20 @@ impl Fleet {
                 // Reject the whole request; dropping `reply_rx` voids
                 // any shards already enqueued.
                 self.rejected += 1;
+                if let Some(win) = self.win.as_mut() {
+                    win.rejected.inc(window_index(
+                        win.epoch,
+                        win.width,
+                        Instant::now(),
+                    ));
+                }
                 return None;
             }
         };
+        if let Some(win) = self.win.as_mut() {
+            win.submitted
+                .inc(window_index(win.epoch, win.width, Instant::now()));
+        }
         Some(Ticket { id, enqueued, expected, total_s: s, rx: reply_rx })
     }
 
@@ -477,6 +564,13 @@ impl Fleet {
                 self.adaptive_tx
                     .send(AdaptiveEvent::Started { id, outstanding: n })
                     .expect("adaptive coordinator alive");
+                if let Some(win) = self.win.as_mut() {
+                    win.submitted.inc(window_index(
+                        win.epoch,
+                        win.width,
+                        Instant::now(),
+                    ));
+                }
                 // Worst-case sequential rounds under this envelope:
                 // s_min first, then chunk-sized draws to s_max.
                 let max_rounds = 1 + mc
@@ -497,6 +591,13 @@ impl Fleet {
                     .send(AdaptiveEvent::Cancelled { id, stray })
                     .expect("adaptive coordinator alive");
                 self.rejected += 1;
+                if let Some(win) = self.win.as_mut() {
+                    win.rejected.inc(window_index(
+                        win.epoch,
+                        win.width,
+                        Instant::now(),
+                    ));
+                }
                 None
             }
         }
@@ -553,6 +654,11 @@ impl Fleet {
             self.obs.trace_event(ticket.id, "merge", None, merge_us);
             self.obs.trace_event(ticket.id, "reply", None, e2e_ms * 1e3);
         }
+        if let Some(win) = self.win.as_mut() {
+            let w = window_index(win.epoch, win.width, Instant::now());
+            win.e2e.record_ms(w, e2e_ms);
+            win.served.inc(w);
+        }
         Ok(FleetResponse {
             id: ticket.id,
             prediction: Prediction { mean, std, model_latency_ms: latency },
@@ -599,6 +705,14 @@ impl Fleet {
             self.obs
                 .trace_event(resp.id, "reply", None, resp.e2e_ms * 1e3);
         }
+        if let Some(win) = self.win.as_mut() {
+            // Attribute to the window the request *completed* in (the
+            // coordinator stamped it), not the window the caller waited.
+            let w =
+                window_index(win.epoch, win.width, resp.completed_at);
+            win.e2e.record_ms(w, resp.e2e_ms);
+            win.served.inc(w);
+        }
         Ok(resp)
     }
 
@@ -634,6 +748,33 @@ impl Fleet {
         if let Some(t) = &self.obs.trace {
             t.flush();
         }
+        // Assemble the fleet timeline: coordinator-side windows
+        // (e2e / admission counters) plus the exact merge of every
+        // worker's per-window stage histograms — the same associativity
+        // contract the whole-run histograms rely on.
+        let timeline = self.win.take().map(|mut win| {
+            let samples = win
+                .sampler
+                .take()
+                .map(|s| s.finish())
+                .unwrap_or_default();
+            let mut tl = Timeline::new(win.width);
+            tl.e2e = win.e2e;
+            tl.submitted = win.submitted;
+            tl.served = win.served;
+            tl.rejected = win.rejected;
+            tl.samples = samples;
+            for e in &per_engine {
+                if let Some(wt) = &e.timeline {
+                    tl.queue.merge(&wt.queue);
+                    tl.batch.merge(&wt.batch);
+                    tl.compute.merge(&wt.compute);
+                    tl.items.merge(&wt.items);
+                    tl.batches.merge(&wt.batches);
+                }
+            }
+            tl
+        });
         FleetSummary {
             served: self.served,
             rejected: self.rejected,
@@ -647,7 +788,14 @@ impl Fleet {
                 mc_spent: self.mc.spent(),
                 mc_saved: self.mc.saved(),
                 placements,
+                trace_dropped: self
+                    .obs
+                    .trace
+                    .as_ref()
+                    .map(|t| t.dropped())
+                    .unwrap_or(0),
             },
+            timeline,
         }
     }
 }
@@ -931,6 +1079,7 @@ fn finish_round_if_complete(
                 rounds: st.rounds,
                 e2e_ms,
                 merge_us,
+                completed_at: Instant::now(),
             }));
         }
     }
@@ -951,6 +1100,7 @@ fn worker_loop(
     load: Arc<EngineLoad>,
     idx: usize,
     obs: ObsConfig,
+    win: Option<(Instant, Duration)>,
 ) -> ServeSummary {
     let mut engine = factory();
     let mut batcher: Batcher<WorkItem> = Batcher::new(policy);
@@ -961,6 +1111,10 @@ fn worker_loop(
     } else {
         None
     };
+    // Windowed slice of this worker's stage stats; merged exactly into
+    // the fleet timeline at `join` (shared epoch → aligned windows).
+    let mut timeline: Option<(Instant, Duration, WorkerTimeline)> =
+        win.map(|(epoch, width)| (epoch, width, WorkerTimeline::default()));
     let mut served = 0usize;
     let mut batches = 0usize;
     let mut mc_rows = 0usize;
@@ -1022,6 +1176,10 @@ fn worker_loop(
             // Every item in the batch rode the same blocked engine
             // call, so they share its wall time as the compute stage.
             let compute_us = t_dispatch.elapsed().as_secs_f64() * 1e6;
+            let t_done = Instant::now();
+            if let Some((epoch, width, tl)) = timeline.as_mut() {
+                tl.batches.inc(window_index(*epoch, *width, t_done));
+            }
             for (item, result) in batch.items.iter().zip(results) {
                 load.dec();
                 let outcome: std::result::Result<SampleBlock, String> =
@@ -1047,6 +1205,17 @@ fn worker_loop(
                                 st.queue.record_us(queue_us);
                                 st.batch.record_us(batch_us);
                                 st.compute.record_us(compute_us);
+                                if let Some((epoch, width, tl)) =
+                                    timeline.as_mut()
+                                {
+                                    let w = window_index(
+                                        *epoch, *width, t_done,
+                                    );
+                                    tl.queue.record_us(w, queue_us);
+                                    tl.batch.record_us(w, batch_us);
+                                    tl.compute.record_us(w, compute_us);
+                                    tl.items.inc(w);
+                                }
                                 let req = item.req_seed;
                                 obs.trace_event(
                                     req, "queue", Some(idx), queue_us,
@@ -1107,6 +1276,7 @@ fn worker_loop(
         // Fleet-side gauges; Fleet::join injects them from EngineLoad.
         queue_highwater: 0,
         sheds: 0,
+        timeline: timeline.map(|(_, _, tl)| tl),
     }
 }
 
@@ -1660,6 +1830,7 @@ mod tests {
                 obs: ObsConfig {
                     enabled: true,
                     trace: Some(Arc::clone(&trace)),
+                    window: None,
                 },
                 ..FleetConfig::default()
             },
@@ -1705,6 +1876,97 @@ mod tests {
             );
         }
         let _ = std::fs::remove_file(&path);
+    }
+
+    /// Coordinated-omission regression: under overload, an open-loop
+    /// measurement (every request stamped with its scheduled arrival —
+    /// here, all due at t0) must report a far worse p99 than the
+    /// closed-loop submit-then-wait pattern over the same work, because
+    /// the closed loop silently forgives queueing delay by only
+    /// submitting after the previous response returned.
+    #[test]
+    fn open_loop_overload_p99_exceeds_closed_loop_p99() {
+        let s = 6;
+        let n_req = 24;
+        let mut closed = Fleet::start(
+            FleetConfig { samples: s, ..FleetConfig::default() },
+            fpga_factories(1, s, 11),
+        );
+        let mut closed_e2e = LatencyStats::new();
+        for _ in 0..n_req {
+            let t = closed.submit(beat()).unwrap();
+            closed_e2e.record_ms(closed.wait(t).expect("response").e2e_ms);
+        }
+        closed.join();
+
+        let mut open = Fleet::start(
+            FleetConfig { samples: s, ..FleetConfig::default() },
+            fpga_factories(1, s, 11),
+        );
+        let t0 = Instant::now();
+        let tickets: Vec<Ticket> = (0..n_req)
+            .map(|_| {
+                open.submit_with_samples_at(beat(), s, t0).unwrap()
+            })
+            .collect();
+        let mut open_e2e = LatencyStats::new();
+        for t in tickets {
+            open_e2e.record_ms(open.wait(t).expect("response").e2e_ms);
+        }
+        open.join();
+
+        let closed_p99 = closed_e2e.percentile_ms(99.0);
+        let open_p99 = open_e2e.percentile_ms(99.0);
+        // The last open-loop request queued behind ~23 others, so its
+        // e2e is many service times; the closed-loop p99 is about one.
+        // 2x is a deliberately loose bound for CI-machine noise.
+        assert!(
+            open_p99 > closed_p99 * 2.0,
+            "open-loop p99 {open_p99} ms must exceed closed-loop \
+             p99 {closed_p99} ms under overload"
+        );
+    }
+
+    /// Windowed timeline accounting: every request and work item lands
+    /// in exactly one window, and summing the windows reproduces the
+    /// whole-run aggregates bit-for-bit (the same merge contract the
+    /// whole-run histograms obey).
+    #[test]
+    fn windowed_timeline_accounts_for_every_request() {
+        let s = 6;
+        let n_req = 8;
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                router: RouterPolicy::McShard,
+                samples: s,
+                obs: ObsConfig::on_windowed(Duration::from_millis(50)),
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s, 9),
+        );
+        let tickets: Vec<Ticket> =
+            (0..n_req).filter_map(|_| fleet.submit(beat())).collect();
+        for t in tickets {
+            fleet.wait(t).expect("response");
+        }
+        let summary = fleet.join();
+        let tl = summary.timeline.as_ref().expect("windowed timeline");
+        assert_eq!(
+            tl.e2e.total(),
+            summary.obs.e2e,
+            "window slices must sum to the whole-run e2e histogram"
+        );
+        assert_eq!(tl.served.total() as usize, n_req);
+        assert_eq!(tl.submitted.total() as usize, n_req);
+        assert_eq!(tl.rejected.total(), 0);
+        assert_eq!(tl.items.total() as usize, summary.items());
+        assert_eq!(
+            tl.queue.total().count() as usize,
+            summary.items(),
+            "one queue-stage sample per work item"
+        );
+        assert_eq!(summary.obs.trace_dropped, 0, "no trace, no drops");
     }
 
     #[test]

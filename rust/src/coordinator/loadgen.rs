@@ -4,9 +4,13 @@
 //! wait-all) hide queueing behaviour; an open-loop arrival process
 //! exposes the latency knee as offered load approaches engine capacity.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
+use super::fleet::{Fleet, Ticket};
+use super::router::RouterPolicy;
+use super::stats::LatencyStats;
 use crate::data::Dataset;
+use crate::obs::{window_index, WindowedCount};
 use crate::rng::Rng;
 
 /// A generated arrival: offset from stream start + the beat payload index.
@@ -78,6 +82,225 @@ pub fn replay(
         receivers.push(server.submit(data.beat(a.beat_idx).to_vec()));
     }
     receivers
+}
+
+/// One weighted payload class in a scenario's request mix (e.g. the
+/// `poisson_mix` scenario's light/standard/heavy MC budgets).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PayloadClass {
+    pub name: &'static str,
+    /// MC samples a request of this class asks for.
+    pub samples: usize,
+    /// Relative draw weight (normalised by `Rng::categorical`).
+    pub weight: f64,
+}
+
+/// One scheduled request of an open-loop trace: *when* it is due,
+/// which beat it carries and how much MC evidence it wants. `at` is
+/// the request's intended arrival — the coordinated-omission-correct
+/// e2e clock starts there, whether or not the generator kept up.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScheduledRequest {
+    pub at: Duration,
+    pub beat_idx: usize,
+    pub samples: usize,
+    /// Index into the scenario's mix (0 when the mix is empty).
+    pub class: usize,
+}
+
+/// The named open-loop scenarios `repro loadgen --scenario` accepts.
+pub const SCENARIOS: &[&str] =
+    &["baseline", "fan_out", "fan_in", "scaling", "poisson_mix"];
+
+/// A reusable open-loop load scenario: fleet shape + arrival process +
+/// payload mix. Presets cover the serving matrix (`docs/serving.md`);
+/// every field stays overridable by the CLI after `preset`.
+#[derive(Debug, Clone)]
+pub struct ScenarioSpec {
+    pub name: String,
+    pub engines: usize,
+    pub router: RouterPolicy,
+    pub rate_per_s: f64,
+    pub requests: usize,
+    /// Default MC samples per request (classes override per draw).
+    pub samples: usize,
+    /// Weighted payload classes; empty = every request at `samples`.
+    pub mix: Vec<PayloadClass>,
+    pub queue_depth: usize,
+    pub shed: bool,
+    pub seed: u64,
+}
+
+impl ScenarioSpec {
+    /// Build a named preset. `engines`/`rate`/`requests`/`samples` are
+    /// the caller's baseline; presets adjust topology and policy:
+    ///
+    /// * `baseline` — one engine, round-robin (the degenerate case).
+    /// * `fan_out` — MC-shard across all engines.
+    /// * `fan_in` — one engine behind a shallow shedding queue
+    ///   (admission-control behaviour under overload).
+    /// * `scaling` — least-loaded placement over all engines.
+    /// * `poisson_mix` — round-robin with a light/standard/heavy
+    ///   payload-class mix.
+    pub fn preset(
+        name: &str,
+        engines: usize,
+        rate_per_s: f64,
+        requests: usize,
+        samples: usize,
+        seed: u64,
+    ) -> Result<Self, String> {
+        let mut spec = Self {
+            name: name.to_string(),
+            engines,
+            router: RouterPolicy::RoundRobin,
+            rate_per_s,
+            requests,
+            samples,
+            mix: Vec::new(),
+            queue_depth: 256,
+            shed: false,
+            seed,
+        };
+        match name {
+            "baseline" => spec.engines = 1,
+            "fan_out" => spec.router = RouterPolicy::McShard,
+            "fan_in" => {
+                spec.engines = 1;
+                spec.shed = true;
+                spec.queue_depth = 8;
+            }
+            "scaling" => spec.router = RouterPolicy::LeastLoaded,
+            "poisson_mix" => {
+                spec.mix = vec![
+                    PayloadClass {
+                        name: "light",
+                        samples: (samples / 4).max(1),
+                        weight: 0.6,
+                    },
+                    PayloadClass {
+                        name: "standard",
+                        samples,
+                        weight: 0.3,
+                    },
+                    PayloadClass {
+                        name: "heavy",
+                        samples: samples * 2,
+                        weight: 0.1,
+                    },
+                ];
+            }
+            other => {
+                return Err(format!(
+                    "unknown scenario '{other}' (expected one of {})",
+                    SCENARIOS.join(", ")
+                ))
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Generate the deterministic arrival schedule: seeded Poisson
+    /// inter-arrivals, beats round-robin over the dataset, payload
+    /// class drawn per request from the mix. Same spec + seed ⇒ same
+    /// schedule, byte for byte.
+    pub fn trace(&self, data_n: usize) -> Vec<ScheduledRequest> {
+        assert!(self.rate_per_s > 0.0, "rate must be positive");
+        assert!(data_n > 0, "dataset must be non-empty");
+        let mut rng = Rng::new(self.seed ^ 0x5CE7_A210);
+        let weights: Vec<f64> =
+            self.mix.iter().map(|c| c.weight).collect();
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(self.requests);
+        for i in 0..self.requests {
+            let u = loop {
+                let u = rng.uniform();
+                if u > 1e-12 {
+                    break u;
+                }
+            };
+            t += -u.ln() / self.rate_per_s;
+            let (class, samples) = if self.mix.is_empty() {
+                (0, self.samples)
+            } else {
+                let c = rng.categorical(&weights);
+                (c, self.mix[c].samples)
+            };
+            out.push(ScheduledRequest {
+                at: Duration::from_secs_f64(t),
+                beat_idx: i % data_n,
+                samples,
+                class,
+            });
+        }
+        out
+    }
+}
+
+/// What an open-loop run produced, before waiting on the replies.
+#[derive(Default)]
+pub struct OpenLoopOutcome {
+    /// Accepted tickets with the request's payload-class index.
+    pub tickets: Vec<(Ticket, usize)>,
+    /// Requests the schedule offered (= trace length).
+    pub offered: usize,
+    /// Requests the fleet admitted.
+    pub submitted: usize,
+    /// Requests shed at submit by admission control.
+    pub rejected_at_submit: usize,
+    /// Generator lag: how late each submit ran past its scheduled
+    /// arrival. A p99 here near zero certifies the generator kept up —
+    /// large values mean offered load outran the *generator*, not the
+    /// fleet, and the run should be rerun at a lower rate.
+    pub lag: LatencyStats,
+    /// Offered arrivals per timeline window (scheduled times, aligned
+    /// to the fleet epoch) — the "offered vs achieved" numerator.
+    pub offered_per_window: WindowedCount,
+}
+
+/// Replay a scheduled trace against a fleet, open loop: sleep until
+/// each request's due time, then submit stamped with the *scheduled*
+/// arrival (coordinated-omission-correct — queueing delay the fleet
+/// causes shows up in e2e even if the generator fell behind). Callers
+/// wait on the returned tickets and then `join` the fleet.
+pub fn run_open_loop(
+    fleet: &mut Fleet,
+    trace: &[ScheduledRequest],
+    data: &Dataset,
+) -> OpenLoopOutcome {
+    let win = fleet.obs_window();
+    let mut out = OpenLoopOutcome {
+        offered: trace.len(),
+        ..OpenLoopOutcome::default()
+    };
+    let start = Instant::now();
+    for r in trace {
+        let target = start + r.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        let submit_t = Instant::now();
+        out.lag.record(submit_t.saturating_duration_since(target));
+        if let Some((epoch, width)) = win {
+            // Offered load is attributed to the *scheduled* window:
+            // the demand curve must not smear when the generator slips.
+            out.offered_per_window
+                .inc(window_index(epoch, width, target));
+        }
+        match fleet.submit_with_samples_at(
+            data.beat(r.beat_idx).to_vec(),
+            r.samples,
+            target,
+        ) {
+            Some(ticket) => {
+                out.submitted += 1;
+                out.tickets.push((ticket, r.class));
+            }
+            None => out.rejected_at_submit += 1,
+        }
+    }
+    out
 }
 
 #[cfg(test)]
@@ -166,5 +389,122 @@ mod tests {
         tensors: Vec<crate::tensor::Tensor>,
     ) -> crate::nn::Params {
         crate::nn::Params { tensors }
+    }
+
+    #[test]
+    fn preset_matrix_covers_every_scenario() {
+        for name in SCENARIOS {
+            let spec = ScenarioSpec::preset(name, 4, 100.0, 32, 8, 1)
+                .expect("known scenario");
+            assert_eq!(spec.name, *name);
+            assert!(spec.engines >= 1);
+        }
+        let base =
+            ScenarioSpec::preset("baseline", 4, 100.0, 32, 8, 1).unwrap();
+        assert_eq!(base.engines, 1, "baseline collapses to one engine");
+        let fan_out =
+            ScenarioSpec::preset("fan_out", 4, 100.0, 32, 8, 1).unwrap();
+        assert_eq!(fan_out.router, RouterPolicy::McShard);
+        assert_eq!(fan_out.engines, 4);
+        let fan_in =
+            ScenarioSpec::preset("fan_in", 4, 100.0, 32, 8, 1).unwrap();
+        assert!(fan_in.shed, "fan_in sheds under overload");
+        assert_eq!(fan_in.queue_depth, 8);
+        let scaling =
+            ScenarioSpec::preset("scaling", 4, 100.0, 32, 8, 1).unwrap();
+        assert_eq!(scaling.router, RouterPolicy::LeastLoaded);
+        let mix =
+            ScenarioSpec::preset("poisson_mix", 4, 100.0, 32, 8, 1)
+                .unwrap();
+        assert_eq!(mix.mix.len(), 3);
+        assert_eq!(mix.mix[0].samples, 2, "light = S/4");
+        assert_eq!(mix.mix[2].samples, 16, "heavy = 2S");
+        let err = ScenarioSpec::preset("nope", 4, 100.0, 32, 8, 1)
+            .expect_err("unknown scenario must error");
+        assert!(err.contains("unknown scenario"), "{err}");
+    }
+
+    #[test]
+    fn scheduled_trace_is_deterministic_and_draws_every_class() {
+        let spec =
+            ScenarioSpec::preset("poisson_mix", 2, 1000.0, 2000, 8, 7)
+                .unwrap();
+        let a = spec.trace(16);
+        let b = spec.trace(16);
+        assert_eq!(a, b, "same spec + seed => identical schedule");
+        assert_eq!(a.len(), 2000);
+        for w in a.windows(2) {
+            assert!(w[1].at >= w[0].at, "arrivals ordered");
+        }
+        for class in 0..3 {
+            assert!(
+                a.iter().any(|r| r.class == class),
+                "class {class} never drawn in 2000 requests"
+            );
+        }
+        // Class => samples mapping holds for every request.
+        for r in &a {
+            assert_eq!(r.samples, spec.mix[r.class].samples);
+        }
+        let wall = a.last().unwrap().at.as_secs_f64();
+        let rate = a.len() as f64 / wall;
+        assert!(
+            (rate - 1000.0).abs() / 1000.0 < 0.1,
+            "empirical rate {rate}"
+        );
+        // A different seed moves the schedule.
+        let mut other = spec.clone();
+        other.seed = 8;
+        assert_ne!(other.trace(16), a);
+    }
+
+    #[test]
+    fn open_loop_runner_accounts_for_every_offered_request() {
+        use crate::config::{ArchConfig, Task};
+        use crate::coordinator::{Engine, Fleet, FleetConfig};
+        use crate::hwmodel::resource::ReuseFactors;
+        use crate::nn::model::Model;
+        use crate::rng::Rng;
+
+        let spec =
+            ScenarioSpec::preset("baseline", 1, 2000.0, 16, 2, 3)
+                .unwrap();
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = data::T;
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        let c2 = cfg.clone();
+        let p = model.params.tensors.clone();
+        let factory: Box<dyn FnOnce() -> Engine + Send + 'static> =
+            Box::new(move || {
+                let m =
+                    Model::new(c2.clone(), bayes_rnn_fpga_params(p));
+                Engine::fpga(&c2, &m, ReuseFactors::new(4, 4, 4), 2, 0)
+            });
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: spec.engines,
+                router: spec.router,
+                queue_depth: spec.queue_depth,
+                shed: spec.shed,
+                samples: spec.samples,
+                ..FleetConfig::default()
+            },
+            vec![factory],
+        );
+        let d = data::generate(8, 1);
+        let trace = spec.trace(d.n);
+        let outcome = run_open_loop(&mut fleet, &trace, &d);
+        assert_eq!(outcome.offered, 16);
+        assert_eq!(
+            outcome.offered,
+            outcome.submitted + outcome.rejected_at_submit
+        );
+        assert_eq!(outcome.rejected_at_submit, 0, "no shedding here");
+        assert_eq!(outcome.lag.count(), 16, "one lag sample per offer");
+        for (t, class) in outcome.tickets {
+            assert_eq!(class, 0, "baseline has no mix");
+            fleet.wait(t).expect("response");
+        }
+        assert_eq!(fleet.join().served, 16);
     }
 }

@@ -40,6 +40,10 @@ pub use fleet::{
     AdaptiveResponse, AdaptiveTicket, Fleet, FleetConfig, FleetObs,
     FleetResponse, FleetSummary, Ticket,
 };
+pub use loadgen::{
+    run_open_loop, OpenLoopOutcome, PayloadClass, PoissonTrace,
+    ScenarioSpec, ScheduledRequest, SCENARIOS,
+};
 pub use router::{Router, RouterPolicy};
 pub use server::{Server, ServerConfig, ServeSummary};
 pub use stats::LatencyStats;

@@ -13,7 +13,7 @@ use std::time::{Duration, Instant};
 use super::batcher::{Batcher, BatchPolicy};
 use super::engines::{Engine, Prediction};
 use super::stats::LatencyStats;
-use crate::obs::StageStats;
+use crate::obs::{StageStats, WorkerTimeline};
 
 /// Server configuration.
 pub struct ServerConfig {
@@ -71,6 +71,10 @@ pub struct ServeSummary {
     pub queue_highwater: usize,
     /// Work items rejected at this engine's queue (fleet-injected).
     pub sheds: usize,
+    /// Per-window stage/throughput slice of this worker's run; `None`
+    /// unless the fleet ran with a windowed timeline
+    /// (`ObsConfig::window`).
+    pub timeline: Option<WorkerTimeline>,
 }
 
 /// Handle for submitting requests.
@@ -175,6 +179,7 @@ impl Server {
                 peak_batch: batcher.peak_batch(),
                 queue_highwater: 0,
                 sheds: 0,
+                timeline: None,
             }
         });
         Self { tx: Some(tx), worker: Some(worker), next_id: 0 }

@@ -62,6 +62,14 @@ impl LatencyStats {
         v[rank.clamp(1, v.len()) - 1] / 1e3
     }
 
+    /// Exact count of samples strictly above `ms` — the overall SLO
+    /// attainment numerator (windowed counts use the bucketed
+    /// `LogHistogram::count_over_us`; this stays the exact reference).
+    pub fn count_over_ms(&self, ms: f64) -> usize {
+        let us = ms * 1e3;
+        self.samples_us.iter().filter(|&&v| v > us).count()
+    }
+
     pub fn max_ms(&self) -> f64 {
         self.samples_us.iter().cloned().fold(0.0, f64::max) / 1e3
     }
@@ -143,6 +151,18 @@ mod tests {
         assert!((s2.percentile_ms(100.0) - 9.0).abs() < 1e-9);
         assert!((s2.min_ms() - 1.0).abs() < 1e-9);
         assert!((s2.max_ms() - 9.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn count_over_is_exact_and_strict() {
+        let mut s = LatencyStats::new();
+        for ms in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.record_ms(ms);
+        }
+        assert_eq!(s.count_over_ms(3.0), 2, "strictly above, not >=");
+        assert_eq!(s.count_over_ms(0.0), 5);
+        assert_eq!(s.count_over_ms(5.0), 0);
+        assert_eq!(LatencyStats::new().count_over_ms(1.0), 0);
     }
 
     #[test]

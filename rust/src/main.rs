@@ -21,8 +21,8 @@ use anyhow::{Context, Result};
 use bayes_rnn_fpga::config::{ArchConfig, Task};
 use bayes_rnn_fpga::coordinator::loadgen::PoissonTrace;
 use bayes_rnn_fpga::coordinator::{
-    AdaptiveTicket, BatchPolicy, Engine, Fleet, FleetConfig, RouterPolicy,
-    Ticket,
+    run_open_loop, AdaptiveTicket, BatchPolicy, Engine, Fleet,
+    FleetConfig, RouterPolicy, ScenarioSpec, Ticket,
 };
 use bayes_rnn_fpga::data;
 use bayes_rnn_fpga::dse::space::{reuse_search, reuse_search_q};
@@ -35,8 +35,9 @@ use bayes_rnn_fpga::kernels::{self, KernelBackend};
 use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
 use bayes_rnn_fpga::obs::{
-    self, serve_metric_set, serve_obs_json, LogHistogram, ObsConfig,
-    TraceLog,
+    self, push_slo_metrics, push_timeline_metrics, serve_metric_set,
+    serve_obs_json, LogHistogram, ObsConfig, SloReport, SloSpec,
+    Timeline, TraceLog,
 };
 use bayes_rnn_fpga::rng::Rng;
 use bayes_rnn_fpga::runtime::Runtime;
@@ -221,11 +222,15 @@ subcommands:
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
           [--seed N] [--json] [--kernel scalar|blocked|simd]
-          [--obs] [--metrics PATH] [--trace PATH]
+          [--obs] [--metrics PATH] [--trace PATH] [--window-ms F]
+          [--slo latency_ms=F,target=F,max_shed=F] [--slo-gate]
           (--obs adds per-stage latency histograms + engine health to
            the output; --metrics writes metrics JSON to PATH and
            Prometheus text to PATH.prom; --trace streams JSONL stage
-           events. Either implies --obs — docs/observability.md)
+           events; any of them implies --obs — docs/observability.md.
+           With obs on, the run is also sliced into --window-ms
+           timeline windows and evaluated against the SLO; --slo-gate
+           exits non-zero when the SLO fails, for CI)
           [--precision q8|q12|q16[,l<i>=FMT...]]  (fpga backend only;
            every engine runs at the one given format)
           (--kernel selects the MVM backend — docs/kernels.md
@@ -237,6 +242,18 @@ subcommands:
           [--defer-entropy F] [--max-epistemic F] [--calibration PATH]
           (missing weights fall back to a deterministic random init —
            synthetic load mode, used by the bench harness)
+  loadgen open-loop scenario runner: seeded Poisson arrivals replayed
+          against a fleet with coordinated-omission-correct latency
+          (e2e measured from each request's *scheduled* arrival) and
+          offered-vs-achieved per timeline window
+          --scenario baseline|fan_out|fan_in|scaling|poisson_mix
+          [--arch NAME] [--engines N] [--rate REQ_PER_S] [--requests N]
+          [--samples S] [--seed N] [--backend fpga|gpu|pjrt]
+          [--queue-depth N] [--shed] [--batch N] [--window-ms F]
+          [--slo SPEC] [--slo-gate] [--json] [--metrics PATH]
+          [--trace PATH] [--kernel K] [--precision P]
+          (observability is always on here — docs/observability.md
+           §Open-loop)
   uq      uncertainty-quantification pipeline (classify task)
           uq calibrate  fit temperature scaling offline
                         [--arch NAME] [--samples S] [--subset N]
@@ -269,6 +286,7 @@ fn main() -> Result<()> {
         Some("train") => cmd_train(&args),
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
+        Some("loadgen") => cmd_loadgen(&args),
         Some("uq") => cmd_uq(&args),
         Some("info") => cmd_info(&args),
         Some("help") | None => {
@@ -609,6 +627,113 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build one engine factory per fleet worker — shared by `repro serve`
+/// and `repro loadgen`. All engines share one design seed (MC-shard
+/// determinism); `backend == "mix"` alternates fpga/gpu engines.
+#[allow(clippy::too_many_arguments)]
+fn engine_factories(
+    cfg: &ArchConfig,
+    params: &[Tensor],
+    n_engines: usize,
+    backend: &str,
+    s: usize,
+    seed: u64,
+    artifacts: &std::path::Path,
+    kernel_backend: KernelBackend,
+    precision: &Precision,
+) -> Vec<Box<dyn FnOnce() -> Engine + Send>> {
+    let mut factories: Vec<Box<dyn FnOnce() -> Engine + Send>> =
+        Vec::with_capacity(n_engines);
+    for j in 0..n_engines {
+        let kind = match backend {
+            "mix" => (if j % 2 == 0 { "fpga" } else { "gpu" }).to_string(),
+            other => other.to_string(),
+        };
+        let cfg2 = cfg.clone();
+        let p2 = params.to_vec();
+        let arts = artifacts.to_path_buf();
+        let prec = precision.clone();
+        factories.push(Box::new(move || match kind.as_str() {
+            "gpu" => Engine::gpu(
+                Model::new(cfg2.clone(), Params { tensors: p2.clone() }),
+                s,
+                seed,
+            ),
+            "pjrt" => {
+                let rt = Runtime::new(&arts).expect("artifacts");
+                Engine::pjrt(rt, &cfg2.name(), &p2, s, seed)
+                    .expect("pjrt engine")
+            }
+            _ => {
+                let reuse = reuse_search_q(&cfg2, &ZC706, &prec)
+                    .expect("fits ZC706 at this precision");
+                let m = Model::new(
+                    cfg2.clone(),
+                    Params { tensors: p2.clone() },
+                );
+                let mut e = Engine::fpga_q(&cfg2, &m, reuse, s, seed, &prec);
+                e.set_kernel_backend(kernel_backend);
+                e
+            }
+        }));
+    }
+    factories
+}
+
+/// `--slo-gate`: turn a failing verdict into a non-zero exit after all
+/// output has been produced (CI sees the full report AND the failure).
+fn check_slo_gate(gate: bool, report: Option<&SloReport>) -> Result<()> {
+    if gate {
+        let r = report.ok_or_else(|| {
+            anyhow::anyhow!("--slo-gate needs an SLO evaluation")
+        })?;
+        anyhow::ensure!(
+            r.pass,
+            "SLO gate failed: {}",
+            r.render().trim_end()
+        );
+    }
+    Ok(())
+}
+
+/// Human-mode timeline table (capped to keep terminals readable).
+fn print_timeline(tl: &Timeline) {
+    const MAX_ROWS: usize = 20;
+    let n = tl.windows();
+    println!(
+        "timeline: {n} windows x {:.0} ms",
+        tl.width.as_secs_f64() * 1e3
+    );
+    println!(
+        "  {:>4} {:>8} {:>8} {:>8} {:>8} {:>10} {:>10}",
+        "w", "offered", "submit", "served", "reject", "p99_ms", "inflight"
+    );
+    for w in 0..n.min(MAX_ROWS) {
+        let p99 = tl
+            .e2e
+            .window(w)
+            .map(|h| h.percentile_ms(99.0))
+            .unwrap_or(0.0);
+        let inflight = tl
+            .sample_at(w)
+            .map(|s| s.max_in_flight.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        println!(
+            "  {:>4} {:>8} {:>8} {:>8} {:>8} {:>10.3} {:>10}",
+            w,
+            tl.offered.get(w),
+            tl.submitted.get(w),
+            tl.served.get(w),
+            tl.rejected.get(w),
+            p99,
+            inflight
+        );
+    }
+    if n > MAX_ROWS {
+        println!("  ... {} more windows", n - MAX_ROWS);
+    }
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     // Default arch lets the bench harness drive a bare checkout.
     let arch =
@@ -653,8 +778,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some("true") => anyhow::bail!("--trace needs a file path"),
         p => p.map(PathBuf::from),
     };
-    let obs_on =
-        args.flag("obs") || metrics_path.is_some() || trace_path.is_some();
+    let slo_gate = args.flag("slo-gate");
+    let obs_on = args.flag("obs")
+        || metrics_path.is_some()
+        || trace_path.is_some()
+        || args.flag("slo")
+        || slo_gate;
+    // With obs on, the run is additionally sliced into fixed-width
+    // timeline windows (per-window histograms + gauges) and evaluated
+    // against an SLO; both nest into the output next to "obs".
+    let window_ms = args.f64_or("window-ms", 100.0);
+    anyhow::ensure!(window_ms > 0.0, "--window-ms must be > 0");
     let obs_cfg = ObsConfig {
         enabled: obs_on,
         trace: match &trace_path {
@@ -665,6 +799,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
             }
             None => None,
         },
+        window: obs_on.then(|| {
+            std::time::Duration::from_secs_f64(window_ms / 1e3)
+        }),
+    };
+    let slo_spec = if obs_on {
+        Some(match args.get("slo") {
+            None | Some("true") => SloSpec::default(),
+            Some(s) => {
+                SloSpec::parse(s).map_err(|e| anyhow::anyhow!(e))?
+            }
+        })
+    } else {
+        None
     };
     let seed = args.usize_or("seed", 3) as u64;
     let artifacts = args.artifacts_dir();
@@ -726,41 +873,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // All engines share one design seed: MC-shard predictions are then
     // identical for any engine count (same request => same sample set).
     let params = model.params.tensors.clone();
-    let mut factories: Vec<Box<dyn FnOnce() -> Engine + Send>> =
-        Vec::with_capacity(n_engines);
-    for j in 0..n_engines {
-        let kind = match backend.as_str() {
-            "mix" => (if j % 2 == 0 { "fpga" } else { "gpu" }).to_string(),
-            other => other.to_string(),
-        };
-        let cfg2 = cfg.clone();
-        let p2 = params.clone();
-        let arts = artifacts.clone();
-        let prec = precision.clone();
-        factories.push(Box::new(move || match kind.as_str() {
-            "gpu" => Engine::gpu(
-                Model::new(cfg2.clone(), Params { tensors: p2.clone() }),
-                s,
-                seed,
-            ),
-            "pjrt" => {
-                let rt = Runtime::new(&arts).expect("artifacts");
-                Engine::pjrt(rt, &cfg2.name(), &p2, s, seed)
-                    .expect("pjrt engine")
-            }
-            _ => {
-                let reuse = reuse_search_q(&cfg2, &ZC706, &prec)
-                    .expect("fits ZC706 at this precision");
-                let m = Model::new(
-                    cfg2.clone(),
-                    Params { tensors: p2.clone() },
-                );
-                let mut e = Engine::fpga_q(&cfg2, &m, reuse, s, seed, &prec);
-                e.set_kernel_backend(kernel_backend);
-                e
-            }
-        }));
-    }
+    let factories = engine_factories(
+        &cfg,
+        &params,
+        n_engines,
+        &backend,
+        s,
+        seed,
+        &artifacts,
+        kernel_backend,
+        &precision,
+    );
 
     // Every backend batches: a formed batch becomes one blocked engine
     // call (FPGA-sim amortises weight fetches across the batch's MC
@@ -801,6 +924,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
             fleet.submit(beat).map(AnyTicket::Fixed)
         }
     };
+    // Run-start process snapshot: lets the report show CPU burned
+    // *during* the run (delta), not the process-lifetime total.
+    let proc0 = if obs_on { obs::proc_sample() } else { None };
     let t0 = std::time::Instant::now();
     let mut tickets = Vec::with_capacity(n_req);
     if let Some(rate) = args.get("rate").and_then(|v| v.parse::<f64>().ok())
@@ -885,11 +1011,29 @@ fn cmd_serve(args: &Args) -> Result<()> {
     } else {
         0.0
     };
+    // SLO verdict: exact overall attainment from the sample-keeping
+    // stats, per-window burn rates from the timeline histograms.
+    let slo_report = slo_spec.map(|spec| {
+        let over = summary.e2e.count_over_ms(spec.latency_ms);
+        obs::slo::evaluate(
+            &spec,
+            summary.served,
+            summary.rejected,
+            over,
+            summary.timeline.as_ref(),
+        )
+    });
     // Exported metrics (JSON + Prometheus text exposition) ride on the
     // obs histograms; written in both output modes.
     if let Some(path) = &metrics_path {
-        let set =
+        let mut set =
             serve_metric_set(&summary, wall.as_secs_f64(), throughput);
+        if let Some(tl) = &summary.timeline {
+            push_timeline_metrics(&mut set, tl);
+        }
+        if let Some(r) = &slo_report {
+            push_slo_metrics(&mut set, r);
+        }
         std::fs::write(path, jsonio::write(&set.to_json()) + "\n")
             .with_context(|| format!("write {}", path.display()))?;
         let prom = PathBuf::from(format!("{}.prom", path.display()));
@@ -899,10 +1043,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // Built before any `&mut` percentile call below; empty when obs is
     // off so the JSON line stays byte-identical to the pre-obs format.
     let obs_json = if obs_on {
-        format!(",\"obs\":{}", jsonio::write(&serve_obs_json(&summary)))
+        format!(
+            ",\"obs\":{}",
+            jsonio::write(&serve_obs_json(&summary, proc0))
+        )
     } else {
         String::new()
     };
+    let timeline_json = summary
+        .timeline
+        .as_ref()
+        .map(|tl| {
+            format!(",\"timeline\":{}", jsonio::write(&tl.to_json()))
+        })
+        .unwrap_or_default();
+    let slo_json = slo_report
+        .as_ref()
+        .map(|r| format!(",\"slo\":{}", jsonio::write(&r.to_json())))
+        .unwrap_or_default();
     let mut engine_stats = summary.engine_stats();
 
     if json_out {
@@ -922,7 +1080,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"max\":{:.4}}},\
              \"engine_ms\":{{\"mean\":{:.4},\"p99\":{:.4}}},\
              \"batches\":{},\"pred_checksum\":{:.6},\
-             \"unc_checksum\":{:.6}{}{}}}",
+             \"unc_checksum\":{:.6}{}{}{}{}}}",
             router.as_str(),
             kernel_backend.name(),
             precision.name(),
@@ -941,8 +1099,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
             unc_checksum,
             adaptive_json,
             obs_json,
+            timeline_json,
+            slo_json,
         );
-        return Ok(());
+        return check_slo_gate(slo_gate, slo_report.as_ref());
     }
 
     println!(
@@ -1016,11 +1176,26 @@ fn cmd_serve(args: &Args) -> Result<()> {
             );
         }
         if let Some(p) = obs::proc_sample() {
-            println!(
-                "process: rss {:.1} MiB  cpu {:.2} s",
-                p.rss_bytes as f64 / (1024.0 * 1024.0),
-                p.cpu_seconds
-            );
+            match proc0 {
+                Some(p0) => println!(
+                    "process: rss {:.1} MiB  cpu {:.2} s \
+                     (this run {:.2} s)",
+                    p.rss_bytes as f64 / (1024.0 * 1024.0),
+                    p.cpu_seconds,
+                    p.cpu_delta_since(&p0)
+                ),
+                None => println!(
+                    "process: rss {:.1} MiB  cpu {:.2} s",
+                    p.rss_bytes as f64 / (1024.0 * 1024.0),
+                    p.cpu_seconds
+                ),
+            }
+        }
+        if let Some(tl) = &summary.timeline {
+            print_timeline(tl);
+        }
+        if let Some(r) = &slo_report {
+            print!("{}", r.render());
         }
         if let Some(path) = &metrics_path {
             println!(
@@ -1036,7 +1211,313 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(r) = &uq_report {
         println!("{}", r.render());
     }
-    Ok(())
+    check_slo_gate(slo_gate, slo_report.as_ref())
+}
+
+/// `repro loadgen` — the open-loop scenario runner. Unlike `serve
+/// --rate` (closed-loop submit helpers retrofitted with sleeps), this
+/// path is coordinated-omission-correct: every request's e2e clock
+/// starts at its *scheduled* Poisson arrival, offered load is recorded
+/// per timeline window against the fleet's epoch, and the run is
+/// always evaluated against an SLO. Observability is always on here —
+/// the whole point of the command is the timeline.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    let scenario = match args.get("scenario") {
+        None | Some("true") => "baseline".to_string(),
+        Some(s) => s.to_string(),
+    };
+    let arch =
+        args.get("arch").unwrap_or("classify_h8_nl1_Y").to_string();
+    let cfg = parse_arch(&arch)?;
+    let s =
+        if cfg.is_bayesian() { args.usize_or("samples", 8) } else { 1 };
+    let n_req = args.usize_or("requests", 64);
+    let rate = args.f64_or("rate", 200.0);
+    anyhow::ensure!(rate > 0.0, "--rate must be > 0");
+    let n_engines = args.usize_or("engines", 4).max(1);
+    let seed = args.usize_or("seed", 3) as u64;
+    let backend = args
+        .get("backend")
+        .or_else(|| args.get("engine"))
+        .unwrap_or("fpga")
+        .to_string();
+    anyhow::ensure!(
+        backend != "mix",
+        "loadgen scenarios route per request; use serve for --backend mix"
+    );
+    let mut spec = ScenarioSpec::preset(
+        &scenario, n_engines, rate, n_req, s, seed,
+    )
+    .map_err(|e| anyhow::anyhow!(e))?;
+    // CLI overrides on top of the preset's topology.
+    if let Some(d) = args.get("queue-depth") {
+        spec.queue_depth = d
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--queue-depth wants a number"))?;
+    }
+    if args.flag("shed") {
+        spec.shed = true;
+    }
+    let batch = args.usize_or("batch", 8);
+    let json_out = args.flag("json");
+    let metrics_path = match args.get("metrics") {
+        Some("true") => anyhow::bail!("--metrics needs a file path"),
+        p => p.map(PathBuf::from),
+    };
+    let trace_path = match args.get("trace") {
+        Some("true") => anyhow::bail!("--trace needs a file path"),
+        p => p.map(PathBuf::from),
+    };
+    let slo_gate = args.flag("slo-gate");
+    let window_ms = args.f64_or("window-ms", 100.0);
+    anyhow::ensure!(window_ms > 0.0, "--window-ms must be > 0");
+    let slo_spec = match args.get("slo") {
+        None | Some("true") => SloSpec::default(),
+        Some(s) => SloSpec::parse(s).map_err(|e| anyhow::anyhow!(e))?,
+    };
+    let obs_cfg = ObsConfig {
+        enabled: true,
+        trace: match &trace_path {
+            Some(p) => {
+                Some(std::sync::Arc::new(TraceLog::create(p).with_context(
+                    || format!("create trace log {}", p.display()),
+                )?))
+            }
+            None => None,
+        },
+        window: Some(std::time::Duration::from_secs_f64(
+            window_ms / 1e3,
+        )),
+    };
+    let kernel_backend = match args.get("kernel") {
+        Some(k) => {
+            let b = KernelBackend::parse(k)
+                .map_err(|e| anyhow::anyhow!(e))?;
+            kernels::set_default_backend(b);
+            b
+        }
+        None => kernels::default_backend(),
+    };
+    let precision = args.precision()?;
+    anyhow::ensure!(
+        precision.is_q16() || backend == "fpga",
+        "--precision requires --backend fpga (float backends have no \
+         quantised path)"
+    );
+    let model = match load_model(args, &cfg, &arch) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!(
+                "note: {e:#}; serving untrained weights (synthetic mode)"
+            );
+            Model::init(cfg.clone(), &mut Rng::new(seed ^ 0xC0FFEE))
+        }
+    };
+    let params = model.params.tensors.clone();
+    // Engines are sized for the heaviest payload class (a poisson_mix
+    // "heavy" request draws 2S samples).
+    let engine_s = spec
+        .mix
+        .iter()
+        .map(|c| c.samples)
+        .max()
+        .unwrap_or(spec.samples)
+        .max(spec.samples);
+    let factories = engine_factories(
+        &cfg,
+        &params,
+        spec.engines,
+        &backend,
+        engine_s,
+        seed,
+        &args.artifacts_dir(),
+        kernel_backend,
+        &precision,
+    );
+    let policy = if batch <= 1 {
+        BatchPolicy::stream()
+    } else {
+        BatchPolicy::batched_rows(
+            batch,
+            std::time::Duration::from_millis(2),
+            batch * engine_s.max(1),
+        )
+    };
+    let proc0 = obs::proc_sample();
+    let mut fleet = Fleet::start(
+        FleetConfig {
+            engines: spec.engines,
+            router: spec.router,
+            policy,
+            queue_depth: spec.queue_depth,
+            shed: spec.shed,
+            samples: spec.samples,
+            obs: obs_cfg,
+        },
+        factories,
+    );
+    let (_, test) = match cfg.task {
+        Task::Anomaly => data::anomaly_splits(0),
+        Task::Classify => data::splits(0),
+    };
+    let sched = spec.trace(test.n);
+    let t0 = std::time::Instant::now();
+    let outcome = run_open_loop(&mut fleet, &sched, &test);
+    let mut e2e = bayes_rnn_fpga::coordinator::LatencyStats::new();
+    // Per-class served counts, offered alongside for the mix report.
+    let n_classes = spec.mix.len().max(1);
+    let mut served_by_class = vec![0usize; n_classes];
+    for (ticket, class) in outcome.tickets {
+        let resp = fleet.wait(ticket)?;
+        e2e.record_ms(resp.e2e_ms);
+        served_by_class[class] += 1;
+    }
+    let wall = t0.elapsed();
+    let mut summary = fleet.join();
+    // The fleet only sees submissions; the schedule knows what was
+    // *offered* (including requests shed at admission) — graft the
+    // offered-per-window series onto the timeline for the
+    // offered-vs-achieved comparison.
+    if let Some(tl) = summary.timeline.as_mut() {
+        tl.offered = outcome.offered_per_window.clone();
+    }
+    let achieved_rps = if wall.as_secs_f64() > 0.0 {
+        summary.served as f64 / wall.as_secs_f64()
+    } else {
+        0.0
+    };
+    let slo_report = {
+        let over = summary.e2e.count_over_ms(slo_spec.latency_ms);
+        obs::slo::evaluate(
+            &slo_spec,
+            summary.served,
+            summary.rejected,
+            over,
+            summary.timeline.as_ref(),
+        )
+    };
+    if let Some(path) = &metrics_path {
+        let mut set =
+            serve_metric_set(&summary, wall.as_secs_f64(), achieved_rps);
+        if let Some(tl) = &summary.timeline {
+            push_timeline_metrics(&mut set, tl);
+        }
+        push_slo_metrics(&mut set, &slo_report);
+        std::fs::write(path, jsonio::write(&set.to_json()) + "\n")
+            .with_context(|| format!("write {}", path.display()))?;
+        let prom = PathBuf::from(format!("{}.prom", path.display()));
+        std::fs::write(&prom, set.to_prometheus())
+            .with_context(|| format!("write {}", prom.display()))?;
+    }
+    let mut lag = outcome.lag;
+    let mix_json: Vec<String> = spec
+        .mix
+        .iter()
+        .enumerate()
+        .map(|(i, c)| {
+            format!(
+                "{{\"class\":\"{}\",\"samples\":{},\"weight\":{},\
+                 \"served\":{}}}",
+                c.name, c.samples, c.weight, served_by_class[i]
+            )
+        })
+        .collect();
+    if json_out {
+        let obs_json = format!(
+            ",\"obs\":{}",
+            jsonio::write(&serve_obs_json(&summary, proc0))
+        );
+        let timeline_json = summary
+            .timeline
+            .as_ref()
+            .map(|tl| {
+                format!(",\"timeline\":{}", jsonio::write(&tl.to_json()))
+            })
+            .unwrap_or_default();
+        println!(
+            "{{\"cmd\":\"loadgen\",\"scenario\":\"{scenario}\",\
+             \"arch\":\"{arch}\",\"engines\":{},\"router\":\"{}\",\
+             \"backend\":\"{backend}\",\"rate_per_s\":{rate},\
+             \"requests\":{n_req},\"offered\":{},\"submitted\":{},\
+             \"served\":{},\"rejected\":{},\"wall_s\":{:.6},\
+             \"achieved_rps\":{:.3},\
+             \"lag_ms\":{{\"p50\":{:.4},\"p99\":{:.4}}},\
+             \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\
+             \"max\":{:.4}}},\"mix\":[{}]{}{},\"slo\":{}}}",
+            spec.engines,
+            spec.router.as_str(),
+            outcome.offered,
+            outcome.submitted,
+            summary.served,
+            summary.rejected,
+            wall.as_secs_f64(),
+            achieved_rps,
+            lag.percentile_ms(50.0),
+            lag.percentile_ms(99.0),
+            e2e.mean_ms(),
+            e2e.percentile_ms(50.0),
+            e2e.percentile_ms(99.0),
+            e2e.max_ms(),
+            mix_json.join(","),
+            obs_json,
+            timeline_json,
+            jsonio::write(&slo_report.to_json()),
+        );
+        return check_slo_gate(slo_gate, Some(&slo_report));
+    }
+    println!(
+        "loadgen {scenario}: {} x {backend} engines, router {}, \
+         rate {rate:.0} req/s, S={}",
+        spec.engines,
+        spec.router.as_str(),
+        spec.samples
+    );
+    println!(
+        "offered {} (submitted {}, shed-at-submit {})  served {}  \
+         in {:.2}s  ({achieved_rps:.1} req/s achieved)",
+        outcome.offered,
+        outcome.submitted,
+        outcome.rejected_at_submit,
+        summary.served,
+        wall.as_secs_f64()
+    );
+    println!(
+        "generator lag p50 {:.3} ms  p99 {:.3} ms (how late submits \
+         ran vs schedule)",
+        lag.percentile_ms(50.0),
+        lag.percentile_ms(99.0)
+    );
+    println!(
+        "e2e (from scheduled arrival)  mean {:.3} ms  p50 {:.3}  \
+         p99 {:.3}  max {:.3}",
+        e2e.mean_ms(),
+        e2e.percentile_ms(50.0),
+        e2e.percentile_ms(99.0),
+        e2e.max_ms()
+    );
+    if !spec.mix.is_empty() {
+        for (i, c) in spec.mix.iter().enumerate() {
+            println!(
+                "  class {:<9} S={:<3} weight {:.2}  served {}",
+                c.name, c.samples, c.weight, served_by_class[i]
+            );
+        }
+    }
+    if let Some(tl) = &summary.timeline {
+        print_timeline(tl);
+    }
+    print!("{}", slo_report.render());
+    if let Some(path) = &metrics_path {
+        println!(
+            "metrics written to {} (+ {}.prom)",
+            path.display(),
+            path.display()
+        );
+    }
+    if let Some(path) = &trace_path {
+        println!("trace events written to {}", path.display());
+    }
+    check_slo_gate(slo_gate, Some(&slo_report))
 }
 
 fn cmd_uq(args: &Args) -> Result<()> {

@@ -7,7 +7,9 @@ use crate::coordinator::fleet::FleetSummary;
 use crate::jsonio::{self, Json};
 
 use super::hist::LogHistogram;
-use super::procstat;
+use super::procstat::{self, ProcStat};
+use super::slo::SloReport;
+use super::timeseries::Timeline;
 
 /// Every metric name `serve_metric_set` emits — the single source of
 /// truth shared by the unit test below, the docs table and the CI
@@ -29,6 +31,35 @@ pub const SERVE_METRIC_NAMES: &[&str] = &[
     "repro_mc_samples_spent_total",
     "repro_mc_samples_saved_total",
     "repro_router_placements_total",
+    "repro_trace_dropped_total",
+];
+
+/// Metric names `push_timeline_metrics` emits (windowed runs only).
+/// Per-window samples carry a `window` label.
+pub const TIMELINE_METRIC_NAMES: &[&str] = &[
+    "repro_timeline_window_seconds",
+    "repro_timeline_windows",
+    "repro_timeline_offered_total",
+    "repro_timeline_served_total",
+    "repro_timeline_rejected_total",
+    "repro_timeline_e2e_p99_ms",
+    "repro_timeline_throughput_rps",
+    "repro_timeline_rss_bytes",
+    "repro_timeline_cpu_util",
+    "repro_timeline_inflight",
+];
+
+/// Metric names `push_slo_metrics` emits (runs evaluated against an
+/// SLO only). `repro_slo_burn_rate` carries a `window` label.
+pub const SLO_METRIC_NAMES: &[&str] = &[
+    "repro_slo_pass",
+    "repro_slo_attainment",
+    "repro_slo_target",
+    "repro_slo_latency_threshold_ms",
+    "repro_slo_shed_rate",
+    "repro_slo_worst_burn_rate",
+    "repro_slo_violating_windows",
+    "repro_slo_burn_rate",
 ];
 
 /// One exported metric sample.
@@ -283,6 +314,12 @@ pub fn serve_metric_set(
             n as f64,
         );
     }
+    set.counter(
+        "repro_trace_dropped_total",
+        "Trace events lost to write failures (trace file incomplete if > 0)",
+        vec![],
+        summary.obs.trace_dropped as f64,
+    );
     if let Some(p) = procstat::sample() {
         set.gauge(
             "repro_proc_rss_bytes",
@@ -300,22 +337,150 @@ pub fn serve_metric_set(
     set
 }
 
+/// Per-window timeline metrics. Whole-window counters/gauges are
+/// labelled with the window index so a scrape carries the full series.
+pub fn push_timeline_metrics(set: &mut MetricSet, tl: &Timeline) {
+    set.gauge(
+        "repro_timeline_window_seconds",
+        "Timeline window width",
+        vec![],
+        tl.width.as_secs_f64(),
+    );
+    let n = tl.windows();
+    set.gauge(
+        "repro_timeline_windows",
+        "Windows spanned by the run",
+        vec![],
+        n as f64,
+    );
+    let width_s = tl.width.as_secs_f64().max(1e-9);
+    for w in 0..n {
+        let lbl = vec![("window", w.to_string())];
+        set.counter(
+            "repro_timeline_offered_total",
+            "Requests the open-loop schedule offered in the window",
+            lbl.clone(),
+            tl.offered.get(w) as f64,
+        );
+        let served = tl.served.get(w);
+        set.counter(
+            "repro_timeline_served_total",
+            "Requests completed in the window",
+            lbl.clone(),
+            served as f64,
+        );
+        set.counter(
+            "repro_timeline_rejected_total",
+            "Requests shed by admission control in the window",
+            lbl.clone(),
+            tl.rejected.get(w) as f64,
+        );
+        set.gauge(
+            "repro_timeline_e2e_p99_ms",
+            "Window p99 end-to-end latency",
+            lbl.clone(),
+            tl.e2e.window(w).map(|h| h.percentile_ms(99.0)).unwrap_or(0.0),
+        );
+        set.gauge(
+            "repro_timeline_throughput_rps",
+            "Achieved throughput in the window",
+            lbl.clone(),
+            served as f64 / width_s,
+        );
+        if let Some(s) = tl.sample_at(w) {
+            set.gauge(
+                "repro_timeline_rss_bytes",
+                "Resident set size sampled in the window",
+                lbl.clone(),
+                s.rss_bytes as f64,
+            );
+            set.gauge(
+                "repro_timeline_cpu_util",
+                "CPU cores busy during the window (delta-based)",
+                lbl.clone(),
+                s.cpu_delta_s / width_s,
+            );
+            set.gauge(
+                "repro_timeline_inflight",
+                "Peak in-flight work items sampled in the window",
+                lbl,
+                s.max_in_flight as f64,
+            );
+        }
+    }
+}
+
+/// SLO verdict metrics: overall pass/attainment plus the per-window
+/// burn-rate series the verdict was computed from.
+pub fn push_slo_metrics(set: &mut MetricSet, r: &SloReport) {
+    set.gauge(
+        "repro_slo_pass",
+        "1 if the run met the SLO, else 0",
+        vec![],
+        if r.pass { 1.0 } else { 0.0 },
+    );
+    set.gauge(
+        "repro_slo_attainment",
+        "Fraction of served requests within the latency threshold",
+        vec![],
+        r.attained,
+    );
+    set.gauge(
+        "repro_slo_target",
+        "Attainment fraction the SLO demands",
+        vec![],
+        r.spec.target,
+    );
+    set.gauge(
+        "repro_slo_latency_threshold_ms",
+        "SLO latency threshold",
+        vec![],
+        r.spec.latency_ms,
+    );
+    set.gauge(
+        "repro_slo_shed_rate",
+        "Fraction of offered requests shed by admission control",
+        vec![],
+        r.shed_rate,
+    );
+    set.gauge(
+        "repro_slo_worst_burn_rate",
+        "Worst windowed burn rate (>1 burns error budget)",
+        vec![],
+        r.worst_burn,
+    );
+    set.gauge(
+        "repro_slo_violating_windows",
+        "Windows whose burn rate exceeded 1",
+        vec![],
+        r.violating_windows as f64,
+    );
+    for w in &r.windows {
+        set.gauge(
+            "repro_slo_burn_rate",
+            "Windowed error-budget burn rate",
+            vec![("window", w.window.to_string())],
+            w.burn,
+        );
+    }
+}
+
 /// Histogram summary object for the nested serve JSON.
 fn hist_json(h: &LogHistogram) -> Json {
-    jsonio::obj(vec![
-        ("count", Json::Num(h.count() as f64)),
-        ("mean", Json::Num(h.mean_ms())),
-        ("p50", Json::Num(h.percentile_ms(50.0))),
-        ("p99", Json::Num(h.percentile_ms(99.0))),
-        ("max", Json::Num(h.max_ms())),
-    ])
+    h.summary_json()
 }
 
 /// The nested `"obs"` object added to the `repro serve --json` line
 /// when observability is enabled: fleet-wide stage percentiles, a
 /// per-engine breakdown (stages + health counters), MC sample
-/// accounting, router placements and a process snapshot.
-pub fn serve_obs_json(summary: &FleetSummary) -> Json {
+/// accounting, router placements and a process snapshot. `proc0` is an
+/// optional snapshot from run start — with it, the proc block also
+/// reports the CPU actually burned *during* the run
+/// (`cpu_delta_seconds`) rather than only the process-lifetime total.
+pub fn serve_obs_json(
+    summary: &FleetSummary,
+    proc0: Option<ProcStat>,
+) -> Json {
     let stages = summary.stage_stats();
     let engines: Vec<Json> = summary
         .per_engine
@@ -342,10 +507,19 @@ pub fn serve_obs_json(summary: &FleetSummary) -> Json {
         })
         .collect();
     let proc = match procstat::sample() {
-        Some(p) => jsonio::obj(vec![
-            ("rss_bytes", Json::Num(p.rss_bytes as f64)),
-            ("cpu_seconds", Json::Num(p.cpu_seconds)),
-        ]),
+        Some(p) => {
+            let mut fields = vec![
+                ("rss_bytes", Json::Num(p.rss_bytes as f64)),
+                ("cpu_seconds", Json::Num(p.cpu_seconds)),
+            ];
+            if let Some(p0) = proc0 {
+                fields.push((
+                    "cpu_delta_seconds",
+                    Json::Num(p.cpu_delta_since(&p0)),
+                ));
+            }
+            jsonio::obj(fields)
+        }
         None => Json::Null,
     };
     jsonio::obj(vec![
@@ -377,6 +551,10 @@ pub fn serve_obs_json(summary: &FleetSummary) -> Json {
                     .map(|&n| Json::Num(n as f64))
                     .collect(),
             ),
+        ),
+        (
+            "trace_dropped",
+            Json::Num(summary.obs.trace_dropped as f64),
         ),
         ("proc", proc),
     ])
@@ -410,6 +588,7 @@ mod tests {
             queue_highwater: 3,
             sheds: 1,
             peak_batch: 2,
+            timeline: None,
         };
         let mut obs = FleetObs { enabled: true, ..FleetObs::default() };
         obs.e2e.record_ms(3.0);
@@ -417,6 +596,7 @@ mod tests {
         obs.mc_spent = 24;
         obs.mc_saved = 8;
         obs.placements = vec![4];
+        obs.trace_dropped = 2;
         FleetSummary {
             served: 4,
             rejected: 1,
@@ -424,6 +604,7 @@ mod tests {
             e2e: LatencyStats::new(),
             per_engine: vec![engine],
             obs,
+            timeline: None,
         }
     }
 
@@ -466,11 +647,15 @@ mod tests {
         assert!(text.contains(
             "repro_engine_kernel_info{engine=\"0\",kernel=\"fpga:blocked\"} 1\n"
         ));
+        assert!(
+            text.contains("repro_trace_dropped_total 2\n"),
+            "dropped-event counter must surface in the exposition"
+        );
     }
 
     #[test]
     fn serve_obs_json_nests_stages_engines_and_accounting() {
-        let j = serve_obs_json(&fake_summary());
+        let j = serve_obs_json(&fake_summary(), procstat::sample());
         let line = jsonio::write(&j);
         let parsed = jsonio::parse(&line).expect("obs JSON parses");
         for stage in ["queue", "batch", "compute", "merge", "e2e"] {
@@ -495,6 +680,82 @@ mod tests {
                 .and_then(|m| m.get("saved"))
                 .and_then(Json::as_usize),
             Some(8)
+        );
+        assert_eq!(
+            parsed.get("trace_dropped").and_then(Json::as_usize),
+            Some(2)
+        );
+        // With a start snapshot, the proc block reports run-delta CPU
+        // (on Linux, where /proc parses).
+        if procstat::sample().is_some() {
+            assert!(
+                parsed
+                    .get("proc")
+                    .and_then(|p| p.get("cpu_delta_seconds"))
+                    .is_some(),
+                "cpu_delta_seconds missing from proc block"
+            );
+        }
+    }
+
+    fn fake_timeline() -> Timeline {
+        use super::super::timeseries::WindowSample;
+        let mut tl = Timeline::new(Duration::from_millis(100));
+        for (w, ms) in [(0usize, 2.0), (0, 3.0), (1, 500.0)] {
+            tl.e2e.record_ms(w, ms);
+            tl.served.inc(w);
+            tl.submitted.inc(w);
+        }
+        tl.offered.add(0, 2);
+        tl.offered.add(1, 2);
+        tl.rejected.inc(1);
+        tl.samples.push(WindowSample {
+            window: 1,
+            rss_bytes: 1 << 20,
+            cpu_delta_s: 0.05,
+            max_in_flight: 3,
+        });
+        tl
+    }
+
+    #[test]
+    fn timeline_metrics_cover_every_documented_name() {
+        let mut set = MetricSet::new();
+        push_timeline_metrics(&mut set, &fake_timeline());
+        for name in TIMELINE_METRIC_NAMES {
+            assert!(
+                set.metrics().iter().any(|m| m.name == *name),
+                "metric {name} missing from push_timeline_metrics"
+            );
+        }
+        let text = set.to_prometheus();
+        assert!(
+            text.contains("repro_timeline_served_total{window=\"0\"} 2\n"),
+            "per-window label missing:\n{text}"
+        );
+        assert!(text.contains("repro_timeline_inflight{window=\"1\"} 3\n"));
+    }
+
+    #[test]
+    fn slo_metrics_cover_every_documented_name() {
+        use super::super::slo::{evaluate, SloSpec};
+        let tl = fake_timeline();
+        let spec =
+            SloSpec { latency_ms: 100.0, target: 0.5, max_shed_rate: 1.0 };
+        let report = evaluate(&spec, 3, 1, 1, Some(&tl));
+        let mut set = MetricSet::new();
+        push_slo_metrics(&mut set, &report);
+        for name in SLO_METRIC_NAMES {
+            assert!(
+                set.metrics().iter().any(|m| m.name == *name),
+                "metric {name} missing from push_slo_metrics"
+            );
+        }
+        let text = set.to_prometheus();
+        assert!(text.contains("# TYPE repro_slo_pass gauge"));
+        assert!(
+            text.contains("repro_slo_burn_rate{window="),
+            "per-window burn series missing:\n{text}"
         );
     }
 }

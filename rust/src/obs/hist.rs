@@ -27,6 +27,8 @@
 
 use std::time::Duration;
 
+use crate::jsonio::{self, Json};
+
 /// Linear sub-buckets per octave (8 ⇒ ≤ 12.5 % relative bucket width).
 pub const SUB_BUCKETS: usize = 8;
 const SUB_BITS: u32 = 3;
@@ -165,6 +167,38 @@ impl LogHistogram {
             }
         }
         self.max_us / 1e3 // unreachable: cum == count >= rank
+    }
+
+    /// Recorded samples in buckets entirely at or above `us` — the SLO
+    /// evaluator's per-window "over threshold" count. Exact when `us`
+    /// is a bucket boundary; otherwise the bucket straddling `us` is
+    /// excluded, so the count is conservative (undercounts the bad
+    /// side) by at most that bucket's population — a threshold error
+    /// bounded by one bucket width (≤ 12.5 % relative).
+    pub fn count_over_us(&self, us: f64) -> u64 {
+        let mut n = 0;
+        for (i, &c) in self.counts.iter().enumerate() {
+            if c > 0 && bucket_bounds_us(i).0 >= us {
+                n += c;
+            }
+        }
+        n
+    }
+
+    pub fn count_over_ms(&self, ms: f64) -> u64 {
+        self.count_over_us(ms * 1e3)
+    }
+
+    /// The `{count, mean, p50, p99, max}` millisecond summary every
+    /// nested JSON export uses for a stage histogram.
+    pub fn summary_json(&self) -> Json {
+        jsonio::obj(vec![
+            ("count", Json::Num(self.count() as f64)),
+            ("mean", Json::Num(self.mean_ms())),
+            ("p50", Json::Num(self.percentile_ms(50.0))),
+            ("p99", Json::Num(self.percentile_ms(99.0))),
+            ("max", Json::Num(self.max_ms())),
+        ])
     }
 
     /// Width (ms) of the bucket containing `value_ms` — the percentile
@@ -343,6 +377,41 @@ mod tests {
         assert!(h.is_empty());
         h.record_us(5.0);
         assert_eq!(h.count(), 1);
+    }
+
+    #[test]
+    fn count_over_is_exact_at_bucket_boundaries() {
+        let mut h = LogHistogram::new();
+        // Octave boundaries are bucket boundaries: 1024 µs opens a
+        // bucket, so a threshold there splits the population exactly.
+        for us in [10.0, 100.0, 1000.0, 1024.0, 2048.0, 1e6] {
+            h.record_us(us);
+        }
+        assert_eq!(h.count_over_us(1024.0), 3);
+        assert_eq!(h.count_over_us(0.0), 6);
+        assert_eq!(h.count_over_us(1e9), 0);
+        assert_eq!(h.count_over_ms(1.024), 3);
+        // Conservative in between: never counts a bucket the
+        // threshold cuts through.
+        let exact = 4; // samples > 500 µs
+        assert!(h.count_over_us(500.0) <= exact);
+        // Merge preserves the count.
+        let mut m = LogHistogram::new();
+        m.merge(&h);
+        m.merge(&h);
+        assert_eq!(m.count_over_us(1024.0), 6);
+    }
+
+    #[test]
+    fn summary_json_reports_the_stage_shape() {
+        let mut h = LogHistogram::new();
+        h.record_ms(2.0);
+        h.record_ms(8.0);
+        let j = h.summary_json();
+        assert_eq!(j.get("count").and_then(|v| v.as_usize()), Some(2));
+        assert!((j.get("mean").unwrap().as_f64().unwrap() - 5.0).abs() < 0.1);
+        assert!((j.get("max").unwrap().as_f64().unwrap() - 8.0).abs() < 1e-9);
+        assert!(j.get("p50").is_some() && j.get("p99").is_some());
     }
 
     #[test]

@@ -22,33 +22,55 @@ pub mod counters;
 pub mod export;
 pub mod hist;
 pub mod procstat;
+pub mod slo;
+pub mod timeseries;
 pub mod trace;
 
 pub use counters::{EngineLoad, McCounters};
-pub use export::{serve_metric_set, serve_obs_json, Metric, MetricSet, SERVE_METRIC_NAMES};
+pub use export::{
+    push_slo_metrics, push_timeline_metrics, serve_metric_set,
+    serve_obs_json, Metric, MetricSet, SERVE_METRIC_NAMES,
+    SLO_METRIC_NAMES, TIMELINE_METRIC_NAMES,
+};
 pub use hist::LogHistogram;
 pub use procstat::{sample as proc_sample, ProcStat};
+pub use slo::{SloReport, SloSpec};
+pub use timeseries::{
+    window_index, Sampler, Timeline, WindowSample, WindowedCount,
+    WindowedHist, WorkerTimeline,
+};
 pub use trace::{StageStats, TraceLog};
 
 use std::sync::Arc;
+use std::time::Duration;
 
 /// Observability switches threaded through [`crate::coordinator::fleet::FleetConfig`].
 ///
 /// `enabled` turns on stage timing, histograms and the nested serve
 /// JSON/metrics export; `trace` additionally streams per-request stage
-/// events to a JSONL file. Both default off, and the fleet guarantees
-/// bit-identical serve output when disabled.
+/// events to a JSONL file; `window` slices the run into a fixed-width
+/// timeline ([`timeseries::Timeline`]) and starts the background gauge
+/// sampler. All default off, and the fleet guarantees bit-identical
+/// serve output when disabled.
 #[derive(Clone, Default)]
 pub struct ObsConfig {
     pub enabled: bool,
     pub trace: Option<Arc<TraceLog>>,
+    /// Timeline window width; `None` keeps PR 6's whole-run-summary
+    /// behaviour. Only honoured when `enabled`.
+    pub window: Option<Duration>,
 }
 
 impl ObsConfig {
     /// Enabled, no trace file — the common `--obs` configuration and
     /// the one integration tests use.
     pub fn on() -> Self {
-        Self { enabled: true, trace: None }
+        Self { enabled: true, trace: None, window: None }
+    }
+
+    /// Enabled with a windowed timeline of the given width.
+    pub fn on_windowed(width: Duration) -> Self {
+        Self { enabled: true, trace: None, window: Some(width) }
     }
 
     /// Record a trace event if a trace sink is configured.

@@ -12,6 +12,18 @@ pub struct ProcStat {
     pub cpu_seconds: f64,
 }
 
+impl ProcStat {
+    /// CPU seconds burned between `earlier` and this sample — the
+    /// per-window utilization primitive. `cpu_seconds` alone is a
+    /// cumulative tick counter, meaningless inside a timeline window;
+    /// deltas between consecutive samples are the signal. Clamped at 0
+    /// so samples taken out of order (or a tick-counter hiccup) can't
+    /// report negative CPU.
+    pub fn cpu_delta_since(&self, earlier: &ProcStat) -> f64 {
+        (self.cpu_seconds - earlier.cpu_seconds).max(0.0)
+    }
+}
+
 /// Common Linux defaults; without libc there is no portable sysconf,
 /// and these match every mainstream distro kernel config. A wrong
 /// constant skews absolute RSS/CPU numbers but not the trends the
@@ -59,5 +71,15 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn cpu_delta_is_nonnegative_and_ordered() {
+        let a = ProcStat { rss_bytes: 1, cpu_seconds: 1.5 };
+        let b = ProcStat { rss_bytes: 1, cpu_seconds: 2.25 };
+        assert!((b.cpu_delta_since(&a) - 0.75).abs() < 1e-12);
+        // Reversed order clamps to zero instead of going negative.
+        assert_eq!(a.cpu_delta_since(&b), 0.0);
+        assert_eq!(a.cpu_delta_since(&a), 0.0);
     }
 }

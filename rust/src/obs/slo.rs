@@ -1,0 +1,358 @@
+//! Declarative SLOs evaluated as windowed burn rates
+//! (`docs/observability.md` §SLO).
+//!
+//! An [`SloSpec`] states the objective — "`target` fraction of
+//! requests complete under `latency_ms`, and at most `max_shed_rate`
+//! of traffic is shed". [`evaluate`] turns one run into a verdict:
+//!
+//! * **overall attainment** is exact — counted over the run's
+//!   sample-keeping [`crate::coordinator::stats::LatencyStats`], not
+//!   the bucketed histograms, and
+//! * **per-window burn rates** come from the timeline's windowed
+//!   histograms ([`super::timeseries::Timeline`]). The burn rate of a
+//!   window is `(bad/total) / (1 − target)` — the rate at which that
+//!   window consumed the error budget; a window burning > 1 is
+//!   violating even if the whole-run average still passes. Window
+//!   counts use [`super::hist::LogHistogram::count_over_us`], so they
+//!   are exact at bucket boundaries and conservative (undercounting
+//!   the bad side by at most one bucket, ≤ 12.5 % of the threshold)
+//!   otherwise.
+//!
+//! The verdict nests into serve/loadgen JSON, renders in human mode
+//! and exports through `--metrics`; `--slo-gate` turns a failing
+//! verdict into a non-zero exit for CI.
+
+use crate::jsonio::{self, Json};
+
+use super::timeseries::Timeline;
+
+/// A declarative serving objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// Latency threshold in milliseconds.
+    pub latency_ms: f64,
+    /// Target fraction of served requests under the threshold
+    /// (e.g. 0.99 = "p99 under `latency_ms`").
+    pub target: f64,
+    /// Maximum tolerated fraction of submissions shed at admission.
+    pub max_shed_rate: f64,
+}
+
+impl Default for SloSpec {
+    /// The `--obs` default: p99 ≤ 250 ms, ≤ 1 % shed. Generous for the
+    /// smoke scale this repo serves at, so an un-tuned run passes.
+    fn default() -> Self {
+        Self { latency_ms: 250.0, target: 0.99, max_shed_rate: 0.01 }
+    }
+}
+
+impl SloSpec {
+    /// Parse a `--slo` argument: comma-separated `key=value` with keys
+    /// `latency_ms`, `target`, `max_shed`. Omitted keys keep the
+    /// default. Example: `latency_ms=50,target=0.99,max_shed=0.01`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut spec = Self::default();
+        for part in s.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (key, val) = part
+                .split_once('=')
+                .ok_or_else(|| format!("--slo: expected key=value, got {part:?}"))?;
+            let num: f64 = val
+                .trim()
+                .parse()
+                .map_err(|_| format!("--slo: {key} wants a number, got {val:?}"))?;
+            match key.trim() {
+                "latency_ms" => {
+                    if num <= 0.0 {
+                        return Err("--slo: latency_ms must be > 0".into());
+                    }
+                    spec.latency_ms = num;
+                }
+                "target" => {
+                    if !(0.0..=1.0).contains(&num) {
+                        return Err("--slo: target must be in [0, 1]".into());
+                    }
+                    spec.target = num;
+                }
+                "max_shed" => {
+                    if !(0.0..=1.0).contains(&num) {
+                        return Err("--slo: max_shed must be in [0, 1]".into());
+                    }
+                    spec.max_shed_rate = num;
+                }
+                other => {
+                    return Err(format!(
+                        "--slo: unknown key {other:?} (latency_ms, target, max_shed)"
+                    ));
+                }
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Error-budget burn rate for `over` bad requests out of `total`:
+    /// `(over/total) / (1 − target)`. 1.0 means the budget is consumed
+    /// exactly at the sustainable rate; > 1 is a violating window.
+    pub fn burn_rate(&self, over: u64, total: u64) -> f64 {
+        if total == 0 {
+            return 0.0;
+        }
+        let bad = over as f64 / total as f64;
+        bad / (1.0 - self.target).max(1e-9)
+    }
+}
+
+/// One window's share of the verdict (only windows that served
+/// traffic appear).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloWindow {
+    pub window: usize,
+    pub total: u64,
+    pub over: u64,
+    pub burn: f64,
+}
+
+/// The evaluated verdict for one run.
+#[derive(Debug, Clone)]
+pub struct SloReport {
+    pub spec: SloSpec,
+    pub served: usize,
+    pub rejected: usize,
+    /// Served requests over the latency threshold (exact count).
+    pub over: usize,
+    /// Fraction of served requests under the threshold.
+    pub attained: f64,
+    pub shed_rate: f64,
+    pub windows: Vec<SloWindow>,
+    pub worst_burn: f64,
+    pub violating_windows: usize,
+    pub pass: bool,
+}
+
+/// Evaluate a spec against one run. `over_exact` is the exact count of
+/// served requests above `spec.latency_ms` (from the run's
+/// `LatencyStats`); `timeline` supplies the per-window e2e histograms
+/// when windowing was on.
+pub fn evaluate(
+    spec: &SloSpec,
+    served: usize,
+    rejected: usize,
+    over_exact: usize,
+    timeline: Option<&Timeline>,
+) -> SloReport {
+    let attained = if served == 0 {
+        1.0
+    } else {
+        (served - over_exact.min(served)) as f64 / served as f64
+    };
+    let submitted = served + rejected;
+    let shed_rate = if submitted == 0 {
+        0.0
+    } else {
+        rejected as f64 / submitted as f64
+    };
+    let mut windows = Vec::new();
+    if let Some(tl) = timeline {
+        for w in 0..tl.e2e.len() {
+            let h = match tl.e2e.window(w) {
+                Some(h) if !h.is_empty() => h,
+                _ => continue,
+            };
+            let total = h.count() as u64;
+            let over = h.count_over_us(spec.latency_ms * 1e3).min(total);
+            windows.push(SloWindow {
+                window: w,
+                total,
+                over,
+                burn: spec.burn_rate(over, total),
+            });
+        }
+    }
+    let worst_burn =
+        windows.iter().map(|w| w.burn).fold(0.0f64, f64::max);
+    let violating_windows = windows.iter().filter(|w| w.burn > 1.0).count();
+    let pass = attained >= spec.target && shed_rate <= spec.max_shed_rate;
+    SloReport {
+        spec: *spec,
+        served,
+        rejected,
+        over: over_exact,
+        attained,
+        shed_rate,
+        windows,
+        worst_burn,
+        violating_windows,
+        pass,
+    }
+}
+
+impl SloReport {
+    pub fn to_json(&self) -> Json {
+        let windows = self
+            .windows
+            .iter()
+            .map(|w| {
+                jsonio::obj(vec![
+                    ("w", Json::Num(w.window as f64)),
+                    ("total", Json::Num(w.total as f64)),
+                    ("over", Json::Num(w.over as f64)),
+                    ("burn", Json::Num(w.burn)),
+                ])
+            })
+            .collect();
+        jsonio::obj(vec![
+            (
+                "spec",
+                jsonio::obj(vec![
+                    ("latency_ms", Json::Num(self.spec.latency_ms)),
+                    ("target", Json::Num(self.spec.target)),
+                    ("max_shed_rate", Json::Num(self.spec.max_shed_rate)),
+                ]),
+            ),
+            ("served", Json::Num(self.served as f64)),
+            ("rejected", Json::Num(self.rejected as f64)),
+            ("over_threshold", Json::Num(self.over as f64)),
+            ("attained", Json::Num(self.attained)),
+            ("shed_rate", Json::Num(self.shed_rate)),
+            ("worst_burn_rate", Json::Num(self.worst_burn)),
+            (
+                "violating_windows",
+                Json::Num(self.violating_windows as f64),
+            ),
+            ("pass", Json::Bool(self.pass)),
+            ("windows", Json::Arr(windows)),
+        ])
+    }
+
+    /// Multi-line human rendering for `repro serve`/`repro loadgen`
+    /// without `--json`.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "SLO: {:.4} of {} served under {} ms (target {:.4}) — {}\n",
+            self.attained,
+            self.served,
+            self.spec.latency_ms,
+            self.spec.target,
+            if self.pass { "PASS" } else { "FAIL" },
+        );
+        out.push_str(&format!(
+            "     shed rate {:.4} (max {:.4}); worst window burn {:.2}x, \
+             {} violating window(s) of {}\n",
+            self.shed_rate,
+            self.spec.max_shed_rate,
+            self.worst_burn,
+            self.violating_windows,
+            self.windows.len(),
+        ));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    #[test]
+    fn parse_accepts_partial_specs_and_rejects_junk() {
+        let d = SloSpec::default();
+        assert_eq!(SloSpec::parse("").unwrap(), d);
+        let s = SloSpec::parse("latency_ms=50").unwrap();
+        assert_eq!(s.latency_ms, 50.0);
+        assert_eq!(s.target, d.target);
+        let s =
+            SloSpec::parse("latency_ms=50, target=0.95, max_shed=0.1").unwrap();
+        assert_eq!(
+            s,
+            SloSpec { latency_ms: 50.0, target: 0.95, max_shed_rate: 0.1 }
+        );
+        assert!(SloSpec::parse("latency=50").is_err());
+        assert!(SloSpec::parse("latency_ms=fast").is_err());
+        assert!(SloSpec::parse("latency_ms=-1").is_err());
+        assert!(SloSpec::parse("target=1.5").is_err());
+        assert!(SloSpec::parse("nonsense").is_err());
+    }
+
+    #[test]
+    fn burn_rate_scales_with_error_budget() {
+        let spec =
+            SloSpec { latency_ms: 10.0, target: 0.99, max_shed_rate: 1.0 };
+        // Exactly at budget: 1% bad with a 1% budget burns at 1.0x.
+        assert!((spec.burn_rate(1, 100) - 1.0).abs() < 1e-9);
+        assert!((spec.burn_rate(10, 100) - 10.0).abs() < 1e-9);
+        assert_eq!(spec.burn_rate(0, 100), 0.0);
+        assert_eq!(spec.burn_rate(0, 0), 0.0);
+    }
+
+    fn timeline_with_e2e(windows: &[&[f64]]) -> Timeline {
+        let mut tl = Timeline::new(Duration::from_millis(100));
+        for (w, vals) in windows.iter().enumerate() {
+            for &ms in *vals {
+                tl.e2e.record_ms(w, ms);
+                tl.served.inc(w);
+            }
+        }
+        tl
+    }
+
+    #[test]
+    fn evaluate_flags_the_violating_window() {
+        // Window 0 healthy, window 1 pathological: a 50% target (2x
+        // budget) makes window 1 burn at 2x while window 0 burns 0.
+        let tl = timeline_with_e2e(&[
+            &[1.0, 1.0, 1.0, 1.0],
+            &[1.0, 1.0, 4000.0, 4000.0, 4000.0, 4000.0],
+        ]);
+        let spec =
+            SloSpec { latency_ms: 100.0, target: 0.5, max_shed_rate: 1.0 };
+        let report = evaluate(&spec, 10, 0, 4, Some(&tl));
+        assert_eq!(report.windows.len(), 2);
+        assert_eq!(report.windows[0].over, 0);
+        assert_eq!(report.windows[1].over, 4);
+        assert_eq!(report.violating_windows, 1);
+        assert!(report.worst_burn > 1.0);
+        // Overall: 6/10 under 100ms >= 0.5 target → pass.
+        assert!(report.attained >= 0.5 && report.pass);
+    }
+
+    #[test]
+    fn evaluate_pass_fail_thresholds() {
+        let spec =
+            SloSpec { latency_ms: 10.0, target: 0.9, max_shed_rate: 0.05 };
+        // 95% attained, no sheds → pass.
+        let r = evaluate(&spec, 100, 0, 5, None);
+        assert!(r.pass && (r.attained - 0.95).abs() < 1e-9);
+        // 85% attained → fail on latency.
+        assert!(!evaluate(&spec, 100, 0, 15, None).pass);
+        // Attained but shedding 10% → fail on shed rate.
+        let r = evaluate(&spec, 90, 10, 0, None);
+        assert!(!r.pass && (r.shed_rate - 0.1).abs() < 1e-9);
+        // Empty run trivially passes.
+        let r = evaluate(&spec, 0, 0, 0, None);
+        assert!(r.pass && r.attained == 1.0 && r.shed_rate == 0.0);
+    }
+
+    #[test]
+    fn report_json_shape_round_trips() {
+        let tl = timeline_with_e2e(&[&[1.0, 200.0]]);
+        let spec = SloSpec::default();
+        let report = evaluate(&spec, 2, 1, 0, Some(&tl));
+        let j = report.to_json();
+        let text = crate::jsonio::write(&j);
+        let back = crate::jsonio::parse(&text).expect("slo JSON parses");
+        assert_eq!(back.get("served").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(
+            back.get("pass").and_then(|v| v.as_bool()),
+            Some(report.pass)
+        );
+        let windows = back.get("windows").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(windows.len(), 1);
+        assert_eq!(
+            windows[0].get("total").and_then(|v| v.as_usize()),
+            Some(2)
+        );
+    }
+}

@@ -1,0 +1,600 @@
+//! Windowed time-series plane: fixed-interval per-window histograms,
+//! counters and process gauges (`docs/observability.md` §Time-series).
+//!
+//! PR 6's observability layer could only summarize a whole run; this
+//! module slices the same measurements into fixed-width wall-clock
+//! windows so a report can show *when* the fleet degraded, feed SLO
+//! burn rates ([`super::slo`]) and compare offered vs achieved load
+//! per window. Two invariants carry over from the histogram layer:
+//!
+//! * **Windows merge exactly.** A [`WindowedHist`] is a vector of
+//!   [`LogHistogram`]s merged element-wise, so per-worker timelines
+//!   combine across the fleet with the same associative/commutative
+//!   contract as the whole-run histograms, and
+//! * **the whole run is the sum of its windows**: merging every window
+//!   of a [`WindowedHist`] reproduces, bit for bit, the histogram that
+//!   would have been recorded without windowing (property-tested
+//!   below). Nothing is lost by slicing.
+//!
+//! Window index = `(t − epoch) / width`, where `epoch` is captured once
+//! at fleet start and shared by every recorder (workers, submit path,
+//! the background [`Sampler`] and the open-loop load generator), so all
+//! window streams align.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use super::counters::EngineLoad;
+use super::hist::LogHistogram;
+use super::procstat::{self, ProcStat};
+use crate::jsonio::{self, Json};
+
+/// Hard cap on window count: a run long enough to exceed it collapses
+/// the tail into the last window instead of growing without bound
+/// (4096 windows at the default 100 ms width is ~7 min of serving).
+pub const MAX_WINDOWS: usize = 4096;
+
+/// Window index of instant `at` relative to `epoch`, clamped to
+/// [`MAX_WINDOWS`]. Instants before the epoch land in window 0
+/// (saturating), so a scheduled arrival slightly ahead of fleet start
+/// cannot panic or wrap.
+pub fn window_index(epoch: Instant, width: Duration, at: Instant) -> usize {
+    let ns = at.saturating_duration_since(epoch).as_nanos();
+    let w = (ns / width.as_nanos().max(1)) as usize;
+    w.min(MAX_WINDOWS - 1)
+}
+
+/// A vector of per-window [`LogHistogram`]s with element-wise exact
+/// merge. Lazily grown: windows that saw no samples before the last
+/// recorded one are present but empty.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WindowedHist {
+    windows: Vec<LogHistogram>,
+}
+
+impl WindowedHist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn grow_to(&mut self, w: usize) {
+        let w = w.min(MAX_WINDOWS - 1);
+        if self.windows.len() <= w {
+            self.windows.resize_with(w + 1, LogHistogram::new);
+        }
+    }
+
+    pub fn record_us(&mut self, w: usize, us: f64) {
+        self.grow_to(w);
+        let i = w.min(self.windows.len() - 1);
+        self.windows[i].record_us(us);
+    }
+
+    pub fn record_ms(&mut self, w: usize, ms: f64) {
+        self.record_us(w, ms * 1e3);
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn window(&self, i: usize) -> Option<&LogHistogram> {
+        self.windows.get(i)
+    }
+
+    /// Exact element-wise merge — same associativity/commutativity
+    /// contract as [`LogHistogram::merge`].
+    pub fn merge(&mut self, other: &WindowedHist) {
+        if other.windows.is_empty() {
+            return;
+        }
+        self.grow_to(other.windows.len() - 1);
+        for (a, b) in self.windows.iter_mut().zip(&other.windows) {
+            a.merge(b);
+        }
+    }
+
+    /// Merge of every window — bit-identical to the histogram that
+    /// would have been recorded without windowing.
+    pub fn total(&self) -> LogHistogram {
+        let mut out = LogHistogram::new();
+        for w in &self.windows {
+            out.merge(w);
+        }
+        out
+    }
+}
+
+/// Per-window integer counters (served, rejected, offered, items,
+/// batches) with exact merge.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct WindowedCount {
+    windows: Vec<u64>,
+}
+
+impl WindowedCount {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, w: usize, n: u64) {
+        let w = w.min(MAX_WINDOWS - 1);
+        if self.windows.len() <= w {
+            self.windows.resize(w + 1, 0);
+        }
+        self.windows[w] += n;
+    }
+
+    pub fn inc(&mut self, w: usize) {
+        self.add(w, 1);
+    }
+
+    pub fn len(&self) -> usize {
+        self.windows.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.windows.is_empty()
+    }
+
+    pub fn get(&self, i: usize) -> u64 {
+        self.windows.get(i).copied().unwrap_or(0)
+    }
+
+    pub fn merge(&mut self, other: &WindowedCount) {
+        if other.windows.len() > self.windows.len() {
+            self.windows.resize(other.windows.len(), 0);
+        }
+        for (a, &b) in self.windows.iter_mut().zip(&other.windows) {
+            *a += b;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.windows.iter().sum()
+    }
+}
+
+/// The slice of the timeline one engine worker owns: stage histograms
+/// plus item/batch counts, recorded at the window in which the batch's
+/// compute finished. Merged across workers at fleet join.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerTimeline {
+    pub queue: WindowedHist,
+    pub batch: WindowedHist,
+    pub compute: WindowedHist,
+    pub items: WindowedCount,
+    pub batches: WindowedCount,
+}
+
+impl WorkerTimeline {
+    pub fn merge(&mut self, other: &WorkerTimeline) {
+        self.queue.merge(&other.queue);
+        self.batch.merge(&other.batch);
+        self.compute.merge(&other.compute);
+        self.items.merge(&other.items);
+        self.batches.merge(&other.batches);
+    }
+}
+
+/// One process-level gauge sample collapsed to its window: last RSS,
+/// CPU seconds burned *within* the window (delta between consecutive
+/// window-closing samples, never cumulative ticks) and peak in-flight
+/// request count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WindowSample {
+    pub window: usize,
+    pub rss_bytes: u64,
+    pub cpu_delta_s: f64,
+    pub max_in_flight: usize,
+}
+
+struct RawSample {
+    at: Instant,
+    proc: Option<ProcStat>,
+    in_flight: usize,
+}
+
+/// Background gauge sampler: a thread polling `/proc/self` and the
+/// engine load counters every ~width/4 (clamped to [1, 50] ms). It
+/// only *reads* relaxed atomics and procfs — it cannot perturb the
+/// serving path. Dropping a `Sampler` without calling
+/// [`Sampler::finish`] still stops and joins the thread.
+pub struct Sampler {
+    epoch: Instant,
+    width: Duration,
+    stop: Arc<AtomicBool>,
+    handle: Option<thread::JoinHandle<Vec<RawSample>>>,
+}
+
+impl Sampler {
+    pub fn spawn(
+        epoch: Instant,
+        width: Duration,
+        loads: Vec<Arc<EngineLoad>>,
+    ) -> Self {
+        let tick = (width / 4)
+            .clamp(Duration::from_millis(1), Duration::from_millis(50));
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = Arc::clone(&stop);
+        let handle = thread::spawn(move || {
+            let mut raw = Vec::new();
+            loop {
+                raw.push(RawSample {
+                    at: Instant::now(),
+                    proc: procstat::sample(),
+                    in_flight: loads.iter().map(|l| l.outstanding()).sum(),
+                });
+                if stop2.load(Ordering::Acquire) {
+                    break;
+                }
+                thread::sleep(tick);
+            }
+            raw
+        });
+        Self { epoch, width, stop, handle: Some(handle) }
+    }
+
+    /// Stop the sampler thread and collapse its raw samples into one
+    /// [`WindowSample`] per window that saw at least one poll.
+    pub fn finish(mut self) -> Vec<WindowSample> {
+        self.stop.store(true, Ordering::Release);
+        let raw = match self.handle.take() {
+            Some(h) => h.join().expect("obs sampler thread panicked"),
+            None => Vec::new(),
+        };
+        collapse(self.epoch, self.width, &raw)
+    }
+}
+
+impl Drop for Sampler {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn collapse(
+    epoch: Instant,
+    width: Duration,
+    raw: &[RawSample],
+) -> Vec<WindowSample> {
+    let mut out: Vec<WindowSample> = Vec::new();
+    // CPU reference: the first successful proc sample. Each window's
+    // cpu_delta_s is measured from the previous window's closing
+    // sample, so summing deltas over windows gives the run's total.
+    let mut prev_cpu = raw.iter().find_map(|r| r.proc.map(|p| p.cpu_seconds));
+    let mut cur: Option<WindowSample> = None;
+    let mut last_cpu: Option<f64> = None;
+    for r in raw {
+        let w = window_index(epoch, width, r.at);
+        if cur.map(|c| c.window) != Some(w) {
+            if let Some(mut c) = cur.take() {
+                if let (Some(cpu), Some(prev)) = (last_cpu, prev_cpu) {
+                    c.cpu_delta_s = (cpu - prev).max(0.0);
+                    prev_cpu = Some(cpu);
+                }
+                out.push(c);
+            }
+            cur = Some(WindowSample {
+                window: w,
+                rss_bytes: 0,
+                cpu_delta_s: 0.0,
+                max_in_flight: 0,
+            });
+            last_cpu = None;
+        }
+        let c = cur.as_mut().expect("window sample just initialised");
+        if let Some(p) = r.proc {
+            c.rss_bytes = p.rss_bytes;
+            last_cpu = Some(p.cpu_seconds);
+        }
+        c.max_in_flight = c.max_in_flight.max(r.in_flight);
+    }
+    if let Some(mut c) = cur.take() {
+        if let (Some(cpu), Some(prev)) = (last_cpu, prev_cpu) {
+            c.cpu_delta_s = (cpu - prev).max(0.0);
+        }
+        out.push(c);
+    }
+    out
+}
+
+/// The assembled fleet timeline: windowed latency histograms, request
+/// counters and gauge samples over one run, all indexed from the same
+/// epoch. Built at fleet `join()` by merging worker timelines into the
+/// fleet-level window state; `offered` is filled in afterwards by the
+/// open-loop load generator (empty for closed-loop runs).
+#[derive(Debug, Clone)]
+pub struct Timeline {
+    pub width: Duration,
+    pub e2e: WindowedHist,
+    pub queue: WindowedHist,
+    pub batch: WindowedHist,
+    pub compute: WindowedHist,
+    pub offered: WindowedCount,
+    pub submitted: WindowedCount,
+    pub served: WindowedCount,
+    pub rejected: WindowedCount,
+    pub items: WindowedCount,
+    pub batches: WindowedCount,
+    pub samples: Vec<WindowSample>,
+}
+
+impl Timeline {
+    pub fn new(width: Duration) -> Self {
+        Self {
+            width,
+            e2e: WindowedHist::new(),
+            queue: WindowedHist::new(),
+            batch: WindowedHist::new(),
+            compute: WindowedHist::new(),
+            offered: WindowedCount::new(),
+            submitted: WindowedCount::new(),
+            served: WindowedCount::new(),
+            rejected: WindowedCount::new(),
+            items: WindowedCount::new(),
+            batches: WindowedCount::new(),
+            samples: Vec::new(),
+        }
+    }
+
+    /// Number of windows spanned by any stream in this timeline.
+    pub fn windows(&self) -> usize {
+        let counts = [
+            self.offered.len(),
+            self.submitted.len(),
+            self.served.len(),
+            self.rejected.len(),
+            self.items.len(),
+            self.batches.len(),
+        ];
+        let hists = [
+            self.e2e.len(),
+            self.queue.len(),
+            self.batch.len(),
+            self.compute.len(),
+        ];
+        let gauges =
+            self.samples.iter().map(|s| s.window + 1).max().unwrap_or(0);
+        counts
+            .into_iter()
+            .chain(hists)
+            .chain([gauges])
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Gauge sample for window `w`, if the background sampler ticked
+    /// during it.
+    pub fn sample_at(&self, w: usize) -> Option<&WindowSample> {
+        self.samples.iter().find(|s| s.window == w)
+    }
+
+    /// `{"window_s", "windows", "per_window": [...]}` — one object per
+    /// window with counters, e2e summary, stage p99s and gauges.
+    pub fn to_json(&self) -> Json {
+        let width_s = self.width.as_secs_f64();
+        let n = self.windows();
+        let mut per_window = Vec::with_capacity(n);
+        for w in 0..n {
+            let empty = LogHistogram::new();
+            let e2e = self.e2e.window(w).unwrap_or(&empty);
+            let served = self.served.get(w);
+            let mut fields = vec![
+                ("w", Json::Num(w as f64)),
+                ("offered", Json::Num(self.offered.get(w) as f64)),
+                ("submitted", Json::Num(self.submitted.get(w) as f64)),
+                ("served", Json::Num(served as f64)),
+                ("rejected", Json::Num(self.rejected.get(w) as f64)),
+                ("items", Json::Num(self.items.get(w) as f64)),
+                ("batches", Json::Num(self.batches.get(w) as f64)),
+                (
+                    "throughput_rps",
+                    Json::Num(served as f64 / width_s.max(1e-9)),
+                ),
+                ("e2e", e2e.summary_json()),
+                (
+                    "queue_p99",
+                    Json::Num(
+                        self.queue
+                            .window(w)
+                            .map(|h| h.percentile_ms(99.0))
+                            .unwrap_or(0.0),
+                    ),
+                ),
+                (
+                    "compute_p99",
+                    Json::Num(
+                        self.compute
+                            .window(w)
+                            .map(|h| h.percentile_ms(99.0))
+                            .unwrap_or(0.0),
+                    ),
+                ),
+            ];
+            if let Some(s) = self.sample_at(w) {
+                fields.push(("rss_bytes", Json::Num(s.rss_bytes as f64)));
+                fields.push(("cpu_s", Json::Num(s.cpu_delta_s)));
+                fields.push((
+                    "cpu_util",
+                    Json::Num(s.cpu_delta_s / width_s.max(1e-9)),
+                ));
+                fields.push((
+                    "in_flight",
+                    Json::Num(s.max_in_flight as f64),
+                ));
+            }
+            per_window.push(jsonio::obj(fields));
+        }
+        jsonio::obj(vec![
+            ("window_s", Json::Num(width_s)),
+            ("windows", Json::Num(n as f64)),
+            ("per_window", Json::Arr(per_window)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rng::Rng;
+
+    fn seeded_values(seed: u64, n: usize) -> Vec<(usize, f64)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|_| {
+                let w = rng.below(13);
+                // log-uniform over [~1 µs, ~1 s]
+                let us = (2.0f64).powf(rng.uniform() * 20.0);
+                (w, us)
+            })
+            .collect()
+    }
+
+    /// The tentpole property: slicing a run into windows loses nothing
+    /// — merging every window reproduces the unwindowed histogram with
+    /// exact structural equality.
+    #[test]
+    fn whole_run_equals_sum_of_windows() {
+        let vals = seeded_values(42, 5000);
+        let mut windowed = WindowedHist::new();
+        let mut plain = LogHistogram::new();
+        for &(w, us) in &vals {
+            windowed.record_us(w, us);
+            plain.record_us(us);
+        }
+        assert_eq!(windowed.total(), plain);
+        assert_eq!(windowed.total().count(), 5000);
+    }
+
+    /// Per-window merge across workers carries the LogHistogram
+    /// contract: order-free, and window-by-window exact.
+    #[test]
+    fn windowed_merge_is_order_free_and_exact() {
+        let vals = seeded_values(7, 3000);
+        // Shard the same value stream across three "workers".
+        let mut shards = [
+            WindowedHist::new(),
+            WindowedHist::new(),
+            WindowedHist::new(),
+        ];
+        let mut pooled = WindowedHist::new();
+        for (i, &(w, us)) in vals.iter().enumerate() {
+            shards[i % 3].record_us(w, us);
+            pooled.record_us(w, us);
+        }
+        let mut abc = shards[0].clone();
+        abc.merge(&shards[1]);
+        abc.merge(&shards[2]);
+        let mut cba = shards[2].clone();
+        cba.merge(&shards[1]);
+        cba.merge(&shards[0]);
+        assert_eq!(abc, cba, "windowed merge must commute");
+        assert_eq!(abc, pooled, "windowed merge must equal pooled recording");
+        assert_eq!(abc.total(), pooled.total());
+    }
+
+    #[test]
+    fn windowed_counts_merge_and_total() {
+        let mut a = WindowedCount::new();
+        let mut b = WindowedCount::new();
+        a.inc(0);
+        a.add(2, 5);
+        b.inc(1);
+        b.add(2, 3);
+        b.inc(4);
+        a.merge(&b);
+        assert_eq!(a.len(), 5);
+        assert_eq!(
+            (0..5).map(|i| a.get(i)).collect::<Vec<_>>(),
+            vec![1, 1, 8, 0, 1]
+        );
+        assert_eq!(a.total(), 11);
+        assert_eq!(a.get(99), 0);
+    }
+
+    #[test]
+    fn window_index_clamps_and_aligns() {
+        let epoch = Instant::now();
+        let w = Duration::from_millis(100);
+        assert_eq!(window_index(epoch, w, epoch), 0);
+        assert_eq!(
+            window_index(epoch, w, epoch + Duration::from_millis(250)),
+            2
+        );
+        // Before the epoch saturates to window 0.
+        assert_eq!(
+            window_index(epoch + Duration::from_secs(1), w, epoch),
+            0
+        );
+        // Far future clamps instead of allocating unboundedly.
+        assert_eq!(
+            window_index(epoch, w, epoch + Duration::from_secs(100_000)),
+            MAX_WINDOWS - 1
+        );
+    }
+
+    #[test]
+    fn sampler_collapses_to_per_window_gauges() {
+        let epoch = Instant::now();
+        let sampler = Sampler::spawn(
+            epoch,
+            Duration::from_millis(8),
+            vec![Arc::new(EngineLoad::default())],
+        );
+        thread::sleep(Duration::from_millis(25));
+        let samples = sampler.finish();
+        assert!(!samples.is_empty(), "sampler produced no samples");
+        for pair in samples.windows(2) {
+            assert!(
+                pair[0].window < pair[1].window,
+                "window samples must be strictly ordered"
+            );
+        }
+        for s in &samples {
+            assert!(s.cpu_delta_s >= 0.0);
+        }
+    }
+
+    #[test]
+    fn timeline_json_shape() {
+        let mut tl = Timeline::new(Duration::from_millis(100));
+        tl.e2e.record_ms(0, 5.0);
+        tl.e2e.record_ms(1, 25.0);
+        tl.served.inc(0);
+        tl.served.inc(1);
+        tl.offered.add(0, 2);
+        tl.samples.push(WindowSample {
+            window: 1,
+            rss_bytes: 1024,
+            cpu_delta_s: 0.05,
+            max_in_flight: 3,
+        });
+        let j = tl.to_json();
+        assert_eq!(j.get("windows").and_then(|v| v.as_usize()), Some(2));
+        let per = j.get("per_window").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[0].get("offered").and_then(|v| v.as_usize()), Some(2));
+        assert_eq!(per[1].get("served").and_then(|v| v.as_usize()), Some(1));
+        assert_eq!(
+            per[1].get("in_flight").and_then(|v| v.as_usize()),
+            Some(3)
+        );
+        assert!(per[0].get("in_flight").is_none(), "no gauge in window 0");
+        let e2e = per[1].get("e2e").unwrap();
+        assert_eq!(e2e.get("count").and_then(|v| v.as_usize()), Some(1));
+        // Round-trips through the writer/parser.
+        let text = jsonio::write(&j);
+        let back = jsonio::parse(&text).expect("timeline JSON parses");
+        assert_eq!(back.get("windows").and_then(|v| v.as_usize()), Some(2));
+    }
+}

@@ -13,6 +13,7 @@
 use std::fs::File;
 use std::io::{self, BufWriter, Write};
 use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Instant;
 
@@ -53,6 +54,7 @@ impl StageStats {
 pub struct TraceLog {
     t0: Instant,
     w: Mutex<BufWriter<File>>,
+    dropped: AtomicU64,
 }
 
 impl TraceLog {
@@ -60,12 +62,15 @@ impl TraceLog {
         Ok(Self {
             t0: Instant::now(),
             w: Mutex::new(BufWriter::new(File::create(path)?)),
+            dropped: AtomicU64::new(0),
         })
     }
 
     /// Record one stage event. Stage names are fixed tokens (no JSON
-    /// escaping needed); write failures are dropped — tracing must
-    /// never take the serving path down.
+    /// escaping needed); write failures never take the serving path
+    /// down, but they are no longer silent: each failed write bumps
+    /// [`TraceLog::dropped`], surfaced in the serve obs JSON and as
+    /// `repro_trace_dropped_total` in the metrics export.
     pub fn event(
         &self,
         req: u64,
@@ -81,11 +86,21 @@ impl TraceLog {
         // Stamped under the writer lock: file order == `at_us` order,
         // so the log is globally sorted without a post-pass.
         let at_us = self.t0.elapsed().as_micros() as u64;
-        let _ = writeln!(
+        if writeln!(
             w,
             "{{\"req\":{req},\"stage\":\"{stage}\"{engine_field},\
              \"at_us\":{at_us},\"us\":{dur_us:.1}}}"
-        );
+        )
+        .is_err()
+        {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events lost to write failures so far (a non-zero value means
+    /// the trace file is incomplete — e.g. disk full mid-run).
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
     }
 
     pub fn flush(&self) {
@@ -115,6 +130,7 @@ mod tests {
             log.event(0, "submit", None, 0.0);
             log.event(0, "queue", Some(1), 42.5);
             log.event(0, "reply", None, 1234.0);
+            assert_eq!(log.dropped(), 0, "healthy sink drops nothing");
         } // drop flushes
         let text = std::fs::read_to_string(&path).expect("read trace");
         let lines: Vec<&str> = text.lines().collect();
