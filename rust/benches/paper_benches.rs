@@ -19,6 +19,12 @@
 //!             (exit 1), packed-weight bytes/MAC per format, and
 //!             accelerator beats/s at S in {10, 30, 100}; one-line JSON
 //!             to bench_results/kernel_microbench.json (docs/kernels.md)
+//!   maskgen   dropout-mask generation layer: word-level LFSR fill vs
+//!             the legacy bit-by-bit loop (Mbit/s + drift gate), and
+//!             the seed-indexed mask bank's hit rate / speedup on a
+//!             repeated-seed workload with a bank-on/off bit-identity
+//!             gate; one-line JSON to bench_results/maskgen.json
+//!             (docs/kernels.md §Mask bank)
 //!   precision quantisation axis (docs/quantization.md): accuracy +
 //!             simulated beats/s + modelled latency/DSPs at q8/q12/q16,
 //!             one-line JSON to bench_results/precision.json; any
@@ -112,6 +118,9 @@ fn main() {
     }
     if want("kernels") {
         kernels_bench();
+    }
+    if want("maskgen") {
+        maskgen_bench();
     }
     if want("precision") {
         precision_bench();
@@ -1112,6 +1121,157 @@ fn kernels_bench() {
         Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_kernels.json");
     std::fs::write(&committed, format!("{line}\n"))
         .expect("write BENCH_kernels.json");
+    println!("  -> {}", committed.display());
+}
+
+/// Mask-generation scenario (ISSUE 8): (1) word-level LFSR fill
+/// (`keep_word`) vs the legacy bit-by-bit closure fill over identical
+/// bitplanes — throughput in Mbit/s with an exact plane-checksum drift
+/// gate; (2) the seed-indexed mask bank on a repeated-seed workload
+/// (the same request replayed): bank-off vs bank-warm beats/s, hit
+/// rate, and the mask-generation share of a blocked predict recovered
+/// by the bank. Bank on/off sample sets must be bit-identical — any
+/// drift exits 1. One-line JSON to bench_results/maskgen.json plus the
+/// committed BENCH_maskgen.json trajectory copy.
+fn maskgen_bench() {
+    use bayes_rnn_fpga::kernels::{BitPlanes, MaskBank};
+    use bayes_rnn_fpga::lfsr::BernoulliSampler;
+    use std::sync::Arc;
+
+    banner("Maskgen — word-level RNG + seed-indexed mask bank");
+    let iters = env_usize("REPRO_BENCH_MASKGEN_ITERS", 40).max(1);
+    let s_max = env_usize("REPRO_BENCH_MASKGEN_SMAX", 30).max(2);
+
+    // 1. Word-fill vs bit-fill, same sampler seeds, same planes: the
+    //    PR 5 draw-order contract says the bits are identical, so an
+    //    exact FNV checksum over the row words gates drift.
+    let (rows, width) = (64usize, 512usize);
+    let total_bits = (iters * rows * width) as f64;
+    let checksum = |p: &BitPlanes| -> u64 {
+        let mut h = 0xcbf29ce484222325u64;
+        for r in 0..p.rows() {
+            for &w in p.row_words(r) {
+                h = (h ^ w).wrapping_mul(0x100000001b3);
+            }
+        }
+        h
+    };
+    let mut bit_planes = BitPlanes::ones(rows, width);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let mut s = BernoulliSampler::new(0x5EED ^ i as u64);
+        for r in 0..rows {
+            bit_planes.fill_row(r, || s.sample() != 0.0);
+        }
+    }
+    let bit_rate = total_bits / t0.elapsed().as_secs_f64() / 1e6;
+    let mut word_planes = BitPlanes::ones(rows, width);
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let mut s = BernoulliSampler::new(0x5EED ^ i as u64);
+        for r in 0..rows {
+            word_planes.fill_row_words(r, |n| s.keep_word(n));
+        }
+    }
+    let word_rate = total_bits / t0.elapsed().as_secs_f64() / 1e6;
+    let (ck_bit, ck_word) =
+        (checksum(&bit_planes), checksum(&word_planes));
+    let fill_speedup = word_rate / bit_rate.max(1e-9);
+    println!(
+        "fill    bit {bit_rate:>8.1} Mbit/s   word {word_rate:>8.1} \
+         Mbit/s   word/bit {fill_speedup:.2}x   checksum {ck_word:#018x}"
+    );
+    if ck_bit != ck_word {
+        eprintln!(
+            "FATAL: word-fill drifted from bit-fill \
+             ({ck_bit:#018x} vs {ck_word:#018x})"
+        );
+        std::process::exit(1);
+    }
+
+    // 2. Bank off/on on a repeated-seed workload: the same request
+    //    (fixed req_seed) replayed against the blocked path. Warm-bank
+    //    passes skip the LFSR mask generation entirely; the throughput
+    //    delta IS the mask-gen share of a blocked predict.
+    let mut cfg = ArchConfig::new(Task::Classify, 32, 2, "YY");
+    cfg.seq_len = 64;
+    let params = Params::init(&cfg, &mut Rng::new(1));
+    let reuse = ReuseFactors::new(1, 1, 1);
+    let beat: Vec<f32> =
+        (0..cfg.seq_len).map(|i| (i as f32 * 0.23).sin()).collect();
+    let beats = (iters / 4).max(2);
+
+    let mut off = Accelerator::new(&cfg, &params, reuse, 9);
+    let want = off.predict_seeded(&beat, 0, 0, s_max).samples; // warm
+    let t0 = Instant::now();
+    for _ in 0..beats {
+        let _ = off.predict_seeded(&beat, 0, 0, s_max);
+    }
+    let rate_off = beats as f64 / t0.elapsed().as_secs_f64();
+
+    let bank = Arc::new(MaskBank::new(8 << 20));
+    let mut on = Accelerator::new(&cfg, &params, reuse, 9);
+    on.set_mask_bank(Some(Arc::clone(&bank)));
+    let cold = on.predict_seeded(&beat, 0, 0, s_max).samples;
+    if cold != want {
+        eprintln!("FATAL: bank-cold samples drifted from bank-off");
+        std::process::exit(1);
+    }
+    let t0 = Instant::now();
+    for _ in 0..beats {
+        let _ = on.predict_seeded(&beat, 0, 0, s_max);
+    }
+    let rate_on = beats as f64 / t0.elapsed().as_secs_f64();
+    let warm = on.predict_seeded(&beat, 0, 0, s_max).samples;
+    if warm != want {
+        eprintln!("FATAL: bank-warm samples drifted from bank-off");
+        std::process::exit(1);
+    }
+    let st = bank.stats();
+    let hit_rate =
+        st.hits as f64 / (st.hits + st.misses).max(1) as f64;
+    let bank_speedup = rate_on / rate_off.max(1e-12);
+    let mask_frac = (1.0 - rate_off / rate_on.max(1e-12)).max(0.0);
+    println!(
+        "predict S={s_max:<4} bank off {rate_off:>8.2} beats/s   \
+         warm {rate_on:>8.2} beats/s   speedup {bank_speedup:.2}x   \
+         mask-gen share ~{:.1}%",
+        mask_frac * 100.0
+    );
+    println!(
+        "bank    hits {}  misses {}  hit rate {hit_rate:.3}  \
+         resident {:.1} KiB",
+        st.hits,
+        st.misses,
+        st.resident_bytes as f64 / 1024.0
+    );
+
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("bench_results");
+    std::fs::create_dir_all(&dir).expect("create bench_results/");
+    let line = format!(
+        "{{\"scenario\":\"maskgen\",\"arch\":\"{}\",\"iters\":{iters},\
+         \"s\":{s_max},\"bitfill_mbits_per_s\":{bit_rate:.1},\
+         \"wordfill_mbits_per_s\":{word_rate:.1},\
+         \"wordfill_speedup\":{fill_speedup:.3},\
+         \"mask_checksum\":\"{ck_word:#018x}\",\"bits_ok\":true,\
+         \"bank\":{{\"off_beats_per_s\":{rate_off:.3},\
+         \"on_beats_per_s\":{rate_on:.3},\"speedup\":{bank_speedup:.3},\
+         \"hits\":{},\"misses\":{},\"hit_rate\":{hit_rate:.4},\
+         \"resident_bytes\":{}}},\"mask_cost_frac\":{mask_frac:.4},\
+         \"proc\":{}}}",
+        cfg.name(),
+        st.hits,
+        st.misses,
+        st.resident_bytes,
+        proc_json()
+    );
+    let path = dir.join("maskgen.json");
+    std::fs::write(&path, format!("{line}\n")).expect("write summary");
+    println!("  -> {}", path.display());
+    let committed =
+        Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_maskgen.json");
+    std::fs::write(&committed, format!("{line}\n"))
+        .expect("write BENCH_maskgen.json");
     println!("  -> {}", committed.display());
 }
 

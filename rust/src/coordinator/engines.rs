@@ -5,6 +5,7 @@
 //! latency).
 
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Instant;
 
 use crate::config::{ArchConfig, Task};
@@ -13,7 +14,7 @@ use crate::fpga::accel::{Accelerator, McOutput};
 use crate::fpga::pipeline::PipelineSim;
 use crate::hwmodel::resource::ReuseFactors;
 use crate::hwmodel::{GpuModel, ZC706};
-use crate::kernels::KernelBackend;
+use crate::kernels::{KernelBackend, MaskBank};
 use crate::nn::model::{MaskBlock, Masks, Model};
 use crate::rng::Rng;
 use crate::runtime::{HostValue, Runtime};
@@ -198,6 +199,17 @@ impl Engine {
         if let EngineKind::FpgaSim { accel, .. } = &mut self.kind {
             accel.set_kernel_backend(backend);
             accel.scalar_reference = backend == KernelBackend::Scalar;
+        }
+    }
+
+    /// Attach a shared seed-indexed mask bank to an FPGA-sim engine
+    /// (`repro serve --mask-bank-mb`, `docs/kernels.md` §Mask bank).
+    /// Output bits never change; repeat mask seeds become row copies
+    /// instead of LFSR streams. No-op for float backends (their mask
+    /// path is `MaskBlock`, not the engine bitplanes).
+    pub fn set_mask_bank(&mut self, bank: Option<Arc<MaskBank>>) {
+        if let EngineKind::FpgaSim { accel, .. } = &mut self.kind {
+            accel.set_mask_bank(bank);
         }
     }
 
@@ -737,7 +749,11 @@ mod tests {
                 .collect()
         };
         let want = run(KernelBackend::Blocked);
-        for backend in [KernelBackend::Scalar, KernelBackend::Simd] {
+        for backend in [
+            KernelBackend::Scalar,
+            KernelBackend::Simd,
+            KernelBackend::Parallel,
+        ] {
             assert_eq!(
                 run(backend),
                 want,
@@ -745,6 +761,41 @@ mod tests {
                 backend.name()
             );
         }
+    }
+
+    /// A shared mask bank attached at the engine level changes no bits
+    /// and converts the second identical batch into hits.
+    #[test]
+    fn engine_mask_bank_is_transparent_and_hits_when_warm() {
+        let (cfg, model) = tiny_model("YY");
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let beat = beat20();
+        let reqs = [ShardRequest {
+            beat: &beat,
+            req_seed: 7,
+            start: 0,
+            count: 4,
+        }];
+        let mut plain = Engine::fpga(&cfg, &model, reuse, 8, 9);
+        let want: Vec<Vec<f32>> = plain
+            .infer_samples_batch(&reqs, 1)
+            .into_iter()
+            .map(|r| r.unwrap().samples)
+            .collect();
+        let bank = Arc::new(MaskBank::new(1 << 20));
+        let mut banked = Engine::fpga(&cfg, &model, reuse, 8, 9);
+        banked.set_mask_bank(Some(bank.clone()));
+        for round in 0..2 {
+            let got: Vec<Vec<f32>> = banked
+                .infer_samples_batch(&reqs, 1)
+                .into_iter()
+                .map(|r| r.unwrap().samples)
+                .collect();
+            assert_eq!(got, want, "round {round}: banked engine drifted");
+        }
+        let s = bank.stats();
+        assert!(s.hits > 0, "warm round must hit");
+        assert!(s.misses > 0 && s.resident_bytes > 0);
     }
 
     #[test]

@@ -47,6 +47,7 @@ use super::engines::{
 use super::router::{Router, RouterPolicy};
 use super::server::ServeSummary;
 use super::stats::LatencyStats;
+use crate::kernels::MaskBankStats;
 use crate::metrics::pooled_mean_std;
 use crate::obs::{
     window_index, EngineLoad, LogHistogram, McCounters, ObsConfig,
@@ -231,6 +232,11 @@ pub struct FleetObs {
     /// Trace events lost to write failures (0 without `--trace`; a
     /// non-zero value means the trace file is incomplete).
     pub trace_dropped: u64,
+    /// Mask-bank counters at join time (`--mask-bank-mb`). The bank is
+    /// owned by the CLI and shared into the engines via
+    /// [`Engine::set_mask_bank`]; the fleet never sees it, so this is
+    /// `None` unless the caller stamps the stats after `join`.
+    pub mask_bank: Option<MaskBankStats>,
 }
 
 /// Aggregate + per-engine serving stats, returned by [`Fleet::join`].
@@ -794,6 +800,7 @@ impl Fleet {
                     .as_ref()
                     .map(|t| t.dropped())
                     .unwrap_or(0),
+                mask_bank: None,
             },
             timeline,
         }
@@ -1324,6 +1331,39 @@ mod tests {
 
     fn beat() -> Vec<f32> {
         (0..20).map(|i| (i as f32 * 0.3).sin()).collect()
+    }
+
+    /// Like [`fpga_factories`], but every engine shares one mask bank
+    /// (the `repro serve --mask-bank-mb` wiring).
+    fn banked_factories(
+        n: usize,
+        s: usize,
+        seed: u64,
+        bank: &Arc<crate::kernels::MaskBank>,
+    ) -> Vec<Box<dyn FnOnce() -> Engine + Send + 'static>> {
+        let cfg = tiny_cfg();
+        let params = Params::init(&cfg, &mut Rng::new(0));
+        (0..n)
+            .map(|_| {
+                let c = cfg.clone();
+                let p = params.clone();
+                let b = Arc::clone(bank);
+                let f: Box<dyn FnOnce() -> Engine + Send + 'static> =
+                    Box::new(move || {
+                        let model = Model::new(c.clone(), p);
+                        let mut e = Engine::fpga(
+                            &c,
+                            &model,
+                            ReuseFactors::new(2, 1, 1),
+                            s,
+                            seed,
+                        );
+                        e.set_mask_bank(Some(b));
+                        e
+                    });
+                f
+            })
+            .collect()
     }
 
     #[test]
@@ -1967,6 +2007,96 @@ mod tests {
             "one queue-stage sample per work item"
         );
         assert_eq!(summary.obs.trace_dropped, 0, "no trace, no drops");
+    }
+
+    /// ISSUE 8 fleet-level acceptance: the same request (same request
+    /// seed — fresh fleets restart ids at 0) served with the bank cold,
+    /// then warm, then split across a 3-engine MC-shard fleet, returns
+    /// bit-identical samples and predictions to a bank-off fleet, with
+    /// all-miss on the cold pass and all-hit on the warm passes. The
+    /// adaptive path's ordered reduction gives the bitwise comparison
+    /// across engine counts (the fixed path merges shard moments in
+    /// arrival order).
+    #[test]
+    fn mask_bank_cold_warm_and_shard_splits_are_bit_identical() {
+        use crate::kernels::MaskBank;
+        let s_max = 8;
+        let design_seed = 9;
+        // target_ci 0 forces the full budget: every k in 0..8 is drawn
+        // exactly once, whatever the round/shard split.
+        let mc = AdaptiveMcConfig {
+            s_min: 3,
+            s_max,
+            target_ci: 0.0,
+            z: 1.96,
+            chunk: 3,
+        };
+        let run = |factories: Vec<
+            Box<dyn FnOnce() -> Engine + Send + 'static>,
+        >,
+                   router: RouterPolicy| {
+            let engines = factories.len();
+            let mut fleet = Fleet::start(
+                FleetConfig {
+                    engines,
+                    router,
+                    samples: s_max,
+                    ..FleetConfig::default()
+                },
+                factories,
+            );
+            let t = fleet.submit_adaptive(beat(), &mc).unwrap();
+            let resp = fleet.wait_adaptive(t).expect("adaptive response");
+            fleet.join();
+            assert_eq!(resp.s_used, s_max);
+            (resp.samples, resp.prediction)
+        };
+
+        let (base_samples, base_pred) = run(
+            fpga_factories(1, s_max, design_seed),
+            RouterPolicy::RoundRobin,
+        );
+
+        // tiny_cfg has one Bayesian layer: one bank key per sample lane.
+        let bank = Arc::new(MaskBank::new(1 << 20));
+        let (cold_samples, cold_pred) = run(
+            banked_factories(1, s_max, design_seed, &bank),
+            RouterPolicy::RoundRobin,
+        );
+        assert_eq!(cold_samples, base_samples, "cold bank changed bits");
+        assert_eq!(cold_pred.mean, base_pred.mean);
+        assert_eq!(cold_pred.std, base_pred.std);
+        let cold = bank.stats();
+        assert_eq!(cold.hits, 0, "fresh bank cannot hit");
+        assert_eq!(cold.misses, s_max as u64, "one miss per sample lane");
+        assert!(cold.resident_bytes > 0);
+
+        // Same request seed again (fresh fleet, id restarts at 0):
+        // every lane's masks come out of the bank.
+        let (warm_samples, _) = run(
+            banked_factories(1, s_max, design_seed, &bank),
+            RouterPolicy::RoundRobin,
+        );
+        assert_eq!(warm_samples, base_samples, "warm bank changed bits");
+        let warm = bank.stats();
+        assert_eq!(warm.hits, s_max as u64, "warm pass must be all-hit");
+        assert_eq!(warm.misses, cold.misses, "warm pass adds no misses");
+
+        // 1-vs-3-engine MC-shard split over the warm bank: the shards
+        // cover the same 8 sample lanes, so same bits and 8 more hits.
+        let (shard_samples, shard_pred) = run(
+            banked_factories(3, s_max, design_seed, &bank),
+            RouterPolicy::McShard,
+        );
+        assert_eq!(
+            shard_samples, base_samples,
+            "3-engine MC-shard split over the bank changed bits"
+        );
+        assert_eq!(shard_pred.mean, base_pred.mean);
+        assert_eq!(shard_pred.std, base_pred.std);
+        let sharded = bank.stats();
+        assert_eq!(sharded.hits, 2 * s_max as u64);
+        assert_eq!(sharded.misses, cold.misses);
     }
 
     #[test]

@@ -11,10 +11,13 @@
 //! never touches lane data between layers, so the Q6.10 instance is
 //! bit-identical to the pre-refactor accelerator.
 
+use std::sync::Arc;
+
 use super::engine::{DenseEngine, LstmEngine};
 use crate::config::{ArchConfig, Task};
 use crate::fixedpoint::{Fx16, Precision, QFormat};
-use crate::kernels::{self, KernelBackend};
+use crate::kernels::maskbank::MaskKey;
+use crate::kernels::{self, KernelBackend, MaskBank};
 use crate::hwmodel::resource::{ResourceEstimate, ResourceModel, ReuseFactors};
 use crate::lfsr::BernoulliSampler;
 use crate::nn::model::softmax_row;
@@ -123,6 +126,12 @@ pub struct Accelerator {
     /// Base LFSR seed the design was "synthesised" with; the fleet's
     /// seeded prediction path derives per-(request, sample) seeds from it.
     seed: u64,
+    /// Seed-indexed mask bank shared across requests and engine
+    /// workers (`--mask-bank-mb`, `docs/kernels.md` §Mask bank).
+    /// `None` (the default) regenerates every mask — bit-identical to
+    /// the bank either way; the bank only converts repeat seeds from
+    /// LFSR streams into row copies.
+    mask_bank: Option<Arc<MaskBank>>,
     // Scratch (no allocation in the hot loop).
     beat_q: Vec<Fx16>,
 }
@@ -182,8 +191,16 @@ impl Accelerator {
             scalar_reference: false,
             kernel_backend: kernels::default_backend(),
             seed,
+            mask_bank: None,
             beat_q: Vec::new(),
         }
+    }
+
+    /// Attach (or detach) a shared seed-indexed mask bank. Output bits
+    /// are unchanged in every case — the bank caches exactly the words
+    /// the generator would produce (tested below).
+    pub fn set_mask_bank(&mut self, bank: Option<Arc<MaskBank>>) {
+        self.mask_bank = bank;
     }
 
     /// Switch every engine MVM to a kernel backend. Output bits are
@@ -234,6 +251,44 @@ impl Accelerator {
         {
             if let Some(sampler) = slot {
                 engine.fill_masks_row(r, || sampler.sample() != 0.0);
+            }
+        }
+    }
+
+    /// Seeded, word-level presample for lane `r` — the batched path's
+    /// mask generator. Reseeds the layer samplers exactly like
+    /// `reseed_samplers` + [`Accelerator::presample_masks_row`] and
+    /// fills 64 bits per `keep_word` call instead of bit-by-bit —
+    /// same draw order, same bits, same sampler end state (the
+    /// `lfsr`/`engine` oracle tests pin all three). With a mask bank
+    /// attached, a lane whose per-layer seed was seen before restores
+    /// the cached row words verbatim instead of re-running the LFSRs.
+    fn presample_masks_row_seeded(&mut self, r: usize, sample_seed: u64) {
+        self.reseed_samplers(sample_seed);
+        let bank = self.mask_bank.clone();
+        for (l, (engine, slot)) in self
+            .lstms
+            .iter_mut()
+            .zip(self.samplers.iter_mut())
+            .enumerate()
+        {
+            let Some(sampler) = slot else { continue };
+            let Some(bank) = bank.as_deref() else {
+                engine.fill_masks_row_words(r, |n| sampler.keep_word(n));
+                continue;
+            };
+            let key = MaskKey {
+                layer_seed: sample_seed ^ (l as u64 + 1) * 0x9E37,
+                zx_width: engine.zx.width(),
+                zh_width: engine.zh.width(),
+            };
+            match bank.get(&key) {
+                Some(words) => engine.set_mask_row_words(r, &words),
+                None => {
+                    engine
+                        .fill_masks_row_words(r, |n| sampler.keep_word(n));
+                    bank.insert(key, &engine.mask_row_words(r));
+                }
             }
         }
     }
@@ -469,12 +524,9 @@ impl Accelerator {
         let mut r = 0;
         for (qi, q) in reqs.iter().enumerate() {
             for k in q.start..q.start + q.count {
-                self.reseed_samplers(crate::rng::mix3(
-                    self.seed,
-                    q.req_seed,
-                    k as u64,
-                ));
-                self.presample_masks_row(r);
+                let sample_seed =
+                    crate::rng::mix3(self.seed, q.req_seed, k as u64);
+                self.presample_masks_row_seeded(r, sample_seed);
                 row_beat.push(qi);
                 r += 1;
             }
@@ -949,6 +1001,89 @@ mod tests {
                 "{}: per-sample loop drifted",
                 prec.name()
             );
+        }
+    }
+
+    /// Mask-bank contract at the accelerator level: bank on == bank
+    /// off bit-for-bit, cold and warm; repeat seeds hit; MC-shard
+    /// splits through a shared bank still concatenate to the whole.
+    #[test]
+    fn mask_bank_is_bit_identical_and_hits_on_repeat_seeds() {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.2).cos()).collect();
+
+        let mut plain = Accelerator::new(&cfg, &params, reuse, 9);
+        let want = plain.predict_seeded(&beat, 77, 0, 8);
+
+        let bank = Arc::new(MaskBank::new(4 << 20));
+        let mut banked = Accelerator::new(&cfg, &params, reuse, 9);
+        banked.set_mask_bank(Some(bank.clone()));
+
+        // Cold pass: all misses, identical bits.
+        let cold = banked.predict_seeded(&beat, 77, 0, 8);
+        assert_eq!(cold.samples, want.samples, "cold bank drifted");
+        let s0 = bank.stats();
+        assert_eq!(s0.hits, 0, "distinct (seed, k) lanes cannot hit cold");
+        assert_eq!(s0.misses, 2 * 8, "2 Bayesian layers x 8 lanes");
+        assert!(s0.resident_bytes > 0);
+
+        // Warm pass, same request seed: every lane-layer hits.
+        let warm = banked.predict_seeded(&beat, 77, 0, 8);
+        assert_eq!(warm.samples, want.samples, "warm bank drifted");
+        let s1 = bank.stats();
+        assert_eq!(s1.hits, 2 * 8, "warm pass must hit every lane-layer");
+        assert_eq!(s1.misses, s0.misses, "no new misses when warm");
+
+        // A different request seed misses again and stays correct.
+        let mut plain2 = Accelerator::new(&cfg, &params, reuse, 9);
+        let other = banked.predict_seeded(&beat, 78, 0, 8);
+        assert_eq!(
+            other.samples,
+            plain2.predict_seeded(&beat, 78, 0, 8).samples
+        );
+        assert!(bank.stats().misses > s1.misses);
+
+        // MC-shard invariance through a shared bank: two accelerators
+        // (distinct fleet engines) splitting the warm request's range
+        // reproduce the whole bit-for-bit, hitting the shared bank.
+        let mut e1 = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut e2 = Accelerator::new(&cfg, &params, reuse, 9);
+        e1.set_mask_bank(Some(bank.clone()));
+        e2.set_mask_bank(Some(bank.clone()));
+        let hits_before = bank.stats().hits;
+        let mut cat = e1.predict_seeded(&beat, 77, 0, 3).samples;
+        cat.extend(e2.predict_seeded(&beat, 77, 3, 5).samples);
+        assert_eq!(cat, want.samples, "sharded-through-bank drifted");
+        assert_eq!(
+            bank.stats().hits,
+            hits_before + 2 * 8,
+            "shards reuse the warm rows"
+        );
+    }
+
+    /// The batched word-level presample (with and without a bank) is
+    /// bit-identical to the legacy per-sample scalar loop — the
+    /// cross-path oracle now also covers the word fill.
+    #[test]
+    fn banked_batch_path_matches_scalar_reference_bitwise() {
+        let mut cfg = ArchConfig::new(Task::Anomaly, 8, 1, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(6));
+        let reuse = ReuseFactors::new(2, 1, 1);
+        let beat: Vec<f32> =
+            (0..cfg.seq_len).map(|i| (i as f32 * 0.21).sin()).collect();
+        let mut scalar = Accelerator::new(&cfg, &params, reuse, 11);
+        scalar.scalar_reference = true;
+        let want = scalar.predict_seeded(&beat, 5, 1, 7);
+        let mut banked = Accelerator::new(&cfg, &params, reuse, 11);
+        banked.set_mask_bank(Some(Arc::new(MaskBank::new(1 << 20))));
+        for round in 0..2 {
+            let got = banked.predict_seeded(&beat, 5, 1, 7);
+            assert_eq!(got.samples, want.samples, "round {round}");
         }
     }
 

@@ -361,6 +361,47 @@ impl LstmEngine {
         self.zh.fill_row(r, &mut keep);
     }
 
+    /// Word-level twin of [`LstmEngine::fill_masks_row`]: fill lane
+    /// `r`'s masks 64 bits per call from a word source (`next(n)` =
+    /// the next `n` stream bits, LSB-first — `BernoulliSampler::
+    /// keep_word`). Same draw order and stream-position contract as
+    /// the closure fill — all zx bits then all zh bits, exactly
+    /// `mask_bits()` positions — so the two fills are interchangeable
+    /// bit-for-bit (oracle-tested below).
+    pub fn fill_masks_row_words(
+        &mut self,
+        r: usize,
+        mut next: impl FnMut(u32) -> u64,
+    ) {
+        debug_assert!(r < self.rows);
+        self.zx.fill_row_words(r, &mut next);
+        self.zh.fill_row_words(r, &mut next);
+    }
+
+    /// Snapshot lane `r`'s packed mask words (zx row then zh row, tail
+    /// padding included) — the unit the seed-indexed mask bank caches.
+    pub fn mask_row_words(&self, r: usize) -> Vec<u64> {
+        let mut words =
+            Vec::with_capacity(self.zx.words_per_row() + self.zh.words_per_row());
+        words.extend_from_slice(self.zx.row_words(r));
+        words.extend_from_slice(self.zh.row_words(r));
+        words
+    }
+
+    /// Restore lane `r`'s masks from a [`LstmEngine::mask_row_words`]
+    /// snapshot — the mask-bank hit path. Byte-identical to having
+    /// regenerated the row (the snapshot includes the tail padding).
+    pub fn set_mask_row_words(&mut self, r: usize, words: &[u64]) {
+        let zx_w = self.zx.words_per_row();
+        assert_eq!(
+            words.len(),
+            zx_w + self.zh.words_per_row(),
+            "cached row shape mismatch"
+        );
+        self.zx.copy_row_from_words(r, &words[..zx_w]);
+        self.zh.copy_row_from_words(r, &words[zx_w..]);
+    }
+
     /// Bytes of DX-mask state currently held (16x below the `Fx16`
     /// lane buffers these planes replaced).
     pub fn mask_bytes(&self) -> usize {
@@ -1051,6 +1092,62 @@ mod tests {
             planes.mask_bytes(),
             fx16_bytes
         );
+    }
+
+    /// Word-level mask fill oracle: `fill_masks_row_words` driven by
+    /// `keep_word` lands exactly the bits — and consumes exactly the
+    /// stream positions — of the closure fill driven by `sample()`,
+    /// and a row snapshot restores byte-identically (the mask-bank
+    /// contract end to end at the engine level).
+    #[test]
+    fn fill_masks_row_words_matches_closure_fill_bit_for_bit() {
+        use crate::lfsr::BernoulliSampler;
+        let mut rng = Rng::new(47);
+        let (idim, hdim, rows) = (5, 7, 3);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.3);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.3);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let mut by_bit = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        let mut by_word = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        by_bit.set_rows(rows);
+        by_word.set_rows(rows);
+        let mut s1 = BernoulliSampler::new(91);
+        let mut s2 = BernoulliSampler::new(91);
+        for r in 0..rows {
+            by_bit.fill_masks_row(r, || s1.sample() != 0.0);
+            by_word.fill_masks_row_words(r, |n| s2.keep_word(n));
+        }
+        assert_eq!(s1.cycles(), s2.cycles(), "same stream positions");
+        for r in 0..rows {
+            for j in 0..GATES * idim {
+                assert_eq!(by_bit.zx.get(r, j), by_word.zx.get(r, j));
+            }
+            for j in 0..GATES * hdim {
+                assert_eq!(by_bit.zh.get(r, j), by_word.zh.get(r, j));
+            }
+        }
+        // Row snapshot -> restore is byte-identical (bank hit path).
+        let snap = by_word.mask_row_words(1);
+        let mut restored = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        restored.set_rows(rows);
+        restored.set_mask_row_words(2, &snap);
+        for j in 0..GATES * idim {
+            assert_eq!(restored.zx.get(2, j), by_word.zx.get(1, j));
+        }
+        for j in 0..GATES * hdim {
+            assert_eq!(restored.zh.get(2, j), by_word.zh.get(1, j));
+        }
+        assert_eq!(restored.mask_row_words(2), snap);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn set_mask_row_words_rejects_wrong_shape() {
+        let wx = Tensor::zeros(&[GATES, 3, 4]);
+        let wh = Tensor::zeros(&[GATES, 4, 4]);
+        let b = Tensor::zeros(&[GATES, 4]);
+        let mut e = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        e.set_mask_row_words(0, &[0u64; 7]);
     }
 
     #[test]

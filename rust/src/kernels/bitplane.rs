@@ -89,6 +89,64 @@ impl BitPlanes {
         }
     }
 
+    /// Fill row `r` from a word source in **ascending element order**,
+    /// 64 bits per call instead of one: `next(n)` must return the next
+    /// `n` bits of the stream, LSB-first (bit 0 = the earliest draw).
+    /// The last call receives the row's tail width, so a sampler
+    /// driving it consumes exactly `width` stream positions — the same
+    /// contract as [`BitPlanes::fill_row`], and like it, bits at and
+    /// beyond `width` in the tail word are left untouched.
+    pub fn fill_row_words(
+        &mut self,
+        r: usize,
+        mut next: impl FnMut(u32) -> u64,
+    ) {
+        debug_assert!(r < self.rows);
+        let mut w = r * self.words_per_row;
+        let mut remaining = self.width;
+        while remaining > 0 {
+            let n = remaining.min(64) as u32;
+            let bits = next(n);
+            if n == 64 {
+                self.words[w] = bits;
+            } else {
+                let mask = (1u64 << n) - 1;
+                self.words[w] = (self.words[w] & !mask) | (bits & mask);
+            }
+            remaining -= n as usize;
+            w += 1;
+        }
+    }
+
+    /// The raw words backing row `r`, tail bits beyond `width`
+    /// included — what the seed-indexed mask bank caches verbatim
+    /// (the tail bits are the all-ones padding [`BitPlanes::ones`]
+    /// laid down, so a cached row restores byte-identically).
+    pub fn row_words(&self, r: usize) -> &[u64] {
+        debug_assert!(r < self.rows);
+        let base = r * self.words_per_row;
+        &self.words[base..base + self.words_per_row]
+    }
+
+    /// Overwrite row `r` with words captured by [`BitPlanes::row_words`]
+    /// from an identically-shaped plane — the mask-bank hit path.
+    pub fn copy_row_from_words(&mut self, r: usize, words: &[u64]) {
+        debug_assert!(r < self.rows);
+        assert_eq!(
+            words.len(),
+            self.words_per_row,
+            "cached row shape mismatch"
+        );
+        let base = r * self.words_per_row;
+        self.words[base..base + self.words_per_row]
+            .copy_from_slice(words);
+    }
+
+    /// Words per row (the cached-row granularity of the mask bank).
+    pub fn words_per_row(&self) -> usize {
+        self.words_per_row
+    }
+
     /// Mask bytes actually stored (the 16x-vs-`Fx16` claim is
     /// `bytes() * 16 ~ rows * width * 2`).
     pub fn bytes(&self) -> usize {
@@ -170,6 +228,77 @@ mod tests {
         }
         // Row 0 untouched.
         assert!((0..9).all(|i| p.get(0, i)));
+    }
+
+    /// Word fill == bit fill for the same stream, at widths that
+    /// exercise sub-word rows, exact multiples and straddling tails.
+    #[test]
+    fn fill_row_words_matches_fill_row_bit_for_bit() {
+        for width in [1usize, 9, 63, 64, 65, 128, 130, 200] {
+            // A deterministic pseudo-stream shared by both fills.
+            let stream = |i: usize| (i * 7 + i / 5) % 3 != 0;
+            let mut by_bit = BitPlanes::ones(3, width);
+            let mut n = 0usize;
+            by_bit.fill_row(1, || {
+                let k = stream(n);
+                n += 1;
+                k
+            });
+            let mut by_word = BitPlanes::ones(3, width);
+            let mut pos = 0usize;
+            let mut asked = Vec::new();
+            by_word.fill_row_words(1, |n| {
+                asked.push(n);
+                let mut w = 0u64;
+                for j in 0..n {
+                    w |= (stream(pos + j as usize) as u64) << j;
+                }
+                pos += n as usize;
+                w
+            });
+            assert_eq!(pos, width, "exactly width stream positions");
+            assert_eq!(
+                asked.iter().map(|&n| n as usize).sum::<usize>(),
+                width
+            );
+            for i in 0..width {
+                assert_eq!(
+                    by_word.get(1, i),
+                    by_bit.get(1, i),
+                    "width {width} bit {i}"
+                );
+            }
+            // Other rows and the tail padding stay all-ones.
+            assert_eq!(by_word.words, by_bit.words, "words incl. padding");
+            assert!((0..width).all(|i| by_word.get(0, i)));
+        }
+    }
+
+    #[test]
+    fn row_words_roundtrip_through_copy() {
+        let mut src = BitPlanes::ones(2, 130);
+        src.fill_row(1, {
+            let mut n = 0u32;
+            move || {
+                n += 1;
+                n % 5 != 0
+            }
+        });
+        assert_eq!(src.words_per_row(), 3);
+        let cached: Vec<u64> = src.row_words(1).to_vec();
+        let mut dst = BitPlanes::ones(4, 130);
+        dst.copy_row_from_words(2, &cached);
+        for i in 0..130 {
+            assert_eq!(dst.get(2, i), src.get(1, i), "bit {i}");
+        }
+        assert!((0..130).all(|i| dst.get(0, i)), "other rows untouched");
+    }
+
+    #[test]
+    #[should_panic(expected = "shape mismatch")]
+    fn copy_row_rejects_wrong_shape() {
+        let mut p = BitPlanes::ones(2, 130);
+        p.copy_row_from_words(0, &[0u64; 2]);
     }
 
     #[test]

@@ -1,0 +1,355 @@
+//! Seed-indexed mask bank: a sharded, byte-budgeted cache of
+//! precomputed bitplane mask rows (`docs/kernels.md` §Mask bank).
+//!
+//! VIBNN (arXiv:1802.00822) measures RNG as a first-order cost in
+//! Bayesian accelerators, and this crate's per-(request, sample)
+//! dropout masks are pure functions of a `mix3`-derived seed and the
+//! layer shape — regenerating them is pure waste whenever a seed
+//! recurs. Seeds *do* recur in production shapes of this workload:
+//! adaptive-MC continuation rounds re-touch early sample indices,
+//! loadgen scenario replays re-issue whole request streams, and
+//! calibration sweeps pin seeds on purpose. The bank memoises the
+//! packed row words ([`super::BitPlanes::row_words`]) keyed by
+//! `(layer seed, zx width, zh width)`, so a repeat seed costs one hash
+//! lookup and a row copy instead of a full LFSR stream.
+//!
+//! Design points:
+//!
+//! * **Sharded**: the map is split across [`SHARDS`] independently
+//!   locked shards (key-hash selected), so engine workers hitting the
+//!   bank concurrently contend only 1/[`SHARDS`] of the time.
+//! * **Byte-budgeted with CLOCK eviction**: each shard owns an equal
+//!   slice of the byte budget. Inserting past the budget sweeps a
+//!   CLOCK hand over the shard's ring — entries touched since the
+//!   last sweep get a second chance (their reference bit is cleared),
+//!   untouched ones are evicted. An entry larger than a whole shard's
+//!   budget is simply not cached.
+//! * **Correctness by construction**: the bank stores the *exact*
+//!   words the generator produced (tail padding included), and a hit
+//!   restores them verbatim ([`super::BitPlanes::copy_row_from_words`])
+//!   — so bank on vs off is bit-identical by definition, which
+//!   `fpga::accel` and `coordinator::fleet` assert end to end.
+//! * **Observable**: hit/miss/eviction/resident-bytes counters are
+//!   lock-free atomics, snapshotted by [`MaskBank::stats`] into the
+//!   `obs` export (`docs/observability.md`).
+
+use std::collections::HashMap;
+use std::hash::{Hash, Hasher};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Shard count: enough to keep a handful of engine workers off each
+/// other's locks, small enough that a few-MB budget still gives each
+/// shard a useful slice.
+const SHARDS: usize = 8;
+
+/// Bookkeeping bytes charged per entry on top of the row words (map
+/// node, key, ring slot — an estimate, deliberately on the high side).
+const ENTRY_OVERHEAD: usize = 64;
+
+/// Cache key: the per-(request, sample, layer) mask seed plus the
+/// layer's two mask-plane widths. Widths are part of the key so a
+/// seed collision across differently-shaped layers (or architectures
+/// sharing a bank) can never alias.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct MaskKey {
+    /// The layer-salted sampler seed the mask stream is derived from.
+    pub layer_seed: u64,
+    /// Width in bits of the input-side (`zx`) mask row.
+    pub zx_width: usize,
+    /// Width in bits of the recurrent-side (`zh`) mask row.
+    pub zh_width: usize,
+}
+
+struct Entry {
+    words: Arc<[u64]>,
+    /// CLOCK reference bit: set on every hit, cleared (second chance)
+    /// when the hand sweeps past.
+    referenced: bool,
+}
+
+#[derive(Default)]
+struct Shard {
+    entries: HashMap<MaskKey, Entry>,
+    /// The CLOCK ring: insertion order, swept circularly by `hand`.
+    ring: Vec<MaskKey>,
+    hand: usize,
+    bytes: usize,
+}
+
+impl Shard {
+    fn entry_cost(words: &[u64]) -> usize {
+        words.len() * 8 + ENTRY_OVERHEAD
+    }
+
+    /// Evict until `need` bytes fit in `budget`, CLOCK order. Returns
+    /// (evictions, bytes freed).
+    fn make_room(&mut self, need: usize, budget: usize) -> (u64, usize) {
+        let mut evicted = 0u64;
+        let mut freed = 0usize;
+        // Each lap clears every reference bit, so the sweep terminates:
+        // after one full lap every survivor is unreferenced and the
+        // next pass removes entries until the budget fits.
+        while self.bytes + need > budget && !self.ring.is_empty() {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            let key = self.ring[self.hand];
+            let e = self.entries.get_mut(&key).expect("ring/map desync");
+            if e.referenced {
+                e.referenced = false;
+                self.hand += 1;
+            } else {
+                let cost = Self::entry_cost(&e.words);
+                self.entries.remove(&key);
+                self.ring.swap_remove(self.hand);
+                self.bytes -= cost;
+                freed += cost;
+                evicted += 1;
+                // swap_remove moved the tail key under the hand; keep
+                // the hand in place so it is inspected next.
+            }
+        }
+        (evicted, freed)
+    }
+}
+
+/// Point-in-time counter snapshot, exported through `obs`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct MaskBankStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+    pub capacity_bytes: u64,
+}
+
+/// The bank itself. Cheap to share: callers hold it as
+/// `Arc<MaskBank>` and clone the `Arc` into each engine worker.
+pub struct MaskBank {
+    shards: Vec<Mutex<Shard>>,
+    shard_budget: usize,
+    capacity_bytes: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    resident_bytes: AtomicU64,
+}
+
+impl std::fmt::Debug for MaskBank {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("MaskBank")
+            .field("capacity_bytes", &s.capacity_bytes)
+            .field("resident_bytes", &s.resident_bytes)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("evictions", &s.evictions)
+            .finish()
+    }
+}
+
+impl MaskBank {
+    /// A bank holding at most `capacity_bytes` of cached rows
+    /// (`--mask-bank-mb` scaled to bytes by the CLI).
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self::with_shards(capacity_bytes, SHARDS)
+    }
+
+    /// Shard-count override — single-shard banks make eviction-order
+    /// tests deterministic.
+    pub fn with_shards(capacity_bytes: usize, shards: usize) -> Self {
+        let shards = shards.max(1);
+        Self {
+            shards: (0..shards).map(|_| Mutex::new(Shard::default())).collect(),
+            shard_budget: capacity_bytes / shards,
+            capacity_bytes,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            resident_bytes: AtomicU64::new(0),
+        }
+    }
+
+    fn shard(&self, key: &MaskKey) -> &Mutex<Shard> {
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        key.hash(&mut h);
+        &self.shards[(h.finish() as usize) % self.shards.len()]
+    }
+
+    /// Look up the cached row words for `key`. A hit marks the entry
+    /// referenced (CLOCK second chance) and counts toward the hit
+    /// counter; a miss only counts.
+    pub fn get(&self, key: &MaskKey) -> Option<Arc<[u64]>> {
+        let mut shard = self.shard(key).lock().expect("mask bank poisoned");
+        match shard.entries.get_mut(key) {
+            Some(e) => {
+                e.referenced = true;
+                let words = e.words.clone();
+                drop(shard);
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                Some(words)
+            }
+            None => {
+                drop(shard);
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    }
+
+    /// Cache freshly generated row words under `key`, evicting CLOCK
+    /// victims if the shard is over budget. Oversized entries (bigger
+    /// than a whole shard's budget) are dropped silently — the caller
+    /// already has the words it needs. Re-inserting an existing key is
+    /// a no-op (first generation wins; the words are deterministic in
+    /// the key anyway).
+    pub fn insert(&self, key: MaskKey, words: &[u64]) {
+        let cost = Shard::entry_cost(words);
+        if cost > self.shard_budget {
+            return;
+        }
+        let mut shard = self.shard(&key).lock().expect("mask bank poisoned");
+        if shard.entries.contains_key(&key) {
+            return;
+        }
+        let (evicted, freed) = shard.make_room(cost, self.shard_budget);
+        shard.entries.insert(
+            key,
+            Entry { words: Arc::from(words), referenced: false },
+        );
+        shard.ring.push(key);
+        shard.bytes += cost;
+        drop(shard);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+            self.resident_bytes
+                .fetch_sub(freed as u64, Ordering::Relaxed);
+        }
+        self.resident_bytes.fetch_add(cost as u64, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> MaskBankStats {
+        MaskBankStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            resident_bytes: self.resident_bytes.load(Ordering::Relaxed),
+            capacity_bytes: self.capacity_bytes as u64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(seed: u64) -> MaskKey {
+        MaskKey { layer_seed: seed, zx_width: 64, zh_width: 32 }
+    }
+
+    #[test]
+    fn miss_then_hit_roundtrips_the_words() {
+        let bank = MaskBank::new(1 << 20);
+        let k = key(42);
+        assert!(bank.get(&k).is_none());
+        let words = [0xDEAD_BEEF_u64, u64::MAX, 0];
+        bank.insert(k, &words);
+        let got = bank.get(&k).expect("hit after insert");
+        assert_eq!(&got[..], &words[..]);
+        let s = bank.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 0));
+        assert!(s.resident_bytes > 0 && s.resident_bytes <= s.capacity_bytes);
+    }
+
+    #[test]
+    fn shape_is_part_of_the_key() {
+        let bank = MaskBank::new(1 << 20);
+        let a = MaskKey { layer_seed: 7, zx_width: 64, zh_width: 32 };
+        let b = MaskKey { layer_seed: 7, zx_width: 128, zh_width: 32 };
+        bank.insert(a, &[1, 2]);
+        assert!(bank.get(&b).is_none(), "different shape, same seed");
+        assert_eq!(&bank.get(&a).unwrap()[..], &[1, 2]);
+    }
+
+    #[test]
+    fn eviction_keeps_resident_bytes_under_budget() {
+        // Single shard so the budget math is exact.
+        let budget = 4 * (8 * 8 + ENTRY_OVERHEAD); // room for ~4 entries
+        let bank = MaskBank::with_shards(budget, 1);
+        for s in 0..32u64 {
+            bank.insert(key(s), &[s; 8]);
+        }
+        let st = bank.stats();
+        assert!(st.evictions > 0, "budget overflow must evict");
+        assert!(
+            st.resident_bytes <= budget as u64,
+            "resident {} > budget {budget}",
+            st.resident_bytes
+        );
+        // The bank still serves hits for whatever survived.
+        let survivors = (0..32u64).filter(|&s| bank.get(&key(s)).is_some());
+        assert_eq!(survivors.count(), 4);
+    }
+
+    #[test]
+    fn clock_gives_referenced_entries_a_second_chance() {
+        let budget = 2 * (8 * 4 + ENTRY_OVERHEAD); // exactly 2 entries
+        let bank = MaskBank::with_shards(budget, 1);
+        bank.insert(key(1), &[1; 4]);
+        bank.insert(key(2), &[2; 4]);
+        // Touch key 1: its reference bit protects it from the next
+        // sweep; key 2 (untouched) is the victim.
+        assert!(bank.get(&key(1)).is_some());
+        bank.insert(key(3), &[3; 4]);
+        assert!(bank.get(&key(1)).is_some(), "referenced entry survives");
+        assert!(bank.get(&key(2)).is_none(), "unreferenced entry evicted");
+        assert!(bank.get(&key(3)).is_some(), "new entry resident");
+        assert_eq!(bank.stats().evictions, 1);
+    }
+
+    #[test]
+    fn oversized_entries_are_not_cached() {
+        let bank = MaskBank::with_shards(64, 1);
+        bank.insert(key(9), &[0u64; 1024]); // way over budget
+        assert!(bank.get(&key(9)).is_none());
+        assert_eq!(bank.stats().resident_bytes, 0);
+        assert_eq!(bank.stats().evictions, 0);
+    }
+
+    #[test]
+    fn reinsert_is_a_noop() {
+        let bank = MaskBank::new(1 << 16);
+        bank.insert(key(5), &[10, 11]);
+        let before = bank.stats().resident_bytes;
+        bank.insert(key(5), &[99, 99]); // same key: first write wins
+        assert_eq!(bank.stats().resident_bytes, before);
+        assert_eq!(&bank.get(&key(5)).unwrap()[..], &[10, 11]);
+    }
+
+    #[test]
+    fn concurrent_access_is_consistent() {
+        let bank = Arc::new(MaskBank::new(1 << 20));
+        let handles: Vec<_> = (0..4)
+            .map(|t| {
+                let bank = bank.clone();
+                std::thread::spawn(move || {
+                    for s in 0..64u64 {
+                        let k = key(s);
+                        match bank.get(&k) {
+                            Some(w) => assert_eq!(&w[..], &[s; 6]),
+                            None => bank.insert(k, &[s; 6]),
+                        }
+                        let _ = t;
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        for s in 0..64u64 {
+            assert_eq!(&bank.get(&key(s)).unwrap()[..], &[s; 6]);
+        }
+    }
+}

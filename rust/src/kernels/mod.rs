@@ -22,6 +22,10 @@
 //! * [`SimdKernel`] — the blocked schedule with the inner `out_dim`
 //!   loop tiled into fixed-width lanes ([`simd::LANES`]) the compiler
 //!   autovectorizes (stable Rust, no intrinsics, no new deps).
+//! * [`ParallelKernel`] — the blocked schedule with the sample rows
+//!   partitioned across a small persistent thread pool ([`parallel`]);
+//!   each chunk delegates to [`BlockedKernel`], so the per-element
+//!   term order — and therefore the bits — cannot diverge.
 //!
 //! The backend is selected at runtime through the [`KernelBackend`]
 //! registry: process-wide via `REPRO_KERNEL` / [`set_default_backend`]
@@ -68,13 +72,17 @@
 
 pub mod bitplane;
 pub mod blocked;
+pub mod maskbank;
 pub mod packed;
+pub mod parallel;
 pub mod scalar;
 pub mod simd;
 
 pub use bitplane::{BitLanes, BitPlanes};
 pub use blocked::BlockedKernel;
+pub use maskbank::{MaskBank, MaskBankStats};
 pub use packed::{PackedWeights, WeightElem};
+pub use parallel::ParallelKernel;
 pub use scalar::ScalarKernel;
 pub use simd::SimdKernel;
 
@@ -98,17 +106,25 @@ pub enum KernelBackend {
     Blocked = 1,
     /// Blocked schedule + fixed-width autovectorized lanes.
     Simd = 2,
+    /// Blocked schedule with sample rows partitioned across a small
+    /// persistent thread pool (stable Rust, zero deps).
+    Parallel = 3,
 }
 
 impl KernelBackend {
-    pub const ALL: [KernelBackend; 3] =
-        [KernelBackend::Scalar, KernelBackend::Blocked, KernelBackend::Simd];
+    pub const ALL: [KernelBackend; 4] = [
+        KernelBackend::Scalar,
+        KernelBackend::Blocked,
+        KernelBackend::Simd,
+        KernelBackend::Parallel,
+    ];
 
     pub fn name(self) -> &'static str {
         match self {
             KernelBackend::Scalar => "scalar",
             KernelBackend::Blocked => "blocked",
             KernelBackend::Simd => "simd",
+            KernelBackend::Parallel => "parallel",
         }
     }
 
@@ -118,8 +134,10 @@ impl KernelBackend {
             "scalar" => Ok(KernelBackend::Scalar),
             "blocked" => Ok(KernelBackend::Blocked),
             "simd" => Ok(KernelBackend::Simd),
+            "parallel" => Ok(KernelBackend::Parallel),
             other => Err(format!(
-                "unknown kernel backend {other:?} (scalar | blocked | simd)"
+                "unknown kernel backend {other:?} \
+                 (scalar | blocked | simd | parallel)"
             )),
         }
     }
@@ -130,10 +148,13 @@ impl KernelBackend {
         static BLOCKED: BlockedKernel =
             BlockedKernel { s_block: DEFAULT_S_BLOCK };
         static SIMD: SimdKernel = SimdKernel { s_block: DEFAULT_S_BLOCK };
+        static PARALLEL: ParallelKernel =
+            ParallelKernel { s_block: DEFAULT_S_BLOCK };
         match self {
             KernelBackend::Scalar => &SCALAR,
             KernelBackend::Blocked => &BLOCKED,
             KernelBackend::Simd => &SIMD,
+            KernelBackend::Parallel => &PARALLEL,
         }
     }
 
@@ -141,6 +162,7 @@ impl KernelBackend {
         match v {
             0 => KernelBackend::Scalar,
             2 => KernelBackend::Simd,
+            3 => KernelBackend::Parallel,
             _ => KernelBackend::Blocked,
         }
     }
@@ -198,12 +220,29 @@ pub enum MaskRef<'a> {
     Bits(BitLanes<'a>),
 }
 
-impl MaskRef<'_> {
+impl<'a> MaskRef<'a> {
     #[inline(always)]
     pub fn keep(&self, r: usize, i: usize) -> bool {
         match self {
             MaskRef::Lanes(m, stride) => m[r * stride + i].0 != 0,
             MaskRef::Bits(b) => b.keep(r, i),
+        }
+    }
+
+    /// The same mask shifted down `r0` rows: element `(r, i)` of the
+    /// result is element `(r0 + r, i)` of the original. This is how the
+    /// parallel backend hands each row chunk a correctly-offset view.
+    #[inline]
+    pub(crate) fn offset_rows(&self, r0: usize) -> MaskRef<'a> {
+        match *self {
+            MaskRef::Lanes(m, stride) => {
+                MaskRef::Lanes(&m[r0 * stride..], stride)
+            }
+            MaskRef::Bits(b) => MaskRef::Bits(BitLanes {
+                words: b.words,
+                base: b.base + r0 * b.stride,
+                stride: b.stride,
+            }),
         }
     }
 
@@ -478,9 +517,10 @@ mod tests {
             let out_dim = 1 + rng.below(24);
             let rows = 1 + rng.below(12);
             let s_block = 1 + rng.below(rows + 4);
-            let backends: [&dyn Kernel; 2] = [
+            let backends: [&dyn Kernel; 3] = [
                 &BlockedKernel { s_block },
                 &SimdKernel { s_block },
+                &ParallelKernel { s_block },
             ];
             // Padded strides exercise the interleaved-tensor case.
             let x_stride = in_dim + rng.below(3);
@@ -540,9 +580,10 @@ mod tests {
             let out_dim = 1 + rng.below(20);
             let rows = 1 + rng.below(10);
             let s_block = 1 + rng.below(8);
-            let backends: [&dyn Kernel; 2] = [
+            let backends: [&dyn Kernel; 3] = [
                 &BlockedKernel { s_block },
                 &SimdKernel { s_block },
+                &ParallelKernel { s_block },
             ];
             let x_stride = in_dim + rng.below(4);
             let m_stride = in_dim;
@@ -826,9 +867,10 @@ mod tests {
                         .collect()
                 };
                 let want = fin(&acc_s);
-                let others: [&dyn Kernel; 2] = [
+                let others: [&dyn Kernel; 3] = [
                     &BlockedKernel { s_block },
                     &SimdKernel { s_block },
+                    &ParallelKernel { s_block },
                 ];
                 for k in others {
                     let mut acc_b = vec![MacAcc::new(); rows * out_dim];

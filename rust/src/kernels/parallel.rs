@@ -1,0 +1,535 @@
+//! Row-partitioned parallel backend: the blocked schedule fanned out
+//! over a small persistent thread pool (`docs/kernels.md` §Backends).
+//!
+//! The paper's engines scale by replicating gate hardware across MC
+//! sample lanes — every lane runs the same weight stream against its
+//! own sample row. [`ParallelKernel`] is that axis in software: the
+//! `rows` dimension (MC samples x batched beats) is split into
+//! contiguous chunks and each chunk runs the *same* blocked schedule
+//! on its own thread. Because output rows are disjoint across chunks
+//! and each chunk delegates to [`BlockedKernel`] verbatim, every
+//! output element `(r, k)` accumulates exactly the terms it would have
+//! single-threaded, in the same ascending-`i` order — the backend
+//! bit-exactness contract holds trivially, for `i64` fixed-point and
+//! `f32` rounding alike.
+//!
+//! The pool is process-wide and persistent (stable Rust, zero deps):
+//! `available_parallelism - 1` parked workers, capped at 3 so the pool
+//! plus the calling thread never exceeds 4 lanes — serving fleets
+//! already parallelise across engine workers, and the kernel-level
+//! fan-out is meant to soak idle cores on small fleets, not oversubscribe
+//! big ones. Work is dispatched as erased closures over borrowed chunk
+//! slices; the caller blocks on a completion channel before returning,
+//! which is what makes the lifetime erasure in [`run_scoped`] sound.
+//!
+//! Fallbacks: with fewer than [`MIN_ROWS`] rows, a single-lane pool, or
+//! overlapping output rows (`acc_stride < out_dim`, where chunks would
+//! alias), the kernel runs the blocked core inline on the caller — same
+//! bits, no dispatch overhead.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Mutex, OnceLock};
+
+use super::packed::PackedWeights;
+use super::{BlockedKernel, Kernel, MaskRef};
+use crate::fixedpoint::{Fx16, MacAcc};
+
+/// Below this many rows the dispatch overhead (~µs per chunk) dwarfs
+/// the MAC work and the kernel stays inline.
+const MIN_ROWS: usize = 4;
+
+/// Pool workers are capped so pool + caller <= this many lanes.
+const MAX_LANES: usize = 4;
+
+type Job = Box<dyn FnOnce() + Send + 'static>;
+
+struct Pool {
+    /// One channel per parked worker; a `Mutex` per sender keeps the
+    /// pool `Sync` without cloning senders per call.
+    txs: Vec<Mutex<Sender<Job>>>,
+}
+
+impl Pool {
+    fn submit(&self, worker: usize, job: Job) {
+        self.txs[worker % self.txs.len()]
+            .lock()
+            .expect("kernel pool sender poisoned")
+            .send(job)
+            .expect("kernel pool worker exited");
+    }
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| {
+        let workers = std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(2)
+            .saturating_sub(1) // the caller thread is a lane too
+            .clamp(1, MAX_LANES - 1);
+        let txs = (0..workers)
+            .map(|j| {
+                let (tx, rx) = channel::<Job>();
+                std::thread::Builder::new()
+                    .name(format!("repro-kernel-{j}"))
+                    .spawn(move || {
+                        while let Ok(job) = rx.recv() {
+                            job();
+                        }
+                    })
+                    .expect("spawn kernel pool worker");
+                Mutex::new(tx)
+            })
+            .collect();
+        Pool { txs }
+    })
+}
+
+/// Total compute lanes: pool workers + the calling thread.
+pub fn lanes() -> usize {
+    pool().txs.len() + 1
+}
+
+/// Run the tasks concurrently: all but the last on pool workers, the
+/// last inline on the caller, returning only when every task has
+/// finished. That barrier is what lets the tasks borrow the caller's
+/// stack: the `'static` erasure below never outlives this frame.
+fn run_scoped(mut tasks: Vec<Box<dyn FnOnce() + Send + '_>>) {
+    let Some(local) = tasks.pop() else { return };
+    let pending = tasks.len();
+    let (done_tx, done_rx) = channel::<()>();
+    for (c, task) in tasks.into_iter().enumerate() {
+        // SAFETY: the borrows captured by `task` live for the whole of
+        // this function, and this function does not return until the
+        // job signals `done_tx` after running — the erased lifetime is
+        // never exceeded.
+        let task: Job = unsafe {
+            std::mem::transmute::<
+                Box<dyn FnOnce() + Send + '_>,
+                Box<dyn FnOnce() + Send + 'static>,
+            >(task)
+        };
+        let tx = done_tx.clone();
+        pool().submit(c, Box::new(move || {
+            task();
+            let _ = tx.send(());
+        }));
+    }
+    local();
+    for _ in 0..pending {
+        done_rx.recv().expect("kernel pool worker died mid-chunk");
+    }
+}
+
+/// Split `buf` into per-chunk row slices: chunk `c` starts at row
+/// `r0 = c * per` and owns `[r0 * stride ..)` up to the next chunk's
+/// start. Slices are disjoint (`split_at_mut`), so chunks can be
+/// written concurrently.
+fn split_rows<'s, T>(
+    rows: usize,
+    per: usize,
+    stride: usize,
+    buf: &'s mut [T],
+) -> Vec<(usize, usize, &'s mut [T])> {
+    let mut parts = Vec::new();
+    let mut rest = buf;
+    let mut r0 = 0;
+    while r0 < rows {
+        let r1 = (r0 + per).min(rows);
+        if r1 < rows {
+            let tmp = std::mem::take(&mut rest);
+            let (head, tail) = tmp.split_at_mut((r1 - r0) * stride);
+            parts.push((r0, r1 - r0, head));
+            rest = tail;
+        } else {
+            parts.push((r0, r1 - r0, std::mem::take(&mut rest)));
+        }
+        r0 = r1;
+    }
+    parts
+}
+
+/// How many rows each chunk gets for `rows` of work across the pool.
+fn rows_per_chunk(rows: usize) -> usize {
+    rows.div_ceil(lanes().min(rows))
+}
+
+/// The parallel backend: [`BlockedKernel`]'s schedule, row-partitioned.
+#[derive(Debug, Clone, Copy)]
+pub struct ParallelKernel {
+    /// Sample-block size handed through to the per-chunk blocked core.
+    pub s_block: usize,
+}
+
+impl Default for ParallelKernel {
+    fn default() -> Self {
+        Self { s_block: super::DEFAULT_S_BLOCK }
+    }
+}
+
+impl ParallelKernel {
+    #[inline]
+    fn inner(&self) -> BlockedKernel {
+        BlockedKernel { s_block: self.s_block }
+    }
+
+    /// Inline (non-parallel) path: too few rows to amortise dispatch,
+    /// a single-lane pool, or overlapping output rows that chunks
+    /// cannot own disjointly.
+    #[inline]
+    fn go_inline(&self, rows: usize, out_stride: usize, out_dim: usize) -> bool {
+        rows < MIN_ROWS || out_stride < out_dim || lanes() < 2
+    }
+}
+
+impl Kernel for ParallelKernel {
+    fn name(&self) -> &'static str {
+        "parallel"
+    }
+
+    fn mvm_fx(
+        &self,
+        w: &[Fx16],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        let inner = self.inner();
+        if self.go_inline(rows, acc_stride, out_dim) {
+            inner.mvm_fx(
+                w, in_dim, out_dim, rows, x, x_stride, mask, acc, acc_stride,
+            );
+            return;
+        }
+        super::check_bounds_fx(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.as_ref(),
+            acc.len(),
+            acc_stride,
+        );
+        let per = rows_per_chunk(rows);
+        let chunks = split_rows(rows, per, acc_stride, acc);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .into_iter()
+            .map(|(r0, n, acc_c)| {
+                let m = mask.map(|m| m.offset_rows(r0));
+                let xc = &x[r0 * x_stride..];
+                Box::new(move || {
+                    inner.mvm_fx(
+                        w, in_dim, out_dim, n, xc, x_stride, m, acc_c,
+                        acc_stride,
+                    );
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks);
+    }
+
+    fn mvm_fx_packed(
+        &self,
+        w: &PackedWeights,
+        rows: usize,
+        x: &[Fx16],
+        x_stride: usize,
+        mask: Option<MaskRef>,
+        acc: &mut [MacAcc],
+        acc_stride: usize,
+    ) {
+        let inner = self.inner();
+        if self.go_inline(rows, acc_stride, w.out_dim) {
+            inner.mvm_fx_packed(w, rows, x, x_stride, mask, acc, acc_stride);
+            return;
+        }
+        super::check_bounds_fx(
+            w.in_dim * w.out_dim,
+            w.in_dim,
+            w.out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.as_ref(),
+            acc.len(),
+            acc_stride,
+        );
+        let per = rows_per_chunk(rows);
+        let chunks = split_rows(rows, per, acc_stride, acc);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .into_iter()
+            .map(|(r0, n, acc_c)| {
+                let m = mask.map(|m| m.offset_rows(r0));
+                let xc = &x[r0 * x_stride..];
+                Box::new(move || {
+                    inner.mvm_fx_packed(
+                        w, n, xc, x_stride, m, acc_c, acc_stride,
+                    );
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks);
+    }
+
+    fn mvm_f32(
+        &self,
+        w: &[f32],
+        in_dim: usize,
+        out_dim: usize,
+        rows: usize,
+        x: &[f32],
+        x_stride: usize,
+        mask: Option<(&[f32], usize)>,
+        out: &mut [f32],
+        out_stride: usize,
+    ) {
+        let inner = self.inner();
+        if self.go_inline(rows, out_stride, out_dim) {
+            inner.mvm_f32(
+                w, in_dim, out_dim, rows, x, x_stride, mask, out, out_stride,
+            );
+            return;
+        }
+        super::check_bounds_f32(
+            w.len(),
+            in_dim,
+            out_dim,
+            rows,
+            x.len(),
+            x_stride,
+            mask.map(|(m, ms)| (m.len(), ms)),
+            out.len(),
+            out_stride,
+        );
+        let per = rows_per_chunk(rows);
+        let chunks = split_rows(rows, per, out_stride, out);
+        let tasks: Vec<Box<dyn FnOnce() + Send + '_>> = chunks
+            .into_iter()
+            .map(|(r0, n, out_c)| {
+                let m = mask.map(|(m, ms)| (&m[r0 * ms..], ms));
+                let xc = &x[r0 * x_stride..];
+                Box::new(move || {
+                    inner.mvm_f32(
+                        w, in_dim, out_dim, n, xc, x_stride, m, out_c,
+                        out_stride,
+                    );
+                }) as Box<dyn FnOnce() + Send + '_>
+            })
+            .collect();
+        run_scoped(tasks);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{BitPlanes, ScalarKernel};
+    use super::*;
+    use crate::fixedpoint::QFormat;
+    use crate::rng::Rng;
+
+    fn finish_all(acc: &[MacAcc]) -> Vec<i16> {
+        acc.iter().map(|a| a.finish(Fx16::ZERO).0).collect()
+    }
+
+    #[test]
+    fn pool_reports_at_least_two_lanes_or_falls_back() {
+        // On any machine the pool resolves; lanes() in [2, MAX_LANES].
+        let n = lanes();
+        assert!((2..=MAX_LANES).contains(&n), "lanes {n}");
+    }
+
+    #[test]
+    fn split_rows_is_a_disjoint_cover() {
+        let mut buf: Vec<u32> = (0..7 * 5).collect();
+        let parts = split_rows(7, 3, 5, &mut buf);
+        assert_eq!(
+            parts.iter().map(|(r0, n, _)| (*r0, *n)).collect::<Vec<_>>(),
+            vec![(0, 3), (3, 3), (6, 1)]
+        );
+        let total: usize = parts.iter().map(|(_, _, s)| s.len()).sum();
+        assert_eq!(total, 35);
+        assert_eq!(parts[2].2[0], 30, "last chunk starts at row 6");
+    }
+
+    /// Bit-identity vs the scalar reference across random shapes,
+    /// strides and mask representations — many rows so the parallel
+    /// path actually engages.
+    #[test]
+    fn parallel_fx_bit_identical_to_scalar_across_shapes() {
+        let mut rng = Rng::new(613);
+        let scalar = ScalarKernel;
+        for trial in 0..40 {
+            let in_dim = 1 + rng.below(24);
+            let out_dim = 1 + rng.below(24);
+            let rows = 1 + rng.below(40); // spans inline and parallel
+            let s_block = 1 + rng.below(8);
+            let par = ParallelKernel { s_block };
+            let x_stride = in_dim + rng.below(3);
+            let a_stride = out_dim + rng.below(3);
+            let w: Vec<Fx16> = (0..in_dim * out_dim)
+                .map(|_| Fx16::from_f32(rng.uniform_in(-2.0, 2.0) as f32))
+                .collect();
+            let x: Vec<Fx16> = (0..rows * x_stride)
+                .map(|_| {
+                    if rng.bernoulli(0.2) {
+                        Fx16::ZERO
+                    } else {
+                        Fx16::from_f32(rng.uniform_in(-2.0, 2.0) as f32)
+                    }
+                })
+                .collect();
+            let mut planes = BitPlanes::ones(rows, in_dim);
+            for r in 0..rows {
+                for i in 0..in_dim {
+                    planes.set(r, i, !rng.bernoulli(0.125));
+                }
+            }
+            for use_mask in [false, true] {
+                let m = use_mask.then_some(MaskRef::Bits(planes.lanes(0)));
+                let mut acc_s = vec![MacAcc::new(); rows * a_stride];
+                scalar.mvm_fx(
+                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut acc_s,
+                    a_stride,
+                );
+                let mut acc_p = vec![MacAcc::new(); rows * a_stride];
+                par.mvm_fx(
+                    &w, in_dim, out_dim, rows, &x, x_stride, m, &mut acc_p,
+                    a_stride,
+                );
+                assert_eq!(
+                    finish_all(&acc_s),
+                    finish_all(&acc_p),
+                    "trial {trial} rows {rows} mask {use_mask}"
+                );
+            }
+        }
+    }
+
+    /// f32 path: identical term order per output row makes rounding —
+    /// and therefore bits — identical too.
+    #[test]
+    fn parallel_f32_bit_identical_to_scalar() {
+        let mut rng = Rng::new(811);
+        let scalar = ScalarKernel;
+        for trial in 0..30 {
+            let in_dim = 1 + rng.below(20);
+            let out_dim = 1 + rng.below(20);
+            let rows = 4 + rng.below(30);
+            let par = ParallelKernel { s_block: 1 + rng.below(8) };
+            let o_stride = out_dim + rng.below(4);
+            let w: Vec<f32> =
+                (0..in_dim * out_dim).map(|_| rng.normal() as f32).collect();
+            let x: Vec<f32> =
+                (0..rows * in_dim).map(|_| rng.normal() as f32).collect();
+            let mask: Vec<f32> = (0..rows * in_dim)
+                .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                .collect();
+            for use_mask in [false, true] {
+                let m = use_mask.then_some((mask.as_slice(), in_dim));
+                let init: Vec<f32> =
+                    (0..rows * o_stride).map(|_| rng.normal() as f32).collect();
+                let mut out_s = init.clone();
+                scalar.mvm_f32(
+                    &w, in_dim, out_dim, rows, &x, in_dim, m, &mut out_s,
+                    o_stride,
+                );
+                let mut out_p = init.clone();
+                par.mvm_f32(
+                    &w, in_dim, out_dim, rows, &x, in_dim, m, &mut out_p,
+                    o_stride,
+                );
+                let bits = |v: &[f32]| {
+                    v.iter().map(|f| f.to_bits()).collect::<Vec<_>>()
+                };
+                assert_eq!(
+                    bits(&out_s),
+                    bits(&out_p),
+                    "trial {trial} rows {rows} mask {use_mask}"
+                );
+            }
+        }
+    }
+
+    /// Packed planes go through the same chunking; per format, bitwise.
+    #[test]
+    fn parallel_packed_matches_unpacked_per_format() {
+        for fmt in [QFormat::Q8_ACT, QFormat::Q12_ACT, QFormat::Q16_ACT] {
+            let mut rng = Rng::new(fmt.total_bits as u64 + 900);
+            let par = ParallelKernel::default();
+            let (in_dim, out_dim, rows) = (13, 11, 24);
+            let range = fmt.max_value() as f64 * 0.9;
+            let w: Vec<Fx16> = (0..in_dim * out_dim)
+                .map(|_| fmt.quantize(rng.uniform_in(-range, range) as f32))
+                .collect();
+            let packed = PackedWeights::pack(&w, in_dim, out_dim, fmt);
+            let x: Vec<Fx16> = (0..rows * in_dim)
+                .map(|_| fmt.quantize(rng.uniform_in(-range, range) as f32))
+                .collect();
+            let mut acc_u = vec![MacAcc::new(); rows * out_dim];
+            let mut acc_p = acc_u.clone();
+            par.mvm_fx(
+                &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_u,
+                out_dim,
+            );
+            par.mvm_fx_packed(&packed, rows, &x, in_dim, None, &mut acc_p, out_dim);
+            let fin = |acc: &[MacAcc]| -> Vec<i16> {
+                acc.iter().map(|a| a.finish_fmt(Fx16::ZERO, fmt).0).collect()
+            };
+            assert_eq!(fin(&acc_u), fin(&acc_p), "{}", fmt.name());
+        }
+    }
+
+    /// Overlapping output rows (stride < out_dim) must fall back inline
+    /// and still match scalar — chunks cannot own aliased rows.
+    #[test]
+    fn overlapping_acc_rows_fall_back_and_stay_correct() {
+        let (in_dim, out_dim, rows) = (6, 4, 8);
+        let w: Vec<Fx16> = (0..in_dim * out_dim)
+            .map(|j| Fx16::from_f32(0.03 * (j as f32 + 1.0)))
+            .collect();
+        let x = vec![Fx16::ONE; rows * in_dim];
+        // acc_stride 2 < out_dim 4: rows alias on purpose.
+        let mut acc_s = vec![MacAcc::new(); (rows - 1) * 2 + out_dim];
+        let mut acc_p = acc_s.clone();
+        ScalarKernel.mvm_fx(
+            &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_s, 2,
+        );
+        ParallelKernel::default().mvm_fx(
+            &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc_p, 2,
+        );
+        let fin = |a: &[MacAcc]| {
+            a.iter().map(|v| v.finish(Fx16::ZERO).0).collect::<Vec<_>>()
+        };
+        assert_eq!(fin(&acc_s), fin(&acc_p));
+    }
+
+    /// The pool survives many back-to-back dispatches (workers are
+    /// persistent, not per-call).
+    #[test]
+    fn repeated_dispatch_reuses_the_pool() {
+        let par = ParallelKernel::default();
+        let (in_dim, out_dim, rows) = (8, 8, 16);
+        let w = vec![Fx16::from_f32(0.1); in_dim * out_dim];
+        let x = vec![Fx16::ONE; rows * in_dim];
+        let mut want: Option<Vec<i16>> = None;
+        for _ in 0..50 {
+            let mut acc = vec![MacAcc::new(); rows * out_dim];
+            par.mvm_fx(
+                &w, in_dim, out_dim, rows, &x, in_dim, None, &mut acc,
+                out_dim,
+            );
+            let got = finish_all(&acc);
+            match &want {
+                None => want = Some(got),
+                Some(w0) => assert_eq!(w0, &got),
+            }
+        }
+    }
+}

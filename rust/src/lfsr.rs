@@ -32,6 +32,28 @@ impl Lfsr4 {
         self.state = (s << 1) | bit;
         (s >> 15) as u8 & 1
     }
+
+    /// Advance 16 cycles at once, returning the 16 output bits
+    /// **MSB-first** (bit 15 = the first bit `step` would have emitted).
+    ///
+    /// Why the whole word is just the pre-shift state: the output tap is
+    /// bit 15 and feedback enters at bit 0, so a feedback bit needs 15
+    /// further shifts before it can reach the output — the next 16
+    /// outputs are exactly the current state's bits, high to low. Only
+    /// the replacement state (the 16 feedback bits) needs the serial
+    /// recurrence.
+    #[inline]
+    pub fn next16(&mut self) -> u16 {
+        let out = self.state;
+        let mut s = self.state;
+        for _ in 0..16 {
+            let bit =
+                ((s >> 15) ^ (s >> 14) ^ (s >> 12) ^ (s >> 3)) & 1;
+            s = (s << 1) | bit;
+        }
+        self.state = s;
+        out
+    }
 }
 
 /// The paper's Bernoulli mask generator: 3 LFSRs + NAND => P(zero) = 1/8.
@@ -40,6 +62,13 @@ pub struct BernoulliSampler {
     lfsrs: [Lfsr4; 3],
     /// Cycles spent generating bits so far (for the overlap model).
     cycles: u64,
+    /// Pending keep bits, LSB-first (bit 0 = next draw), refilled 16 at
+    /// a time by the word path. `cycles` counts *delivered* bits, so the
+    /// overlap model and the bit-serial oracle see identical accounting
+    /// whether bits leave through [`Self::sample`] or
+    /// [`Self::keep_word`].
+    buf: u128,
+    buf_n: u32,
 }
 
 pub const N_LFSR: usize = 3;
@@ -62,6 +91,8 @@ impl BernoulliSampler {
         Self {
             lfsrs: [Lfsr4::new(s(1)), Lfsr4::new(s(2)), Lfsr4::new(s(3))],
             cycles: 0,
+            buf: 0,
+            buf_n: 0,
         }
     }
 
@@ -70,6 +101,15 @@ impl BernoulliSampler {
     #[inline]
     pub fn sample(&mut self) -> f32 {
         self.cycles += 1;
+        // Drain any word-path lookahead first so bit-serial and
+        // word-level consumers can interleave on one stream without
+        // perturbing draw order.
+        if self.buf_n > 0 {
+            let keep = self.buf & 1 == 1;
+            self.buf >>= 1;
+            self.buf_n -= 1;
+            return if keep { 1.0 } else { 0.0 };
+        }
         let b0 = self.lfsrs[0].step();
         let b1 = self.lfsrs[1].step();
         let b2 = self.lfsrs[2].step();
@@ -79,6 +119,38 @@ impl BernoulliSampler {
         } else {
             1.0
         }
+    }
+
+    /// Pull 16 draws from the three LFSRs in one word operation and
+    /// append them to the lookahead buffer. `Lfsr4::next16` emits
+    /// MSB-first, so the NAND word is bit-reversed into the buffer's
+    /// LSB-first draw order.
+    #[inline]
+    fn refill16(&mut self) {
+        let a = self.lfsrs[0].next16();
+        let b = self.lfsrs[1].next16();
+        let c = self.lfsrs[2].next16();
+        let keep = !(a & b & c);
+        self.buf |= (keep.reverse_bits() as u128) << self.buf_n;
+        self.buf_n += 16;
+    }
+
+    /// `n` mask bits (1..=64) as one word, LSB-first: bit `j` is draw
+    /// `j`, set = keep. Consumes exactly `n` draws of the same stream
+    /// [`Self::sample`] walks — the word-level fast path behind
+    /// [`crate::kernels::BitPlanes::fill_row_words`], oracle-tested
+    /// bit-for-bit against the serial path.
+    #[inline]
+    pub fn keep_word(&mut self, n: u32) -> u64 {
+        debug_assert!((1..=64).contains(&n), "keep_word wants 1..=64 bits");
+        while self.buf_n < n {
+            self.refill16();
+        }
+        let out = (self.buf & ((1u128 << n) - 1)) as u64;
+        self.buf >>= n;
+        self.buf_n -= n;
+        self.cycles += n as u64;
+        out
     }
 
     /// Fill a pre-allocated mask buffer (SIPO widening: one bit per cycle
@@ -222,6 +294,78 @@ mod tests {
         let mut l = Lfsr4::new(0);
         l.step(); // must not be stuck
         assert_ne!(l.state, 0);
+    }
+
+    #[test]
+    fn next16_matches_sixteen_serial_steps() {
+        for seed in [1u16, 0xACE1, 0xBEEF, 0x8000, 0x0001, 0x5A5A] {
+            let mut serial = Lfsr4::new(seed);
+            let mut word = Lfsr4::new(seed);
+            for _ in 0..64 {
+                let mut expect = 0u16;
+                for _ in 0..16 {
+                    expect = (expect << 1) | serial.step() as u16;
+                }
+                assert_eq!(word.next16(), expect, "MSB-first draw order");
+                assert_eq!(word.state, serial.state, "states stay locked");
+            }
+        }
+    }
+
+    /// The tentpole oracle: the word-level generator must reproduce the
+    /// bit-serial NAND stream draw for draw, for any chunking, with the
+    /// same cycle accounting.
+    #[test]
+    fn keep_word_matches_sample_stream_bit_for_bit() {
+        let mut serial = BernoulliSampler::new(42);
+        let mut word = BernoulliSampler::new(42);
+        // Awkward chunk sizes: sub-word, word-straddling, full width.
+        for &n in &[1u32, 7, 16, 3, 64, 33, 15, 64, 2, 17, 48, 5] {
+            let w = word.keep_word(n);
+            for j in 0..n {
+                let expect = serial.sample() != 0.0;
+                assert_eq!(
+                    (w >> j) & 1 == 1,
+                    expect,
+                    "chunk n={n} draw {j}"
+                );
+            }
+            assert_eq!(word.cycles(), serial.cycles(), "cycle accounting");
+        }
+    }
+
+    #[test]
+    fn sample_and_keep_word_interleave_on_one_stream() {
+        let mut serial = BernoulliSampler::new(9);
+        let mut mixed = BernoulliSampler::new(9);
+        let mut draws = Vec::new();
+        // sample() must drain keep_word's lookahead, not fork the stream.
+        for round in 0..20 {
+            let n = 1 + (round * 11) % 40;
+            let w = mixed.keep_word(n);
+            for j in 0..n {
+                draws.push((w >> j) & 1 == 1);
+            }
+            for _ in 0..(round % 5) {
+                draws.push(mixed.sample() != 0.0);
+            }
+        }
+        for (i, &keep) in draws.iter().enumerate() {
+            assert_eq!(serial.sample() != 0.0, keep, "draw {i}");
+        }
+        assert_eq!(mixed.cycles(), serial.cycles());
+    }
+
+    #[test]
+    fn keep_word_dropout_rate_is_one_eighth() {
+        let mut s = BernoulliSampler::new(1234);
+        let n = 200_000u32;
+        let mut kept = 0u32;
+        for _ in 0..(n / 64) {
+            kept += s.keep_word(64).count_ones();
+        }
+        let rate = 1.0 - kept as f64 / (n - n % 64) as f64;
+        assert!((rate - 0.125).abs() < 0.01, "dropout rate {rate}");
     }
 
     #[test]

@@ -31,7 +31,7 @@ use bayes_rnn_fpga::fixedpoint::Precision;
 use bayes_rnn_fpga::fpga::accel::Accelerator;
 use bayes_rnn_fpga::hwmodel::ZC706;
 use bayes_rnn_fpga::jsonio::{self, Json};
-use bayes_rnn_fpga::kernels::{self, KernelBackend};
+use bayes_rnn_fpga::kernels::{self, KernelBackend, MaskBank};
 use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
 use bayes_rnn_fpga::obs::{
@@ -221,7 +221,10 @@ subcommands:
           [--arch NAME] [--engines N] [--router rr|least-loaded|mc-shard]
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
-          [--seed N] [--json] [--kernel scalar|blocked|simd]
+          [--seed N] [--json] [--kernel scalar|blocked|simd|parallel]
+          [--mask-bank-mb N]  (share a seed-indexed bitplane-mask cache
+           across engines — docs/kernels.md §Mask bank; 0 = off,
+           the default, and output bits never change either way)
           [--obs] [--metrics PATH] [--trace PATH] [--window-ms F]
           [--slo latency_ms=F,target=F,max_shed=F] [--slo-gate]
           (--obs adds per-stage latency histograms + engine health to
@@ -251,7 +254,7 @@ subcommands:
           [--samples S] [--seed N] [--backend fpga|gpu|pjrt]
           [--queue-depth N] [--shed] [--batch N] [--window-ms F]
           [--slo SPEC] [--slo-gate] [--json] [--metrics PATH]
-          [--trace PATH] [--kernel K] [--precision P]
+          [--trace PATH] [--kernel K] [--precision P] [--mask-bank-mb N]
           (observability is always on here — docs/observability.md
            §Open-loop)
   uq      uncertainty-quantification pipeline (classify task)
@@ -641,6 +644,7 @@ fn engine_factories(
     artifacts: &std::path::Path,
     kernel_backend: KernelBackend,
     precision: &Precision,
+    mask_bank: Option<std::sync::Arc<MaskBank>>,
 ) -> Vec<Box<dyn FnOnce() -> Engine + Send>> {
     let mut factories: Vec<Box<dyn FnOnce() -> Engine + Send>> =
         Vec::with_capacity(n_engines);
@@ -653,6 +657,7 @@ fn engine_factories(
         let p2 = params.to_vec();
         let arts = artifacts.to_path_buf();
         let prec = precision.clone();
+        let bank = mask_bank.clone();
         factories.push(Box::new(move || match kind.as_str() {
             "gpu" => Engine::gpu(
                 Model::new(cfg2.clone(), Params { tensors: p2.clone() }),
@@ -673,6 +678,7 @@ fn engine_factories(
                 );
                 let mut e = Engine::fpga_q(&cfg2, &m, reuse, s, seed, &prec);
                 e.set_kernel_backend(kernel_backend);
+                e.set_mask_bank(bank);
                 e
             }
         }));
@@ -857,6 +863,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let (mc_cfg, risk) = uq_flags(args, s, None)?;
 
+    // Seed-indexed mask bank (docs/kernels.md §Mask bank): one bank
+    // shared by every FPGA-sim engine worker, keyed by per-sample mask
+    // seed, so repeat request seeds reuse bitplane rows instead of
+    // re-running the LFSR samplers. 0 MiB (the default) disables it;
+    // output bits are identical either way.
+    let mask_bank_mb = args.usize_or("mask-bank-mb", 0);
+    let mask_bank = (mask_bank_mb > 0)
+        .then(|| std::sync::Arc::new(MaskBank::new(mask_bank_mb << 20)));
+
     // Trained weights if available; otherwise a deterministic random
     // init so load runs (and their predictions) are reproducible
     // without artifacts — the bench harness relies on this.
@@ -883,6 +898,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         &artifacts,
         kernel_backend,
         &precision,
+        mask_bank.clone(),
     );
 
     // Every backend batches: a formed batch becomes one blocked engine
@@ -1006,6 +1022,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let uq_report = adaptive.then(|| collector.finish(s));
     let wall = t0.elapsed();
     let mut summary = fleet.join();
+    // Stamp bank counters before any export path reads the summary;
+    // stays `None` when disabled so the output is byte-identical.
+    summary.obs.mask_bank = mask_bank.as_ref().map(|b| b.stats());
     let throughput = if wall.as_secs_f64() > 0.0 {
         summary.served as f64 / wall.as_secs_f64()
     } else {
@@ -1142,6 +1161,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
         println!(
             "  engine[{j}]  items {:<6} batches {:<6} model mean {:.3} ms",
             e.served, e.batches, e.engine.mean_ms()
+        );
+    }
+    if let Some(b) = &summary.obs.mask_bank {
+        println!(
+            "mask bank: {mask_bank_mb} MiB budget  hits {}  misses {}  \
+             evictions {}  resident {:.1} KiB",
+            b.hits,
+            b.misses,
+            b.evictions,
+            b.resident_bytes as f64 / 1024.0
         );
     }
     if obs_on {
@@ -1313,6 +1342,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             Model::init(cfg.clone(), &mut Rng::new(seed ^ 0xC0FFEE))
         }
     };
+    // Shared mask bank, as in `serve` (0 = off, the default).
+    let mask_bank_mb = args.usize_or("mask-bank-mb", 0);
+    let mask_bank = (mask_bank_mb > 0)
+        .then(|| std::sync::Arc::new(MaskBank::new(mask_bank_mb << 20)));
     let params = model.params.tensors.clone();
     // Engines are sized for the heaviest payload class (a poisson_mix
     // "heavy" request draws 2S samples).
@@ -1333,6 +1366,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         &args.artifacts_dir(),
         kernel_backend,
         &precision,
+        mask_bank.clone(),
     );
     let policy = if batch <= 1 {
         BatchPolicy::stream()
@@ -1374,6 +1408,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     let wall = t0.elapsed();
     let mut summary = fleet.join();
+    summary.obs.mask_bank = mask_bank.as_ref().map(|b| b.stats());
     // The fleet only sees submissions; the schedule knows what was
     // *offered* (including requests shed at admission) — graft the
     // offered-per-window series onto the timeline for the
@@ -1502,6 +1537,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 c.name, c.samples, c.weight, served_by_class[i]
             );
         }
+    }
+    if let Some(b) = &summary.obs.mask_bank {
+        println!(
+            "mask bank: {mask_bank_mb} MiB budget  hits {}  misses {}  \
+             evictions {}  resident {:.1} KiB",
+            b.hits,
+            b.misses,
+            b.evictions,
+            b.resident_bytes as f64 / 1024.0
+        );
     }
     if let Some(tl) = &summary.timeline {
         print_timeline(tl);

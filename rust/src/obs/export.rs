@@ -32,6 +32,10 @@ pub const SERVE_METRIC_NAMES: &[&str] = &[
     "repro_mc_samples_saved_total",
     "repro_router_placements_total",
     "repro_trace_dropped_total",
+    "repro_mask_bank_hits_total",
+    "repro_mask_bank_misses_total",
+    "repro_mask_bank_evictions_total",
+    "repro_mask_bank_resident_bytes",
 ];
 
 /// Metric names `push_timeline_metrics` emits (windowed runs only).
@@ -320,6 +324,33 @@ pub fn serve_metric_set(
         vec![],
         summary.obs.trace_dropped as f64,
     );
+    // Always emitted for a stable scrape surface; all-zero when the
+    // bank is disabled (`--mask-bank-mb 0`, the default).
+    let bank = summary.obs.mask_bank.unwrap_or_default();
+    set.counter(
+        "repro_mask_bank_hits_total",
+        "Mask rows served from the seed-indexed bank",
+        vec![],
+        bank.hits as f64,
+    );
+    set.counter(
+        "repro_mask_bank_misses_total",
+        "Mask rows generated by the LFSR samplers (bank miss)",
+        vec![],
+        bank.misses as f64,
+    );
+    set.counter(
+        "repro_mask_bank_evictions_total",
+        "Bank entries evicted by the CLOCK sweep",
+        vec![],
+        bank.evictions as f64,
+    );
+    set.gauge(
+        "repro_mask_bank_resident_bytes",
+        "Bytes of bitplane rows resident in the bank",
+        vec![],
+        bank.resident_bytes as f64,
+    );
     if let Some(p) = procstat::sample() {
         set.gauge(
             "repro_proc_rss_bytes",
@@ -522,7 +553,7 @@ pub fn serve_obs_json(
         }
         None => Json::Null,
     };
-    jsonio::obj(vec![
+    let mut top = vec![
         (
             "stages",
             jsonio::obj(vec![
@@ -556,8 +587,23 @@ pub fn serve_obs_json(
             "trace_dropped",
             Json::Num(summary.obs.trace_dropped as f64),
         ),
-        ("proc", proc),
-    ])
+    ];
+    // Only present when a bank was attached — the disabled serve line
+    // stays byte-identical to builds without the feature.
+    if let Some(b) = summary.obs.mask_bank {
+        top.push((
+            "mask_bank",
+            jsonio::obj(vec![
+                ("hits", Json::Num(b.hits as f64)),
+                ("misses", Json::Num(b.misses as f64)),
+                ("evictions", Json::Num(b.evictions as f64)),
+                ("resident_bytes", Json::Num(b.resident_bytes as f64)),
+                ("capacity_bytes", Json::Num(b.capacity_bytes as f64)),
+            ]),
+        ));
+    }
+    top.push(("proc", proc));
+    jsonio::obj(top)
 }
 
 #[cfg(test)]
@@ -597,6 +643,13 @@ mod tests {
         obs.mc_saved = 8;
         obs.placements = vec![4];
         obs.trace_dropped = 2;
+        obs.mask_bank = Some(crate::kernels::MaskBankStats {
+            hits: 40,
+            misses: 8,
+            evictions: 1,
+            resident_bytes: 4096,
+            capacity_bytes: 1 << 20,
+        });
         FleetSummary {
             served: 4,
             rejected: 1,
@@ -651,6 +704,33 @@ mod tests {
             text.contains("repro_trace_dropped_total 2\n"),
             "dropped-event counter must surface in the exposition"
         );
+        assert!(text.contains("repro_mask_bank_hits_total 40\n"));
+        assert!(text.contains("repro_mask_bank_resident_bytes 4096\n"));
+    }
+
+    /// With no bank attached the four metrics still exist (stable
+    /// scrape surface) but read zero.
+    #[test]
+    fn mask_bank_metrics_are_zero_without_a_bank() {
+        let mut summary = fake_summary();
+        summary.obs.mask_bank = None;
+        let set = serve_metric_set(&summary, 0.01, 400.0);
+        for name in [
+            "repro_mask_bank_hits_total",
+            "repro_mask_bank_misses_total",
+            "repro_mask_bank_evictions_total",
+            "repro_mask_bank_resident_bytes",
+        ] {
+            let m = set
+                .metrics()
+                .iter()
+                .find(|m| m.name == name)
+                .unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(m.value, 0.0, "{name} must read 0 when disabled");
+        }
+        // And the obs JSON omits the block entirely.
+        let line = jsonio::write(&serve_obs_json(&summary, None));
+        assert!(!line.contains("mask_bank"));
     }
 
     #[test]
@@ -684,6 +764,13 @@ mod tests {
         assert_eq!(
             parsed.get("trace_dropped").and_then(Json::as_usize),
             Some(2)
+        );
+        assert_eq!(
+            parsed
+                .get("mask_bank")
+                .and_then(|b| b.get("hits"))
+                .and_then(Json::as_usize),
+            Some(40)
         );
         // With a start snapshot, the proc block reports run-delta CPU
         // (on Linux, where /proc parses).
