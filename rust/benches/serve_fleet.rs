@@ -24,6 +24,12 @@
 //!                   (--kernel scalar) at S in {10, 30, 100}: beats/s
 //!                   each, speedup, and a bit-identity check on the
 //!                   prediction checksums (docs/kernels.md)
+//!   stream          session-stateful streaming (--stream): chunked
+//!                   serving with resident MC lane state vs. one-shot,
+//!                   at S in {10, 30}; plus a zero-byte-budget thrash
+//!                   run that must still match bitwise while paying
+//!                   eviction/replay rebuilds (docs/serving.md
+//!                   §Streaming sessions)
 //!
 //! Every run passes `--obs`, so scenario points carry the per-stage
 //! (queue / batch-form / compute / merge) p99 breakdown, and the
@@ -478,6 +484,112 @@ fn main() {
     write_scenario(&results, "mc_batch", &mcb_line);
     commit_bench("BENCH_mc_batch.json", &mcb_line);
 
+    // --- stream: resident session chunks vs one-shot + thrash cost ---
+    // Each run opens `sessions` streaming sessions of 4 beats;
+    // `--stream N` splits every session's signal into N chunks.
+    // One-shot (--stream 1) is the reference; chunked serving over
+    // resident lane state must reproduce its checksums exactly (the
+    // bitwise streaming contract) while paying only O(chunk) per
+    // decision. The thrash run caps the session table at 0 bytes, so
+    // every resume is an eviction miss rebuilt by replay — same bits,
+    // rebuild cost charged to chunk latency.
+    let stream_field = |r: &Run, key: &str| -> f64 {
+        let j = jsonio::parse(&r.json_line).expect("re-parse serve JSON");
+        j.get("stream")
+            .and_then(|s| s.get(key))
+            .and_then(Json::as_f64)
+            .unwrap_or_else(|| {
+                panic!("missing stream.{key} in {}", r.json_line)
+            })
+    };
+    let sessions = requests.min(16);
+    let mut stream_points = Vec::new();
+    let mut stream_bits_ok = true;
+    let mut stream_replays_ok = true;
+    for s in [10usize, 30] {
+        println!("[stream] S={s}, {sessions} sessions, one-shot");
+        let oneshot = serve(
+            &bin,
+            ARCH,
+            1,
+            "affinity",
+            sessions,
+            s,
+            &["--stream", "1", "--stream-beats", "4"],
+        );
+        println!("[stream] S={s}, {sessions} sessions, 4 chunks resident");
+        let resident = serve(
+            &bin,
+            ARCH,
+            1,
+            "affinity",
+            sessions,
+            s,
+            &["--stream", "4", "--stream-beats", "4", "--session-mb", "8"],
+        );
+        println!("[stream] S={s}, {sessions} sessions, 4 chunks thrash");
+        let thrash = serve(
+            &bin,
+            ARCH,
+            1,
+            "affinity",
+            sessions,
+            s,
+            &["--stream", "4", "--stream-beats", "4", "--session-mb", "0"],
+        );
+        let bits_ok = (resident.pred_checksum - oneshot.pred_checksum)
+            .abs()
+            < 1e-9
+            && (resident.unc_checksum - oneshot.unc_checksum).abs() < 1e-9
+            && (thrash.pred_checksum - oneshot.pred_checksum).abs() < 1e-9
+            && (thrash.unc_checksum - oneshot.unc_checksum).abs() < 1e-9;
+        stream_bits_ok &= bits_ok;
+        let resident_rebuilds = stream_field(&resident, "replay_rebuilds");
+        let thrash_rebuilds = stream_field(&thrash, "replay_rebuilds");
+        // Resident serving never rebuilds; a 0-byte budget must rebuild
+        // every post-first chunk (3 per session here).
+        stream_replays_ok &= resident_rebuilds == 0.0
+            && thrash_rebuilds >= sessions as f64;
+        stream_points.push(format!(
+            "{{\"s\":{s},\"sessions\":{sessions},\"beats\":4,\
+             \"chunks\":4,\
+             \"oneshot_rps\":{:.3},\"resident_rps\":{:.3},\
+             \"thrash_rps\":{:.3},\
+             \"oneshot_e2e_p50_ms\":{:.4},\
+             \"resident_e2e_p50_ms\":{:.4},\
+             \"thrash_e2e_p50_ms\":{:.4},\
+             \"resident_replay_rebuilds\":{},\
+             \"thrash_replay_rebuilds\":{},\"bits_match\":{}}}",
+            oneshot.throughput,
+            resident.throughput,
+            thrash.throughput,
+            oneshot.e2e_p50_ms,
+            resident.e2e_p50_ms,
+            thrash.e2e_p50_ms,
+            resident_rebuilds as usize,
+            thrash_rebuilds as usize,
+            bits_ok
+        ));
+        println!(
+            "  S={s:<4} chunk-p50 resident {:.3} ms  thrash {:.3} ms  \
+             rebuilds {}/{}  bits {}",
+            resident.e2e_p50_ms,
+            thrash.e2e_p50_ms,
+            resident_rebuilds as usize,
+            thrash_rebuilds as usize,
+            if bits_ok { "MATCH" } else { "MISMATCH" }
+        );
+    }
+    let stream_line = format!(
+        "{{\"scenario\":\"stream\",\"source\":\"serve_fleet\",\
+         \"arch\":\"{ARCH}\",\"points\":[{}],\
+         \"bits_match\":{stream_bits_ok},\
+         \"replay_accounting_ok\":{stream_replays_ok}}}",
+        stream_points.join(",")
+    );
+    write_scenario(&results, "stream", &stream_line);
+    commit_bench("BENCH_stream.json", &stream_line);
+
     // --- committed perf trajectory: BENCH_serve.json at the repo root ---
     // One line covering the headline scenarios (with the obs stage
     // breakdown), overwritten by every `cargo bench --bench serve_fleet`
@@ -574,9 +686,25 @@ fn main() {
         "mc-batch bit-identity (blocked == scalar checksums): {}",
         if mcb_bits_ok { "PASS" } else { "FAIL" }
     );
-    if !numerics_ok || !adaptive_ok || !mcb_bits_ok {
-        // Sample-seeding invariant, adaptive accounting or blocked-kernel
-        // bit-identity broken — correctness bugs, not perf regressions.
+    println!(
+        "stream bit-identity (chunked == one-shot, resident and \
+         thrash): {}",
+        if stream_bits_ok { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "stream replay accounting (resident 0 rebuilds, thrash \
+         rebuilds every evicted chunk): {}",
+        if stream_replays_ok { "PASS" } else { "FAIL" }
+    );
+    if !numerics_ok
+        || !adaptive_ok
+        || !mcb_bits_ok
+        || !stream_bits_ok
+        || !stream_replays_ok
+    {
+        // Sample-seeding invariant, adaptive accounting, blocked-kernel
+        // bit-identity or the streaming bitwise contract broken —
+        // correctness bugs, not perf regressions.
         std::process::exit(1);
     }
 }

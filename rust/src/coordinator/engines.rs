@@ -10,7 +10,7 @@ use std::time::Instant;
 
 use crate::config::{ArchConfig, Task};
 use crate::fixedpoint::Precision;
-use crate::fpga::accel::{Accelerator, McOutput};
+use crate::fpga::accel::{Accelerator, McOutput, StreamState};
 use crate::fpga::pipeline::PipelineSim;
 use crate::hwmodel::resource::ReuseFactors;
 use crate::hwmodel::{GpuModel, ZC706};
@@ -498,6 +498,53 @@ impl Engine {
             })
             .collect()
     }
+
+    /// Open streaming lane state for MC lanes `start..start+count` of
+    /// a session. FPGA-sim only: streaming sessions are built on the
+    /// accelerator's resident fixed-point recurrent state
+    /// ([`Accelerator::open_stream`]); the float baselines have no
+    /// persistent-state path.
+    pub fn open_stream(
+        &self,
+        session_seed: u64,
+        start: usize,
+        count: usize,
+    ) -> Result<StreamState> {
+        match &self.kind {
+            EngineKind::FpgaSim { accel, .. } => {
+                Ok(accel.open_stream(session_seed, start, count))
+            }
+            _ => anyhow::bail!("streaming sessions require the fpga backend"),
+        }
+    }
+
+    /// Feed one session chunk through resident lane state: advances
+    /// `st` in place and returns the per-beat MC sample blocks plus
+    /// the simulated model latency. The latency is the cycle
+    /// simulator's per-beat cost at this lane count, pro-rated by the
+    /// timesteps actually consumed — O(chunk), never O(history), which
+    /// is the entire point of keeping the state resident.
+    pub fn infer_stream_chunk(
+        &mut self,
+        st: &mut StreamState,
+        signal: &[f32],
+    ) -> Result<(Vec<McOutput>, f64)> {
+        match &mut self.kind {
+            EngineKind::FpgaSim { accel, sim } => {
+                let idim = accel.cfg.input_dim.max(1);
+                let seq = accel.cfg.seq_len.max(1);
+                let steps = signal.len() / idim;
+                let outs = accel
+                    .predict_stream(st, signal)
+                    .map_err(|e| anyhow::anyhow!("{e}"))?;
+                let per_beat_ms =
+                    sim.simulate_ms(1, st.count.max(1), ZC706.clock_hz);
+                let ms = per_beat_ms * steps as f64 / seq as f64;
+                Ok((outs, ms))
+            }
+            _ => anyhow::bail!("streaming sessions require the fpga backend"),
+        }
+    }
 }
 
 /// Per-sample-seeded dropout masks for samples `start..start+count`:
@@ -796,6 +843,59 @@ mod tests {
         let s = bank.stats();
         assert!(s.hits > 0, "warm round must hit");
         assert!(s.misses > 0 && s.resident_bytes > 0);
+    }
+
+    /// Engine-level leg of the streaming bitwise contract: resuming a
+    /// session chunk by chunk equals one continuous pass, the per-chunk
+    /// step meter never touches history, and the O(chunk) latencies sum
+    /// to the one-shot cost.
+    #[test]
+    fn stream_chunks_match_one_shot_bitwise_at_engine_level() {
+        let (cfg, model) = tiny_model("YY");
+        let reuse = ReuseFactors::new(2, 1, 1);
+        let signal: Vec<f32> =
+            (0..60).map(|i| (i as f32 * 0.17).sin()).collect();
+
+        let mut whole = Engine::fpga(&cfg, &model, reuse, 4, 9);
+        let mut ws = whole.open_stream(11, 0, 4).unwrap();
+        let (wout, wms) =
+            whole.infer_stream_chunk(&mut ws, &signal).unwrap();
+        assert_eq!(wout.len(), 3, "three beat boundaries in 60 steps");
+        assert!(wms > 0.0);
+
+        let lane_steps = |e: &Engine| match &e.kind {
+            EngineKind::FpgaSim { accel, .. } => accel.lane_steps(),
+            _ => unreachable!(),
+        };
+        let mut chunked = Engine::fpga(&cfg, &model, reuse, 4, 9);
+        let mut cs = chunked.open_stream(11, 0, 4).unwrap();
+        let mut outs = Vec::new();
+        let mut ms = 0.0;
+        for range in [0..13usize, 13..46, 46..60] {
+            let before = lane_steps(&chunked);
+            let (o, m) = chunked
+                .infer_stream_chunk(&mut cs, &signal[range.clone()])
+                .unwrap();
+            outs.extend(o);
+            ms += m;
+            // O(chunk): a resumed chunk steps exactly its own
+            // timesteps (× layers × lanes), never the history.
+            assert_eq!(
+                lane_steps(&chunked) - before,
+                range.len() as u64 * 2 * 4
+            );
+        }
+        assert_eq!(outs.len(), wout.len());
+        for (c, w) in outs.iter().zip(&wout) {
+            assert_eq!(c.samples, w.samples, "bitwise across chunk splits");
+            assert_eq!((c.s, c.out_len), (w.s, w.out_len));
+        }
+        assert!((ms - wms).abs() < 1e-9, "chunk costs sum to one-shot");
+
+        // Float baselines have no resident-state path.
+        let (_, m2) = tiny_model("YY");
+        let gpu = Engine::gpu(m2, 4, 9);
+        assert!(gpu.open_stream(1, 0, 4).is_err());
     }
 
     #[test]

@@ -6,8 +6,9 @@
 
 use std::time::{Duration, Instant};
 
-use super::fleet::{Fleet, Ticket};
+use super::fleet::{ChunkTicket, Fleet, Ticket};
 use super::router::RouterPolicy;
+use super::session::SessionError;
 use super::stats::LatencyStats;
 use crate::data::Dataset;
 use crate::obs::{window_index, WindowedCount};
@@ -109,8 +110,14 @@ pub struct ScheduledRequest {
 }
 
 /// The named open-loop scenarios `repro loadgen --scenario` accepts.
-pub const SCENARIOS: &[&str] =
-    &["baseline", "fan_out", "fan_in", "scaling", "poisson_mix"];
+pub const SCENARIOS: &[&str] = &[
+    "baseline",
+    "fan_out",
+    "fan_in",
+    "scaling",
+    "poisson_mix",
+    "stream_monitor",
+];
 
 /// A reusable open-loop load scenario: fleet shape + arrival process +
 /// payload mix. Presets cover the serving matrix (`docs/serving.md`);
@@ -142,6 +149,11 @@ impl ScenarioSpec {
     /// * `scaling` — least-loaded placement over all engines.
     /// * `poisson_mix` — round-robin with a light/standard/heavy
     ///   payload-class mix.
+    /// * `stream_monitor` — long-lived streaming sessions under
+    ///   session-affinity routing: `requests` is the total chunk
+    ///   count across the monitored sessions, `rate_per_s` the chunk
+    ///   arrival rate (the CLI's streaming runner drives the session
+    ///   lifecycle — `docs/serving.md` §Streaming sessions).
     pub fn preset(
         name: &str,
         engines: usize,
@@ -158,7 +170,7 @@ impl ScenarioSpec {
             requests,
             samples,
             mix: Vec::new(),
-            queue_depth: 256,
+            queue_depth: super::DEFAULT_QUEUE_DEPTH,
             shed: false,
             seed,
         };
@@ -171,6 +183,7 @@ impl ScenarioSpec {
                 spec.queue_depth = 8;
             }
             "scaling" => spec.router = RouterPolicy::LeastLoaded,
+            "stream_monitor" => spec.router = RouterPolicy::Affinity,
             "poisson_mix" => {
                 spec.mix = vec![
                     PayloadClass {
@@ -303,6 +316,73 @@ pub fn run_open_loop(
     out
 }
 
+/// What a streaming open-loop run produced, before waiting on chunks.
+pub struct StreamLoopOutcome {
+    /// Chunk tickets in submit order; callers `wait_chunk` these.
+    pub tickets: Vec<ChunkTicket>,
+    /// Sessions the runner opened, to `close_session` once the chunks
+    /// are drained.
+    pub sids: Vec<u64>,
+    /// Chunks the schedule offered (= trace length). Sessions bypass
+    /// admission shedding, so offered == submitted here.
+    pub offered: usize,
+    /// Generator lag, as in [`OpenLoopOutcome::lag`].
+    pub lag: LatencyStats,
+    /// Offered chunk arrivals per timeline window (scheduled times).
+    pub offered_per_window: WindowedCount,
+}
+
+/// Replay a scheduled trace as *streaming session chunks*, open loop:
+/// `n_sessions` long-lived sessions are opened up front and the trace's
+/// arrivals become their chunks round-robin — session `k` receives
+/// every `n_sessions`-th beat as the next chunk of its monitored
+/// signal, so per-session chunk order (the bitwise-contract
+/// precondition) is preserved while chunks from different sessions
+/// interleave on the wire. Chunks are stamped with the *scheduled*
+/// arrival (coordinated-omission-correct, like [`run_open_loop`]).
+/// Callers `wait_chunk` the tickets, `close_session` the sids, then
+/// `join` the fleet.
+pub fn run_stream_open_loop(
+    fleet: &mut Fleet,
+    trace: &[ScheduledRequest],
+    data: &Dataset,
+    n_sessions: usize,
+) -> Result<StreamLoopOutcome, SessionError> {
+    let n_sessions = n_sessions.max(1);
+    let win = fleet.obs_window();
+    let mut sids = Vec::with_capacity(n_sessions);
+    for _ in 0..n_sessions {
+        sids.push(fleet.open_session()?);
+    }
+    let mut out = StreamLoopOutcome {
+        tickets: Vec::with_capacity(trace.len()),
+        sids,
+        offered: trace.len(),
+        lag: LatencyStats::new(),
+        offered_per_window: WindowedCount::default(),
+    };
+    let start = Instant::now();
+    for (i, r) in trace.iter().enumerate() {
+        let target = start + r.at;
+        let now = Instant::now();
+        if target > now {
+            std::thread::sleep(target - now);
+        }
+        out.lag.record(Instant::now().saturating_duration_since(target));
+        if let Some((epoch, width)) = win {
+            out.offered_per_window
+                .inc(window_index(epoch, width, target));
+        }
+        let sid = out.sids[i % n_sessions];
+        out.tickets.push(fleet.submit_chunk_at(
+            sid,
+            data.beat(r.beat_idx).to_vec(),
+            target,
+        )?);
+    }
+    Ok(out)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -413,6 +493,11 @@ mod tests {
         let scaling =
             ScenarioSpec::preset("scaling", 4, 100.0, 32, 8, 1).unwrap();
         assert_eq!(scaling.router, RouterPolicy::LeastLoaded);
+        let stream =
+            ScenarioSpec::preset("stream_monitor", 4, 100.0, 32, 8, 1)
+                .unwrap();
+        assert_eq!(stream.router, RouterPolicy::Affinity);
+        assert_eq!(stream.engines, 4);
         let mix =
             ScenarioSpec::preset("poisson_mix", 4, 100.0, 32, 8, 1)
                 .unwrap();

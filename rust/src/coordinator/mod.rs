@@ -22,6 +22,10 @@
 //!
 //! No tokio in this offline environment (DESIGN.md §Substitutions):
 //! std::thread + mpsc channels implement the same event loop.
+//!
+//! Streaming sessions ([`session`], [`Fleet::open_session`]) keep MC
+//! lane state resident between chunks so long-lived signals pay
+//! O(chunk) per decision — see `docs/serving.md` §Streaming sessions.
 
 pub mod batcher;
 pub mod fleet;
@@ -29,7 +33,12 @@ pub mod loadgen;
 pub mod engines;
 pub mod router;
 pub mod server;
+pub mod session;
 pub mod stats;
+
+/// Default bounded queue depth per engine, shared by the server, the
+/// fleet, the loadgen presets and the CLI (one knob, one value).
+pub const DEFAULT_QUEUE_DEPTH: usize = 256;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
 pub use engines::{
@@ -37,13 +46,17 @@ pub use engines::{
     ShardRequest,
 };
 pub use fleet::{
-    AdaptiveResponse, AdaptiveTicket, Fleet, FleetConfig, FleetObs,
-    FleetResponse, FleetSummary, Ticket,
+    AdaptiveResponse, AdaptiveTicket, ChunkResponse, ChunkTicket, Fleet,
+    FleetConfig, FleetObs, FleetResponse, FleetSummary, Ticket,
 };
 pub use loadgen::{
-    run_open_loop, OpenLoopOutcome, PayloadClass, PoissonTrace,
-    ScenarioSpec, ScheduledRequest, SCENARIOS,
+    run_open_loop, run_stream_open_loop, OpenLoopOutcome, PayloadClass,
+    PoissonTrace, ScenarioSpec, ScheduledRequest, StreamLoopOutcome,
+    SCENARIOS,
 };
 pub use router::{Router, RouterPolicy};
 pub use server::{Server, ServerConfig, ServeSummary};
+pub use session::{
+    Resume, SessionError, SessionMeta, SessionStats, SessionTable,
+};
 pub use stats::LatencyStats;

@@ -12,6 +12,11 @@
 //!   compute units); the coordinator merges the partial predictive
 //!   distributions. Cuts per-request latency ~N× instead of raising
 //!   request-level throughput.
+//! * **affinity** — streaming sessions are pinned to the least-loaded
+//!   engine at open time ([`Router::pin`]) and every chunk follows the
+//!   pin, so the session's resident lane state never migrates and the
+//!   per-engine FIFO serialises its chunks. Non-session requests fall
+//!   back to round-robin.
 
 /// Placement policy for the fleet.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -19,6 +24,9 @@ pub enum RouterPolicy {
     RoundRobin,
     LeastLoaded,
     McShard,
+    /// Session-affinity: chunks of one streaming session always land on
+    /// the engine the session was pinned to at `open_session`.
+    Affinity,
 }
 
 impl RouterPolicy {
@@ -27,6 +35,7 @@ impl RouterPolicy {
             RouterPolicy::RoundRobin => "rr",
             RouterPolicy::LeastLoaded => "least-loaded",
             RouterPolicy::McShard => "mc-shard",
+            RouterPolicy::Affinity => "affinity",
         }
     }
 }
@@ -38,8 +47,10 @@ impl std::str::FromStr for RouterPolicy {
             "rr" | "round-robin" => Ok(RouterPolicy::RoundRobin),
             "ll" | "least-loaded" => Ok(RouterPolicy::LeastLoaded),
             "mc-shard" | "mcshard" => Ok(RouterPolicy::McShard),
+            "affinity" | "session-affinity" => Ok(RouterPolicy::Affinity),
             other => Err(format!(
-                "unknown router {other:?} (rr | least-loaded | mc-shard)"
+                "unknown router {other:?} \
+                 (rr | least-loaded | mc-shard | affinity)"
             )),
         }
     }
@@ -94,6 +105,25 @@ impl Router {
         j
     }
 
+    /// Pin a new streaming session to an engine: the least-loaded one
+    /// at open time (ties to the lowest index), regardless of policy.
+    /// Chunks then follow the pin instead of re-routing, so resident
+    /// lane state never migrates. Tallied like any placement.
+    pub fn pin(&mut self, loads: &[usize]) -> usize {
+        assert!(!loads.is_empty());
+        let j = loads
+            .iter()
+            .enumerate()
+            .min_by_key(|&(i, &l)| (l, i))
+            .map(|(i, _)| i)
+            .unwrap_or(0);
+        if self.placed.len() < loads.len() {
+            self.placed.resize(loads.len(), 0);
+        }
+        self.placed[j] += 1;
+        j
+    }
+
     /// Split `s` MC samples over `n` engines: `(start, count)` per
     /// engine, contiguous, disjoint, covering `0..s`. The first `s % n`
     /// engines take one extra sample; with `s < n` the tail engines get
@@ -132,8 +162,29 @@ mod tests {
             "mc-shard".parse::<RouterPolicy>(),
             Ok(RouterPolicy::McShard)
         );
+        assert_eq!(
+            "affinity".parse::<RouterPolicy>(),
+            Ok(RouterPolicy::Affinity)
+        );
+        assert_eq!(
+            "session-affinity".parse::<RouterPolicy>(),
+            Ok(RouterPolicy::Affinity)
+        );
         assert!("banana".parse::<RouterPolicy>().is_err());
         assert_eq!(RouterPolicy::McShard.as_str(), "mc-shard");
+        assert_eq!(RouterPolicy::Affinity.as_str(), "affinity");
+    }
+
+    #[test]
+    fn affinity_pins_least_loaded_and_routes_rest_round_robin() {
+        let mut r = Router::new(RouterPolicy::Affinity);
+        assert_eq!(r.pin(&[3, 1, 2]), 1, "pin to least-loaded");
+        assert_eq!(r.pin(&[2, 0, 0]), 1, "ties break to lowest index");
+        // Non-session traffic under affinity cycles like round-robin.
+        let loads = [0usize; 3];
+        let picks: Vec<usize> = (0..4).map(|_| r.route(&loads)).collect();
+        assert_eq!(picks, vec![0, 1, 2, 0]);
+        assert_eq!(r.placements().iter().sum::<usize>(), 6);
     }
 
     #[test]

@@ -24,7 +24,10 @@ pub struct ServerConfig {
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        Self { policy: BatchPolicy::stream(), queue_depth: 256 }
+        Self {
+            policy: BatchPolicy::stream(),
+            queue_depth: super::DEFAULT_QUEUE_DEPTH,
+        }
     }
 }
 

@@ -1,0 +1,701 @@
+//! Byte-budgeted table of streaming sessions: the coordinator-side
+//! home of resident MC lane state (`docs/serving.md` §Streaming
+//! sessions).
+//!
+//! A session is a long-lived signal (an ECG monitor) whose recurrent
+//! state stays resident between chunks, so each decision costs
+//! O(chunk x S) instead of O(history x S) — the deployment shape of
+//! continuous Bayesian monitoring in the paper's healthcare setting.
+//! The table owns, per session:
+//!
+//! * the consumed **history** (raw signal values) — small, always
+//!   retained, the replay source;
+//! * zero or more resident [`StreamState`] lane ranges (one per
+//!   MC-shard engine, or a single range under affinity routing) —
+//!   the byte-budgeted part.
+//!
+//! Eviction is CLOCK second-chance over sessions, exactly the
+//! [`crate::kernels::maskbank`] discipline, but the victim only loses
+//! its *lane-state bytes*: because masks and state are pure functions
+//! of `(design, session, beat, lane)`, an evicted session is rebuilt
+//! transparently by replaying its history (`Resume::Replay`), or — with
+//! replay disabled — rejected with a typed [`SessionError::Evicted`].
+//! Sessions with queued or in-flight chunks are never evicted.
+//!
+//! Concurrency: one mutex over the table (sessions are few and
+//! coarse, unlike the mask bank's per-lane-layer entries) plus a
+//! condvar so [`SessionTable::close`] can drain in-flight chunks —
+//! the close-session-drains contract. Counters are lock-free atomics
+//! snapshotted into the `obs` export ([`SessionStats`]).
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+
+use crate::fpga::StreamState;
+
+/// Bookkeeping bytes charged per ring-resident session on top of its
+/// lane-state words (map node, ring slot, entry fields — high-side
+/// estimate, same convention as the mask bank).
+const ENTRY_OVERHEAD: usize = 64;
+
+/// Typed failures of the session plane.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionError {
+    /// No such session (never opened, or already closed and removed).
+    Unknown(u64),
+    /// The session is closing; no new chunks are admitted.
+    Closed(u64),
+    /// Lane state was evicted and replay rebuilds are disabled.
+    Evicted(u64),
+    /// Streaming sessions are classifier-only.
+    UnsupportedTask,
+    /// The fleet was started without a session byte budget.
+    Disabled,
+}
+
+impl std::fmt::Display for SessionError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SessionError::Unknown(sid) => write!(f, "unknown session {sid}"),
+            SessionError::Closed(sid) => write!(f, "session {sid} is closed"),
+            SessionError::Evicted(sid) => write!(
+                f,
+                "session {sid} lane state evicted (replay disabled)"
+            ),
+            SessionError::UnsupportedTask => {
+                write!(f, "streaming sessions require a classifier design")
+            }
+            SessionError::Disabled => {
+                write!(
+                    f,
+                    "streaming sessions are disabled (no session budget)"
+                )
+            }
+        }
+    }
+}
+
+/// What a worker gets back when it picks up a session chunk.
+#[derive(Debug)]
+pub enum Resume {
+    /// The range's lane state is resident — continue incrementally.
+    Resident(StreamState),
+    /// The range was evicted: rebuild by replaying `history` (the
+    /// signal values consumed before the current chunk) into a fresh
+    /// stream, then continue. Bit-identical to having stayed resident,
+    /// because lane state is a pure function of the consumed signal.
+    Replay { history: Vec<f32> },
+}
+
+/// Point-in-time counter snapshot, exported through `obs`
+/// (`docs/observability.md` §Serve metrics).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SessionStats {
+    /// Sessions ever opened.
+    pub opened: u64,
+    /// Sessions closed (drained and removed).
+    pub closed: u64,
+    /// Sessions currently open (gauge).
+    pub resident: u64,
+    /// Lane-state bytes currently resident (gauge).
+    pub resident_bytes: u64,
+    /// Byte budget for resident lane state.
+    pub capacity_bytes: u64,
+    /// Sessions whose lane state was evicted by the byte budget.
+    pub evictions: u64,
+    /// Lane ranges rebuilt by history replay after an eviction.
+    pub replay_rebuilds: u64,
+    /// Chunks submitted across all sessions.
+    pub chunks: u64,
+    /// Chunks whose decision was recomputed at the boosted MC budget
+    /// after an uncertainty spike.
+    pub boosted_chunks: u64,
+}
+
+/// Static facts about one open session, stamped at `open` and read by
+/// the fleet's routing and worker paths.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionMeta {
+    /// Seed the session's per-beat mask schedule derives from.
+    pub seed: u64,
+    /// Engine the session's lanes are pinned to (affinity routing);
+    /// ignored under MC-shard placement.
+    pub engine: usize,
+    /// Base MC samples per decision.
+    pub samples: usize,
+}
+
+struct Entry {
+    meta: SessionMeta,
+    /// Raw signal values consumed so far (the replay source — always
+    /// retained; the byte budget governs lane state only).
+    history: Vec<f32>,
+    /// Resident lane ranges keyed by their first MC lane.
+    states: HashMap<usize, StreamState>,
+    /// Lane-state bytes currently charged for this session.
+    state_bytes: usize,
+    /// Chunks submitted but not yet parked back (queued or computing).
+    pending: usize,
+    closed: bool,
+    /// CLOCK reference bit: set on every chunk touch, cleared (second
+    /// chance) when the eviction hand sweeps past. Fresh sessions
+    /// start unreferenced, like fresh mask-bank inserts.
+    referenced: bool,
+    /// Whether this sid currently occupies a CLOCK ring slot (and is
+    /// charged `ENTRY_OVERHEAD`).
+    in_ring: bool,
+}
+
+#[derive(Default)]
+struct Inner {
+    entries: HashMap<u64, Entry>,
+    /// CLOCK ring of sessions holding resident lane-state bytes.
+    ring: Vec<u64>,
+    hand: usize,
+    bytes: usize,
+}
+
+impl Inner {
+    /// Evict lane state (never history) until the budget holds, CLOCK
+    /// order, skipping sessions with pending chunks. Returns the
+    /// number of sessions evicted.
+    fn make_room(&mut self, budget: usize) -> u64 {
+        let mut evicted = 0u64;
+        // Guard against a ring where every survivor is pinned by
+        // pending work: a full no-progress double-lap ends the sweep.
+        let mut since_progress = 0usize;
+        while self.bytes > budget
+            && !self.ring.is_empty()
+            && since_progress <= 2 * self.ring.len()
+        {
+            if self.hand >= self.ring.len() {
+                self.hand = 0;
+            }
+            let sid = self.ring[self.hand];
+            let e = self.entries.get_mut(&sid).expect("ring/map desync");
+            if e.pending > 0 {
+                // Queued work needs this state imminently; skip.
+                self.hand += 1;
+                since_progress += 1;
+            } else if e.referenced {
+                e.referenced = false;
+                self.hand += 1;
+                since_progress += 1;
+            } else {
+                let cost = e.state_bytes + ENTRY_OVERHEAD;
+                e.states.clear();
+                e.state_bytes = 0;
+                e.in_ring = false;
+                self.ring.swap_remove(self.hand);
+                // swap_remove moved the tail sid under the hand; keep
+                // the hand in place so it is inspected next.
+                self.bytes -= cost;
+                evicted += 1;
+                since_progress = 0;
+            }
+        }
+        evicted
+    }
+
+    /// Charge `added` freshly parked lane-state bytes to `sid`,
+    /// entering it into the CLOCK ring if it is not there already.
+    fn charge(&mut self, sid: u64, added: usize) {
+        let e = self.entries.get_mut(&sid).expect("charging unknown sid");
+        if !e.in_ring {
+            e.in_ring = true;
+            self.ring.push(sid);
+            self.bytes += ENTRY_OVERHEAD;
+        }
+        self.bytes += added;
+    }
+}
+
+/// The table itself. Shared as `Arc<SessionTable>` between the fleet
+/// (open/submit/close) and its engine workers (resume/park).
+pub struct SessionTable {
+    inner: Mutex<Inner>,
+    drained: Condvar,
+    capacity_bytes: usize,
+    replay: bool,
+    opened: AtomicU64,
+    closed: AtomicU64,
+    evictions: AtomicU64,
+    replay_rebuilds: AtomicU64,
+    chunks: AtomicU64,
+    boosted_chunks: AtomicU64,
+}
+
+impl std::fmt::Debug for SessionTable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.stats();
+        f.debug_struct("SessionTable")
+            .field("resident", &s.resident)
+            .field("resident_bytes", &s.resident_bytes)
+            .field("capacity_bytes", &s.capacity_bytes)
+            .field("evictions", &s.evictions)
+            .finish()
+    }
+}
+
+impl SessionTable {
+    /// A table budgeting at most `capacity_bytes` of resident lane
+    /// state (the CLI's `--session-mb`, scaled). `replay = false`
+    /// turns transparent rebuilds into [`SessionError::Evicted`].
+    pub fn new(capacity_bytes: usize, replay: bool) -> Self {
+        Self {
+            inner: Mutex::new(Inner::default()),
+            drained: Condvar::new(),
+            capacity_bytes,
+            replay,
+            opened: AtomicU64::new(0),
+            closed: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            replay_rebuilds: AtomicU64::new(0),
+            chunks: AtomicU64::new(0),
+            boosted_chunks: AtomicU64::new(0),
+        }
+    }
+
+    /// Whether evicted sessions are rebuilt transparently.
+    pub fn replay_enabled(&self) -> bool {
+        self.replay
+    }
+
+    /// Register a session. No lane state is charged yet: the worker
+    /// serving the first chunk opens fresh zero state (`history_end`
+    /// 0 replays nothing) and parks it back, at which point the
+    /// session enters the byte budget's CLOCK ring.
+    pub fn open(&self, sid: u64, meta: SessionMeta) {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        let entry = Entry {
+            meta,
+            history: Vec::new(),
+            states: HashMap::new(),
+            state_bytes: 0,
+            pending: 0,
+            closed: false,
+            referenced: false,
+            in_ring: false,
+        };
+        let prev = inner.entries.insert(sid, entry);
+        debug_assert!(prev.is_none(), "session id reused");
+        drop(inner);
+        self.opened.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Session facts stamped at `open`.
+    pub fn meta(&self, sid: u64) -> Result<SessionMeta, SessionError> {
+        let inner = self.inner.lock().expect("session table poisoned");
+        inner
+            .entries
+            .get(&sid)
+            .map(|e| e.meta)
+            .ok_or(SessionError::Unknown(sid))
+    }
+
+    /// Admit a chunk: append it to the session's history and account
+    /// `ranges` pending work items (one per engine shard the fleet
+    /// will dispatch). Returns the history length (values) *before*
+    /// this chunk — the `history_end` workers replay up to on rebuild.
+    pub fn submit(
+        &self,
+        sid: u64,
+        chunk: &[f32],
+        ranges: usize,
+    ) -> Result<usize, SessionError> {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        let e = inner
+            .entries
+            .get_mut(&sid)
+            .ok_or(SessionError::Unknown(sid))?;
+        if e.closed {
+            return Err(SessionError::Closed(sid));
+        }
+        let history_end = e.history.len();
+        e.history.extend_from_slice(chunk);
+        e.pending += ranges;
+        e.referenced = true;
+        drop(inner);
+        self.chunks.fetch_add(1, Ordering::Relaxed);
+        Ok(history_end)
+    }
+
+    /// Worker side: take ownership of the lane range starting at
+    /// `start` for the duration of a chunk. Resident state is handed
+    /// out directly; evicted state comes back as [`Resume::Replay`]
+    /// with the history up to `history_end` — or, with replay
+    /// disabled, a typed error (whose pending slot is released here,
+    /// since no `park` will follow).
+    pub fn resume(
+        &self,
+        sid: u64,
+        start: usize,
+        history_end: usize,
+    ) -> Result<Resume, SessionError> {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        let e = inner
+            .entries
+            .get_mut(&sid)
+            .ok_or(SessionError::Unknown(sid))?;
+        e.referenced = true;
+        if let Some(state) = e.states.remove(&start) {
+            let bytes = state.resident_bytes();
+            e.state_bytes -= bytes;
+            inner.bytes -= bytes;
+            return Ok(Resume::Resident(state));
+        }
+        if history_end == 0 {
+            // First chunk of a fresh session: nothing to replay, the
+            // worker opens zero state. Not an eviction rebuild, and
+            // fine even with replay disabled.
+            return Ok(Resume::Replay { history: Vec::new() });
+        }
+        if !self.replay {
+            e.pending = e.pending.saturating_sub(1);
+            drop(inner);
+            self.drained.notify_all();
+            return Err(SessionError::Evicted(sid));
+        }
+        let history = e.history[..history_end].to_vec();
+        drop(inner);
+        self.replay_rebuilds.fetch_add(1, Ordering::Relaxed);
+        Ok(Resume::Replay { history })
+    }
+
+    /// Worker side: a chunk failed between `resume` and `park` (e.g.
+    /// the engine rejected the rebuild) — release its pending slot so
+    /// [`SessionTable::close`] does not wait forever. Any checked-out
+    /// lane state is lost; the next chunk rebuilds by replay.
+    pub fn abandon(&self, sid: u64) {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        if let Some(e) = inner.entries.get_mut(&sid) {
+            e.pending = e.pending.saturating_sub(1);
+        }
+        drop(inner);
+        self.drained.notify_all();
+    }
+
+    /// The signal values consumed before `end` — the replay source for
+    /// the boosted-lane escalation path, which rebuilds its extra
+    /// lanes from scratch regardless of residency.
+    pub fn history(
+        &self,
+        sid: u64,
+        end: usize,
+    ) -> Result<Vec<f32>, SessionError> {
+        let inner = self.inner.lock().expect("session table poisoned");
+        let e = inner.entries.get(&sid).ok_or(SessionError::Unknown(sid))?;
+        Ok(e.history[..end.min(e.history.len())].to_vec())
+    }
+
+    /// Worker side: return a range's advanced lane state after a
+    /// chunk, release its pending slot, and run the byte budget
+    /// (which may immediately evict the parked state — or another
+    /// session's).
+    pub fn park(&self, sid: u64, state: StreamState) {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        let added = state.resident_bytes();
+        {
+            let Some(e) = inner.entries.get_mut(&sid) else {
+                // Session force-removed while the chunk was in flight;
+                // drop the state on the floor.
+                return;
+            };
+            e.state_bytes += added;
+            e.pending = e.pending.saturating_sub(1);
+            e.states.insert(state.start, state);
+            e.referenced = true;
+        }
+        inner.charge(sid, added);
+        let evicted = inner.make_room(self.capacity_bytes);
+        drop(inner);
+        if evicted > 0 {
+            self.evictions.fetch_add(evicted, Ordering::Relaxed);
+        }
+        self.drained.notify_all();
+    }
+
+    /// Close a session: stop admitting chunks, **drain** what is
+    /// queued or in flight (blocking on the worker-side `park`s),
+    /// then drop the session entirely — history, lane state, bytes.
+    pub fn close(&self, sid: u64) -> Result<(), SessionError> {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        match inner.entries.get_mut(&sid) {
+            None => return Err(SessionError::Unknown(sid)),
+            Some(e) => e.closed = true,
+        }
+        while inner.entries.get(&sid).expect("closing session").pending > 0 {
+            inner = self
+                .drained
+                .wait(inner)
+                .expect("session table poisoned");
+        }
+        let e = inner.entries.remove(&sid).expect("closing session");
+        if e.in_ring {
+            inner.ring.retain(|&s| s != sid);
+            inner.bytes -= e.state_bytes + ENTRY_OVERHEAD;
+            // The hand may now point past the end; make_room re-wraps.
+        }
+        drop(inner);
+        self.closed.fetch_add(1, Ordering::Relaxed);
+        Ok(())
+    }
+
+    /// Record a chunk whose decision was recomputed at the boosted MC
+    /// budget (the adaptive streaming tier).
+    pub fn note_boost(&self) {
+        self.boosted_chunks.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> SessionStats {
+        let (resident, resident_bytes) = {
+            let inner = self.inner.lock().expect("session table poisoned");
+            (inner.entries.len() as u64, inner.bytes as u64)
+        };
+        SessionStats {
+            opened: self.opened.load(Ordering::Relaxed),
+            closed: self.closed.load(Ordering::Relaxed),
+            resident,
+            resident_bytes,
+            capacity_bytes: self.capacity_bytes as u64,
+            evictions: self.evictions.load(Ordering::Relaxed),
+            replay_rebuilds: self.replay_rebuilds.load(Ordering::Relaxed),
+            chunks: self.chunks.load(Ordering::Relaxed),
+            boosted_chunks: self.boosted_chunks.load(Ordering::Relaxed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{ArchConfig, Task};
+    use crate::fpga::Accelerator;
+    use crate::hwmodel::resource::ReuseFactors;
+    use crate::nn::Params;
+    use crate::rng::Rng;
+    use std::sync::Arc;
+
+    fn accel() -> Accelerator {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        Accelerator::new(&cfg, &params, ReuseFactors::new(1, 1, 1), 9)
+    }
+
+    fn meta(engine: usize) -> SessionMeta {
+        SessionMeta { seed: 7, engine, samples: 4 }
+    }
+
+    #[test]
+    fn open_submit_resume_park_round_trip() {
+        let a = accel();
+        let table = SessionTable::new(1 << 20, true);
+        table.open(1, meta(0));
+        assert_eq!(table.meta(1).unwrap().samples, 4);
+        let end = table.submit(1, &[0.5; 24], 1).unwrap();
+        assert_eq!(end, 0, "first chunk starts at history 0");
+        match table.resume(1, 0, end).unwrap() {
+            Resume::Replay { history } => {
+                assert!(history.is_empty(), "fresh session: nothing to replay")
+            }
+            Resume::Resident(_) => panic!("no state before the first park"),
+        }
+        let s = table.stats();
+        assert_eq!(s.replay_rebuilds, 0, "a fresh open is not a rebuild");
+        // The worker opens zero state, advances it, parks it back.
+        table.park(1, a.open_stream(7, 0, 4));
+        let s = table.stats();
+        assert_eq!((s.opened, s.resident, s.chunks), (1, 1, 1));
+        assert!(s.resident_bytes > 0);
+        // Second chunk finds the parked state resident and the
+        // history appended.
+        let end = table.submit(1, &[0.25; 10], 1).unwrap();
+        assert_eq!(end, 24);
+        let Resume::Resident(st) = table.resume(1, 0, end).unwrap() else {
+            panic!("state parked by the first chunk must be resident");
+        };
+        assert_eq!(st.count, 4);
+        assert_eq!(table.history(1, end).unwrap().len(), 24);
+        table.park(1, st);
+        table.close(1).unwrap();
+        let s = table.stats();
+        assert_eq!((s.closed, s.resident, s.resident_bytes), (1, 0, 0));
+        assert!(matches!(
+            table.submit(1, &[0.0; 2], 1),
+            Err(SessionError::Unknown(1))
+        ));
+        assert_eq!(table.meta(1), Err(SessionError::Unknown(1)));
+    }
+
+    #[test]
+    fn zero_budget_evicts_and_replay_hands_out_history() {
+        let a = accel();
+        let table = SessionTable::new(0, true);
+        table.open(5, meta(0));
+        let end = table.submit(5, &[1.0, 2.0, 3.0], 1).unwrap();
+        match table.resume(5, 0, end).unwrap() {
+            Resume::Replay { history } => {
+                assert!(history.is_empty(), "no history before chunk 0")
+            }
+            Resume::Resident(_) => panic!("nothing parked yet"),
+        }
+        // Parking under a zero budget evicts the state immediately.
+        table.park(5, a.open_stream(9, 0, 4));
+        assert_eq!(table.stats().evictions, 1);
+        assert_eq!(table.stats().resident_bytes, 0);
+        let end = table.submit(5, &[4.0; 2], 1).unwrap();
+        assert_eq!(end, 3);
+        match table.resume(5, 0, end).unwrap() {
+            Resume::Replay { history } => {
+                assert_eq!(history, vec![1.0, 2.0, 3.0])
+            }
+            Resume::Resident(_) => panic!("budget 0 keeps nothing"),
+        }
+        let s = table.stats();
+        assert_eq!(s.replay_rebuilds, 1, "the eviction rebuild is counted");
+        table.park(5, a.open_stream(9, 0, 4));
+        assert_eq!(table.stats().evictions, 2);
+        table.close(5).unwrap();
+    }
+
+    #[test]
+    fn replay_disabled_turns_eviction_into_typed_error() {
+        let a = accel();
+        let table = SessionTable::new(0, false);
+        assert!(!table.replay_enabled());
+        table.open(2, meta(1));
+        // The first chunk is always admitted: fresh zero state needs
+        // no replay.
+        let end = table.submit(2, &[0.5; 4], 1).unwrap();
+        assert!(matches!(
+            table.resume(2, 0, end).unwrap(),
+            Resume::Replay { .. }
+        ));
+        table.park(2, a.open_stream(3, 0, 4)); // budget 0 → evicted
+        // The second chunk finds the state gone and replay disabled.
+        let end = table.submit(2, &[0.5; 4], 1).unwrap();
+        assert_eq!(
+            table.resume(2, 0, end).unwrap_err(),
+            SessionError::Evicted(2)
+        );
+        // The failed resume released its pending slot: close drains
+        // immediately instead of hanging.
+        table.close(2).unwrap();
+        assert_eq!(table.stats().closed, 1);
+    }
+
+    #[test]
+    fn pending_sessions_are_never_evicted() {
+        let a = accel();
+        // Budget fits exactly one session's lane state.
+        let one = a.open_stream(1, 0, 8).resident_bytes() + ENTRY_OVERHEAD;
+        let table = SessionTable::new(one, true);
+        // Run a session's first chunk to completion: its zero state is
+        // parked and resident afterwards.
+        let prime = |sid: u64| {
+            table.open(sid, meta(0));
+            let end = table.submit(sid, &[0.0; 8], 1).unwrap();
+            assert!(matches!(
+                table.resume(sid, 0, end).unwrap(),
+                Resume::Replay { .. }
+            ));
+            table.park(sid, a.open_stream(sid, 0, 8));
+        };
+        prime(1);
+        assert_eq!(table.stats().evictions, 0);
+        // Check session 1's range out: it now has a pending chunk.
+        let end = table.submit(1, &[1.0; 8], 1).unwrap();
+        let Resume::Resident(checked_out) = table.resume(1, 0, end).unwrap()
+        else {
+            panic!("primed state must be resident");
+        };
+        // Priming a second session overflows the budget; the sweep
+        // must evict session 2 itself, never the pending session 1.
+        prime(2);
+        assert_eq!(table.stats().evictions, 1);
+        let end2 = table.submit(2, &[0.0; 4], 1).unwrap();
+        match table.resume(2, 0, end2).unwrap() {
+            Resume::Replay { history } => assert_eq!(history.len(), 8),
+            Resume::Resident(_) => panic!("session 2 must be the victim"),
+        }
+        table.park(2, a.open_stream(2, 0, 8));
+        // Session 1's checked-out range parks back fine.
+        table.park(1, checked_out);
+        table.close(1).unwrap();
+        table.close(2).unwrap();
+        assert_eq!(table.stats().resident_bytes, 0);
+    }
+
+    #[test]
+    fn close_blocks_until_inflight_chunks_park() {
+        let a = accel();
+        let table = Arc::new(SessionTable::new(1 << 20, true));
+        table.open(9, meta(0));
+        let end = table.submit(9, &[0.0; 6], 1).unwrap();
+        assert!(matches!(
+            table.resume(9, 0, end).unwrap(),
+            Resume::Replay { .. }
+        ));
+        let st = a.open_stream(9, 0, 4);
+        // A worker parks the state back after a delay; close must wait
+        // for it (the close-session-drains regression).
+        let worker_table = table.clone();
+        let worker = std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(50));
+            worker_table.park(9, st);
+        });
+        let t0 = std::time::Instant::now();
+        table.close(9).unwrap();
+        assert!(
+            t0.elapsed() >= std::time::Duration::from_millis(40),
+            "close returned before the in-flight chunk parked"
+        );
+        worker.join().unwrap();
+        assert_eq!(table.stats().resident, 0);
+    }
+
+    #[test]
+    fn clock_second_chance_prefers_untouched_sessions() {
+        let a = accel();
+        let one = a.open_stream(1, 0, 4).resident_bytes() + ENTRY_OVERHEAD;
+        // Room for exactly two sessions' lane state.
+        let table = SessionTable::new(2 * one, true);
+        let prime = |sid: u64| {
+            table.open(sid, meta(0));
+            let end = table.submit(sid, &[0.0], 1).unwrap();
+            let _ = table.resume(sid, 0, end).unwrap();
+            table.park(sid, a.open_stream(sid, 0, 4));
+        };
+        prime(1);
+        prime(2);
+        assert_eq!(table.stats().evictions, 0);
+        // A third session overflows the budget. Every reference bit is
+        // set (each park references its session), so the first sweep
+        // clears them all and evicts the hand's next stop — session 1.
+        prime(3);
+        assert_eq!(table.stats().evictions, 1);
+        // Touch session 2 (sets its bit); session 3 stays untouched.
+        let end = table.submit(2, &[1.0], 1).unwrap();
+        let Resume::Resident(st) = table.resume(2, 0, end).unwrap() else {
+            panic!("session 2 must still be resident");
+        };
+        table.park(2, st);
+        // A fourth session overflows again: the hand now finds the
+        // untouched session 3 first and evicts it; the referenced
+        // session 2 survives on its second chance.
+        prime(4);
+        assert_eq!(table.stats().evictions, 2);
+        let end = table.submit(2, &[2.0], 1).unwrap();
+        assert!(matches!(
+            table.resume(2, 0, end).unwrap(),
+            Resume::Resident(_)
+        ));
+        let end = table.submit(3, &[0.0], 1).unwrap();
+        assert!(matches!(
+            table.resume(3, 0, end).unwrap(),
+            Resume::Replay { .. }
+        ));
+    }
+}

@@ -107,6 +107,92 @@ fn requantize_rows(buf: &mut [Fx16], from: QFormat, to: QFormat) {
     }
 }
 
+/// Salt folded into the per-beat mask seed schedule of a streaming
+/// session, so session mask streams can never collide with the
+/// one-shot request space (whose `req_seed` is the fleet request id).
+pub const STREAM_SALT: u64 = 0x5EED_57E4;
+
+/// The effective request seed of beat `beat_index` of a streaming
+/// session: `mix3(session_seed, beat_index, STREAM_SALT)`. Every MC
+/// lane `k` of that beat then derives its mask seed exactly like
+/// [`Accelerator::predict_seeded`] — `mix3(design_seed, req_seed, k)`
+/// — so a session's masks are a pure function of
+/// `(design, session, beat_index, k)`: chunk boundaries, MC-shard
+/// splits, evictions and replays all re-derive identical bits.
+pub fn stream_req_seed(session_seed: u64, beat_index: u64) -> u64 {
+    crate::rng::mix3(session_seed, beat_index, STREAM_SALT)
+}
+
+/// Typed failures of the streaming prediction path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum StreamError {
+    /// Streaming decisions are classifier-only: the anomaly head
+    /// replays the whole window through the decoder, which has no
+    /// incremental meaning mid-stream.
+    UnsupportedTask,
+    /// Chunk length is not a whole number of timesteps.
+    RaggedChunk { len: usize, idim: usize },
+    /// The state snapshot was opened on a different design shape.
+    ShapeMismatch,
+}
+
+impl std::fmt::Display for StreamError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            StreamError::UnsupportedTask => {
+                write!(f, "streaming requires a classifier design")
+            }
+            StreamError::RaggedChunk { len, idim } => write!(
+                f,
+                "chunk of {len} values is not a whole number of \
+                 {idim}-wide timesteps"
+            ),
+            StreamError::ShapeMismatch => {
+                write!(f, "stream state does not match this design")
+            }
+        }
+    }
+}
+
+/// Resumable snapshot of a streaming session's MC lanes: per-lane
+/// packed (h, c) registers for every recurrent layer, plus the
+/// position in the beat/mask schedule. Feeding a signal chunk-by-chunk
+/// through one of these is bit-identical to one continuous pass
+/// ([`Accelerator::predict_stream`]); the lane range `start..start +
+/// count` makes the state MC-shardable — lane `k`'s state is a pure
+/// function of `(design, session, beats consumed, k)`, so disjoint
+/// ranges held by different engines evolve exactly the lanes a single
+/// resident engine would.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamState {
+    /// `[count][words_per_lane]` packed architectural state.
+    words: Vec<u64>,
+    words_per_lane: usize,
+    /// Seed the whole session's mask schedule derives from.
+    pub session_seed: u64,
+    /// Completed beats (decisions already emitted).
+    pub beats_done: u64,
+    /// Timesteps already consumed of the in-progress beat.
+    pub t_in_beat: usize,
+    /// First MC sample lane this state holds.
+    pub start: usize,
+    /// MC sample lanes resident in this state.
+    pub count: usize,
+}
+
+impl StreamState {
+    /// Heap bytes this snapshot keeps resident — the unit the session
+    /// table's byte budget charges.
+    pub fn resident_bytes(&self) -> usize {
+        self.words.len() * 8
+    }
+
+    /// Total timesteps consumed since the session opened.
+    pub fn timesteps_done(&self, seq_len: usize) -> u64 {
+        self.beats_done * seq_len as u64 + self.t_in_beat as u64
+    }
+}
+
 /// The synthesised design: engines, samplers, reuse factors, precision.
 pub struct Accelerator {
     pub cfg: ArchConfig,
@@ -132,6 +218,12 @@ pub struct Accelerator {
     /// the bank either way; the bank only converts repeat seeds from
     /// LFSR streams into row copies.
     mask_bank: Option<Arc<MaskBank>>,
+    /// Recurrent lane-steps computed since construction: one unit per
+    /// (lane, layer, timestep) advanced. The streaming O(chunk)
+    /// contract is asserted on deltas of this counter — a resumed
+    /// chunk spends `chunk_timesteps x layers x lanes`, never the
+    /// session's history.
+    lane_steps: u64,
     // Scratch (no allocation in the hot loop).
     beat_q: Vec<Fx16>,
 }
@@ -192,8 +284,15 @@ impl Accelerator {
             kernel_backend: kernels::default_backend(),
             seed,
             mask_bank: None,
+            lane_steps: 0,
             beat_q: Vec::new(),
         }
+    }
+
+    /// Recurrent (lane x layer x timestep) advances computed so far —
+    /// the streaming cost meter (see the `lane_steps` field).
+    pub fn lane_steps(&self) -> u64 {
+        self.lane_steps
     }
 
     /// Attach (or detach) a shared seed-indexed mask bank. Output bits
@@ -293,6 +392,73 @@ impl Accelerator {
         }
     }
 
+    /// Reusable inter-layer bus sized for `rows` lanes of the widest
+    /// layer (no per-timestep allocation in the hot loop —
+    /// EXPERIMENTS.md §Perf).
+    fn make_bus(&self, rows: usize) -> Vec<Fx16> {
+        let max_h = self
+            .lstms
+            .iter()
+            .map(|e| e.hdim)
+            .max()
+            .unwrap_or(1)
+            .max(self.cfg.input_dim);
+        vec![Fx16::ZERO; rows * max_h]
+    }
+
+    /// Advance the encoder stack one timestep over all configured
+    /// lanes: `bus` enters holding `[rows][input_dim]` quantised inputs
+    /// at the first layer's format and leaves holding the last encoder
+    /// layer's `[rows][hdim]` output. Where adjacent layers run at
+    /// different formats the bus is requantised in place (a no-op on
+    /// uniform designs — the bit-exactness contract at Q6.10). State is
+    /// NOT reset here: one-shot passes reset before the first timestep,
+    /// the streaming path deliberately resumes. Returns the bus
+    /// content's (width, format).
+    fn step_encoder_rows(
+        &mut self,
+        bus: &mut [Fx16],
+        rows: usize,
+    ) -> (usize, QFormat) {
+        let nl = self.cfg.nl;
+        let mut width = self.cfg.input_dim;
+        let mut bus_fmt = self.lstms[0].act_format();
+        for l in 0..nl {
+            let lf = self.lstms[l].act_format();
+            requantize_rows(&mut bus[..rows * width], bus_fmt, lf);
+            let hd = self.lstms[l].hdim;
+            let h = self.lstms[l].step_rows(bus, width);
+            bus[..rows * hd].copy_from_slice(h);
+            width = hd;
+            bus_fmt = lf;
+        }
+        self.lane_steps += (rows * nl) as u64;
+        (width, bus_fmt)
+    }
+
+    /// Run the classifier head on the encoder output held in `bus`:
+    /// requantise to the head's format, dense MVM, dequantise, softmax
+    /// per lane (ARM-side postprocess, as in the paper). Returns
+    /// `[rows][K]` probabilities.
+    fn classify_head_rows(
+        &mut self,
+        bus: &mut [Fx16],
+        rows: usize,
+        width: usize,
+        bus_fmt: QFormat,
+    ) -> Vec<f32> {
+        let k = self.cfg.out_len();
+        let dense_fmt = self.dense.fmt;
+        requantize_rows(&mut bus[..rows * width], bus_fmt, dense_fmt);
+        let logits = self.dense.step_rows(bus, width);
+        let mut probs: Vec<f32> =
+            logits.iter().map(|&v| dense_fmt.dequantize(v)).collect();
+        for r in 0..rows {
+            softmax_row(&mut probs[r * k..(r + 1) * k]);
+        }
+        probs
+    }
+
     /// One blocked feedforward pass over the configured sample lanes.
     /// `row_beat[r]` selects which of `beats` lane `r` streams; masks
     /// must already be loaded (`set_block` + per-lane presample).
@@ -318,22 +484,10 @@ impl Accelerator {
             e.reset();
         }
         let nl = self.cfg.nl;
-        // One reusable inter-layer bus for all lanes (no per-timestep
-        // allocation in the hot loop — EXPERIMENTS.md §Perf).
-        let max_h = self
-            .lstms
-            .iter()
-            .map(|e| e.hdim)
-            .max()
-            .unwrap_or(1)
-            .max(idim);
-        let mut bus: Vec<Fx16> = vec![Fx16::ZERO; rows * max_h];
+        let mut bus = self.make_bus(rows);
         // Stream the beats through the encoder stack, all lanes in
         // lockstep: every gate weight row fetched by a timestep serves
-        // every lane (the blocked-kernel amortisation). Where adjacent
-        // layers run at different formats the bus is requantised in
-        // place (a no-op on uniform designs — the bit-exactness
-        // contract at Q6.10).
+        // every lane (the blocked-kernel amortisation).
         let mut width = idim;
         let mut bus_fmt = in_fmt;
         for ti in 0..t {
@@ -342,17 +496,9 @@ impl Accelerator {
                 bus[r * idim..r * idim + idim]
                     .copy_from_slice(&self.beat_q[src..src + idim]);
             }
-            width = idim;
-            bus_fmt = in_fmt;
-            for l in 0..nl {
-                let lf = self.lstms[l].act_format();
-                requantize_rows(&mut bus[..rows * width], bus_fmt, lf);
-                let hd = self.lstms[l].hdim;
-                let h = self.lstms[l].step_rows(&bus, width);
-                bus[..rows * hd].copy_from_slice(h);
-                width = hd;
-                bus_fmt = lf;
-            }
+            let (w, f) = self.step_encoder_rows(&mut bus, rows);
+            width = w;
+            bus_fmt = f;
         }
         match self.cfg.task {
             Task::Anomaly => {
@@ -377,6 +523,7 @@ impl Accelerator {
                         width = hd;
                         bus_fmt = lf;
                     }
+                    self.lane_steps += (rows * nl) as u64;
                     // Temporal dense on this step's decoder output (the
                     // univariate ECG reconstruction point, as in the
                     // single-lane pass).
@@ -390,20 +537,7 @@ impl Accelerator {
                 out
             }
             Task::Classify => {
-                let k = self.cfg.out_len();
-                let dense_fmt = self.dense.fmt;
-                requantize_rows(&mut bus[..rows * width], bus_fmt, dense_fmt);
-                let logits = self.dense.step_rows(&bus, width);
-                // Softmax on the dequantised logits (ARM-side postprocess,
-                // as in the paper's classifier head).
-                let mut probs: Vec<f32> = logits
-                    .iter()
-                    .map(|&v| dense_fmt.dequantize(v))
-                    .collect();
-                for r in 0..rows {
-                    softmax_row(&mut probs[r * k..(r + 1) * k]);
-                }
-                probs
+                self.classify_head_rows(&mut bus, rows, width, bus_fmt)
             }
         }
     }
@@ -606,6 +740,179 @@ impl Accelerator {
             out_len: ctl.acc.out_len(),
             converged,
         }
+    }
+
+    /// Packed `u64` words one MC lane's full recurrent state occupies
+    /// on this design (every layer's (h, c) registers).
+    pub fn state_words_per_lane(&self) -> usize {
+        self.lstms.iter().map(|e| e.state_words_per_row()).sum()
+    }
+
+    /// Resident bytes one MC lane of stream state costs — what the
+    /// coordinator's session table charges its byte budget per lane.
+    pub fn state_bytes_per_lane(&self) -> usize {
+        self.state_words_per_lane() * 8
+    }
+
+    fn save_lane_state(&self, r: usize, out: &mut [u64]) {
+        let mut off = 0;
+        for e in &self.lstms {
+            let w = e.state_words_per_row();
+            out[off..off + w].copy_from_slice(&e.state_row_words(r));
+            off += w;
+        }
+    }
+
+    fn load_lane_state(&mut self, r: usize, words: &[u64]) {
+        let mut off = 0;
+        for e in self.lstms.iter_mut() {
+            let w = e.state_words_per_row();
+            e.set_state_row_words(r, &words[off..off + w]);
+            off += w;
+        }
+    }
+
+    /// Load the in-progress beat's masks into every resident lane.
+    /// Masks are a pure function of `(design, session, beat, k)` —
+    /// see [`stream_req_seed`] — so a resumed (or replayed, or
+    /// re-sharded) state re-derives exactly the bits the continuous
+    /// pass used, and the mask bank converts the re-derivation into
+    /// row copies when attached.
+    fn presample_stream_masks(&mut self, st: &StreamState) {
+        let req_seed = stream_req_seed(st.session_seed, st.beats_done);
+        for k in 0..st.count {
+            let sample_seed = crate::rng::mix3(
+                self.seed,
+                req_seed,
+                (st.start + k) as u64,
+            );
+            self.presample_masks_row_seeded(k, sample_seed);
+        }
+    }
+
+    /// Open a resumable stream over MC lanes `start..start + count`:
+    /// zeroed recurrent state at beat 0, timestep 0. The first beat fed
+    /// through this state is bit-identical to
+    /// `predict_seeded(beat, stream_req_seed(session_seed, 0), start,
+    /// count)` — both start from zero state with the same mask
+    /// schedule; subsequent beats keep the state resident (the
+    /// continuous-monitoring semantics) instead of resetting.
+    pub fn open_stream(
+        &self,
+        session_seed: u64,
+        start: usize,
+        count: usize,
+    ) -> StreamState {
+        let words_per_lane = self.state_words_per_lane();
+        StreamState {
+            words: vec![0u64; count * words_per_lane],
+            words_per_lane,
+            session_seed,
+            beats_done: 0,
+            t_in_beat: 0,
+            start,
+            count,
+        }
+    }
+
+    /// Resumable streaming prediction: consume `signal` (a whole number
+    /// of timesteps, any chunking) through the resident state, emitting
+    /// one MC decision per completed beat (`seq_len` timesteps). The
+    /// contract is **bitwise**: any split of a signal into chunks —
+    /// across calls, across engines holding disjoint lane ranges, or
+    /// across an eviction + replay — produces exactly the decisions of
+    /// one continuous pass. Cost is O(chunk x layers x lanes)
+    /// ([`Accelerator::lane_steps`] meters it); prior history is never
+    /// recomputed.
+    pub fn predict_stream(
+        &mut self,
+        st: &mut StreamState,
+        signal: &[f32],
+    ) -> Result<Vec<McOutput>, StreamError> {
+        if self.cfg.task != Task::Classify {
+            return Err(StreamError::UnsupportedTask);
+        }
+        let idim = self.cfg.input_dim;
+        if signal.len() % idim != 0 {
+            return Err(StreamError::RaggedChunk {
+                len: signal.len(),
+                idim,
+            });
+        }
+        if st.words_per_lane != self.state_words_per_lane()
+            || st.words.len() != st.count * st.words_per_lane
+        {
+            return Err(StreamError::ShapeMismatch);
+        }
+        let t = self.cfg.seq_len;
+        let n_steps = signal.len() / idim;
+        let rows = st.count;
+        let out_len = self.cfg.out_len();
+        if rows == 0 {
+            // Zero-lane shard: track the schedule position (so merges
+            // stay aligned) and answer empty sample sets, the
+            // predict_seeded count = 0 behaviour.
+            let total = st.t_in_beat + n_steps;
+            let beats = total / t;
+            st.beats_done += beats as u64;
+            st.t_in_beat = total % t;
+            return Ok((0..beats)
+                .map(|_| McOutput { samples: Vec::new(), s: 0, out_len })
+                .collect());
+        }
+        if n_steps == 0 {
+            return Ok(Vec::new());
+        }
+        self.set_block(rows);
+        for k in 0..rows {
+            self.load_lane_state(
+                k,
+                &st.words[k * st.words_per_lane..(k + 1) * st.words_per_lane],
+            );
+        }
+        self.presample_stream_masks(st);
+        // Quantise the chunk once, at the first layer's format —
+        // identical per-element arithmetic to the one-shot beat
+        // quantisation, so chunk boundaries cannot move bits.
+        let in_fmt = self.lstms[0].act_format();
+        self.beat_q.clear();
+        self.beat_q.extend(signal.iter().map(|&v| in_fmt.quantize(v)));
+        let mut bus = self.make_bus(rows);
+        let mut outs = Vec::new();
+        for ti in 0..n_steps {
+            // All MC lanes of a session stream the same signal.
+            for r in 0..rows {
+                bus[r * idim..r * idim + idim].copy_from_slice(
+                    &self.beat_q[ti * idim..(ti + 1) * idim],
+                );
+            }
+            let (width, bus_fmt) = self.step_encoder_rows(&mut bus, rows);
+            st.t_in_beat += 1;
+            if st.t_in_beat == t {
+                // Beat boundary: decision from the resident state, then
+                // advance the per-beat mask schedule. The recurrent
+                // state is NOT reset — the stream carries context
+                // across beats.
+                let probs =
+                    self.classify_head_rows(&mut bus, rows, width, bus_fmt);
+                outs.push(McOutput { samples: probs, s: rows, out_len });
+                st.t_in_beat = 0;
+                st.beats_done += 1;
+                // Next beat's masks — skipped when the chunk ends here
+                // (the next call re-derives them from `beats_done`).
+                if ti + 1 < n_steps {
+                    self.presample_stream_masks(st);
+                }
+            }
+        }
+        for k in 0..rows {
+            let range =
+                k * st.words_per_lane..(k + 1) * st.words_per_lane;
+            let mut snap = vec![0u64; st.words_per_lane];
+            self.save_lane_state(k, &mut snap);
+            st.words[range].copy_from_slice(&snap);
+        }
+        Ok(outs)
     }
 
     /// Post-synthesis resource report (the Table III "Used" row).
@@ -1314,6 +1621,297 @@ mod tests {
         assert!(q8.dsps < q16.dsps, "{} !< {}", q8.dsps, q16.dsps);
         assert!(q8.luts < q16.luts);
         assert!(q8.brams < q16.brams);
+    }
+
+    /// Fixture for the streaming tests: 2-layer Bayesian classifier,
+    /// short beats, and a multi-beat synthetic signal.
+    fn stream_fixture() -> (ArchConfig, Params, Vec<f32>) {
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 2, "YY");
+        cfg.seq_len = 24;
+        let params = Params::init(&cfg, &mut Rng::new(2));
+        let signal: Vec<f32> = (0..3 * cfg.seq_len)
+            .map(|i| {
+                (i as f32 * 0.13).sin() + 0.3 * (i as f32 * 0.05).cos()
+            })
+            .collect();
+        (cfg, params, signal)
+    }
+
+    /// The streaming tentpole contract: feeding a signal chunk-by-chunk
+    /// through a resumed [`StreamState`] — any chunking, mid-beat
+    /// splits included, with unrelated one-shot work interleaved on the
+    /// same engines, with or without a mask bank — produces exactly the
+    /// decisions of one continuous pass. The first beat is additionally
+    /// anchored to `predict_seeded` (cross-path oracle), and later
+    /// beats are shown to actually carry state.
+    #[test]
+    fn stream_chunked_matches_one_continuous_pass_bitwise() {
+        let (cfg, params, signal) = stream_fixture();
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let t = cfg.seq_len;
+        let (s, sid) = (6usize, 0xABCDu64);
+
+        let mut one = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut st = one.open_stream(sid, 0, s);
+        let whole = one.predict_stream(&mut st, &signal).unwrap();
+        assert_eq!(whole.len(), 3, "one decision per completed beat");
+        assert_eq!(st.beats_done, 3);
+        assert_eq!(st.t_in_beat, 0);
+        for out in &whole {
+            assert_eq!(out.s, s);
+            for row in out.samples.chunks_exact(out.out_len) {
+                assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-4);
+            }
+        }
+
+        // Cross-path anchor: beat 0 from zero state is bit-identical to
+        // the seeded one-shot path under the session's beat-0 seed.
+        let mut seeded = Accelerator::new(&cfg, &params, reuse, 9);
+        let want0 =
+            seeded.predict_seeded(&signal[..t], stream_req_seed(sid, 0), 0, s);
+        assert_eq!(whole[0].samples, want0.samples, "beat-0 anchor");
+
+        // Beat 1 carries the session's resident state — a stateless
+        // one-shot of the same window under the same mask seed differs.
+        let want1 = seeded.predict_seeded(
+            &signal[t..2 * t],
+            stream_req_seed(sid, 1),
+            0,
+            s,
+        );
+        assert_ne!(
+            whole[1].samples, want1.samples,
+            "streaming must carry hidden state across beats"
+        );
+
+        let beat0: Vec<f32> = signal[..t].to_vec();
+        for (ci, chunks) in [
+            vec![3 * t],
+            vec![5, 40, 27],
+            vec![30, 30, 12],
+            vec![t, t, t],
+            vec![1; 3 * t],
+        ]
+        .iter()
+        .enumerate()
+        {
+            let mut acc = Accelerator::new(&cfg, &params, reuse, 9);
+            if ci == 2 {
+                // Interleaved variant: the engines serve unrelated
+                // one-shot traffic between chunks (worker reality).
+                acc.set_mask_bank(Some(Arc::new(MaskBank::new(1 << 20))));
+            }
+            let mut st = acc.open_stream(sid, 0, s);
+            let mut got = Vec::new();
+            let mut off = 0;
+            for &c in chunks.iter() {
+                got.extend(
+                    acc.predict_stream(&mut st, &signal[off..off + c])
+                        .unwrap(),
+                );
+                off += c;
+                if ci == 2 {
+                    let _ = acc.predict_seeded(&beat0, 12345, 0, 4);
+                }
+            }
+            assert_eq!(off, signal.len(), "chunking {ci} covers signal");
+            assert_eq!(got.len(), whole.len());
+            for (b, (g, w)) in got.iter().zip(&whole).enumerate() {
+                assert_eq!(
+                    g.samples, w.samples,
+                    "chunking {ci}, beat {b} drifted from continuous pass"
+                );
+            }
+        }
+    }
+
+    /// MC-shard invariance mid-stream: disjoint lane ranges held by
+    /// separate accelerators (fleet engines), each resuming its own
+    /// [`StreamState`], concatenate per beat to exactly the whole-range
+    /// decisions — lane `k`'s trajectory is a pure function of
+    /// `(design, session, beats, k)`, independent of engine count.
+    #[test]
+    fn stream_mc_shards_concatenate_to_whole_mid_stream() {
+        let (cfg, params, signal) = stream_fixture();
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let (s, sid) = (8usize, 0x1111u64);
+        let mut one = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut st = one.open_stream(sid, 0, s);
+        let whole = one.predict_stream(&mut st, &signal).unwrap();
+
+        let ranges = [(0usize, 3usize), (3, 3), (6, 2)];
+        let mut engines: Vec<(Accelerator, StreamState)> = ranges
+            .iter()
+            .map(|&(start, count)| {
+                let a = Accelerator::new(&cfg, &params, reuse, 9);
+                let st = a.open_stream(sid, start, count);
+                (a, st)
+            })
+            .collect();
+        let mut merged: Vec<Vec<f32>> = Vec::new();
+        let mut off = 0;
+        for &c in &[10usize, 30, 32] {
+            let chunk = &signal[off..off + c];
+            off += c;
+            let mut per_engine: Vec<Vec<McOutput>> = Vec::new();
+            for (a, st) in engines.iter_mut() {
+                per_engine.push(a.predict_stream(st, chunk).unwrap());
+            }
+            let beats = per_engine[0].len();
+            for outs in &per_engine {
+                assert_eq!(outs.len(), beats, "shards stay in lockstep");
+            }
+            for b in 0..beats {
+                let mut row = Vec::new();
+                for outs in &per_engine {
+                    row.extend(outs[b].samples.iter().copied());
+                }
+                merged.push(row);
+            }
+        }
+        assert_eq!(merged.len(), whole.len());
+        for (b, (m, w)) in merged.iter().zip(&whole).enumerate() {
+            assert_eq!(m, &w.samples, "beat {b}: shard union != whole");
+        }
+    }
+
+    /// The perf claim itself: a resumed chunk costs
+    /// `chunk_timesteps x layers x lanes` recurrent lane-steps —
+    /// independent of how much history the session has — while
+    /// reaching the same decision one-shot costs the full history
+    /// every time.
+    #[test]
+    fn resumed_chunks_cost_o_chunk_not_o_history() {
+        let (cfg, params, signal) = stream_fixture();
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let (s, sid, nl, t) = (6usize, 0x2222u64, cfg.nl, cfg.seq_len);
+        let mut acc = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut st = acc.open_stream(sid, 0, s);
+        // Two beats of history.
+        acc.predict_stream(&mut st, &signal[..2 * t]).unwrap();
+        // A resumed half-beat chunk: exactly O(chunk) lane-steps.
+        let before = acc.lane_steps();
+        let chunk = 12;
+        acc.predict_stream(&mut st, &signal[2 * t..2 * t + chunk])
+            .unwrap();
+        assert_eq!(
+            acc.lane_steps() - before,
+            (chunk * nl * s) as u64,
+            "resumed chunk must not recompute history"
+        );
+        // The one-shot shape of the same decision point pays the whole
+        // history (2 beats + chunk) — the cost this PR removes.
+        let replay_cost = ((2 * t + chunk) * nl * s) as u64;
+        assert!((chunk * nl * s) as u64 * 5 < replay_cost);
+        // And the meter also covers the one-shot path (same units).
+        let b2 = acc.lane_steps();
+        acc.predict_seeded(&signal[..t], 7, 0, s);
+        assert_eq!(acc.lane_steps() - b2, (t * nl * s) as u64);
+    }
+
+    /// Eviction → replay equivalence at the accelerator level: a
+    /// session whose resident lanes were dropped mid-stream (mid-beat,
+    /// even) is rebuilt by replaying its history through a fresh
+    /// [`StreamState`], lands bit-identical state, and continues
+    /// bit-identically — the session table's transparent-rebuild
+    /// contract.
+    #[test]
+    fn evicted_state_rebuilt_by_replay_is_bitwise_identical() {
+        let (cfg, params, signal) = stream_fixture();
+        let reuse = ReuseFactors::new(1, 1, 1);
+        let (s, sid, t) = (5usize, 0x3333u64, cfg.seq_len);
+        let split = 2 * t + 7; // mid-beat eviction point
+        let mut resident = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut st_resident = resident.open_stream(sid, 0, s);
+        let mut want =
+            resident.predict_stream(&mut st_resident, &signal[..split]).unwrap();
+        want.extend(
+            resident.predict_stream(&mut st_resident, &signal[split..]).unwrap(),
+        );
+
+        // "Evict": drop the state entirely; rebuild by replaying the
+        // consumed history into a fresh stream, then continue.
+        let mut rebuilt = Accelerator::new(&cfg, &params, reuse, 9);
+        let mut st1 = rebuilt.open_stream(sid, 0, s);
+        let replayed =
+            rebuilt.predict_stream(&mut st1, &signal[..split]).unwrap();
+        let mut st2 = rebuilt.open_stream(sid, 0, s);
+        let replayed2 =
+            rebuilt.predict_stream(&mut st2, &signal[..split]).unwrap();
+        assert_eq!(st1, st2, "replay lands bit-identical state");
+        assert_eq!(replayed.len(), replayed2.len());
+        for (a, b) in replayed.iter().zip(&replayed2) {
+            assert_eq!(a.samples, b.samples, "replay decisions agree");
+        }
+        let tail =
+            rebuilt.predict_stream(&mut st2, &signal[split..]).unwrap();
+        let got: Vec<&McOutput> = replayed.iter().chain(&tail).collect();
+        assert_eq!(got.len(), want.len());
+        for (b, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(g.samples, w.samples, "beat {b} after rebuild");
+        }
+    }
+
+    /// Typed streaming failures: anomaly designs are rejected, ragged
+    /// chunks are rejected, and state opened on a different design
+    /// shape is rejected.
+    #[test]
+    fn stream_rejects_unsupported_shapes() {
+        let mut an = ArchConfig::new(Task::Anomaly, 8, 1, "Y");
+        an.seq_len = 24;
+        let an_params = Params::init(&an, &mut Rng::new(1));
+        let mut anomaly = Accelerator::new(
+            &an,
+            &an_params,
+            ReuseFactors::new(1, 1, 1),
+            3,
+        );
+        let mut st = anomaly.open_stream(1, 0, 2);
+        assert_eq!(
+            anomaly.predict_stream(&mut st, &[0.0; 24]).unwrap_err(),
+            StreamError::UnsupportedTask
+        );
+
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = 12;
+        cfg.input_dim = 2;
+        let params = Params::init(&cfg, &mut Rng::new(1));
+        let mut acc = Accelerator::new(
+            &cfg,
+            &params,
+            ReuseFactors::new(1, 1, 1),
+            3,
+        );
+        let mut st = acc.open_stream(1, 0, 2);
+        assert_eq!(
+            acc.predict_stream(&mut st, &[0.0; 5]).unwrap_err(),
+            StreamError::RaggedChunk { len: 5, idim: 2 },
+        );
+
+        let mut other_cfg = ArchConfig::new(Task::Classify, 16, 1, "Y");
+        other_cfg.seq_len = 12;
+        let other_params = Params::init(&other_cfg, &mut Rng::new(1));
+        let other = Accelerator::new(
+            &other_cfg,
+            &other_params,
+            ReuseFactors::new(1, 1, 1),
+            3,
+        );
+        let mut foreign = other.open_stream(1, 0, 2);
+        assert_eq!(
+            acc.predict_stream(&mut foreign, &[0.0; 4]).unwrap_err(),
+            StreamError::ShapeMismatch
+        );
+
+        // Degenerate inputs are fine: zero lanes track the schedule,
+        // zero timesteps are a no-op.
+        let mut empty = acc.open_stream(1, 3, 0);
+        let outs = acc.predict_stream(&mut empty, &[0.0; 24]).unwrap();
+        assert_eq!(outs.len(), 1, "one (empty) decision per beat");
+        assert_eq!(outs[0].s, 0);
+        assert_eq!(empty.beats_done, 1);
+        let mut st = acc.open_stream(1, 0, 2);
+        assert!(acc.predict_stream(&mut st, &[]).unwrap().is_empty());
     }
 
     #[test]

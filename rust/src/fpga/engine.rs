@@ -408,6 +408,62 @@ impl LstmEngine {
         self.zx.bytes() + self.zh.bytes()
     }
 
+    /// Packed `u64` words one lane of architectural state occupies:
+    /// `h` lanes at 4 x i16 per word, then `c` lanes at 2 x i32 per
+    /// word — the unit the streaming session table keeps resident.
+    pub fn state_words_per_row(&self) -> usize {
+        self.hdim.div_ceil(4) + self.hdim.div_ceil(2)
+    }
+
+    /// Snapshot lane `r`'s architectural registers (h then c) into
+    /// packed words — the streaming save path. Tail padding is zero,
+    /// so save → restore round-trips bit-identically and snapshots of
+    /// equal state compare equal bytewise.
+    pub fn state_row_words(&self, r: usize) -> Vec<u64> {
+        debug_assert!(r < self.rows);
+        let hdim = self.hdim;
+        let mut words = Vec::with_capacity(self.state_words_per_row());
+        for chunk in self.h[r * hdim..(r + 1) * hdim].chunks(4) {
+            let mut w = 0u64;
+            for (i, v) in chunk.iter().enumerate() {
+                w |= ((v.0 as u16) as u64) << (16 * i);
+            }
+            words.push(w);
+        }
+        for chunk in self.c[r * hdim..(r + 1) * hdim].chunks(2) {
+            let mut w = 0u64;
+            for (i, v) in chunk.iter().enumerate() {
+                w |= ((v.0 as u32) as u64) << (32 * i);
+            }
+            words.push(w);
+        }
+        words
+    }
+
+    /// Restore lane `r`'s architectural registers from a
+    /// [`LstmEngine::state_row_words`] snapshot — the streaming resume
+    /// path. Bit-exact inverse of the save.
+    pub fn set_state_row_words(&mut self, r: usize, words: &[u64]) {
+        debug_assert!(r < self.rows);
+        let hdim = self.hdim;
+        let h_words = hdim.div_ceil(4);
+        assert_eq!(
+            words.len(),
+            self.state_words_per_row(),
+            "state row shape mismatch"
+        );
+        for k in 0..hdim {
+            let w = words[k / 4];
+            self.h[r * hdim + k] =
+                Fx16(((w >> (16 * (k % 4))) & 0xFFFF) as u16 as i16);
+        }
+        for k in 0..hdim {
+            let w = words[h_words + k / 2];
+            self.c[r * hdim + k] =
+                Fx32(((w >> (32 * (k % 2))) & 0xFFFF_FFFF) as u32 as i32);
+        }
+    }
+
     /// Load pre-sampled masks (one per input sequence) — the single-lane
     /// path.
     pub fn set_masks(&mut self, zx: &[f32], zh: &[f32]) {
@@ -1138,6 +1194,99 @@ mod tests {
             assert_eq!(restored.zh.get(2, j), by_word.zh.get(1, j));
         }
         assert_eq!(restored.mask_row_words(2), snap);
+    }
+
+    /// Engine-level streaming contract: snapshotting a lane's (h, c)
+    /// mid-sequence and restoring it into a fresh engine continues the
+    /// sequence bit-identically to the uninterrupted engine — for any
+    /// split point, including across lanes.
+    #[test]
+    fn state_snapshot_resumes_sequences_bitwise() {
+        let mut rng = Rng::new(53);
+        let (idim, hdim, rows, steps) = (3, 5, 3, 8);
+        let wx = rand_tensor(&mut rng, &[GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GATES, hdim], 0.1);
+        let masks: Vec<(Vec<f32>, Vec<f32>)> = (0..rows)
+            .map(|_| {
+                let zx: Vec<f32> = (0..GATES * idim)
+                    .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                    .collect();
+                let zh: Vec<f32> = (0..GATES * hdim)
+                    .map(|_| if rng.bernoulli(0.125) { 0.0 } else { 1.0 })
+                    .collect();
+                (zx, zh)
+            })
+            .collect();
+        let xs: Vec<Fx16> = (0..steps * rows * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+        let set_masks = |e: &mut LstmEngine| {
+            e.set_rows(rows);
+            for (r, (zx, zh)) in masks.iter().enumerate() {
+                e.set_masks_row(r, zx, zh);
+            }
+        };
+        // Reference: one uninterrupted pass.
+        let mut whole = LstmEngine::new(&wx, &wh, &b, 2, 1, true);
+        set_masks(&mut whole);
+        let mut h_whole = Vec::new();
+        for t in 0..steps {
+            h_whole = whole
+                .step_rows(&xs[t * rows * idim..(t + 1) * rows * idim], idim)
+                .to_vec();
+        }
+        for split in [1, 3, steps - 1] {
+            let mut first = LstmEngine::new(&wx, &wh, &b, 2, 1, true);
+            set_masks(&mut first);
+            for t in 0..split {
+                first.step_rows(
+                    &xs[t * rows * idim..(t + 1) * rows * idim],
+                    idim,
+                );
+            }
+            let snaps: Vec<Vec<u64>> =
+                (0..rows).map(|r| first.state_row_words(r)).collect();
+            for s in &snaps {
+                assert_eq!(s.len(), first.state_words_per_row());
+            }
+            // Resume in a *fresh* engine (state crossed a boundary).
+            let mut second = LstmEngine::new(&wx, &wh, &b, 2, 1, true);
+            set_masks(&mut second);
+            for (r, s) in snaps.iter().enumerate() {
+                second.set_state_row_words(r, s);
+            }
+            let mut h_resumed = Vec::new();
+            for t in split..steps {
+                h_resumed = second
+                    .step_rows(
+                        &xs[t * rows * idim..(t + 1) * rows * idim],
+                        idim,
+                    )
+                    .to_vec();
+            }
+            assert_eq!(
+                h_resumed.iter().map(|v| v.0).collect::<Vec<_>>(),
+                h_whole.iter().map(|v| v.0).collect::<Vec<_>>(),
+                "resume at split {split} must be bitwise"
+            );
+            // Round trip: save → restore → save is byte-stable.
+            for r in 0..rows {
+                let again = second.state_row_words(r);
+                second.set_state_row_words(r, &again);
+                assert_eq!(second.state_row_words(r), again);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "state row shape mismatch")]
+    fn set_state_row_words_rejects_wrong_shape() {
+        let wx = Tensor::zeros(&[GATES, 3, 4]);
+        let wh = Tensor::zeros(&[GATES, 4, 4]);
+        let b = Tensor::zeros(&[GATES, 4]);
+        let mut e = LstmEngine::new(&wx, &wh, &b, 1, 1, true);
+        e.set_state_row_words(0, &[0u64; 1]);
     }
 
     #[test]

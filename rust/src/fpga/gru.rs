@@ -208,6 +208,36 @@ impl GruEngine {
         &self.h
     }
 
+    /// Snapshot the architectural state (h only — a GRU has no cell
+    /// register) as packed words, 4 x i16 per u64, zero tail padding.
+    /// The streaming save path for GRU designs.
+    pub fn state_words(&self) -> Vec<u64> {
+        let mut words = Vec::with_capacity(self.hdim.div_ceil(4));
+        for chunk in self.h.chunks(4) {
+            let mut w = 0u64;
+            for (i, v) in chunk.iter().enumerate() {
+                w |= ((v.0 as u16) as u64) << (16 * i);
+            }
+            words.push(w);
+        }
+        words
+    }
+
+    /// Restore from a [`GruEngine::state_words`] snapshot — bit-exact
+    /// inverse of the save.
+    pub fn set_state_words(&mut self, words: &[u64]) {
+        assert_eq!(
+            words.len(),
+            self.hdim.div_ceil(4),
+            "state shape mismatch"
+        );
+        for k in 0..self.hdim {
+            self.h[k] =
+                Fx16(((words[k / 4] >> (16 * (k % 4))) & 0xFFFF) as u16
+                    as i16);
+        }
+    }
+
     /// DSPs: 3 gate MVM pairs + 3H tail multipliers (r*hn, (1-z)*n, z*h),
     /// all on the 16-bit path (no 2-DSP 32-bit c multiplier).
     pub fn dsps_synthesized(&self) -> u64 {
@@ -512,6 +542,44 @@ mod tests {
                     .sum()
             };
         assert_eq!(bytes(&q8) * 2, bytes(&q16), "i8 planes halve bytes");
+    }
+
+    /// Streaming save/restore round-trips bitwise: a GRU resumed from
+    /// a mid-sequence snapshot finishes the sequence identically to
+    /// the uninterrupted engine.
+    #[test]
+    fn gru_state_snapshot_resumes_bitwise() {
+        let mut rng = Rng::new(31);
+        let (idim, hdim, steps, split) = (2, 6, 9, 4);
+        let wx = rand_tensor(&mut rng, &[GRU_GATES, idim, hdim], 0.4);
+        let wh = rand_tensor(&mut rng, &[GRU_GATES, hdim, hdim], 0.4);
+        let b = rand_tensor(&mut rng, &[GRU_GATES, hdim], 0.1);
+        let xs: Vec<Fx16> = (0..steps * idim)
+            .map(|_| Fx16::from_f32(rng.normal() as f32))
+            .collect();
+        let mut whole = GruEngine::new(&wx, &wh, &b, 1, 1, false);
+        let mut h_whole = vec![];
+        for t in 0..steps {
+            h_whole = whole.step(&xs[t * idim..(t + 1) * idim]).to_vec();
+        }
+        let mut first = GruEngine::new(&wx, &wh, &b, 1, 1, false);
+        for t in 0..split {
+            first.step(&xs[t * idim..(t + 1) * idim]);
+        }
+        let snap = first.state_words();
+        assert_eq!(snap.len(), hdim.div_ceil(4));
+        let mut second = GruEngine::new(&wx, &wh, &b, 1, 1, false);
+        second.set_state_words(&snap);
+        let mut h_resumed = vec![];
+        for t in split..steps {
+            h_resumed =
+                second.step(&xs[t * idim..(t + 1) * idim]).to_vec();
+        }
+        assert_eq!(
+            h_resumed.iter().map(|v| v.0).collect::<Vec<_>>(),
+            h_whole.iter().map(|v| v.0).collect::<Vec<_>>()
+        );
+        assert_eq!(second.state_words().len(), snap.len());
     }
 
     #[test]

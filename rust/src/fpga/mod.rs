@@ -26,6 +26,9 @@ pub mod engine;
 pub mod gru;
 pub mod pipeline;
 
-pub use accel::{Accelerator, BatchRequest, McOutput};
+pub use accel::{
+    stream_req_seed, Accelerator, BatchRequest, McOutput, StreamError,
+    StreamState,
+};
 pub use engine::{DenseEngine, LstmEngine, MvmUnit};
 pub use pipeline::{PipelineReport, PipelineSim};

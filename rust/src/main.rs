@@ -21,8 +21,9 @@ use anyhow::{Context, Result};
 use bayes_rnn_fpga::config::{ArchConfig, Task};
 use bayes_rnn_fpga::coordinator::loadgen::PoissonTrace;
 use bayes_rnn_fpga::coordinator::{
-    run_open_loop, AdaptiveTicket, BatchPolicy, Engine, Fleet,
-    FleetConfig, RouterPolicy, ScenarioSpec, Ticket,
+    run_open_loop, run_stream_open_loop, AdaptiveTicket, BatchPolicy,
+    Engine, Fleet, FleetConfig, OpenLoopOutcome, RouterPolicy,
+    ScenarioSpec, Ticket, DEFAULT_QUEUE_DEPTH,
 };
 use bayes_rnn_fpga::data;
 use bayes_rnn_fpga::dse::space::{reuse_search, reuse_search_q};
@@ -218,10 +219,19 @@ subcommands:
           --arch NAME [--weights PATH] [--samples S] [--test-subset N]
           [--fixed] [--precision q8|q12|q16[,l<i>=FMT...]]
   serve   run the serving fleet on synthetic ECG traffic
-          [--arch NAME] [--engines N] [--router rr|least-loaded|mc-shard]
+          [--arch NAME] [--engines N]
+          [--router rr|least-loaded|mc-shard|affinity]
           [--backend fpga|gpu|pjrt|mix] [--samples S] [--requests N]
           [--rate REQ_PER_S] [--queue-depth N] [--batch N] [--shed]
           [--seed N] [--json] [--kernel scalar|blocked|simd|parallel]
+          streaming sessions (docs/serving.md §Streaming sessions):
+          [--stream C]  (serve each request as a session whose signal
+           arrives in C chunks against resident MC lane state — each
+           decision costs O(chunk), bitwise equal to one continuous
+           pass; fpga backend, classify task)
+          [--stream-beats B] (beats per session signal, default 4)
+          [--session-mb N]  (resident lane-state byte budget, default
+           8; evicted sessions rebuild transparently by replay)
           [--mask-bank-mb N]  (share a seed-indexed bitplane-mask cache
            across engines — docs/kernels.md §Mask bank; 0 = off,
            the default, and output bits never change either way)
@@ -249,12 +259,16 @@ subcommands:
           against a fleet with coordinated-omission-correct latency
           (e2e measured from each request's *scheduled* arrival) and
           offered-vs-achieved per timeline window
-          --scenario baseline|fan_out|fan_in|scaling|poisson_mix
+          --scenario baseline|fan_out|fan_in|scaling|poisson_mix|
+                     stream_monitor
           [--arch NAME] [--engines N] [--rate REQ_PER_S] [--requests N]
           [--samples S] [--seed N] [--backend fpga|gpu|pjrt]
           [--queue-depth N] [--shed] [--batch N] [--window-ms F]
           [--slo SPEC] [--slo-gate] [--json] [--metrics PATH]
           [--trace PATH] [--kernel K] [--precision P] [--mask-bank-mb N]
+          stream_monitor only: [--sessions N] [--session-mb N]
+          (chunks arrive open-loop round-robin over N resident
+           streaming sessions — docs/serving.md §Streaming sessions)
           (observability is always on here — docs/observability.md
            §Open-loop)
   uq      uncertainty-quantification pipeline (classify task)
@@ -769,7 +783,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
          (shards from fixed-point and float engines would be merged)"
     );
     let batch = args.usize_or("batch", 8);
-    let queue_depth = args.usize_or("queue-depth", 256);
+    let queue_depth = args.usize_or("queue-depth", DEFAULT_QUEUE_DEPTH);
     let shed = args.flag("shed");
     let json_out = args.flag("json");
     // Observability (docs/observability.md): --obs adds stage latency
@@ -863,6 +877,37 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let (mc_cfg, risk) = uq_flags(args, s, None)?;
 
+    // Streaming sessions (docs/serving.md §Streaming sessions):
+    // --stream C serves each request as a long-lived session whose
+    // signal arrives in C chunks against resident MC lane state —
+    // O(chunk) per decision instead of re-running history. --requests
+    // then counts sessions; decisions land at beat boundaries.
+    let stream_chunks = args.usize_or("stream", 0);
+    let streaming = stream_chunks > 0;
+    let stream_beats = args.usize_or("stream-beats", 4);
+    let session_mb = args.usize_or("session-mb", 8);
+    if streaming {
+        anyhow::ensure!(
+            backend == "fpga",
+            "--stream requires --backend fpga (lane state lives in \
+             the FPGA-sim engines)"
+        );
+        anyhow::ensure!(
+            cfg.task == Task::Classify,
+            "--stream supports the classify task only (anomaly scoring \
+             is windowed, not streaming)"
+        );
+        anyhow::ensure!(
+            stream_beats >= 1,
+            "--stream-beats must be at least 1"
+        );
+        anyhow::ensure!(
+            args.get("rate").is_none(),
+            "--stream is closed-loop per chunk; use the loadgen \
+             stream_monitor scenario for open-loop streaming"
+        );
+    }
+
     // Seed-indexed mask bank (docs/kernels.md §Mask bank): one bank
     // shared by every FPGA-sim engine worker, keyed by per-sample mask
     // seed, so repeat request seeds reuse bitplane rows instead of
@@ -921,8 +966,14 @@ fn cmd_serve(args: &Args) -> Result<()> {
             policy,
             queue_depth,
             shed,
-            samples: s,
+            // Adaptive streaming sessions run at the controller's
+            // floor and re-serve uncertain chunks at s_max (the boost
+            // tier); everything else runs the full S.
+            samples: if streaming && adaptive { mc_cfg.s_min } else { s },
             obs: obs_cfg,
+            session_bytes: streaming.then_some(session_mb << 20),
+            session_replay: true,
+            session_uq: (streaming && adaptive).then_some(mc_cfg),
         },
         factories,
     );
@@ -944,82 +995,161 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // *during* the run (delta), not the process-lifetime total.
     let proc0 = if obs_on { obs::proc_sample() } else { None };
     let t0 = std::time::Instant::now();
-    let mut tickets = Vec::with_capacity(n_req);
-    if let Some(rate) = args.get("rate").and_then(|v| v.parse::<f64>().ok())
-    {
-        // Open-loop Poisson arrivals: exposes the latency knee and, with
-        // --shed, the admission-control behaviour under overload.
-        let trace = PoissonTrace::generate(rate, n_req, &test, seed);
-        let start = std::time::Instant::now();
-        for a in &trace.arrivals {
-            if let Some(wait) = a.at.checked_sub(start.elapsed()) {
-                if !wait.is_zero() {
-                    std::thread::sleep(wait);
-                }
-            }
-            if let Some(t) =
-                submit_one(&mut fleet, test.beat(a.beat_idx).to_vec())
-            {
-                tickets.push(t);
-            }
-        }
-    } else {
-        // Closed loop: submit everything, then wait.
-        for i in 0..n_req {
-            if let Some(t) =
-                submit_one(&mut fleet, test.beat(i % test.n).to_vec())
-            {
-                tickets.push(t);
-            }
-        }
-    }
-
-    // Checksums over the first 8 responses (submit order): the bench
-    // harness compares these across engine counts to verify the
-    // MC-shard reduction numerically.
+    // Checksums: the bench harness and CI compare these across engine
+    // counts (MC-shard reduction) and across chunkings (streaming
+    // resume contract).
     let mut pred_checksum = 0f64;
     let mut unc_checksum = 0f64;
     let mut collector = UqCollector::new();
-    for (i, t) in tickets.into_iter().enumerate() {
-        let (mean, std) = match t {
-            AnyTicket::Fixed(t) => {
-                let resp = fleet.wait(t)?;
-                (resp.prediction.mean, resp.prediction.std)
+    let mut stream_decisions = 0usize;
+    let mut stream_boosted = 0usize;
+    if streaming {
+        // Each of the n_req sessions monitors a signal of
+        // --stream-beats consecutive test beats, arriving in --stream
+        // equal chunks. Chunk rounds are interleaved across sessions
+        // (submit all, wait all) so affinity placement is exercised
+        // while each session's chunks stay ordered.
+        let idim = cfg.input_dim.max(1);
+        let mut sids = Vec::with_capacity(n_req);
+        let mut signals: Vec<Vec<f32>> = Vec::with_capacity(n_req);
+        for j in 0..n_req {
+            let mut sig = Vec::new();
+            for b in 0..stream_beats {
+                sig.extend_from_slice(
+                    test.beat((j * stream_beats + b) % test.n),
+                );
             }
-            AnyTicket::Adaptive(t) => {
-                let resp = fleet.wait_adaptive(t)?;
-                // Risk-tier the request on its raw MC evidence.
-                let tier = match cfg.task {
-                    Task::Classify => {
-                        let probs: Vec<f64> = resp
-                            .samples
-                            .iter()
-                            .map(|&v| v as f64)
-                            .collect();
-                        risk.classify(
-                            &probs,
-                            resp.s_used,
-                            resp.out_len,
-                            resp.converged,
-                        )
-                        .tier
+            signals.push(sig);
+            sids.push(
+                fleet
+                    .open_session()
+                    .map_err(|e| anyhow::anyhow!("{e}"))?,
+            );
+        }
+        // Per-session decision accumulators, folded in canonical
+        // (session, beat) order afterwards so the checksum is
+        // invariant to how chunk rounds interleave.
+        let mut sums: Vec<Vec<(f64, f64)>> = vec![Vec::new(); n_req];
+        for c in 0..stream_chunks {
+            let mut round = Vec::with_capacity(n_req);
+            for (j, sid) in sids.iter().enumerate() {
+                let steps = signals[j].len() / idim;
+                let lo = steps * c / stream_chunks * idim;
+                let hi = steps * (c + 1) / stream_chunks * idim;
+                round.push((
+                    j,
+                    fleet
+                        .submit_chunk(*sid, signals[j][lo..hi].to_vec())
+                        .map_err(|e| anyhow::anyhow!("{e}"))?,
+                ));
+            }
+            for (j, t) in round {
+                let resp =
+                    fleet.wait_chunk(t).map_err(anyhow::Error::msg)?;
+                if resp.boosted {
+                    stream_boosted += 1;
+                }
+                for b in &resp.beats {
+                    let (mean, std) = b.mean_std();
+                    sums[j].push((
+                        mean.iter().map(|&v| v as f64).sum(),
+                        std.iter().map(|&v| v as f64).sum(),
+                    ));
+                }
+            }
+        }
+        for sid in sids {
+            fleet
+                .close_session(sid)
+                .map_err(|e| anyhow::anyhow!("{e}"))?;
+        }
+        for per_session in &sums {
+            for &(p, u) in per_session {
+                pred_checksum += p;
+                unc_checksum += u;
+                stream_decisions += 1;
+            }
+        }
+    } else {
+        let mut tickets = Vec::with_capacity(n_req);
+        if let Some(rate) =
+            args.get("rate").and_then(|v| v.parse::<f64>().ok())
+        {
+            // Open-loop Poisson arrivals: exposes the latency knee and,
+            // with --shed, the admission-control behaviour under
+            // overload.
+            let trace = PoissonTrace::generate(rate, n_req, &test, seed);
+            let start = std::time::Instant::now();
+            for a in &trace.arrivals {
+                if let Some(wait) = a.at.checked_sub(start.elapsed()) {
+                    if !wait.is_zero() {
+                        std::thread::sleep(wait);
                     }
-                    Task::Anomaly => risk.grade_regression(
-                        &resp.prediction.std,
-                        resp.converged,
-                    ),
-                };
-                collector.record(resp.s_used, resp.converged, tier);
-                collector.record_rounds(resp.rounds);
-                (resp.prediction.mean, resp.prediction.std)
+                }
+                if let Some(t) =
+                    submit_one(&mut fleet, test.beat(a.beat_idx).to_vec())
+                {
+                    tickets.push(t);
+                }
             }
-        };
-        if i < 8 {
-            pred_checksum += mean.iter().map(|&v| v as f64).sum::<f64>();
-            unc_checksum += std.iter().map(|&v| v as f64).sum::<f64>();
+        } else {
+            // Closed loop: submit everything, then wait.
+            for i in 0..n_req {
+                if let Some(t) =
+                    submit_one(&mut fleet, test.beat(i % test.n).to_vec())
+                {
+                    tickets.push(t);
+                }
+            }
+        }
+
+        // Checksums over the first 8 responses (submit order): the
+        // bench harness compares these across engine counts to verify
+        // the MC-shard reduction numerically.
+        for (i, t) in tickets.into_iter().enumerate() {
+            let (mean, std) = match t {
+                AnyTicket::Fixed(t) => {
+                    let resp = fleet.wait(t)?;
+                    (resp.prediction.mean, resp.prediction.std)
+                }
+                AnyTicket::Adaptive(t) => {
+                    let resp = fleet.wait_adaptive(t)?;
+                    // Risk-tier the request on its raw MC evidence.
+                    let tier = match cfg.task {
+                        Task::Classify => {
+                            let probs: Vec<f64> = resp
+                                .samples
+                                .iter()
+                                .map(|&v| v as f64)
+                                .collect();
+                            risk.classify(
+                                &probs,
+                                resp.s_used,
+                                resp.out_len,
+                                resp.converged,
+                            )
+                            .tier
+                        }
+                        Task::Anomaly => risk.grade_regression(
+                            &resp.prediction.std,
+                            resp.converged,
+                        ),
+                    };
+                    collector.record(resp.s_used, resp.converged, tier);
+                    collector.record_rounds(resp.rounds);
+                    (resp.prediction.mean, resp.prediction.std)
+                }
+            };
+            if i < 8 {
+                pred_checksum +=
+                    mean.iter().map(|&v| v as f64).sum::<f64>();
+                unc_checksum +=
+                    std.iter().map(|&v| v as f64).sum::<f64>();
+            }
         }
     }
-    let uq_report = adaptive.then(|| collector.finish(s));
+    let uq_report =
+        (adaptive && !streaming).then(|| collector.finish(s));
     let wall = t0.elapsed();
     let mut summary = fleet.join();
     // Stamp bank counters before any export path reads the summary;
@@ -1082,6 +1212,24 @@ fn cmd_serve(args: &Args) -> Result<()> {
         .unwrap_or_default();
     let mut engine_stats = summary.engine_stats();
 
+    // Streaming block: per-run session/decision counts for the bench
+    // harness and the CI chunked-equals-oneshot check. Absent (and the
+    // line byte-identical to non-streaming runs) without --stream.
+    let stream_json = if streaming {
+        let ss = summary.obs.sessions.unwrap_or_default();
+        format!(
+            ",\"stream\":{{\"sessions\":{n_req},\
+             \"chunks_per_session\":{stream_chunks},\
+             \"beats_per_session\":{stream_beats},\
+             \"decisions\":{stream_decisions},\
+             \"boosted_chunks\":{stream_boosted},\
+             \"evictions\":{},\"replay_rebuilds\":{}}}",
+            ss.evictions, ss.replay_rebuilds
+        )
+    } else {
+        String::new()
+    };
+
     if json_out {
         // Single-line JSON for the process-based bench harness. The
         // adaptive report rides along as one nested object.
@@ -1099,7 +1247,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"max\":{:.4}}},\
              \"engine_ms\":{{\"mean\":{:.4},\"p99\":{:.4}}},\
              \"batches\":{},\"pred_checksum\":{:.6},\
-             \"unc_checksum\":{:.6}{}{}{}{}}}",
+             \"unc_checksum\":{:.6}{}{}{}{}{}}}",
             router.as_str(),
             kernel_backend.name(),
             precision.name(),
@@ -1116,6 +1264,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             summary.batches(),
             pred_checksum,
             unc_checksum,
+            stream_json,
             adaptive_json,
             obs_json,
             timeline_json,
@@ -1171,6 +1320,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
             b.misses,
             b.evictions,
             b.resident_bytes as f64 / 1024.0
+        );
+    }
+    if let Some(ss) = &summary.obs.sessions {
+        println!(
+            "sessions: {n_req} x {stream_chunks} chunks \
+             ({stream_beats} beats each)  decisions {stream_decisions}  \
+             boosted {stream_boosted}  evictions {}  replay rebuilds {}  \
+             budget {session_mb} MiB",
+            ss.evictions, ss.replay_rebuilds
         );
     }
     if obs_on {
@@ -1287,6 +1445,26 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     if args.flag("shed") {
         spec.shed = true;
     }
+    // stream_monitor replays the trace as long-lived session chunks
+    // instead of independent requests (docs/serving.md §Streaming
+    // sessions); the other scenarios are untouched by these knobs.
+    let stream_mode = spec.name == "stream_monitor";
+    let n_sessions = args.usize_or("sessions", spec.engines * 4).max(1);
+    let session_mb = args.usize_or("session-mb", 8);
+    anyhow::ensure!(
+        stream_mode || args.get("sessions").is_none(),
+        "--sessions only applies to --scenario stream_monitor"
+    );
+    anyhow::ensure!(
+        !stream_mode || backend == "fpga",
+        "stream_monitor needs --backend fpga (resident lane state is \
+         an FPGA-path feature)"
+    );
+    anyhow::ensure!(
+        !stream_mode || cfg.task == Task::Classify,
+        "stream_monitor supports the classify task only (anomaly \
+         scoring is windowed, not streaming)"
+    );
     let batch = args.usize_or("batch", 8);
     let json_out = args.flag("json");
     let metrics_path = match args.get("metrics") {
@@ -1387,6 +1565,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             shed: spec.shed,
             samples: spec.samples,
             obs: obs_cfg,
+            session_bytes: stream_mode.then_some(session_mb << 20),
+            ..FleetConfig::default()
         },
         factories,
     );
@@ -1396,15 +1576,43 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     };
     let sched = spec.trace(test.n);
     let t0 = std::time::Instant::now();
-    let outcome = run_open_loop(&mut fleet, &sched, &test);
+    let (outcome, stream_work) = if stream_mode {
+        let run =
+            run_stream_open_loop(&mut fleet, &sched, &test, n_sessions)
+                .map_err(|e| anyhow::anyhow!(e))?;
+        let outcome = OpenLoopOutcome {
+            offered: run.offered,
+            submitted: run.tickets.len(),
+            lag: run.lag,
+            offered_per_window: run.offered_per_window,
+            ..OpenLoopOutcome::default()
+        };
+        (outcome, Some((run.tickets, run.sids)))
+    } else {
+        (run_open_loop(&mut fleet, &sched, &test), None)
+    };
     let mut e2e = bayes_rnn_fpga::coordinator::LatencyStats::new();
     // Per-class served counts, offered alongside for the mix report.
     let n_classes = spec.mix.len().max(1);
     let mut served_by_class = vec![0usize; n_classes];
-    for (ticket, class) in outcome.tickets {
-        let resp = fleet.wait(ticket)?;
-        e2e.record_ms(resp.e2e_ms);
-        served_by_class[class] += 1;
+    if let Some((tickets, sids)) = stream_work {
+        for t in tickets {
+            let resp =
+                fleet.wait_chunk(t).map_err(|e| anyhow::anyhow!(e))?;
+            e2e.record_ms(resp.e2e_ms);
+            served_by_class[0] += 1;
+        }
+        for sid in sids {
+            fleet
+                .close_session(sid)
+                .map_err(|e| anyhow::anyhow!(e))?;
+        }
+    } else {
+        for (ticket, class) in outcome.tickets {
+            let resp = fleet.wait(ticket)?;
+            e2e.record_ms(resp.e2e_ms);
+            served_by_class[class] += 1;
+        }
     }
     let wall = t0.elapsed();
     let mut summary = fleet.join();
@@ -1457,6 +1665,25 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             )
         })
         .collect();
+    // Streaming-session block; empty for the non-stream scenarios so
+    // their JSON line stays byte-identical.
+    let stream_json = summary
+        .obs
+        .sessions
+        .map(|ss| {
+            format!(
+                ",\"stream\":{{\"sessions\":{},\"chunks\":{},\
+                 \"boosted_chunks\":{},\"evictions\":{},\
+                 \"replay_rebuilds\":{},\"resident_bytes\":{}}}",
+                ss.opened,
+                ss.chunks,
+                ss.boosted_chunks,
+                ss.evictions,
+                ss.replay_rebuilds,
+                ss.resident_bytes
+            )
+        })
+        .unwrap_or_default();
     if json_out {
         let obs_json = format!(
             ",\"obs\":{}",
@@ -1478,7 +1705,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
              \"achieved_rps\":{:.3},\
              \"lag_ms\":{{\"p50\":{:.4},\"p99\":{:.4}}},\
              \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\
-             \"max\":{:.4}}},\"mix\":[{}]{}{},\"slo\":{}}}",
+             \"max\":{:.4}}},\"mix\":[{}]{}{}{},\"slo\":{}}}",
             spec.engines,
             spec.router.as_str(),
             outcome.offered,
@@ -1494,6 +1721,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             e2e.percentile_ms(99.0),
             e2e.max_ms(),
             mix_json.join(","),
+            stream_json,
             obs_json,
             timeline_json,
             jsonio::write(&slo_report.to_json()),
@@ -1546,6 +1774,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             b.misses,
             b.evictions,
             b.resident_bytes as f64 / 1024.0
+        );
+    }
+    if let Some(ss) = &summary.obs.sessions {
+        println!(
+            "sessions: {} open-loop streams, {} chunks  boosted {}  \
+             evictions {}  replay rebuilds {}  budget {session_mb} MiB",
+            ss.opened,
+            ss.chunks,
+            ss.boosted_chunks,
+            ss.evictions,
+            ss.replay_rebuilds
         );
     }
     if let Some(tl) = &summary.timeline {

@@ -36,6 +36,13 @@ pub const SERVE_METRIC_NAMES: &[&str] = &[
     "repro_mask_bank_misses_total",
     "repro_mask_bank_evictions_total",
     "repro_mask_bank_resident_bytes",
+    "repro_sessions_opened_total",
+    "repro_sessions_resident",
+    "repro_session_state_resident_bytes",
+    "repro_session_evictions_total",
+    "repro_session_replay_rebuilds_total",
+    "repro_session_chunks_total",
+    "repro_session_boosted_chunks_total",
 ];
 
 /// Metric names `push_timeline_metrics` emits (windowed runs only).
@@ -351,6 +358,51 @@ pub fn serve_metric_set(
         vec![],
         bank.resident_bytes as f64,
     );
+    // Streaming-session plane; all-zero when disabled (no
+    // `--session-mb`), same stable-surface convention as the bank.
+    let sess = summary.obs.sessions.unwrap_or_default();
+    set.counter(
+        "repro_sessions_opened_total",
+        "Streaming sessions opened",
+        vec![],
+        sess.opened as f64,
+    );
+    set.gauge(
+        "repro_sessions_resident",
+        "Streaming sessions currently in the session table",
+        vec![],
+        sess.resident as f64,
+    );
+    set.gauge(
+        "repro_session_state_resident_bytes",
+        "Bytes of MC lane state resident across all sessions",
+        vec![],
+        sess.resident_bytes as f64,
+    );
+    set.counter(
+        "repro_session_evictions_total",
+        "Session lane states evicted by the byte-budget CLOCK sweep",
+        vec![],
+        sess.evictions as f64,
+    );
+    set.counter(
+        "repro_session_replay_rebuilds_total",
+        "Evicted lane states rebuilt by history replay",
+        vec![],
+        sess.replay_rebuilds as f64,
+    );
+    set.counter(
+        "repro_session_chunks_total",
+        "Streaming chunks admitted across all sessions",
+        vec![],
+        sess.chunks as f64,
+    );
+    set.counter(
+        "repro_session_boosted_chunks_total",
+        "Chunks escalated to the boosted MC budget by the adaptive tier",
+        vec![],
+        sess.boosted_chunks as f64,
+    );
     if let Some(p) = procstat::sample() {
         set.gauge(
             "repro_proc_rss_bytes",
@@ -602,6 +654,26 @@ pub fn serve_obs_json(
             ]),
         ));
     }
+    // Same convention for the streaming-session plane (`--session-mb`).
+    if let Some(s) = summary.obs.sessions {
+        top.push((
+            "sessions",
+            jsonio::obj(vec![
+                ("opened", Json::Num(s.opened as f64)),
+                ("closed", Json::Num(s.closed as f64)),
+                ("resident", Json::Num(s.resident as f64)),
+                ("resident_bytes", Json::Num(s.resident_bytes as f64)),
+                ("capacity_bytes", Json::Num(s.capacity_bytes as f64)),
+                ("evictions", Json::Num(s.evictions as f64)),
+                (
+                    "replay_rebuilds",
+                    Json::Num(s.replay_rebuilds as f64),
+                ),
+                ("chunks", Json::Num(s.chunks as f64)),
+                ("boosted_chunks", Json::Num(s.boosted_chunks as f64)),
+            ]),
+        ));
+    }
     top.push(("proc", proc));
     jsonio::obj(top)
 }
@@ -649,6 +721,17 @@ mod tests {
             evictions: 1,
             resident_bytes: 4096,
             capacity_bytes: 1 << 20,
+        });
+        obs.sessions = Some(crate::coordinator::SessionStats {
+            opened: 3,
+            closed: 2,
+            resident: 1,
+            resident_bytes: 2048,
+            capacity_bytes: 1 << 21,
+            evictions: 5,
+            replay_rebuilds: 4,
+            chunks: 12,
+            boosted_chunks: 2,
         });
         FleetSummary {
             served: 4,
@@ -706,6 +789,9 @@ mod tests {
         );
         assert!(text.contains("repro_mask_bank_hits_total 40\n"));
         assert!(text.contains("repro_mask_bank_resident_bytes 4096\n"));
+        assert!(text.contains("repro_sessions_opened_total 3\n"));
+        assert!(text.contains("repro_session_replay_rebuilds_total 4\n"));
+        assert!(text.contains("repro_session_boosted_chunks_total 2\n"));
     }
 
     /// With no bank attached the four metrics still exist (stable
@@ -731,6 +817,34 @@ mod tests {
         // And the obs JSON omits the block entirely.
         let line = jsonio::write(&serve_obs_json(&summary, None));
         assert!(!line.contains("mask_bank"));
+    }
+
+    /// Same stable-surface contract for the session plane: without
+    /// `--session-mb` the seven metrics exist but read zero, and the
+    /// obs JSON has no `sessions` block.
+    #[test]
+    fn session_metrics_are_zero_without_the_plane() {
+        let mut summary = fake_summary();
+        summary.obs.sessions = None;
+        let set = serve_metric_set(&summary, 0.01, 400.0);
+        for name in [
+            "repro_sessions_opened_total",
+            "repro_sessions_resident",
+            "repro_session_state_resident_bytes",
+            "repro_session_evictions_total",
+            "repro_session_replay_rebuilds_total",
+            "repro_session_chunks_total",
+            "repro_session_boosted_chunks_total",
+        ] {
+            let m = set
+                .metrics()
+                .iter()
+                .find(|m| m.name == name)
+                .unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(m.value, 0.0, "{name} must read 0 when disabled");
+        }
+        let line = jsonio::write(&serve_obs_json(&summary, None));
+        assert!(!line.contains("\"sessions\""));
     }
 
     #[test]
@@ -771,6 +885,13 @@ mod tests {
                 .and_then(|b| b.get("hits"))
                 .and_then(Json::as_usize),
             Some(40)
+        );
+        assert_eq!(
+            parsed
+                .get("sessions")
+                .and_then(|s| s.get("replay_rebuilds"))
+                .and_then(Json::as_usize),
+            Some(4)
         );
         // With a start snapshot, the proc block reports run-delta CPU
         // (on Linux, where /proc parses).

@@ -83,6 +83,34 @@ impl AdaptiveMcConfig {
     }
 }
 
+/// Per-chunk streaming escalation rule: should this chunk's decisions
+/// be recomputed at the boosted budget `s_max`?
+///
+/// A streaming session keeps `s` resident lanes (its base budget); the
+/// worker consults this rule on each chunk's pooled std. It is the
+/// controller's stopping rule read in reverse: a CI half-width
+/// `z·σ̂_max/√s` above `target_ci` means the base evidence did not
+/// converge, so the worker replays lanes `s..s_max` and merges them in.
+/// `target_ci <= 0` never boosts (the fixed-budget escape hatch), and a
+/// budget already at `s_max` has nothing to escalate to.
+pub fn stream_should_boost(
+    std: &[f32],
+    s: usize,
+    cfg: &AdaptiveMcConfig,
+) -> bool {
+    if cfg.target_ci <= 0.0 || s == 0 || cfg.s_max <= s {
+        return false;
+    }
+    if s < 2 {
+        return true; // no variance estimate yet — escalate
+    }
+    let sem = (s as f64).sqrt();
+    std.iter()
+        .map(|&v| cfg.z * v as f64 / sem)
+        .fold(0.0, f64::max)
+        > cfg.target_ci
+}
+
 /// Order-stable accumulator of MC sample blocks.
 ///
 /// Blocks may arrive out of order (fleet shards complete whenever their
@@ -404,6 +432,26 @@ mod tests {
         }
         ctl.push_block(0, vec![0.0; 5]);
         assert_eq!(ctl.decision(), McDecision::Exhausted);
+    }
+
+    #[test]
+    fn stream_boost_triggers_on_wide_intervals_only() {
+        let cfg = AdaptiveMcConfig {
+            s_min: 2,
+            s_max: 16,
+            target_ci: 0.1,
+            z: 2.0,
+            chunk: 4,
+        };
+        // hw = 2·0.3/√4 = 0.3 > 0.1 → escalate.
+        assert!(stream_should_boost(&[0.01, 0.3], 4, &cfg));
+        // hw = 2·0.01/√4 = 0.01 ≤ 0.1 → stay at base budget.
+        assert!(!stream_should_boost(&[0.01, 0.01], 4, &cfg));
+        // Already at the boosted budget — nothing to escalate to.
+        assert!(!stream_should_boost(&[9.0], 16, &cfg));
+        // target_ci = 0 is the fixed-budget escape hatch.
+        let fixed = AdaptiveMcConfig { target_ci: 0.0, ..cfg };
+        assert!(!stream_should_boost(&[9.0], 4, &fixed));
     }
 
     #[test]

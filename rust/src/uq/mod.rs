@@ -31,7 +31,8 @@ pub mod report;
 
 pub use calibrate::TemperatureScaler;
 pub use controller::{
-    AdaptiveController, AdaptiveMcConfig, McAccumulator, McDecision,
+    stream_should_boost, AdaptiveController, AdaptiveMcConfig,
+    McAccumulator, McDecision,
 };
 pub use ood::OodScorer;
 pub use policy::{RiskPolicy, RiskTier, TierDecision};
