@@ -30,6 +30,10 @@
 //!                   run that must still match bitwise while paying
 //!                   eviction/replay rebuilds (docs/serving.md
 //!                   §Streaming sessions)
+//!   chaos           3-engine mc-shard run with one engine chaos-killed
+//!                   (--chaos kill=e1@5ms) vs. fault-free: all requests
+//!                   must still be served and the merged checksums must
+//!                   match bitwise (docs/serving.md §Fault tolerance)
 //!
 //! Every run passes `--obs`, so scenario points carry the per-stage
 //! (queue / batch-form / compute / merge) p99 breakdown, and the
@@ -590,6 +594,42 @@ fn main() {
     write_scenario(&results, "stream", &stream_line);
     commit_bench("BENCH_stream.json", &stream_line);
 
+    // --- chaos: kill one of three mc-shard engines mid-run ---
+    // The fault-tolerance plane (docs/serving.md §Fault tolerance)
+    // must re-dispatch the dead engine's shards onto survivors with
+    // the merged outputs bit-identical to the fault-free run, and
+    // every request still served.
+    let chaos_reqs = requests.min(32);
+    println!("[chaos] 3 engines, mc-shard, fault-free reference");
+    let clean =
+        serve(&bin, ARCH, 3, "mc-shard", chaos_reqs, samples, &[]);
+    println!("[chaos] 3 engines, mc-shard, kill=e1@5ms");
+    let chaotic = serve(
+        &bin,
+        ARCH,
+        3,
+        "mc-shard",
+        chaos_reqs,
+        samples,
+        &["--chaos", "kill=e1@5ms"],
+    );
+    let chaos_bits_ok = (chaotic.pred_checksum - clean.pred_checksum)
+        .abs()
+        < 1e-9
+        && (chaotic.unc_checksum - clean.unc_checksum).abs() < 1e-9;
+    let chaos_served_ok = chaotic.served == clean.served
+        && chaotic.served == chaos_reqs;
+    let chaos_line = format!(
+        "{{\"scenario\":\"chaos\",\"source\":\"serve_fleet\",\
+         \"arch\":\"{ARCH}\",\"engines\":3,\"plan\":\"kill=e1@5ms\",\
+         \"requests\":{chaos_reqs},\"clean_rps\":{:.3},\
+         \"chaotic_rps\":{:.3},\"served\":{},\
+         \"bits_match\":{chaos_bits_ok},\
+         \"all_served\":{chaos_served_ok}}}",
+        clean.throughput, chaotic.throughput, chaotic.served
+    );
+    write_scenario(&results, "chaos", &chaos_line);
+
     // --- committed perf trajectory: BENCH_serve.json at the repo root ---
     // One line covering the headline scenarios (with the obs stage
     // breakdown), overwritten by every `cargo bench --bench serve_fleet`
@@ -696,15 +736,22 @@ fn main() {
          rebuilds every evicted chunk): {}",
         if stream_replays_ok { "PASS" } else { "FAIL" }
     );
+    println!(
+        "chaos recovery (engine killed, all served, bits match \
+         fault-free): {}",
+        if chaos_bits_ok && chaos_served_ok { "PASS" } else { "FAIL" }
+    );
     if !numerics_ok
         || !adaptive_ok
         || !mcb_bits_ok
         || !stream_bits_ok
         || !stream_replays_ok
+        || !chaos_bits_ok
+        || !chaos_served_ok
     {
         // Sample-seeding invariant, adaptive accounting, blocked-kernel
-        // bit-identity or the streaming bitwise contract broken —
-        // correctness bugs, not perf regressions.
+        // bit-identity, the streaming bitwise contract or chaos
+        // recovery broken — correctness bugs, not perf regressions.
         std::process::exit(1);
     }
 }

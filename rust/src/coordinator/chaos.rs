@@ -1,0 +1,368 @@
+//! Deterministic fault injection for the serving fleet (the chaos
+//! harness — ROADMAP "chaos scenarios on top of the open-loop
+//! harness", second half).
+//!
+//! A [`FaultPlan`] is parsed from a compact directive string:
+//!
+//! ```text
+//! kill=e1@250ms,stall=e2@100ms+50ms,drop=0.01
+//! ```
+//!
+//! * `kill=e<N>@<T>ms` — worker `N` (zero-based) panics the first time
+//!   it looks at its queue at or after `T` ms from fleet start. The
+//!   panic unwinds the worker thread: its queue receiver drops, queued
+//!   items are lost, and the fleet's supervision path (obituary →
+//!   health mask → shard re-dispatch) takes over.
+//! * `stall=e<N>@<T>ms+<D>ms` — worker `N` sleeps `D` ms before the
+//!   first engine call it issues at or after `T` ms (a one-shot
+//!   straggler; repeat the directive for repeated stalls).
+//! * `drop=<p>` — every fixed/stream reply is independently discarded
+//!   with probability `p`, decided by a hash of
+//!   `(plan seed, request seed, shard start)` — deliberately
+//!   *engine-independent*, so a re-dispatched or hedged re-execution
+//!   of the same shard is dropped too and a lost reply reliably
+//!   surfaces as a typed degraded wait instead of being papered over.
+//!
+//! Determinism contract: the same plan string and seed produce the
+//! same per-worker schedule and the same drop decisions. Kill/stall
+//! *trigger times* are wall-clock offsets from the fleet epoch, so
+//! which in-flight request they land on depends on machine speed — but
+//! the set of faults injected, and (because per-`(request, sample)`
+//! mask seeding makes re-executed shards bit-identical) the merged
+//! outputs, do not.
+
+use std::time::Duration;
+
+/// One scheduled one-shot stall window.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StallSpec {
+    /// Offset from the fleet epoch at which the stall arms.
+    pub at: Duration,
+    /// How long the worker sleeps when it fires.
+    pub dur: Duration,
+}
+
+/// A parsed, seeded fault-injection plan (see module docs for the
+/// grammar). `Default` is the empty plan: no faults, nothing armed.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultPlan {
+    /// `(engine, offset)` kill schedule.
+    pub kills: Vec<(usize, Duration)>,
+    /// `(engine, stall)` straggler schedule.
+    pub stalls: Vec<(usize, StallSpec)>,
+    /// Per-reply drop probability in `[0, 1]`.
+    pub drop_p: f64,
+    /// Seeds the drop-decision hash (set from the CLI `--seed`).
+    pub seed: u64,
+}
+
+impl FaultPlan {
+    /// Parse the `kill=…,stall=…,drop=…` directive grammar.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::default();
+        for directive in s.split(',') {
+            let directive = directive.trim();
+            if directive.is_empty() {
+                continue;
+            }
+            let (key, val) = directive.split_once('=').ok_or_else(|| {
+                format!(
+                    "chaos directive {directive:?} wants key=value \
+                     (kill=e1@250ms | stall=e2@100ms+50ms | drop=0.01)"
+                )
+            })?;
+            match key {
+                "kill" => {
+                    let (e, at) = val.split_once('@').ok_or_else(|| {
+                        format!("kill={val:?} wants e<N>@<T>ms")
+                    })?;
+                    plan.kills.push((
+                        parse_engine(e)?,
+                        parse_ms(at)?,
+                    ));
+                }
+                "stall" => {
+                    let (e, when) =
+                        val.split_once('@').ok_or_else(|| {
+                            format!(
+                                "stall={val:?} wants e<N>@<T>ms+<D>ms"
+                            )
+                        })?;
+                    let (at, dur) =
+                        when.split_once('+').ok_or_else(|| {
+                            format!(
+                                "stall={val:?} wants e<N>@<T>ms+<D>ms"
+                            )
+                        })?;
+                    plan.stalls.push((
+                        parse_engine(e)?,
+                        StallSpec {
+                            at: parse_ms(at)?,
+                            dur: parse_ms(dur)?,
+                        },
+                    ));
+                }
+                "drop" => {
+                    let p: f64 = val.parse().map_err(|_| {
+                        format!("drop={val:?} wants a probability")
+                    })?;
+                    if !(0.0..=1.0).contains(&p) {
+                        return Err(format!(
+                            "drop={p} out of range [0, 1]"
+                        ));
+                    }
+                    plan.drop_p = p;
+                }
+                other => {
+                    return Err(format!(
+                        "unknown chaos directive {other:?} \
+                         (kill | stall | drop)"
+                    ));
+                }
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Bind the drop-decision seed (the CLI threads `--seed` through).
+    pub fn with_seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    /// `true` if the plan injects nothing.
+    pub fn is_empty(&self) -> bool {
+        self.kills.is_empty()
+            && self.stalls.is_empty()
+            && self.drop_p == 0.0
+    }
+
+    /// The slice of the plan one worker executes. Cheap and pure: the
+    /// same plan and index always produce the same schedule.
+    pub fn for_engine(&self, idx: usize) -> WorkerChaos {
+        WorkerChaos {
+            kill_at: self
+                .kills
+                .iter()
+                .filter(|&&(e, _)| e == idx)
+                .map(|&(_, at)| at)
+                .min(),
+            stalls: self
+                .stalls
+                .iter()
+                .filter(|&&(e, _)| e == idx)
+                .map(|&(_, sp)| (sp, false))
+                .collect(),
+            drop_p: self.drop_p,
+            seed: self.seed,
+        }
+    }
+}
+
+fn parse_engine(s: &str) -> Result<usize, String> {
+    s.strip_prefix('e')
+        .and_then(|n| n.parse().ok())
+        .ok_or_else(|| {
+            format!("engine {s:?} wants e<N> (zero-based index)")
+        })
+}
+
+fn parse_ms(s: &str) -> Result<Duration, String> {
+    let num = s.strip_suffix("ms").unwrap_or(s);
+    let ms: f64 = num
+        .parse()
+        .map_err(|_| format!("duration {s:?} wants <N>ms"))?;
+    if ms < 0.0 || !ms.is_finite() {
+        return Err(format!("duration {s:?} must be >= 0"));
+    }
+    Ok(Duration::from_secs_f64(ms / 1e3))
+}
+
+/// One worker's runtime view of the plan. The drop decision is a pure
+/// hash so the schedule replays identically; the kill/stall triggers
+/// compare elapsed-since-epoch against the scheduled offsets.
+#[derive(Debug, Clone, Default)]
+pub struct WorkerChaos {
+    kill_at: Option<Duration>,
+    stalls: Vec<(StallSpec, bool)>,
+    drop_p: f64,
+    seed: u64,
+}
+
+/// Panic payload for a chaos-injected worker kill: lets `Fleet::join`
+/// distinguish an injected death from a genuine engine panic (both are
+/// folded into the `faults` summary either way).
+#[derive(Debug)]
+pub struct ChaosKill(pub usize);
+
+impl WorkerChaos {
+    /// `true` if this worker has any fault scheduled.
+    pub fn armed(&self) -> bool {
+        self.kill_at.is_some()
+            || !self.stalls.is_empty()
+            || self.drop_p > 0.0
+    }
+
+    /// Should the worker die now? Checked at queue-pull boundaries
+    /// only, so a kill never fires mid-item (re-dispatched work is
+    /// always either unprocessed or fully parked).
+    pub fn should_kill(&self, elapsed: Duration) -> bool {
+        self.kill_at.is_some_and(|at| elapsed >= at)
+    }
+
+    /// One-shot straggler: the first call at or after a stall's offset
+    /// returns its duration (and disarms it).
+    pub fn stall_for(&mut self, elapsed: Duration) -> Option<Duration> {
+        for (spec, fired) in self.stalls.iter_mut() {
+            if !*fired && elapsed >= spec.at {
+                *fired = true;
+                return Some(spec.dur);
+            }
+        }
+        None
+    }
+
+    /// Deterministic reply-drop decision for one shard. Keyed on
+    /// `(plan seed, request seed, shard start)` — engine-independent
+    /// by design (see module docs).
+    pub fn should_drop(&self, req_seed: u64, start: usize) -> bool {
+        if self.drop_p <= 0.0 {
+            return false;
+        }
+        if self.drop_p >= 1.0 {
+            return true;
+        }
+        let h = mix64(
+            mix64(mix64(self.seed ^ 0x9E37_79B9_7F4A_7C15)
+                .wrapping_add(req_seed))
+            .wrapping_add(start as u64),
+        );
+        let unit = (h >> 11) as f64 / (1u64 << 53) as f64;
+        unit < self.drop_p
+    }
+}
+
+/// SplitMix64 finaliser — the same avalanche the mask RNG family uses,
+/// kept local so the chaos layer has no RNG dependencies.
+fn mix64(mut x: u64) -> u64 {
+    x ^= x >> 30;
+    x = x.wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x ^= x >> 27;
+    x = x.wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_the_full_grammar() {
+        let plan = FaultPlan::parse(
+            "kill=e1@250ms,stall=e2@100ms+50ms,drop=0.01",
+        )
+        .expect("valid plan");
+        assert_eq!(
+            plan.kills,
+            vec![(1, Duration::from_millis(250))]
+        );
+        assert_eq!(
+            plan.stalls,
+            vec![(
+                2,
+                StallSpec {
+                    at: Duration::from_millis(100),
+                    dur: Duration::from_millis(50),
+                }
+            )]
+        );
+        assert_eq!(plan.drop_p, 0.01);
+        assert!(!plan.is_empty());
+        // Bare numbers are milliseconds too.
+        let bare = FaultPlan::parse("kill=e0@5").expect("bare ms");
+        assert_eq!(bare.kills, vec![(0, Duration::from_millis(5))]);
+        assert!(FaultPlan::parse("").expect("empty ok").is_empty());
+    }
+
+    #[test]
+    fn rejects_malformed_directives() {
+        for bad in [
+            "kill=1@5ms",    // missing e prefix
+            "kill=e1",       // missing @time
+            "stall=e1@5ms",  // missing +duration
+            "drop=1.5",      // out of range
+            "drop=x",        // not a number
+            "pause=e1@5ms",  // unknown directive
+            "kill",          // no key=value
+        ] {
+            assert!(
+                FaultPlan::parse(bad).is_err(),
+                "{bad:?} must not parse"
+            );
+        }
+    }
+
+    #[test]
+    fn same_plan_and_seed_replays_the_same_schedule() {
+        let text = "kill=e1@250ms,stall=e0@10ms+20ms,drop=0.5";
+        let a = FaultPlan::parse(text).unwrap().with_seed(7);
+        let b = FaultPlan::parse(text).unwrap().with_seed(7);
+        assert_eq!(a, b, "parse is deterministic");
+        let ca = a.for_engine(0);
+        let cb = b.for_engine(0);
+        let decisions = |c: &WorkerChaos| -> Vec<bool> {
+            (0..256u64)
+                .flat_map(|req| {
+                    (0..4).map(move |s| (req, s))
+                })
+                .map(|(req, s)| c.should_drop(req, s))
+                .collect()
+        };
+        assert_eq!(
+            decisions(&ca),
+            decisions(&cb),
+            "same seed, same drop schedule"
+        );
+        // A different seed decides differently somewhere, and the
+        // empirical rate tracks p.
+        let cc = FaultPlan::parse(text).unwrap().with_seed(8).for_engine(0);
+        assert_ne!(decisions(&ca), decisions(&cc));
+        let dropped =
+            decisions(&ca).iter().filter(|&&d| d).count() as f64;
+        let rate = dropped / 1024.0;
+        assert!(
+            (rate - 0.5).abs() < 0.1,
+            "drop rate {rate} should track p=0.5"
+        );
+    }
+
+    #[test]
+    fn worker_slices_trigger_at_their_offsets() {
+        let plan = FaultPlan::parse(
+            "kill=e1@250ms,stall=e1@100ms+50ms,drop=1.0",
+        )
+        .unwrap();
+        let mut w1 = plan.for_engine(1);
+        let w0 = plan.for_engine(0);
+        assert!(w1.armed());
+        assert!(w0.armed(), "drop applies to every worker");
+        assert!(!w0.should_kill(Duration::from_secs(10)));
+        assert!(!w1.should_kill(Duration::from_millis(249)));
+        assert!(w1.should_kill(Duration::from_millis(250)));
+        assert_eq!(w1.stall_for(Duration::from_millis(99)), None);
+        assert_eq!(
+            w1.stall_for(Duration::from_millis(100)),
+            Some(Duration::from_millis(50))
+        );
+        assert_eq!(
+            w1.stall_for(Duration::from_millis(200)),
+            None,
+            "stalls are one-shot"
+        );
+        assert!(w1.should_drop(3, 0), "p=1 drops everything");
+        assert!(
+            !FaultPlan::default().for_engine(0).armed(),
+            "empty plan arms nothing"
+        );
+    }
+}

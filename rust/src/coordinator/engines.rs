@@ -46,6 +46,14 @@ pub struct PartialPrediction {
     pub count: usize,
     /// Engine-model latency for computing the shard, in ms.
     pub model_latency_ms: f64,
+    /// First sample index of the shard within the request's schedule.
+    /// The waiter dedups duplicate replies (hedging / re-dispatch) by
+    /// this key and sorts shards on it before merging, so the f64
+    /// moment reduction is arrival-order-independent.
+    pub start: usize,
+    /// Engine that actually computed the shard (may differ from the
+    /// engine it was first dispatched to, under re-dispatch/hedging).
+    pub engine: usize,
 }
 
 impl PartialPrediction {
@@ -66,7 +74,15 @@ impl PartialPrediction {
                 sumsq[i] += v * v;
             }
         }
-        Self { sum, sumsq, count, model_latency_ms }
+        Self { sum, sumsq, count, model_latency_ms, start: 0, engine: 0 }
+    }
+
+    /// Stamp which shard this is and who computed it (fleet workers
+    /// call this; the single-engine paths keep the zero defaults).
+    pub fn with_origin(mut self, start: usize, engine: usize) -> Self {
+        self.start = start;
+        self.engine = engine;
+        self
     }
 }
 

@@ -43,15 +43,32 @@
 //! are bit-identical to one continuous single-engine pass, with or
 //! without evictions, because lane state is a pure function of
 //! `(design, session, consumed signal, lane)`.
+//!
+//! **Fault tolerance** (`docs/serving.md` §Fault tolerance): every
+//! fixed/stream shard is tracked in an outstanding-shard table until
+//! its reply lands. Worker death (a panic — injected by the
+//! [`super::chaos`] harness or genuine) is detected through an
+//! obituary channel plus send-failure, the engine is marked unhealthy
+//! so routing skips it, and its queued + in-flight shards are
+//! re-dispatched to survivors. Because per-`(request, sample)` mask
+//! seeding makes a shard a pure function of `(request seed, start,
+//! count)`, re-execution on any engine is bit-identical — merged
+//! outputs are unchanged by faults. Shards overdue against the
+//! windowed latency profile are hedged (speculatively re-executed,
+//! first reply wins, duplicates deduped by shard start), and when no
+//! engine can serve, `wait`/`wait_chunk` return a typed
+//! [`FleetError::Degraded`] instead of hanging.
 
-use std::collections::HashMap;
-use std::sync::{mpsc, Arc};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
 use super::batcher::{Batcher, BatchPolicy};
+use super::chaos::{ChaosKill, FaultPlan, WorkerChaos};
 use super::engines::{
     Engine, PartialPrediction, Prediction, SampleBlock, ShardRequest,
 };
@@ -65,9 +82,9 @@ use crate::fpga::McOutput;
 use crate::kernels::MaskBankStats;
 use crate::metrics::pooled_mean_std;
 use crate::obs::{
-    window_index, EngineLoad, LogHistogram, McCounters, ObsConfig,
-    Sampler, StageStats, Timeline, WindowedCount, WindowedHist,
-    WorkerTimeline,
+    window_index, EngineLoad, FaultCounters, FaultStats, LogHistogram,
+    McCounters, ObsConfig, Sampler, StageStats, Timeline, WindowedCount,
+    WindowedHist, WorkerTimeline,
 };
 use crate::uq::controller::{
     stream_should_boost, AdaptiveController, AdaptiveMcConfig, McDecision,
@@ -104,6 +121,16 @@ pub struct FleetConfig {
     /// by replay (affinity placement only — a lane shard cannot judge
     /// the pooled CI).
     pub session_uq: Option<AdaptiveMcConfig>,
+    /// Deterministic fault-injection plan (`--chaos`). `None` (and the
+    /// empty plan) injects nothing; straggler hedging only arms when a
+    /// non-empty plan is configured, so an un-chaosed fleet's behaviour
+    /// is untouched.
+    pub chaos: Option<FaultPlan>,
+    /// Upper bound on `wait`/`wait_chunk`/`wait_adaptive`
+    /// (`--wait-timeout-ms`). `None` keeps the long 120 s backstop;
+    /// setting it surfaces lost replies as [`FleetError::Degraded`]
+    /// promptly instead of blocking.
+    pub wait_timeout: Option<Duration>,
 }
 
 impl Default for FleetConfig {
@@ -119,15 +146,76 @@ impl Default for FleetConfig {
             session_bytes: None,
             session_replay: true,
             session_uq: None,
+            chaos: None,
+            wait_timeout: None,
         }
     }
 }
+
+/// Default backstop for `wait`/`wait_chunk` when no `--wait-timeout-ms`
+/// is configured (the pre-fault-tolerance hang bound).
+const DEFAULT_WAIT: Duration = Duration::from_secs(120);
+
+/// Poll interval of the wait loops: between replies the waiter wakes
+/// this often to process worker obituaries (re-dispatching orphans) and
+/// check hedging deadlines.
+const PROBE: Duration = Duration::from_millis(20);
+
+/// Straggler deadline = windowed e2e p99 × this factor…
+const HEDGE_FACTOR: f64 = 4.0;
+
+/// …floored here (ms), so an empty latency profile (first requests)
+/// doesn't hedge everything instantly.
+const HEDGE_MIN_MS: f64 = 25.0;
+
+/// A typed fleet-level wait failure. `Degraded` is the load-bearing
+/// variant: the fleet kept serving what it could but this response is
+/// incomplete (worker death with no survivor to re-dispatch to, or
+/// chaos-dropped replies) — the caller gets an honest typed outcome
+/// instead of an indefinite block, per the paper's degraded-but-honest
+/// serving posture.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FleetError {
+    /// Not every shard reply arrived before the wait deadline.
+    Degraded {
+        /// Request id (or session id for `wait_chunk`).
+        id: u64,
+        /// Shard replies that did arrive.
+        got: usize,
+        /// Shard replies expected.
+        expected: usize,
+        /// How long the waiter watched before giving up.
+        waited_ms: f64,
+    },
+    /// An engine reported a shard failure (bad artifact, engine error).
+    Engine { id: u64, msg: String },
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Degraded { id, got, expected, waited_ms } => {
+                write!(
+                    f,
+                    "request {id} degraded: {got}/{expected} shard \
+                     replies after {waited_ms:.0} ms"
+                )
+            }
+            FleetError::Engine { id, msg } => {
+                write!(f, "request {id}: engine failed: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FleetError {}
 
 /// Where a worker sends one shard's outcome: the fixed path pre-reduces
 /// the shard to moment sums and replies on the request's own channel;
 /// the adaptive path forwards the raw sample block to the fleet's
 /// adaptive coordinator thread (which needs individual samples for
 /// order-stable reduction and the epistemic decomposition).
+#[derive(Clone)]
 enum ReplySink {
     Fixed(mpsc::Sender<Result<PartialPrediction, String>>),
     Adaptive(mpsc::Sender<AdaptiveEvent>, u64),
@@ -135,7 +223,11 @@ enum ReplySink {
 }
 
 /// One unit of engine work: a whole request (`start = 0, count = S`) or
-/// one MC shard of it.
+/// one MC shard of it. `Clone` exists for the fault-tolerance paths
+/// only (outstanding-shard tracking, re-dispatch, hedging) — the
+/// payload is behind an `Arc` and the sinks are channel senders, so a
+/// clone re-executes the *same* shard against the *same* reply channel.
+#[derive(Clone)]
 struct WorkItem {
     beat: Arc<Vec<f32>>,
     req_seed: u64,
@@ -164,6 +256,7 @@ struct WorkItem {
 }
 
 /// Session routing metadata riding on a streaming chunk's `WorkItem`.
+#[derive(Clone)]
 struct StreamJob {
     sid: u64,
     /// History length (in f32 values) *before* this chunk was appended
@@ -184,6 +277,11 @@ struct StreamBlock {
 /// under mc-shard routing).
 pub struct ChunkTicket {
     pub sid: u64,
+    /// Session seed (= shard-table request key for this chunk's items).
+    seed: u64,
+    /// History length before this chunk — disambiguates this chunk's
+    /// shard-table entries from other in-flight chunks of the session.
+    history_end: usize,
     enqueued: Instant,
     expected: usize,
     rx: mpsc::Receiver<Result<StreamBlock, String>>,
@@ -317,6 +415,9 @@ pub struct FleetObs {
     /// session plane is disabled). Stamped by `join` itself — the
     /// fleet owns the table, unlike the mask bank.
     pub sessions: Option<SessionStats>,
+    /// Fault-tolerance accounting (always stamped; all-zero on a clean
+    /// run — [`FaultStats::any`] gates the conditional JSON block).
+    pub faults: FaultStats,
 }
 
 /// Aggregate + per-engine serving stats, returned by [`Fleet::join`].
@@ -397,6 +498,62 @@ struct FleetWindows {
     sampler: Option<Sampler>,
 }
 
+/// Identity of one tracked shard: `(request key, chunk disambiguator,
+/// shard start)`. The request key is the request id on the fixed path
+/// and the session seed (= sid) on the stream path; the disambiguator
+/// is `history_end + 1` for stream chunks and 0 for fixed requests, so
+/// the two key spaces cannot collide and pipelined chunks of one
+/// session stay distinct.
+type ShardKey = (u64, u64, usize);
+
+/// One dispatched-but-unreplied shard. The cloned `WorkItem` (payload
+/// behind an `Arc`, sink a channel sender) is everything needed to
+/// re-execute the shard bit-identically on any engine.
+struct PendingShard {
+    engine: usize,
+    item: WorkItem,
+    dispatched: Instant,
+    hedged: bool,
+}
+
+/// The outstanding-shard table: inserted before dispatch, re-targeted
+/// on re-dispatch, removed by the executing worker just before it
+/// replies. Uncontended in steady state (one lock per shard hop).
+type ShardTable = Mutex<HashMap<ShardKey, PendingShard>>;
+
+/// Flip an engine dead exactly once, whichever path noticed first (the
+/// obituary channel, a failed send, or join's panic catch).
+fn mark_dead(health: &[AtomicBool], faults: &FaultCounters, i: usize) {
+    if health[i].swap(false, Ordering::AcqRel) {
+        faults.worker_lost();
+    }
+}
+
+/// Worker death notice: armed at spawn, disarmed on clean exit, so an
+/// unwinding panic — chaos-injected or genuine — reports the engine
+/// index on the fleet's obituary channel as the thread dies.
+struct Obituary {
+    idx: usize,
+    tx: mpsc::Sender<usize>,
+    armed: bool,
+}
+
+impl Drop for Obituary {
+    fn drop(&mut self) {
+        if self.armed {
+            let _ = self.tx.send(self.idx);
+        }
+    }
+}
+
+/// Fault-tolerance state threaded into each worker.
+struct WorkerCtx {
+    chaos: WorkerChaos,
+    epoch: Instant,
+    faults: Arc<FaultCounters>,
+    outstanding: Arc<ShardTable>,
+}
+
 /// The sharded serving fleet.
 pub struct Fleet {
     txs: Vec<mpsc::SyncSender<WorkItem>>,
@@ -420,6 +577,21 @@ pub struct Fleet {
     /// Streaming-session plane (`None` unless `session_bytes` was set).
     sessions: Option<Arc<SessionTable>>,
     next_sid: u64,
+    /// Per-engine liveness (flipped false on worker death, never back).
+    health: Arc<Vec<AtomicBool>>,
+    /// Fault-tolerance accounting, shared with workers + coordinator.
+    faults: Arc<FaultCounters>,
+    /// Dispatched-but-unreplied fixed/stream shards (re-dispatch and
+    /// hedging source of truth).
+    outstanding: Arc<ShardTable>,
+    /// Worker obituaries (engine index per death), drained by
+    /// [`Fleet::supervise`].
+    deaths_rx: mpsc::Receiver<usize>,
+    /// `true` when a non-empty chaos plan is configured: arms straggler
+    /// hedging (never armed on a clean fleet — zero behaviour change).
+    chaos_armed: bool,
+    /// Caller-configured wait bound (`--wait-timeout-ms`).
+    wait_timeout: Option<Duration>,
 }
 
 impl Fleet {
@@ -449,6 +621,15 @@ impl Fleet {
         let sessions = cfg
             .session_bytes
             .map(|b| Arc::new(SessionTable::new(b, cfg.session_replay)));
+        let plan = cfg.chaos.clone().unwrap_or_default();
+        let chaos_armed = !plan.is_empty();
+        let health: Arc<Vec<AtomicBool>> = Arc::new(
+            (0..cfg.engines).map(|_| AtomicBool::new(true)).collect(),
+        );
+        let faults = Arc::new(FaultCounters::new());
+        let outstanding: Arc<ShardTable> =
+            Arc::new(Mutex::new(HashMap::new()));
+        let (deaths_tx, deaths_rx) = mpsc::channel::<usize>();
         let mut txs = Vec::with_capacity(cfg.engines);
         let mut loads = Vec::with_capacity(cfg.engines);
         let mut workers = Vec::with_capacity(cfg.engines);
@@ -460,11 +641,22 @@ impl Fleet {
             let worker_obs = cfg.obs.clone();
             let worker_sessions = sessions.clone();
             let worker_uq = cfg.session_uq;
+            let ctx = WorkerCtx {
+                chaos: plan.for_engine(idx),
+                epoch,
+                faults: Arc::clone(&faults),
+                outstanding: Arc::clone(&outstanding),
+            };
+            let obit_tx = deaths_tx.clone();
             workers.push(thread::spawn(move || {
-                worker_loop(
+                let mut obituary =
+                    Obituary { idx, tx: obit_tx, armed: true };
+                let summary = worker_loop(
                     factory, rx, policy, worker_load, idx, worker_obs,
-                    worker_win, worker_sessions, worker_uq,
-                )
+                    worker_win, worker_sessions, worker_uq, ctx,
+                );
+                obituary.armed = false;
+                summary
             }));
             txs.push(tx);
             loads.push(load);
@@ -487,6 +679,9 @@ impl Fleet {
         let coord_self_tx = adaptive_tx.clone();
         let coord_router = Router::new(cfg.router);
         let coord_mc = Arc::clone(&mc);
+        let coord_health = Arc::clone(&health);
+        let coord_faults = Arc::clone(&faults);
+        let coord_outstanding = Arc::clone(&outstanding);
         let adaptive_coord = thread::spawn(move || {
             adaptive_coordinator(
                 adaptive_rx,
@@ -495,6 +690,9 @@ impl Fleet {
                 coord_loads,
                 coord_router,
                 coord_mc,
+                coord_health,
+                coord_faults,
+                coord_outstanding,
             )
         });
         Self {
@@ -518,6 +716,12 @@ impl Fleet {
             win,
             sessions,
             next_sid: 0,
+            health,
+            faults,
+            outstanding,
+            deaths_rx,
+            chaos_armed,
+            wait_timeout: cfg.wait_timeout,
         }
     }
 
@@ -530,6 +734,141 @@ impl Fleet {
     /// the fleet's epoch through this.
     pub fn obs_window(&self) -> Option<(Instant, Duration)> {
         self.win.as_ref().map(|w| (w.epoch, w.width))
+    }
+
+    /// Fault-tolerance counters so far (also stamped into
+    /// [`FleetObs::faults`] at join).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults.snapshot()
+    }
+
+    /// Engines whose workers are still alive.
+    pub fn healthy_engines(&self) -> usize {
+        self.health
+            .iter()
+            .filter(|h| h.load(Ordering::Acquire))
+            .count()
+    }
+
+    fn health_snapshot(&self) -> Vec<bool> {
+        self.health.iter().map(|h| h.load(Ordering::Acquire)).collect()
+    }
+
+    fn load_snapshot(&self) -> Vec<usize> {
+        self.loads.iter().map(|l| l.outstanding()).collect()
+    }
+
+    /// Process worker deaths: drain the obituary channel, flip health,
+    /// and re-dispatch every outstanding shard stranded on a dead
+    /// engine to a survivor. Called from the submit paths and from the
+    /// wait loops' probe ticks, so orphans recover while the caller is
+    /// still waiting. Deterministic per-`(request, sample)` mask
+    /// seeding makes the re-executed shard bit-identical wherever it
+    /// lands.
+    fn supervise(&mut self) {
+        let mut observed_death = false;
+        while let Ok(idx) = self.deaths_rx.try_recv() {
+            mark_dead(&self.health, &self.faults, idx);
+            observed_death = true;
+        }
+        if observed_death {
+            self.redispatch_orphans();
+        }
+    }
+
+    fn redispatch_orphans(&mut self) {
+        let healthy = self.health_snapshot();
+        // Clone victims under the lock, send outside it (workers take
+        // the same lock on every reply).
+        let victims: Vec<(ShardKey, WorkItem)> = {
+            let tab = self.outstanding.lock().expect("shard table");
+            tab.iter()
+                .filter(|(_, p)| !healthy[p.engine])
+                .map(|(k, p)| (*k, p.item.clone()))
+                .collect()
+        };
+        for (key, mut item) in victims {
+            let load_snapshot = self.load_snapshot();
+            let Some(j) =
+                self.router.rescue(&load_snapshot, &healthy, None)
+            else {
+                // No survivor: the wait deadline surfaces this as
+                // `FleetError::Degraded`.
+                return;
+            };
+            // Queue timing restarts at the re-dispatch; the request's
+            // e2e clock (`enqueued`) keeps running — the fault's cost
+            // stays visible in e2e.
+            item.sent = Instant::now();
+            self.loads[j].inc();
+            if self.txs[j].send(item).is_err() {
+                self.loads[j].dec();
+                mark_dead(&self.health, &self.faults, j);
+                continue;
+            }
+            let mut tab = self.outstanding.lock().expect("shard table");
+            if let Some(p) = tab.get_mut(&key) {
+                p.engine = j;
+                p.dispatched = Instant::now();
+            }
+            self.faults.shard_redispatched();
+        }
+    }
+
+    /// Hedge fixed-path shards of request `id` that are overdue against
+    /// the observed latency profile (e2e p99 × [`HEDGE_FACTOR`],
+    /// floored): speculatively re-execute on the least-loaded survivor
+    /// *other than* the shard's home. First reply wins at the waiter
+    /// (dedup by shard start); `hedged` records each hedged shard's
+    /// home engine so a hedge win can be attributed.
+    fn hedge_overdue(
+        &mut self,
+        id: u64,
+        hedged: &mut HashMap<usize, usize>,
+    ) {
+        let deadline_ms = (self.e2e.percentile_ms(99.0) * HEDGE_FACTOR)
+            .max(HEDGE_MIN_MS);
+        let healthy = self.health_snapshot();
+        let mut victims: Vec<(usize, WorkItem, usize)> = Vec::new();
+        {
+            let mut tab = self.outstanding.lock().expect("shard table");
+            for (&(req, aux, start), p) in tab.iter_mut() {
+                if req == id
+                    && aux == 0
+                    && !p.hedged
+                    && p.dispatched.elapsed().as_secs_f64() * 1e3
+                        > deadline_ms
+                {
+                    p.hedged = true;
+                    victims.push((start, p.item.clone(), p.engine));
+                }
+            }
+        }
+        for (start, mut item, home) in victims {
+            let load_snapshot = self.load_snapshot();
+            let Some(j) =
+                self.router.rescue(&load_snapshot, &healthy, Some(home))
+            else {
+                continue; // nowhere to hedge to
+            };
+            item.sent = Instant::now();
+            self.loads[j].inc();
+            if self.txs[j].send(item).is_err() {
+                self.loads[j].dec();
+                mark_dead(&self.health, &self.faults, j);
+                continue;
+            }
+            self.faults.hedge_fired();
+            hedged.insert(start, home);
+        }
+    }
+
+    /// Drop the tracked shards of a request/chunk the waiter gave up
+    /// on, so a degraded request doesn't pin its work items (and their
+    /// reply-channel clones) until join.
+    fn forget_shards(&self, req: u64, aux: u64) {
+        let mut tab = self.outstanding.lock().expect("shard table");
+        tab.retain(|&(r, a, _), _| !(r == req && a == aux));
     }
 
     /// Submit a beat at the fleet's configured S. Returns `None` if
@@ -567,6 +906,7 @@ impl Fleet {
         scheduled: Instant,
     ) -> Option<Ticket> {
         assert!(s >= 1, "S must be positive");
+        self.supervise();
         let id = self.next_id;
         self.next_id += 1;
         // The request seed IS the request id: every engine derives the
@@ -580,6 +920,9 @@ impl Fleet {
             &mut self.router,
             &self.txs,
             &self.loads,
+            &self.health,
+            &self.faults,
+            &self.outstanding,
             &beat,
             req_seed,
             0,
@@ -667,7 +1010,9 @@ impl Fleet {
     ) -> Result<ChunkTicket, SessionError> {
         let table =
             self.sessions.clone().ok_or(SessionError::Disabled)?;
-        let meta = table.meta(sid)?;
+        self.supervise();
+        let mut meta = table.meta(sid)?;
+        let healthy = self.health_snapshot();
         let assignments: Vec<(usize, usize, usize)> =
             if self.router.policy() == RouterPolicy::McShard {
                 self.router
@@ -678,6 +1023,21 @@ impl Fleet {
                     .map(|(j, (s0, c))| (j, s0, c))
                     .collect()
             } else {
+                if !healthy[meta.engine] {
+                    // The pinned worker died: re-pin to the
+                    // least-loaded survivor. Lane state is keyed by
+                    // range start and engine-agnostic — anything still
+                    // resident carries over, anything lost with the
+                    // dead worker rebuilds transparently by replay.
+                    let load_snapshot = self.load_snapshot();
+                    let j = self
+                        .router
+                        .rescue(&load_snapshot, &healthy, None)
+                        .ok_or(SessionError::Unavailable(sid))?;
+                    table.repin(sid, j)?;
+                    self.faults.session_repinned();
+                    meta.engine = j;
+                }
                 vec![(meta.engine, 0, meta.samples)]
             };
         let history_end = table.submit(sid, &chunk, assignments.len())?;
@@ -688,7 +1048,7 @@ impl Fleet {
         let beat = Arc::new(chunk);
         let (tx, rx) = mpsc::channel();
         let expected = assignments.len();
-        for (j, s0, c) in assignments {
+        for (done, &(j, s0, c)) in assignments.iter().enumerate() {
             let item = WorkItem {
                 beat: Arc::clone(&beat),
                 req_seed: meta.seed,
@@ -700,28 +1060,92 @@ impl Fleet {
                 sink: ReplySink::Stream(tx.clone()),
                 stream: Some(StreamJob { sid, history_end }),
             };
-            self.loads[j].inc();
-            self.txs[j].send(item).expect("fleet worker gone");
+            let key = (meta.seed, history_end as u64 + 1, s0);
+            match dispatch_item(
+                &mut self.router,
+                &self.txs,
+                &self.loads,
+                &self.health,
+                &self.faults,
+                &self.outstanding,
+                j,
+                key,
+                true,
+                item,
+                false,
+            ) {
+                Dispatch::Sent(_) => {}
+                Dispatch::Full | Dispatch::NoEngines => {
+                    // Release the pending slots this chunk reserved
+                    // for its undispatched ranges so `close` drains.
+                    for _ in done..expected {
+                        table.abandon(sid);
+                    }
+                    return Err(SessionError::Unavailable(sid));
+                }
+            }
         }
-        Ok(ChunkTicket { sid, enqueued, expected, rx })
+        Ok(ChunkTicket {
+            sid,
+            seed: meta.seed,
+            history_end,
+            enqueued,
+            expected,
+            rx,
+        })
     }
 
     /// Collect one chunk's decisions, merging lane shards in ascending
-    /// lane order (bit-identical to a single-engine pass).
+    /// lane order (bit-identical to a single-engine pass). Worker
+    /// deaths during the wait are handled on the probe ticks: orphaned
+    /// lane ranges re-dispatch to survivors (replay rebuild keeps them
+    /// bit-identical); if no engine can serve before the deadline the
+    /// chunk degrades to a typed [`FleetError::Degraded`].
     pub fn wait_chunk(
         &mut self,
         t: ChunkTicket,
-    ) -> Result<ChunkResponse, String> {
-        let mut blocks = Vec::with_capacity(t.expected);
-        for _ in 0..t.expected {
-            let block = t
-                .rx
-                .recv_timeout(Duration::from_secs(120))
-                .map_err(|_| {
-                    format!("session {}: chunk reply lost", t.sid)
-                })?
-                .map_err(|msg| format!("session {}: {msg}", t.sid))?;
-            blocks.push(block);
+    ) -> std::result::Result<ChunkResponse, FleetError> {
+        let deadline = self.wait_timeout.unwrap_or(DEFAULT_WAIT);
+        let t_wait = Instant::now();
+        let mut blocks: Vec<StreamBlock> = Vec::with_capacity(t.expected);
+        let mut seen: HashSet<usize> = HashSet::new();
+        while blocks.len() < t.expected {
+            match t.rx.recv_timeout(PROBE) {
+                Ok(Ok(block)) => {
+                    // First reply per lane range wins; a duplicate can
+                    // only arrive from re-dispatch racing the original.
+                    if seen.insert(block.start) {
+                        blocks.push(block);
+                    }
+                }
+                Ok(Err(msg)) => {
+                    return Err(FleetError::Engine { id: t.sid, msg });
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.supervise();
+                    if t_wait.elapsed() >= deadline {
+                        self.forget_shards(t.seed, t.history_end as u64 + 1);
+                        return Err(FleetError::Degraded {
+                            id: t.sid,
+                            got: blocks.len(),
+                            expected: t.expected,
+                            waited_ms: t_wait.elapsed().as_secs_f64()
+                                * 1e3,
+                        });
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    // Every sender (workers + tracked shard clones) is
+                    // gone: nothing can ever arrive.
+                    self.supervise();
+                    return Err(FleetError::Degraded {
+                        id: t.sid,
+                        got: blocks.len(),
+                        expected: t.expected,
+                        waited_ms: t_wait.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+            }
         }
         blocks.sort_by_key(|b| b.start);
         let n_beats = blocks.first().map_or(0, |b| b.beats.len());
@@ -786,6 +1210,7 @@ impl Fleet {
         mc: &AdaptiveMcConfig,
     ) -> Option<AdaptiveTicket> {
         mc.validate().expect("invalid AdaptiveMcConfig");
+        self.supervise();
         let id = self.next_id;
         self.next_id += 1;
         let req_seed = id;
@@ -811,6 +1236,9 @@ impl Fleet {
             &mut self.router,
             &self.txs,
             &self.loads,
+            &self.health,
+            &self.faults,
+            &self.outstanding,
             &beat,
             req_seed,
             0,
@@ -863,30 +1291,84 @@ impl Fleet {
     }
 
     /// Block until all of a ticket's shards arrive, reduce them, and
-    /// record request-level latency. Call before `join`. Errors if any
-    /// shard's engine failed (e.g. a missing PJRT artifact for the
-    /// shard size) or a worker died.
-    pub fn wait(&mut self, ticket: Ticket) -> Result<FleetResponse> {
+    /// record request-level latency. Call before `join`.
+    ///
+    /// Fault handling happens on the probe ticks between replies:
+    /// worker obituaries are processed (orphaned shards re-dispatch to
+    /// survivors) and — with a chaos plan armed — overdue shards are
+    /// hedged, first reply winning. Shards are merged in ascending
+    /// shard-start order whatever order they arrived, so the f64
+    /// moment reduction is deterministic and a re-dispatched or hedged
+    /// run merges bit-identically to a fault-free one. Returns a typed
+    /// [`FleetError`]: `Engine` if a shard's engine failed,
+    /// `Degraded` if replies stopped arriving before the deadline.
+    pub fn wait(
+        &mut self,
+        ticket: Ticket,
+    ) -> std::result::Result<FleetResponse, FleetError> {
+        let deadline = self.wait_timeout.unwrap_or(DEFAULT_WAIT);
+        let t_wait = Instant::now();
+        let mut parts: Vec<PartialPrediction> =
+            Vec::with_capacity(ticket.expected);
+        let mut seen: HashSet<usize> = HashSet::new();
+        let mut hedged: HashMap<usize, usize> = HashMap::new();
+        while parts.len() < ticket.expected {
+            match ticket.rx.recv_timeout(PROBE) {
+                Ok(Ok(partial)) => {
+                    // First reply per shard wins; duplicates (hedge vs
+                    // original, re-dispatch races) are discarded.
+                    if !seen.insert(partial.start) {
+                        continue;
+                    }
+                    if let Some(&home) = hedged.get(&partial.start) {
+                        if partial.engine != home {
+                            self.faults.hedge_won();
+                        }
+                    }
+                    parts.push(partial);
+                }
+                Ok(Err(msg)) => {
+                    return Err(FleetError::Engine {
+                        id: ticket.id,
+                        msg,
+                    });
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    self.supervise();
+                    if self.chaos_armed {
+                        self.hedge_overdue(ticket.id, &mut hedged);
+                    }
+                    if t_wait.elapsed() >= deadline {
+                        self.forget_shards(ticket.id, 0);
+                        return Err(FleetError::Degraded {
+                            id: ticket.id,
+                            got: parts.len(),
+                            expected: ticket.expected,
+                            waited_ms: t_wait.elapsed().as_secs_f64()
+                                * 1e3,
+                        });
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    self.supervise();
+                    return Err(FleetError::Degraded {
+                        id: ticket.id,
+                        got: parts.len(),
+                        expected: ticket.expected,
+                        waited_ms: t_wait.elapsed().as_secs_f64() * 1e3,
+                    });
+                }
+            }
+        }
+        // Deterministic merge: ascending shard start, independent of
+        // arrival order (and therefore of faults, hedging and engine
+        // count — the chaos determinism tests assert exact equality).
+        parts.sort_by_key(|p| p.start);
         let mut sum: Vec<f64> = Vec::new();
         let mut sumsq: Vec<f64> = Vec::new();
         let mut got_s = 0usize;
         let mut latency = 0f64;
-        for _ in 0..ticket.expected {
-            let partial = ticket
-                .rx
-                .recv_timeout(Duration::from_secs(120))
-                .map_err(|e| {
-                    anyhow::anyhow!(
-                        "request {}: shard reply lost ({e:?})",
-                        ticket.id
-                    )
-                })?
-                .map_err(|msg| {
-                    anyhow::anyhow!(
-                        "request {}: engine failed: {msg}",
-                        ticket.id
-                    )
-                })?;
+        for partial in &parts {
             if sum.is_empty() {
                 sum = vec![0.0; partial.sum.len()];
                 sumsq = vec![0.0; partial.sum.len()];
@@ -937,20 +1419,30 @@ impl Fleet {
         &mut self,
         ticket: AdaptiveTicket,
     ) -> Result<AdaptiveResponse> {
+        self.supervise();
+        let t_wait = Instant::now();
+        // Adaptive shards are not tracked for re-dispatch (a replayed
+        // sample block would double-feed the controller), so a worker
+        // death can strand a round: the configured wait bound converts
+        // that into a typed degraded outcome.
+        let timeout = self.wait_timeout.unwrap_or(ticket.timeout);
         let resp = ticket
             .rx
-            .recv_timeout(ticket.timeout)
-            .map_err(|e| {
-                anyhow::anyhow!(
-                    "request {}: adaptive response lost ({e:?})",
-                    ticket.id
-                )
+            .recv_timeout(timeout)
+            .map_err(|_| {
+                self.supervise();
+                anyhow::Error::from(FleetError::Degraded {
+                    id: ticket.id,
+                    got: 0,
+                    expected: 1,
+                    waited_ms: t_wait.elapsed().as_secs_f64() * 1e3,
+                })
             })?
             .map_err(|msg| {
-                anyhow::anyhow!(
-                    "request {}: engine failed: {msg}",
-                    ticket.id
-                )
+                anyhow::Error::from(FleetError::Engine {
+                    id: ticket.id,
+                    msg,
+                })
             })?;
         // e2e was stamped by the coordinator at completion time — the
         // request stopped costing latency when its last round landed,
@@ -988,10 +1480,29 @@ impl Fleet {
         // Dropping the queue senders lets the workers drain and exit.
         self.txs.clear();
         let workers = std::mem::take(&mut self.workers);
+        // A worker panic (chaos kill or genuine) must not abort the
+        // fleet or lose the survivors' stats: fold the death into the
+        // fault summary and keep a placeholder per-engine slot so the
+        // summary stays one-entry-per-engine.
         let mut per_engine: Vec<ServeSummary> = workers
             .into_iter()
-            .map(|w| w.join().expect("fleet worker panicked"))
+            .enumerate()
+            .map(|(i, w)| match w.join() {
+                Ok(summary) => summary,
+                Err(payload) => {
+                    mark_dead(&self.health, &self.faults, i);
+                    if payload.downcast_ref::<ChaosKill>().is_none() {
+                        eprintln!("fleet worker {i} panicked");
+                    }
+                    lost_worker_summary()
+                }
+            })
             .collect();
+        // Deaths already noticed by a waiter were counted there; the
+        // swap inside mark_dead keeps each engine counted once.
+        while let Ok(i) = self.deaths_rx.try_recv() {
+            mark_dead(&self.health, &self.faults, i);
+        }
         // Queue pressure lives in the fleet-side EngineLoad gauges
         // (workers only decrement them) — inject into the summaries.
         for (e, load) in per_engine.iter_mut().zip(&self.loads) {
@@ -1055,9 +1566,32 @@ impl Fleet {
                     .unwrap_or(0),
                 mask_bank: None,
                 sessions: self.sessions.as_ref().map(|t| t.stats()),
+                faults: self.faults.snapshot(),
             },
             timeline,
         }
+    }
+}
+
+/// Placeholder per-engine summary for a worker that died before
+/// reporting: keeps `FleetSummary::per_engine` one-entry-per-engine
+/// with an unmistakable `kernel` label.
+fn lost_worker_summary() -> ServeSummary {
+    ServeSummary {
+        served: 0,
+        wall: Duration::default(),
+        e2e: LatencyStats::new(),
+        engine: LatencyStats::new(),
+        batches: 0,
+        mean_batch: 0.0,
+        rejected: 0,
+        stages: None,
+        mc_rows: 0,
+        kernel: "lost".to_string(),
+        peak_batch: 0,
+        queue_highwater: 0,
+        sheds: 0,
+        timeline: None,
     }
 }
 
@@ -1073,16 +1607,118 @@ impl Drop for Fleet {
     }
 }
 
+/// How one work item's dispatch resolved.
+enum Dispatch {
+    /// Accepted by this engine's queue (its planned home, or a
+    /// survivor after diversion).
+    Sent(usize),
+    /// Shed mode and the target queue was full.
+    Full,
+    /// Every engine is dead — nothing can accept work.
+    NoEngines,
+}
+
+/// Send one work item to engine `home`, diverting to the least-loaded
+/// survivor when `home` is dead (or dies mid-send — a failed send
+/// marks it dead and retries elsewhere). With `track`, the item is
+/// registered in the outstanding-shard table under `key` *before* the
+/// send, so a worker death between dispatch and reply always finds a
+/// re-dispatchable entry; the executing worker removes it when it
+/// replies. With every engine healthy this is exactly the old
+/// inc-then-send (unshed) / try_send-then-inc (shed) dispatch.
+#[allow(clippy::too_many_arguments)]
+fn dispatch_item(
+    router: &mut Router,
+    txs: &[mpsc::SyncSender<WorkItem>],
+    loads: &[Arc<EngineLoad>],
+    health: &[AtomicBool],
+    faults: &FaultCounters,
+    outstanding: &ShardTable,
+    home: usize,
+    key: ShardKey,
+    track: bool,
+    mut item: WorkItem,
+    shed: bool,
+) -> Dispatch {
+    let mut j = home;
+    loop {
+        let healthy: Vec<bool> =
+            health.iter().map(|h| h.load(Ordering::Acquire)).collect();
+        if !healthy[j] {
+            let load_snapshot: Vec<usize> =
+                loads.iter().map(|l| l.outstanding()).collect();
+            match router.rescue(&load_snapshot, &healthy, None) {
+                Some(r) => j = r,
+                None => {
+                    if track {
+                        let mut tab =
+                            outstanding.lock().expect("shard table");
+                        tab.remove(&key);
+                    }
+                    return Dispatch::NoEngines;
+                }
+            }
+        }
+        if track {
+            let mut tab = outstanding.lock().expect("shard table");
+            tab.insert(
+                key,
+                PendingShard {
+                    engine: j,
+                    item: item.clone(),
+                    dispatched: Instant::now(),
+                    hedged: false,
+                },
+            );
+        }
+        if shed {
+            match txs[j].try_send(item) {
+                Ok(()) => {
+                    loads[j].inc();
+                    break Dispatch::Sent(j);
+                }
+                Err(mpsc::TrySendError::Full(_)) => {
+                    loads[j].shed();
+                    if track {
+                        let mut tab =
+                            outstanding.lock().expect("shard table");
+                        tab.remove(&key);
+                    }
+                    break Dispatch::Full;
+                }
+                Err(mpsc::TrySendError::Disconnected(it)) => {
+                    mark_dead(health, faults, j);
+                    item = it;
+                }
+            }
+        } else {
+            loads[j].inc();
+            match txs[j].send(item) {
+                Ok(()) => break Dispatch::Sent(j),
+                Err(mpsc::SendError(it)) => {
+                    loads[j].dec();
+                    mark_dead(health, faults, j);
+                    item = it;
+                }
+            }
+        }
+    }
+}
+
 /// Place one sampling round `start..start + count` on the fleet
 /// according to the router policy (MC-shard splits it across all
-/// engines; rr/least-loaded give the whole round to one engine).
-/// Returns `Ok(shards dispatched)`, or — when `shed` and a target queue
-/// was full — `Err(shards already enqueued before the rejection)`.
+/// engines; rr/least-loaded give the whole round to one engine, dead
+/// engines skipped). Returns `Ok(shards dispatched)`, or `Err(shards
+/// already enqueued before the rejection)` — when `shed` and a target
+/// queue was full, or when no healthy engine remains.
 #[allow(clippy::too_many_arguments)]
 fn place_round(
     router: &mut Router,
     txs: &[mpsc::SyncSender<WorkItem>],
     loads: &[Arc<EngineLoad>],
+    health: &[AtomicBool],
+    faults: &FaultCounters,
+    outstanding: &ShardTable,
     beat: &Arc<Vec<f32>>,
     req_seed: u64,
     start: usize,
@@ -1091,7 +1727,12 @@ fn place_round(
     sink: &mut dyn FnMut() -> ReplySink,
     shed: bool,
 ) -> std::result::Result<usize, usize> {
-    // (engine, start, count) assignments.
+    let healthy: Vec<bool> =
+        health.iter().map(|h| h.load(Ordering::Acquire)).collect();
+    // (engine, start, count) assignments. MC-shard plans over the FULL
+    // engine count — shard ranges must stay engine-count-invariant for
+    // merge determinism — and a dead planned home is diverted at
+    // dispatch below (counted as a re-dispatch).
     let assignments: Vec<(usize, usize, usize)> =
         if router.policy() == RouterPolicy::McShard {
             router
@@ -1104,7 +1745,10 @@ fn place_round(
         } else {
             let load_snapshot: Vec<usize> =
                 loads.iter().map(|l| l.outstanding()).collect();
-            vec![(router.route(&load_snapshot), start, count)]
+            match router.route_healthy(&load_snapshot, &healthy) {
+                Some(j) => vec![(j, start, count)],
+                None => return Err(0),
+            }
         };
 
     // One dispatch stamp per round: queue stage = sent → worker pull.
@@ -1121,17 +1765,21 @@ fn place_round(
             sink: sink(),
             stream: None,
         };
-        if shed {
-            match txs[j].try_send(item) {
-                Ok(()) => loads[j].inc(),
-                Err(_) => {
-                    loads[j].shed();
-                    return Err(done);
+        let track = matches!(item.sink, ReplySink::Fixed(_));
+        let key: ShardKey = (req_seed, 0, s0);
+        match dispatch_item(
+            router, txs, loads, health, faults, outstanding, j, key,
+            track, item, shed,
+        ) {
+            Dispatch::Sent(took) => {
+                if took != j {
+                    // The planned home was dead: this shard moved to a
+                    // survivor at dispatch time.
+                    faults.shard_redispatched();
                 }
             }
-        } else {
-            loads[j].inc();
-            txs[j].send(item).expect("fleet worker gone");
+            Dispatch::Full => return Err(done),
+            Dispatch::NoEngines => return Err(done),
         }
     }
     Ok(assignments.len())
@@ -1163,6 +1811,7 @@ struct AdaptiveState {
 /// follow-up rounds dispatch here — independent of the waiter — which
 /// removes the head-of-line serialisation of multi-round requests in
 /// submit-all-then-wait loops (ROADMAP PR 3 review finding a).
+#[allow(clippy::too_many_arguments)]
 fn adaptive_coordinator(
     rx: mpsc::Receiver<AdaptiveEvent>,
     self_tx: mpsc::Sender<AdaptiveEvent>,
@@ -1170,6 +1819,9 @@ fn adaptive_coordinator(
     loads: Vec<Arc<EngineLoad>>,
     mut router: Router,
     counters: Arc<McCounters>,
+    health: Arc<Vec<AtomicBool>>,
+    faults: Arc<FaultCounters>,
+    outstanding: Arc<ShardTable>,
 ) {
     let mut states: HashMap<u64, AdaptiveState> = HashMap::new();
     let mut shutdown = false;
@@ -1214,7 +1866,7 @@ fn adaptive_coordinator(
                 }
                 finish_round_if_complete(
                     id, &mut states, &self_tx, &txs, &loads, &mut router,
-                    &counters,
+                    &counters, &health, &faults, &outstanding,
                 );
             }
             AdaptiveEvent::Cancelled { id, stray } => {
@@ -1250,7 +1902,7 @@ fn adaptive_coordinator(
                 }
                 finish_round_if_complete(
                     id, &mut states, &self_tx, &txs, &loads, &mut router,
-                    &counters,
+                    &counters, &health, &faults, &outstanding,
                 );
             }
             AdaptiveEvent::Shutdown => shutdown = true,
@@ -1272,6 +1924,9 @@ fn finish_round_if_complete(
     loads: &[Arc<EngineLoad>],
     router: &mut Router,
     counters: &McCounters,
+    health: &[AtomicBool],
+    faults: &FaultCounters,
+    outstanding: &ShardTable,
 ) {
     let Some(st) = states.get_mut(&id) else { return };
     let Some(outstanding) = st.outstanding else { return };
@@ -1297,11 +1952,16 @@ fn finish_round_if_complete(
     match decision {
         McDecision::Draw { start, count } => {
             // Later rounds bypass admission control: the fleet has
-            // already invested in this request.
-            let n = place_round(
+            // already invested in this request. An unshed dispatch can
+            // still fail when every engine is dead — fail the request
+            // with a typed message rather than hanging the waiter.
+            match place_round(
                 router,
                 txs,
                 loads,
+                health,
+                faults,
+                outstanding,
                 &Arc::clone(&st.beat),
                 st.req_seed,
                 start,
@@ -1309,9 +1969,15 @@ fn finish_round_if_complete(
                 st.enqueued,
                 &mut || ReplySink::Adaptive(self_tx.clone(), id),
                 false,
-            )
-            .expect("unshed dispatch cannot fail");
-            st.outstanding = Some(n);
+            ) {
+                Ok(n) => st.outstanding = Some(n),
+                Err(_) => {
+                    let st = states.remove(&id).expect("state present");
+                    let _ = st.done.send(Err(String::from(
+                        "no healthy engine left for continuation round",
+                    )));
+                }
+            }
         }
         McDecision::Converged | McDecision::Exhausted => {
             let converged = matches!(decision, McDecision::Converged);
@@ -1366,6 +2032,7 @@ fn worker_loop(
     win: Option<(Instant, Duration)>,
     sessions: Option<Arc<SessionTable>>,
     session_uq: Option<AdaptiveMcConfig>,
+    mut ctx: WorkerCtx,
 ) -> ServeSummary {
     let mut engine = factory();
     let mut batcher: Batcher<WorkItem> = Batcher::new(policy);
@@ -1387,6 +2054,13 @@ fn worker_loop(
     let t0 = Instant::now();
     let mut open = true;
     while open || !batcher.is_empty() {
+        // Injected kills fire only here, between items — an item the
+        // worker started is always finished (or its engine genuinely
+        // panicked), so checked-out session state is never stranded
+        // mid-chunk and the outstanding-shard table stays consistent.
+        if ctx.chaos.should_kill(ctx.epoch.elapsed()) {
+            std::panic::panic_any(ChaosKill(idx));
+        }
         if open {
             if batcher.is_empty() {
                 match rx.recv_timeout(Duration::from_millis(1)) {
@@ -1405,6 +2079,7 @@ fn worker_loop(
                                 &mut eng,
                                 &mut served,
                                 &mut mc_rows,
+                                &mut ctx,
                             );
                         } else {
                             let rows = item.count;
@@ -1435,6 +2110,7 @@ fn worker_loop(
                                 &mut eng,
                                 &mut served,
                                 &mut mc_rows,
+                                &mut ctx,
                             );
                         } else {
                             let rows = item.count;
@@ -1464,6 +2140,9 @@ fn worker_loop(
                     count: item.count,
                 })
                 .collect();
+            if let Some(d) = ctx.chaos.stall_for(ctx.epoch.elapsed()) {
+                thread::sleep(d);
+            }
             let t_dispatch = Instant::now();
             let results = engine.infer_samples_batch(&reqs, group);
             // Every item in the batch rode the same blocked engine
@@ -1533,14 +2212,36 @@ fn worker_loop(
                 // request / dropped fleet): ignore send failures.
                 match &item.sink {
                     ReplySink::Fixed(tx) => {
-                        let _ = tx.send(outcome.map(|b| {
-                            PartialPrediction::from_samples(
-                                &b.samples,
-                                b.count,
-                                b.out_len,
-                                b.model_latency_ms,
-                            )
-                        }));
+                        // This shard is answered: retire its
+                        // outstanding-table entry so supervision stops
+                        // tracking it, THEN (chaos only) maybe drop the
+                        // reply. The drop hash is engine-independent,
+                        // so a re-dispatched copy drops identically and
+                        // the loss deterministically surfaces as a
+                        // waiter timeout instead of flaking.
+                        {
+                            let mut tab = ctx
+                                .outstanding
+                                .lock()
+                                .expect("shard table");
+                            tab.remove(&(item.req_seed, 0, item.start));
+                        }
+                        if ctx
+                            .chaos
+                            .should_drop(item.req_seed, item.start)
+                        {
+                            ctx.faults.reply_dropped();
+                        } else {
+                            let _ = tx.send(outcome.map(|b| {
+                                PartialPrediction::from_samples(
+                                    &b.samples,
+                                    b.count,
+                                    b.out_len,
+                                    b.model_latency_ms,
+                                )
+                                .with_origin(item.start, idx)
+                            }));
+                        }
                     }
                     ReplySink::Adaptive(tx, id) => {
                         let _ = tx.send(AdaptiveEvent::Shard {
@@ -1590,7 +2291,11 @@ fn serve_stream_item(
     eng: &mut LatencyStats,
     served: &mut usize,
     mc_rows: &mut usize,
+    ctx: &mut WorkerCtx,
 ) {
+    if let Some(d) = ctx.chaos.stall_for(ctx.epoch.elapsed()) {
+        thread::sleep(d);
+    }
     let outcome = match table {
         Some(table) => stream_chunk_outcome(engine, table, uq, &item),
         None => Err("streaming sessions are disabled".to_string()),
@@ -1601,6 +2306,21 @@ fn serve_stream_item(
         eng.record_ms(block.model_latency_ms);
         *served += 1;
         *mc_rows += item.count;
+    }
+    // Chunk is parked/abandoned: retire the outstanding entry, then
+    // (chaos only) maybe drop the reply — same engine-independent hash
+    // as the fixed path.
+    if let Some(job) = &item.stream {
+        let mut tab = ctx.outstanding.lock().expect("shard table");
+        tab.remove(&(
+            item.req_seed,
+            job.history_end as u64 + 1,
+            item.start,
+        ));
+    }
+    if ctx.chaos.should_drop(item.req_seed, item.start) {
+        ctx.faults.reply_dropped();
+        return;
     }
     if let ReplySink::Stream(tx) = &item.sink {
         let _ = tx.send(outcome);
@@ -2796,5 +3516,191 @@ mod tests {
         let stats = summary.obs.sessions.expect("session stats");
         assert_eq!(stats.chunks, 4);
         assert_eq!(stats.resident, 0);
+    }
+
+    /// Chaos acceptance: killing one of three MC-shard engines loses no
+    /// request, and every merged prediction is *bit-identical* to the
+    /// fault-free run — deterministic per-(request, sample) mask
+    /// seeding means a re-executed shard lands the same bits wherever
+    /// it runs, and the sorted-by-start merge is arrival-order-free.
+    #[test]
+    fn chaos_kill_redispatches_and_matches_fault_free_bitwise() {
+        let s = 6;
+        let k = 6;
+        let run = |chaos: Option<FaultPlan>| {
+            let mut fleet = Fleet::start(
+                FleetConfig {
+                    engines: 3,
+                    router: RouterPolicy::McShard,
+                    samples: s,
+                    chaos,
+                    ..FleetConfig::default()
+                },
+                fpga_factories(3, s, 9),
+            );
+            let mut preds = Vec::new();
+            for _ in 0..k {
+                let t = fleet.submit(beat()).expect("no shedding");
+                let resp = fleet.wait(t).expect("request survives kill");
+                preds.push((resp.prediction.mean, resp.prediction.std));
+            }
+            (preds, fleet.join())
+        };
+        let (clean, _) = run(None);
+        let plan = FaultPlan::parse("kill=e1@0ms").expect("plan");
+        let (chaotic, summary) = run(Some(plan));
+        assert_eq!(chaotic, clean, "fault recovery changed bits");
+        assert_eq!(summary.served, k, "every request completed");
+        let faults = summary.obs.faults;
+        assert_eq!(faults.workers_lost, 1, "{faults:?}");
+        assert!(faults.shards_redispatched >= 1, "{faults:?}");
+        assert_eq!(summary.per_engine.len(), 3, "dead slot kept");
+    }
+
+    /// A stalled engine's shard is hedged onto a survivor once it blows
+    /// past the latency deadline; first reply wins and the merged
+    /// output still matches the fault-free run bitwise.
+    #[test]
+    fn chaos_stall_hedges_straggler_shards() {
+        let s = 6;
+        let run = |chaos: Option<FaultPlan>| {
+            let mut fleet = Fleet::start(
+                FleetConfig {
+                    engines: 3,
+                    router: RouterPolicy::McShard,
+                    samples: s,
+                    chaos,
+                    ..FleetConfig::default()
+                },
+                fpga_factories(3, s, 9),
+            );
+            let t = fleet.submit(beat()).expect("no shedding");
+            let resp = fleet.wait(t).expect("request survives stall");
+            (resp.prediction.mean, resp.prediction.std, fleet.join())
+        };
+        let (mean, std, _) = run(None);
+        // 300 ms stall vs a 25 ms hedge floor: the hedge must fire and
+        // its reply must land long before the straggler wakes.
+        let plan = FaultPlan::parse("stall=e1@0ms+300ms").expect("plan");
+        let (m2, s2, summary) = run(Some(plan));
+        assert_eq!((m2, s2), (mean, std), "hedged merge changed bits");
+        let faults = summary.obs.faults;
+        assert!(faults.hedges_fired >= 1, "{faults:?}");
+        assert!(faults.hedges_won >= 1, "{faults:?}");
+        assert_eq!(faults.workers_lost, 0, "stall is not a death");
+    }
+
+    /// Killing the engine a streaming session is pinned to must repin
+    /// the session to a survivor and replay-rebuild its lane state —
+    /// chunked output stays bit-identical to the fault-free one-shot.
+    #[test]
+    fn chaos_kill_pinned_engine_repins_session_and_replays() {
+        let s = 4;
+        let signal = stream_signal(60);
+        let parts: [&[f32]; 3] =
+            [&signal[..7], &signal[7..33], &signal[33..]];
+        let (whole, _) = collect_stream(
+            RouterPolicy::Affinity,
+            1,
+            s,
+            &[&signal],
+            1 << 20,
+        );
+
+        // Two engines; the fresh session pins to least-loaded e0,
+        // which the plan kills immediately.
+        let plan = FaultPlan::parse("kill=e0@0ms").expect("plan");
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                router: RouterPolicy::Affinity,
+                samples: s,
+                session_bytes: Some(1 << 20),
+                chaos: Some(plan),
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s, 5),
+        );
+        let sid = fleet.open_session().expect("session plane on");
+        let mut beats = Vec::new();
+        for (i, chunk) in parts.iter().enumerate() {
+            if i == 1 {
+                // Give the obituary time to land so the repin happens
+                // on the submit path (not only dispatch diversion).
+                thread::sleep(Duration::from_millis(30));
+            }
+            let t = fleet
+                .submit_chunk(sid, chunk.to_vec())
+                .expect("chunk admitted");
+            let resp = fleet.wait_chunk(t).expect("chunk survives kill");
+            for b in resp.beats {
+                beats.push(b.samples);
+            }
+        }
+        fleet.close_session(sid).expect("close drains");
+        let summary = fleet.join();
+        assert_eq!(beats, whole, "re-pinned replay changed bits");
+        let faults = summary.obs.faults;
+        assert_eq!(faults.workers_lost, 1, "{faults:?}");
+        assert!(faults.sessions_repinned >= 1, "{faults:?}");
+    }
+
+    /// With every reply dropped, the waiter must give up at the
+    /// configured timeout with a typed degraded error instead of
+    /// hanging forever — lost replies are observable, not silent.
+    #[test]
+    fn dropped_replies_surface_as_typed_degraded_error() {
+        let s = 2;
+        let plan = FaultPlan::parse("drop=1.0").expect("plan");
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 1,
+                samples: s,
+                chaos: Some(plan),
+                wait_timeout: Some(Duration::from_millis(150)),
+                ..FleetConfig::default()
+            },
+            fpga_factories(1, s, 5),
+        );
+        let t = fleet.submit(beat()).expect("admitted");
+        match fleet.wait(t) {
+            Err(FleetError::Degraded { got, expected, .. }) => {
+                assert_eq!((got, expected), (0, 1));
+            }
+            other => panic!("expected Degraded, got {other:?}"),
+        }
+        let summary = fleet.join();
+        assert_eq!(summary.served, 0);
+        let faults = summary.obs.faults;
+        assert_eq!(faults.replies_dropped, 1, "{faults:?}");
+    }
+
+    /// Satellite (a): `Fleet::join` survives a worker panic — the dead
+    /// engine keeps a placeholder per-engine slot and the survivors'
+    /// stats are intact.
+    #[test]
+    fn join_survives_worker_panic() {
+        let s = 2;
+        let plan = FaultPlan::parse("kill=e1@0ms").expect("plan");
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: 2,
+                samples: s,
+                chaos: Some(plan),
+                ..FleetConfig::default()
+            },
+            fpga_factories(2, s, 5),
+        );
+        for _ in 0..4 {
+            let t = fleet.submit(beat()).expect("admitted");
+            fleet.wait(t).expect("survivor serves everything");
+        }
+        let summary = fleet.join();
+        assert_eq!(summary.served, 4);
+        assert_eq!(summary.per_engine.len(), 2, "dead slot kept");
+        assert_eq!(summary.per_engine[1].kernel, "lost");
+        assert_eq!(summary.per_engine[1].served, 0);
+        assert!(summary.per_engine[0].served >= 1);
+        assert_eq!(summary.obs.faults.workers_lost, 1);
     }
 }

@@ -592,4 +592,86 @@ mod tests {
         }
         assert_eq!(fleet.join().served, 16);
     }
+
+    /// Conservation under fleet faults: replay an open-loop trace
+    /// against a 3-engine mc-shard fleet while chaos kills one engine
+    /// at t=0. Every offered request must still be accounted for —
+    /// submitted requests all complete (orphaned shards re-dispatch to
+    /// survivors), nothing hangs, and the fault counters record
+    /// exactly one lost worker.
+    #[test]
+    fn open_loop_conserves_requests_when_an_engine_dies() {
+        use crate::config::{ArchConfig, Task};
+        use crate::coordinator::chaos::FaultPlan;
+        use crate::coordinator::{Engine, Fleet, FleetConfig};
+        use crate::hwmodel::resource::ReuseFactors;
+        use crate::nn::model::Model;
+        use crate::rng::Rng;
+
+        let spec =
+            ScenarioSpec::preset("fan_out", 3, 2000.0, 12, 4, 5)
+                .unwrap();
+        assert_eq!(spec.engines, 3);
+        let mut cfg = ArchConfig::new(Task::Classify, 8, 1, "Y");
+        cfg.seq_len = data::T;
+        let model = Model::init(cfg.clone(), &mut Rng::new(0));
+        let factories: Vec<
+            Box<dyn FnOnce() -> Engine + Send + 'static>,
+        > = (0..3)
+            .map(|_| {
+                let c2 = cfg.clone();
+                let p = model.params.tensors.clone();
+                let f: Box<dyn FnOnce() -> Engine + Send + 'static> =
+                    Box::new(move || {
+                        let m = Model::new(
+                            c2.clone(),
+                            bayes_rnn_fpga_params(p),
+                        );
+                        Engine::fpga(
+                            &c2,
+                            &m,
+                            ReuseFactors::new(4, 4, 4),
+                            4,
+                            0,
+                        )
+                    });
+                f
+            })
+            .collect();
+        let mut fleet = Fleet::start(
+            FleetConfig {
+                engines: spec.engines,
+                router: spec.router,
+                queue_depth: spec.queue_depth,
+                shed: spec.shed,
+                samples: spec.samples,
+                chaos: Some(
+                    FaultPlan::parse("kill=e1@0ms")
+                        .expect("plan")
+                        .with_seed(5),
+                ),
+                ..FleetConfig::default()
+            },
+            factories,
+        );
+        let d = data::generate(8, 1);
+        let trace = spec.trace(d.n);
+        let outcome = run_open_loop(&mut fleet, &trace, &d);
+        assert_eq!(outcome.offered, 12);
+        assert_eq!(
+            outcome.offered,
+            outcome.submitted + outcome.rejected_at_submit
+        );
+        let mut served = 0;
+        for (t, _) in outcome.tickets {
+            fleet.wait(t).expect("request survives the kill");
+            served += 1;
+        }
+        assert_eq!(served, outcome.submitted, "nothing lost or hung");
+        let summary = fleet.join();
+        assert_eq!(summary.served, outcome.submitted);
+        let faults = summary.obs.faults;
+        assert_eq!(faults.workers_lost, 1, "{faults:?}");
+        assert_eq!(summary.per_engine.len(), 3, "dead slot kept");
+    }
 }

@@ -18,7 +18,11 @@
 //!   see `docs/uncertainty.md`,
 //! * staged tracing, per-stage latency histograms and engine health
 //!   counters via [`crate::obs`] (opt-in, bit-identical outputs when
-//!   off — see `docs/observability.md`).
+//!   off — see `docs/observability.md`),
+//! * deterministic fault injection ([`chaos`], `--chaos`) and the fleet
+//!   fault-tolerance plane it exercises: worker-death supervision,
+//!   shard re-dispatch, straggler hedging and typed degraded outcomes
+//!   — see `docs/serving.md` §Fault tolerance.
 //!
 //! No tokio in this offline environment (DESIGN.md §Substitutions):
 //! std::thread + mpsc channels implement the same event loop.
@@ -28,6 +32,7 @@
 //! O(chunk) per decision — see `docs/serving.md` §Streaming sessions.
 
 pub mod batcher;
+pub mod chaos;
 pub mod fleet;
 pub mod loadgen;
 pub mod engines;
@@ -41,13 +46,15 @@ pub mod stats;
 pub const DEFAULT_QUEUE_DEPTH: usize = 256;
 
 pub use batcher::{Batch, Batcher, BatchPolicy};
+pub use chaos::FaultPlan;
 pub use engines::{
     Engine, EngineKind, PartialPrediction, Prediction, SampleBlock,
     ShardRequest,
 };
 pub use fleet::{
     AdaptiveResponse, AdaptiveTicket, ChunkResponse, ChunkTicket, Fleet,
-    FleetConfig, FleetObs, FleetResponse, FleetSummary, Ticket,
+    FleetConfig, FleetError, FleetObs, FleetResponse, FleetSummary,
+    Ticket,
 };
 pub use loadgen::{
     run_open_loop, run_stream_open_loop, OpenLoopOutcome, PayloadClass,

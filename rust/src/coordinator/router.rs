@@ -124,6 +124,71 @@ impl Router {
         j
     }
 
+    /// Health-masked [`Router::route`]: skip engines whose worker died.
+    /// With every engine healthy this makes exactly the decisions
+    /// `route` would (same cursor advance, same tie-breaks), so the
+    /// no-fault path is unchanged; returns `None` when no engine is
+    /// healthy.
+    pub fn route_healthy(
+        &mut self,
+        loads: &[usize],
+        healthy: &[bool],
+    ) -> Option<usize> {
+        assert_eq!(loads.len(), healthy.len());
+        let j = match self.policy {
+            RouterPolicy::LeastLoaded => loads
+                .iter()
+                .enumerate()
+                .filter(|&(i, _)| healthy[i])
+                .min_by_key(|&(i, &l)| (l, i))
+                .map(|(i, _)| i)?,
+            _ => {
+                let mut pick = None;
+                // One full cursor revolution; a dead engine costs its
+                // slot (the cursor still advances past it) so the
+                // survivors keep their relative rotation.
+                for _ in 0..loads.len() {
+                    let j = self.next % loads.len();
+                    self.next = self.next.wrapping_add(1);
+                    if healthy[j] {
+                        pick = Some(j);
+                        break;
+                    }
+                }
+                pick?
+            }
+        };
+        if self.placed.len() < loads.len() {
+            self.placed.resize(loads.len(), 0);
+        }
+        self.placed[j] += 1;
+        Some(j)
+    }
+
+    /// Pick a surviving engine for re-dispatched or hedged work:
+    /// least-loaded healthy engine, optionally excluding the shard's
+    /// current home (a hedge on the engine it is stuck on is useless).
+    /// Tallied like any placement; `None` when nobody qualifies.
+    pub fn rescue(
+        &mut self,
+        loads: &[usize],
+        healthy: &[bool],
+        exclude: Option<usize>,
+    ) -> Option<usize> {
+        assert_eq!(loads.len(), healthy.len());
+        let j = loads
+            .iter()
+            .enumerate()
+            .filter(|&(i, _)| healthy[i] && Some(i) != exclude)
+            .min_by_key(|&(i, &l)| (l, i))
+            .map(|(i, _)| i)?;
+        if self.placed.len() < loads.len() {
+            self.placed.resize(loads.len(), 0);
+        }
+        self.placed[j] += 1;
+        Some(j)
+    }
+
     /// Split `s` MC samples over `n` engines: `(start, count)` per
     /// engine, contiguous, disjoint, covering `0..s`. The first `s % n`
     /// engines take one extra sample; with `s < n` the tail engines get
@@ -239,6 +304,67 @@ mod tests {
         ll.route(&[5, 1]);
         ll.route(&[0, 2]);
         assert_eq!(ll.placements(), &[1, 2]);
+    }
+
+    #[test]
+    fn route_healthy_matches_route_when_all_alive() {
+        let loads = [0usize; 3];
+        let all = [true; 3];
+        let mut plain = Router::new(RouterPolicy::RoundRobin);
+        let mut masked = Router::new(RouterPolicy::RoundRobin);
+        for _ in 0..7 {
+            assert_eq!(
+                Some(plain.route(&loads)),
+                masked.route_healthy(&loads, &all)
+            );
+        }
+        assert_eq!(plain.placements(), masked.placements());
+
+        let mut ll = Router::new(RouterPolicy::LeastLoaded);
+        assert_eq!(ll.route_healthy(&[3, 1, 2], &all), Some(1));
+    }
+
+    #[test]
+    fn route_healthy_skips_dead_engines() {
+        let loads = [0usize; 3];
+        let mut r = Router::new(RouterPolicy::RoundRobin);
+        let healthy = [true, false, true];
+        let picks: Vec<_> = (0..4)
+            .map(|_| r.route_healthy(&loads, &healthy).unwrap())
+            .collect();
+        assert_eq!(picks, vec![0, 2, 0, 2], "dead slot is skipped");
+
+        let mut ll = Router::new(RouterPolicy::LeastLoaded);
+        assert_eq!(
+            ll.route_healthy(&[0, 5, 9], &[false, true, true]),
+            Some(1),
+            "least-loaded among the living"
+        );
+        assert_eq!(
+            ll.route_healthy(&loads, &[false; 3]),
+            None,
+            "no healthy engine"
+        );
+    }
+
+    #[test]
+    fn rescue_prefers_least_loaded_survivor_and_honours_exclude() {
+        let mut r = Router::new(RouterPolicy::McShard);
+        assert_eq!(
+            r.rescue(&[4, 1, 2], &[true, true, true], None),
+            Some(1)
+        );
+        assert_eq!(
+            r.rescue(&[4, 1, 2], &[true, true, true], Some(1)),
+            Some(2),
+            "home engine excluded for hedging"
+        );
+        assert_eq!(
+            r.rescue(&[4, 1, 2], &[false, true, false], Some(1)),
+            None,
+            "only the excluded engine survives"
+        );
+        assert_eq!(r.placements().iter().sum::<usize>(), 2);
     }
 
     #[test]

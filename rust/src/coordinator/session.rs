@@ -52,6 +52,8 @@ pub enum SessionError {
     UnsupportedTask,
     /// The fleet was started without a session byte budget.
     Disabled,
+    /// No healthy engine is left to serve this session's chunks.
+    Unavailable(u64),
 }
 
 impl std::fmt::Display for SessionError {
@@ -72,6 +74,10 @@ impl std::fmt::Display for SessionError {
                     "streaming sessions are disabled (no session budget)"
                 )
             }
+            SessionError::Unavailable(sid) => write!(
+                f,
+                "session {sid}: no healthy engine left to serve chunks"
+            ),
         }
     }
 }
@@ -292,6 +298,28 @@ impl SessionTable {
             .get(&sid)
             .map(|e| e.meta)
             .ok_or(SessionError::Unknown(sid))
+    }
+
+    /// Move an affinity session's pin to a new engine (fault
+    /// tolerance: its home worker died). Purely a metadata update —
+    /// any lane state still resident stays keyed by `start` and is
+    /// engine-agnostic, and evicted ranges rebuild by replay on the
+    /// new engine, so outputs are unchanged by construction.
+    pub fn repin(
+        &self,
+        sid: u64,
+        engine: usize,
+    ) -> Result<(), SessionError> {
+        let mut inner = self.inner.lock().expect("session table poisoned");
+        let e = inner
+            .entries
+            .get_mut(&sid)
+            .ok_or(SessionError::Unknown(sid))?;
+        if e.closed {
+            return Err(SessionError::Closed(sid));
+        }
+        e.meta.engine = engine;
+        Ok(())
     }
 
     /// Admit a chunk: append it to the session's history and account
@@ -527,6 +555,18 @@ mod tests {
             Err(SessionError::Unknown(1))
         ));
         assert_eq!(table.meta(1), Err(SessionError::Unknown(1)));
+    }
+
+    #[test]
+    fn repin_moves_the_session_home() {
+        let table = SessionTable::new(1 << 20, true);
+        table.open(3, meta(0));
+        assert_eq!(table.meta(3).unwrap().engine, 0);
+        table.repin(3, 2).unwrap();
+        assert_eq!(table.meta(3).unwrap().engine, 2);
+        assert_eq!(table.repin(99, 1), Err(SessionError::Unknown(99)));
+        table.close(3).unwrap();
+        assert_eq!(table.repin(3, 1), Err(SessionError::Unknown(3)));
     }
 
     #[test]

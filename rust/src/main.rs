@@ -22,8 +22,8 @@ use bayes_rnn_fpga::config::{ArchConfig, Task};
 use bayes_rnn_fpga::coordinator::loadgen::PoissonTrace;
 use bayes_rnn_fpga::coordinator::{
     run_open_loop, run_stream_open_loop, AdaptiveTicket, BatchPolicy,
-    Engine, Fleet, FleetConfig, OpenLoopOutcome, RouterPolicy,
-    ScenarioSpec, Ticket, DEFAULT_QUEUE_DEPTH,
+    Engine, FaultPlan, Fleet, FleetConfig, FleetError, OpenLoopOutcome,
+    RouterPolicy, ScenarioSpec, Ticket, DEFAULT_QUEUE_DEPTH,
 };
 use bayes_rnn_fpga::data;
 use bayes_rnn_fpga::dse::space::{reuse_search, reuse_search_q};
@@ -37,8 +37,8 @@ use bayes_rnn_fpga::nn::model::Model;
 use bayes_rnn_fpga::nn::Params;
 use bayes_rnn_fpga::obs::{
     self, push_slo_metrics, push_timeline_metrics, serve_metric_set,
-    serve_obs_json, LogHistogram, ObsConfig, SloReport, SloSpec,
-    Timeline, TraceLog,
+    serve_obs_json, FaultStats, LogHistogram, ObsConfig, SloReport,
+    SloSpec, Timeline, TraceLog,
 };
 use bayes_rnn_fpga::rng::Rng;
 use bayes_rnn_fpga::runtime::Runtime;
@@ -235,6 +235,13 @@ subcommands:
           [--mask-bank-mb N]  (share a seed-indexed bitplane-mask cache
            across engines — docs/kernels.md §Mask bank; 0 = off,
            the default, and output bits never change either way)
+          fault injection (docs/serving.md §Fault tolerance):
+          [--chaos PLAN]  (seeded deterministic fault plan, e.g.
+           \"kill=e1@250ms,stall=e2@100ms+50ms,drop=0.01\"; the fleet
+           re-dispatches orphaned shards, hedges stragglers and
+           re-pins sessions — merged outputs stay bit-identical)
+          [--wait-timeout-ms F]  (surface lost replies as a typed
+           degraded error instead of waiting the full default)
           [--obs] [--metrics PATH] [--trace PATH] [--window-ms F]
           [--slo latency_ms=F,target=F,max_shed=F] [--slo-gate]
           (--obs adds per-stage latency histograms + engine health to
@@ -266,6 +273,8 @@ subcommands:
           [--queue-depth N] [--shed] [--batch N] [--window-ms F]
           [--slo SPEC] [--slo-gate] [--json] [--metrics PATH]
           [--trace PATH] [--kernel K] [--precision P] [--mask-bank-mb N]
+          [--chaos PLAN] [--wait-timeout-ms F]  (deterministic fault
+           injection — docs/serving.md §Fault tolerance)
           stream_monitor only: [--sessions N] [--session-mb N]
           (chunks arrive open-loop round-robin over N resident
            streaming sessions — docs/serving.md §Streaming sessions)
@@ -754,6 +763,76 @@ fn print_timeline(tl: &Timeline) {
     }
 }
 
+/// Top-level `"faults"` JSON fragment for serve/loadgen output lines.
+/// Empty (so the line is byte-identical to fault-free releases) unless
+/// chaos was configured or the fault-tolerance plane engaged.
+fn fault_block_json(chaos_on: bool, f: &FaultStats) -> String {
+    if !chaos_on && !f.any() {
+        return String::new();
+    }
+    format!(
+        ",\"faults\":{{\"workers_lost\":{},\
+         \"shards_redispatched\":{},\"hedges_fired\":{},\
+         \"hedges_won\":{},\"sessions_repinned\":{},\
+         \"replies_dropped\":{}}}",
+        f.workers_lost,
+        f.shards_redispatched,
+        f.hedges_fired,
+        f.hedges_won,
+        f.sessions_repinned,
+        f.replies_dropped
+    )
+}
+
+/// Human-readable fault-tolerance summary row.
+fn print_fault_line(f: &FaultStats) {
+    println!(
+        "faults: workers lost {}  shards redispatched {}  hedges \
+         fired {} / won {}  sessions repinned {}  replies dropped {}",
+        f.workers_lost,
+        f.shards_redispatched,
+        f.hedges_fired,
+        f.hedges_won,
+        f.sessions_repinned,
+        f.replies_dropped
+    );
+}
+
+/// Shared `--chaos` / `--wait-timeout-ms` parsing for serve and
+/// loadgen. The plan is re-seeded with the run seed so the fault
+/// schedule is reproducible per run, independent of wall clock.
+fn chaos_flags(
+    args: &Args,
+    seed: u64,
+) -> Result<(Option<FaultPlan>, Option<std::time::Duration>)> {
+    let chaos = match args.get("chaos") {
+        Some("true") => anyhow::bail!(
+            "--chaos needs a plan string, e.g. \
+             kill=e1@250ms,stall=e2@100ms+50ms,drop=0.01"
+        ),
+        Some(p) => Some(
+            FaultPlan::parse(p)
+                .map_err(|e| anyhow::anyhow!(e))?
+                .with_seed(seed),
+        ),
+        None => None,
+    };
+    let wait_timeout = match args.get("wait-timeout-ms") {
+        Some("true") => {
+            anyhow::bail!("--wait-timeout-ms needs a value in ms")
+        }
+        Some(v) => {
+            let ms: f64 = v.parse().map_err(|_| {
+                anyhow::anyhow!("--wait-timeout-ms: bad number {v:?}")
+            })?;
+            anyhow::ensure!(ms > 0.0, "--wait-timeout-ms must be > 0");
+            Some(std::time::Duration::from_secs_f64(ms / 1e3))
+        }
+        None => None,
+    };
+    Ok((chaos, wait_timeout))
+}
+
 fn cmd_serve(args: &Args) -> Result<()> {
     // Default arch lets the bench harness drive a bare checkout.
     let arch =
@@ -834,6 +913,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         None
     };
     let seed = args.usize_or("seed", 3) as u64;
+    // Deterministic fault injection (docs/serving.md §Fault
+    // tolerance): same plan + seed => same fault schedule, and the
+    // fault-tolerance plane keeps merged outputs bit-identical.
+    let (chaos, wait_timeout) = chaos_flags(args, seed)?;
+    let chaos_on = chaos.is_some();
     let artifacts = args.artifacts_dir();
     // Kernel backend selection (docs/kernels.md §Backends): --kernel
     // overrides the REPRO_KERNEL-resolved default. Every backend emits
@@ -974,6 +1058,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
             session_bytes: streaming.then_some(session_mb << 20),
             session_replay: true,
             session_uq: (streaming && adaptive).then_some(mc_cfg),
+            chaos,
+            wait_timeout,
         },
         factories,
     );
@@ -1230,6 +1316,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         String::new()
     };
 
+    // Fault block: present only when chaos was configured or the
+    // fault-tolerance plane actually engaged, so a fault-free run's
+    // output line stays byte-identical to earlier releases.
+    let faults_json = fault_block_json(chaos_on, &summary.obs.faults);
+
     if json_out {
         // Single-line JSON for the process-based bench harness. The
         // adaptive report rides along as one nested object.
@@ -1247,7 +1338,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
              \"max\":{:.4}}},\
              \"engine_ms\":{{\"mean\":{:.4},\"p99\":{:.4}}},\
              \"batches\":{},\"pred_checksum\":{:.6},\
-             \"unc_checksum\":{:.6}{}{}{}{}{}}}",
+             \"unc_checksum\":{:.6}{}{}{}{}{}{}}}",
             router.as_str(),
             kernel_backend.name(),
             precision.name(),
@@ -1266,6 +1357,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             unc_checksum,
             stream_json,
             adaptive_json,
+            faults_json,
             obs_json,
             timeline_json,
             slo_json,
@@ -1330,6 +1422,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
              budget {session_mb} MiB",
             ss.evictions, ss.replay_rebuilds
         );
+    }
+    if chaos_on || summary.obs.faults.any() {
+        print_fault_line(&summary.obs.faults);
     }
     if obs_on {
         let stages = summary.stage_stats();
@@ -1423,6 +1518,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     anyhow::ensure!(rate > 0.0, "--rate must be > 0");
     let n_engines = args.usize_or("engines", 4).max(1);
     let seed = args.usize_or("seed", 3) as u64;
+    // Deterministic fault injection, as in `serve` (docs/serving.md
+    // §Fault tolerance). Degraded requests are counted, not fatal —
+    // the loadgen report conserves offered = served + shed + degraded.
+    let (chaos, wait_timeout) = chaos_flags(args, seed)?;
+    let chaos_on = chaos.is_some();
     let backend = args
         .get("backend")
         .or_else(|| args.get("engine"))
@@ -1566,6 +1666,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             samples: spec.samples,
             obs: obs_cfg,
             session_bytes: stream_mode.then_some(session_mb << 20),
+            chaos,
+            wait_timeout,
             ..FleetConfig::default()
         },
         factories,
@@ -1595,12 +1697,24 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // Per-class served counts, offered alongside for the mix report.
     let n_classes = spec.mix.len().max(1);
     let mut served_by_class = vec![0usize; n_classes];
+    // Requests that timed out degraded (lost replies under --chaos
+    // drop plans) are counted, not fatal: the conservation report
+    // still accounts for every offered request. Hard engine errors
+    // stay fatal.
+    let mut degraded = 0usize;
     if let Some((tickets, sids)) = stream_work {
         for t in tickets {
-            let resp =
-                fleet.wait_chunk(t).map_err(|e| anyhow::anyhow!(e))?;
-            e2e.record_ms(resp.e2e_ms);
-            served_by_class[0] += 1;
+            match fleet.wait_chunk(t) {
+                Ok(resp) => {
+                    e2e.record_ms(resp.e2e_ms);
+                    served_by_class[0] += 1;
+                }
+                Err(e @ FleetError::Degraded { .. }) => {
+                    degraded += 1;
+                    eprintln!("note: {e}");
+                }
+                Err(e) => return Err(anyhow::anyhow!("{e}")),
+            }
         }
         for sid in sids {
             fleet
@@ -1609,9 +1723,17 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         }
     } else {
         for (ticket, class) in outcome.tickets {
-            let resp = fleet.wait(ticket)?;
-            e2e.record_ms(resp.e2e_ms);
-            served_by_class[class] += 1;
+            match fleet.wait(ticket) {
+                Ok(resp) => {
+                    e2e.record_ms(resp.e2e_ms);
+                    served_by_class[class] += 1;
+                }
+                Err(e @ FleetError::Degraded { .. }) => {
+                    degraded += 1;
+                    eprintln!("note: {e}");
+                }
+                Err(e) => return Err(anyhow::anyhow!("{e}")),
+            }
         }
     }
     let wall = t0.elapsed();
@@ -1684,6 +1806,16 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             )
         })
         .unwrap_or_default();
+    // Fault-tolerance block (plus the degraded-request count), present
+    // only under --chaos or when the plane engaged — fault-free lines
+    // stay byte-identical to earlier releases.
+    let faults_json = {
+        let mut f = fault_block_json(chaos_on, &summary.obs.faults);
+        if chaos_on || degraded > 0 {
+            f.push_str(&format!(",\"degraded\":{degraded}"));
+        }
+        f
+    };
     if json_out {
         let obs_json = format!(
             ",\"obs\":{}",
@@ -1705,7 +1837,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
              \"achieved_rps\":{:.3},\
              \"lag_ms\":{{\"p50\":{:.4},\"p99\":{:.4}}},\
              \"e2e_ms\":{{\"mean\":{:.4},\"p50\":{:.4},\"p99\":{:.4},\
-             \"max\":{:.4}}},\"mix\":[{}]{}{}{},\"slo\":{}}}",
+             \"max\":{:.4}}},\"mix\":[{}]{}{}{}{},\"slo\":{}}}",
             spec.engines,
             spec.router.as_str(),
             outcome.offered,
@@ -1722,6 +1854,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             e2e.max_ms(),
             mix_json.join(","),
             stream_json,
+            faults_json,
             obs_json,
             timeline_json,
             jsonio::write(&slo_report.to_json()),
@@ -1786,6 +1919,10 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             ss.evictions,
             ss.replay_rebuilds
         );
+    }
+    if chaos_on || summary.obs.faults.any() || degraded > 0 {
+        print_fault_line(&summary.obs.faults);
+        println!("degraded (reply lost past timeout): {degraded}");
     }
     if let Some(tl) = &summary.timeline {
         print_timeline(tl);

@@ -2,7 +2,7 @@
 //! submit path, adaptive coordinator and workers
 //! (`docs/observability.md` §Engine health).
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 
 /// Per-engine queue-pressure tracker. The outstanding count is the
 /// gauge the least-loaded router already consulted; this extends it
@@ -85,6 +85,91 @@ impl McCounters {
     }
 }
 
+/// Fleet fault-tolerance accounting (`docs/observability.md` §Fault
+/// metrics). Bumped from the submit path, the waiter threads and the
+/// workers' reply paths, hence atomic; snapshotted into [`FaultStats`]
+/// for the summary/JSON/metrics layers.
+#[derive(Debug, Default)]
+pub struct FaultCounters {
+    workers_lost: AtomicU64,
+    shards_redispatched: AtomicU64,
+    hedges_fired: AtomicU64,
+    hedges_won: AtomicU64,
+    sessions_repinned: AtomicU64,
+    replies_dropped: AtomicU64,
+}
+
+impl FaultCounters {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A worker thread died (panic or injected kill).
+    pub fn worker_lost(&self) {
+        self.workers_lost.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A queued or in-flight shard was re-sent to a surviving engine.
+    pub fn shard_redispatched(&self) {
+        self.shards_redispatched.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// An overdue shard was speculatively re-executed elsewhere.
+    pub fn hedge_fired(&self) {
+        self.hedges_fired.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// A hedge's reply arrived before the original's.
+    pub fn hedge_won(&self) {
+        self.hedges_won.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// An affinity session was moved off an unhealthy engine.
+    pub fn session_repinned(&self) {
+        self.sessions_repinned.fetch_add(1, Ordering::AcqRel);
+    }
+
+    /// Chaos discarded a reply before it reached the waiter.
+    pub fn reply_dropped(&self) {
+        self.replies_dropped.fetch_add(1, Ordering::AcqRel);
+    }
+
+    pub fn snapshot(&self) -> FaultStats {
+        FaultStats {
+            workers_lost: self.workers_lost.load(Ordering::Acquire),
+            shards_redispatched: self
+                .shards_redispatched
+                .load(Ordering::Acquire),
+            hedges_fired: self.hedges_fired.load(Ordering::Acquire),
+            hedges_won: self.hedges_won.load(Ordering::Acquire),
+            sessions_repinned: self
+                .sessions_repinned
+                .load(Ordering::Acquire),
+            replies_dropped: self
+                .replies_dropped
+                .load(Ordering::Acquire),
+        }
+    }
+}
+
+/// Point-in-time view of [`FaultCounters`]; all zeros on a clean run.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    pub workers_lost: u64,
+    pub shards_redispatched: u64,
+    pub hedges_fired: u64,
+    pub hedges_won: u64,
+    pub sessions_repinned: u64,
+    pub replies_dropped: u64,
+}
+
+impl FaultStats {
+    /// `true` if any fault-tolerance machinery engaged this run.
+    pub fn any(&self) -> bool {
+        *self != FaultStats::default()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -116,5 +201,26 @@ mod tests {
         c.add_saved(16);
         assert_eq!(c.spent(), 12);
         assert_eq!(c.saved(), 16);
+    }
+
+    #[test]
+    fn fault_counters_snapshot_and_any() {
+        let f = FaultCounters::new();
+        assert!(!f.snapshot().any(), "clean fleet reports no faults");
+        f.worker_lost();
+        f.shard_redispatched();
+        f.shard_redispatched();
+        f.hedge_fired();
+        f.hedge_won();
+        f.session_repinned();
+        f.reply_dropped();
+        let s = f.snapshot();
+        assert_eq!(s.workers_lost, 1);
+        assert_eq!(s.shards_redispatched, 2);
+        assert_eq!(s.hedges_fired, 1);
+        assert_eq!(s.hedges_won, 1);
+        assert_eq!(s.sessions_repinned, 1);
+        assert_eq!(s.replies_dropped, 1);
+        assert!(s.any());
     }
 }

@@ -43,6 +43,12 @@ pub const SERVE_METRIC_NAMES: &[&str] = &[
     "repro_session_replay_rebuilds_total",
     "repro_session_chunks_total",
     "repro_session_boosted_chunks_total",
+    "repro_fault_workers_lost_total",
+    "repro_fault_shards_redispatched_total",
+    "repro_fault_hedges_fired_total",
+    "repro_fault_hedges_won_total",
+    "repro_fault_sessions_repinned_total",
+    "repro_fault_replies_dropped_total",
 ];
 
 /// Metric names `push_timeline_metrics` emits (windowed runs only).
@@ -403,6 +409,45 @@ pub fn serve_metric_set(
         vec![],
         sess.boosted_chunks as f64,
     );
+    // Fault-tolerance plane; always emitted, all-zero on a clean run
+    // (the dashboard alert surface must exist before the first fault).
+    let faults = summary.obs.faults;
+    set.counter(
+        "repro_fault_workers_lost_total",
+        "Engine workers lost to panics (chaos-injected or genuine)",
+        vec![],
+        faults.workers_lost as f64,
+    );
+    set.counter(
+        "repro_fault_shards_redispatched_total",
+        "Shards re-dispatched from a dead engine to a survivor",
+        vec![],
+        faults.shards_redispatched as f64,
+    );
+    set.counter(
+        "repro_fault_hedges_fired_total",
+        "Speculative re-executions of overdue shards",
+        vec![],
+        faults.hedges_fired as f64,
+    );
+    set.counter(
+        "repro_fault_hedges_won_total",
+        "Hedged shards whose hedge replied before the original",
+        vec![],
+        faults.hedges_won as f64,
+    );
+    set.counter(
+        "repro_fault_sessions_repinned_total",
+        "Streaming sessions moved off a dead pinned engine",
+        vec![],
+        faults.sessions_repinned as f64,
+    );
+    set.counter(
+        "repro_fault_replies_dropped_total",
+        "Shard replies dropped by the chaos harness",
+        vec![],
+        faults.replies_dropped as f64,
+    );
     if let Some(p) = procstat::sample() {
         set.gauge(
             "repro_proc_rss_bytes",
@@ -651,6 +696,32 @@ pub fn serve_obs_json(
                 ("evictions", Json::Num(b.evictions as f64)),
                 ("resident_bytes", Json::Num(b.resident_bytes as f64)),
                 ("capacity_bytes", Json::Num(b.capacity_bytes as f64)),
+            ]),
+        ));
+    }
+    // Faults block only when something actually went wrong: a clean
+    // run's obs JSON stays byte-identical to pre-fault-tolerance
+    // builds.
+    if summary.obs.faults.any() {
+        let ft = summary.obs.faults;
+        top.push((
+            "faults",
+            jsonio::obj(vec![
+                ("workers_lost", Json::Num(ft.workers_lost as f64)),
+                (
+                    "shards_redispatched",
+                    Json::Num(ft.shards_redispatched as f64),
+                ),
+                ("hedges_fired", Json::Num(ft.hedges_fired as f64)),
+                ("hedges_won", Json::Num(ft.hedges_won as f64)),
+                (
+                    "sessions_repinned",
+                    Json::Num(ft.sessions_repinned as f64),
+                ),
+                (
+                    "replies_dropped",
+                    Json::Num(ft.replies_dropped as f64),
+                ),
             ]),
         ));
     }
@@ -904,6 +975,62 @@ mod tests {
                 "cpu_delta_seconds missing from proc block"
             );
         }
+    }
+
+    /// Fault counters follow the stable-surface convention: metrics
+    /// always exist (zero on a clean run), the obs JSON block appears
+    /// only when a fault was actually recorded.
+    #[test]
+    fn fault_metrics_always_exist_but_json_block_is_conditional() {
+        let clean = fake_summary();
+        let set = serve_metric_set(&clean, 0.01, 400.0);
+        for name in [
+            "repro_fault_workers_lost_total",
+            "repro_fault_shards_redispatched_total",
+            "repro_fault_hedges_fired_total",
+            "repro_fault_hedges_won_total",
+            "repro_fault_sessions_repinned_total",
+            "repro_fault_replies_dropped_total",
+        ] {
+            let m = set
+                .metrics()
+                .iter()
+                .find(|m| m.name == name)
+                .unwrap_or_else(|| panic!("{name} missing"));
+            assert_eq!(m.value, 0.0, "{name} must read 0 on a clean run");
+        }
+        let line = jsonio::write(&serve_obs_json(&clean, None));
+        assert!(!line.contains("\"faults\""), "clean run: no faults block");
+
+        let mut faulty = fake_summary();
+        faulty.obs.faults = crate::obs::FaultStats {
+            workers_lost: 1,
+            shards_redispatched: 3,
+            hedges_fired: 2,
+            hedges_won: 1,
+            sessions_repinned: 1,
+            replies_dropped: 4,
+        };
+        let set = serve_metric_set(&faulty, 0.01, 400.0);
+        let text = set.to_prometheus();
+        assert!(text.contains("repro_fault_workers_lost_total 1\n"));
+        assert!(text.contains("repro_fault_replies_dropped_total 4\n"));
+        let line = jsonio::write(&serve_obs_json(&faulty, None));
+        let parsed = jsonio::parse(&line).expect("obs JSON parses");
+        assert_eq!(
+            parsed
+                .get("faults")
+                .and_then(|f| f.get("shards_redispatched"))
+                .and_then(Json::as_usize),
+            Some(3)
+        );
+        assert_eq!(
+            parsed
+                .get("faults")
+                .and_then(|f| f.get("hedges_won"))
+                .and_then(Json::as_usize),
+            Some(1)
+        );
     }
 
     fn fake_timeline() -> Timeline {

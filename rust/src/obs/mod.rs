@@ -26,7 +26,7 @@ pub mod slo;
 pub mod timeseries;
 pub mod trace;
 
-pub use counters::{EngineLoad, McCounters};
+pub use counters::{EngineLoad, FaultCounters, FaultStats, McCounters};
 pub use export::{
     push_slo_metrics, push_timeline_metrics, serve_metric_set,
     serve_obs_json, Metric, MetricSet, SERVE_METRIC_NAMES,
